@@ -1,0 +1,93 @@
+//! Regenerate every table and figure of the paper in one run
+//! (DESIGN.md §5 experiment index). Writes the combined report to
+//! stdout and `paper_tables_output.txt`.
+//!
+//! ```bash
+//! cargo run --release --example paper_tables          # default scale
+//! SIM_SCALE=0.05 cargo run --release --example paper_tables
+//! ```
+
+use gemm_gs::bench_harness::{fig3, fig6, fig7, report, table2, workloads};
+use gemm_gs::perfmodel::{gpu, A100, H100};
+use std::fmt::Write as _;
+
+fn main() {
+    let sim_scale: f64 =
+        std::env::var("SIM_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.02);
+    let mut out = String::new();
+
+    // ---- Figure 1 ----
+    writeln!(out, "==== Figure 1: computing-power breakdown (datasheets [22-26]) ====\n")
+        .unwrap();
+    let mut t = report::Table::new(&["GPU", "CUDA fp32 (TF)", "Tensor (TF)", "Ratio"]);
+    for r in gpu::fig1_rows() {
+        t.row(vec![
+            r.gpu.to_string(),
+            format!("{:.1}", r.cuda_tflops),
+            format!("{:.0}", r.tensor_tflops),
+            format!("{:.1}x", r.ratio),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // ---- Table 1 ----
+    writeln!(out, "\n==== Table 1: workload statistics ====\n").unwrap();
+    let mut t = report::Table::new(&["Scene", "Dataset", "Resolution", "#Gaussians"]);
+    for spec in gemm_gs::scene::synthetic::table1_scenes() {
+        t.row(vec![
+            spec.name.to_string(),
+            spec.dataset.to_string(),
+            format!("{}x{}", spec.width, spec.height),
+            format!("{:.2}M", spec.full_gaussians as f64 / 1e6),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // ---- Figure 3 ----
+    writeln!(out, "\n==== Figure 3: stage breakdown ====\n").unwrap();
+    let rows = fig3::run_modelled(&A100, sim_scale);
+    out.push_str(&fig3::render(&rows, &A100));
+
+    // ---- Table 2 (A100) ----
+    writeln!(out, "\n==== Table 2: A100 grid ====\n").unwrap();
+    let cells = table2::run(&A100, sim_scale);
+    out.push_str(&table2::render(&cells, &A100));
+
+    // ---- Figure 5 (H100) ----
+    writeln!(out, "\n==== Figure 5: H100 grid ====\n").unwrap();
+    let cells_h = table2::run(&H100, sim_scale);
+    out.push_str(&table2::render(&cells_h, &H100));
+
+    // ---- Figure 6 ----
+    writeln!(out, "\n==== Figure 6: resolution sweep ====\n").unwrap();
+    let pts = fig6::run(&A100, sim_scale, 13);
+    out.push_str(&fig6::render(&pts, &A100));
+
+    // ---- Figure 7 ----
+    writeln!(out, "\n==== Figure 7: batch-size sweep ====\n").unwrap();
+    let pts = fig7::run(&A100, sim_scale, "train");
+    out.push_str(&fig7::render(&pts, &A100, "train"));
+
+    // sanity: coverage report
+    writeln!(out, "\n==== Coverage check (visibility per scene) ====\n").unwrap();
+    for spec in gemm_gs::scene::synthetic::table1_scenes() {
+        let m = workloads::measure_workload(
+            &spec,
+            (sim_scale / 4.0).max(0.001),
+            &gemm_gs::accel::Vanilla,
+            1.0,
+        );
+        writeln!(
+            out,
+            "{:<10} visible {:>5.1}%  tiles/gaussian {:>5.2}",
+            spec.name,
+            m.stats.visible_fraction() * 100.0,
+            m.stats.tiles_per_gaussian
+        )
+        .unwrap();
+    }
+
+    print!("{out}");
+    std::fs::write("paper_tables_output.txt", &out).expect("write report");
+    eprintln!("\n(wrote paper_tables_output.txt)");
+}

@@ -1,0 +1,109 @@
+//! §Perf profiling driver: per-call PJRT latency and the before/after of
+//! the tile-grouped optimization (single-tile calls vs gemm_blend_tiles16).
+
+use gemm_gs::bench_harness::workloads::default_camera;
+use gemm_gs::pipeline::render::{render_frame, RenderConfig};
+use gemm_gs::runtime::tiled_render::render_frame_tiled;
+use gemm_gs::runtime::RuntimeClient;
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::time::Instant;
+
+fn main() {
+    let mut rc = RuntimeClient::from_default_dir().unwrap();
+
+    // --- raw per-call latency of the single-tile entry ---
+    let mp = rc.manifest().mp.clone();
+    let conics = vec![0.5f32; 256 * 3];
+    let offsets = vec![4.0f32; 256 * 2];
+    let opac = vec![0.5f32; 256];
+    let colors = vec![0.5f32; 256 * 3];
+    let c = vec![0.0f32; 256 * 3];
+    let t = vec![1.0f32; 256];
+    let d = vec![0.0f32; 256];
+    let dims_b3 = [256i64, 3];
+    let dims_b2 = [256i64, 2];
+    let dims_b = [256i64];
+    let dims_mp = [8i64, 256];
+    let dims_p3 = [256i64, 3];
+    let dims_p = [256i64];
+    let inputs: Vec<(&[f32], &[i64])> = vec![
+        (&conics, &dims_b3[..]),
+        (&offsets, &dims_b2[..]),
+        (&opac, &dims_b[..]),
+        (&colors, &dims_b3[..]),
+        (&mp, &dims_mp[..]),
+        (&c, &dims_p3[..]),
+        (&t, &dims_p[..]),
+        (&d, &dims_p[..]),
+    ];
+    rc.run_f32("gemm_blend_b256_p256", &inputs).unwrap(); // compile+warm
+    let t0 = Instant::now();
+    let n = 30;
+    for _ in 0..n {
+        rc.run_f32("gemm_blend_b256_p256", &inputs).unwrap();
+    }
+    println!(
+        "single-tile entry: {:.2} ms/call ({} tile-batches per call)",
+        t0.elapsed().as_secs_f64() * 1e3 / n as f64,
+        1
+    );
+
+    // --- grouped entry: 16 tiles per call ---
+    let g = 16usize;
+    let gc: Vec<f32> = conics.repeat(g);
+    let go: Vec<f32> = offsets.repeat(g);
+    let gop: Vec<f32> = opac.repeat(g);
+    let gcol: Vec<f32> = colors.repeat(g);
+    let gci: Vec<f32> = c.repeat(g);
+    let gti: Vec<f32> = t.repeat(g);
+    let gdi: Vec<f32> = d.repeat(g);
+    let inputs16: Vec<(&[f32], &[i64])> = vec![
+        (&gc, &[16, 256, 3][..]),
+        (&go, &[16, 256, 2][..]),
+        (&gop, &[16, 256][..]),
+        (&gcol, &[16, 256, 3][..]),
+        (&mp, &dims_mp[..]),
+        (&gci, &[16, 256, 3][..]),
+        (&gti, &[16, 256][..]),
+        (&gdi, &[16, 256][..]),
+    ];
+    rc.run_f32("gemm_blend_tiles16", &inputs16).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..n {
+        rc.run_f32("gemm_blend_tiles16", &inputs16).unwrap();
+    }
+    let per_call = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+    println!(
+        "tiles16 entry:     {:.2} ms/call = {:.2} ms/tile-batch (16 per call)",
+        per_call,
+        per_call / 16.0
+    );
+
+    // --- end-to-end frame: before vs after ---
+    let spec = scene_by_name("train").unwrap();
+    let cloud = spec.synthesize(0.005);
+    let mut camera = default_camera(&spec);
+    camera.width = 320;
+    camera.height = 192;
+    let cfg = RenderConfig::default();
+
+    let mut single =
+        gemm_gs::coordinator::BackendKind::ArtifactGemm.instantiate(cfg.batch).unwrap();
+    let t0 = Instant::now();
+    let before = render_frame(&cloud, &camera, &cfg, single.as_mut());
+    let t_before = t0.elapsed();
+
+    let t0 = Instant::now();
+    let after = render_frame_tiled(&mut rc, &cloud, &camera, &cfg).unwrap();
+    let t_after = t0.elapsed();
+
+    let psnr = after.image.psnr(&before.image).unwrap();
+    println!("\nframe 320x192, {} pairs:", before.stats.n_pairs);
+    println!("  before (per-tile calls):   {:.1?}", t_before);
+    println!("  after  (16-tile grouping): {:.1?}", t_after);
+    println!(
+        "  speedup {:.2}x, images match at {:.1} dB",
+        t_before.as_secs_f64() / t_after.as_secs_f64(),
+        psnr
+    );
+}

@@ -1,0 +1,208 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO **text** artifacts for the
+Rust PJRT runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Entry points (all fixed-shape, f32):
+  gemm_blend_b256_p256       — Algorithm 2, one 256-Gaussian batch / tile
+  gemm_blend_b256_p256_bf16  — same with bf16 GEMM operands (MXU dtype)
+  vanilla_blend_b256_p256    — Algorithm 1 baseline, same carry interface
+  gemm_blend_scan4_p256      — 4 batches (1024 Gaussians) fused via scan
+  gemm_blend_tiles16         — 16 tiles x 256 Gaussians per call (vmap) —
+                               amortizes the PJRT per-call overhead that
+                               dominates the request path (§Perf)
+  preprocess_c4096           — Stage-1 projection for a 4096 chunk
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.common import GEMM_K, mp_matrix
+from .kernels.gemm_blend import gemm_blend_batch, gemm_blend_batch_bf16
+from .kernels.vanilla_blend import vanilla_blend_batch
+from .model import gemm_blend_tile_scan, preprocess_chunk
+
+BATCH = 256
+TILE = 16
+PIXELS = TILE * TILE
+SCAN_BATCHES = 4
+TILE_GROUP = 16
+PRE_CHUNK = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax → XLA HLO text via stablehlo (return_tuple=True so the
+    Rust side always unwraps a tuple, regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_gemm_blend():
+    fn = functools.partial(gemm_blend_batch, tile_size=TILE)
+    args = (
+        _spec((BATCH, 3)),       # conics (A,B,C)
+        _spec((BATCH, 2)),       # offsets (x̂, ŷ) wrt tile origin
+        _spec((BATCH,)),         # opacities
+        _spec((BATCH, 3)),       # colors
+        _spec((GEMM_K, PIXELS)), # M_p
+        _spec((PIXELS, 3)),      # c_in
+        _spec((PIXELS,)),        # t_in
+        _spec((PIXELS,)),        # done_in
+    )
+    return jax.jit(fn).lower(*args), args
+
+
+def entry_gemm_blend_bf16():
+    fn = functools.partial(gemm_blend_batch_bf16, tile_size=TILE)
+    args = (
+        _spec((BATCH, 3)), _spec((BATCH, 2)), _spec((BATCH,)), _spec((BATCH, 3)),
+        _spec((GEMM_K, PIXELS)),
+        _spec((PIXELS, 3)), _spec((PIXELS,)), _spec((PIXELS,)),
+    )
+    return jax.jit(fn).lower(*args), args
+
+
+def entry_vanilla_blend():
+    fn = functools.partial(vanilla_blend_batch, tile_size=TILE)
+    args = (
+        _spec((BATCH, 3)), _spec((BATCH, 2)), _spec((BATCH,)), _spec((BATCH, 3)),
+        _spec((PIXELS, 3)), _spec((PIXELS,)), _spec((PIXELS,)),
+    )
+    return jax.jit(fn).lower(*args), args
+
+
+def entry_gemm_blend_scan():
+    n = BATCH * SCAN_BATCHES
+
+    def fn(conics, offsets, opacities, colors, mp, c_in, t_in, done_in):
+        return gemm_blend_tile_scan(
+            conics, offsets, opacities, colors, mp, c_in, t_in, done_in,
+            batch=BATCH, tile_size=TILE,
+        )
+
+    args = (
+        _spec((n, 3)), _spec((n, 2)), _spec((n,)), _spec((n, 3)),
+        _spec((GEMM_K, PIXELS)),
+        _spec((PIXELS, 3)), _spec((PIXELS,)), _spec((PIXELS,)),
+    )
+    return jax.jit(fn).lower(*args), args
+
+
+def entry_gemm_blend_tiles():
+    g = TILE_GROUP
+
+    def fn(conics, offsets, opacities, colors, mp, c_in, t_in, done_in):
+        def one(cc, oo, op, co, ci, ti, di):
+            return gemm_blend_batch(cc, oo, op, co, mp, ci, ti, di,
+                                    tile_size=TILE)
+
+        return jax.vmap(one)(conics, offsets, opacities, colors,
+                             c_in, t_in, done_in)
+
+    args = (
+        _spec((g, BATCH, 3)), _spec((g, BATCH, 2)), _spec((g, BATCH)),
+        _spec((g, BATCH, 3)),
+        _spec((GEMM_K, PIXELS)),
+        _spec((g, PIXELS, 3)), _spec((g, PIXELS)), _spec((g, PIXELS)),
+    )
+    return jax.jit(fn).lower(*args), args
+
+
+def entry_preprocess():
+    args = (
+        _spec((PRE_CHUNK, 3)),      # means3d
+        _spec((PRE_CHUNK, 3)),      # scales
+        _spec((PRE_CHUNK, 4)),      # quats (w,x,y,z)
+        _spec((PRE_CHUNK, 16, 3)),  # SH deg-3 coefficients
+        _spec((4, 4)),              # view, row-major
+        _spec((4, 4)),              # proj, row-major
+        _spec((12,)),               # cam params
+    )
+
+    def fn(means3d, scales, quats, sh, view, proj, cam):
+        m2, conic, depth, radius, color, valid = preprocess_chunk(
+            means3d, scales, quats, sh, view, proj, cam
+        )
+        return m2, conic, depth, radius, color, valid
+
+    return jax.jit(fn).lower(*args), args
+
+
+ENTRIES = {
+    "gemm_blend_b256_p256": entry_gemm_blend,
+    "gemm_blend_b256_p256_bf16": entry_gemm_blend_bf16,
+    "vanilla_blend_b256_p256": entry_vanilla_blend,
+    "gemm_blend_scan4_p256": entry_gemm_blend_scan,
+    "gemm_blend_tiles16": entry_gemm_blend_tiles,
+    "preprocess_c4096": entry_preprocess,
+}
+
+
+def arg_meta(args):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {
+        "tile_size": TILE,
+        "pixels": PIXELS,
+        "batch": BATCH,
+        "scan_batches": SCAN_BATCHES,
+        "tile_group": TILE_GROUP,
+        "preprocess_chunk": PRE_CHUNK,
+        "gemm_k": GEMM_K,
+        # M_p is view/scene independent (paper §3.2): ship it in the
+        # manifest so the Rust runtime never recomputes it.
+        "mp": [float(v) for v in mp_matrix(TILE).reshape(-1)],
+        "entries": {},
+    }
+    for name, builder in ENTRIES.items():
+        if only and name not in only:
+            continue
+        lowered, specs = builder()
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": arg_meta(specs),
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

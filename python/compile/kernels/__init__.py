@@ -1,0 +1,1 @@
+"""Layer-1 kernels: GEMM-compatible blending (Pallas), vanilla baseline, and the pure-jnp sequential oracle."""

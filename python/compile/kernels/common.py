@@ -1,0 +1,116 @@
+"""Shared constants and the M_p / v_g constructions (paper Eq. 6-7).
+
+These mirror rust/src/gemm/{mp,mg}.rs exactly — same reference-pixel
+convention (tile origin, x-bar = -lx), same K=8 padding — so the AOT
+artifacts and the native Rust blender are numerically interchangeable.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# K dimension of the GEMM: 6 coordinate terms padded to 8 (the paper pads
+# identically for the mma.m16n8k8 fragment).
+GEMM_K = 8
+GEMM_K_LOGICAL = 6
+
+# Blending thresholds (official 3DGS).
+ALPHA_SKIP = 1.0 / 255.0
+ALPHA_MAX = 0.99
+T_EPS = 1e-4
+
+
+def mp_matrix(tile_size: int = 16, dtype=jnp.float32) -> jnp.ndarray:
+    """The pixel-side matrix M_p in [GEMM_K, tile_size**2] layout.
+
+    Row k over pixels: [x̄², ȳ², x̄ȳ, x̄, ȳ, 1, 0, 0] with reference pixel
+    = tile origin, i.e. x̄ = -lx, ȳ = -ly for local pixel (lx, ly).
+    """
+    ly, lx = jnp.meshgrid(
+        jnp.arange(tile_size, dtype=dtype),
+        jnp.arange(tile_size, dtype=dtype),
+        indexing="ij",
+    )
+    xb = (-lx).reshape(-1)
+    yb = (-ly).reshape(-1)
+    ones = jnp.ones_like(xb)
+    zeros = jnp.zeros_like(xb)
+    return jnp.stack([xb * xb, yb * yb, xb * yb, xb, yb, ones, zeros, zeros], axis=0)
+
+
+def build_mg(conics: jnp.ndarray, offsets: jnp.ndarray) -> jnp.ndarray:
+    """The Gaussian-side matrix M_g in [B, GEMM_K] layout (paper Eq. 6).
+
+    conics:  [B, 3] = (A, B, C) of the inverse 2D covariance.
+    offsets: [B, 2] = (x̂, ŷ), Gaussian centre minus the tile reference
+             pixel (tile origin).
+    """
+    a, b, c = conics[:, 0], conics[:, 1], conics[:, 2]
+    xh, yh = offsets[:, 0], offsets[:, 1]
+    return jnp.stack(
+        [
+            -0.5 * a,
+            -0.5 * c,
+            -b,
+            -a * xh - b * yh,
+            -c * yh - b * xh,
+            -0.5 * a * xh * xh - 0.5 * c * yh * yh - b * xh * yh,
+            jnp.zeros_like(a),
+            jnp.zeros_like(a),
+        ],
+        axis=1,
+    )
+
+
+def render_from_power(power, opacities, colors, c_in, t_in, done_in):
+    """Masked volume rendering over a precomputed power matrix — the
+    vectorized, exactly-equivalent form of Algorithm 1 lines 12-21.
+
+    power [B,P], opacities [B], colors [B,3], c_in [P,3], t_in [P],
+    done_in [P] (0/1 f32). Returns (c_out, t_out, done_out).
+
+    The sequential per-Gaussian recurrence is re-expressed with a masked
+    cumulative product: cumulative transmittance is monotone
+    non-increasing, so the early-termination mask is a prefix property
+    and the re-expression is exact (not an approximation). The
+    terminating Gaussian is excluded and T keeps its pre-termination
+    value, matching the official semantics.
+    """
+    alpha = jnp.minimum(opacities[:, None] * jnp.exp(power), ALPHA_MAX)
+    # guards: power>0 skip + alpha-skipping; dead pixels frozen
+    alpha_eff = jnp.where((power > 0.0) | (alpha < ALPHA_SKIP), 0.0, alpha)
+    alpha_eff = alpha_eff * (1.0 - done_in)[None, :]
+
+    one_minus = 1.0 - alpha_eff
+    # log-depth parallel prefix instead of jnp.cumprod: the sequential
+    # cumprod lowers to a B-step while-loop that XLA 0.5.1's CPU backend
+    # executes with a full-array copy per step (~10 ms/batch measured —
+    # EXPERIMENTS.md §Perf); the associative scan is ceil(log2 B) = 8
+    # fully-vectorized steps and maps to efficient tree reductions on
+    # TPU as well.
+    scan = jax.lax.associative_scan(jnp.multiply, one_minus, axis=0)
+    t_cum = t_in[None, :] * scan                                   # [B, P]
+    t_prev = jnp.concatenate([t_in[None, :], t_cum[:-1]], axis=0)  # [B, P]
+    live = (t_cum >= T_EPS) & (alpha_eff > 0.0)
+    w = jnp.where(live, alpha_eff * t_prev, 0.0)                   # [B, P]
+
+    # colour accumulation — itself a (P,B)x(B,3) matmul (MXU-friendly)
+    c_out = c_in + jnp.dot(w.T, colors, preferred_element_type=jnp.float32)
+    t_out = t_in * jnp.prod(jnp.where(live, one_minus, 1.0), axis=0)
+    done_out = jnp.maximum(
+        done_in,
+        (jnp.min(jnp.where(alpha_eff > 0.0, t_cum, jnp.inf), axis=0) < T_EPS).astype(
+            jnp.float32
+        ),
+    )
+    return c_out, t_out, done_out
+
+
+def power_direct(conics, dx, dy):
+    """Direct Eq. 3 evaluation: power = -½A·Δx² − B·Δx·Δy − ½C·Δy².
+
+    conics [B,3]; dx, dy broadcastable to [B, P].
+    """
+    a = conics[:, 0][:, None]
+    b = conics[:, 1][:, None]
+    c = conics[:, 2][:, None]
+    return -0.5 * (a * dx * dx + c * dy * dy) - b * dx * dy

@@ -1,0 +1,114 @@
+"""Layer-1 Pallas kernel: GEMM-compatible tile blending (paper §3.2-3.4).
+
+One kernel invocation blends one batch of B sorted Gaussians into one
+16x16 tile, carrying per-pixel (C, T, done) state so the Rust coordinator
+chains batches (and early-exits when every pixel is done) exactly like
+the three-stage pipeline of Figure 4.
+
+TPU mapping of the paper's CUDA design (DESIGN.md §2):
+  * Stage 2 (build M_g) — vectorized register math on the VPU.
+  * Stage 3 (M_power = M_g · M_p) — a single (B,8)x(8,P) `jnp.dot` on the
+    MXU; K is padded 6→8 exactly as the paper pads for mma.m16n8k8.
+  * volume rendering — the sequential per-Gaussian transmittance
+    recurrence is re-expressed as a masked cumulative product along the
+    batch axis (exactly equivalent to the sequential semantics because
+    the cumulative transmittance is monotone non-increasing, making the
+    early-termination mask a prefix property).
+  * HBM↔VMEM staging — BlockSpec keeps the whole (B,8), (8,P), (B,P)
+    working set in VMEM (~22 KiB for B=P=256, far under the ~16 MiB
+    budget); with a grid over batches Mosaic double-buffers the next
+    batch's HBM→VMEM copy against the current GEMM, which is the
+    cp.async overlap of Figure 4.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; structure (not CPU wallclock) is what carries to TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import ALPHA_MAX, ALPHA_SKIP, GEMM_K, T_EPS, build_mg, render_from_power
+
+
+def _blend_math(mg, mp, opacities, colors, c_in, t_in, done_in):
+    """Stage-3 math: the Eq. 8 GEMM followed by masked volume rendering."""
+    # ---- Eq. 8: M_power = M_g · M_p (the Tensor-Core / MXU GEMM) ----
+    power = jnp.dot(mg, mp, preferred_element_type=jnp.float32)  # [B, P]
+    return render_from_power(power, opacities, colors, c_in, t_in, done_in)
+
+
+def _gemm_blend_kernel(
+    conic_ref, offset_ref, opac_ref, color_ref, mp_ref,
+    c_in_ref, t_in_ref, done_in_ref,
+    c_out_ref, t_out_ref, done_out_ref,
+):
+    """Pallas kernel body: Stage 2 (build M_g) + Stage 3 (GEMM + render)."""
+    conics = conic_ref[...]
+    offsets = offset_ref[...]
+    mg = build_mg(conics, offsets)  # [B, 8] — Stage 2, VPU
+    c_out, t_out, done_out = _blend_math(
+        mg, mp_ref[...], opac_ref[...], color_ref[...],
+        c_in_ref[...], t_in_ref[...], done_in_ref[...],
+    )
+    c_out_ref[...] = c_out
+    t_out_ref[...] = t_out
+    done_out_ref[...] = done_out
+
+
+@functools.partial(jax.jit, static_argnames=("tile_size",))
+def gemm_blend_batch(conics, offsets, opacities, colors, mp, c_in, t_in, done_in,
+                     tile_size: int = 16):
+    """Blend one batch of B Gaussians into one tile via the Pallas kernel.
+
+    conics [B,3], offsets [B,2], opacities [B], colors [B,3],
+    mp [8, P], c_in [P,3], t_in [P], done_in [P] — all f32.
+    Returns (c_out [P,3], t_out [P], done_out [P]).
+    """
+    p = tile_size * tile_size
+    b = conics.shape[0]
+    assert mp.shape == (GEMM_K, p), (mp.shape, (GEMM_K, p))
+    out_shape = (
+        jax.ShapeDtypeStruct((p, 3), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+    )
+    return pl.pallas_call(
+        _gemm_blend_kernel,
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(conics, offsets, opacities, colors, mp,
+      c_in, t_in, done_in)
+
+
+def gemm_blend_batch_bf16(conics, offsets, opacities, colors, mp, c_in, t_in, done_in,
+                          tile_size: int = 16):
+    """bf16-GEMM variant: M_g / M_p cast to bfloat16 before the MXU dot
+    (the MXU's native input dtype), accumulation in f32 — the precision
+    ablation of DESIGN.md §7."""
+    p = tile_size * tile_size
+
+    def kernel(conic_ref, offset_ref, opac_ref, color_ref, mp_ref,
+               c_in_ref, t_in_ref, done_in_ref,
+               c_out_ref, t_out_ref, done_out_ref):
+        mg = build_mg(conic_ref[...], offset_ref[...]).astype(jnp.bfloat16)
+        mp_b = mp_ref[...].astype(jnp.bfloat16)
+        power = jnp.dot(mg, mp_b, preferred_element_type=jnp.float32)
+        c_out, t_out, done_out = render_from_power(
+            power, opac_ref[...], color_ref[...],
+            c_in_ref[...], t_in_ref[...], done_in_ref[...],
+        )
+        c_out_ref[...] = c_out
+        t_out_ref[...] = t_out
+        done_out_ref[...] = done_out
+
+    out_shape = (
+        jax.ShapeDtypeStruct((p, 3), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+    )
+    return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(
+        conics, offsets, opacities, colors, mp, c_in, t_in, done_in
+    )

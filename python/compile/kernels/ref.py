@@ -1,0 +1,88 @@
+"""Pure-numpy sequential oracle for tile blending — Algorithm 1 of the
+paper, with the exact official-3DGS semantics: per-pixel walk of the
+depth-sorted Gaussian list, the power>0 guard, alpha clamping at 0.99,
+alpha-skipping at 1/255, and sticky early termination at test_T < 1e-4
+(the terminating Gaussian does NOT contribute, and T keeps its
+pre-termination value for background compositing).
+
+Because termination is decided on test_T while T itself is not updated,
+the carried per-pixel state across batch boundaries is (C, T, done) —
+done is NOT recoverable from T alone. The AOT artifact carries all three.
+
+This is the CORE correctness anchor: the Pallas GEMM kernel, the vanilla
+jnp kernel, and (transitively, via the shared convention) the Rust
+blenders must all match it.
+"""
+
+import numpy as np
+
+from .common import ALPHA_MAX, ALPHA_SKIP, T_EPS
+
+
+def blend_tile_ref(
+    conics: np.ndarray,     # [N, 3] (A, B, C)
+    offsets: np.ndarray,    # [N, 2] Gaussian centre minus tile origin (x̂, ŷ)
+    opacities: np.ndarray,  # [N]
+    colors: np.ndarray,     # [N, 3]
+    tile_size: int = 16,
+    t_init: np.ndarray | None = None,     # [P]
+    c_init: np.ndarray | None = None,     # [P, 3]
+    done_init: np.ndarray | None = None,  # [P] bool
+):
+    """Sequentially blend N sorted Gaussians over one tile.
+
+    Returns (color [P, 3], transmittance [P], done [P]) with
+    P = tile_size². Pixel j = ly*tile_size + lx sits at local coordinates
+    (lx, ly); Δ = offset − local (x̂ = x_g − x_origin, pixel at
+    x_origin + lx ⇒ Δx = x̂ − lx).
+    """
+    p = tile_size * tile_size
+    t = np.ones(p, dtype=np.float64) if t_init is None else t_init.astype(np.float64).copy()
+    c = (
+        np.zeros((p, 3), dtype=np.float64)
+        if c_init is None
+        else c_init.astype(np.float64).copy()
+    )
+    done = (
+        np.zeros(p, dtype=bool) if done_init is None else done_init.astype(bool).copy()
+    )
+
+    ly, lx = np.meshgrid(np.arange(tile_size), np.arange(tile_size), indexing="ij")
+    lx = lx.reshape(-1).astype(np.float64)
+    ly = ly.reshape(-1).astype(np.float64)
+
+    n = conics.shape[0]
+    for i in range(n):
+        a, b, cc = (float(v) for v in conics[i])
+        xh, yh = (float(v) for v in offsets[i])
+        dx = xh - lx
+        dy = yh - ly
+        power = -0.5 * (a * dx * dx + cc * dy * dy) - b * dx * dy
+        alpha = np.minimum(float(opacities[i]) * np.exp(power), ALPHA_MAX)
+        contribute = (~done) & (power <= 0.0) & (alpha >= ALPHA_SKIP)
+        test_t = t * (1.0 - alpha)
+        terminate = contribute & (test_t < T_EPS)
+        done = done | terminate
+        live = contribute & ~terminate
+        w = np.where(live, alpha * t, 0.0)
+        c += w[:, None] * colors[i][None, :]
+        t = np.where(live, test_t, t)
+    return c.astype(np.float32), t.astype(np.float32), done
+
+
+def blend_batches_ref(conics, offsets, opacities, colors, batch, tile_size=16):
+    """Reference for the batched/carry interface the AOT artifact exposes:
+    blend in `batch`-sized chunks carrying (C, T, done) between calls.
+    Must equal blend_tile_ref over the concatenated list exactly."""
+    p = tile_size * tile_size
+    t = np.ones(p, dtype=np.float32)
+    c = np.zeros((p, 3), dtype=np.float32)
+    done = np.zeros(p, dtype=bool)
+    n = conics.shape[0]
+    for s in range(0, n, batch):
+        e = min(s + batch, n)
+        c, t, done = blend_tile_ref(
+            conics[s:e], offsets[s:e], opacities[s:e], colors[s:e],
+            tile_size=tile_size, t_init=t, c_init=c, done_init=done,
+        )
+    return c, t, done

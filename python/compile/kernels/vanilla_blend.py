@@ -1,0 +1,61 @@
+"""Layer-1 baseline kernel: vanilla per-pixel blending (Algorithm 1).
+
+Identical carry interface and volume-render math as the GEMM kernel, but
+the power matrix is evaluated directly per (Gaussian, pixel) via the
+quadratic form of Eq. 3 — the element-wise path that cannot use the MXU
+(on the paper's GPUs: CUDA cores instead of Tensor Cores). This is the
+baseline artifact the Rust harness times GEMM-GS against, and a second
+witness for the Eq. 6 equivalence (GEMM kernel == vanilla kernel).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import power_direct, render_from_power
+
+
+def _vanilla_kernel(tile_size, conic_ref, offset_ref, opac_ref, color_ref,
+                    c_in_ref, t_in_ref, done_in_ref,
+                    c_out_ref, t_out_ref, done_out_ref):
+    offsets = offset_ref[...]
+    # local pixel coordinates (lx, ly); Δ = offset − local
+    ly, lx = jnp.meshgrid(
+        jnp.arange(tile_size, dtype=jnp.float32),
+        jnp.arange(tile_size, dtype=jnp.float32),
+        indexing="ij",
+    )
+    lx = lx.reshape(-1)
+    ly = ly.reshape(-1)
+    dx = offsets[:, 0][:, None] - lx[None, :]  # [B, P]
+    dy = offsets[:, 1][:, None] - ly[None, :]
+    power = power_direct(conic_ref[...], dx, dy)  # element-wise, no GEMM
+    c_out, t_out, done_out = render_from_power(
+        power, opac_ref[...], color_ref[...],
+        c_in_ref[...], t_in_ref[...], done_in_ref[...],
+    )
+    c_out_ref[...] = c_out
+    t_out_ref[...] = t_out
+    done_out_ref[...] = done_out
+
+
+@functools.partial(jax.jit, static_argnames=("tile_size",))
+def vanilla_blend_batch(conics, offsets, opacities, colors, c_in, t_in, done_in,
+                        tile_size: int = 16):
+    """Blend one batch of B Gaussians into one tile, per-pixel path.
+
+    Same shapes as `gemm_blend_batch` minus `mp`.
+    """
+    p = tile_size * tile_size
+    out_shape = (
+        jax.ShapeDtypeStruct((p, 3), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+    )
+    return pl.pallas_call(
+        functools.partial(_vanilla_kernel, tile_size),
+        out_shape=out_shape,
+        interpret=True,
+    )(conics, offsets, opacities, colors, c_in, t_in, done_in)

@@ -1,0 +1,236 @@
+"""Layer-2 JAX model: the 3DGS render compute graph.
+
+Vectorized re-implementation of the pipeline's numeric stages (mirroring
+rust/src/pipeline/preprocess.rs and the blenders) that calls the Layer-1
+Pallas kernels, lowered once by aot.py to HLO text for the Rust runtime.
+
+Conventions shared with the Rust side:
+  * matrices are passed ROW-MAJOR [4,4] (the Rust runtime transposes its
+    column-major Mat4 when building literals);
+  * conic = [A, B, C] with power = -½A·Δx² − B·Δx·Δy − ½C·Δy²;
+  * camera params packed as a f32[12] vector:
+    [fx, fy, tan_fovx, tan_fovy, width, height, near, lowpass, guard,
+     cam_x, cam_y, cam_z].
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.common import GEMM_K, mp_matrix
+from .kernels.gemm_blend import gemm_blend_batch
+from .kernels.vanilla_blend import vanilla_blend_batch
+
+# ---------------------------------------------------------------------------
+# Spherical harmonics (degree 3) — constants identical to math/sh.rs
+# ---------------------------------------------------------------------------
+
+SH_C0 = 0.28209479177387814
+SH_C1 = 0.4886025119029199
+SH_C2 = (1.0925484305920792, -1.0925484305920792, 0.31539156525252005,
+         -1.0925484305920792, 0.5462742152960396)
+SH_C3 = (-0.5900435899266435, 2.890611442640554, -0.4570457994644658,
+         0.3731763325901154, -0.4570457994644658, 1.445305721320277,
+         -0.5900435899266435)
+
+
+def sh_basis_deg3(dirs: jnp.ndarray) -> jnp.ndarray:
+    """SH basis values for unit directions [N,3] → [N,16]."""
+    x, y, z = dirs[:, 0], dirs[:, 1], dirs[:, 2]
+    xx, yy, zz = x * x, y * y, z * z
+    xy, yz, xz = x * y, y * z, x * z
+    one = jnp.ones_like(x)
+    return jnp.stack(
+        [
+            SH_C0 * one,
+            -SH_C1 * y,
+            SH_C1 * z,
+            -SH_C1 * x,
+            SH_C2[0] * xy,
+            SH_C2[1] * yz,
+            SH_C2[2] * (2.0 * zz - xx - yy),
+            SH_C2[3] * xz,
+            SH_C2[4] * (xx - yy),
+            SH_C3[0] * y * (3.0 * xx - yy),
+            SH_C3[1] * xy * z,
+            SH_C3[2] * y * (4.0 * zz - xx - yy),
+            SH_C3[3] * z * (2.0 * zz - 3.0 * xx - 3.0 * yy),
+            SH_C3[4] * x * (4.0 * zz - xx - yy),
+            SH_C3[5] * z * (xx - yy),
+            SH_C3[6] * x * (xx - 3.0 * yy),
+        ],
+        axis=1,
+    )
+
+
+def sh_to_color(sh: jnp.ndarray, dirs: jnp.ndarray) -> jnp.ndarray:
+    """Decode RGB from degree-3 SH: sh [N,16,3], dirs [N,3] → [N,3]."""
+    basis = sh_basis_deg3(dirs)  # [N,16]
+    c = jnp.einsum("nk,nkc->nc", basis, sh) + 0.5
+    return jnp.maximum(c, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# EWA projection (mirrors pipeline/preprocess.rs)
+# ---------------------------------------------------------------------------
+
+def quat_to_rot(q: jnp.ndarray) -> jnp.ndarray:
+    """(w,x,y,z) quaternions [N,4] → rotation matrices [N,3,3]."""
+    n = jnp.linalg.norm(q, axis=1, keepdims=True)
+    q = q / jnp.maximum(n, 1e-12)
+    r, x, y, z = q[:, 0], q[:, 1], q[:, 2], q[:, 3]
+    return jnp.stack(
+        [
+            jnp.stack([1 - 2 * (y * y + z * z), 2 * (x * y - r * z), 2 * (x * z + r * y)], 1),
+            jnp.stack([2 * (x * y + r * z), 1 - 2 * (x * x + z * z), 2 * (y * z - r * x)], 1),
+            jnp.stack([2 * (x * z - r * y), 2 * (y * z + r * x), 1 - 2 * (x * x + y * y)], 1),
+        ],
+        axis=1,
+    )
+
+
+def covariance3d(scales: jnp.ndarray, quats: jnp.ndarray) -> jnp.ndarray:
+    """Σ = R S Sᵀ Rᵀ: scales [N,3], quats [N,4] → [N,3,3]."""
+    r = quat_to_rot(quats)
+    m = r * scales[:, None, :]  # R @ diag(s)
+    return jnp.einsum("nij,nkj->nik", m, m)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def preprocess_chunk(means3d, scales, quats, sh, view, proj, cam):
+    """Project a fixed-size chunk of Gaussians (Stage 1, Figure 2b).
+
+    means3d [N,3], scales [N,3], quats [N,4], sh [N,16,3],
+    view [4,4] row-major, proj [4,4] row-major, cam f32[12]
+    (opacity passes through the pipeline untouched, so it is not an input)
+    (see module docstring).
+
+    Returns (means2d [N,2], conics [N,3], depths [N], radii [N],
+    colors [N,3], valid [N] as 0/1 f32). Invalid rows are zeroed.
+    """
+    fx, fy = cam[0], cam[1]
+    tan_fovx, tan_fovy = cam[2], cam[3]
+    width, height = cam[4], cam[5]
+    near, lowpass, guard = cam[6], cam[7], cam[8]
+    cam_origin = cam[9:12]
+
+    n = means3d.shape[0]
+    ones = jnp.ones((n, 1), dtype=means3d.dtype)
+    hom = jnp.concatenate([means3d, ones], axis=1)          # [N,4]
+    cam_pos = hom @ view.T                                   # [N,4] row-vec
+    tz = cam_pos[:, 2]
+    valid = tz >= near
+
+    clip = cam_pos @ proj.T                                  # [N,4]
+    w = jnp.where(jnp.abs(clip[:, 3]) < 1e-9, 1e-9, clip[:, 3])
+    ndc = clip[:, :3] / w[:, None]
+    px = ((ndc[:, 0] + 1.0) * width - 1.0) * 0.5
+    py = ((ndc[:, 1] + 1.0) * height - 1.0) * 0.5
+
+    # EWA covariance
+    cov3d = covariance3d(scales, quats)                      # [N,3,3]
+    tz_safe = jnp.where(jnp.abs(tz) < 1e-6, 1e-6, tz)
+    limx, limy = guard * tan_fovx, guard * tan_fovy
+    txz = jnp.clip(cam_pos[:, 0] / tz_safe, -limx, limx)
+    tyz = jnp.clip(cam_pos[:, 1] / tz_safe, -limy, limy)
+    tx, ty = txz * tz_safe, tyz * tz_safe
+    zero = jnp.zeros_like(tz)
+    j = jnp.stack(
+        [
+            jnp.stack([fx / tz_safe, zero, -fx * tx / (tz_safe * tz_safe)], 1),
+            jnp.stack([zero, fy / tz_safe, -fy * ty / (tz_safe * tz_safe)], 1),
+            jnp.stack([zero, zero, zero], 1),
+        ],
+        axis=1,
+    )                                                        # [N,3,3]
+    wmat = view[:3, :3]                                      # [3,3]
+    t = jnp.einsum("nij,jk->nik", j, wmat)                   # [N,3,3]
+    cov2d_full = jnp.einsum("nij,njk,nlk->nil", t, cov3d, t) # T Σ Tᵀ
+    a = cov2d_full[:, 0, 0] + lowpass
+    b = cov2d_full[:, 0, 1]
+    c = cov2d_full[:, 1, 1] + lowpass
+
+    det = a * c - b * b
+    valid = valid & (det > 0.0)
+    det_safe = jnp.where(jnp.abs(det) < 1e-12, 1.0, det)
+    conic = jnp.stack([c / det_safe, -b / det_safe, a / det_safe], axis=1)
+
+    mid = 0.5 * (a + c)
+    disc = jnp.sqrt(jnp.maximum(0.25 * (a - c) ** 2 + b * b, 0.0))
+    lmax = mid + disc
+    radius = jnp.ceil(3.0 * jnp.sqrt(jnp.maximum(lmax, 0.0)))
+    valid = valid & (radius > 0.0)
+    # off-screen cull (radius margin)
+    valid = valid & (px + radius >= 0.0) & (px - radius <= width)
+    valid = valid & (py + radius >= 0.0) & (py - radius <= height)
+
+    dirs = means3d - cam_origin[None, :]
+    dirs = dirs / jnp.maximum(jnp.linalg.norm(dirs, axis=1, keepdims=True), 1e-12)
+    colors = sh_to_color(sh, dirs)
+
+    vf = valid.astype(jnp.float32)
+    means2d = jnp.stack([px, py], axis=1) * vf[:, None]
+    return (
+        means2d,
+        conic * vf[:, None],
+        tz * vf,
+        radius * vf,
+        colors * vf[:, None],
+        vf,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tile blending entry points (call the L1 kernels)
+# ---------------------------------------------------------------------------
+
+def gemm_blend_tile_scan(conics, offsets, opacities, colors, mp,
+                         c_in, t_in, done_in, batch: int = 256,
+                         tile_size: int = 16):
+    """Blend `n_batches × batch` Gaussians into one tile with a scan over
+    batches carrying (C, T, done) — the fused multi-batch entry point the
+    Rust runtime uses for long tile lists (one PJRT call instead of four).
+
+    conics [NB*B,3] etc.; returns (c_out, t_out, done_out).
+    """
+    n = conics.shape[0]
+    assert n % batch == 0, "pad the list to a batch multiple"
+    nb = n // batch
+
+    def step(carry, chunk):
+        c, t, d = carry
+        cc, oo, op, co = chunk
+        c2, t2, d2 = gemm_blend_batch(cc, oo, op, co, mp, c, t, d,
+                                      tile_size=tile_size)
+        return (c2, t2, d2), None
+
+    chunks = (
+        conics.reshape(nb, batch, 3),
+        offsets.reshape(nb, batch, 2),
+        opacities.reshape(nb, batch),
+        colors.reshape(nb, batch, 3),
+    )
+    (c_out, t_out, done_out), _ = jax.lax.scan(step, (c_in, t_in, done_in), chunks)
+    return c_out, t_out, done_out
+
+
+def blend_tile_gemm(conics, offsets, opacities, colors, tile_size: int = 16):
+    """Convenience full-tile GEMM blend from a fresh state (tests)."""
+    p = tile_size * tile_size
+    mp = mp_matrix(tile_size)
+    c0 = jnp.zeros((p, 3), jnp.float32)
+    t0 = jnp.ones((p,), jnp.float32)
+    d0 = jnp.zeros((p,), jnp.float32)
+    return gemm_blend_batch(conics, offsets, opacities, colors, mp, c0, t0, d0,
+                            tile_size=tile_size)
+
+
+def blend_tile_vanilla(conics, offsets, opacities, colors, tile_size: int = 16):
+    """Convenience full-tile vanilla blend from a fresh state (tests)."""
+    p = tile_size * tile_size
+    c0 = jnp.zeros((p, 3), jnp.float32)
+    t0 = jnp.ones((p,), jnp.float32)
+    d0 = jnp.zeros((p,), jnp.float32)
+    return vanilla_blend_batch(conics, offsets, opacities, colors, c0, t0, d0,
+                               tile_size=tile_size)

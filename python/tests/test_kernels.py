@@ -1,0 +1,225 @@
+"""L1 kernel correctness: the Pallas GEMM-blending kernel (and the
+vanilla baseline kernel) against the pure-numpy sequential oracle —
+the §4 invariant-2 check at the kernel level, plus hypothesis sweeps
+over shapes and parameter ranges."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.common import mp_matrix, build_mg, GEMM_K
+from compile.kernels.gemm_blend import gemm_blend_batch, gemm_blend_batch_bf16
+from compile.kernels.vanilla_blend import vanilla_blend_batch
+from compile.kernels.ref import blend_tile_ref, blend_batches_ref
+from compile.model import blend_tile_gemm, blend_tile_vanilla
+
+
+def random_tile_inputs(rng, n, tile_size=16, spread=1.5):
+    """Random SPD conics, offsets around the tile, opacities, colors."""
+    a = rng.uniform(0.02, spread, n).astype(np.float32)
+    c = rng.uniform(0.02, spread, n).astype(np.float32)
+    b = (rng.uniform(-0.9, 0.9, n) * np.sqrt(a * c)).astype(np.float32)
+    conics = np.stack([a, b, c], 1)
+    offsets = rng.uniform(-8.0, tile_size + 8.0, (n, 2)).astype(np.float32)
+    opac = rng.uniform(0.05, 0.99, n).astype(np.float32)
+    colors = rng.uniform(0.0, 1.0, (n, 3)).astype(np.float32)
+    return conics, offsets, opac, colors
+
+
+def assert_blend_close(got, want, atol=2e-3, what=""):
+    c_got, t_got = np.asarray(got[0]), np.asarray(got[1])
+    c_want, t_want = want[0], want[1]
+    np.testing.assert_allclose(c_got, c_want, atol=atol, err_msg=f"{what} color")
+    np.testing.assert_allclose(t_got, t_want, atol=atol, err_msg=f"{what} transmittance")
+
+
+class TestGemmKernelVsOracle:
+    @pytest.mark.parametrize("n", [1, 7, 64, 256])
+    def test_matches_sequential_oracle(self, n):
+        rng = np.random.default_rng(n)
+        conics, offsets, opac, colors = random_tile_inputs(rng, n)
+        mp = mp_matrix(16)
+        got = blend_tile_gemm(jnp.array(conics), jnp.array(offsets),
+                              jnp.array(opac), jnp.array(colors))
+        want = blend_tile_ref(conics, offsets, opac, colors)
+        assert_blend_close(got, want, what=f"gemm n={n}")
+
+    @pytest.mark.parametrize("tile_size", [4, 8, 16])
+    def test_tile_sizes(self, tile_size):
+        rng = np.random.default_rng(tile_size)
+        conics, offsets, opac, colors = random_tile_inputs(rng, 32, tile_size)
+        got = blend_tile_gemm(jnp.array(conics), jnp.array(offsets),
+                              jnp.array(opac), jnp.array(colors),
+                              tile_size=tile_size)
+        want = blend_tile_ref(conics, offsets, opac, colors, tile_size=tile_size)
+        assert_blend_close(got, want, what=f"tile={tile_size}")
+
+    def test_carry_interface_matches_single_pass(self):
+        """(C, T, done) carried across batch boundaries == one pass."""
+        rng = np.random.default_rng(99)
+        conics, offsets, opac, colors = random_tile_inputs(rng, 300)
+        mp = mp_matrix(16)
+        c = jnp.zeros((256, 3), jnp.float32)
+        t = jnp.ones((256,), jnp.float32)
+        d = jnp.zeros((256,), jnp.float32)
+        for s in range(0, 300, 100):
+            e = s + 100
+            c, t, d = gemm_blend_batch(
+                jnp.array(conics[s:e]), jnp.array(offsets[s:e]),
+                jnp.array(opac[s:e]), jnp.array(colors[s:e]),
+                mp, c, t, d,
+            )
+        want = blend_tile_ref(conics, offsets, opac, colors)
+        assert_blend_close((c, t), want, what="carried")
+        # done flags agree with the oracle
+        np.testing.assert_array_equal(np.asarray(d) > 0.5, want[2])
+
+    def test_opaque_wall_early_termination(self):
+        """Gaussians behind an opaque wall must not contribute."""
+        n = 64
+        conics = np.tile([1e-4, 0.0, 1e-4], (n, 1)).astype(np.float32)
+        offsets = np.tile([8.0, 8.0], (n, 1)).astype(np.float32)
+        opac = np.full(n, 0.99, np.float32)
+        colors = np.zeros((n, 3), np.float32)
+        colors[:5] = [1.0, 0.0, 0.0]
+        colors[5:] = [0.0, 0.0, 1.0]
+        c, t, d = blend_tile_gemm(jnp.array(conics), jnp.array(offsets),
+                                  jnp.array(opac), jnp.array(colors))
+        c = np.asarray(c)
+        assert c[:, 2].max() < 1e-3, "blue leaked through opaque wall"
+        assert c[:, 0].min() >= 0.99
+        assert np.all(np.asarray(d) > 0.5)
+
+    def test_transmittance_bounds_and_monotonicity(self):
+        rng = np.random.default_rng(5)
+        conics, offsets, opac, colors = random_tile_inputs(rng, 128)
+        mp = mp_matrix(16)
+        c = jnp.zeros((256, 3), jnp.float32)
+        t = jnp.ones((256,), jnp.float32)
+        d = jnp.zeros((256,), jnp.float32)
+        prev_t = np.ones(256, np.float32)
+        for s in range(0, 128, 32):
+            c, t, d = gemm_blend_batch(
+                jnp.array(conics[s:s+32]), jnp.array(offsets[s:s+32]),
+                jnp.array(opac[s:s+32]), jnp.array(colors[s:s+32]),
+                mp, c, t, d,
+            )
+            t_np = np.asarray(t)
+            assert np.all(t_np <= prev_t + 1e-6), "transmittance increased"
+            assert np.all(t_np >= 0.0) and np.all(t_np <= 1.0)
+            prev_t = t_np
+
+
+class TestVanillaKernelVsOracle:
+    @pytest.mark.parametrize("n", [1, 33, 256])
+    def test_matches_sequential_oracle(self, n):
+        rng = np.random.default_rng(1000 + n)
+        conics, offsets, opac, colors = random_tile_inputs(rng, n)
+        got = blend_tile_vanilla(jnp.array(conics), jnp.array(offsets),
+                                 jnp.array(opac), jnp.array(colors))
+        want = blend_tile_ref(conics, offsets, opac, colors)
+        assert_blend_close(got, want, what=f"vanilla n={n}")
+
+    def test_gemm_equals_vanilla_kernel(self):
+        """The Eq. 6 equivalence witnessed between the two kernels."""
+        rng = np.random.default_rng(7)
+        conics, offsets, opac, colors = random_tile_inputs(rng, 200)
+        g = blend_tile_gemm(jnp.array(conics), jnp.array(offsets),
+                            jnp.array(opac), jnp.array(colors))
+        v = blend_tile_vanilla(jnp.array(conics), jnp.array(offsets),
+                               jnp.array(opac), jnp.array(colors))
+        np.testing.assert_allclose(np.asarray(g[0]), np.asarray(v[0]), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(g[1]), np.asarray(v[1]), atol=1e-3)
+
+
+class TestBf16Variant:
+    def test_bf16_close_to_f32(self):
+        """bf16 GEMM operands: looser tolerance, same structure."""
+        rng = np.random.default_rng(13)
+        conics, offsets, opac, colors = random_tile_inputs(rng, 64)
+        mp = mp_matrix(16)
+        c0 = jnp.zeros((256, 3), jnp.float32)
+        t0 = jnp.ones((256,), jnp.float32)
+        d0 = jnp.zeros((256,), jnp.float32)
+        f32 = gemm_blend_batch(jnp.array(conics), jnp.array(offsets),
+                               jnp.array(opac), jnp.array(colors), mp, c0, t0, d0)
+        bf16 = gemm_blend_batch_bf16(jnp.array(conics), jnp.array(offsets),
+                                     jnp.array(opac), jnp.array(colors), mp, c0, t0, d0)
+        # bf16 has ~8 mantissa bits and the quadratic terms reach ~10³ for
+        # off-tile Gaussians, so absolute power error can reach a few
+        # units before exp() — the paper's fp16 kernels face the same
+        # issue and the ablation documents it (EXPERIMENTS.md §Perf):
+        # require structural agreement, not tight allclose.
+        a = np.asarray(f32[0]).ravel()
+        b = np.asarray(bf16[0]).ravel()
+        assert abs(a.mean() - b.mean()) < 0.05, "bf16 image brightness drifted"
+        if a.std() > 1e-6:
+            corr = np.corrcoef(a, b)[0, 1]
+            # measured ~0.95: bf16's 8 mantissa bits give |Δpower| ≈ 1.7
+            # at the ~10³ magnitudes of the quadratic terms — the reason
+            # the paper's Tensor-Core path needs tf32 (10 bits) or the
+            # TC-GS-style magnitude-bounding tricks; recorded as the
+            # precision ablation in EXPERIMENTS.md §Perf.
+            assert corr > 0.9, f"bf16/f32 correlation {corr}"
+
+
+class TestEq6Identity:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        a=st.floats(0.01, 3.0), c=st.floats(0.01, 3.0),
+        brel=st.floats(-0.95, 0.95),
+        xh=st.floats(-30.0, 30.0), yh=st.floats(-30.0, 30.0),
+    )
+    def test_vg_dot_vp_equals_direct(self, a, c, brel, xh, yh):
+        """Property: v_g · v_p == -½AΔx² − BΔxΔy − ½CΔy² for all pixels."""
+        b = brel * np.sqrt(a * c)
+        conics = jnp.array([[a, b, c]], jnp.float32)
+        offsets = jnp.array([[xh, yh]], jnp.float32)
+        vg = np.asarray(build_mg(conics, offsets))[0]
+        mp = np.asarray(mp_matrix(16))
+        got = vg @ mp  # [256]
+        ly, lx = np.meshgrid(np.arange(16), np.arange(16), indexing="ij")
+        dx = xh - lx.ravel()
+        dy = yh - ly.ravel()
+        want = -0.5 * (a * dx * dx + c * dy * dy) - b * dx * dy
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+
+class TestOracleSelfConsistency:
+    def test_batched_oracle_equals_single_pass(self):
+        rng = np.random.default_rng(3)
+        conics, offsets, opac, colors = random_tile_inputs(rng, 500)
+        one = blend_tile_ref(conics, offsets, opac, colors)
+        for batch in [64, 128, 256]:
+            many = blend_batches_ref(conics, offsets, opac, colors, batch)
+            np.testing.assert_allclose(many[0], one[0], atol=1e-5)
+            np.testing.assert_allclose(many[1], one[1], atol=1e-6)
+            np.testing.assert_array_equal(many[2], one[2])
+
+    def test_empty_input(self):
+        c, t, d = blend_tile_ref(
+            np.zeros((0, 3), np.float32), np.zeros((0, 2), np.float32),
+            np.zeros(0, np.float32), np.zeros((0, 3), np.float32),
+        )
+        assert np.all(c == 0) and np.all(t == 1) and not d.any()
+
+
+class TestHypothesisSweep:
+    """Hypothesis sweep of the Pallas kernel over sizes and value ranges
+    against the oracle (the mandated shapes/dtypes property sweep)."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**31 - 1),
+        spread=st.floats(0.05, 3.0),
+    )
+    def test_kernel_vs_oracle(self, n, seed, spread):
+        rng = np.random.default_rng(seed)
+        conics, offsets, opac, colors = random_tile_inputs(rng, n, spread=spread)
+        got = blend_tile_gemm(jnp.array(conics), jnp.array(offsets),
+                              jnp.array(opac), jnp.array(colors))
+        want = blend_tile_ref(conics, offsets, opac, colors)
+        assert_blend_close(got, want, atol=5e-3, what=f"sweep n={n} seed={seed}")

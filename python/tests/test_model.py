@@ -1,0 +1,229 @@
+"""L2 model tests: preprocessing invariants (DESIGN.md §4 invariant 5),
+SH decode, the scan-fused blending entry, and shape checks for every AOT
+entry point."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.common import mp_matrix, GEMM_K
+from compile.kernels.ref import blend_tile_ref
+from compile.model import (
+    covariance3d,
+    gemm_blend_tile_scan,
+    preprocess_chunk,
+    quat_to_rot,
+    sh_to_color,
+)
+
+
+def look_at_row_major(eye, target, up):
+    """Mirror of math/camera.rs `look_at` (row-major output)."""
+    eye, target, up = (np.asarray(v, np.float32) for v in (eye, target, up))
+    fwd = target - eye
+    fwd = fwd / np.linalg.norm(fwd)
+    right = np.cross(fwd, up)
+    right = right / np.linalg.norm(right)
+    down = np.cross(fwd, right)
+    view = np.eye(4, dtype=np.float32)
+    view[0, :3], view[0, 3] = right, -right @ eye
+    view[1, :3], view[1, 3] = down, -down @ eye
+    view[2, :3], view[2, 3] = fwd, -fwd @ eye
+    return view
+
+
+def perspective_row_major(tan_fovx, tan_fovy, znear, zfar):
+    """Mirror of math/camera.rs `perspective` (row-major output)."""
+    p = np.zeros((4, 4), dtype=np.float32)
+    p[0, 0] = 1.0 / tan_fovx
+    p[1, 1] = 1.0 / tan_fovy
+    p[2, 2] = zfar / (zfar - znear)
+    p[2, 3] = -(zfar * znear) / (zfar - znear)
+    p[3, 2] = 1.0
+    return p
+
+
+def camera_setup(width=640, height=480, fovy=np.pi / 3, eye=(0.0, 0.0, -5.0)):
+    aspect = width / height
+    tan_fovy = np.tan(fovy / 2)
+    tan_fovx = tan_fovy * aspect
+    view = look_at_row_major(eye, (0, 0, 0), (0, 1, 0))
+    proj = perspective_row_major(tan_fovx, tan_fovy, 0.01, 100.0)
+    fx = width / (2 * tan_fovx)
+    fy = height / (2 * tan_fovy)
+    cam = np.array(
+        [fx, fy, tan_fovx, tan_fovy, width, height, 0.2, 0.3, 1.3, *eye],
+        dtype=np.float32,
+    )
+    return view, proj, cam
+
+
+def random_chunk(rng, n):
+    means = rng.uniform(-2, 2, (n, 3)).astype(np.float32)
+    scales = rng.uniform(0.02, 0.3, (n, 3)).astype(np.float32)
+    quats = rng.normal(size=(n, 4)).astype(np.float32)
+    opac = rng.uniform(0.1, 0.99, n).astype(np.float32)
+    sh = (rng.normal(size=(n, 16, 3)) * 0.2).astype(np.float32)
+    sh[:, 0, :] = rng.uniform(0, 1, (n, 3))
+    return means, scales, quats, opac, sh
+
+
+class TestQuatRot:
+    def test_identity(self):
+        r = np.asarray(quat_to_rot(jnp.array([[1.0, 0, 0, 0]])))
+        np.testing.assert_allclose(r[0], np.eye(3), atol=1e-6)
+
+    def test_orthonormal(self):
+        rng = np.random.default_rng(0)
+        q = rng.normal(size=(32, 4)).astype(np.float32)
+        r = np.asarray(quat_to_rot(jnp.array(q)))
+        for m in r:
+            np.testing.assert_allclose(m @ m.T, np.eye(3), atol=1e-5)
+            assert np.linalg.det(m) > 0.99
+
+    def test_cov3d_isotropic(self):
+        rng = np.random.default_rng(1)
+        q = rng.normal(size=(8, 4)).astype(np.float32)
+        s = np.full((8, 3), 1.5, np.float32)
+        cov = np.asarray(covariance3d(jnp.array(s), jnp.array(q)))
+        for m in cov:
+            np.testing.assert_allclose(m, 2.25 * np.eye(3), atol=1e-4)
+
+
+class TestShDecode:
+    def test_dc_only(self):
+        sh = np.zeros((1, 16, 3), np.float32)
+        sh[0, 0] = [1.0, 0.5, 0.25]
+        d = jnp.array([[0.0, 0.0, 1.0]])
+        c = np.asarray(sh_to_color(jnp.array(sh), d))[0]
+        c0 = 0.28209479
+        np.testing.assert_allclose(c, [c0 + 0.5, 0.5 * c0 + 0.5, 0.25 * c0 + 0.5], atol=1e-5)
+
+    def test_clamped_nonnegative(self):
+        sh = np.full((1, 16, 3), -10.0, np.float32)
+        d = jnp.array([[0.0, 0.0, 1.0]])
+        c = np.asarray(sh_to_color(jnp.array(sh), d))
+        assert (c >= 0).all()
+
+
+class TestPreprocess:
+    def test_center_gaussian_projects_to_image_center(self):
+        view, proj, cam = camera_setup()
+        n = 8
+        means = np.zeros((n, 3), np.float32)
+        scales = np.full((n, 3), 0.1, np.float32)
+        quats = np.tile([1.0, 0, 0, 0], (n, 1)).astype(np.float32)
+        opac = np.full(n, 0.5, np.float32)
+        sh = np.zeros((n, 16, 3), np.float32)
+        m2, conic, depth, radius, color, valid = (
+            np.asarray(v) for v in preprocess_chunk(
+                jnp.array(means), jnp.array(scales), jnp.array(quats),
+                jnp.array(sh), jnp.array(view),
+                jnp.array(proj), jnp.array(cam),
+            )
+        )
+        assert valid.all()
+        np.testing.assert_allclose(m2[:, 0], 319.5, atol=0.5)
+        np.testing.assert_allclose(m2[:, 1], 239.5, atol=0.5)
+        np.testing.assert_allclose(depth, 5.0, atol=1e-3)
+        assert (radius >= 1).all()
+
+    def test_conics_spd_for_valid(self):
+        view, proj, cam = camera_setup()
+        rng = np.random.default_rng(42)
+        means, scales, quats, opac, sh = random_chunk(rng, 256)
+        out = preprocess_chunk(
+            jnp.array(means), jnp.array(scales), jnp.array(quats),
+            jnp.array(sh), jnp.array(view),
+            jnp.array(proj), jnp.array(cam),
+        )
+        m2, conic, depth, radius, color, valid = (np.asarray(v) for v in out)
+        v = valid > 0.5
+        assert v.sum() > 0
+        a, b, c = conic[v, 0], conic[v, 1], conic[v, 2]
+        assert (a > 0).all() and (c > 0).all()
+        assert (a * c - b * b > 0).all(), "conic not SPD"
+        assert (depth[v] >= 0.2).all()
+        assert (radius[v] >= 1.0).all()
+        assert (color[v] >= 0).all()
+
+    def test_behind_camera_invalid(self):
+        view, proj, cam = camera_setup()
+        means = np.array([[0, 0, -10.0]], np.float32)  # behind eye at -5
+        out = preprocess_chunk(
+            jnp.array(means), jnp.full((1, 3), 0.1), jnp.array([[1.0, 0, 0, 0]]),
+            jnp.zeros((1, 16, 3)), jnp.array(view),
+            jnp.array(proj), jnp.array(cam),
+        )
+        valid = np.asarray(out[5])
+        assert valid[0] == 0.0
+
+    def test_invalid_rows_zeroed(self):
+        view, proj, cam = camera_setup()
+        means = np.array([[0, 0, -10.0], [0, 0, 0]], np.float32)
+        out = preprocess_chunk(
+            jnp.array(means), jnp.full((2, 3), 0.1),
+            jnp.tile(jnp.array([1.0, 0, 0, 0]), (2, 1)),
+            jnp.zeros((2, 16, 3)), jnp.array(view),
+            jnp.array(proj), jnp.array(cam),
+        )
+        m2, conic, depth, radius, color, valid = (np.asarray(v) for v in out)
+        assert valid[0] == 0 and valid[1] == 1
+        assert (m2[0] == 0).all() and radius[0] == 0
+
+
+class TestScanEntry:
+    def test_scan_matches_oracle(self):
+        rng = np.random.default_rng(3)
+        n = 512  # 2 batches of 256
+        a = rng.uniform(0.02, 1.0, n).astype(np.float32)
+        c = rng.uniform(0.02, 1.0, n).astype(np.float32)
+        b = (rng.uniform(-0.9, 0.9, n) * np.sqrt(a * c)).astype(np.float32)
+        conics = np.stack([a, b, c], 1)
+        offsets = rng.uniform(-8, 24, (n, 2)).astype(np.float32)
+        opac = rng.uniform(0.05, 0.9, n).astype(np.float32)
+        colors = rng.uniform(0, 1, (n, 3)).astype(np.float32)
+        mp = mp_matrix(16)
+        c0 = jnp.zeros((256, 3), jnp.float32)
+        t0 = jnp.ones((256,), jnp.float32)
+        d0 = jnp.zeros((256,), jnp.float32)
+        got = gemm_blend_tile_scan(
+            jnp.array(conics), jnp.array(offsets), jnp.array(opac),
+            jnp.array(colors), mp, c0, t0, d0, batch=256,
+        )
+        want = blend_tile_ref(conics, offsets, opac, colors)
+        np.testing.assert_allclose(np.asarray(got[0]), want[0], atol=3e-3)
+        np.testing.assert_allclose(np.asarray(got[1]), want[1], atol=3e-3)
+
+    def test_scan_requires_batch_multiple(self):
+        mp = mp_matrix(16)
+        z = jnp.zeros
+        with pytest.raises(AssertionError):
+            gemm_blend_tile_scan(
+                z((100, 3)), z((100, 2)), z((100,)), z((100, 3)), mp,
+                z((256, 3)), jnp.ones((256,)), z((256,)),
+            )
+
+
+class TestAotEntries:
+    """Every AOT entry lowers and produces the declared output shapes."""
+
+    def test_all_entries_lower(self):
+        from compile import aot
+
+        for name, builder in aot.ENTRIES.items():
+            lowered, specs = builder()
+            text = aot.to_hlo_text(lowered)
+            assert "ENTRY" in text, name
+            assert len(text) > 1000, name
+
+    def test_manifest_mp_matches(self):
+        mp = np.asarray(mp_matrix(16)).reshape(-1)
+        assert mp.shape == (8 * 256,)
+        # golden few values (rust gemm/mp.rs tests use the same)
+        mp2 = np.asarray(mp_matrix(16))
+        assert mp2[5].min() == 1.0 and mp2[5].max() == 1.0
+        assert mp2[0, 3 + 5 * 16] == 9.0   # x̄² at (lx=3, ly=5)
+        assert mp2[2, 3 + 5 * 16] == 15.0  # x̄ȳ

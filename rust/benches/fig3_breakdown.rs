@@ -1,0 +1,30 @@
+//! Figure 3 bench: vanilla 3DGS stage breakdown — modelled (A100, full
+//! Table 1 scale) and measured (CPU simulator) side by side.
+
+use gemm_gs::bench_harness::fig3;
+use gemm_gs::perfmodel::A100;
+
+fn main() {
+    let sim_scale = std::env::var("SIM_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.02);
+
+    let rows = fig3::run_modelled(&A100, sim_scale);
+    print!("{}", fig3::render(&rows, &A100));
+
+    println!("\nCPU-measured breakdown (simulator, sim scale {sim_scale}):");
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "scene", "pre", "dup", "sort", "blend", "blend%"
+    );
+    for name in ["train", "truck", "playroom", "bonsai"] {
+        let t = fig3::run_measured_cpu(name, sim_scale);
+        println!(
+            "{:<12} {:>10.2?} {:>10.2?} {:>10.2?} {:>10.2?} {:>7.1}%",
+            name,
+            t.preprocess,
+            t.duplicate,
+            t.sort,
+            t.blend,
+            t.blend_fraction() * 100.0
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! Figure 5 bench: the Table-2 grid on the modelled H100 (the paper's
+//! second testbed; headline 1.37× mean speedup over vanilla).
+
+use gemm_gs::bench_harness::table2;
+use gemm_gs::perfmodel::H100;
+
+fn main() {
+    let sim_scale = std::env::var("SIM_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.02);
+    let cells = table2::run(&H100, sim_scale);
+    print!("{}", table2::render(&cells, &H100));
+}

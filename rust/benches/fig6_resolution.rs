@@ -1,0 +1,37 @@
+//! Figure 6 bench: GEMM-GS vs vanilla across 1×/2×/3× resolution —
+//! modelled (A100) plus a CPU wall-clock cross-check on one scene.
+
+use gemm_gs::bench_harness::{fig6, timing, workloads};
+use gemm_gs::coordinator::scheduler::render_frame_parallel;
+use gemm_gs::coordinator::BackendKind;
+use gemm_gs::perfmodel::A100;
+use gemm_gs::pipeline::render::RenderConfig;
+use gemm_gs::scene::synthetic::scene_by_name;
+
+fn main() {
+    let sim_scale = std::env::var("SIM_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.02);
+    let scenes = std::env::var("FIG6_SCENES").ok().and_then(|v| v.parse().ok()).unwrap_or(13);
+
+    let pts = fig6::run(&A100, sim_scale, scenes);
+    print!("{}", fig6::render(&pts, &A100));
+
+    println!("\nCPU wall-clock ('train', sim scale {sim_scale}):");
+    let spec = scene_by_name("train").unwrap();
+    let cloud = spec.synthesize(sim_scale);
+    let cfg = RenderConfig::default();
+    for rs in [1.0, 2.0] {
+        let camera = workloads::default_camera_scaled(&spec, rs);
+        let tv = timing::median_time(3, || {
+            std::hint::black_box(render_frame_parallel(&cloud, &camera, &cfg, BackendKind::NativeVanilla, 4));
+        });
+        let tg = timing::median_time(3, || {
+            std::hint::black_box(render_frame_parallel(&cloud, &camera, &cfg, BackendKind::NativeGemm, 4));
+        });
+        println!(
+            "  {rs:.0}x: vanilla {} gemm {} speedup {:.2}x",
+            timing::fmt_ms(tv),
+            timing::fmt_ms(tg),
+            tv.as_secs_f64() / tg.as_secs_f64()
+        );
+    }
+}

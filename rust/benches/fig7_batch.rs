@@ -1,0 +1,29 @@
+//! Figure 7 bench: batch-size sensitivity — modelled (A100) plus CPU
+//! wall-clock of the native GEMM blender across b ∈ {32..256}.
+
+use gemm_gs::bench_harness::{fig7, timing, workloads};
+use gemm_gs::pipeline::render::{render_frame, Blender, RenderConfig};
+use gemm_gs::perfmodel::A100;
+use gemm_gs::scene::synthetic::scene_by_name;
+
+fn main() {
+    let sim_scale = std::env::var("SIM_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.02);
+    let scene = std::env::var("FIG7_SCENE").unwrap_or_else(|_| "train".into());
+
+    let pts = fig7::run(&A100, sim_scale, &scene);
+    print!("{}", fig7::render(&pts, &A100, &scene));
+
+    println!("\nCPU wall-clock ('{scene}', sim scale {sim_scale}):");
+    let spec = scene_by_name(&scene).unwrap();
+    let cloud = spec.synthesize(sim_scale);
+    let camera = workloads::default_camera(&spec);
+    for b in [32usize, 64, 128, 256] {
+        let mut cfg = RenderConfig::default();
+        cfg.batch = b;
+        let mut blender = Blender::Gemm.instantiate(b);
+        let t = timing::median_time(3, || {
+            std::hint::black_box(render_frame(&cloud, &camera, &cfg, blender.as_mut()));
+        });
+        println!("  b={b:<4} {}", timing::fmt_ms(t));
+    }
+}

@@ -1,0 +1,40 @@
+//! Micro-bench: the radix sort over (tile‖depth) keys vs std unstable
+//! sort — Stage 3's substrate.
+
+use gemm_gs::bench_harness::timing;
+use gemm_gs::pipeline::sort::radix_sort_pairs;
+use gemm_gs::scene::rng::Rng;
+
+fn main() {
+    for n in [100_000usize, 1_000_000] {
+        let mut rng = Rng::new(7);
+        let keys: Vec<u64> = (0..n)
+            .map(|_| {
+                let tile = rng.next_u64() % 4096;
+                let depth = (rng.range(0.2, 50.0)).to_bits() as u64;
+                (tile << 32) | depth
+            })
+            .collect();
+        let values: Vec<u32> = (0..n as u32).collect();
+
+        let t_radix = timing::median_time(5, || {
+            let mut k = keys.clone();
+            let mut v = values.clone();
+            radix_sort_pairs(&mut k, &mut v);
+            std::hint::black_box((k, v));
+        });
+        let t_std = timing::median_time(5, || {
+            let mut pairs: Vec<(u64, u32)> =
+                keys.iter().cloned().zip(values.iter().cloned()).collect();
+            pairs.sort_unstable_by_key(|&(k, _)| k);
+            std::hint::black_box(pairs);
+        });
+        println!(
+            "n={n}: radix {} ({:.1} Mkeys/s), std {} — radix {:.2}x",
+            timing::fmt_ms(t_radix),
+            n as f64 / t_radix.as_secs_f64() / 1e6,
+            timing::fmt_ms(t_std),
+            t_std.as_secs_f64() / t_radix.as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Table 2 bench: the full modelled A100 grid (all 6 methods × 13
+//! scenes, ± GEMM-GS) plus honest CPU wall-clock for the two native
+//! blenders on a scene subset — the end-to-end experiment behind the
+//! paper's headline 1.42× claim.
+
+use gemm_gs::bench_harness::{table2, timing, workloads};
+use gemm_gs::coordinator::BackendKind;
+use gemm_gs::coordinator::scheduler::render_frame_parallel;
+use gemm_gs::perfmodel::A100;
+use gemm_gs::pipeline::render::RenderConfig;
+use gemm_gs::scene::synthetic::scene_by_name;
+
+fn main() {
+    let sim_scale = std::env::var("SIM_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.02);
+
+    // ---- modelled grid (the paper's table) ----
+    let cells = table2::run(&A100, sim_scale);
+    print!("{}", table2::render(&cells, &A100));
+
+    // ---- CPU wall-clock cross-check on 3 representative scenes ----
+    println!("\nCPU wall-clock (simulator, sim scale {sim_scale}, tile-parallel ×4):");
+    println!("{:<12} {:>14} {:>14} {:>9}", "scene", "vanilla", "gemm-gs", "speedup");
+    for name in ["train", "playroom", "garden"] {
+        let spec = scene_by_name(name).unwrap();
+        let cloud = spec.synthesize(sim_scale);
+        let camera = workloads::default_camera(&spec);
+        let cfg = RenderConfig::default();
+        let tv = timing::median_time(3, || {
+            std::hint::black_box(render_frame_parallel(
+                &cloud,
+                &camera,
+                &cfg,
+                BackendKind::NativeVanilla,
+                4,
+            ));
+        });
+        let tg = timing::median_time(3, || {
+            std::hint::black_box(render_frame_parallel(
+                &cloud,
+                &camera,
+                &cfg,
+                BackendKind::NativeGemm,
+                4,
+            ));
+        });
+        println!(
+            "{:<12} {:>14} {:>14} {:>8.2}x",
+            name,
+            timing::fmt_ms(tv),
+            timing::fmt_ms(tg),
+            tv.as_secs_f64() / tg.as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,146 @@
+//! Speedy-Splat [7]: the SnugBox algorithm — replace the vanilla
+//! circular-radius bounding square with the *tight axis-aligned box* of
+//! the opacity-bounded ellipse, then (AccuTile) keep only tiles the
+//! ellipse actually reaches. The α ≥ 1/255 region of a splat is the
+//! ellipse `Δᵀ Σ⁻¹ Δ ≤ τ` with `τ = 2·ln(255·o)`; its AABB half-extents
+//! are `(√(τ·Σxx), √(τ·Σyy))` — often several times tighter than the
+//! 3σ circle for anisotropic Gaussians.
+
+use super::{tile_max_alpha, AccelMethod};
+use crate::pipeline::preprocess::Projected;
+use crate::pipeline::tile::TileGrid;
+use crate::pipeline::{ALPHA_SKIP, TILE_SIZE};
+
+/// Speedy-Splat SnugBox + AccuTile.
+pub struct SpeedySplat {
+    /// Enable the exact per-tile test after the box prefilter (AccuTile).
+    pub accutile: bool,
+}
+
+impl Default for SpeedySplat {
+    fn default() -> Self {
+        SpeedySplat { accutile: true }
+    }
+}
+
+/// Tight AABB half-extents of the α ≥ 1/255 ellipse.
+/// conic = Σ⁻¹ as [A, B, C]; Σ = [[C, -B], [-B, A]] / det(conic).
+pub fn snugbox_half_extents(conic: [f32; 3], opacity: f32) -> (f32, f32) {
+    let tau = 2.0 * (255.0 * opacity.max(ALPHA_SKIP)).ln().max(0.0);
+    let [a, b, c] = conic;
+    let det = (a * c - b * b).max(1e-12);
+    let sxx = c / det; // Σxx
+    let syy = a / det; // Σyy
+    ((tau * sxx).sqrt(), (tau * syy).sqrt())
+}
+
+impl AccelMethod for SpeedySplat {
+    fn name(&self) -> &'static str {
+        "Speedy-Splat"
+    }
+
+    fn keep_pair(&self, p: &Projected, i: usize, tx: u32, ty: u32, grid: &TileGrid) -> bool {
+        // SnugBox prefilter: tile must intersect the tight AABB
+        let (hx, hy) = snugbox_half_extents(p.conics[i], p.opacities[i]);
+        let m = p.means2d[i];
+        let ts = TILE_SIZE as f32;
+        let (x0, y0) = (tx as f32 * ts, ty as f32 * ts);
+        let (x1, y1) = (x0 + ts - 1.0, y0 + ts - 1.0);
+        if m.x + hx < x0 || m.x - hx > x1 || m.y + hy < y0 || m.y - hy > y1 {
+            return false;
+        }
+        if !self.accutile {
+            return true;
+        }
+        // AccuTile: exact reachability (same bound FlashGS uses)
+        tile_max_alpha(p, i, tx, ty, grid) >= ALPHA_SKIP
+    }
+
+    // SnugBox itself is cheap; slightly cheaper than FlashGS's full test
+    fn preprocess_cost_factor(&self) -> f64 {
+        1.05
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Camera, Vec2, Vec3};
+    use crate::pipeline::duplicate::duplicate_with_mask;
+    use crate::pipeline::preprocess::{preprocess, PreprocessConfig};
+    use crate::pipeline::render::{render_frame, render_frame_masked, Blender, RenderConfig};
+    use crate::scene::synthetic::scene_by_name;
+
+    #[test]
+    fn snugbox_tighter_for_anisotropic() {
+        // elongated along x: Σxx >> Σyy → hx >> hy
+        // conic for cov diag(25, 1): [1/25, 0, 1]
+        let (hx, hy) = snugbox_half_extents([0.04, 0.0, 1.0], 0.9);
+        assert!(hx > 4.0 * hy, "hx={hx} hy={hy}");
+        // and both well under the circular 3σ radius of √25·3 = 15 vs hy ≈ 3.3
+        assert!(hy < 5.0);
+    }
+
+    #[test]
+    fn lossless_and_culls_most() {
+        let cloud = scene_by_name("train").unwrap().synthesize(0.001);
+        let camera = Camera::look_at(
+            Vec3::new(0.0, 1.0, -8.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            320,
+            192,
+        );
+        let cfg = RenderConfig::default();
+        let method = SpeedySplat::default();
+        let grid = TileGrid::new(camera.width, camera.height);
+        let mut b = Blender::Gemm.instantiate(cfg.batch);
+        let full = render_frame(&cloud, &camera, &cfg, b.as_mut());
+        let mask = |p: &Projected, i: usize, tx: u32, ty: u32| method.keep_pair(p, i, tx, ty, &grid);
+        let culled = render_frame_masked(&cloud, &camera, &cfg, b.as_mut(), Some(&mask));
+        assert!(culled.stats.n_pairs < full.stats.n_pairs);
+        let psnr = culled.image.psnr(&full.image).unwrap();
+        assert!(psnr > 60.0 || psnr.is_infinite(), "not lossless: {psnr}");
+    }
+
+    #[test]
+    fn box_prefilter_never_keeps_what_accutile_drops_entirely() {
+        // prefilter-only must be a superset of the full test
+        let cloud = scene_by_name("bonsai").unwrap().synthesize(0.0005);
+        let camera = Camera::look_at(
+            Vec3::new(0.0, 0.0, -5.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            256,
+            160,
+        );
+        let grid = TileGrid::new(camera.width, camera.height);
+        let projected = preprocess(&cloud, &camera, &PreprocessConfig::default());
+        let box_only = SpeedySplat { accutile: false };
+        let full = SpeedySplat { accutile: true };
+        let m1 = |i: usize, tx: u32, ty: u32| box_only.keep_pair(&projected, i, tx, ty, &grid);
+        let m2 = |i: usize, tx: u32, ty: u32| full.keep_pair(&projected, i, tx, ty, &grid);
+        let n1 = duplicate_with_mask(&projected, &grid, Some(&m1)).len();
+        let n2 = duplicate_with_mask(&projected, &grid, Some(&m2)).len();
+        assert!(n2 <= n1, "AccuTile must only remove pairs ({n2} vs {n1})");
+    }
+
+    #[test]
+    fn far_tile_rejected_by_box() {
+        let grid = TileGrid::new(256, 256);
+        let p = Projected {
+            means2d: vec![Vec2::new(128.0, 128.0)],
+            conics: vec![[1.0, 0.0, 1.0]],
+            depths: vec![1.0],
+            radii: vec![100.0], // inflated vanilla radius
+            colors: vec![Vec3::splat(0.5)],
+            opacities: vec![0.9],
+            source: vec![0],
+        };
+        let s = SpeedySplat::default();
+        assert!(s.keep_pair(&p, 0, 8, 8, &grid)); // containing tile
+        assert!(!s.keep_pair(&p, 0, 0, 0, &grid)); // far corner
+    }
+}

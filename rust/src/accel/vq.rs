@@ -1,0 +1,210 @@
+//! Vector quantization substrate for the compression baselines — plain
+//! k-means (k-means++ style seeding from a deterministic RNG, Lloyd
+//! iterations) over arbitrary-dimension f32 vectors.
+
+use crate::scene::rng::Rng;
+
+/// A trained codebook.
+#[derive(Debug, Clone)]
+pub struct Codebook {
+    /// `k × dim`, row-major.
+    pub centroids: Vec<f32>,
+    pub dim: usize,
+}
+
+impl Codebook {
+    /// Number of codewords.
+    pub fn len(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.centroids.len() / self.dim
+        }
+    }
+
+    /// True when the codebook is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Codeword `i`.
+    pub fn codeword(&self, i: usize) -> &[f32] {
+        &self.centroids[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Index of the nearest codeword to `v`.
+    pub fn assign(&self, v: &[f32]) -> usize {
+        debug_assert_eq!(v.len(), self.dim);
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for i in 0..self.len() {
+            let c = self.codeword(i);
+            let mut d = 0.0f32;
+            for (a, b) in v.iter().zip(c) {
+                let t = a - b;
+                d += t * t;
+                if d >= best_d {
+                    break;
+                }
+            }
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Train a `k`-entry codebook on `data` (`n × dim` row-major) with
+/// `iters` Lloyd iterations. Deterministic given `seed`.
+pub fn train(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Codebook {
+    assert!(dim > 0 && data.len() % dim == 0);
+    let n = data.len() / dim;
+    let k = k.min(n.max(1));
+    let mut rng = Rng::new(seed);
+    let row = |i: usize| &data[i * dim..(i + 1) * dim];
+
+    // k-means++-lite seeding: first uniform, then farthest-biased
+    let mut centroids = Vec::with_capacity(k * dim);
+    if n == 0 {
+        return Codebook { centroids: vec![0.0; k * dim], dim };
+    }
+    centroids.extend_from_slice(row(rng.index(n)));
+    let mut d2 = vec![f32::INFINITY; n];
+    while centroids.len() < k * dim {
+        let last = &centroids[centroids.len() - dim..];
+        let mut sum = 0.0f64;
+        for i in 0..n {
+            let mut d = 0.0f32;
+            for (a, b) in row(i).iter().zip(last) {
+                let t = a - b;
+                d += t * t;
+            }
+            if d < d2[i] {
+                d2[i] = d;
+            }
+            sum += d2[i] as f64;
+        }
+        // sample ∝ d²
+        let mut target = rng.f32() as f64 * sum;
+        let mut pick = n - 1;
+        for (i, &d) in d2.iter().enumerate() {
+            target -= d as f64;
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centroids.extend_from_slice(row(pick));
+    }
+    let mut book = Codebook { centroids, dim };
+
+    // Lloyd iterations
+    let mut sums = vec![0.0f64; k * dim];
+    let mut counts = vec![0usize; k];
+    for _ in 0..iters {
+        sums.iter_mut().for_each(|v| *v = 0.0);
+        counts.iter_mut().for_each(|v| *v = 0);
+        for i in 0..n {
+            let a = book.assign(row(i));
+            counts[a] += 1;
+            for (s, v) in sums[a * dim..(a + 1) * dim].iter_mut().zip(row(i)) {
+                *s += *v as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                continue; // keep the old centroid for empty clusters
+            }
+            for d in 0..dim {
+                book.centroids[c * dim + d] = (sums[c * dim + d] / counts[c] as f64) as f32;
+            }
+        }
+    }
+    book
+}
+
+/// Quantize every row of `data` through `book`, returning assignments.
+pub fn quantize(data: &[f32], book: &Codebook) -> Vec<u32> {
+    data.chunks(book.dim).map(|v| book.assign(v) as u32).collect()
+}
+
+/// Reconstruction (decode) of assignments through a codebook.
+pub fn decode(assignments: &[u32], book: &Codebook) -> Vec<f32> {
+    let mut out = Vec::with_capacity(assignments.len() * book.dim);
+    for &a in assignments {
+        out.extend_from_slice(book.codeword(a as usize));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_cluster_data() -> Vec<f32> {
+        let mut rng = Rng::new(1);
+        let mut data = Vec::new();
+        for _ in 0..100 {
+            data.push(0.0 + rng.normal() * 0.05);
+            data.push(0.0 + rng.normal() * 0.05);
+        }
+        for _ in 0..100 {
+            data.push(5.0 + rng.normal() * 0.05);
+            data.push(5.0 + rng.normal() * 0.05);
+        }
+        data
+    }
+
+    #[test]
+    fn separates_two_clusters() {
+        let data = two_cluster_data();
+        let book = train(&data, 2, 2, 8, 7);
+        assert_eq!(book.len(), 2);
+        let assign = quantize(&data, &book);
+        // first 100 in one cluster, last 100 in the other
+        assert!(assign[..100].iter().all(|&a| a == assign[0]));
+        assert!(assign[100..].iter().all(|&a| a == assign[100]));
+        assert_ne!(assign[0], assign[100]);
+        // centroids near (0,0) and (5,5)
+        let mut cs: Vec<f32> = (0..2).map(|i| book.codeword(i)[0]).collect();
+        cs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(cs[0].abs() < 0.5 && (cs[1] - 5.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn decode_reconstructs_centroids() {
+        let data = two_cluster_data();
+        let book = train(&data, 2, 2, 5, 3);
+        let assign = quantize(&data, &book);
+        let rec = decode(&assign, &book);
+        assert_eq!(rec.len(), data.len());
+        // reconstruction error far below cluster separation
+        let mse: f32 = data.iter().zip(&rec).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+            / data.len() as f32;
+        assert!(mse < 0.1, "mse={mse}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let data = two_cluster_data();
+        let a = train(&data, 2, 4, 5, 11);
+        let b = train(&data, 2, 4, 5, 11);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0]; // 2 rows of dim 2
+        let book = train(&data, 2, 16, 3, 1);
+        assert!(book.len() <= 2);
+    }
+
+    #[test]
+    fn handles_empty() {
+        let book = train(&[], 3, 4, 2, 1);
+        assert_eq!(book.dim, 3);
+        assert!(quantize(&[], &book).is_empty());
+    }
+}

@@ -1,0 +1,81 @@
+//! Figure 3 regeneration: rendering-latency breakdown of vanilla 3DGS.
+//! Two views: (a) the modelled A100 breakdown at full Table 1 scale —
+//! the paper's plot; (b) the *measured* CPU breakdown on the simulator
+//! (StageTimings) as an honesty cross-check that the pipeline shape is
+//! real, not an artifact of the model.
+
+use super::report::Table;
+use super::workloads::measure_workload;
+use crate::accel::Vanilla;
+use crate::perfmodel::breakdown::{fig3_breakdown, mean_blend_fraction, BreakdownRow};
+use crate::perfmodel::GpuSpec;
+use crate::pipeline::render::{render_frame, Blender, RenderConfig, StageTimings};
+use crate::scene::synthetic::table1_scenes;
+
+/// Modelled per-scene breakdown at full scale.
+pub fn run_modelled(gpu: &GpuSpec, sim_scale: f64) -> Vec<BreakdownRow> {
+    let workloads: Vec<_> = table1_scenes()
+        .iter()
+        .map(|spec| {
+            let m = measure_workload(spec, sim_scale, &Vanilla, 1.0);
+            (spec.name.to_string(), m.profile)
+        })
+        .collect();
+    fig3_breakdown(gpu, &workloads)
+}
+
+/// Measured CPU stage timings for one scene at simulation scale.
+pub fn run_measured_cpu(scene: &str, sim_scale: f64) -> StageTimings {
+    let spec = crate::scene::synthetic::scene_by_name(scene).expect("unknown scene");
+    let m = measure_workload(&spec, sim_scale, &Vanilla, 1.0);
+    let cfg = RenderConfig::default();
+    let mut blender = Blender::Vanilla.instantiate(cfg.batch);
+    render_frame(&m.cloud, &m.camera, &cfg, blender.as_mut()).timings
+}
+
+/// Paper-style rendering of the modelled breakdown.
+pub fn render(rows: &[BreakdownRow], gpu: &GpuSpec) -> String {
+    let mut t = Table::new(&["Scene", "Preprocess", "Duplicate", "Sort", "Blend", "Total(ms)"]);
+    for r in rows {
+        let (p, d, s, b) = r.fractions();
+        t.row(vec![
+            r.scene.clone(),
+            format!("{:.1}%", p * 100.0),
+            format!("{:.1}%", d * 100.0),
+            format!("{:.1}%", s * 100.0),
+            format!("{:.1}%", b * 100.0),
+            format!("{:.2}", r.est.total_ms()),
+        ]);
+    }
+    format!(
+        "Figure 3 analogue — vanilla 3DGS stage breakdown, modelled {}\n\n{}\nmean blending share: {:.1}%\n",
+        gpu.name,
+        t.render(),
+        mean_blend_fraction(rows) * 100.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::A100;
+
+    #[test]
+    fn modelled_blend_share_near_70pct() {
+        let rows = run_modelled(&A100, 0.002);
+        assert_eq!(rows.len(), 13);
+        let mean = mean_blend_fraction(&rows);
+        assert!((0.55..=0.85).contains(&mean), "mean blend share {mean:.2}");
+    }
+
+    #[test]
+    fn cpu_measured_blend_dominates_too() {
+        let t = run_measured_cpu("train", 0.005);
+        // the CPU pipeline shows the same shape: blending dominates
+        assert!(
+            t.blend_fraction() > 0.5,
+            "CPU blend fraction {:.2}",
+            t.blend_fraction()
+        );
+    }
+}

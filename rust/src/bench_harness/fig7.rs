@@ -1,0 +1,81 @@
+//! Figure 7 regeneration: batch-size sensitivity. Small batches starve
+//! the 256-thread block (the M_g rows no longer split evenly) and
+//! multiply per-batch synchronization — latency rises as b shrinks,
+//! while vanilla blending is batch-insensitive.
+
+use super::report::{ms, speedup, Table};
+use super::workloads::measure_workload;
+use crate::accel::Vanilla;
+use crate::perfmodel::{estimate, BlendKind, GpuSpec};
+use crate::scene::synthetic::scene_by_name;
+
+/// One batch-size point.
+#[derive(Debug, Clone)]
+pub struct BatchPoint {
+    pub batch: usize,
+    pub vanilla_ms: f64,
+    pub gemm_ms: f64,
+}
+
+/// Sweep b ∈ {32, 64, 128, 256} on the paper's sensitivity scene.
+pub fn run(gpu: &GpuSpec, sim_scale: f64, scene: &str) -> Vec<BatchPoint> {
+    let spec = scene_by_name(scene).expect("unknown scene");
+    let w = measure_workload(&spec, sim_scale, &Vanilla, 1.0);
+    [32usize, 64, 128, 256]
+        .iter()
+        .map(|&b| BatchPoint {
+            batch: b,
+            vanilla_ms: estimate(gpu, &w.profile, BlendKind::Vanilla, Default::default(), b)
+                .total_ms(),
+            gemm_ms: estimate(gpu, &w.profile, BlendKind::Gemm, Default::default(), b)
+                .total_ms(),
+        })
+        .collect()
+}
+
+/// Paper-style rendering.
+pub fn render(points: &[BatchPoint], gpu: &GpuSpec, scene: &str) -> String {
+    let mut t = Table::new(&["Batch b", "Vanilla 3DGS (ms)", "GEMM-GS (ms)", "Speedup"]);
+    for p in points {
+        t.row(vec![
+            p.batch.to_string(),
+            ms(p.vanilla_ms),
+            ms(p.gemm_ms),
+            speedup(p.vanilla_ms / p.gemm_ms),
+        ]);
+    }
+    format!(
+        "Figure 7 analogue — batch-size sweep on '{scene}', modelled {}\n\n{}",
+        gpu.name,
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::A100;
+
+    #[test]
+    fn latency_grows_as_batch_shrinks() {
+        let pts = run(&A100, 0.002, "train");
+        assert_eq!(pts.len(), 4);
+        // gemm latency decreases monotonically toward b=256
+        for w in pts.windows(2) {
+            assert!(
+                w[0].gemm_ms > w[1].gemm_ms,
+                "b={} {:.3} !> b={} {:.3}",
+                w[0].batch,
+                w[0].gemm_ms,
+                w[1].batch,
+                w[1].gemm_ms
+            );
+        }
+        // at b=256 GEMM-GS beats vanilla; at b=32 the advantage shrinks
+        let last = &pts[3];
+        assert!(last.gemm_ms < last.vanilla_ms);
+        let s32 = pts[0].vanilla_ms / pts[0].gemm_ms;
+        let s256 = last.vanilla_ms / last.gemm_ms;
+        assert!(s256 > s32, "speedup must improve with batch: {s32:.3} vs {s256:.3}");
+    }
+}

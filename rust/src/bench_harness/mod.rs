@@ -1,0 +1,27 @@
+//! The benchmark harness: regenerates every table and figure of the
+//! paper's evaluation (DESIGN.md §5 experiment index).
+//!
+//! | Paper artifact | Module | CLI |
+//! |---|---|---|
+//! | Fig. 1 (TC vs CUDA FLOPS) | `perfmodel::gpu` | `gemm-gs fig1` |
+//! | Fig. 3 (stage breakdown)  | [`fig3`] | `gemm-gs bench-fig3` |
+//! | Table 1 (workloads)       | [`workloads`] | `gemm-gs inspect` |
+//! | Table 2 (A100 latency)    | [`table2`] | `gemm-gs bench-table2` |
+//! | Fig. 5 (H100 latency)     | [`table2`] (H100 spec) | `gemm-gs bench-fig5` |
+//! | Fig. 6 (resolution sweep) | [`fig6`] | `gemm-gs bench-fig6` |
+//! | Fig. 7 (batch-size sweep) | [`fig7`] | `gemm-gs bench-fig7` |
+
+pub mod fig3;
+pub mod fig6;
+pub mod fig7;
+pub mod report;
+pub mod table2;
+pub mod timing;
+pub mod workloads;
+
+pub use workloads::{default_camera, measure_workload, MeasuredWorkload};
+
+/// Default simulation scale: fraction of each scene's full Gaussian
+/// count synthesized on this CPU testbed (the GPU model extrapolates
+/// back to full scale — DESIGN.md §1).
+pub const DEFAULT_SIM_SCALE: f64 = 0.02;

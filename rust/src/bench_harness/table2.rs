@@ -1,0 +1,213 @@
+//! Table 2 / Figure 5 regeneration: per-scene render latency for every
+//! baseline method with and without GEMM-GS, on a modelled GPU.
+//!
+//! Workloads are *measured* on the simulator (per scene × method — the
+//! methods genuinely change pair counts), extrapolated to Table 1 scale,
+//! and priced by the calibrated GPU model. Additionally the harness can
+//! measure native CPU wall-clock for the two blenders (the honest
+//! second column of EXPERIMENTS.md).
+
+use super::report::{ms, speedup, Table};
+use super::workloads::measure_workload;
+use crate::accel::{all_methods, AccelMethod};
+use crate::perfmodel::{estimate, BlendKind, GpuSpec, MethodFactors};
+use crate::scene::synthetic::table1_scenes;
+
+/// One (method, scene) cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub scene: String,
+    pub method: String,
+    /// Modelled latency with the method's own (vanilla) blender, ms.
+    pub base_ms: f64,
+    /// Modelled latency with GEMM-GS blending, ms.
+    pub gemm_ms: f64,
+}
+
+impl Cell {
+    /// The "+ GEMM-GS" speedup of the paper's tables.
+    pub fn speedup(&self) -> f64 {
+        self.base_ms / self.gemm_ms
+    }
+}
+
+/// The full Table 2 grid (all methods × all scenes) on `gpu`.
+pub fn run(gpu: &GpuSpec, sim_scale: f64) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for method in all_methods() {
+        for spec in table1_scenes() {
+            cells.push(cell(gpu, sim_scale, method.as_ref(), &spec));
+        }
+    }
+    cells
+}
+
+/// One cell (exposed for focused benches).
+pub fn cell(
+    gpu: &GpuSpec,
+    sim_scale: f64,
+    method: &dyn AccelMethod,
+    spec: &crate::scene::synthetic::SceneSpec,
+) -> Cell {
+    let w = measure_workload(spec, sim_scale, method, 1.0);
+    let factors = MethodFactors::from_method(method);
+    let base = estimate(gpu, &w.profile, BlendKind::Vanilla, factors, 256);
+    let gemm = estimate(gpu, &w.profile, BlendKind::Gemm, factors, 256);
+    Cell {
+        scene: spec.name.to_string(),
+        method: method.name().to_string(),
+        base_ms: base.total_ms(),
+        gemm_ms: gemm.total_ms(),
+    }
+}
+
+/// Geometric-mean "+ GEMM-GS" speedup per method.
+pub fn mean_speedups(cells: &[Cell]) -> Vec<(String, f64)> {
+    let mut order: Vec<String> = Vec::new();
+    let mut acc: std::collections::HashMap<String, (f64, usize)> = Default::default();
+    for c in cells {
+        if !acc.contains_key(&c.method) {
+            order.push(c.method.clone());
+        }
+        let e = acc.entry(c.method.clone()).or_insert((0.0, 0));
+        e.0 += c.speedup().ln();
+        e.1 += 1;
+    }
+    order
+        .into_iter()
+        .map(|m| {
+            let (sum, n) = acc[&m];
+            (m, (sum / n as f64).exp())
+        })
+        .collect()
+}
+
+/// Render the paper-style table: per method, three rows (baseline,
+/// + GEMM-GS, speedup), scenes as columns.
+pub fn render(cells: &[Cell], gpu: &GpuSpec) -> String {
+    let scenes: Vec<String> = table1_scenes().iter().map(|s| s.name.to_string()).collect();
+    let mut header = vec!["Method".to_string()];
+    header.extend(scenes.iter().cloned());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+
+    let methods: Vec<String> = {
+        let mut seen = Vec::new();
+        for c in cells {
+            if !seen.contains(&c.method) {
+                seen.push(c.method.clone());
+            }
+        }
+        seen
+    };
+    for m in &methods {
+        let row_cells: Vec<&Cell> = scenes
+            .iter()
+            .map(|s| {
+                cells
+                    .iter()
+                    .find(|c| &c.method == m && &c.scene == s)
+                    .expect("missing cell")
+            })
+            .collect();
+        let mut r1 = vec![m.clone()];
+        r1.extend(row_cells.iter().map(|c| ms(c.base_ms)));
+        table.row(r1);
+        let mut r2 = vec!["  + GEMM-GS".to_string()];
+        r2.extend(row_cells.iter().map(|c| ms(c.gemm_ms)));
+        table.row(r2);
+        let mut r3 = vec!["  Speedup".to_string()];
+        r3.extend(row_cells.iter().map(|c| speedup(c.speedup())));
+        table.row(r3);
+    }
+
+    let mut out = format!(
+        "Table 2 analogue — average image rendering latency (ms), modelled {} \
+         (workloads measured on the simulator, extrapolated to Table 1 scale)\n\n",
+        gpu.name
+    );
+    out.push_str(&table.render());
+    out.push('\n');
+    for (m, s) in mean_speedups(cells) {
+        out.push_str(&format!("mean + GEMM-GS speedup over {m}: {:.2}x\n", s));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Vanilla;
+    use crate::perfmodel::A100;
+    use crate::scene::synthetic::scene_by_name;
+
+    #[test]
+    fn single_cell_speedup_in_band() {
+        let spec = scene_by_name("train").unwrap();
+        let c = cell(&A100, 0.005, &Vanilla, &spec);
+        let s = c.speedup();
+        assert!((1.2..=1.65).contains(&s), "train speedup {s:.3}");
+        assert!(c.base_ms > 1.0 && c.base_ms < 20.0, "base {:.2} ms", c.base_ms);
+    }
+
+    #[test]
+    fn flashgs_faster_than_vanilla_and_still_speeds_up() {
+        let spec = scene_by_name("train").unwrap();
+        let v = cell(&A100, 0.005, &Vanilla, &spec);
+        let f = cell(&A100, 0.005, &crate::accel::flashgs::FlashGs::default(), &spec);
+        assert!(f.base_ms < v.base_ms, "FlashGS {} !< vanilla {}", f.base_ms, v.base_ms);
+        // orthogonality: GEMM-GS still helps on top, but less (paper:
+        // 1.19x vs 1.42x — the culled workload has fewer quad flops to move)
+        assert!(f.speedup() > 1.05, "{}", f.speedup());
+        assert!(f.speedup() < v.speedup(), "{} vs {}", f.speedup(), v.speedup());
+    }
+
+    #[test]
+    fn composition_speedups_match_paper_ordering() {
+        // paper means (A100): FlashGS 1.19 < StopThePop 1.42 ≈ vanilla
+        // 1.42 < Speedy-Splat 1.50 < LightGaussian 1.58 < c3dgs 1.73.
+        // Assert the reproduced ordering + bands on one scene (means over
+        // 13 scenes are asserted by the bench output recorded in
+        // EXPERIMENTS.md).
+        let spec = scene_by_name("truck").unwrap();
+        let s = |m: &dyn crate::accel::AccelMethod| cell(&A100, 0.003, m, &spec).speedup();
+        let vanilla = s(&Vanilla);
+        let flash = s(&crate::accel::flashgs::FlashGs::default());
+        let stp = s(&crate::accel::stopthepop::StopThePop::default());
+        let c3 = s(&crate::accel::c3dgs::C3dgs { geo_codebook: 16, sh_codebook: 8, iters: 1 });
+        let lg = s(&crate::accel::lightgaussian::LightGaussian {
+            keep_fraction: 0.55,
+            codebook: 8,
+            iters: 1,
+        });
+        assert!(flash < stp, "FlashGS {flash:.2} !< StopThePop {stp:.2}");
+        assert!(stp < vanilla * 1.02, "StopThePop {stp:.2} ≲ vanilla {vanilla:.2}");
+        assert!(vanilla < lg, "vanilla {vanilla:.2} !< LightGaussian {lg:.2}");
+        assert!(lg < c3 * 1.05, "LightGaussian {lg:.2} ≲ c3dgs {c3:.2}");
+        assert!((1.05..=1.35).contains(&flash), "FlashGS {flash:.2}");
+        assert!((1.5..=1.9).contains(&c3), "c3dgs {c3:.2}");
+    }
+
+    #[test]
+    fn render_produces_full_grid() {
+        // tiny scale for speed: 2 methods × 13 scenes
+        let methods: Vec<Box<dyn crate::accel::AccelMethod>> =
+            vec![Box::new(Vanilla), Box::new(crate::accel::flashgs::FlashGs::default())];
+        let mut cells = Vec::new();
+        for m in &methods {
+            for spec in crate::scene::synthetic::table1_scenes() {
+                cells.push(cell(&A100, 0.001, m.as_ref(), &spec));
+            }
+        }
+        let text = render(&cells, &A100);
+        assert!(text.contains("train"));
+        assert!(text.contains("Vanilla 3DGS"));
+        assert!(text.contains("FlashGS"));
+        assert!(text.contains("mean + GEMM-GS speedup"));
+        let means = mean_speedups(&cells);
+        assert_eq!(means.len(), 2);
+        for (_, s) in means {
+            assert!(s > 1.0);
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Wall-clock measurement helpers for the custom bench harness
+//! (criterion is unavailable in this offline image; these benches use
+//! median-of-N timing with warmup, which is what the tables need).
+
+use std::time::{Duration, Instant};
+
+/// Median wall-clock of `iters` runs of `f`, after one warmup run.
+pub fn median_time<F: FnMut()>(iters: usize, mut f: F) -> Duration {
+    f(); // warmup
+    let mut samples: Vec<Duration> = (0..iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort();
+    samples[samples.len() / 2]
+}
+
+/// Throughput in operations/second for `ops` work in `d`.
+pub fn throughput(ops: f64, d: Duration) -> f64 {
+    ops / d.as_secs_f64()
+}
+
+/// Pretty milliseconds.
+pub fn fmt_ms(d: Duration) -> String {
+    format!("{:.3} ms", d.as_secs_f64() * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_positive_and_ordered() {
+        let d = median_time(3, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(d > Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = throughput(1e6, Duration::from_millis(100));
+        assert!((t - 1e7).abs() < 1.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Workload measurement: scene → camera pairing, per-scene statistics
+//! (Table 1), and extrapolation to full scale for the GPU model.
+
+use crate::accel::AccelMethod;
+use crate::math::{Camera, Vec3};
+use crate::perfmodel::WorkloadProfile;
+use crate::pipeline::duplicate::duplicate_with_mask;
+use crate::pipeline::preprocess::{preprocess, PreprocessConfig};
+use crate::pipeline::tile::TileGrid;
+use crate::scene::gaussian::GaussianCloud;
+use crate::scene::stats::SceneStats;
+use crate::scene::synthetic::{SceneKind, SceneSpec};
+
+/// The canonical evaluation camera for a scene (a representative
+/// test-set viewpoint: outdoor scenes are orbited from outside, indoor
+/// scenes viewed from within the room).
+pub fn default_camera(spec: &SceneSpec) -> Camera {
+    default_camera_scaled(spec, 1.0)
+}
+
+/// Camera with a resolution multiplier (Figure 6's 1×/2×/3×).
+pub fn default_camera_scaled(spec: &SceneSpec, res_scale: f64) -> Camera {
+    let w = (spec.width as f64 * res_scale).round() as u32;
+    let h = (spec.height as f64 * res_scale).round() as u32;
+    match spec.kind {
+        SceneKind::Outdoor => Camera::look_at(
+            Vec3::new(6.5, 2.5, -6.5),
+            Vec3::new(0.0, 0.3, 0.0),
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            w,
+            h,
+        ),
+        SceneKind::Indoor => Camera::look_at(
+            Vec3::new(1.8, 0.4, -2.2),
+            Vec3::new(-0.3, -0.1, 0.4),
+            Vec3::new(0.0, 1.0, 0.0),
+            1.15, // wider indoor fov
+            w,
+            h,
+        ),
+    }
+}
+
+/// A measured workload: statistics at simulation scale plus the
+/// full-scale profile the GPU model consumes.
+#[derive(Debug, Clone)]
+pub struct MeasuredWorkload {
+    pub stats: SceneStats,
+    pub profile: WorkloadProfile,
+    /// The (possibly method-transformed) cloud, for follow-up CPU timing.
+    pub cloud: GaussianCloud,
+    pub camera: Camera,
+}
+
+/// Measure a scene under an acceleration method at `sim_scale`,
+/// extrapolating counts to the full Table 1 scale.
+pub fn measure_workload(
+    spec: &SceneSpec,
+    sim_scale: f64,
+    method: &dyn AccelMethod,
+    res_scale: f64,
+) -> MeasuredWorkload {
+    let base = spec.synthesize(sim_scale);
+    let cloud = method.prepare_model(&base);
+    let camera = default_camera_scaled(spec, res_scale);
+    let grid = TileGrid::new(camera.width, camera.height);
+    let projected = preprocess(&cloud, &camera, &PreprocessConfig::default());
+    let mask =
+        |i: usize, tx: u32, ty: u32| method.keep_pair(&projected, i, tx, ty, &grid);
+    let dup = duplicate_with_mask(&projected, &grid, Some(&mask));
+
+    // per-tile stats
+    let mut tile_counts = vec![0u32; grid.num_tiles()];
+    for &k in &dup.keys {
+        tile_counts[(k >> 32) as usize] += 1;
+    }
+    let active = tile_counts.iter().filter(|&&c| c > 0).count();
+    let max_len = tile_counts.iter().copied().max().unwrap_or(0) as usize;
+
+    // extrapolation: counts scale ~linearly in cloud size at fixed
+    // resolution; active tiles saturate at the grid size
+    let ratio = spec.full_gaussians as f64 / base.len().max(1) as f64;
+    // method-transformed cloud size relative to the base cloud (pruning)
+    let method_keep = cloud.len() as f64 / base.len().max(1) as f64;
+    let full_gaussians = spec.full_gaussians as f64 * method_keep;
+    let n_visible_full = projected.len() as f64 * ratio;
+    let n_pairs_full = dup.len() as f64 * ratio;
+    let active_full = ((active as f64) * ratio.sqrt()).min(grid.num_tiles() as f64);
+
+    let stats = SceneStats {
+        name: spec.name.to_string(),
+        dataset: spec.dataset.to_string(),
+        width: camera.width,
+        height: camera.height,
+        full_gaussians: spec.full_gaussians,
+        simulated_gaussians: cloud.len(),
+        sim_scale,
+        n_visible: projected.len(),
+        n_pairs: dup.len(),
+        tiles_per_gaussian: if projected.is_empty() {
+            0.0
+        } else {
+            dup.len() as f64 / projected.len() as f64
+        },
+        mean_tile_len: if active == 0 { 0.0 } else { dup.len() as f64 / active as f64 },
+        max_tile_len: max_len,
+        n_active_tiles: active,
+        n_tiles: grid.num_tiles(),
+    };
+    MeasuredWorkload {
+        stats,
+        profile: WorkloadProfile {
+            n_gaussians: full_gaussians,
+            n_visible: n_visible_full,
+            n_pairs: n_pairs_full,
+            n_active_tiles: active_full,
+        },
+        cloud,
+        camera,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Vanilla;
+    use crate::scene::synthetic::{scene_by_name, table1_scenes};
+
+    #[test]
+    fn cameras_see_the_scenes() {
+        for spec in table1_scenes() {
+            let m = measure_workload(&spec, 0.001, &Vanilla, 1.0);
+            assert!(
+                m.stats.n_visible > m.stats.simulated_gaussians / 4,
+                "{}: only {}/{} visible",
+                spec.name,
+                m.stats.n_visible,
+                m.stats.simulated_gaussians
+            );
+            assert!(m.stats.n_pairs >= m.stats.n_visible, "{}", spec.name);
+            assert!(m.stats.n_active_tiles > 0);
+        }
+    }
+
+    #[test]
+    fn extrapolation_is_linear_in_scale() {
+        let spec = scene_by_name("train").unwrap();
+        let a = measure_workload(&spec, 0.001, &Vanilla, 1.0);
+        let b = measure_workload(&spec, 0.002, &Vanilla, 1.0);
+        // full-scale pair estimates from both scales agree within 40%
+        let ratio = a.profile.n_pairs / b.profile.n_pairs;
+        assert!((0.6..=1.67).contains(&ratio), "extrapolation unstable: {ratio}");
+    }
+
+    #[test]
+    fn resolution_scale_multiplies_pairs() {
+        let spec = scene_by_name("train").unwrap();
+        let x1 = measure_workload(&spec, 0.002, &Vanilla, 1.0);
+        let x2 = measure_workload(&spec, 0.002, &Vanilla, 2.0);
+        // 2× resolution → ~4× pixels → ~2-4× pairs (radius is fixed in
+        // world space, so splats cover more tiles)
+        assert!(x2.profile.n_pairs > 1.8 * x1.profile.n_pairs);
+        assert_eq!(x2.camera.width, 2 * x1.camera.width);
+    }
+
+    #[test]
+    fn method_pruning_shrinks_profile() {
+        let spec = scene_by_name("train").unwrap();
+        let vanilla = measure_workload(&spec, 0.002, &Vanilla, 1.0);
+        let lg = crate::accel::lightgaussian::LightGaussian::default();
+        let pruned = measure_workload(&spec, 0.002, &lg, 1.0);
+        assert!(pruned.profile.n_gaussians < 0.7 * vanilla.profile.n_gaussians);
+        assert!(pruned.profile.n_pairs < vanilla.profile.n_pairs);
+    }
+}

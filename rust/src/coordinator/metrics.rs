@@ -1,0 +1,210 @@
+//! Service metrics: lock-free counters + a log₂-bucketed latency
+//! histogram (microseconds), snapshotted for reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 40; // 2^39 µs ≈ 6 days — plenty
+
+/// Shared, thread-safe metrics sink.
+#[derive(Debug)]
+pub struct Metrics {
+    frames: AtomicU64,
+    errors: AtomicU64,
+    queue_depth: AtomicU64,
+    latency_us_sum: AtomicU64,
+    stage_pre_us: AtomicU64,
+    stage_dup_us: AtomicU64,
+    stage_sort_us: AtomicU64,
+    stage_blend_us: AtomicU64,
+    histogram: [AtomicU64; BUCKETS],
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            frames: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            latency_us_sum: AtomicU64::new(0),
+            stage_pre_us: AtomicU64::new(0),
+            stage_dup_us: AtomicU64::new(0),
+            stage_sort_us: AtomicU64::new(0),
+            stage_blend_us: AtomicU64::new(0),
+            histogram: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Metrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed frame.
+    pub fn record_frame(
+        &self,
+        latency: Duration,
+        timings: &crate::pipeline::render::StageTimings,
+    ) {
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        let us = latency.as_micros() as u64;
+        self.latency_us_sum.fetch_add(us, Ordering::Relaxed);
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.histogram[bucket].fetch_add(1, Ordering::Relaxed);
+        self.stage_pre_us
+            .fetch_add(timings.preprocess.as_micros() as u64, Ordering::Relaxed);
+        self.stage_dup_us
+            .fetch_add(timings.duplicate.as_micros() as u64, Ordering::Relaxed);
+        self.stage_sort_us.fetch_add(timings.sort.as_micros() as u64, Ordering::Relaxed);
+        self.stage_blend_us
+            .fetch_add(timings.blend.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Record a failed request.
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Queue depth bookkeeping.
+    pub fn enqueue(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Queue depth bookkeeping.
+    pub fn dequeue(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let frames = self.frames.load(Ordering::Relaxed);
+        let hist: Vec<u64> = self.histogram.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let pct = |p: f64| -> Duration {
+            let total: u64 = hist.iter().sum();
+            if total == 0 {
+                return Duration::ZERO;
+            }
+            let target = ((p / 100.0) * total as f64).ceil() as u64;
+            let mut seen = 0u64;
+            for (i, &c) in hist.iter().enumerate() {
+                seen += c;
+                if seen >= target {
+                    // upper edge of the log bucket
+                    return Duration::from_micros(1u64 << (i + 1));
+                }
+            }
+            Duration::from_micros(1u64 << BUCKETS)
+        };
+        MetricsSnapshot {
+            frames,
+            errors: self.errors.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            mean_latency: if frames == 0 {
+                Duration::ZERO
+            } else {
+                Duration::from_micros(self.latency_us_sum.load(Ordering::Relaxed) / frames)
+            },
+            p50: pct(50.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
+            stage_pre: Duration::from_micros(self.stage_pre_us.load(Ordering::Relaxed)),
+            stage_dup: Duration::from_micros(self.stage_dup_us.load(Ordering::Relaxed)),
+            stage_sort: Duration::from_micros(self.stage_sort_us.load(Ordering::Relaxed)),
+            stage_blend: Duration::from_micros(self.stage_blend_us.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Immutable snapshot of [`Metrics`].
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub frames: u64,
+    pub errors: u64,
+    pub queue_depth: u64,
+    pub mean_latency: Duration,
+    /// Log-bucket upper bounds — coarse (powers of two) but lock-free.
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub stage_pre: Duration,
+    pub stage_dup: Duration,
+    pub stage_sort: Duration,
+    pub stage_blend: Duration,
+}
+
+impl MetricsSnapshot {
+    /// Blending share of total stage time (the Figure 3 quantity, over
+    /// the service's lifetime).
+    pub fn blend_fraction(&self) -> f64 {
+        let total = (self.stage_pre + self.stage_dup + self.stage_sort + self.stage_blend)
+            .as_secs_f64();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.stage_blend.as_secs_f64() / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::render::StageTimings;
+
+    fn timings(blend_ms: u64) -> StageTimings {
+        StageTimings {
+            preprocess: Duration::from_millis(1),
+            duplicate: Duration::from_millis(1),
+            sort: Duration::from_millis(1),
+            blend: Duration::from_millis(blend_ms),
+        }
+    }
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_frame(Duration::from_micros(i * 100), &timings(7));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.frames, 100);
+        assert!(s.mean_latency >= Duration::from_micros(5000));
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.blend_fraction() > 0.6, "{}", s.blend_fraction());
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.frames, 0);
+        assert_eq!(s.mean_latency, Duration::ZERO);
+        assert_eq!(s.p99, Duration::ZERO);
+        assert_eq!(s.blend_fraction(), 0.0);
+    }
+
+    #[test]
+    fn queue_depth_tracks() {
+        let m = Metrics::new();
+        m.enqueue();
+        m.enqueue();
+        m.dequeue();
+        assert_eq!(m.snapshot().queue_depth, 1);
+    }
+
+    #[test]
+    fn percentile_ordering_under_spread() {
+        let m = Metrics::new();
+        // 90 fast frames, 10 slow
+        for _ in 0..90 {
+            m.record_frame(Duration::from_micros(100), &timings(1));
+        }
+        for _ in 0..10 {
+            m.record_frame(Duration::from_millis(100), &timings(1));
+        }
+        let s = m.snapshot();
+        assert!(s.p50 < Duration::from_millis(1));
+        assert!(s.p99 >= Duration::from_millis(64));
+    }
+}

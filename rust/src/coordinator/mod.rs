@@ -1,0 +1,18 @@
+//! Layer-3 coordinator: the render service.
+//!
+//! GEMM-GS's contribution lives in the blending kernel (L1/L2), so per
+//! the architecture rules L3 is a lean but real serving layer: a scene
+//! store, a bounded request queue with backpressure, a worker pool
+//! (std threads — tokio is unavailable in this offline image, see
+//! DESIGN.md §1), a tile-parallel frame scheduler, and latency/stage
+//! metrics. The E2E example (`examples/serve_trajectory.rs`) drives a
+//! camera orbit through this service against the PJRT artifact backend.
+
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod service;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{BackendKind, RenderRequest, RenderResponse};
+pub use service::{Coordinator, CoordinatorConfig};

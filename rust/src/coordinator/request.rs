@@ -1,0 +1,122 @@
+//! Request/response types for the render service.
+
+use crate::math::Camera;
+use crate::pipeline::render::{FrameStats, StageTimings, TileBlend};
+use std::time::Duration;
+
+/// Which blending backend a request (or worker) uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Algorithm 1, native Rust (the paper's baseline).
+    NativeVanilla,
+    /// Algorithm 2, native Rust micro-GEMM (GEMM-GS, CPU backend).
+    NativeGemm,
+    /// Algorithm 2 via the AOT Pallas artifact on PJRT (GEMM-GS,
+    /// accelerator backend — the production path).
+    ArtifactGemm,
+    /// Algorithm 1 via the AOT artifact (baseline on the accelerator).
+    ArtifactVanilla,
+    /// Algorithm 2 with bf16 GEMM operands (precision ablation).
+    ArtifactGemmBf16,
+}
+
+impl BackendKind {
+    /// Instantiate a blender for this backend. Artifact backends create
+    /// their own PJRT client, so workers call this *inside* their thread
+    /// (the PJRT handles are not `Send`).
+    pub fn instantiate(self, batch: usize) -> anyhow::Result<Box<dyn TileBlend>> {
+        use crate::pipeline::blend_gemm::GemmBlender;
+        use crate::pipeline::blend_vanilla::VanillaBlender;
+        use crate::runtime::blend_exec::{ArtifactBlender, BlendEntry};
+        Ok(match self {
+            BackendKind::NativeVanilla => Box::new(VanillaBlender::with_batch(batch)),
+            BackendKind::NativeGemm => Box::new(GemmBlender::with_batch(batch)),
+            BackendKind::ArtifactGemm => {
+                Box::new(ArtifactBlender::from_default_dir(BlendEntry::Gemm)?)
+            }
+            BackendKind::ArtifactVanilla => {
+                Box::new(ArtifactBlender::from_default_dir(BlendEntry::Vanilla)?)
+            }
+            BackendKind::ArtifactGemmBf16 => {
+                Box::new(ArtifactBlender::from_default_dir(BlendEntry::GemmBf16)?)
+            }
+        })
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Some(match s {
+            "vanilla" => BackendKind::NativeVanilla,
+            "gemm" => BackendKind::NativeGemm,
+            "artifact-gemm" | "pjrt" => BackendKind::ArtifactGemm,
+            "artifact-vanilla" => BackendKind::ArtifactVanilla,
+            "artifact-bf16" => BackendKind::ArtifactGemmBf16,
+            _ => return None,
+        })
+    }
+
+    /// Human-readable name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::NativeVanilla => "vanilla",
+            BackendKind::NativeGemm => "gemm",
+            BackendKind::ArtifactGemm => "artifact-gemm",
+            BackendKind::ArtifactVanilla => "artifact-vanilla",
+            BackendKind::ArtifactGemmBf16 => "artifact-bf16",
+        }
+    }
+}
+
+/// One render request.
+#[derive(Debug, Clone)]
+pub struct RenderRequest {
+    /// Caller-chosen id, echoed in the response.
+    pub id: u64,
+    /// Scene to render (must be registered with the coordinator).
+    pub scene: String,
+    /// Camera pose + intrinsics.
+    pub camera: Camera,
+}
+
+/// One completed render.
+pub struct RenderResponse {
+    /// Echoed request id.
+    pub id: u64,
+    /// The rendered image (`None` if the scene was unknown).
+    pub image: Option<crate::pipeline::render::Image>,
+    /// Per-stage timings.
+    pub timings: StageTimings,
+    /// Workload counters.
+    pub stats: FrameStats,
+    /// End-to-end latency including queueing.
+    pub latency: Duration,
+    /// Error message when rendering failed.
+    pub error: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        for (s, k) in [
+            ("vanilla", BackendKind::NativeVanilla),
+            ("gemm", BackendKind::NativeGemm),
+            ("artifact-gemm", BackendKind::ArtifactGemm),
+            ("pjrt", BackendKind::ArtifactGemm),
+            ("artifact-vanilla", BackendKind::ArtifactVanilla),
+            ("artifact-bf16", BackendKind::ArtifactGemmBf16),
+        ] {
+            assert_eq!(BackendKind::parse(s), Some(k));
+        }
+        assert_eq!(BackendKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn native_backends_instantiate() {
+        assert!(BackendKind::NativeVanilla.instantiate(256).is_ok());
+        let b = BackendKind::NativeGemm.instantiate(128).unwrap();
+        assert_eq!(b.name(), "gemm-gs");
+    }
+}

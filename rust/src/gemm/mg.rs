@@ -1,0 +1,135 @@
+//! The Gaussian-side vectors `v_g` and matrix `M_g` (paper Eq. 6–7).
+//!
+//! With conic `Σ⁻¹ = [[A, B], [B, C]]` and `(x̂, ŷ)` the offset of the
+//! Gaussian centre from the tile's reference pixel,
+//!
+//! ```text
+//! v_g = [ -½A,
+//!         -½C,
+//!         -B,
+//!         -A·x̂ − B·ŷ,
+//!         -C·ŷ − B·x̂,
+//!         -½A·x̂² − ½C·ŷ² − B·x̂·ŷ ]      (padded with two zeros → K=8)
+//! ```
+//!
+//! so that `power_ij = v_g(i) · v_p(j)` reproduces Eq. 3 exactly:
+//! `power = -½A·Δx² − B·Δx·Δy − ½C·Δy²` with `Δx = x̂ + x̄`.
+
+use super::GEMM_K;
+
+/// Build one `v_g` (Eq. 6). `conic = [A, B, C]`; `(xhat, yhat)` is the
+/// Gaussian-centre offset from the tile reference pixel.
+#[inline(always)]
+pub fn build_vg(conic: [f32; 3], xhat: f32, yhat: f32) -> [f32; GEMM_K] {
+    let [a, b, c] = conic;
+    [
+        -0.5 * a,
+        -0.5 * c,
+        -b,
+        -a * xhat - b * yhat,
+        -c * yhat - b * xhat,
+        -0.5 * a * xhat * xhat - 0.5 * c * yhat * yhat - b * xhat * yhat,
+        0.0,
+        0.0,
+    ]
+}
+
+/// Direct evaluation of Eq. 3 — the scalar reference the GEMM form must
+/// match (used by the vanilla blender and by property tests).
+#[inline(always)]
+pub fn power_direct(conic: [f32; 3], dx: f32, dy: f32) -> f32 {
+    let [a, b, c] = conic;
+    -0.5 * (a * dx * dx + c * dy * dy) - b * dx * dy
+}
+
+/// Fill row `i` of a row-major `M_g` buffer (`[rows][GEMM_K]`).
+#[inline(always)]
+pub fn write_mg_row(mg: &mut [f32], i: usize, conic: [f32; 3], xhat: f32, yhat: f32) {
+    let vg = build_vg(conic, xhat, yhat);
+    mg[i * GEMM_K..(i + 1) * GEMM_K].copy_from_slice(&vg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::mp::Mp;
+    use crate::scene::rng::Rng;
+
+    fn dot8(a: &[f32; 8], b: &[f32; 8]) -> f32 {
+        a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+    }
+
+    /// Random SPD conic.
+    fn random_conic(rng: &mut Rng) -> [f32; 3] {
+        let a = rng.range(0.01, 2.0);
+        let c = rng.range(0.01, 2.0);
+        // |b| < sqrt(a·c) keeps it SPD
+        let b = rng.range(-0.99, 0.99) * (a * c).sqrt();
+        [a, b, c]
+    }
+
+    #[test]
+    fn eq6_equivalence_exhaustive_tile() {
+        // The paper's central identity: v_g · v_p == power_direct for
+        // every pixel of a tile, for random conics and offsets.
+        let mp = Mp::new(16);
+        let mut rng = Rng::new(2024);
+        for _ in 0..200 {
+            let conic = random_conic(&mut rng);
+            // Gaussian centre relative to tile origin (can be outside)
+            let gx = rng.range(-20.0, 36.0);
+            let gy = rng.range(-20.0, 36.0);
+            // x̂ = x_g − x_c with p_c = tile origin
+            let vg = build_vg(conic, gx, gy);
+            for ly in 0..16 {
+                for lx in 0..16 {
+                    let vp = mp.column(lx, ly);
+                    let got = dot8(&vg, &vp);
+                    // Δx = x_g − x_p where x_p = origin + lx
+                    let want = power_direct(conic, gx - lx as f32, gy - ly as f32);
+                    let tol = 1e-4 * (1.0 + want.abs());
+                    assert!(
+                        (got - want).abs() <= tol,
+                        "conic={conic:?} g=({gx},{gy}) p=({lx},{ly}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn power_nonpositive_at_center() {
+        // at Δ = 0 the power is 0; elsewhere ≤ 0 for SPD conics
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let conic = random_conic(&mut rng);
+            assert_eq!(power_direct(conic, 0.0, 0.0), 0.0);
+            let dx = rng.range(-10.0, 10.0);
+            let dy = rng.range(-10.0, 10.0);
+            assert!(power_direct(conic, dx, dy) <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn vg_padding_zero() {
+        let vg = build_vg([1.0, 0.2, 0.8], 3.0, -2.0);
+        assert_eq!(vg[6], 0.0);
+        assert_eq!(vg[7], 0.0);
+    }
+
+    #[test]
+    fn write_mg_row_layout() {
+        let mut mg = vec![0.0f32; 4 * 8];
+        write_mg_row(&mut mg, 2, [1.0, 0.0, 1.0], 1.0, 2.0);
+        let expect = build_vg([1.0, 0.0, 1.0], 1.0, 2.0);
+        assert_eq!(&mg[16..24], &expect);
+        assert!(mg[..16].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn isotropic_conic_power_is_radial() {
+        // A = C = 1, B = 0: power = -(dx² + dy²)/2
+        let p = power_direct([1.0, 0.0, 1.0], 3.0, 4.0);
+        assert!((p + 12.5).abs() < 1e-6);
+    }
+}

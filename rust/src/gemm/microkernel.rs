@@ -1,0 +1,125 @@
+//! The K=8 panel micro-GEMM: `out[B][P] = M_g[B][8] · M_p[8][P]`.
+//!
+//! On the paper's hardware this multiply is 32 warp-level `mma.m16n8k8`
+//! PTX calls forming an effective m256·n16·k8 tile (§3.4). On CPU we keep
+//! the identical K=8 padding and stream `M_p` rows — fully unrolled over
+//! K, auto-vectorizable over the pixel dimension (each output row is a
+//! sum of 8 scaled `M_p` rows, i.e. pure SAXPY chains the compiler turns
+//! into SIMD FMA).
+
+use super::GEMM_K;
+
+/// `out[b*p_cols + j] = Σ_k mg[b*8 + k] · mp[k*p_cols + j]`.
+///
+/// * `mg` — row-major `[b_rows][8]`
+/// * `mp` — row-major `[8][p_cols]`
+/// * `out` — row-major `[b_rows][p_cols]`, fully overwritten.
+pub fn gemm_k8(mg: &[f32], b_rows: usize, mp: &[f32], p_cols: usize, out: &mut [f32]) {
+    debug_assert!(mg.len() >= b_rows * GEMM_K);
+    debug_assert!(mp.len() >= GEMM_K * p_cols);
+    debug_assert!(out.len() >= b_rows * p_cols);
+    // row pointers for the 8 M_p rows
+    let (r0, rest) = mp.split_at(p_cols);
+    let (r1, rest) = rest.split_at(p_cols);
+    let (r2, rest) = rest.split_at(p_cols);
+    let (r3, rest) = rest.split_at(p_cols);
+    let (r4, rest) = rest.split_at(p_cols);
+    let (r5, rest) = rest.split_at(p_cols);
+    let (r6, rest) = rest.split_at(p_cols);
+    let r7 = &rest[..p_cols];
+
+    for b in 0..b_rows {
+        let v = &mg[b * GEMM_K..(b + 1) * GEMM_K];
+        let (v0, v1, v2, v3, v4, v5, v6, v7) =
+            (v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7]);
+        let row = &mut out[b * p_cols..(b + 1) * p_cols];
+        for j in 0..p_cols {
+            // 8-term FMA chain; LLVM vectorizes this across j
+            let acc = v0 * r0[j]
+                + v1 * r1[j]
+                + v2 * r2[j]
+                + v3 * r3[j]
+                + v4 * r4[j]
+                + v5 * r5[j]
+                + v6 * r6[j]
+                + v7 * r7[j];
+            row[j] = acc;
+        }
+    }
+}
+
+/// Reference (naive triple loop) — used only by tests/benches as the
+/// correctness anchor for `gemm_k8`.
+pub fn gemm_k8_naive(mg: &[f32], b_rows: usize, mp: &[f32], p_cols: usize, out: &mut [f32]) {
+    for b in 0..b_rows {
+        for j in 0..p_cols {
+            let mut acc = 0.0f32;
+            for k in 0..GEMM_K {
+                acc += mg[b * GEMM_K + k] * mp[k * p_cols + j];
+            }
+            out[b * p_cols + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::rng::Rng;
+
+    fn random_mats(rng: &mut Rng, b: usize, p: usize) -> (Vec<f32>, Vec<f32>) {
+        let mg: Vec<f32> = (0..b * GEMM_K).map(|_| rng.range(-2.0, 2.0)).collect();
+        let mp: Vec<f32> = (0..GEMM_K * p).map(|_| rng.range(-2.0, 2.0)).collect();
+        (mg, mp)
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        let mut rng = Rng::new(31);
+        for &(b, p) in &[(1usize, 1usize), (3, 7), (16, 256), (256, 256), (37, 100)] {
+            let (mg, mp) = random_mats(&mut rng, b, p);
+            let mut got = vec![0.0f32; b * p];
+            let mut want = vec![0.0f32; b * p];
+            gemm_k8(&mg, b, &mp, p, &mut got);
+            gemm_k8_naive(&mg, b, &mp, p, &mut want);
+            for i in 0..b * p {
+                assert!((got[i] - want[i]).abs() < 1e-4, "({b},{p}) idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_like_behaviour() {
+        // mg row = e_k selects M_p row k
+        let p = 16;
+        let mp: Vec<f32> = (0..GEMM_K * p).map(|i| i as f32).collect();
+        for k in 0..GEMM_K {
+            let mut mg = vec![0.0f32; GEMM_K];
+            mg[k] = 1.0;
+            let mut out = vec![0.0f32; p];
+            gemm_k8(&mg, 1, &mp, p, &mut out);
+            assert_eq!(&out[..], &mp[k * p..(k + 1) * p]);
+        }
+    }
+
+    #[test]
+    fn zero_inputs_zero_output() {
+        let mut out = vec![1.0f32; 4 * 4];
+        gemm_k8(&[0.0; 32], 4, &[0.0; 32], 4, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn linearity_in_mg() {
+        let mut rng = Rng::new(77);
+        let (mg, mp) = random_mats(&mut rng, 4, 32);
+        let mg2: Vec<f32> = mg.iter().map(|v| v * 3.0).collect();
+        let mut out1 = vec![0.0f32; 4 * 32];
+        let mut out2 = vec![0.0f32; 4 * 32];
+        gemm_k8(&mg, 4, &mp, 32, &mut out1);
+        gemm_k8(&mg2, 4, &mp, 32, &mut out2);
+        for i in 0..out1.len() {
+            assert!((out2[i] - 3.0 * out1[i]).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! The GEMM-compatible blending substrate — the paper's core contribution
+//! (§3.2–3.4) as reusable pieces:
+//!
+//! * [`mp`] — the pixel-side matrix `M_p` (intra-tile coordinate terms),
+//!   view- and scene-independent, precomputed once (Eq. 6/7).
+//! * [`mg`] — the Gaussian-side vectors `v_g` and matrix `M_g` (Eq. 6/7).
+//! * [`microkernel`] — the K=8 panel GEMM `M_g · M_p` (Eq. 8). On the
+//!   paper's hardware this is `mma.m16n8k8` on Tensor Cores; here it is
+//!   the CPU analogue with the same K=8 padding, and the same shape runs
+//!   on the TPU MXU via the Pallas kernel (python/compile/kernels/).
+//! * [`pipeline3`] — the three-stage double-buffered batch pipeline of
+//!   Figure 4 (load indices → fetch features + build `M_g` → GEMM +
+//!   volume render).
+
+pub mod mg;
+pub mod microkernel;
+pub mod mp;
+pub mod pipeline3;
+
+/// K dimension of the GEMM: the 6 coordinate terms padded to 8, exactly
+/// as the paper pads for the `m16n8k8` fragment.
+pub const GEMM_K: usize = 8;
+/// Logical (unpadded) dot-product length (Eq. 6).
+pub const GEMM_K_LOGICAL: usize = 6;

@@ -1,0 +1,129 @@
+//! The pixel-side matrix `M_p` (paper Eq. 6–7).
+//!
+//! For a pixel with intra-tile relative coordinates `(x̄, ȳ)` (relative to
+//! the tile's reference pixel `p_c`),
+//!
+//! ```text
+//! v_p = [x̄², ȳ², x̄·ȳ, x̄, ȳ, 1]ᵀ        (padded with two zeros → K=8)
+//! ```
+//!
+//! `M_p ∈ R^{8×P}` stacks `v_p` for all `P = 16×16` pixels of a tile.
+//! Because it depends only on intra-tile coordinates it is *identical for
+//! every tile of every frame* — the paper precomputes it offline and so
+//! do we (`Mp::new` runs once per process; §4 invariant 7 verifies
+//! tile-invariance).
+//!
+//! We pick the tile **origin** (top-left pixel) as the reference pixel
+//! `p_c`; with the paper's convention `x̄ = x_c − x_p`, the relative
+//! coordinates of local pixel `(lx, ly)` are `(−lx, −ly)`. Any reference
+//! works as long as `M_g` uses the same `p_c` (the paper suggests the
+//! centre pixel; the algebra is identical).
+
+use super::GEMM_K;
+use crate::pipeline::TILE_SIZE;
+
+/// Precomputed `M_p` in row-major `[GEMM_K][pixels]` layout — row `k`
+/// contiguous over pixels, which is the layout the micro-GEMM streams.
+#[derive(Debug, Clone)]
+pub struct Mp {
+    /// Row-major `[8][tile_size²]`.
+    pub data: Vec<f32>,
+    /// Tile edge this matrix was built for.
+    pub tile_size: usize,
+}
+
+impl Mp {
+    /// Build `M_p` for a `tile_size`² tile.
+    pub fn new(tile_size: usize) -> Self {
+        let p = tile_size * tile_size;
+        let mut data = vec![0.0f32; GEMM_K * p];
+        for ly in 0..tile_size {
+            for lx in 0..tile_size {
+                let j = ly * tile_size + lx;
+                // reference pixel = tile origin → x̄ = -lx, ȳ = -ly
+                let xb = -(lx as f32);
+                let yb = -(ly as f32);
+                data[j] = xb * xb; //        row 0: x̄²
+                data[p + j] = yb * yb; //    row 1: ȳ²
+                data[2 * p + j] = xb * yb; //row 2: x̄ȳ
+                data[3 * p + j] = xb; //     row 3: x̄
+                data[4 * p + j] = yb; //     row 4: ȳ
+                data[5 * p + j] = 1.0; //    row 5: 1
+                                       //    rows 6,7: zero padding (K 6→8)
+            }
+        }
+        Mp { data, tile_size }
+    }
+
+    /// Pixels per tile.
+    #[inline]
+    pub fn pixels(&self) -> usize {
+        self.tile_size * self.tile_size
+    }
+
+    /// The `v_p` column for local pixel `(lx, ly)`.
+    pub fn column(&self, lx: usize, ly: usize) -> [f32; GEMM_K] {
+        let p = self.pixels();
+        let j = ly * self.tile_size + lx;
+        let mut col = [0.0f32; GEMM_K];
+        for (k, c) in col.iter_mut().enumerate() {
+            *c = self.data[k * p + j];
+        }
+        col
+    }
+}
+
+/// The default `M_p` for the pipeline's 16×16 tiles.
+pub fn default_mp() -> Mp {
+    Mp::new(TILE_SIZE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions() {
+        let mp = default_mp();
+        assert_eq!(mp.pixels(), 256);
+        assert_eq!(mp.data.len(), 8 * 256);
+    }
+
+    #[test]
+    fn origin_pixel_column() {
+        let mp = default_mp();
+        // local (0,0): x̄ = ȳ = 0 → [0,0,0,0,0,1,0,0]
+        assert_eq!(mp.column(0, 0), [0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn generic_pixel_column() {
+        let mp = default_mp();
+        // local (3,5): x̄ = -3, ȳ = -5
+        let c = mp.column(3, 5);
+        assert_eq!(c, [9.0, 25.0, 15.0, -3.0, -5.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn padding_rows_zero() {
+        let mp = default_mp();
+        let p = mp.pixels();
+        assert!(mp.data[6 * p..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn constant_row_is_one() {
+        let mp = default_mp();
+        let p = mp.pixels();
+        assert!(mp.data[5 * p..6 * p].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn smaller_tile_size_supported() {
+        let mp = Mp::new(8);
+        assert_eq!(mp.pixels(), 64);
+        let c = mp.column(7, 7);
+        assert_eq!(c[0], 49.0);
+        assert_eq!(c[2], 49.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! The three-stage double-buffered batch pipeline of Figure 4.
+//!
+//! Paper (§3.4, CUDA): Stage 1 `cp.async`-loads the next batch's Gaussian
+//! indices to shared memory; Stage 2 fetches features and builds `M_g`;
+//! Stage 3 runs the Tensor-Core GEMM + volume rendering — with indices,
+//! features, and `M_g` double-buffered so stages of consecutive batches
+//! overlap.
+//!
+//! On a CPU there is no `cp.async`, but the *structure* is kept: two
+//! buffer slots rotate; while slot `s` is in Stage 3 (compute), slot
+//! `1−s` is filled by Stages 1–2 (prepare). This is the same dataflow
+//! the Pallas kernel expresses with a grid-pipelined `pallas_call`
+//! (Mosaic overlaps the HBM→VMEM copy of step `i+1` with compute of
+//! step `i`), and it keeps the Rust hot loop allocation-free: buffers
+//! are sized once and reused across every batch of every tile.
+
+/// Per-slot staging buffers — one batch's worth of blending inputs.
+#[derive(Debug, Clone, Default)]
+pub struct BatchSlot {
+    /// Stage 1: Gaussian indices (into the `Projected` arrays).
+    pub indices: Vec<u32>,
+    /// Stage 2: the `M_g` rows, row-major `[batch][GEMM_K]`.
+    pub mg: Vec<f32>,
+    /// Stage 2: per-Gaussian opacity.
+    pub opacities: Vec<f32>,
+    /// Stage 2: per-Gaussian RGB.
+    pub colors: Vec<[f32; 3]>,
+    /// Valid rows in this slot.
+    pub count: usize,
+}
+
+impl BatchSlot {
+    fn with_capacity(batch: usize) -> Self {
+        BatchSlot {
+            indices: vec![0; batch],
+            mg: vec![0.0; batch * super::GEMM_K],
+            opacities: vec![0.0; batch],
+            colors: vec![[0.0; 3]; batch],
+            count: 0,
+        }
+    }
+}
+
+/// Execution counters — used by tests to verify the rotation actually
+/// alternates and by benches to report batches/frame.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// Batches prepared (Stages 1–2 executions).
+    pub prepared: usize,
+    /// Batches computed (Stage 3 executions).
+    pub computed: usize,
+    /// Early-termination events (Stage 3 signalled "all pixels done").
+    pub early_exits: usize,
+}
+
+/// The double-buffered batch pipeline. Generic over the two stage
+/// callbacks so the same driver serves the native blender, the
+/// PJRT-artifact blender, and tests.
+pub struct ThreeStagePipeline {
+    slots: [BatchSlot; 2],
+    batch: usize,
+    stats: PipelineStats,
+}
+
+impl ThreeStagePipeline {
+    /// Pipeline with `batch` Gaussians per slot.
+    pub fn new(batch: usize) -> Self {
+        assert!(batch > 0, "batch size must be positive");
+        ThreeStagePipeline {
+            slots: [BatchSlot::with_capacity(batch), BatchSlot::with_capacity(batch)],
+            batch,
+            stats: PipelineStats::default(),
+        }
+    }
+
+    /// Configured batch size.
+    #[inline]
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Counters so far.
+    #[inline]
+    pub fn stats(&self) -> PipelineStats {
+        self.stats
+    }
+
+    /// Drive the pipeline over `list` (a tile's sorted Gaussian indices).
+    ///
+    /// * `prepare(chunk, slot)` — Stages 1–2: load indices + fetch
+    ///   features + build `M_g` into `slot`.
+    /// * `compute(slot) -> bool` — Stage 3: GEMM + volume render; return
+    ///   `false` to early-terminate the whole tile (all pixels done).
+    ///
+    /// Buffer rotation: batch `k` is prepared into slot `k & 1` while
+    /// batch `k−1` computes from slot `(k−1) & 1`.
+    pub fn run<Fp, Fc>(&mut self, list: &[u32], mut prepare: Fp, mut compute: Fc)
+    where
+        Fp: FnMut(&[u32], &mut BatchSlot),
+        Fc: FnMut(&BatchSlot) -> bool,
+    {
+        let mut chunks = list.chunks(self.batch);
+        // prologue: prepare batch 0 into slot 0
+        let Some(first) = chunks.next() else { return };
+        Self::fill(&mut self.slots[0], first, &mut prepare);
+        self.stats.prepared += 1;
+
+        let mut active = 0usize;
+        loop {
+            // "overlap": prepare the next batch into the other slot
+            // before computing the active one (the CPU rendering of the
+            // cp.async schedule — next batch's data is in flight while
+            // Stage 3 runs).
+            let next = chunks.next();
+            if let Some(chunk) = next {
+                let (a, b) = self.slots.split_at_mut(1);
+                let other = if active == 0 { &mut b[0] } else { &mut a[0] };
+                Self::fill(other, chunk, &mut prepare);
+                self.stats.prepared += 1;
+            }
+
+            self.stats.computed += 1;
+            if !compute(&self.slots[active]) {
+                self.stats.early_exits += 1;
+                return;
+            }
+            if next.is_none() {
+                return;
+            }
+            active ^= 1;
+        }
+    }
+
+    fn fill<Fp>(slot: &mut BatchSlot, chunk: &[u32], prepare: &mut Fp)
+    where
+        Fp: FnMut(&[u32], &mut BatchSlot),
+    {
+        slot.count = chunk.len();
+        slot.indices[..chunk.len()].copy_from_slice(chunk);
+        prepare(chunk, slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn processes_all_batches_in_order() {
+        let mut pl = ThreeStagePipeline::new(4);
+        let list: Vec<u32> = (0..10).collect();
+        let mut seen = Vec::new();
+        pl.run(
+            &list,
+            |chunk, slot| {
+                slot.opacities[..chunk.len()]
+                    .iter_mut()
+                    .zip(chunk)
+                    .for_each(|(o, &i)| *o = i as f32);
+            },
+            |slot| {
+                seen.extend_from_slice(&slot.indices[..slot.count]);
+                true
+            },
+        );
+        assert_eq!(seen, list);
+        let s = pl.stats();
+        assert_eq!(s.prepared, 3); // 4+4+2
+        assert_eq!(s.computed, 3);
+        assert_eq!(s.early_exits, 0);
+    }
+
+    #[test]
+    fn early_exit_stops_compute() {
+        let mut pl = ThreeStagePipeline::new(2);
+        let list: Vec<u32> = (0..10).collect();
+        let mut computed = 0;
+        pl.run(
+            &list,
+            |_, _| {},
+            |_| {
+                computed += 1;
+                computed < 2 // stop after the 2nd batch
+            },
+        );
+        assert_eq!(computed, 2);
+        assert_eq!(pl.stats().early_exits, 1);
+        // prepared ran ahead by one (the in-flight prefetch)
+        assert_eq!(pl.stats().prepared, 3);
+    }
+
+    #[test]
+    fn empty_list_is_noop() {
+        let mut pl = ThreeStagePipeline::new(8);
+        pl.run(&[], |_, _| panic!("prepare on empty"), |_| panic!("compute on empty"));
+        assert_eq!(pl.stats(), PipelineStats::default());
+    }
+
+    #[test]
+    fn slot_rotation_alternates() {
+        // record the slot identity via a marker written in prepare
+        let mut pl = ThreeStagePipeline::new(1);
+        let list: Vec<u32> = (0..5).collect();
+        let mut markers = Vec::new();
+        let mut counter = 0u32;
+        pl.run(
+            &list,
+            |_, slot| {
+                slot.indices[0] = counter; // overwrite with sequence no.
+                counter += 1;
+            },
+            |slot| {
+                markers.push(slot.indices[0]);
+                true
+            },
+        );
+        // compute consumes batches in prepare order despite rotation
+        assert_eq!(markers, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn partial_last_batch_count() {
+        let mut pl = ThreeStagePipeline::new(4);
+        let list: Vec<u32> = (0..6).collect();
+        let mut counts = Vec::new();
+        pl.run(&list, |_, _| {}, |slot| {
+            counts.push(slot.count);
+            true
+        });
+        assert_eq!(counts, vec![4, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch size must be positive")]
+    fn zero_batch_panics() {
+        ThreeStagePipeline::new(0);
+    }
+
+    #[test]
+    fn buffers_are_reused_not_reallocated() {
+        let mut pl = ThreeStagePipeline::new(256);
+        let ptr_before = pl.slots[0].mg.as_ptr();
+        let list: Vec<u32> = (0..1024).collect();
+        pl.run(&list, |_, _| {}, |_| true);
+        assert_eq!(pl.slots[0].mg.as_ptr(), ptr_before);
+    }
+}

@@ -1,0 +1,28 @@
+//! # GEMM-GS
+//!
+//! Reproduction of *GEMM-GS: Accelerating 3D Gaussian Splatting on
+//! Tensor Cores with GEMM-Compatible Blending* (DAC '26) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1** (build-time Python): the GEMM-compatible blending
+//!   kernel in Pallas (`python/compile/kernels/`), MXU-shaped.
+//! * **Layer 2** (build-time Python): the JAX render graph lowered
+//!   AOT to HLO text (`python/compile/aot.py` → `artifacts/`).
+//! * **Layer 3** (this crate): the full 3DGS pipeline substrate, the
+//!   GEMM-GS blending transformation, the five published acceleration
+//!   baselines, a PJRT runtime that loads the AOT artifacts, a serving
+//!   coordinator, the GPU analytic performance model, and the benchmark
+//!   harness regenerating every table and figure of the paper.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod accel;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod gemm;
+pub mod math;
+pub mod perfmodel;
+pub mod pipeline;
+pub mod runtime;
+pub mod scene;

@@ -1,0 +1,231 @@
+//! `gemm-gs` — CLI for the GEMM-GS reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §5):
+//!
+//! ```text
+//! gemm-gs render --scene train [--backend gemm|vanilla|pjrt] [--out img.ppm]
+//! gemm-gs serve  --frames 64 [--workers 4] [--backend gemm]
+//! gemm-gs fig1                      # Figure 1  (TC vs CUDA FLOPS)
+//! gemm-gs bench-fig3                # Figure 3  (stage breakdown)
+//! gemm-gs bench-table2              # Table 2   (A100 grid)
+//! gemm-gs bench-fig5                # Figure 5  (H100 grid)
+//! gemm-gs bench-fig6                # Figure 6  (resolution sweep)
+//! gemm-gs bench-fig7                # Figure 7  (batch-size sweep)
+//! gemm-gs inspect [--scale 0.02]    # Table 1   (workload statistics)
+//! ```
+
+use gemm_gs::bench_harness::{self, fig3, fig6, fig7, report, table2, workloads};
+use gemm_gs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, RenderRequest};
+use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::perfmodel::{gpu, A100, H100};
+use gemm_gs::pipeline::render::{render_frame, RenderConfig};
+use gemm_gs::scene::synthetic::{scene_by_name, table1_scenes};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = argv.get(i + 1).cloned().unwrap_or_default();
+                flags.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
+
+    match cmd {
+        "render" => cmd_render(&args),
+        "serve" => cmd_serve(&args),
+        "fig1" => cmd_fig1(),
+        "bench-fig3" => {
+            let rows = fig3::run_modelled(&A100, scale);
+            print!("{}", fig3::render(&rows, &A100));
+            let t = fig3::run_measured_cpu(&args.get("scene", "train"), scale);
+            println!(
+                "\nCPU-measured (simulator, scene '{}', scale {scale}): blend share {:.1}%",
+                args.get("scene", "train"),
+                t.blend_fraction() * 100.0
+            );
+        }
+        "bench-table2" => {
+            let cells = table2::run(&A100, scale);
+            print!("{}", table2::render(&cells, &A100));
+        }
+        "bench-fig5" => {
+            let cells = table2::run(&H100, scale);
+            print!("{}", table2::render(&cells, &H100));
+        }
+        "bench-fig6" => {
+            let pts = fig6::run(&A100, scale, args.get_usize("scenes", 13));
+            print!("{}", fig6::render(&pts, &A100));
+        }
+        "bench-fig7" => {
+            let scene = args.get("scene", "train");
+            let pts = fig7::run(&A100, scale, &scene);
+            print!("{}", fig7::render(&pts, &A100, &scene));
+        }
+        "inspect" => cmd_inspect(scale),
+        _ => {
+            println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
+            println!("subcommands: render serve fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 inspect");
+            println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
+        }
+    }
+}
+
+fn cmd_render(args: &Args) {
+    let scene = args.get("scene", "train");
+    let spec = scene_by_name(&scene).unwrap_or_else(|| {
+        eprintln!("unknown scene '{scene}'");
+        std::process::exit(1)
+    });
+    let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
+    let backend = BackendKind::parse(&args.get("backend", "gemm")).unwrap_or_else(|| {
+        eprintln!("unknown backend");
+        std::process::exit(1)
+    });
+    let cloud = spec.synthesize(scale);
+    let camera = workloads::default_camera(&spec);
+    let cfg = RenderConfig::default();
+    let mut blender = backend.instantiate(cfg.batch).expect("backend init");
+    let out = render_frame(&cloud, &camera, &cfg, blender.as_mut());
+    println!(
+        "rendered '{scene}' ({}x{}) with {} — {} gaussians, {} visible, {} pairs",
+        camera.width,
+        camera.height,
+        blender.name(),
+        out.stats.n_gaussians,
+        out.stats.n_visible,
+        out.stats.n_pairs
+    );
+    println!(
+        "timings: pre {:.2?} dup {:.2?} sort {:.2?} blend {:.2?} (blend share {:.1}%)",
+        out.timings.preprocess,
+        out.timings.duplicate,
+        out.timings.sort,
+        out.timings.blend,
+        out.timings.blend_fraction() * 100.0
+    );
+    let path = args.get("out", "");
+    if !path.is_empty() {
+        out.image.write_ppm(std::path::Path::new(&path)).expect("write ppm");
+        println!("wrote {path}");
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
+    let frames = args.get_usize("frames", 32);
+    let backend = BackendKind::parse(&args.get("backend", "gemm")).expect("backend");
+    let mut scenes = HashMap::new();
+    let spec = scene_by_name(&args.get("scene", "train")).expect("scene");
+    scenes.insert(spec.name.to_string(), Arc::new(spec.synthesize(scale)));
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: args.get_usize("workers", 4),
+            queue_capacity: 64,
+            backend,
+            render: RenderConfig::default(),
+        },
+        scenes,
+    );
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..frames)
+        .map(|i| {
+            let theta = i as f32 / frames as f32 * std::f32::consts::TAU;
+            let camera = Camera::look_at(
+                Vec3::new(8.0 * theta.cos(), 2.5, 8.0 * theta.sin()),
+                Vec3::ZERO,
+                Vec3::new(0.0, 1.0, 0.0),
+                std::f32::consts::FRAC_PI_3,
+                spec.width / 2,
+                spec.height / 2,
+            );
+            coord.submit(RenderRequest { id: i as u64, scene: spec.name.into(), camera })
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().expect("response");
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let elapsed = t0.elapsed();
+    let m = coord.metrics();
+    println!(
+        "{frames} frames in {elapsed:.2?} — {:.1} fps, mean latency {:.2?}, p95 ≤ {:.2?}, blend share {:.1}%",
+        frames as f64 / elapsed.as_secs_f64(),
+        m.mean_latency,
+        m.p95,
+        m.blend_fraction() * 100.0
+    );
+    coord.shutdown();
+}
+
+fn cmd_fig1() {
+    let mut t =
+        report::Table::new(&["GPU", "CUDA fp32 (TF)", "Tensor (TF)", "Ratio", "3DGS-usable"]);
+    for r in gpu::fig1_rows() {
+        t.row(vec![
+            r.gpu.to_string(),
+            format!("{:.1}", r.cuda_tflops),
+            format!("{:.0}", r.tensor_tflops),
+            format!("{:.1}x", r.ratio),
+            format!("{:.1}%", r.cuda_fraction * 100.0),
+        ]);
+    }
+    println!("Figure 1 analogue — computing power breakdown (datasheets [22-26])\n");
+    print!("{}", t.render());
+}
+
+fn cmd_inspect(scale: f64) {
+    let mut t = report::Table::new(&[
+        "Scene", "Dataset", "Resolution", "#Gauss(full)", "#Sim", "Visible", "Pairs", "Tiles/G",
+        "MeanTileLen",
+    ]);
+    for spec in table1_scenes() {
+        let m = workloads::measure_workload(&spec, scale, &gemm_gs::accel::Vanilla, 1.0);
+        let s = &m.stats;
+        t.row(vec![
+            s.name.clone(),
+            s.dataset.clone(),
+            format!("{}x{}", s.width, s.height),
+            format!("{:.2}M", s.full_gaussians as f64 / 1e6),
+            s.simulated_gaussians.to_string(),
+            s.n_visible.to_string(),
+            s.n_pairs.to_string(),
+            format!("{:.2}", s.tiles_per_gaussian),
+            format!("{:.1}", s.mean_tile_len),
+        ]);
+    }
+    println!("Table 1 analogue — workload statistics (sim scale {scale})\n");
+    print!("{}", t.render());
+}

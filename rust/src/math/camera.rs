@@ -1,0 +1,214 @@
+//! Pinhole camera with the official-3DGS conventions: a world→camera
+//! rigid transform ("view matrix", +z looking into the scene), an OpenGL
+//! style perspective projection, and the focal lengths the EWA Jacobian
+//! needs (`fx = W / (2·tan(fovx/2))`).
+
+use super::mat::Mat4;
+use super::vec::{Vec3, Vec4};
+
+/// Camera pose + intrinsics for one render request.
+#[derive(Debug, Clone, Copy)]
+pub struct Camera {
+    /// World → camera transform.
+    pub view: Mat4,
+    /// Camera → clip transform.
+    pub proj: Mat4,
+    /// Image width in pixels.
+    pub width: u32,
+    /// Image height in pixels.
+    pub height: u32,
+    /// `tan(fov_x / 2)` — used for frustum-guard clamping in preprocessing.
+    pub tan_fovx: f32,
+    /// `tan(fov_y / 2)`.
+    pub tan_fovy: f32,
+    /// Near plane distance (Gaussians closer than this are culled).
+    pub znear: f32,
+    /// Far plane distance.
+    pub zfar: f32,
+}
+
+impl Camera {
+    /// Build a camera looking from `eye` toward `target` with `up` hint.
+    pub fn look_at(
+        eye: Vec3,
+        target: Vec3,
+        up: Vec3,
+        fovy_rad: f32,
+        width: u32,
+        height: u32,
+    ) -> Camera {
+        let fwd = (target - eye).normalized(); // camera +z
+        let right = fwd.cross(up).normalized();
+        let down = fwd.cross(right); // camera +y (image y grows downward)
+        // world→camera: R rows are the camera axes, t = -R·eye
+        let view = Mat4::from_rows(
+            [right.x, right.y, right.z, -right.dot(eye)],
+            [down.x, down.y, down.z, -down.dot(eye)],
+            [fwd.x, fwd.y, fwd.z, -fwd.dot(eye)],
+            [0.0, 0.0, 0.0, 1.0],
+        );
+        let aspect = width as f32 / height as f32;
+        let tan_fovy = (0.5 * fovy_rad).tan();
+        let tan_fovx = tan_fovy * aspect;
+        let (znear, zfar) = (0.01, 100.0);
+        Camera {
+            view,
+            proj: perspective(tan_fovx, tan_fovy, znear, zfar),
+            width,
+            height,
+            tan_fovx,
+            tan_fovy,
+            znear,
+            zfar,
+        }
+    }
+
+    /// Focal length in pixels along x: `W / (2·tan_fovx)`.
+    #[inline(always)]
+    pub fn focal_x(&self) -> f32 {
+        self.width as f32 / (2.0 * self.tan_fovx)
+    }
+
+    /// Focal length in pixels along y.
+    #[inline(always)]
+    pub fn focal_y(&self) -> f32 {
+        self.height as f32 / (2.0 * self.tan_fovy)
+    }
+
+    /// Full world→clip transform (`proj · view`).
+    pub fn full_proj(&self) -> Mat4 {
+        self.proj.mul(&self.view)
+    }
+
+    /// World point → camera space.
+    #[inline(always)]
+    pub fn to_camera(&self, p: Vec3) -> Vec3 {
+        self.view.transform_point(p).xyz()
+    }
+
+    /// World point → pixel coordinates + camera depth.
+    /// Returns `None` when behind the near plane.
+    pub fn project_point(&self, p: Vec3) -> Option<(f32, f32, f32)> {
+        let cam = self.to_camera(p);
+        if cam.z < self.znear {
+            return None;
+        }
+        let clip = self.proj.mul_vec(Vec4::from_vec3(cam, 1.0));
+        if clip.w.abs() < 1e-9 {
+            return None;
+        }
+        let ndc = clip.project();
+        // NDC [-1,1] → pixels, matching the official rasterizer's
+        // ((ndc + 1) * size - 1) / 2 convention.
+        let px = ((ndc.x + 1.0) * self.width as f32 - 1.0) * 0.5;
+        let py = ((ndc.y + 1.0) * self.height as f32 - 1.0) * 0.5;
+        Some((px, py, cam.z))
+    }
+
+    /// Camera position in world space (inverse of the rigid view transform).
+    pub fn position(&self) -> Vec3 {
+        // view = [R | t]; position = -Rᵀ t
+        let r = self.view.upper3();
+        let t = Vec3::new(self.view.at(0, 3), self.view.at(1, 3), self.view.at(2, 3));
+        -(r.transpose().mul_vec(t))
+    }
+}
+
+/// OpenGL-style perspective matrix from half-angle tangents (the exact
+/// construction in the official 3DGS `getProjectionMatrix`, which maps
+/// z into [0, zfar] rather than [-1, 1]).
+pub fn perspective(tan_fovx: f32, tan_fovy: f32, znear: f32, zfar: f32) -> Mat4 {
+    let top = tan_fovy * znear;
+    let bottom = -top;
+    let right = tan_fovx * znear;
+    let left = -right;
+    let mut p = Mat4 { m: [0.0; 16] };
+    p.set(0, 0, 2.0 * znear / (right - left));
+    p.set(1, 1, 2.0 * znear / (top - bottom));
+    p.set(0, 2, (right + left) / (right - left));
+    p.set(1, 2, (top + bottom) / (top - bottom));
+    p.set(2, 2, zfar / (zfar - znear));
+    p.set(2, 3, -(zfar * znear) / (zfar - znear));
+    p.set(3, 2, 1.0);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cam() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, -5.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            640,
+            480,
+        )
+    }
+
+    #[test]
+    fn center_projects_to_image_center() {
+        let cam = test_cam();
+        let (px, py, depth) = cam.project_point(Vec3::ZERO).unwrap();
+        assert!((px - 319.5).abs() < 1e-2, "px={px}");
+        assert!((py - 239.5).abs() < 1e-2, "py={py}");
+        assert!((depth - 5.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn behind_camera_is_culled() {
+        let cam = test_cam();
+        assert!(cam.project_point(Vec3::new(0.0, 0.0, -10.0)).is_none());
+    }
+
+    #[test]
+    fn position_roundtrip() {
+        let cam = test_cam();
+        let p = cam.position();
+        assert!((p - Vec3::new(0.0, 0.0, -5.0)).length() < 1e-4);
+        // camera position maps to the camera-space origin
+        let c = cam.to_camera(p);
+        assert!(c.length() < 1e-4);
+    }
+
+    #[test]
+    fn handedness_cv_convention() {
+        // OpenCV-style camera: x-right, y-down, z-forward (right-handed).
+        // From eye (0,0,+5) looking at the origin, world +x is image-right
+        // and world +y is image-up.
+        let cam = Camera::look_at(
+            Vec3::new(0.0, 0.0, 5.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            640,
+            480,
+        );
+        let (px, _, _) = cam.project_point(Vec3::new(1.0, 0.0, 0.0)).unwrap();
+        assert!(px > 320.0);
+        let (_, py, _) = cam.project_point(Vec3::new(0.0, 1.0, 0.0)).unwrap();
+        assert!(py < 240.0, "world up should be image up, py={py}");
+        // and from behind the scene (eye at -z), +x flips to image-left
+        let back = test_cam();
+        let (px, _, _) = back.project_point(Vec3::new(1.0, 0.0, 0.0)).unwrap();
+        assert!(px < 320.0);
+    }
+
+    #[test]
+    fn focal_matches_fov() {
+        let cam = test_cam();
+        // a point at the edge of the fov should project near the image edge
+        let half_w = cam.width as f32 / 2.0;
+        assert!((cam.focal_x() * cam.tan_fovx - half_w).abs() < 1e-3);
+    }
+
+    #[test]
+    fn depth_increases_along_view() {
+        let cam = test_cam();
+        let (_, _, d1) = cam.project_point(Vec3::new(0.0, 0.0, 0.0)).unwrap();
+        let (_, _, d2) = cam.project_point(Vec3::new(0.0, 0.0, 2.0)).unwrap();
+        assert!(d2 > d1);
+    }
+}

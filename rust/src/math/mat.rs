@@ -1,0 +1,317 @@
+//! Small fixed-size matrices (column-major like GLSL / the official 3DGS
+//! rasterizer, so the camera matrices round-trip against checkpoints).
+
+use super::vec::{Vec2, Vec3, Vec4};
+
+/// 2×2 symmetric-capable matrix — 2D screen-space covariance / conic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat2 {
+    /// Column-major storage: `[m00, m10, m01, m11]`.
+    pub m: [f32; 4],
+}
+
+/// 3×3 matrix — rotations, 3D covariance, Jacobians.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat3 {
+    /// Column-major storage.
+    pub m: [f32; 9],
+}
+
+/// 4×4 matrix — view / projection transforms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat4 {
+    /// Column-major storage.
+    pub m: [f32; 16],
+}
+
+impl Mat2 {
+    #[inline(always)]
+    pub fn new(m00: f32, m01: f32, m10: f32, m11: f32) -> Self {
+        Mat2 { m: [m00, m10, m01, m11] }
+    }
+
+    /// Symmetric matrix `[[a, b], [b, c]]` — the 2D covariance layout.
+    #[inline(always)]
+    pub fn sym(a: f32, b: f32, c: f32) -> Self {
+        Mat2::new(a, b, b, c)
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.m[c * 2 + r]
+    }
+
+    #[inline(always)]
+    pub fn det(&self) -> f32 {
+        self.at(0, 0) * self.at(1, 1) - self.at(0, 1) * self.at(1, 0)
+    }
+
+    /// Inverse; returns `None` when the determinant is ~0.
+    pub fn inverse(&self) -> Option<Mat2> {
+        let d = self.det();
+        if d.abs() < 1e-12 {
+            return None;
+        }
+        let inv = 1.0 / d;
+        Some(Mat2::new(
+            self.at(1, 1) * inv,
+            -self.at(0, 1) * inv,
+            -self.at(1, 0) * inv,
+            self.at(0, 0) * inv,
+        ))
+    }
+
+    #[inline(always)]
+    pub fn mul_vec(&self, v: Vec2) -> Vec2 {
+        Vec2::new(
+            self.at(0, 0) * v.x + self.at(0, 1) * v.y,
+            self.at(1, 0) * v.x + self.at(1, 1) * v.y,
+        )
+    }
+
+    /// Eigenvalues of a symmetric 2×2 (used for splat radius = 3σ).
+    pub fn sym_eigenvalues(&self) -> (f32, f32) {
+        let a = self.at(0, 0);
+        let b = self.at(0, 1);
+        let c = self.at(1, 1);
+        let mid = 0.5 * (a + c);
+        let disc = (0.25 * (a - c) * (a - c) + b * b).max(0.0).sqrt();
+        (mid + disc, mid - disc)
+    }
+}
+
+impl Mat3 {
+    pub const IDENTITY: Mat3 = Mat3 { m: [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0] };
+
+    /// Build from rows (reads naturally in math order).
+    #[rustfmt::skip]
+    pub fn from_rows(r0: [f32; 3], r1: [f32; 3], r2: [f32; 3]) -> Self {
+        Mat3 { m: [
+            r0[0], r1[0], r2[0],
+            r0[1], r1[1], r2[1],
+            r0[2], r1[2], r2[2],
+        ] }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.m[c * 3 + r]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.m[c * 3 + r] = v;
+    }
+
+    pub fn diag(d: Vec3) -> Self {
+        let mut m = Mat3 { m: [0.0; 9] };
+        m.set(0, 0, d.x);
+        m.set(1, 1, d.y);
+        m.set(2, 2, d.z);
+        m
+    }
+
+    pub fn transpose(&self) -> Mat3 {
+        let mut t = Mat3 { m: [0.0; 9] };
+        for r in 0..3 {
+            for c in 0..3 {
+                t.set(c, r, self.at(r, c));
+            }
+        }
+        t
+    }
+
+    pub fn mul(&self, o: &Mat3) -> Mat3 {
+        let mut out = Mat3 { m: [0.0; 9] };
+        for r in 0..3 {
+            for c in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += self.at(r, k) * o.at(k, c);
+                }
+                out.set(r, c, s);
+            }
+        }
+        out
+    }
+
+    #[inline(always)]
+    pub fn mul_vec(&self, v: Vec3) -> Vec3 {
+        Vec3::new(
+            self.at(0, 0) * v.x + self.at(0, 1) * v.y + self.at(0, 2) * v.z,
+            self.at(1, 0) * v.x + self.at(1, 1) * v.y + self.at(1, 2) * v.z,
+            self.at(2, 0) * v.x + self.at(2, 1) * v.y + self.at(2, 2) * v.z,
+        )
+    }
+
+    /// Upper-left 2×2 of `self * o * selfᵀ` — the EWA covariance projection
+    /// `J W Σ Wᵀ Jᵀ` is computed with two of these.
+    pub fn sandwich_upper2(&self, sigma: &Mat3) -> Mat2 {
+        let t = self.mul(sigma).mul(&self.transpose());
+        Mat2::new(t.at(0, 0), t.at(0, 1), t.at(1, 0), t.at(1, 1))
+    }
+}
+
+impl Mat4 {
+    pub const IDENTITY: Mat4 = Mat4 {
+        m: [
+            1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0,
+        ],
+    };
+
+    #[rustfmt::skip]
+    pub fn from_rows(r0: [f32; 4], r1: [f32; 4], r2: [f32; 4], r3: [f32; 4]) -> Self {
+        Mat4 { m: [
+            r0[0], r1[0], r2[0], r3[0],
+            r0[1], r1[1], r2[1], r3[1],
+            r0[2], r1[2], r2[2], r3[2],
+            r0[3], r1[3], r2[3], r3[3],
+        ] }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.m[c * 4 + r]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.m[c * 4 + r] = v;
+    }
+
+    pub fn mul(&self, o: &Mat4) -> Mat4 {
+        let mut out = Mat4 { m: [0.0; 16] };
+        for r in 0..4 {
+            for c in 0..4 {
+                let mut s = 0.0;
+                for k in 0..4 {
+                    s += self.at(r, k) * o.at(k, c);
+                }
+                out.set(r, c, s);
+            }
+        }
+        out
+    }
+
+    #[inline(always)]
+    pub fn mul_vec(&self, v: Vec4) -> Vec4 {
+        Vec4::new(
+            self.at(0, 0) * v.x + self.at(0, 1) * v.y + self.at(0, 2) * v.z + self.at(0, 3) * v.w,
+            self.at(1, 0) * v.x + self.at(1, 1) * v.y + self.at(1, 2) * v.z + self.at(1, 3) * v.w,
+            self.at(2, 0) * v.x + self.at(2, 1) * v.y + self.at(2, 2) * v.z + self.at(2, 3) * v.w,
+            self.at(3, 0) * v.x + self.at(3, 1) * v.y + self.at(3, 2) * v.z + self.at(3, 3) * v.w,
+        )
+    }
+
+    /// Transform a point (w = 1).
+    #[inline(always)]
+    pub fn transform_point(&self, p: Vec3) -> Vec4 {
+        self.mul_vec(Vec4::from_vec3(p, 1.0))
+    }
+
+    /// Upper-left 3×3 block (the rotation part of a rigid transform).
+    pub fn upper3(&self) -> Mat3 {
+        let mut out = Mat3 { m: [0.0; 9] };
+        for r in 0..3 {
+            for c in 0..3 {
+                out.set(r, c, self.at(r, c));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat2_inverse_roundtrip() {
+        let m = Mat2::sym(4.0, 1.0, 3.0);
+        let inv = m.inverse().unwrap();
+        let id = Mat2::new(
+            m.at(0, 0) * inv.at(0, 0) + m.at(0, 1) * inv.at(1, 0),
+            m.at(0, 0) * inv.at(0, 1) + m.at(0, 1) * inv.at(1, 1),
+            m.at(1, 0) * inv.at(0, 0) + m.at(1, 1) * inv.at(1, 0),
+            m.at(1, 0) * inv.at(0, 1) + m.at(1, 1) * inv.at(1, 1),
+        );
+        assert!((id.at(0, 0) - 1.0).abs() < 1e-6);
+        assert!(id.at(0, 1).abs() < 1e-6);
+        assert!((id.at(1, 1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mat2_singular_inverse_none() {
+        assert!(Mat2::sym(1.0, 1.0, 1.0).inverse().is_none());
+    }
+
+    #[test]
+    fn mat2_eigenvalues() {
+        // diag(4, 1): eigenvalues 4 and 1
+        let (l1, l2) = Mat2::sym(4.0, 0.0, 1.0).sym_eigenvalues();
+        assert!((l1 - 4.0).abs() < 1e-6);
+        assert!((l2 - 1.0).abs() < 1e-6);
+        // symmetric with b: trace & det preserved
+        let m = Mat2::sym(2.0, 1.0, 2.0);
+        let (a, b) = m.sym_eigenvalues();
+        assert!((a + b - 4.0).abs() < 1e-5);
+        assert!((a * b - m.det()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mat3_mul_identity() {
+        let m = Mat3::from_rows([1.0, 2.0, 3.0], [4.0, 5.0, 6.0], [7.0, 8.0, 10.0]);
+        assert_eq!(m.mul(&Mat3::IDENTITY), m);
+        assert_eq!(Mat3::IDENTITY.mul(&m), m);
+    }
+
+    #[test]
+    fn mat3_transpose_involution() {
+        let m = Mat3::from_rows([1.0, 2.0, 3.0], [4.0, 5.0, 6.0], [7.0, 8.0, 10.0]);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.at(0, 1), m.transpose().at(1, 0));
+    }
+
+    #[test]
+    fn mat3_sandwich_symmetric() {
+        let j = Mat3::from_rows([2.0, 0.0, 1.0], [0.0, 3.0, -1.0], [0.0, 0.0, 0.0]);
+        let sigma = Mat3::from_rows([2.0, 0.5, 0.0], [0.5, 1.0, 0.2], [0.0, 0.2, 1.5]);
+        let s2 = j.sandwich_upper2(&sigma);
+        // result of J Σ Jᵀ must be symmetric
+        assert!((s2.at(0, 1) - s2.at(1, 0)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mat4_point_transform() {
+        let mut t = Mat4::IDENTITY;
+        t.set(0, 3, 5.0); // translate +5 in x
+        let p = t.transform_point(Vec3::new(1.0, 2.0, 3.0));
+        assert_eq!(p.xyz(), Vec3::new(6.0, 2.0, 3.0));
+        assert_eq!(p.w, 1.0);
+    }
+
+    #[test]
+    fn mat4_mul_associativity() {
+        let a = Mat4::from_rows(
+            [1.0, 2.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0, 3.0],
+            [0.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+        );
+        let b = Mat4::from_rows(
+            [1.0, 0.0, 0.0, -1.0],
+            [0.0, 2.0, 0.0, 0.0],
+            [1.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+        );
+        let v = Vec4::new(1.0, 2.0, 3.0, 1.0);
+        let lhs = a.mul(&b).mul_vec(v);
+        let rhs = a.mul_vec(b.mul_vec(v));
+        for (l, r) in [lhs.x - rhs.x, lhs.y - rhs.y, lhs.z - rhs.z, lhs.w - rhs.w]
+            .iter()
+            .zip([0.0; 4].iter())
+        {
+            assert!((l - r).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Linear-algebra and camera substrate for the 3DGS pipeline.
+//!
+//! Everything here is deliberately dependency-free: small fixed-size
+//! vector/matrix types in `f32` (the pipeline dtype), a quaternion type
+//! for Gaussian orientations, a pinhole camera with the same view/
+//! projection conventions as the official 3DGS rasterizer, and the real
+//! spherical-harmonics basis (degrees 0..=3) used to decode view-dependent
+//! colour.
+
+pub mod camera;
+pub mod mat;
+pub mod quat;
+pub mod sh;
+pub mod vec;
+
+pub use camera::Camera;
+pub use mat::{Mat2, Mat3, Mat4};
+pub use quat::Quat;
+pub use vec::{Vec2, Vec3, Vec4};
+
+/// Numeric helpers shared across the pipeline.
+pub mod util {
+    /// Clamp `x` into `[lo, hi]`.
+    #[inline(always)]
+    pub fn clamp(x: f32, lo: f32, hi: f32) -> f32 {
+        x.max(lo).min(hi)
+    }
+
+    /// `sigmoid(x)` — 3DGS stores raw opacity logits in checkpoints.
+    #[inline(always)]
+    pub fn sigmoid(x: f32) -> f32 {
+        1.0 / (1.0 + (-x).exp())
+    }
+
+    /// Integer ceiling division.
+    #[inline(always)]
+    pub fn div_ceil(a: usize, b: usize) -> usize {
+        (a + b - 1) / b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::util::*;
+
+    #[test]
+    fn clamp_bounds() {
+        assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+        assert!((sigmoid(10.0) - 1.0).abs() < 1e-4);
+        assert!((sigmoid(-10.0)).abs() < 1e-4);
+        // sigmoid(-x) = 1 - sigmoid(x)
+        for i in -8..=8 {
+            let x = i as f32 * 0.7;
+            assert!((sigmoid(-x) - (1.0 - sigmoid(x))).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn div_ceil_cases() {
+        assert_eq!(div_ceil(0, 16), 0);
+        assert_eq!(div_ceil(1, 16), 1);
+        assert_eq!(div_ceil(16, 16), 1);
+        assert_eq!(div_ceil(17, 16), 2);
+        assert_eq!(div_ceil(256, 256), 1);
+    }
+}

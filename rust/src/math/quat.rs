@@ -1,0 +1,102 @@
+//! Unit quaternions — Gaussian orientations. 3DGS checkpoints store
+//! rotations as (w, x, y, z) quaternions, normalized at load time.
+
+use super::mat::Mat3;
+
+/// Quaternion in (w, x, y, z) order — the 3DGS checkpoint convention.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quat {
+    pub w: f32,
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Quat {
+    pub const IDENTITY: Quat = Quat { w: 1.0, x: 0.0, y: 0.0, z: 0.0 };
+
+    #[inline(always)]
+    pub fn new(w: f32, x: f32, y: f32, z: f32) -> Self {
+        Quat { w, x, y, z }
+    }
+
+    /// Rotation of `angle` radians about (unit) `axis`.
+    pub fn from_axis_angle(axis: [f32; 3], angle: f32) -> Self {
+        let half = 0.5 * angle;
+        let s = half.sin();
+        Quat::new(half.cos(), axis[0] * s, axis[1] * s, axis[2] * s)
+    }
+
+    #[inline(always)]
+    pub fn norm(self) -> f32 {
+        (self.w * self.w + self.x * self.x + self.y * self.y + self.z * self.z).sqrt()
+    }
+
+    pub fn normalized(self) -> Quat {
+        let n = self.norm();
+        if n < 1e-12 {
+            return Quat::IDENTITY;
+        }
+        let inv = 1.0 / n;
+        Quat::new(self.w * inv, self.x * inv, self.y * inv, self.z * inv)
+    }
+
+    /// Rotation matrix (matches the official 3DGS `computeCov3D`).
+    #[rustfmt::skip]
+    pub fn to_mat3(self) -> Mat3 {
+        let Quat { w: r, x, y, z } = self.normalized();
+        Mat3::from_rows(
+            [1.0 - 2.0 * (y * y + z * z), 2.0 * (x * y - r * z),       2.0 * (x * z + r * y)],
+            [2.0 * (x * y + r * z),       1.0 - 2.0 * (x * x + z * z), 2.0 * (y * z - r * x)],
+            [2.0 * (x * z - r * y),       2.0 * (y * z + r * x),       1.0 - 2.0 * (x * x + y * y)],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::vec::Vec3;
+
+    #[test]
+    fn identity_rotation() {
+        let m = Quat::IDENTITY.to_mat3();
+        assert_eq!(m, Mat3::IDENTITY);
+    }
+
+    #[test]
+    fn z_axis_quarter_turn() {
+        let q = Quat::from_axis_angle([0.0, 0.0, 1.0], std::f32::consts::FRAC_PI_2);
+        let m = q.to_mat3();
+        let v = m.mul_vec(Vec3::new(1.0, 0.0, 0.0));
+        assert!((v.x).abs() < 1e-6);
+        assert!((v.y - 1.0).abs() < 1e-6);
+        assert!((v.z).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rotation_is_orthonormal() {
+        let q = Quat::new(0.3, -0.5, 0.7, 0.2).normalized();
+        let m = q.to_mat3();
+        let mtm = m.transpose().mul(&m);
+        for r in 0..3 {
+            for c in 0..3 {
+                let expect = if r == c { 1.0 } else { 0.0 };
+                assert!((mtm.at(r, c) - expect).abs() < 1e-5, "({r},{c})");
+            }
+        }
+        // determinant +1 (proper rotation): check via cross product of columns
+        let c0 = Vec3::new(m.at(0, 0), m.at(1, 0), m.at(2, 0));
+        let c1 = Vec3::new(m.at(0, 1), m.at(1, 1), m.at(2, 1));
+        let c2 = Vec3::new(m.at(0, 2), m.at(1, 2), m.at(2, 2));
+        assert!((c0.cross(c1).dot(c2) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn unnormalized_input_handled() {
+        // checkpoints may carry unnormalized quats; to_mat3 normalizes
+        let q = Quat::new(2.0, 0.0, 0.0, 0.0);
+        assert_eq!(q.to_mat3(), Mat3::IDENTITY);
+        assert_eq!(Quat::new(0.0, 0.0, 0.0, 0.0).normalized(), Quat::IDENTITY);
+    }
+}

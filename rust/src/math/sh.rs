@@ -1,0 +1,164 @@
+//! Real spherical harmonics, degrees 0..=3 — the view-dependent colour
+//! basis of 3DGS. Coefficient layout matches checkpoints: 16 RGB
+//! coefficients per Gaussian (`f_dc` = band 0, `f_rest` = bands 1..=3),
+//! i.e. 48 floats.
+
+use super::vec::Vec3;
+
+/// Number of SH coefficients for degree `d` (`(d+1)²`).
+pub const fn num_coeffs(degree: usize) -> usize {
+    (degree + 1) * (degree + 1)
+}
+
+/// Max degree supported (matches official 3DGS).
+pub const MAX_DEGREE: usize = 3;
+/// Coefficients at max degree.
+pub const MAX_COEFFS: usize = num_coeffs(MAX_DEGREE); // 16
+
+// Hard-coded SH constants, identical to the official rasterizer.
+const SH_C0: f32 = 0.282_094_79;
+const SH_C1: f32 = 0.488_602_51;
+const SH_C2: [f32; 5] = [1.092_548_4, -1.092_548_4, 0.315_391_57, -1.092_548_4, 0.546_274_2];
+const SH_C3: [f32; 7] = [
+    -0.590_043_6,
+    2.890_611_4,
+    -0.457_045_8,
+    0.373_176_33,
+    -0.457_045_8,
+    1.445_305_7,
+    -0.590_043_6,
+];
+
+/// Evaluate the SH basis at (unit) direction `d` into `out[..(deg+1)²]`.
+pub fn eval_basis(degree: usize, d: Vec3, out: &mut [f32; MAX_COEFFS]) {
+    debug_assert!(degree <= MAX_DEGREE);
+    let (x, y, z) = (d.x, d.y, d.z);
+    out[0] = SH_C0;
+    if degree >= 1 {
+        out[1] = -SH_C1 * y;
+        out[2] = SH_C1 * z;
+        out[3] = -SH_C1 * x;
+    }
+    if degree >= 2 {
+        let (xx, yy, zz) = (x * x, y * y, z * z);
+        let (xy, yz, xz) = (x * y, y * z, x * z);
+        out[4] = SH_C2[0] * xy;
+        out[5] = SH_C2[1] * yz;
+        out[6] = SH_C2[2] * (2.0 * zz - xx - yy);
+        out[7] = SH_C2[3] * xz;
+        out[8] = SH_C2[4] * (xx - yy);
+    }
+    if degree >= 3 {
+        let (xx, yy, zz) = (x * x, y * y, z * z);
+        let xy = x * y;
+        out[9] = SH_C3[0] * y * (3.0 * xx - yy);
+        out[10] = SH_C3[1] * xy * z;
+        out[11] = SH_C3[2] * y * (4.0 * zz - xx - yy);
+        out[12] = SH_C3[3] * z * (2.0 * zz - 3.0 * xx - 3.0 * yy);
+        out[13] = SH_C3[4] * x * (4.0 * zz - xx - yy);
+        out[14] = SH_C3[5] * z * (xx - yy);
+        out[15] = SH_C3[6] * x * (xx - 3.0 * yy);
+    }
+}
+
+/// Decode RGB colour from SH coefficients for a Gaussian viewed along
+/// `dir` (unit vector Gaussian→camera reversed, i.e. camera→Gaussian).
+///
+/// `coeffs` holds `(deg+1)²` RGB triples in checkpoint layout. The +0.5
+/// offset and clamp-to-zero match the official implementation.
+pub fn eval_color(degree: usize, dir: Vec3, coeffs: &[[f32; 3]]) -> Vec3 {
+    debug_assert!(coeffs.len() >= num_coeffs(degree));
+    let mut basis = [0.0f32; MAX_COEFFS];
+    eval_basis(degree, dir, &mut basis);
+    let mut c = Vec3::ZERO;
+    for (b, rgb) in basis[..num_coeffs(degree)].iter().zip(coeffs.iter()) {
+        c += Vec3::new(rgb[0], rgb[1], rgb[2]) * *b;
+    }
+    c += Vec3::splat(0.5);
+    Vec3::new(c.x.max(0.0), c.y.max(0.0), c.z.max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coeff_counts() {
+        assert_eq!(num_coeffs(0), 1);
+        assert_eq!(num_coeffs(1), 4);
+        assert_eq!(num_coeffs(2), 9);
+        assert_eq!(num_coeffs(3), 16);
+    }
+
+    #[test]
+    fn degree0_is_direction_independent() {
+        let coeffs = [[1.0, 0.5, 0.25]];
+        let a = eval_color(0, Vec3::new(1.0, 0.0, 0.0), &coeffs);
+        let b = eval_color(0, Vec3::new(0.0, 0.0, 1.0).normalized(), &coeffs);
+        assert_eq!(a, b);
+        // 0.282.. * 1.0 + 0.5
+        assert!((a.x - (SH_C0 + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn color_clamped_nonnegative() {
+        let coeffs = [[-100.0, -100.0, -100.0]];
+        let c = eval_color(0, Vec3::new(0.0, 0.0, 1.0), &coeffs);
+        assert_eq!(c, Vec3::ZERO);
+    }
+
+    #[test]
+    fn band1_flips_with_direction() {
+        // pure band-1 z coefficient: colour changes sign contribution with z
+        let mut coeffs = [[0.0f32; 3]; 4];
+        coeffs[2] = [1.0, 1.0, 1.0]; // the z-linear term
+        let up = eval_color(1, Vec3::new(0.0, 0.0, 1.0), &coeffs);
+        let down = eval_color(1, Vec3::new(0.0, 0.0, -1.0), &coeffs);
+        // contributions are ±SH_C1 around the +0.5 offset
+        assert!((up.x - (0.5 + SH_C1)).abs() < 1e-6);
+        assert!((down.x - (0.5 - SH_C1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn basis_orthogonality_numeric() {
+        // Monte-Carlo check: ∫ Y_i Y_j dΩ ≈ δ_ij (coarse tolerance)
+        let mut acc = [[0.0f64; 4]; 4];
+        let n = 20_000usize;
+        let mut state = 0x1234_5678_u64;
+        let mut rng = || {
+            // xorshift
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        let mut count = 0;
+        while count < n {
+            let x = rng() * 2.0 - 1.0;
+            let y = rng() * 2.0 - 1.0;
+            let z = rng() * 2.0 - 1.0;
+            let r2 = x * x + y * y + z * z;
+            if r2 > 1.0 || r2 < 1e-6 {
+                continue;
+            }
+            let r = r2.sqrt();
+            let d = Vec3::new((x / r) as f32, (y / r) as f32, (z / r) as f32);
+            let mut b = [0.0f32; MAX_COEFFS];
+            eval_basis(1, d, &mut b);
+            for i in 0..4 {
+                for j in 0..4 {
+                    acc[i][j] += (b[i] * b[j]) as f64;
+                }
+            }
+            count += 1;
+        }
+        let norm = 4.0 * std::f64::consts::PI / n as f64;
+        for i in 0..4 {
+            for j in 0..4 {
+                let v = acc[i][j] * norm;
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((v - expect).abs() < 0.06, "({i},{j}) = {v}");
+            }
+        }
+    }
+}

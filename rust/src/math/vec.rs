@@ -1,0 +1,243 @@
+//! Small fixed-size vectors in `f32`.
+//!
+//! Only the operations the pipeline needs — no SIMD abstraction here;
+//! the hot loops in `gemm/` are written against raw slices instead.
+
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// 2-component vector (screen-space positions, conic offsets).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Vec2 {
+    pub x: f32,
+    pub y: f32,
+}
+
+/// 3-component vector (world positions, scales, RGB colours).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Vec3 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+/// 4-component vector (homogeneous coordinates).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Vec4 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+    pub w: f32,
+}
+
+impl Vec2 {
+    pub const ZERO: Vec2 = Vec2 { x: 0.0, y: 0.0 };
+
+    #[inline(always)]
+    pub fn new(x: f32, y: f32) -> Self {
+        Vec2 { x, y }
+    }
+
+    #[inline(always)]
+    pub fn dot(self, o: Vec2) -> f32 {
+        self.x * o.x + self.y * o.y
+    }
+
+    #[inline(always)]
+    pub fn length(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
+    pub const ONE: Vec3 = Vec3 { x: 1.0, y: 1.0, z: 1.0 };
+
+    #[inline(always)]
+    pub fn new(x: f32, y: f32, z: f32) -> Self {
+        Vec3 { x, y, z }
+    }
+
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        Vec3 { x: v, y: v, z: v }
+    }
+
+    #[inline(always)]
+    pub fn dot(self, o: Vec3) -> f32 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    #[inline(always)]
+    pub fn cross(self, o: Vec3) -> Vec3 {
+        Vec3 {
+            x: self.y * o.z - self.z * o.y,
+            y: self.z * o.x - self.x * o.z,
+            z: self.x * o.y - self.y * o.x,
+        }
+    }
+
+    #[inline(always)]
+    pub fn length(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+
+    #[inline(always)]
+    pub fn normalized(self) -> Vec3 {
+        let l = self.length();
+        if l > 0.0 {
+            self / l
+        } else {
+            Vec3::ZERO
+        }
+    }
+
+    /// Component-wise min.
+    #[inline(always)]
+    pub fn min(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x.min(o.x), self.y.min(o.y), self.z.min(o.z))
+    }
+
+    /// Component-wise max.
+    #[inline(always)]
+    pub fn max(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x.max(o.x), self.y.max(o.y), self.z.max(o.z))
+    }
+
+    #[inline(always)]
+    pub fn to_array(self) -> [f32; 3] {
+        [self.x, self.y, self.z]
+    }
+
+    #[inline(always)]
+    pub fn from_array(a: [f32; 3]) -> Self {
+        Vec3::new(a[0], a[1], a[2])
+    }
+}
+
+impl Vec4 {
+    #[inline(always)]
+    pub fn new(x: f32, y: f32, z: f32, w: f32) -> Self {
+        Vec4 { x, y, z, w }
+    }
+
+    #[inline(always)]
+    pub fn from_vec3(v: Vec3, w: f32) -> Self {
+        Vec4::new(v.x, v.y, v.z, w)
+    }
+
+    #[inline(always)]
+    pub fn xyz(self) -> Vec3 {
+        Vec3::new(self.x, self.y, self.z)
+    }
+
+    #[inline(always)]
+    pub fn dot(self, o: Vec4) -> f32 {
+        self.x * o.x + self.y * o.y + self.z * o.z + self.w * o.w
+    }
+
+    /// Perspective divide; callers must guard `w != 0`.
+    #[inline(always)]
+    pub fn project(self) -> Vec3 {
+        let inv = 1.0 / self.w;
+        Vec3::new(self.x * inv, self.y * inv, self.z * inv)
+    }
+}
+
+macro_rules! impl_ops {
+    ($t:ty, $($f:ident),+) => {
+        impl Add for $t {
+            type Output = $t;
+            #[inline(always)]
+            fn add(self, o: $t) -> $t { Self { $($f: self.$f + o.$f),+ } }
+        }
+        impl Sub for $t {
+            type Output = $t;
+            #[inline(always)]
+            fn sub(self, o: $t) -> $t { Self { $($f: self.$f - o.$f),+ } }
+        }
+        impl Mul<f32> for $t {
+            type Output = $t;
+            #[inline(always)]
+            fn mul(self, s: f32) -> $t { Self { $($f: self.$f * s),+ } }
+        }
+        impl Mul<$t> for $t {
+            type Output = $t;
+            #[inline(always)]
+            fn mul(self, o: $t) -> $t { Self { $($f: self.$f * o.$f),+ } }
+        }
+        impl Div<f32> for $t {
+            type Output = $t;
+            #[inline(always)]
+            fn div(self, s: f32) -> $t { Self { $($f: self.$f / s),+ } }
+        }
+        impl Neg for $t {
+            type Output = $t;
+            #[inline(always)]
+            fn neg(self) -> $t { Self { $($f: -self.$f),+ } }
+        }
+        impl AddAssign for $t {
+            #[inline(always)]
+            fn add_assign(&mut self, o: $t) { $(self.$f += o.$f;)+ }
+        }
+    };
+}
+
+impl_ops!(Vec2, x, y);
+impl_ops!(Vec3, x, y, z);
+impl_ops!(Vec4, x, y, z, w);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec3_dot_cross() {
+        let a = Vec3::new(1.0, 0.0, 0.0);
+        let b = Vec3::new(0.0, 1.0, 0.0);
+        assert_eq!(a.dot(b), 0.0);
+        assert_eq!(a.cross(b), Vec3::new(0.0, 0.0, 1.0));
+        assert_eq!(b.cross(a), Vec3::new(0.0, 0.0, -1.0));
+    }
+
+    #[test]
+    fn vec3_normalize() {
+        let v = Vec3::new(3.0, 4.0, 0.0).normalized();
+        assert!((v.length() - 1.0).abs() < 1e-6);
+        assert_eq!(Vec3::ZERO.normalized(), Vec3::ZERO);
+    }
+
+    #[test]
+    fn vec4_project() {
+        let v = Vec4::new(2.0, 4.0, 6.0, 2.0);
+        assert_eq!(v.project(), Vec3::new(1.0, 2.0, 3.0));
+    }
+
+    #[test]
+    fn ops_arithmetic() {
+        let a = Vec3::new(1.0, 2.0, 3.0);
+        let b = Vec3::new(4.0, 5.0, 6.0);
+        assert_eq!(a + b, Vec3::new(5.0, 7.0, 9.0));
+        assert_eq!(b - a, Vec3::new(3.0, 3.0, 3.0));
+        assert_eq!(a * 2.0, Vec3::new(2.0, 4.0, 6.0));
+        assert_eq!(a * b, Vec3::new(4.0, 10.0, 18.0));
+        assert_eq!(-a, Vec3::new(-1.0, -2.0, -3.0));
+        let mut c = a;
+        c += b;
+        assert_eq!(c, a + b);
+    }
+
+    #[test]
+    fn vec2_ops() {
+        let a = Vec2::new(3.0, 4.0);
+        assert!((a.length() - 5.0).abs() < 1e-6);
+        assert_eq!(a.dot(Vec2::new(1.0, 1.0)), 7.0);
+    }
+
+    #[test]
+    fn vec3_minmax() {
+        let a = Vec3::new(1.0, 5.0, 3.0);
+        let b = Vec3::new(2.0, 4.0, 3.0);
+        assert_eq!(a.min(b), Vec3::new(1.0, 4.0, 3.0));
+        assert_eq!(a.max(b), Vec3::new(2.0, 5.0, 3.0));
+    }
+}

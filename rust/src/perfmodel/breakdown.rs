@@ -1,0 +1,94 @@
+//! Figure 3 regeneration: per-stage latency fractions of vanilla 3DGS
+//! across workloads — the measurement motivating the whole paper
+//! (blending ≈ 70 % of frame time).
+
+use super::cost::{estimate, BlendKind, StageEstimate, WorkloadProfile};
+use super::gpu::GpuSpec;
+
+/// One Figure 3 bar.
+#[derive(Debug, Clone)]
+pub struct BreakdownRow {
+    pub scene: String,
+    pub est: StageEstimate,
+}
+
+impl BreakdownRow {
+    /// (preprocess, duplicate, sort, blend) fractions.
+    pub fn fractions(&self) -> (f64, f64, f64, f64) {
+        let t = self.est.total();
+        (
+            self.est.preprocess / t,
+            self.est.duplicate / t,
+            self.est.sort / t,
+            self.est.blend / t,
+        )
+    }
+}
+
+/// Model the vanilla breakdown for a set of named workloads.
+pub fn fig3_breakdown(
+    gpu: &GpuSpec,
+    workloads: &[(String, WorkloadProfile)],
+) -> Vec<BreakdownRow> {
+    workloads
+        .iter()
+        .map(|(name, w)| BreakdownRow {
+            scene: name.clone(),
+            est: estimate(gpu, w, BlendKind::Vanilla, Default::default(), 256),
+        })
+        .collect()
+}
+
+/// Mean blending fraction across rows (the paper's "~70 %").
+pub fn mean_blend_fraction(rows: &[BreakdownRow]) -> f64 {
+    if rows.is_empty() {
+        return 0.0;
+    }
+    rows.iter().map(|r| r.est.blend_fraction()).sum::<f64>() / rows.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::gpu::A100;
+
+    fn sample_workloads() -> Vec<(String, WorkloadProfile)> {
+        vec![
+            (
+                "train".into(),
+                WorkloadProfile {
+                    n_gaussians: 1.09e6,
+                    n_visible: 7.6e5,
+                    n_pairs: 2.3e6,
+                    n_active_tiles: 2100.0,
+                },
+            ),
+            (
+                "drjohnson".into(),
+                WorkloadProfile {
+                    n_gaussians: 3.07e6,
+                    n_visible: 2.2e6,
+                    n_pairs: 6.1e6,
+                    n_active_tiles: 4500.0,
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn blending_dominates() {
+        let rows = fig3_breakdown(&A100, &sample_workloads());
+        let mean = mean_blend_fraction(&rows);
+        assert!((0.60..=0.80).contains(&mean), "mean blend fraction {mean:.2}");
+        for r in &rows {
+            let (p, d, s, b) = r.fractions();
+            assert!((p + d + s + b - 1.0).abs() < 1e-9);
+            assert!(b > p && b > d && b > s, "{}: blending must dominate", r.scene);
+        }
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(mean_blend_fraction(&[]), 0.0);
+    }
+}

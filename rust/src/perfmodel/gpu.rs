@@ -1,0 +1,148 @@
+//! GPU datasheet specifications — the exact sources the paper's Figure 1
+//! cites: NVIDIA V100 [22], A100 [23], H100 [24], H200 [25], B200 [26]
+//! datasheets (dense, non-sparsity numbers).
+
+/// One GPU's modelled characteristics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    /// Marketing name.
+    pub name: &'static str,
+    /// CUDA-core FP32 TFLOPS (dense).
+    pub fp32_tflops: f64,
+    /// Tensor-Core TFLOPS at the GEMM input precision the kernel uses
+    /// (TF32 for the f32 path — the paper's mma path on Ampere+).
+    pub tc_tflops: f64,
+    /// Tensor-Core FP16/BF16 dense TFLOPS (Figure 1's headline number).
+    pub tc_fp16_tflops: f64,
+    /// HBM bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Achievable Tensor-Core utilization for the paper's K=8 panel
+    /// GEMM. Small-K GEMMs underutilize bigger MMA pipes, so newer
+    /// parts sit lower (the paper's H100 speedup (1.37×) being below
+    /// its A100 speedup (1.42×) is exactly this effect: Hopper wgmma
+    /// wants K≥16 and larger m-tiles).
+    pub u_tc: f64,
+    /// Achievable CUDA-core utilization of the divergent per-pixel
+    /// blending loop. Hopper's datasheet FP32 doubles via dual-issue
+    /// pipes that divergent code cannot fill, hence the lower value.
+    pub u_blend: f64,
+}
+
+/// Tesla V100 SXM2 (Volta, 2017) [22].
+pub const V100: GpuSpec = GpuSpec {
+    name: "V100",
+    fp32_tflops: 15.7,
+    tc_tflops: 125.0, // fp16 only — Volta has no TF32
+    tc_fp16_tflops: 125.0,
+    mem_bw_gbs: 900.0,
+    u_tc: 0.22,
+    u_blend: 0.28,
+};
+
+/// A100 SXM 80 GB (Ampere, 2020) [23].
+pub const A100: GpuSpec = GpuSpec {
+    name: "A100",
+    fp32_tflops: 19.5,
+    tc_tflops: 156.0, // TF32 dense
+    tc_fp16_tflops: 312.0,
+    mem_bw_gbs: 2039.0,
+    u_tc: 0.25,
+    u_blend: 0.25,
+};
+
+/// H100 SXM (Hopper, 2022) [24].
+pub const H100: GpuSpec = GpuSpec {
+    name: "H100",
+    fp32_tflops: 67.0,
+    tc_tflops: 494.0, // TF32 dense
+    tc_fp16_tflops: 989.0,
+    mem_bw_gbs: 3350.0,
+    u_tc: 0.055,
+    u_blend: 0.10,
+};
+
+/// H200 SXM (Hopper refresh, 2023) [25].
+pub const H200: GpuSpec = GpuSpec {
+    name: "H200",
+    fp32_tflops: 67.0,
+    tc_tflops: 494.0,
+    tc_fp16_tflops: 989.0,
+    mem_bw_gbs: 4800.0,
+    u_tc: 0.055,
+    u_blend: 0.10,
+};
+
+/// B200 (Blackwell, 2024) [26].
+pub const B200: GpuSpec = GpuSpec {
+    name: "B200",
+    fp32_tflops: 80.0,
+    tc_tflops: 1125.0, // TF32-class dense
+    tc_fp16_tflops: 2250.0,
+    mem_bw_gbs: 8000.0,
+    u_tc: 0.05,
+    u_blend: 0.09,
+};
+
+/// All modelled GPUs in Figure 1's chronological order.
+pub fn all_gpus() -> [GpuSpec; 5] {
+    [V100, A100, H100, H200, B200]
+}
+
+/// One Figure 1 row: the computing-power breakdown of a GPU as used by
+/// 3DGS — CUDA-core FLOPS exercised, Tensor-Core FLOPS idle.
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    pub gpu: &'static str,
+    pub cuda_tflops: f64,
+    pub tensor_tflops: f64,
+    /// Tensor/CUDA ratio — the ">30×" headline of the paper's intro.
+    pub ratio: f64,
+    /// Fraction of the GPU's total FLOPS vanilla 3DGS can touch.
+    pub cuda_fraction: f64,
+}
+
+/// Regenerate Figure 1 from the datasheet table.
+pub fn fig1_rows() -> Vec<Fig1Row> {
+    all_gpus()
+        .iter()
+        .map(|g| Fig1Row {
+            gpu: g.name,
+            cuda_tflops: g.fp32_tflops,
+            tensor_tflops: g.tc_fp16_tflops,
+            ratio: g.tc_fp16_tflops / g.fp32_tflops,
+            cuda_fraction: g.fp32_tflops / (g.fp32_tflops + g.tc_fp16_tflops),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_grow_across_generations() {
+        let rows = fig1_rows();
+        assert_eq!(rows.len(), 5);
+        // V100 ~8×, B200 ~28× — the paper's "exceed 30×" with sparsity
+        assert!((rows[0].ratio - 7.96).abs() < 0.1);
+        assert!(rows[4].ratio > 25.0);
+        // monotone-ish growth V100 → A100 → B200
+        assert!(rows[1].ratio > rows[0].ratio);
+        assert!(rows[4].ratio > rows[1].ratio);
+    }
+
+    #[test]
+    fn cuda_fraction_shrinks() {
+        let rows = fig1_rows();
+        // vanilla 3DGS touches an ever smaller slice of the machine
+        assert!(rows[0].cuda_fraction > rows[4].cuda_fraction);
+        assert!(rows[4].cuda_fraction < 0.05);
+    }
+
+    #[test]
+    fn hopper_utilization_below_ampere() {
+        assert!(H100.u_tc < A100.u_tc);
+        assert_eq!(H100.tc_tflops, H200.tc_tflops);
+        assert!(H200.mem_bw_gbs > H100.mem_bw_gbs);
+    }
+}

@@ -1,0 +1,270 @@
+//! Stage 4 — GEMM-compatible blending (Algorithm 2, the paper's
+//! contribution): per batch, construct `M_g` (Stage 2), multiply by the
+//! precomputed `M_p` (Stage 3, the Tensor-Core GEMM — here the K=8
+//! micro-GEMM / the Pallas-MXU kernel via the PJRT artifact), then run
+//! the identical masked volume-render accumulation of Algorithm 1 on
+//! the precomputed power matrix. Drives the three-stage double-buffered
+//! pipeline of Figure 4.
+
+use super::preprocess::Projected;
+use super::render::TileBlend;
+use super::{ALPHA_MAX, ALPHA_SKIP, DEFAULT_BATCH, TILE_PIXELS, T_EPS};
+use crate::gemm::microkernel::gemm_k8;
+use crate::gemm::mg::write_mg_row;
+use crate::gemm::mp::{default_mp, Mp};
+use crate::gemm::pipeline3::ThreeStagePipeline;
+
+/// Algorithm 2 blender (native Rust micro-GEMM backend).
+pub struct GemmBlender {
+    pipeline: ThreeStagePipeline,
+    mp: Mp,
+    /// `M_power` staging: `[batch][TILE_PIXELS]`, reused across batches.
+    power: Vec<f32>,
+    last_t: Vec<f32>,
+}
+
+impl Default for GemmBlender {
+    fn default() -> Self {
+        Self::with_batch(DEFAULT_BATCH)
+    }
+}
+
+impl GemmBlender {
+    /// Blender with `batch` Gaussians per GEMM (paper Figure 7 sweeps this).
+    pub fn with_batch(batch: usize) -> Self {
+        GemmBlender {
+            pipeline: ThreeStagePipeline::new(batch),
+            mp: default_mp(),
+            power: vec![0.0; batch * TILE_PIXELS],
+            last_t: vec![1.0; TILE_PIXELS],
+        }
+    }
+
+    /// Configured batch size.
+    pub fn batch(&self) -> usize {
+        self.pipeline.batch()
+    }
+
+    /// Pipeline execution counters (batches prepared/computed/early-exits).
+    pub fn pipeline_stats(&self) -> crate::gemm::pipeline3::PipelineStats {
+        self.pipeline.stats()
+    }
+}
+
+impl TileBlend for GemmBlender {
+    fn name(&self) -> &'static str {
+        "gemm-gs"
+    }
+
+    fn blend_tile(
+        &mut self,
+        origin: (u32, u32),
+        projected: &Projected,
+        indices: &[u32],
+        out: &mut [[f32; 3]],
+    ) {
+        debug_assert!(out.len() >= TILE_PIXELS);
+        let (x0, y0) = (origin.0 as f32, origin.1 as f32);
+
+        let mut t = [1.0f32; TILE_PIXELS];
+        let mut done = [false; TILE_PIXELS];
+        let mut color = [[0.0f32; 3]; TILE_PIXELS];
+        let mut n_done = 0usize;
+
+        let mp = &self.mp;
+        let power = &mut self.power;
+        self.pipeline.run(
+            indices,
+            // Stages 1–2: fetch features, build M_g rows (Eq. 6)
+            |chunk, slot| {
+                for (r, &gi) in chunk.iter().enumerate() {
+                    let g = gi as usize;
+                    let mean = projected.means2d[g];
+                    // x̂ = x_g − x_c with reference pixel p_c = tile origin
+                    write_mg_row(&mut slot.mg, r, projected.conics[g], mean.x - x0, mean.y - y0);
+                    slot.opacities[r] = projected.opacities[g];
+                    let c = projected.colors[g];
+                    slot.colors[r] = [c.x, c.y, c.z];
+                }
+            },
+            // Stage 3: M_power = M_g · M_p (Eq. 8), then Algorithm 1's
+            // masked accumulation over the precomputed powers
+            |slot| {
+                let b = slot.count;
+                gemm_k8(&slot.mg, b, &mp.data, TILE_PIXELS, power);
+                for i in 0..b {
+                    let o = slot.opacities[i];
+                    let c = slot.colors[i];
+                    let row = &power[i * TILE_PIXELS..(i + 1) * TILE_PIXELS];
+                    for j in 0..TILE_PIXELS {
+                        if done[j] {
+                            continue;
+                        }
+                        let p = row[j];
+                        if p > 0.0 {
+                            continue; // same numerical guard as Algorithm 1
+                        }
+                        let alpha = (o * p.exp()).min(ALPHA_MAX);
+                        if alpha < ALPHA_SKIP {
+                            continue; // α-skipping
+                        }
+                        let test_t = t[j] * (1.0 - alpha);
+                        if test_t < T_EPS {
+                            done[j] = true; // early terminate
+                            n_done += 1;
+                            continue;
+                        }
+                        let w = alpha * t[j];
+                        color[j][0] += c[0] * w;
+                        color[j][1] += c[1] * w;
+                        color[j][2] += c[2] * w;
+                        t[j] = test_t;
+                    }
+                }
+                n_done < TILE_PIXELS
+            },
+        );
+
+        out[..TILE_PIXELS].copy_from_slice(&color);
+        self.last_t.copy_from_slice(&t);
+    }
+
+    fn last_transmittance(&self) -> &[f32] {
+        &self.last_t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Vec2, Vec3};
+    use crate::pipeline::blend_vanilla::VanillaBlender;
+    use crate::scene::rng::Rng;
+
+    /// Random projected set covering a tile at `origin`.
+    fn random_projected(rng: &mut Rng, n: usize, origin: (u32, u32)) -> Projected {
+        let mut p = Projected::default();
+        let (x0, y0) = (origin.0 as f32, origin.1 as f32);
+        for i in 0..n {
+            let a = rng.range(0.02, 1.5);
+            let c = rng.range(0.02, 1.5);
+            let b = rng.range(-0.9, 0.9) * (a * c).sqrt();
+            p.means2d.push(Vec2::new(x0 + rng.range(-8.0, 24.0), y0 + rng.range(-8.0, 24.0)));
+            p.conics.push([a, b, c]);
+            p.depths.push(rng.range(0.5, 20.0));
+            p.radii.push(rng.range(2.0, 30.0));
+            p.colors.push(Vec3::new(rng.f32(), rng.f32(), rng.f32()));
+            p.opacities.push(rng.range(0.05, 0.99));
+            p.source.push(i as u32);
+        }
+        p
+    }
+
+    /// The §4 invariant-2 core check: GEMM blending == vanilla blending.
+    #[test]
+    fn matches_vanilla_blender() {
+        let mut rng = Rng::new(4242);
+        for trial in 0..10 {
+            let origin = (16 * (trial % 4) as u32, 16 * (trial % 3) as u32);
+            let n = 50 + trial * 37;
+            let p = random_projected(&mut rng, n, origin);
+            let idx: Vec<u32> = (0..n as u32).collect();
+            let mut vanilla = VanillaBlender::default();
+            let mut gemm = GemmBlender::default();
+            let mut out_v = [[0.0f32; 3]; TILE_PIXELS];
+            let mut out_g = [[0.0f32; 3]; TILE_PIXELS];
+            vanilla.blend_tile(origin, &p, &idx, &mut out_v);
+            gemm.blend_tile(origin, &p, &idx, &mut out_g);
+            for j in 0..TILE_PIXELS {
+                for ch in 0..3 {
+                    assert!(
+                        (out_v[j][ch] - out_g[j][ch]).abs() < 1e-3,
+                        "trial {trial} pixel {j} ch {ch}: {} vs {}",
+                        out_v[j][ch],
+                        out_g[j][ch]
+                    );
+                }
+            }
+            // transmittance agrees too
+            for (tv, tg) in vanilla.last_transmittance().iter().zip(gemm.last_transmittance())
+            {
+                assert!((tv - tg).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_size_invariance() {
+        let mut rng = Rng::new(11);
+        let p = random_projected(&mut rng, 300, (0, 0));
+        let idx: Vec<u32> = (0..300).collect();
+        let mut reference = [[0.0f32; 3]; TILE_PIXELS];
+        GemmBlender::with_batch(256).blend_tile((0, 0), &p, &idx, &mut reference);
+        for batch in [32usize, 64, 128, 300] {
+            let mut out = [[0.0f32; 3]; TILE_PIXELS];
+            GemmBlender::with_batch(batch).blend_tile((0, 0), &p, &idx, &mut out);
+            for j in 0..TILE_PIXELS {
+                for ch in 0..3 {
+                    assert!(
+                        (reference[j][ch] - out[j][ch]).abs() < 1e-4,
+                        "batch {batch} pixel {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_tile() {
+        let mut g = GemmBlender::default();
+        let mut out = [[5.0f32; 3]; TILE_PIXELS];
+        g.blend_tile((0, 0), &Projected::default(), &[], &mut out);
+        assert!(out.iter().all(|px| px == &[0.0; 3]));
+    }
+
+    #[test]
+    fn early_exit_skips_remaining_batches() {
+        // an opaque wall in the first batch; the remaining 10 batches of
+        // Gaussians must be skipped by the pipeline early-exit
+        let mut rng = Rng::new(3);
+        let mut p = random_projected(&mut rng, 0, (0, 0));
+        for i in 0..176u32 {
+            p.means2d.push(Vec2::new(8.0, 8.0));
+            p.conics.push([1e-4, 0.0, 1e-4]); // effectively flat → α≈o everywhere
+            p.depths.push(i as f32);
+            p.radii.push(1000.0);
+            p.colors.push(Vec3::new(1.0, 1.0, 1.0));
+            p.opacities.push(0.99);
+            p.source.push(i);
+        }
+        let idx: Vec<u32> = (0..176).collect();
+        let mut g = GemmBlender::with_batch(16);
+        let mut out = [[0.0f32; 3]; TILE_PIXELS];
+        g.blend_tile((0, 0), &p, &idx, &mut out);
+        let stats = g.pipeline_stats();
+        assert!(stats.computed < 11, "computed {} batches, early exit failed", stats.computed);
+        assert_eq!(stats.early_exits, 1);
+    }
+
+    #[test]
+    fn nonzero_tile_origin_consistent() {
+        // same relative geometry at two different tile origins → same image
+        let mut rng = Rng::new(9);
+        let p0 = random_projected(&mut rng, 60, (0, 0));
+        // shift all means by (160, 96): tile (10, 6)
+        let mut p1 = p0.clone();
+        for m in &mut p1.means2d {
+            *m = Vec2::new(m.x + 160.0, m.y + 96.0);
+        }
+        let idx: Vec<u32> = (0..60).collect();
+        let mut out0 = [[0.0f32; 3]; TILE_PIXELS];
+        let mut out1 = [[0.0f32; 3]; TILE_PIXELS];
+        GemmBlender::default().blend_tile((0, 0), &p0, &idx, &mut out0);
+        GemmBlender::default().blend_tile((160, 96), &p1, &idx, &mut out1);
+        for j in 0..TILE_PIXELS {
+            for ch in 0..3 {
+                assert!((out0[j][ch] - out1[j][ch]).abs() < 1e-4);
+            }
+        }
+    }
+}

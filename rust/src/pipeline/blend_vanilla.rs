@@ -1,0 +1,250 @@
+//! Stage 4 — vanilla blending (Algorithm 1): per pixel, walk the tile's
+//! depth-sorted Gaussian list, evaluating the quadratic power term
+//! directly and accumulating colour front-to-back with α-skipping and
+//! early termination. This is the official rasterizer's `renderCUDA`
+//! re-expressed on CPU and is both the correctness oracle and the
+//! baseline the paper's speedups are measured against.
+
+use super::preprocess::Projected;
+use super::render::TileBlend;
+use super::{ALPHA_MAX, ALPHA_SKIP, TILE_PIXELS, TILE_SIZE, T_EPS};
+use crate::gemm::mg::power_direct;
+
+/// Algorithm 1 blender.
+#[derive(Debug, Clone)]
+pub struct VanillaBlender {
+    /// Gaussians fetched per staging batch (line 1 of Algorithm 1).
+    /// Does not change the result — only the staging granularity.
+    pub batch: usize,
+    /// Per-pixel transmittance left after the last blended tile (for
+    /// background compositing by the frame assembler).
+    last_t: Vec<f32>,
+}
+
+impl Default for VanillaBlender {
+    fn default() -> Self {
+        VanillaBlender { batch: super::DEFAULT_BATCH, last_t: vec![1.0; TILE_PIXELS] }
+    }
+}
+
+impl TileBlend for VanillaBlender {
+    fn name(&self) -> &'static str {
+        "vanilla"
+    }
+
+    fn blend_tile(
+        &mut self,
+        origin: (u32, u32),
+        projected: &Projected,
+        indices: &[u32],
+        out: &mut [[f32; 3]],
+    ) {
+        debug_assert!(out.len() >= TILE_PIXELS);
+        let (x0, y0) = (origin.0 as f32, origin.1 as f32);
+        // per-pixel state
+        let mut t = [1.0f32; TILE_PIXELS];
+        let mut done = [false; TILE_PIXELS];
+        let mut color = [[0.0f32; 3]; TILE_PIXELS];
+        let mut n_done = 0usize;
+
+        // batch loop (staging granularity only; Algorithm 1 line 1)
+        'batches: for chunk in indices.chunks(self.batch) {
+            for &gi in chunk {
+                let g = gi as usize;
+                let mean = projected.means2d[g];
+                let conic = projected.conics[g];
+                let o = projected.opacities[g];
+                let c = projected.colors[g];
+                for ly in 0..TILE_SIZE {
+                    for lx in 0..TILE_SIZE {
+                        let j = ly * TILE_SIZE + lx;
+                        if done[j] {
+                            continue;
+                        }
+                        let dx = mean.x - (x0 + lx as f32);
+                        let dy = mean.y - (y0 + ly as f32);
+                        let power = power_direct(conic, dx, dy);
+                        if power > 0.0 {
+                            continue; // official numerical guard
+                        }
+                        let alpha = (o * power.exp()).min(ALPHA_MAX);
+                        if alpha < ALPHA_SKIP {
+                            continue; // α-skipping
+                        }
+                        let test_t = t[j] * (1.0 - alpha);
+                        if test_t < T_EPS {
+                            done[j] = true; // early terminate
+                            n_done += 1;
+                            continue;
+                        }
+                        let w = alpha * t[j];
+                        color[j][0] += c.x * w;
+                        color[j][1] += c.y * w;
+                        color[j][2] += c.z * w;
+                        t[j] = test_t;
+                    }
+                }
+            }
+            if n_done == TILE_PIXELS {
+                break 'batches;
+            }
+        }
+
+        for j in 0..TILE_PIXELS {
+            // background composited by the caller using remaining T
+            out[j] = [color[j][0], color[j][1], color[j][2]];
+        }
+        // stash transmittance in the alpha channel convention: caller
+        // reads it via blend_tile_with_t when compositing background.
+        self.last_t.copy_from_slice(&t);
+    }
+
+    fn last_transmittance(&self) -> &[f32] {
+        &self.last_t
+    }
+}
+
+impl VanillaBlender {
+    /// Blender with a specific staging batch size.
+    pub fn with_batch(batch: usize) -> Self {
+        VanillaBlender { batch, last_t: vec![1.0; TILE_PIXELS] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Vec2, Vec3};
+
+    fn one_projected(center: Vec2, conic: [f32; 3], opacity: f32, color: Vec3) -> Projected {
+        Projected {
+            means2d: vec![center],
+            conics: vec![conic],
+            depths: vec![1.0],
+            radii: vec![10.0],
+            colors: vec![color],
+            opacities: vec![opacity],
+            source: vec![0],
+        }
+    }
+
+    #[test]
+    fn empty_tile_black() {
+        let p = Projected::default();
+        let mut b = VanillaBlender::default();
+        let mut out = [[9.0f32; 3]; TILE_PIXELS];
+        b.blend_tile((0, 0), &p, &[], &mut out);
+        assert!(out.iter().all(|px| px == &[0.0, 0.0, 0.0]));
+        assert!(b.last_transmittance().iter().all(|&t| t == 1.0));
+    }
+
+    #[test]
+    fn single_gaussian_peak_at_center() {
+        // Gaussian centred at pixel (8, 8)
+        let p = one_projected(Vec2::new(8.0, 8.0), [0.5, 0.0, 0.5], 0.8, Vec3::new(1.0, 0.0, 0.0));
+        let mut b = VanillaBlender::default();
+        let mut out = [[0.0f32; 3]; TILE_PIXELS];
+        b.blend_tile((0, 0), &p, &[0], &mut out);
+        let center = out[8 * TILE_SIZE + 8];
+        assert!((center[0] - 0.8).abs() < 1e-5, "{center:?}"); // α·T = 0.8·1
+        assert_eq!(center[1], 0.0);
+        // intensity decays away from the centre
+        let off = out[8 * TILE_SIZE + 12];
+        assert!(off[0] < center[0]);
+    }
+
+    #[test]
+    fn front_to_back_occlusion() {
+        // two fully-overlapping near-opaque Gaussians; first in list wins
+        let mut p = one_projected(Vec2::new(8.0, 8.0), [2.0, 0.0, 2.0], 0.99, Vec3::new(1.0, 0.0, 0.0));
+        p.means2d.push(Vec2::new(8.0, 8.0));
+        p.conics.push([2.0, 0.0, 2.0]);
+        p.depths.push(2.0);
+        p.radii.push(10.0);
+        p.colors.push(Vec3::new(0.0, 1.0, 0.0));
+        p.opacities.push(0.99);
+        p.source.push(1);
+        let mut b = VanillaBlender::default();
+        let mut out = [[0.0f32; 3]; TILE_PIXELS];
+        b.blend_tile((0, 0), &p, &[0, 1], &mut out);
+        let center = out[8 * TILE_SIZE + 8];
+        // red contributes α=0.99·T=1, green only through T=0.01... but
+        // alpha is capped at 0.99 so T after red = 0.01 ≥ T_EPS
+        assert!(center[0] > 0.9);
+        assert!(center[1] < 0.02);
+        assert!(center[0] > 50.0 * center[1]);
+    }
+
+    #[test]
+    fn alpha_skip_threshold() {
+        // opacity below 1/255 at peak → no contribution at all
+        let p = one_projected(Vec2::new(8.0, 8.0), [0.5, 0.0, 0.5], 0.003, Vec3::ONE);
+        let mut b = VanillaBlender::default();
+        let mut out = [[0.0f32; 3]; TILE_PIXELS];
+        b.blend_tile((0, 0), &p, &[0], &mut out);
+        assert!(out.iter().all(|px| px[0] == 0.0));
+    }
+
+    #[test]
+    fn transmittance_decreases() {
+        let p = one_projected(Vec2::new(8.0, 8.0), [0.1, 0.0, 0.1], 0.5, Vec3::ONE);
+        let mut b = VanillaBlender::default();
+        let mut out = [[0.0f32; 3]; TILE_PIXELS];
+        b.blend_tile((0, 0), &p, &[0], &mut out);
+        let t = b.last_transmittance();
+        assert!(t[8 * TILE_SIZE + 8] < 1.0);
+        assert!(t.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn batch_size_does_not_change_result() {
+        let mut p = Projected::default();
+        // a stack of 20 translucent Gaussians
+        for i in 0..20 {
+            p.means2d.push(Vec2::new(4.0 + (i % 5) as f32, 6.0 + (i % 3) as f32));
+            p.conics.push([0.3, 0.05, 0.4]);
+            p.depths.push(1.0 + i as f32);
+            p.radii.push(8.0);
+            p.colors.push(Vec3::new(0.1 * i as f32 % 1.0, 0.5, 0.2));
+            p.opacities.push(0.3);
+            p.source.push(i);
+        }
+        let idx: Vec<u32> = (0..20).collect();
+        let mut out_a = [[0.0f32; 3]; TILE_PIXELS];
+        let mut out_b = [[0.0f32; 3]; TILE_PIXELS];
+        VanillaBlender::with_batch(256).blend_tile((0, 0), &p, &idx, &mut out_a);
+        VanillaBlender::with_batch(3).blend_tile((0, 0), &p, &idx, &mut out_b);
+        for j in 0..TILE_PIXELS {
+            for c in 0..3 {
+                assert_eq!(out_a[j][c], out_b[j][c]);
+            }
+        }
+    }
+
+    #[test]
+    fn early_termination_after_opaque_wall() {
+        // 30 near-opaque Gaussians; later ones must not contribute
+        let mut p = Projected::default();
+        for i in 0..30 {
+            p.means2d.push(Vec2::new(8.0, 8.0));
+            p.conics.push([0.01, 0.0, 0.01]); // wide → covers whole tile
+            p.depths.push(1.0 + i as f32);
+            p.radii.push(100.0);
+            p.colors.push(if i < 5 { Vec3::new(1.0, 0.0, 0.0) } else { Vec3::new(0.0, 0.0, 1.0) });
+            p.opacities.push(0.95);
+            p.source.push(i);
+        }
+        let idx: Vec<u32> = (0..30).collect();
+        let mut b = VanillaBlender::default();
+        let mut out = [[0.0f32; 3]; TILE_PIXELS];
+        b.blend_tile((0, 0), &p, &idx, &mut out);
+        // at the Gaussian centre (pixel 8,8) α≈0.95: T < 1e-4 after the
+        // 5 red layers → blue must be fully occluded there
+        let center = out[8 * TILE_SIZE + 8];
+        assert!(center[2] < 1e-3, "blue leaked at center: {}", center[2]);
+        assert!(center[0] > 0.99);
+        // at the tile corner α is lower; blue may leak slightly but red
+        // still dominates strongly
+        assert!(out[0][0] > 10.0 * out[0][2], "corner: {:?}", out[0]);
+    }
+}

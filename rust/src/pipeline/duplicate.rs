@@ -1,0 +1,177 @@
+//! Stage 2 — duplication (Figure 2c): each projected Gaussian is emitted
+//! once per tile its splat rectangle touches, keyed by
+//! `tile_id << 32 | depth_bits` so a single sort gathers each tile's
+//! Gaussians in front-to-back order (exactly the official rasterizer's
+//! key construction).
+
+use super::preprocess::Projected;
+use super::tile::TileGrid;
+
+/// One duplicated (tile, Gaussian) pair.
+#[derive(Debug, Clone, Default)]
+pub struct Duplicated {
+    /// Sort keys: `tile_id << 32 | depth_bits`.
+    pub keys: Vec<u64>,
+    /// Payload: index into the [`Projected`] arrays.
+    pub values: Vec<u32>,
+}
+
+impl Duplicated {
+    /// Number of (tile, Gaussian) pairs.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// True when no pair was emitted.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+/// Monotone mapping of a positive-depth `f32` onto `u32` so integer key
+/// order equals float order (depths are > near > 0, so raw IEEE bits are
+/// already monotone; this asserts that invariant in debug builds).
+#[inline(always)]
+pub fn depth_bits(depth: f32) -> u32 {
+    debug_assert!(depth >= 0.0 && depth.is_finite());
+    depth.to_bits()
+}
+
+/// Inverse of [`depth_bits`].
+#[inline(always)]
+pub fn depth_from_bits(bits: u32) -> f32 {
+    f32::from_bits(bits)
+}
+
+/// Extract the tile id from a key.
+#[inline(always)]
+pub fn key_tile(key: u64) -> u32 {
+    (key >> 32) as u32
+}
+
+/// Build the duplicated key/value arrays. `tile_mask(i, tx, ty)` lets
+/// acceleration baselines (FlashGS / Speedy-Splat / StopThePop) veto
+/// individual (Gaussian, tile) pairs — `None` keeps the vanilla
+/// rectangle-overlap behaviour.
+pub fn duplicate_with_mask(
+    projected: &Projected,
+    grid: &TileGrid,
+    tile_mask: Option<&dyn Fn(usize, u32, u32) -> bool>,
+) -> Duplicated {
+    let mut out = Duplicated::default();
+    // conservative reservation: most splats touch 1–4 tiles
+    out.keys.reserve(projected.len() * 4);
+    out.values.reserve(projected.len() * 4);
+    for i in 0..projected.len() {
+        let rect = grid.tile_rect(projected.means2d[i], projected.radii[i]);
+        let (x0, x1, y0, y1) = rect;
+        let db = depth_bits(projected.depths[i]) as u64;
+        for ty in y0..y1 {
+            for tx in x0..x1 {
+                if let Some(mask) = tile_mask {
+                    if !mask(i, tx, ty) {
+                        continue;
+                    }
+                }
+                let key = ((grid.tile_id(tx, ty) as u64) << 32) | db;
+                out.keys.push(key);
+                out.values.push(i as u32);
+            }
+        }
+    }
+    out
+}
+
+/// Vanilla duplication (rectangle overlap, no veto).
+pub fn duplicate(projected: &Projected, grid: &TileGrid) -> Duplicated {
+    duplicate_with_mask(projected, grid, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Vec2, Vec3};
+
+    fn projected_one(center: Vec2, radius: f32, depth: f32) -> Projected {
+        Projected {
+            means2d: vec![center],
+            conics: vec![[1.0, 0.0, 1.0]],
+            depths: vec![depth],
+            radii: vec![radius],
+            colors: vec![Vec3::splat(0.5)],
+            opacities: vec![0.9],
+            source: vec![0],
+        }
+    }
+
+    #[test]
+    fn depth_bits_monotone() {
+        let depths = [0.01f32, 0.2, 1.0, 1.5, 2.0, 10.0, 99.9];
+        for w in depths.windows(2) {
+            assert!(depth_bits(w[0]) < depth_bits(w[1]));
+        }
+        assert_eq!(depth_from_bits(depth_bits(3.25)), 3.25);
+    }
+
+    #[test]
+    fn single_tile_splat_one_pair() {
+        let grid = TileGrid::new(640, 480);
+        let p = projected_one(Vec2::new(8.0, 8.0), 2.0, 1.0);
+        let d = duplicate(&p, &grid);
+        assert_eq!(d.len(), 1);
+        assert_eq!(key_tile(d.keys[0]), 0);
+        assert_eq!(d.values[0], 0);
+    }
+
+    #[test]
+    fn straddling_splat_duplicated() {
+        let grid = TileGrid::new(640, 480);
+        // centred on the corner of 4 tiles at (16, 16)
+        let p = projected_one(Vec2::new(16.0, 16.0), 3.0, 1.0);
+        let d = duplicate(&p, &grid);
+        assert_eq!(d.len(), 4);
+        let mut tiles: Vec<u32> = d.keys.iter().map(|&k| key_tile(k)).collect();
+        tiles.sort();
+        assert_eq!(tiles, vec![0, 1, 40, 41]);
+    }
+
+    #[test]
+    fn mask_vetoes_pairs() {
+        let grid = TileGrid::new(640, 480);
+        let p = projected_one(Vec2::new(16.0, 16.0), 3.0, 1.0);
+        // veto everything except tile (0,0)
+        let mask = |_i: usize, tx: u32, ty: u32| tx == 0 && ty == 0;
+        let d = duplicate_with_mask(&p, &grid, Some(&mask));
+        assert_eq!(d.len(), 1);
+        assert_eq!(key_tile(d.keys[0]), 0);
+    }
+
+    #[test]
+    fn key_orders_by_tile_then_depth() {
+        let grid = TileGrid::new(640, 480);
+        let mut p = projected_one(Vec2::new(8.0, 8.0), 2.0, 5.0);
+        // add a second, nearer Gaussian in the same tile
+        p.means2d.push(Vec2::new(9.0, 9.0));
+        p.conics.push([1.0, 0.0, 1.0]);
+        p.depths.push(2.0);
+        p.radii.push(2.0);
+        p.colors.push(Vec3::splat(0.1));
+        p.opacities.push(0.5);
+        p.source.push(1);
+        let mut d = duplicate(&p, &grid);
+        let mut idx: Vec<usize> = (0..d.len()).collect();
+        idx.sort_by_key(|&i| d.keys[i]);
+        d.values = idx.iter().map(|&i| d.values[i]).collect();
+        // nearer Gaussian (index 1) sorts first within the tile
+        assert_eq!(d.values, vec![1, 0]);
+    }
+
+    #[test]
+    fn offscreen_emits_nothing() {
+        let grid = TileGrid::new(640, 480);
+        let p = projected_one(Vec2::new(-100.0, -100.0), 5.0, 1.0);
+        assert!(duplicate(&p, &grid).is_empty());
+    }
+}

@@ -1,0 +1,30 @@
+//! The 3DGS render pipeline substrate — the four stages of Figure 2:
+//! preprocessing, duplication, sorting, blending — plus the GEMM-GS
+//! blending variant (Algorithm 2) and the frame-level orchestrator.
+
+pub mod blend_gemm;
+pub mod blend_vanilla;
+pub mod duplicate;
+pub mod preprocess;
+pub mod render;
+pub mod sort;
+pub mod tile;
+
+pub use preprocess::{preprocess, Projected, PreprocessConfig};
+pub use render::{render_frame, Blender, RenderConfig, RenderOutput, StageTimings};
+pub use tile::TileGrid;
+
+/// Tile edge in pixels — 16×16 tiles, as in the official rasterizer and
+/// throughout the paper.
+pub const TILE_SIZE: usize = 16;
+/// Pixels per tile (= threads per block in the CUDA original).
+pub const TILE_PIXELS: usize = TILE_SIZE * TILE_SIZE;
+/// Default Gaussian batch size per blending iteration (paper §3.3).
+pub const DEFAULT_BATCH: usize = 256;
+
+/// α-skipping threshold from the official implementation (1/255).
+pub const ALPHA_SKIP: f32 = 1.0 / 255.0;
+/// α ceiling (numerical guard in the official implementation).
+pub const ALPHA_MAX: f32 = 0.99;
+/// Early-termination transmittance threshold.
+pub const T_EPS: f32 = 1e-4;

@@ -1,0 +1,270 @@
+//! Stage 1 — preprocessing (Figure 2b): frustum culling, EWA projection
+//! of 3D Gaussians to screen-space ellipses (2D covariance → conic),
+//! splat radius, depth, and SH → RGB colour decode.
+//!
+//! Follows the official 3DGS `preprocessCUDA` numerics: the 0.3 low-pass
+//! on the 2D covariance diagonal, the 1.3 frustum guard, and the
+//! 3σ radius from the larger covariance eigenvalue.
+
+use crate::math::{sh, Camera, Mat2, Mat3, Vec2, Vec3};
+use crate::scene::gaussian::GaussianCloud;
+
+/// Preprocessing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PreprocessConfig {
+    /// Low-pass filter added to the 2D covariance diagonal (official: 0.3).
+    pub lowpass: f32,
+    /// Frustum guard multiplier for clamping the Jacobian (official: 1.3).
+    pub frustum_guard: f32,
+    /// Near-plane cull distance (official: 0.2).
+    pub near: f32,
+}
+
+impl Default for PreprocessConfig {
+    fn default() -> Self {
+        PreprocessConfig { lowpass: 0.3, frustum_guard: 1.3, near: 0.2 }
+    }
+}
+
+/// Projected (visible) Gaussians — structure-of-arrays, only survivors of
+/// culling are stored; `source` maps back into the cloud.
+#[derive(Debug, Clone, Default)]
+pub struct Projected {
+    /// Screen-space centres in pixels.
+    pub means2d: Vec<Vec2>,
+    /// Conic = inverse 2D covariance, `[A, B, C]` with
+    /// `power = -½A·Δx² − B·Δx·Δy − ½C·Δy²` (paper Eq. 3).
+    pub conics: Vec<[f32; 3]>,
+    /// Camera-space depth (sort key).
+    pub depths: Vec<f32>,
+    /// Splat radius in pixels (3σ).
+    pub radii: Vec<f32>,
+    /// Decoded RGB colour.
+    pub colors: Vec<Vec3>,
+    /// Opacity `o_i`.
+    pub opacities: Vec<f32>,
+    /// Index of the source Gaussian in the cloud.
+    pub source: Vec<u32>,
+}
+
+impl Projected {
+    /// Number of visible Gaussians.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.means2d.len()
+    }
+
+    /// True when no Gaussian survived culling.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.means2d.is_empty()
+    }
+}
+
+/// 3D covariance `R S Sᵀ Rᵀ` of one Gaussian.
+pub fn covariance3d(scale: Vec3, rot: crate::math::Quat) -> Mat3 {
+    let r = rot.to_mat3();
+    let m = r.mul(&Mat3::diag(scale));
+    m.mul(&m.transpose())
+}
+
+/// EWA-project a 3D covariance to the 2D screen covariance
+/// `J W Σ Wᵀ Jᵀ` (+ low-pass), where `W` is the view rotation and `J`
+/// the perspective Jacobian at the (frustum-clamped) camera-space mean.
+pub fn project_covariance(
+    cov3d: &Mat3,
+    cam_pos: Vec3, // camera-space mean
+    camera: &Camera,
+    cfg: &PreprocessConfig,
+) -> Mat2 {
+    let (fx, fy) = (camera.focal_x(), camera.focal_y());
+    let limx = cfg.frustum_guard * camera.tan_fovx;
+    let limy = cfg.frustum_guard * camera.tan_fovy;
+    let txz = (cam_pos.x / cam_pos.z).clamp(-limx, limx);
+    let tyz = (cam_pos.y / cam_pos.z).clamp(-limy, limy);
+    let (tx, ty, tz) = (txz * cam_pos.z, tyz * cam_pos.z, cam_pos.z);
+
+    let j = Mat3::from_rows(
+        [fx / tz, 0.0, -fx * tx / (tz * tz)],
+        [0.0, fy / tz, -fy * ty / (tz * tz)],
+        [0.0, 0.0, 0.0],
+    );
+    let w = camera.view.upper3();
+    let t = j.mul(&w);
+    let mut cov2d = t.sandwich_upper2(cov3d);
+    // low-pass: guarantees splats cover ≥ ~1px so nothing vanishes
+    cov2d.m[0] += cfg.lowpass;
+    cov2d.m[3] += cfg.lowpass;
+    cov2d
+}
+
+/// Run preprocessing over a cloud for one camera.
+pub fn preprocess(cloud: &GaussianCloud, camera: &Camera, cfg: &PreprocessConfig) -> Projected {
+    let mut out = Projected::default();
+    let n = cloud.len();
+    out.means2d.reserve(n);
+    out.conics.reserve(n);
+    out.depths.reserve(n);
+    out.radii.reserve(n);
+    out.colors.reserve(n);
+    out.opacities.reserve(n);
+    out.source.reserve(n);
+
+    let cam_origin = camera.position();
+    for i in 0..n {
+        let pos = cloud.positions[i];
+        let cam = camera.to_camera(pos);
+        if cam.z < cfg.near {
+            continue; // behind near plane
+        }
+        let Some((px, py, depth)) = camera.project_point(pos) else {
+            continue;
+        };
+
+        let cov3d = covariance3d(cloud.scales[i], cloud.rotations[i]);
+        let cov2d = project_covariance(&cov3d, cam, camera, cfg);
+        let det = cov2d.det();
+        if det <= 0.0 {
+            continue;
+        }
+        let Some(inv) = cov2d.inverse() else { continue };
+        // conic [A, B, C]: A = inv(0,0), B = inv(0,1), C = inv(1,1)
+        let conic = [inv.at(0, 0), inv.at(0, 1), inv.at(1, 1)];
+
+        // 3σ radius from the larger eigenvalue (official: ceil(3·sqrt(λmax)))
+        let (l1, _) = cov2d.sym_eigenvalues();
+        let radius = (3.0 * l1.max(0.0).sqrt()).ceil();
+        if radius <= 0.0 {
+            continue;
+        }
+        // off-screen cull (with radius margin)
+        if px + radius < 0.0
+            || px - radius > camera.width as f32
+            || py + radius < 0.0
+            || py - radius > camera.height as f32
+        {
+            continue;
+        }
+
+        let dir = (pos - cam_origin).normalized();
+        let color = sh::eval_color(cloud.sh_degree, dir, cloud.sh_of(i));
+
+        out.means2d.push(Vec2::new(px, py));
+        out.conics.push(conic);
+        out.depths.push(depth);
+        out.radii.push(radius);
+        out.colors.push(color);
+        out.opacities.push(cloud.opacities[i]);
+        out.source.push(i as u32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Quat;
+
+    fn cam() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, -5.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            640,
+            480,
+        )
+    }
+
+    fn one_gaussian_cloud(pos: Vec3, scale: Vec3) -> GaussianCloud {
+        let mut c = GaussianCloud::with_capacity(1, 0);
+        c.push(pos, scale, Quat::IDENTITY, 0.8, &[[0.5, 0.5, 0.5]]);
+        c
+    }
+
+    #[test]
+    fn cov3d_isotropic_is_diagonal() {
+        let cov = covariance3d(Vec3::splat(2.0), Quat::IDENTITY);
+        for r in 0..3 {
+            for c in 0..3 {
+                let expect = if r == c { 4.0 } else { 0.0 };
+                assert!((cov.at(r, c) - expect).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn cov3d_rotation_invariant_for_isotropic() {
+        let q = Quat::new(0.3, 0.5, -0.2, 0.7).normalized();
+        let cov = covariance3d(Vec3::splat(1.5), q);
+        for r in 0..3 {
+            for c in 0..3 {
+                let expect = if r == c { 2.25 } else { 0.0 };
+                assert!((cov.at(r, c) - expect).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn visible_gaussian_projected() {
+        let cloud = one_gaussian_cloud(Vec3::ZERO, Vec3::splat(0.1));
+        let p = preprocess(&cloud, &cam(), &PreprocessConfig::default());
+        assert_eq!(p.len(), 1);
+        assert!((p.means2d[0].x - 319.5).abs() < 0.5);
+        assert!((p.depths[0] - 5.0).abs() < 1e-3);
+        assert!(p.radii[0] >= 1.0);
+        assert_eq!(p.source[0], 0);
+    }
+
+    #[test]
+    fn behind_camera_culled() {
+        let cloud = one_gaussian_cloud(Vec3::new(0.0, 0.0, -10.0), Vec3::splat(0.1));
+        let p = preprocess(&cloud, &cam(), &PreprocessConfig::default());
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn far_offscreen_culled() {
+        let cloud = one_gaussian_cloud(Vec3::new(500.0, 0.0, 1.0), Vec3::splat(0.1));
+        let p = preprocess(&cloud, &cam(), &PreprocessConfig::default());
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn conic_is_spd() {
+        let cloud = one_gaussian_cloud(Vec3::new(0.3, -0.2, 0.0), Vec3::new(0.3, 0.05, 0.1));
+        let p = preprocess(&cloud, &cam(), &PreprocessConfig::default());
+        assert_eq!(p.len(), 1);
+        let [a, b, c] = p.conics[0];
+        assert!(a > 0.0 && c > 0.0 && a * c - b * b > 0.0, "conic not SPD: {a} {b} {c}");
+    }
+
+    #[test]
+    fn bigger_scale_bigger_radius() {
+        let small = one_gaussian_cloud(Vec3::ZERO, Vec3::splat(0.05));
+        let large = one_gaussian_cloud(Vec3::ZERO, Vec3::splat(0.5));
+        let cfg = PreprocessConfig::default();
+        let rs = preprocess(&small, &cam(), &cfg).radii[0];
+        let rl = preprocess(&large, &cam(), &cfg).radii[0];
+        assert!(rl > rs);
+    }
+
+    #[test]
+    fn closer_gaussian_bigger_radius() {
+        let near = one_gaussian_cloud(Vec3::new(0.0, 0.0, -2.0), Vec3::splat(0.2));
+        let far = one_gaussian_cloud(Vec3::new(0.0, 0.0, 3.0), Vec3::splat(0.2));
+        let cfg = PreprocessConfig::default();
+        let rn = preprocess(&near, &cam(), &cfg).radii[0];
+        let rf = preprocess(&far, &cam(), &cfg).radii[0];
+        assert!(rn > rf, "near={rn} far={rf}");
+    }
+
+    #[test]
+    fn lowpass_guarantees_min_radius() {
+        // a degenerate, nearly-zero-scale Gaussian still gets ≥1px radius
+        let cloud = one_gaussian_cloud(Vec3::ZERO, Vec3::splat(1e-5));
+        let p = preprocess(&cloud, &cam(), &PreprocessConfig::default());
+        assert_eq!(p.len(), 1);
+        assert!(p.radii[0] >= 1.0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Tile grid geometry: the 2D screen is divided into `TILE_SIZE`² tiles;
+//! duplication assigns each projected Gaussian to the tiles its 3σ splat
+//! rectangle touches.
+
+use super::TILE_SIZE;
+use crate::math::Vec2;
+
+/// The tile decomposition of one render target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGrid {
+    /// Image width in pixels.
+    pub width: u32,
+    /// Image height in pixels.
+    pub height: u32,
+    /// Number of tile columns.
+    pub tiles_x: u32,
+    /// Number of tile rows.
+    pub tiles_y: u32,
+}
+
+impl TileGrid {
+    /// Grid for a `width`×`height` image.
+    pub fn new(width: u32, height: u32) -> Self {
+        let ts = TILE_SIZE as u32;
+        TileGrid {
+            width,
+            height,
+            tiles_x: (width + ts - 1) / ts,
+            tiles_y: (height + ts - 1) / ts,
+        }
+    }
+
+    /// Total number of tiles.
+    #[inline]
+    pub fn num_tiles(&self) -> usize {
+        (self.tiles_x * self.tiles_y) as usize
+    }
+
+    /// Tile index for tile coordinates `(tx, ty)`.
+    #[inline]
+    pub fn tile_id(&self, tx: u32, ty: u32) -> u32 {
+        ty * self.tiles_x + tx
+    }
+
+    /// Inverse of [`tile_id`](Self::tile_id).
+    #[inline]
+    pub fn tile_coords(&self, id: u32) -> (u32, u32) {
+        (id % self.tiles_x, id / self.tiles_x)
+    }
+
+    /// Pixel coordinates of a tile's origin (top-left pixel).
+    #[inline]
+    pub fn tile_origin(&self, id: u32) -> (u32, u32) {
+        let (tx, ty) = self.tile_coords(id);
+        (tx * TILE_SIZE as u32, ty * TILE_SIZE as u32)
+    }
+
+    /// Inclusive-exclusive tile rectangle `[x0, x1) × [y0, y1)` covered by
+    /// a splat at `center` with `radius` (pixels). Clamped to the grid;
+    /// an empty range means the splat is off-screen. Mirrors the official
+    /// `getRect`.
+    pub fn tile_rect(&self, center: Vec2, radius: f32) -> (u32, u32, u32, u32) {
+        let ts = TILE_SIZE as f32;
+        let x0 = ((center.x - radius) / ts).floor().max(0.0) as u32;
+        let y0 = ((center.y - radius) / ts).floor().max(0.0) as u32;
+        let x1 = (((center.x + radius) / ts).floor() as i64 + 1)
+            .clamp(0, self.tiles_x as i64) as u32;
+        let y1 = (((center.y + radius) / ts).floor() as i64 + 1)
+            .clamp(0, self.tiles_y as i64) as u32;
+        (x0.min(self.tiles_x), x1, y0.min(self.tiles_y), y1)
+    }
+
+    /// Number of tiles in a rect returned by [`tile_rect`](Self::tile_rect).
+    pub fn rect_count(&self, rect: (u32, u32, u32, u32)) -> usize {
+        let (x0, x1, y0, y1) = rect;
+        (x1.saturating_sub(x0) as usize) * (y1.saturating_sub(y0) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_dimensions() {
+        let g = TileGrid::new(980, 545);
+        assert_eq!(g.tiles_x, 62); // ceil(980/16) = 61.25 → 62
+        assert_eq!(g.tiles_y, 35); // ceil(545/16) = 34.06 → 35
+        assert_eq!(g.num_tiles(), 62 * 35);
+    }
+
+    #[test]
+    fn tile_id_roundtrip() {
+        let g = TileGrid::new(640, 480);
+        for id in [0u32, 1, 39, 40, 1199] {
+            let (tx, ty) = g.tile_coords(id);
+            assert_eq!(g.tile_id(tx, ty), id);
+        }
+    }
+
+    #[test]
+    fn origin_of_second_row() {
+        let g = TileGrid::new(640, 480); // 40 tiles per row
+        assert_eq!(g.tile_origin(40), (0, 16));
+        assert_eq!(g.tile_origin(41), (16, 16));
+    }
+
+    #[test]
+    fn rect_for_central_splat() {
+        let g = TileGrid::new(640, 480);
+        // splat centred at (100, 100) with radius 20 → pixels [80,120]
+        // → tiles x: 5..=7, y: 5..=7
+        let r = g.tile_rect(Vec2::new(100.0, 100.0), 20.0);
+        assert_eq!(r, (5, 8, 5, 8));
+        assert_eq!(g.rect_count(r), 9);
+    }
+
+    #[test]
+    fn rect_clamped_at_borders() {
+        let g = TileGrid::new(640, 480);
+        let r = g.tile_rect(Vec2::new(0.0, 0.0), 50.0);
+        assert_eq!(r.0, 0);
+        assert_eq!(r.2, 0);
+        // fully off-screen splat → empty
+        let r = g.tile_rect(Vec2::new(-500.0, 240.0), 10.0);
+        assert_eq!(g.rect_count(r), 0);
+        let r = g.tile_rect(Vec2::new(10_000.0, 240.0), 10.0);
+        assert_eq!(g.rect_count(r), 0);
+    }
+
+    #[test]
+    fn tiny_splat_single_tile() {
+        let g = TileGrid::new(640, 480);
+        let r = g.tile_rect(Vec2::new(8.0, 8.0), 1.0);
+        assert_eq!(r, (0, 1, 0, 1));
+        assert_eq!(g.rect_count(r), 1);
+    }
+}

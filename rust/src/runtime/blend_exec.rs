@@ -1,0 +1,289 @@
+//! The artifact-backed tile blender: implements [`TileBlend`] by driving
+//! the AOT-compiled Pallas blending kernel through PJRT, carrying the
+//! per-pixel (C, T, done) state across 256-Gaussian batches exactly like
+//! the native `GemmBlender` — this is the production request path
+//! (Figure 4's pipeline with the GEMM on the accelerator).
+
+use super::client::RuntimeClient;
+use crate::pipeline::preprocess::Projected;
+use crate::pipeline::render::TileBlend;
+use crate::pipeline::TILE_PIXELS;
+use anyhow::Result;
+
+/// Which blending artifact to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlendEntry {
+    /// Algorithm 2, f32 GEMM (`gemm_blend_b256_p256`).
+    Gemm,
+    /// Algorithm 2, bf16 GEMM operands (`gemm_blend_b256_p256_bf16`).
+    GemmBf16,
+    /// Algorithm 1 baseline (`vanilla_blend_b256_p256`).
+    Vanilla,
+}
+
+impl BlendEntry {
+    /// Manifest entry name.
+    pub fn entry_name(self) -> &'static str {
+        match self {
+            BlendEntry::Gemm => "gemm_blend_b256_p256",
+            BlendEntry::GemmBf16 => "gemm_blend_b256_p256_bf16",
+            BlendEntry::Vanilla => "vanilla_blend_b256_p256",
+        }
+    }
+
+    /// Whether the entry consumes the precomputed `M_p` input.
+    fn takes_mp(self) -> bool {
+        !matches!(self, BlendEntry::Vanilla)
+    }
+}
+
+/// PJRT-backed [`TileBlend`] implementation.
+pub struct ArtifactBlender {
+    client: RuntimeClient,
+    entry: BlendEntry,
+    batch: usize,
+    /// `M_p` copied out of the manifest once (borrow-friendly hot loop).
+    mp: Vec<f32>,
+    // staging buffers, reused across batches/tiles (allocation-free loop)
+    conics: Vec<f32>,
+    offsets: Vec<f32>,
+    opac: Vec<f32>,
+    colors: Vec<f32>,
+    c_state: Vec<f32>,
+    t_state: Vec<f32>,
+    done_state: Vec<f32>,
+    last_t: Vec<f32>,
+    /// PJRT executions issued (for harness reporting).
+    pub calls: u64,
+}
+
+impl ArtifactBlender {
+    /// Build over `client`, executing `entry`.
+    pub fn new(client: RuntimeClient, entry: BlendEntry) -> Result<Self> {
+        let batch = client.manifest().batch;
+        let pixels = client.manifest().pixels;
+        anyhow::ensure!(pixels == TILE_PIXELS, "artifact pixels {pixels} != {TILE_PIXELS}");
+        let mp = client.manifest().mp.clone();
+        let mut s = ArtifactBlender {
+            client,
+            entry,
+            batch,
+            mp,
+            conics: vec![0.0; 256 * 3],
+            offsets: vec![0.0; 256 * 2],
+            opac: vec![0.0; 256],
+            colors: vec![0.0; 256 * 3],
+            c_state: vec![0.0; TILE_PIXELS * 3],
+            t_state: vec![1.0; TILE_PIXELS],
+            done_state: vec![0.0; TILE_PIXELS],
+            last_t: vec![1.0; TILE_PIXELS],
+            calls: 0,
+        };
+        s.conics.resize(s.batch * 3, 0.0);
+        s.offsets.resize(s.batch * 2, 0.0);
+        s.opac.resize(s.batch, 0.0);
+        s.colors.resize(s.batch * 3, 0.0);
+        // compile eagerly so the first request doesn't pay it
+        s.client.executable(entry.entry_name())?;
+        Ok(s)
+    }
+
+    /// From the default artifacts directory.
+    pub fn from_default_dir(entry: BlendEntry) -> Result<Self> {
+        Self::new(RuntimeClient::from_default_dir()?, entry)
+    }
+
+    /// The underlying client (for inspection).
+    pub fn client(&self) -> &RuntimeClient {
+        &self.client
+    }
+}
+
+impl TileBlend for ArtifactBlender {
+    fn name(&self) -> &'static str {
+        match self.entry {
+            BlendEntry::Gemm => "gemm-gs/pjrt",
+            BlendEntry::GemmBf16 => "gemm-gs-bf16/pjrt",
+            BlendEntry::Vanilla => "vanilla/pjrt",
+        }
+    }
+
+    fn blend_tile(
+        &mut self,
+        origin: (u32, u32),
+        projected: &Projected,
+        indices: &[u32],
+        out: &mut [[f32; 3]],
+    ) {
+        let (x0, y0) = (origin.0 as f32, origin.1 as f32);
+        let b = self.batch;
+        self.c_state.iter_mut().for_each(|v| *v = 0.0);
+        self.t_state.iter_mut().for_each(|v| *v = 1.0);
+        self.done_state.iter_mut().for_each(|v| *v = 0.0);
+
+        for chunk in indices.chunks(b) {
+            // Stage 1-2: stage the batch (opacity-0 padding rows are
+            // no-ops by construction: alpha < 1/255 is skipped)
+            self.opac.iter_mut().for_each(|v| *v = 0.0);
+            for (r, &gi) in chunk.iter().enumerate() {
+                let g = gi as usize;
+                let cn = projected.conics[g];
+                self.conics[r * 3] = cn[0];
+                self.conics[r * 3 + 1] = cn[1];
+                self.conics[r * 3 + 2] = cn[2];
+                let m = projected.means2d[g];
+                self.offsets[r * 2] = m.x - x0;
+                self.offsets[r * 2 + 1] = m.y - y0;
+                self.opac[r] = projected.opacities[g];
+                let c = projected.colors[g];
+                self.colors[r * 3] = c.x;
+                self.colors[r * 3 + 1] = c.y;
+                self.colors[r * 3 + 2] = c.z;
+            }
+
+            // Stage 3: the AOT kernel (GEMM + volume render) via PJRT
+            let dims_b3 = [b as i64, 3];
+            let dims_b2 = [b as i64, 2];
+            let dims_b = [b as i64];
+            let dims_mp = [8, TILE_PIXELS as i64];
+            let dims_p3 = [TILE_PIXELS as i64, 3];
+            let dims_p = [TILE_PIXELS as i64];
+            let mut inputs: Vec<(&[f32], &[i64])> = vec![
+                (&self.conics, &dims_b3[..]),
+                (&self.offsets, &dims_b2[..]),
+                (&self.opac, &dims_b[..]),
+                (&self.colors, &dims_b3[..]),
+            ];
+            if self.entry.takes_mp() {
+                inputs.push((&self.mp, &dims_mp[..]));
+            }
+            inputs.push((&self.c_state, &dims_p3[..]));
+            inputs.push((&self.t_state, &dims_p[..]));
+            inputs.push((&self.done_state, &dims_p[..]));
+
+            let outs = self
+                .client
+                .run_f32(self.entry.entry_name(), &inputs)
+                .expect("artifact blend execution failed");
+            self.calls += 1;
+            self.c_state.copy_from_slice(&outs[0]);
+            self.t_state.copy_from_slice(&outs[1]);
+            self.done_state.copy_from_slice(&outs[2]);
+
+            // early exit once every pixel terminated
+            if self.done_state.iter().all(|&d| d > 0.5) {
+                break;
+            }
+        }
+
+        for j in 0..TILE_PIXELS {
+            out[j] = [
+                self.c_state[j * 3],
+                self.c_state[j * 3 + 1],
+                self.c_state[j * 3 + 2],
+            ];
+        }
+        self.last_t.copy_from_slice(&self.t_state);
+    }
+
+    fn last_transmittance(&self) -> &[f32] {
+        &self.last_t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Vec2, Vec3};
+    use crate::pipeline::blend_gemm::GemmBlender;
+    use crate::runtime::artifacts_available;
+    use crate::scene::rng::Rng;
+
+    fn random_projected(rng: &mut Rng, n: usize) -> Projected {
+        let mut p = Projected::default();
+        for i in 0..n {
+            let a = rng.range(0.02, 1.5);
+            let c = rng.range(0.02, 1.5);
+            let b = rng.range(-0.9, 0.9) * (a * c).sqrt();
+            p.means2d.push(Vec2::new(rng.range(-8.0, 24.0), rng.range(-8.0, 24.0)));
+            p.conics.push([a, b, c]);
+            p.depths.push(rng.range(0.5, 20.0));
+            p.radii.push(10.0);
+            p.colors.push(Vec3::new(rng.f32(), rng.f32(), rng.f32()));
+            p.opacities.push(rng.range(0.05, 0.99));
+            p.source.push(i as u32);
+        }
+        p
+    }
+
+    /// §4 invariant 2, Rust ↔ AOT-artifact: the PJRT-executed Pallas
+    /// kernel must match the native Rust micro-GEMM blender.
+    #[test]
+    fn artifact_matches_native_gemm() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rng = Rng::new(2025);
+        let p = random_projected(&mut rng, 300);
+        let idx: Vec<u32> = (0..300).collect();
+
+        let mut native = GemmBlender::default();
+        let mut out_n = [[0.0f32; 3]; TILE_PIXELS];
+        native.blend_tile((0, 0), &p, &idx, &mut out_n);
+
+        let mut artifact = ArtifactBlender::from_default_dir(BlendEntry::Gemm).unwrap();
+        let mut out_a = [[0.0f32; 3]; TILE_PIXELS];
+        artifact.blend_tile((0, 0), &p, &idx, &mut out_a);
+        assert_eq!(artifact.calls, 2); // 300 gaussians → 2 batches
+
+        for j in 0..TILE_PIXELS {
+            for ch in 0..3 {
+                assert!(
+                    (out_n[j][ch] - out_a[j][ch]).abs() < 2e-3,
+                    "pixel {j} ch {ch}: native {} vs artifact {}",
+                    out_n[j][ch],
+                    out_a[j][ch]
+                );
+            }
+        }
+        for (a, b) in native.last_transmittance().iter().zip(artifact.last_transmittance()) {
+            assert!((a - b).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn vanilla_artifact_matches_native_too() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut rng = Rng::new(77);
+        let p = random_projected(&mut rng, 128);
+        let idx: Vec<u32> = (0..128).collect();
+        let mut native = GemmBlender::default();
+        let mut out_n = [[0.0f32; 3]; TILE_PIXELS];
+        native.blend_tile((16, 32), &p, &idx, &mut out_n);
+        let mut artifact = ArtifactBlender::from_default_dir(BlendEntry::Vanilla).unwrap();
+        let mut out_a = [[0.0f32; 3]; TILE_PIXELS];
+        artifact.blend_tile((16, 32), &p, &idx, &mut out_a);
+        for j in 0..TILE_PIXELS {
+            for ch in 0..3 {
+                assert!((out_n[j][ch] - out_a[j][ch]).abs() < 2e-3, "pixel {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_tile_is_identity() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut artifact = ArtifactBlender::from_default_dir(BlendEntry::Gemm).unwrap();
+        let p = Projected::default();
+        let mut out = [[9.0f32; 3]; TILE_PIXELS];
+        artifact.blend_tile((0, 0), &p, &[], &mut out);
+        assert!(out.iter().all(|px| px == &[0.0; 3]));
+        assert_eq!(artifact.calls, 0);
+        assert!(artifact.last_transmittance().iter().all(|&t| t == 1.0));
+    }
+}

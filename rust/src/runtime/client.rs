@@ -1,0 +1,139 @@
+//! The PJRT client wrapper: owns the CPU PJRT client, loads HLO-text
+//! artifacts, and caches compiled executables by entry name (one compile
+//! per process per entry — compilation is milliseconds-to-seconds, the
+//! request path must never pay it twice).
+
+use super::manifest::Manifest;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Compiled-artifact cache over one PJRT client.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl RuntimeClient {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(RuntimeClient { client, manifest, executables: HashMap::new() })
+    }
+
+    /// Create from the default artifacts directory.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(&super::default_artifacts_dir())
+    }
+
+    /// The manifest (shapes, `M_p`, entry list).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name ("cpu" here; "cuda"/"tpu" with other plugins).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an entry point.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let entry = self.manifest.entry(name).map_err(|e| anyhow!(e))?;
+            let path = entry.file.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile entry '{name}'"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute an entry with f32 tensors, returning flattened f32 outputs.
+    ///
+    /// `inputs` are `(data, dims)` pairs; outputs are the elements of the
+    /// module's result tuple, flattened.
+    pub fn run_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let expected: i64 = dims.iter().product();
+            if expected as usize != data.len() {
+                return Err(anyhow!(
+                    "entry '{name}': input length {} != shape {:?}",
+                    data.len(),
+                    dims
+                ));
+            }
+            literals.push(if dims.len() == 1 { lit } else { lit.reshape(dims)? });
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Number of compiled entries resident in the cache.
+    pub fn cached_count(&self) -> usize {
+        self.executables.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    #[test]
+    fn client_loads_and_compiles() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rc = RuntimeClient::new(&default_artifacts_dir()).unwrap();
+        assert_eq!(rc.platform(), "cpu");
+        assert_eq!(rc.cached_count(), 0);
+        rc.executable("gemm_blend_b256_p256").unwrap();
+        assert_eq!(rc.cached_count(), 1);
+        // second fetch hits the cache (no recompilation)
+        rc.executable("gemm_blend_b256_p256").unwrap();
+        assert_eq!(rc.cached_count(), 1);
+    }
+
+    #[test]
+    fn unknown_entry_errors() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut rc = RuntimeClient::new(&default_artifacts_dir()).unwrap();
+        assert!(rc.executable("no_such_entry").is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut rc = RuntimeClient::new(&default_artifacts_dir()).unwrap();
+        let bad = vec![0.0f32; 10];
+        let err = rc.run_f32("gemm_blend_b256_p256", &[(&bad, &[256, 3])]);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! The artifact manifest: entry-point metadata emitted by `aot.py`
+//! (shapes, dtypes, file names, hashes) plus the precomputed `M_p`.
+
+use super::json::{parse, Json};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One input tensor's metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub tile_size: usize,
+    pub pixels: usize,
+    pub batch: usize,
+    pub scan_batches: usize,
+    pub preprocess_chunk: usize,
+    pub gemm_k: usize,
+    /// The precomputed pixel matrix `M_p`, row-major `[gemm_k][pixels]`.
+    pub mp: Vec<f32>,
+    pub entries: HashMap<String, EntryMeta>,
+    /// Directory the artifact files live in.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse_str(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse_str(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let v = parse(text)?;
+        let field = |k: &str| -> Result<usize, String> {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| format!("missing '{k}'"))
+        };
+        let mp: Vec<f32> = v
+            .get("mp")
+            .and_then(Json::as_arr)
+            .ok_or("missing 'mp'")?
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0) as f32)
+            .collect();
+        let mut entries = HashMap::new();
+        for (name, e) in v.get("entries").and_then(Json::as_obj).ok_or("missing 'entries'")? {
+            let file = e.get("file").and_then(Json::as_str).ok_or("entry missing 'file'")?;
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or("entry missing 'inputs'")?
+                .iter()
+                .map(|t| {
+                    let shape = t
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default();
+                    let dtype =
+                        t.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string();
+                    TensorMeta { shape, dtype }
+                })
+                .collect();
+            entries.insert(
+                name.clone(),
+                EntryMeta {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs,
+                    sha256: e
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                },
+            );
+        }
+        let m = Manifest {
+            tile_size: field("tile_size")?,
+            pixels: field("pixels")?,
+            batch: field("batch")?,
+            scan_batches: field("scan_batches")?,
+            preprocess_chunk: field("preprocess_chunk")?,
+            gemm_k: field("gemm_k")?,
+            mp,
+            entries,
+            dir: dir.to_path_buf(),
+        };
+        if m.mp.len() != m.gemm_k * m.pixels {
+            return Err(format!(
+                "mp length {} != gemm_k*pixels {}",
+                m.mp.len(),
+                m.gemm_k * m.pixels
+            ));
+        }
+        Ok(m)
+    }
+
+    /// Entry metadata by name.
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta, String> {
+        self.entries.get(name).ok_or_else(|| format!("no entry '{name}' in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::mp::default_mp;
+
+    fn fake_manifest_json() -> String {
+        let mp: Vec<String> = default_mp().data.iter().map(|v| format!("{v}")).collect();
+        format!(
+            r#"{{"tile_size": 16, "pixels": 256, "batch": 256,
+                "scan_batches": 4, "preprocess_chunk": 4096, "gemm_k": 8,
+                "mp": [{}],
+                "entries": {{"gemm_blend_b256_p256": {{
+                    "file": "gemm_blend_b256_p256.hlo.txt",
+                    "inputs": [{{"shape": [256, 3], "dtype": "float32"}}],
+                    "sha256": "abc", "bytes": 100}}}}}}"#,
+            mp.join(",")
+        )
+    }
+
+    #[test]
+    fn parses_fake_manifest() {
+        let m = Manifest::parse_str(&fake_manifest_json(), Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.tile_size, 16);
+        assert_eq!(m.mp.len(), 8 * 256);
+        let e = m.entry("gemm_blend_b256_p256").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![256, 3]);
+        assert_eq!(e.inputs[0].elements(), 768);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn manifest_mp_matches_native_mp() {
+        // the M_p shipped in the manifest must equal the Rust construction
+        let m = Manifest::parse_str(&fake_manifest_json(), Path::new("/tmp/a")).unwrap();
+        let native = default_mp();
+        assert_eq!(m.mp, native.data);
+    }
+
+    #[test]
+    fn rejects_bad_mp_length() {
+        let doc = r#"{"tile_size": 16, "pixels": 256, "batch": 256,
+            "scan_batches": 4, "preprocess_chunk": 4096, "gemm_k": 8,
+            "mp": [1.0], "entries": {}}"#;
+        assert!(Manifest::parse_str(doc, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.tile_size, 16);
+        assert_eq!(m.mp, default_mp().data, "python/rust M_p mismatch");
+        for name in [
+            "gemm_blend_b256_p256",
+            "vanilla_blend_b256_p256",
+            "gemm_blend_scan4_p256",
+            "preprocess_c4096",
+        ] {
+            let e = m.entry(name).unwrap();
+            assert!(e.file.exists(), "{} missing", e.file.display());
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! The PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text** — see that file for why text,
+//! not serialized protos) and executes them from the Rust request path.
+//!
+//! Python never runs here: after `make artifacts` the Rust binary is
+//! self-contained. Wiring follows /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` (cached) → `execute`.
+
+pub mod blend_exec;
+pub mod client;
+pub mod json;
+pub mod manifest;
+pub mod preprocess_exec;
+pub mod tiled_render;
+
+pub use blend_exec::ArtifactBlender;
+pub use client::RuntimeClient;
+pub use manifest::Manifest;
+
+/// Default artifacts directory, relative to the crate root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // CARGO_MANIFEST_DIR for tests/examples; cwd fallback for deployment
+    let candidates = [
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        std::path::PathBuf::from("artifacts"),
+    ];
+    for c in &candidates {
+        if c.join("manifest.json").exists() {
+            return c.clone();
+        }
+    }
+    candidates[0].clone()
+}
+
+/// True when `make artifacts` has been run (used by tests to skip
+/// gracefully instead of failing when artifacts are absent).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

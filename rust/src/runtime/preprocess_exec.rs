@@ -1,0 +1,173 @@
+//! Artifact-backed preprocessing: runs the AOT `preprocess_c4096` entry
+//! (the L2 JAX projection graph) over fixed-size chunks of the cloud and
+//! assembles a [`Projected`] — the accelerator-resident alternative to
+//! the native `pipeline::preprocess`, and the cross-language witness
+//! that the two implementations agree (§4 invariant 5).
+
+use super::client::RuntimeClient;
+use crate::math::{Camera, Vec2, Vec3};
+use crate::pipeline::preprocess::{Projected, PreprocessConfig};
+use crate::scene::gaussian::GaussianCloud;
+use anyhow::{ensure, Result};
+
+/// Row-major flattening of a column-major `Mat4`.
+fn mat4_row_major(m: &crate::math::Mat4) -> [f32; 16] {
+    let mut out = [0.0f32; 16];
+    for r in 0..4 {
+        for c in 0..4 {
+            out[r * 4 + c] = m.at(r, c);
+        }
+    }
+    out
+}
+
+/// Execute the preprocessing artifact over the whole cloud.
+pub fn preprocess_artifact(
+    client: &mut RuntimeClient,
+    cloud: &GaussianCloud,
+    camera: &Camera,
+    cfg: &PreprocessConfig,
+) -> Result<Projected> {
+    ensure!(cloud.sh_degree == 3, "preprocess artifact expects SH degree 3");
+    let chunk = client.manifest().preprocess_chunk;
+    let n = cloud.len();
+    let view = mat4_row_major(&camera.view);
+    let proj = mat4_row_major(&camera.proj);
+    let pos = camera.position();
+    let cam_params = [
+        camera.focal_x(),
+        camera.focal_y(),
+        camera.tan_fovx,
+        camera.tan_fovy,
+        camera.width as f32,
+        camera.height as f32,
+        cfg.near,
+        cfg.lowpass,
+        cfg.frustum_guard,
+        pos.x,
+        pos.y,
+        pos.z,
+    ];
+
+    let mut out = Projected::default();
+    let mut means = vec![0.0f32; chunk * 3];
+    let mut scales = vec![0.0f32; chunk * 3];
+    let mut quats = vec![0.0f32; chunk * 4];
+    let mut sh = vec![0.0f32; chunk * 16 * 3];
+
+    let ci = chunk as i64;
+    for start in (0..n).step_by(chunk) {
+        let end = (start + chunk).min(n);
+        let m = end - start;
+        // zero-pad the tail chunk; padded rows project behind the near
+        // plane (z=0 < near) and come back invalid
+        means.iter_mut().for_each(|v| *v = 0.0);
+        scales.iter_mut().for_each(|v| *v = 1.0);
+        quats.iter_mut().for_each(|v| *v = 0.0);
+        sh.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..m {
+            let g = start + i;
+            let p = cloud.positions[g];
+            means[i * 3] = p.x;
+            means[i * 3 + 1] = p.y;
+            means[i * 3 + 2] = p.z;
+            let s = cloud.scales[g];
+            scales[i * 3] = s.x;
+            scales[i * 3 + 1] = s.y;
+            scales[i * 3 + 2] = s.z;
+            let q = cloud.rotations[g];
+            quats[i * 4] = q.w;
+            quats[i * 4 + 1] = q.x;
+            quats[i * 4 + 2] = q.y;
+            quats[i * 4 + 3] = q.z;
+            for (k, rgb) in cloud.sh_of(g).iter().enumerate() {
+                for c in 0..3 {
+                    sh[(i * 16 + k) * 3 + c] = rgb[c];
+                }
+            }
+        }
+        // identity quaternion for padding (avoids 0-norm)
+        for i in m..chunk {
+            quats[i * 4] = 1.0;
+        }
+
+        let outs = client.run_f32(
+            "preprocess_c4096",
+            &[
+                (&means, &[ci, 3][..]),
+                (&scales, &[ci, 3][..]),
+                (&quats, &[ci, 4][..]),
+                (&sh, &[ci, 16, 3][..]),
+                (&view, &[4, 4][..]),
+                (&proj, &[4, 4][..]),
+                (&cam_params, &[12][..]),
+            ],
+        )?;
+        let (m2, conic, depth, radius, color, valid) =
+            (&outs[0], &outs[1], &outs[2], &outs[3], &outs[4], &outs[5]);
+        for i in 0..m {
+            if valid[i] < 0.5 {
+                continue;
+            }
+            out.means2d.push(Vec2::new(m2[i * 2], m2[i * 2 + 1]));
+            out.conics.push([conic[i * 3], conic[i * 3 + 1], conic[i * 3 + 2]]);
+            out.depths.push(depth[i]);
+            out.radii.push(radius[i]);
+            out.colors.push(Vec3::new(color[i * 3], color[i * 3 + 1], color[i * 3 + 2]));
+            out.opacities.push(cloud.opacities[start + i]);
+            out.source.push((start + i) as u32);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::preprocess::preprocess;
+    use crate::runtime::artifacts_available;
+    use crate::scene::synthetic::scene_by_name;
+
+    /// §4 invariant 5, cross-language: the AOT L2 projection must agree
+    /// with the native Rust preprocessing on every surviving Gaussian.
+    #[test]
+    fn artifact_preprocess_matches_native() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let cloud = scene_by_name("train").unwrap().synthesize(0.001);
+        let camera = Camera::look_at(
+            Vec3::new(0.0, 1.0, -8.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            320,
+            192,
+        );
+        let cfg = PreprocessConfig::default();
+        let native = preprocess(&cloud, &camera, &cfg);
+        let mut client = RuntimeClient::from_default_dir().unwrap();
+        let artifact = preprocess_artifact(&mut client, &cloud, &camera, &cfg).unwrap();
+
+        assert_eq!(native.len(), artifact.len(), "visibility sets differ");
+        for i in 0..native.len() {
+            assert_eq!(native.source[i], artifact.source[i], "order differs at {i}");
+            let dm = native.means2d[i] - artifact.means2d[i];
+            assert!(dm.length() < 0.05, "mean2d {i}: {:?}", dm);
+            assert!((native.depths[i] - artifact.depths[i]).abs() < 1e-2);
+            // radii are ceil()ed on both sides; allow 1px for fp
+            assert!((native.radii[i] - artifact.radii[i]).abs() <= 1.0, "radius {i}");
+            for c in 0..3 {
+                let rel = (native.conics[i][c] - artifact.conics[i][c]).abs()
+                    / (1e-3 + native.conics[i][c].abs());
+                assert!(rel < 0.02, "conic {i}[{c}]");
+                assert!(
+                    (native.colors[i].to_array()[c] - artifact.colors[i].to_array()[c]).abs()
+                        < 1e-2,
+                    "color {i}[{c}]"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Tile-grouped artifact rendering — the §Perf optimization of the
+//! production request path.
+//!
+//! Profiling (EXPERIMENTS.md §Perf) showed one PJRT execution costs
+//! ~14.7 ms end-to-end of which ~13.6 ms is per-call overhead (the
+//! `xla` crate's `execute` synchronously uploads every input literal
+//! and awaits each transfer) while the kernel itself runs in ~1.1 ms.
+//! A per-tile call therefore drowns in overhead. This path drives the
+//! `gemm_blend_tiles16` entry — the same Pallas kernel vmapped over 16
+//! tiles — so one call advances 16 tiles at once, amortizing the
+//! overhead 16×. Tiles with longer Gaussian lists simply participate in
+//! multiple rounds, carrying their (C, T, done) state exactly like the
+//! single-tile path.
+
+use super::client::RuntimeClient;
+use crate::math::{Camera, Vec3};
+use crate::pipeline::duplicate::duplicate;
+use crate::pipeline::preprocess::{preprocess, Projected};
+use crate::pipeline::render::{FrameStats, Image, RenderConfig, RenderOutput, StageTimings};
+use crate::pipeline::sort::{sort_duplicated, tile_ranges};
+use crate::pipeline::tile::TileGrid;
+use crate::pipeline::{TILE_PIXELS, TILE_SIZE};
+use anyhow::Result;
+use std::time::Instant;
+
+const ENTRY: &str = "gemm_blend_tiles16";
+
+/// Per-tile blending state carried across rounds.
+struct TileState {
+    tile_id: u32,
+    /// Next offset into the tile's sorted list.
+    cursor: usize,
+    c: Vec<f32>,
+    t: Vec<f32>,
+    done: Vec<f32>,
+}
+
+/// Render one frame through the 16-tile-grouped artifact path.
+pub fn render_frame_tiled(
+    client: &mut RuntimeClient,
+    cloud: &crate::scene::gaussian::GaussianCloud,
+    camera: &Camera,
+    cfg: &RenderConfig,
+) -> Result<RenderOutput> {
+    let group = client.manifest().entries.contains_key(ENTRY).then_some(16).unwrap_or(16);
+    let batch = client.manifest().batch;
+    let mp = client.manifest().mp.clone();
+    let grid = TileGrid::new(camera.width, camera.height);
+
+    let t0 = Instant::now();
+    let projected = preprocess(cloud, camera, &cfg.preprocess);
+    let t_pre = t0.elapsed();
+
+    let t0 = Instant::now();
+    let mut dup = duplicate(&projected, &grid);
+    let t_dup = t0.elapsed();
+
+    let t0 = Instant::now();
+    sort_duplicated(&mut dup);
+    let ranges = tile_ranges(&dup.keys, grid.num_tiles());
+    let t_sort = t0.elapsed();
+
+    let t0 = Instant::now();
+    // states for non-empty tiles only
+    let mut states: Vec<TileState> = ranges
+        .iter()
+        .enumerate()
+        .filter(|(_, &(s, e))| e > s)
+        .map(|(tid, _)| TileState {
+            tile_id: tid as u32,
+            cursor: 0,
+            c: vec![0.0; TILE_PIXELS * 3],
+            t: vec![1.0; TILE_PIXELS],
+            done: vec![0.0; TILE_PIXELS],
+        })
+        .collect();
+    let n_active_tiles = states.len();
+    let mut max_len = 0usize;
+    for &(s, e) in &ranges {
+        max_len = max_len.max((e - s) as usize);
+    }
+
+    // staging buffers for one grouped call
+    let g = group;
+    let mut conics = vec![0.0f32; g * batch * 3];
+    let mut offsets = vec![0.0f32; g * batch * 2];
+    let mut opac = vec![0.0f32; g * batch];
+    let mut colors = vec![0.0f32; g * batch * 3];
+    let mut c_in = vec![0.0f32; g * TILE_PIXELS * 3];
+    let mut t_in = vec![1.0f32; g * TILE_PIXELS];
+    let mut d_in = vec![0.0f32; g * TILE_PIXELS];
+
+    let mut calls = 0u64;
+    // work queue: indices into `states` that still have gaussians left
+    let mut alive: Vec<usize> = (0..states.len()).collect();
+    while !alive.is_empty() {
+        let mut next_alive = Vec::with_capacity(alive.len());
+        for chunk_of_tiles in alive.chunks(g) {
+            // stage up to g tiles' next batches
+            opac.iter_mut().for_each(|v| *v = 0.0); // padding rows no-op
+            for (slot, &si) in chunk_of_tiles.iter().enumerate() {
+                let st = &states[si];
+                let (s, e) = ranges[st.tile_id as usize];
+                let list = &dup.values[s as usize..e as usize];
+                let take = (list.len() - st.cursor).min(batch);
+                let origin = grid.tile_origin(st.tile_id);
+                let (x0, y0) = (origin.0 as f32, origin.1 as f32);
+                for r in 0..take {
+                    let gi = list[st.cursor + r] as usize;
+                    let base = (slot * batch + r) * 3;
+                    let cn = projected.conics[gi];
+                    conics[base] = cn[0];
+                    conics[base + 1] = cn[1];
+                    conics[base + 2] = cn[2];
+                    let m = projected.means2d[gi];
+                    offsets[(slot * batch + r) * 2] = m.x - x0;
+                    offsets[(slot * batch + r) * 2 + 1] = m.y - y0;
+                    opac[slot * batch + r] = projected.opacities[gi];
+                    let c = projected.colors[gi];
+                    colors[base] = c.x;
+                    colors[base + 1] = c.y;
+                    colors[base + 2] = c.z;
+                }
+                c_in[slot * TILE_PIXELS * 3..(slot + 1) * TILE_PIXELS * 3]
+                    .copy_from_slice(&st.c);
+                t_in[slot * TILE_PIXELS..(slot + 1) * TILE_PIXELS].copy_from_slice(&st.t);
+                d_in[slot * TILE_PIXELS..(slot + 1) * TILE_PIXELS].copy_from_slice(&st.done);
+            }
+            // pad unused slots with finished state (done=1 → no-ops)
+            for slot in chunk_of_tiles.len()..g {
+                d_in[slot * TILE_PIXELS..(slot + 1) * TILE_PIXELS]
+                    .iter_mut()
+                    .for_each(|v| *v = 1.0);
+            }
+
+            let gb = (g * batch) as i64;
+            let gp = (g * TILE_PIXELS) as i64;
+            let dims = [
+                [g as i64, 256, 3],
+                [g as i64, 256, 2],
+                [g as i64, 256, 0],
+                [g as i64, 256, 3],
+            ];
+            let _ = (gb, gp, dims);
+            let outs = client.run_f32(
+                ENTRY,
+                &[
+                    (&conics, &[g as i64, batch as i64, 3][..]),
+                    (&offsets, &[g as i64, batch as i64, 2][..]),
+                    (&opac, &[g as i64, batch as i64][..]),
+                    (&colors, &[g as i64, batch as i64, 3][..]),
+                    (&mp, &[8, TILE_PIXELS as i64][..]),
+                    (&c_in, &[g as i64, TILE_PIXELS as i64, 3][..]),
+                    (&t_in, &[g as i64, TILE_PIXELS as i64][..]),
+                    (&d_in, &[g as i64, TILE_PIXELS as i64][..]),
+                ],
+            )?;
+            calls += 1;
+
+            // write back states, advance cursors
+            for (slot, &si) in chunk_of_tiles.iter().enumerate() {
+                let st = &mut states[si];
+                st.c.copy_from_slice(&outs[0][slot * TILE_PIXELS * 3..(slot + 1) * TILE_PIXELS * 3]);
+                st.t.copy_from_slice(&outs[1][slot * TILE_PIXELS..(slot + 1) * TILE_PIXELS]);
+                st.done
+                    .copy_from_slice(&outs[2][slot * TILE_PIXELS..(slot + 1) * TILE_PIXELS]);
+                let (s, e) = ranges[st.tile_id as usize];
+                let len = (e - s) as usize;
+                st.cursor = (st.cursor + batch).min(len);
+                let all_done = st.done.iter().all(|&d| d > 0.5);
+                if st.cursor < len && !all_done {
+                    next_alive.push(si);
+                }
+            }
+        }
+        alive = next_alive;
+    }
+
+    // composite
+    let mut image = Image::new(camera.width, camera.height);
+    // background for empty tiles
+    if cfg.background != Vec3::ZERO {
+        for px in image.data.iter_mut() {
+            *px = [cfg.background.x, cfg.background.y, cfg.background.z];
+        }
+    }
+    for st in &states {
+        let origin = grid.tile_origin(st.tile_id);
+        for ly in 0..TILE_SIZE {
+            let py = origin.1 + ly as u32;
+            if py >= camera.height {
+                break;
+            }
+            for lx in 0..TILE_SIZE {
+                let px = origin.0 + lx as u32;
+                if px >= camera.width {
+                    break;
+                }
+                let j = ly * TILE_SIZE + lx;
+                let t = st.t[j];
+                image.data[(py * camera.width + px) as usize] = [
+                    st.c[j * 3] + t * cfg.background.x,
+                    st.c[j * 3 + 1] + t * cfg.background.y,
+                    st.c[j * 3 + 2] + t * cfg.background.z,
+                ];
+            }
+        }
+    }
+    let t_blend = t0.elapsed();
+    let _ = calls;
+
+    Ok(RenderOutput {
+        image,
+        timings: StageTimings {
+            preprocess: t_pre,
+            duplicate: t_dup,
+            sort: t_sort,
+            blend: t_blend,
+        },
+        stats: FrameStats {
+            n_gaussians: cloud.len(),
+            n_visible: projected.len(),
+            n_pairs: dup.len(),
+            n_tiles: grid.num_tiles(),
+            n_active_tiles,
+            max_tile_len: max_len,
+        },
+    })
+}
+
+/// Expose the projected set for tests that need it.
+pub fn project_only(
+    cloud: &crate::scene::gaussian::GaussianCloud,
+    camera: &Camera,
+    cfg: &RenderConfig,
+) -> Projected {
+    preprocess(cloud, camera, &cfg.preprocess)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::workloads::default_camera;
+    use crate::pipeline::render::{render_frame, Blender};
+    use crate::runtime::artifacts_available;
+    use crate::scene::synthetic::scene_by_name;
+
+    #[test]
+    fn tiled_artifact_matches_native() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let spec = scene_by_name("train").unwrap();
+        let cloud = spec.synthesize(0.001);
+        let mut camera = default_camera(&spec);
+        camera.width = 192;
+        camera.height = 128;
+        let cfg = RenderConfig::default();
+
+        let mut native = Blender::Gemm.instantiate(cfg.batch);
+        let reference = render_frame(&cloud, &camera, &cfg, native.as_mut());
+
+        let mut client = RuntimeClient::from_default_dir().unwrap();
+        let out = render_frame_tiled(&mut client, &cloud, &camera, &cfg).unwrap();
+        assert_eq!(out.stats.n_pairs, reference.stats.n_pairs);
+        let psnr = out.image.psnr(&reference.image).unwrap();
+        assert!(psnr > 55.0, "tiled artifact vs native PSNR {psnr:.1} dB");
+    }
+
+    #[test]
+    fn tiled_with_background() {
+        if !artifacts_available() {
+            return;
+        }
+        let spec = scene_by_name("train").unwrap();
+        let cloud = spec.synthesize(0.0005);
+        let mut camera = default_camera(&spec);
+        camera.width = 96;
+        camera.height = 64;
+        let mut cfg = RenderConfig::default();
+        cfg.background = Vec3::new(1.0, 0.0, 0.0);
+        let mut client = RuntimeClient::from_default_dir().unwrap();
+        let out = render_frame_tiled(&mut client, &cloud, &camera, &cfg).unwrap();
+        // empty regions carry the background
+        let has_bg = out.image.data.iter().any(|px| px[0] > 0.9 && px[1] < 0.1);
+        assert!(has_bg);
+    }
+}

@@ -1,0 +1,236 @@
+//! The Gaussian cloud — structure-of-arrays storage matching what the
+//! render pipeline consumes. Mirrors the attribute set of official 3DGS
+//! checkpoints: position, scale (log-space in checkpoints, linear here),
+//! rotation quaternion, opacity (post-sigmoid here), SH colour
+//! coefficients.
+
+use crate::math::{sh, Quat, Vec3};
+
+/// Structure-of-arrays 3D Gaussian cloud.
+///
+/// All vectors have identical length `len()`. Scales are linear (not
+/// log-space), opacities are in `[0, 1]` (post-sigmoid) — conversion from
+/// checkpoint space happens in the PLY loader.
+#[derive(Debug, Clone, Default)]
+pub struct GaussianCloud {
+    /// World-space centres.
+    pub positions: Vec<Vec3>,
+    /// Per-axis standard deviations of the 3D Gaussian (linear space).
+    pub scales: Vec<Vec3>,
+    /// Orientations.
+    pub rotations: Vec<Quat>,
+    /// Opacity `o_i ∈ [0,1]`.
+    pub opacities: Vec<f32>,
+    /// SH colour coefficients, `sh_degree+1`² RGB triples per Gaussian,
+    /// flattened: `sh[g * num_coeffs + k] = [r, g, b]`.
+    pub sh: Vec<[f32; 3]>,
+    /// Active SH degree (0..=3).
+    pub sh_degree: usize,
+}
+
+impl GaussianCloud {
+    /// Empty cloud with capacity for `n` Gaussians at `sh_degree`.
+    pub fn with_capacity(n: usize, sh_degree: usize) -> Self {
+        GaussianCloud {
+            positions: Vec::with_capacity(n),
+            scales: Vec::with_capacity(n),
+            rotations: Vec::with_capacity(n),
+            opacities: Vec::with_capacity(n),
+            sh: Vec::with_capacity(n * sh::num_coeffs(sh_degree)),
+            sh_degree,
+        }
+    }
+
+    /// Number of Gaussians.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    /// SH coefficients per Gaussian at the cloud's degree.
+    #[inline]
+    pub fn sh_coeffs_per_gaussian(&self) -> usize {
+        sh::num_coeffs(self.sh_degree)
+    }
+
+    /// SH slice for Gaussian `i`.
+    #[inline]
+    pub fn sh_of(&self, i: usize) -> &[[f32; 3]] {
+        let k = self.sh_coeffs_per_gaussian();
+        &self.sh[i * k..(i + 1) * k]
+    }
+
+    /// Append one Gaussian. `sh_coeffs` must have `(deg+1)²` entries.
+    pub fn push(
+        &mut self,
+        position: Vec3,
+        scale: Vec3,
+        rotation: Quat,
+        opacity: f32,
+        sh_coeffs: &[[f32; 3]],
+    ) {
+        assert_eq!(sh_coeffs.len(), self.sh_coeffs_per_gaussian(), "SH coefficient count");
+        self.positions.push(position);
+        self.scales.push(scale);
+        self.rotations.push(rotation.normalized());
+        self.opacities.push(opacity.clamp(0.0, 1.0));
+        self.sh.extend_from_slice(sh_coeffs);
+    }
+
+    /// Validate internal consistency (lengths line up, finite values).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.len();
+        let k = self.sh_coeffs_per_gaussian();
+        if self.scales.len() != n
+            || self.rotations.len() != n
+            || self.opacities.len() != n
+            || self.sh.len() != n * k
+        {
+            return Err(format!(
+                "inconsistent lengths: pos={} scale={} rot={} opac={} sh={} (expect {}x{})",
+                n,
+                self.scales.len(),
+                self.rotations.len(),
+                self.opacities.len(),
+                self.sh.len(),
+                n,
+                k
+            ));
+        }
+        for (i, p) in self.positions.iter().enumerate() {
+            if !(p.x.is_finite() && p.y.is_finite() && p.z.is_finite()) {
+                return Err(format!("non-finite position at {i}"));
+            }
+        }
+        for (i, s) in self.scales.iter().enumerate() {
+            if !(s.x > 0.0 && s.y > 0.0 && s.z > 0.0) {
+                return Err(format!("non-positive scale at {i}: {s:?}"));
+            }
+        }
+        for (i, &o) in self.opacities.iter().enumerate() {
+            if !(0.0..=1.0).contains(&o) {
+                return Err(format!("opacity out of range at {i}: {o}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Keep only Gaussians whose index passes `pred` (used by pruning
+    /// baselines). Returns the number kept.
+    pub fn retain_by_index(&mut self, pred: impl Fn(usize) -> bool) -> usize {
+        let k = self.sh_coeffs_per_gaussian();
+        let n = self.len();
+        let mut w = 0usize;
+        for i in 0..n {
+            if pred(i) {
+                if w != i {
+                    self.positions[w] = self.positions[i];
+                    self.scales[w] = self.scales[i];
+                    self.rotations[w] = self.rotations[i];
+                    self.opacities[w] = self.opacities[i];
+                    for c in 0..k {
+                        self.sh[w * k + c] = self.sh[i * k + c];
+                    }
+                }
+                w += 1;
+            }
+        }
+        self.positions.truncate(w);
+        self.scales.truncate(w);
+        self.rotations.truncate(w);
+        self.opacities.truncate(w);
+        self.sh.truncate(w * k);
+        w
+    }
+
+    /// Axis-aligned bounding box of the centres.
+    pub fn bounds(&self) -> Option<(Vec3, Vec3)> {
+        let first = *self.positions.first()?;
+        let mut lo = first;
+        let mut hi = first;
+        for &p in &self.positions[1..] {
+            lo = lo.min(p);
+            hi = hi.max(p);
+        }
+        Some((lo, hi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cloud() -> GaussianCloud {
+        let mut c = GaussianCloud::with_capacity(3, 0);
+        for i in 0..3 {
+            c.push(
+                Vec3::new(i as f32, 0.0, 0.0),
+                Vec3::splat(0.1),
+                Quat::IDENTITY,
+                0.5,
+                &[[0.1, 0.2, 0.3]],
+            );
+        }
+        c
+    }
+
+    #[test]
+    fn push_and_validate() {
+        let c = tiny_cloud();
+        assert_eq!(c.len(), 3);
+        assert!(c.validate().is_ok());
+        assert_eq!(c.sh_of(1), &[[0.1, 0.2, 0.3]]);
+    }
+
+    #[test]
+    fn validate_catches_bad_scale() {
+        let mut c = tiny_cloud();
+        c.scales[1] = Vec3::new(0.1, -0.1, 0.1);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_length_mismatch() {
+        let mut c = tiny_cloud();
+        c.opacities.pop();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn retain_compacts() {
+        let mut c = tiny_cloud();
+        let kept = c.retain_by_index(|i| i != 1);
+        assert_eq!(kept, 2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.positions[1].x, 2.0);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn bounds_cover_all() {
+        let c = tiny_cloud();
+        let (lo, hi) = c.bounds().unwrap();
+        assert_eq!(lo, Vec3::new(0.0, 0.0, 0.0));
+        assert_eq!(hi, Vec3::new(2.0, 0.0, 0.0));
+        assert!(GaussianCloud::default().bounds().is_none());
+    }
+
+    #[test]
+    fn opacity_clamped_on_push() {
+        let mut c = GaussianCloud::with_capacity(1, 0);
+        c.push(Vec3::ZERO, Vec3::ONE, Quat::IDENTITY, 2.0, &[[0.0; 3]]);
+        assert_eq!(c.opacities[0], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "SH coefficient count")]
+    fn push_wrong_sh_count_panics() {
+        let mut c = GaussianCloud::with_capacity(1, 1); // needs 4 coeffs
+        c.push(Vec3::ZERO, Vec3::ONE, Quat::IDENTITY, 0.5, &[[0.0; 3]]);
+    }
+}

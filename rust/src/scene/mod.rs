@@ -1,0 +1,12 @@
+//! Scene representation: the Gaussian point cloud, checkpoint I/O, and
+//! procedural scene synthesis matching the paper's Table 1 workloads.
+
+pub mod gaussian;
+pub mod ply;
+pub mod rng;
+pub mod stats;
+pub mod synthetic;
+
+pub use gaussian::GaussianCloud;
+pub use stats::SceneStats;
+pub use synthetic::{SceneSpec, SceneKind};

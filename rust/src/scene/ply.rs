@@ -1,0 +1,296 @@
+//! 3DGS-format PLY checkpoint I/O.
+//!
+//! The official 3DGS training pipeline saves `point_cloud.ply` as
+//! `binary_little_endian` with per-vertex properties
+//! `x y z nx ny nz f_dc_{0..3} f_rest_{0..3*( (deg+1)²-1 )} opacity
+//! scale_{0..3} rot_{0..4}`, where `opacity` is a pre-sigmoid logit,
+//! `scale_*` are log-space, and `rot_*` is an unnormalized (w,x,y,z)
+//! quaternion. This module reads/writes that exact layout so real trained
+//! checkpoints drop into the harness when available (DESIGN.md §1).
+
+use crate::math::{sh, util::sigmoid, Quat, Vec3};
+use crate::scene::gaussian::GaussianCloud;
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Errors from PLY parsing.
+#[derive(Debug)]
+pub enum PlyError {
+    Io(io::Error),
+    Format(String),
+}
+
+impl std::fmt::Display for PlyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlyError::Io(e) => write!(f, "ply io error: {e}"),
+            PlyError::Format(s) => write!(f, "ply format error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for PlyError {}
+
+impl From<io::Error> for PlyError {
+    fn from(e: io::Error) -> Self {
+        PlyError::Io(e)
+    }
+}
+
+/// Parsed header: vertex count and property names in file order.
+struct Header {
+    count: usize,
+    properties: Vec<String>,
+}
+
+fn parse_header<R: BufRead>(r: &mut R) -> Result<Header, PlyError> {
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    if line.trim() != "ply" {
+        return Err(PlyError::Format("missing 'ply' magic".into()));
+    }
+    let mut count = None;
+    let mut properties = Vec::new();
+    let mut in_vertex = false;
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            return Err(PlyError::Format("unexpected EOF in header".into()));
+        }
+        let l = line.trim();
+        if l == "end_header" {
+            break;
+        }
+        let mut parts = l.split_whitespace();
+        match parts.next() {
+            Some("format") => {
+                let fmt = parts.next().unwrap_or("");
+                if fmt != "binary_little_endian" {
+                    return Err(PlyError::Format(format!("unsupported format '{fmt}'")));
+                }
+            }
+            Some("element") => {
+                let name = parts.next().unwrap_or("");
+                in_vertex = name == "vertex";
+                if in_vertex {
+                    count = parts
+                        .next()
+                        .and_then(|c| c.parse::<usize>().ok());
+                }
+            }
+            Some("property") if in_vertex => {
+                let ty = parts.next().unwrap_or("");
+                if ty != "float" {
+                    return Err(PlyError::Format(format!("unsupported property type '{ty}'")));
+                }
+                properties.push(parts.next().unwrap_or("").to_string());
+            }
+            _ => {}
+        }
+    }
+    let count = count.ok_or_else(|| PlyError::Format("no vertex element".into()))?;
+    Ok(Header { count, properties })
+}
+
+/// Infer SH degree from the number of `f_rest_*` properties.
+fn degree_from_rest(n_rest: usize) -> Result<usize, PlyError> {
+    for deg in 0..=sh::MAX_DEGREE {
+        if 3 * (sh::num_coeffs(deg) - 1) == n_rest {
+            return Ok(deg);
+        }
+    }
+    Err(PlyError::Format(format!("f_rest count {n_rest} matches no SH degree")))
+}
+
+/// Read a 3DGS checkpoint. Converts checkpoint space → pipeline space
+/// (exp scales, sigmoid opacity, normalized quaternion).
+pub fn read_ply<R: Read>(reader: R) -> Result<GaussianCloud, PlyError> {
+    let mut r = BufReader::new(reader);
+    let header = parse_header(&mut r)?;
+    let idx = |name: &str| -> Result<usize, PlyError> {
+        header
+            .properties
+            .iter()
+            .position(|p| p == name)
+            .ok_or_else(|| PlyError::Format(format!("missing property '{name}'")))
+    };
+    let (ix, iy, iz) = (idx("x")?, idx("y")?, idx("z")?);
+    let idc = [idx("f_dc_0")?, idx("f_dc_1")?, idx("f_dc_2")?];
+    let n_rest = header.properties.iter().filter(|p| p.starts_with("f_rest_")).count();
+    let degree = degree_from_rest(n_rest)?;
+    let irest: Vec<usize> =
+        (0..n_rest).map(|k| idx(&format!("f_rest_{k}"))).collect::<Result<_, _>>()?;
+    let iop = idx("opacity")?;
+    let iscale = [idx("scale_0")?, idx("scale_1")?, idx("scale_2")?];
+    let irot = [idx("rot_0")?, idx("rot_1")?, idx("rot_2")?, idx("rot_3")?];
+
+    let stride = header.properties.len();
+    let k = sh::num_coeffs(degree);
+    let mut cloud = GaussianCloud::with_capacity(header.count, degree);
+    let mut buf = vec![0u8; stride * 4];
+    let mut row = vec![0f32; stride];
+    let mut sh_block = vec![[0f32; 3]; k];
+    for _ in 0..header.count {
+        r.read_exact(&mut buf)?;
+        for (j, chunk) in buf.chunks_exact(4).enumerate() {
+            row[j] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        let pos = Vec3::new(row[ix], row[iy], row[iz]);
+        // f_rest layout in checkpoints: channel-major — all R coeffs for
+        // bands 1.., then all G, then all B.
+        sh_block[0] = [row[idc[0]], row[idc[1]], row[idc[2]]];
+        let per_chan = k - 1;
+        for c in 0..per_chan {
+            sh_block[c + 1] = [
+                row[irest[c]],
+                row[irest[per_chan + c]],
+                row[irest[2 * per_chan + c]],
+            ];
+        }
+        let scale = Vec3::new(row[iscale[0]].exp(), row[iscale[1]].exp(), row[iscale[2]].exp());
+        let q = Quat::new(row[irot[0]], row[irot[1]], row[irot[2]], row[irot[3]]).normalized();
+        cloud.push(pos, scale, q, sigmoid(row[iop]), &sh_block);
+    }
+    Ok(cloud)
+}
+
+/// Write a cloud in the 3DGS checkpoint layout (inverse conversions:
+/// log scales, logit opacity).
+pub fn write_ply<W: Write>(writer: W, cloud: &GaussianCloud) -> Result<(), PlyError> {
+    let mut w = BufWriter::new(writer);
+    let k = cloud.sh_coeffs_per_gaussian();
+    let n_rest = 3 * (k - 1);
+    writeln!(w, "ply")?;
+    writeln!(w, "format binary_little_endian 1.0")?;
+    writeln!(w, "element vertex {}", cloud.len())?;
+    for p in ["x", "y", "z", "nx", "ny", "nz"] {
+        writeln!(w, "property float {p}")?;
+    }
+    for c in 0..3 {
+        writeln!(w, "property float f_dc_{c}")?;
+    }
+    for c in 0..n_rest {
+        writeln!(w, "property float f_rest_{c}")?;
+    }
+    writeln!(w, "property float opacity")?;
+    for c in 0..3 {
+        writeln!(w, "property float scale_{c}")?;
+    }
+    for c in 0..4 {
+        writeln!(w, "property float rot_{c}")?;
+    }
+    writeln!(w, "end_header")?;
+
+    let logit = |o: f32| {
+        let o = o.clamp(1e-6, 1.0 - 1e-6);
+        (o / (1.0 - o)).ln()
+    };
+    let put = |w: &mut BufWriter<W>, v: f32| w.write_all(&v.to_le_bytes());
+    for i in 0..cloud.len() {
+        let p = cloud.positions[i];
+        for v in [p.x, p.y, p.z, 0.0, 0.0, 0.0] {
+            put(&mut w, v)?;
+        }
+        let shs = cloud.sh_of(i);
+        for c in 0..3 {
+            put(&mut w, shs[0][c])?;
+        }
+        // channel-major rest block
+        for c in 0..3 {
+            for b in 1..k {
+                put(&mut w, shs[b][c])?;
+            }
+        }
+        put(&mut w, logit(cloud.opacities[i]))?;
+        let s = cloud.scales[i];
+        for v in [s.x.ln(), s.y.ln(), s.z.ln()] {
+            put(&mut w, v)?;
+        }
+        let q = cloud.rotations[i];
+        for v in [q.w, q.x, q.y, q.z] {
+            put(&mut w, v)?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Convenience file wrappers.
+pub fn read_ply_file(path: &Path) -> Result<GaussianCloud, PlyError> {
+    read_ply(std::fs::File::open(path)?)
+}
+
+/// Write `cloud` to `path` in checkpoint layout.
+pub fn write_ply_file(path: &Path, cloud: &GaussianCloud) -> Result<(), PlyError> {
+    write_ply(std::fs::File::create(path)?, cloud)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::synthetic::scene_by_name;
+
+    #[test]
+    fn roundtrip_preserves_cloud() {
+        let cloud = scene_by_name("train").unwrap().synthesize(0.0002);
+        let mut buf = Vec::new();
+        write_ply(&mut buf, &cloud).unwrap();
+        let back = read_ply(&buf[..]).unwrap();
+        assert_eq!(back.len(), cloud.len());
+        assert_eq!(back.sh_degree, cloud.sh_degree);
+        for i in 0..cloud.len() {
+            assert!((back.positions[i] - cloud.positions[i]).length() < 1e-5, "pos {i}");
+            assert!((back.scales[i] - cloud.scales[i]).length() < 1e-3, "scale {i}");
+            assert!((back.opacities[i] - cloud.opacities[i]).abs() < 1e-5, "opac {i}");
+            // quaternion sign ambiguity is resolved by normalized storage
+            let (a, b) = (back.rotations[i], cloud.rotations[i]);
+            let dot = a.w * b.w + a.x * b.x + a.y * b.y + a.z * b.z;
+            assert!(dot.abs() > 1.0 - 1e-5, "rot {i}: dot={dot}");
+            for (x, y) in back.sh_of(i).iter().zip(cloud.sh_of(i).iter()) {
+                for c in 0..3 {
+                    assert!((x[c] - y[c]).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let data = b"not a ply\n";
+        assert!(matches!(read_ply(&data[..]), Err(PlyError::Format(_))));
+    }
+
+    #[test]
+    fn rejects_ascii_format() {
+        let data = b"ply\nformat ascii 1.0\nelement vertex 0\nend_header\n";
+        assert!(matches!(read_ply(&data[..]), Err(PlyError::Format(_))));
+    }
+
+    #[test]
+    fn rejects_missing_property() {
+        let data = b"ply\nformat binary_little_endian 1.0\nelement vertex 1\nproperty float x\nend_header\n";
+        let err = read_ply(&data[..]).unwrap_err();
+        assert!(err.to_string().contains("missing property"));
+    }
+
+    #[test]
+    fn degree_inference() {
+        assert_eq!(degree_from_rest(0).unwrap(), 0);
+        assert_eq!(degree_from_rest(9).unwrap(), 1);
+        assert_eq!(degree_from_rest(24).unwrap(), 2);
+        assert_eq!(degree_from_rest(45).unwrap(), 3);
+        assert!(degree_from_rest(7).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cloud = scene_by_name("playroom").unwrap().synthesize(0.0001);
+        let dir = std::env::temp_dir().join("gemm_gs_ply_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ply");
+        write_ply_file(&path, &cloud).unwrap();
+        let back = read_ply_file(&path).unwrap();
+        assert_eq!(back.len(), cloud.len());
+        std::fs::remove_file(&path).ok();
+    }
+}

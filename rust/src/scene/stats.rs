@@ -1,0 +1,119 @@
+//! Workload statistics — the quantities of Table 1 plus the per-tile
+//! distribution numbers the GPU performance model consumes. The struct is
+//! plain data; it is filled by `bench_harness::workloads` (which owns the
+//! scene → camera pairing) and printed by `gemm-gs inspect`.
+
+/// Summary statistics for one scene/camera workload.
+#[derive(Debug, Clone)]
+pub struct SceneStats {
+    /// Scene name ("train", ...).
+    pub name: String,
+    /// Dataset name.
+    pub dataset: String,
+    /// Render width (pixels).
+    pub width: u32,
+    /// Render height (pixels).
+    pub height: u32,
+    /// Full Gaussian count (Table 1).
+    pub full_gaussians: usize,
+    /// Gaussians actually synthesized at the simulation scale.
+    pub simulated_gaussians: usize,
+    /// Simulation scale used.
+    pub sim_scale: f64,
+    /// Visible after culling.
+    pub n_visible: usize,
+    /// Duplicated (tile, Gaussian) pairs.
+    pub n_pairs: usize,
+    /// Mean tiles per visible Gaussian.
+    pub tiles_per_gaussian: f64,
+    /// Mean per-tile list length over active tiles.
+    pub mean_tile_len: f64,
+    /// Longest per-tile list.
+    pub max_tile_len: usize,
+    /// Active (non-empty) tiles.
+    pub n_active_tiles: usize,
+    /// Total tiles.
+    pub n_tiles: usize,
+}
+
+impl SceneStats {
+    /// Visible fraction of the cloud.
+    pub fn visible_fraction(&self) -> f64 {
+        if self.simulated_gaussians == 0 {
+            0.0
+        } else {
+            self.n_visible as f64 / self.simulated_gaussians as f64
+        }
+    }
+
+    /// Extrapolate pair count to the full Table 1 Gaussian count
+    /// (pairs scale ~linearly with cloud size at fixed resolution;
+    /// the perf model uses this to produce paper-scale rows).
+    pub fn full_scale_pairs(&self) -> f64 {
+        if self.simulated_gaussians == 0 {
+            0.0
+        } else {
+            self.n_pairs as f64 * self.full_gaussians as f64 / self.simulated_gaussians as f64
+        }
+    }
+}
+
+/// Percentile of a sorted slice (nearest-rank).
+pub fn percentile(sorted: &[u32], p: f64) -> u32 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Mean of a u32 slice.
+pub fn mean(values: &[u32]) -> f64 {
+    if values.is_empty() {
+        0.0
+    } else {
+        values.iter().map(|&v| v as f64).sum::<f64>() / values.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [1u32, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+        assert_eq!(percentile(&v, 50.0), 5);
+        assert_eq!(percentile(&v, 95.0), 10);
+        assert_eq!(percentile(&v, 10.0), 1);
+        assert_eq!(percentile(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[2, 4, 6]), 4.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn full_scale_extrapolation() {
+        let s = SceneStats {
+            name: "x".into(),
+            dataset: "d".into(),
+            width: 100,
+            height: 100,
+            full_gaussians: 1_000_000,
+            simulated_gaussians: 10_000,
+            sim_scale: 0.01,
+            n_visible: 8_000,
+            n_pairs: 24_000,
+            tiles_per_gaussian: 3.0,
+            mean_tile_len: 100.0,
+            max_tile_len: 500,
+            n_active_tiles: 240,
+            n_tiles: 256,
+        };
+        assert!((s.full_scale_pairs() - 2_400_000.0).abs() < 1.0);
+        assert!((s.visible_fraction() - 0.8).abs() < 1e-9);
+    }
+}

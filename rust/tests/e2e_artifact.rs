@@ -1,0 +1,75 @@
+//! Integration tests over the PJRT runtime: the AOT-compiled Pallas
+//! kernels (Layers 1+2) driven from the Rust pipeline and the
+//! coordinator (Layer 3) — the production request path end to end.
+//! Skips gracefully when `make artifacts` has not been run.
+
+use gemm_gs::bench_harness::workloads::default_camera;
+use gemm_gs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, RenderRequest};
+use gemm_gs::pipeline::render::{render_frame, Blender, RenderConfig};
+use gemm_gs::runtime::artifacts_available;
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn skip() -> bool {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn artifact_frame_matches_native_frame() {
+    if skip() {
+        return;
+    }
+    let spec = scene_by_name("train").unwrap();
+    let cloud = spec.synthesize(0.001);
+    let camera = {
+        // smaller frame: the interpret-mode Pallas artifact is slow on CPU
+        let mut c = default_camera(&spec);
+        c.width = 160;
+        c.height = 96;
+        c
+    };
+    let cfg = RenderConfig::default();
+    let mut native = Blender::Gemm.instantiate(cfg.batch);
+    let reference = render_frame(&cloud, &camera, &cfg, native.as_mut());
+
+    let mut artifact = BackendKind::ArtifactGemm.instantiate(cfg.batch).unwrap();
+    let out = render_frame(&cloud, &camera, &cfg, artifact.as_mut());
+    let psnr = out.image.psnr(&reference.image).unwrap();
+    assert!(psnr > 55.0, "artifact/native PSNR {psnr:.1} dB");
+}
+
+#[test]
+fn coordinator_serves_through_pjrt() {
+    if skip() {
+        return;
+    }
+    let spec = scene_by_name("playroom").unwrap();
+    let mut scenes = HashMap::new();
+    scenes.insert("playroom".to_string(), Arc::new(spec.synthesize(0.0005)));
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 4,
+            backend: BackendKind::ArtifactGemm,
+            render: RenderConfig::default(),
+        },
+        scenes,
+    );
+    let mut camera = default_camera(&spec);
+    camera.width = 128;
+    camera.height = 80;
+    for i in 0..3 {
+        let r = coord.render_sync(RenderRequest { id: i, scene: "playroom".into(), camera });
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.image.is_some());
+    }
+    let m = coord.metrics();
+    assert_eq!(m.frames, 3);
+    assert_eq!(m.errors, 0);
+    coord.shutdown();
+}

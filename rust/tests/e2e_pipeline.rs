@@ -1,0 +1,116 @@
+//! Integration tests: full-frame rendering across modules — scene
+//! synthesis → preprocessing → duplication → sort → blending — covering
+//! the §4 invariants at frame granularity for every Table 1 scene.
+
+use gemm_gs::accel::{all_methods, AccelMethod};
+use gemm_gs::bench_harness::workloads::default_camera;
+use gemm_gs::coordinator::scheduler::render_frame_parallel;
+use gemm_gs::coordinator::BackendKind;
+use gemm_gs::pipeline::render::{render_frame, render_frame_masked, Blender, RenderConfig};
+use gemm_gs::pipeline::tile::TileGrid;
+use gemm_gs::scene::synthetic::{scene_by_name, table1_scenes};
+
+const SCALE: f64 = 0.002;
+
+#[test]
+fn gemm_equals_vanilla_on_every_scene() {
+    for spec in table1_scenes() {
+        let cloud = spec.synthesize(SCALE);
+        let camera = default_camera(&spec);
+        let cfg = RenderConfig::default();
+        let mut v = Blender::Vanilla.instantiate(cfg.batch);
+        let mut g = Blender::Gemm.instantiate(cfg.batch);
+        let out_v = render_frame(&cloud, &camera, &cfg, v.as_mut());
+        let out_g = render_frame(&cloud, &camera, &cfg, g.as_mut());
+        let psnr = out_g.image.psnr(&out_v.image).unwrap();
+        assert!(psnr > 55.0, "{}: GEMM/vanilla PSNR {psnr:.1} dB", spec.name);
+        assert_eq!(out_v.stats.n_pairs, out_g.stats.n_pairs, "{}", spec.name);
+    }
+}
+
+#[test]
+fn lossless_baselines_preserve_full_frames() {
+    // FlashGS / Speedy-Splat / StopThePop must not change pixels
+    let spec = scene_by_name("truck").unwrap();
+    let cloud = spec.synthesize(SCALE);
+    let camera = default_camera(&spec);
+    let cfg = RenderConfig::default();
+    let grid = TileGrid::new(camera.width, camera.height);
+    let mut blender = Blender::Gemm.instantiate(cfg.batch);
+    let reference = render_frame(&cloud, &camera, &cfg, blender.as_mut());
+
+    for method in all_methods() {
+        if method.is_lossy() || method.name() == "Vanilla 3DGS" {
+            continue;
+        }
+        let prepared = method.prepare_model(&cloud);
+        let m = |p: &gemm_gs::pipeline::preprocess::Projected, i: usize, tx: u32, ty: u32| {
+            method.keep_pair(p, i, tx, ty, &grid)
+        };
+        let out = render_frame_masked(&prepared, &camera, &cfg, blender.as_mut(), Some(&m));
+        let psnr = out.image.psnr(&reference.image).unwrap();
+        assert!(
+            psnr > 55.0 || psnr.is_infinite(),
+            "{} not lossless: {psnr:.1} dB",
+            method.name()
+        );
+        assert!(
+            out.stats.n_pairs <= reference.stats.n_pairs,
+            "{} increased pairs",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn lossy_baselines_reduce_cost_keep_quality() {
+    let spec = scene_by_name("room").unwrap();
+    let cloud = spec.synthesize(SCALE);
+    let camera = default_camera(&spec);
+    let cfg = RenderConfig::default();
+    let mut blender = Blender::Gemm.instantiate(cfg.batch);
+    let reference = render_frame(&cloud, &camera, &cfg, blender.as_mut());
+
+    let lg = gemm_gs::accel::lightgaussian::LightGaussian::default();
+    let pruned = lg.prepare_model(&cloud);
+    let out = render_frame(&pruned, &camera, &cfg, blender.as_mut());
+    assert!(out.stats.n_pairs < reference.stats.n_pairs);
+    let psnr = out.image.psnr(&reference.image).unwrap();
+    assert!(psnr > 13.0, "LightGaussian quality collapsed: {psnr:.1} dB");
+}
+
+#[test]
+fn tile_parallel_scheduler_matches_serial_everywhere() {
+    for name in ["train", "drjohnson", "garden"] {
+        let spec = scene_by_name(name).unwrap();
+        let cloud = spec.synthesize(SCALE);
+        let camera = default_camera(&spec);
+        let cfg = RenderConfig::default();
+        let mut b = Blender::Gemm.instantiate(cfg.batch);
+        let serial = render_frame(&cloud, &camera, &cfg, b.as_mut());
+        let parallel = render_frame_parallel(&cloud, &camera, &cfg, BackendKind::NativeGemm, 4);
+        let psnr = parallel.image.psnr(&serial.image).unwrap();
+        assert!(psnr > 80.0 || psnr.is_infinite(), "{name}: {psnr}");
+    }
+}
+
+#[test]
+fn batch_size_does_not_change_frames() {
+    let spec = scene_by_name("bonsai").unwrap();
+    let cloud = spec.synthesize(SCALE);
+    let camera = default_camera(&spec);
+    let mut reference = None;
+    for batch in [64usize, 128, 256] {
+        let mut cfg = RenderConfig::default();
+        cfg.batch = batch;
+        let mut b = Blender::Gemm.instantiate(batch);
+        let out = render_frame(&cloud, &camera, &cfg, b.as_mut());
+        match &reference {
+            None => reference = Some(out.image),
+            Some(r) => {
+                let psnr = out.image.psnr(r).unwrap();
+                assert!(psnr > 70.0 || psnr.is_infinite(), "batch {batch}: {psnr}");
+            }
+        }
+    }
+}
