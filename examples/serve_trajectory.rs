@@ -50,19 +50,26 @@ fn main() {
             queue_capacity: 32,
             backend,
             render: RenderConfig::default(),
+            // coalesce same-scene/resolution requests into batched
+            // blends (DESIGN.md §6); the orbit switches scene every 4
+            // frames, so whole runs coalesce (the scheduler is FIFO —
+            // strict per-request alternation would break every batch)
+            max_batch: 4,
+            batch_timeout: std::time::Duration::from_millis(2),
         },
         scenes,
     );
     println!("coordinator up: {workers} workers, scenes {:?}", coord.scene_names());
 
-    // A camera orbit alternating between the two scenes — the batched
-    // request stream of a novel-view-synthesis service.
+    // A camera orbit switching scene every 4 frames — the bursty
+    // same-scene request stream of a novel-view-synthesis service,
+    // and the shape the batch coalescer exploits.
     let t0 = std::time::Instant::now();
     let (w, h) = (320u32, 192u32);
     let receivers: Vec<_> = (0..frames)
         .map(|i| {
             let theta = i as f32 / frames as f32 * std::f32::consts::TAU;
-            let scene = if i % 2 == 0 { "train" } else { "playroom" };
+            let scene = if (i / 4) % 2 == 0 { "train" } else { "playroom" };
             let radius = if scene == "train" { 8.0 } else { 2.5 };
             let camera = Camera::look_at(
                 Vec3::new(radius * theta.cos(), 1.5, radius * theta.sin()),
@@ -106,6 +113,10 @@ fn main() {
     );
     println!("errors:      {}", m.errors);
     println!("blend share: {:.1}% (Figure 3's ~70% regime)", m.blend_fraction() * 100.0);
+    println!(
+        "batching:    {} batches, mean occupancy {:.2}, max {} (max_batch 4)",
+        m.batches, m.mean_batch_size, m.max_batch_size
+    );
     assert_eq!(m.frames as usize, frames);
     assert!(nonblack > frames / 2, "too many empty frames");
     coord.shutdown();

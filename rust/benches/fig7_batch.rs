@@ -1,7 +1,9 @@
-//! Figure 7 bench: batch-size sensitivity — modelled (A100) plus CPU
-//! wall-clock of the native GEMM blender across b ∈ {32..256}.
+//! Figure 7 bench: batch-size sensitivity — modelled (A100), CPU
+//! wall-clock of the native GEMM blender across b ∈ {32..256}, and the
+//! serving-side coalescing sweep through the real coordinator.
 
 use gemm_gs::bench_harness::{fig7, timing, workloads};
+use gemm_gs::coordinator::BackendKind;
 use gemm_gs::pipeline::render::{render_frame, Blender, RenderConfig};
 use gemm_gs::perfmodel::A100;
 use gemm_gs::scene::synthetic::scene_by_name;
@@ -26,4 +28,11 @@ fn main() {
         });
         println!("  b={b:<4} {}", timing::fmt_ms(t));
     }
+
+    // the same batch dimension at the serving layer: coalesced request
+    // batches through the real coordinator (DESIGN.md §6)
+    let frames = 32;
+    let cps =
+        fig7::run_coalesced(&scene, sim_scale, frames, &[1, 2, 4, 8], BackendKind::NativeGemm);
+    print!("\n{}", fig7::render_coalesced(&cps, &scene, frames));
 }

@@ -2,12 +2,24 @@
 //! the 256-thread block (the M_g rows no longer split evenly) and
 //! multiply per-batch synchronization — latency rises as b shrinks,
 //! while vanilla blending is batch-insensitive.
+//!
+//! Two sweeps live here: the paper's modelled kernel-batch sweep
+//! ([`run`]) and a *measured* serving-side sweep ([`run_coalesced`])
+//! that drives the same request stream through the real coordinator at
+//! increasing `max_batch`, reporting wall-clock, throughput and batch
+//! occupancy — the batch dimension of Figure 7 applied end to end
+//! (DESIGN.md §6, EXPERIMENTS.md §Perf).
 
 use super::report::{ms, speedup, Table};
-use super::workloads::measure_workload;
+use super::workloads::{self, measure_workload};
+use crate::coordinator::{BackendKind, Coordinator, CoordinatorConfig, RenderRequest};
 use crate::accel::Vanilla;
 use crate::perfmodel::{estimate, BlendKind, GpuSpec};
+use crate::pipeline::render::RenderConfig;
 use crate::scene::synthetic::scene_by_name;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// One batch-size point.
 #[derive(Debug, Clone)]
@@ -51,6 +63,117 @@ pub fn render(points: &[BatchPoint], gpu: &GpuSpec, scene: &str) -> String {
     )
 }
 
+/// One measured point of the serving-side coalescing sweep.
+#[derive(Debug, Clone)]
+pub struct CoalescePoint {
+    /// The coordinator's `max_batch` setting.
+    pub max_batch: usize,
+    /// Wall-clock for the whole request stream, ms.
+    pub wall_ms: f64,
+    /// Served frames per second.
+    pub fps: f64,
+    /// Mean batch occupancy the workers actually achieved.
+    pub mean_batch: f64,
+    /// Batches executed.
+    pub batches: u64,
+}
+
+/// Drive `frames` requests (a small set of poses cycling, the shape of
+/// real multi-viewer traffic) through the real coordinator once per
+/// `max_batch` setting and measure wall-clock + occupancy.
+pub fn run_coalesced(
+    scene: &str,
+    sim_scale: f64,
+    frames: usize,
+    max_batches: &[usize],
+    backend: BackendKind,
+) -> Vec<CoalescePoint> {
+    let spec = scene_by_name(scene).expect("unknown scene");
+    let cloud = Arc::new(spec.synthesize(sim_scale));
+    // half resolution, as `gemm-gs serve` uses: the sweep measures
+    // scheduling, and must finish in seconds on a CPU testbed
+    let base = workloads::default_camera(&spec);
+    let poses: Vec<_> = (0..4)
+        .map(|i| {
+            let theta = i as f32 / 4.0 * std::f32::consts::TAU;
+            crate::math::Camera::look_at(
+                crate::math::Vec3::new(8.0 * theta.cos(), 2.5, 8.0 * theta.sin()),
+                crate::math::Vec3::ZERO,
+                crate::math::Vec3::new(0.0, 1.0, 0.0),
+                std::f32::consts::FRAC_PI_3,
+                base.width / 2,
+                base.height / 2,
+            )
+        })
+        .collect();
+
+    max_batches
+        .iter()
+        .map(|&max_batch| {
+            let mut scenes = HashMap::new();
+            scenes.insert(spec.name.to_string(), Arc::clone(&cloud));
+            let coord = Coordinator::start(
+                CoordinatorConfig {
+                    workers: 2,
+                    queue_capacity: frames.max(64),
+                    backend,
+                    render: RenderConfig::default(),
+                    max_batch,
+                    batch_timeout: Duration::from_millis(5),
+                },
+                scenes,
+            );
+            let t0 = Instant::now();
+            let rxs: Vec<_> = (0..frames)
+                .map(|i| {
+                    coord.submit(RenderRequest {
+                        id: i as u64,
+                        scene: spec.name.to_string(),
+                        camera: poses[i % poses.len()],
+                    })
+                })
+                .collect();
+            for rx in rxs {
+                let r = rx.recv().expect("coordinator response");
+                assert!(r.error.is_none(), "{:?}", r.error);
+            }
+            let wall = t0.elapsed();
+            let m = coord.metrics();
+            coord.shutdown();
+            CoalescePoint {
+                max_batch,
+                wall_ms: wall.as_secs_f64() * 1e3,
+                fps: frames as f64 / wall.as_secs_f64(),
+                mean_batch: m.mean_batch_size,
+                batches: m.batches,
+            }
+        })
+        .collect()
+}
+
+/// Paper-style rendering of the serving-side sweep.
+pub fn render_coalesced(points: &[CoalescePoint], scene: &str, frames: usize) -> String {
+    let mut t = Table::new(&[
+        "max_batch", "Wall (ms)", "Frames/s", "Mean occupancy", "Batches", "Speedup",
+    ]);
+    let base = points.first().map(|p| p.wall_ms).unwrap_or(0.0);
+    for p in points {
+        t.row(vec![
+            p.max_batch.to_string(),
+            ms(p.wall_ms),
+            format!("{:.1}", p.fps),
+            format!("{:.2}", p.mean_batch),
+            p.batches.to_string(),
+            speedup(base / p.wall_ms),
+        ]);
+    }
+    format!(
+        "Coalescing sweep — {frames} requests on '{scene}' through the coordinator \
+         (measured CPU wall-clock)\n\n{}",
+        t.render()
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +200,24 @@ mod tests {
         let s32 = pts[0].vanilla_ms / pts[0].gemm_ms;
         let s256 = last.vanilla_ms / last.gemm_ms;
         assert!(s256 > s32, "speedup must improve with batch: {s32:.3} vs {s256:.3}");
+    }
+
+    #[test]
+    fn coalescing_sweep_runs_through_the_coordinator() {
+        let pts = run_coalesced("train", 0.0005, 8, &[1, 4], BackendKind::NativeGemm);
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!(p.fps > 0.0 && p.wall_ms > 0.0);
+            assert!(p.batches >= 1);
+            // occupancy is bounded by the policy
+            assert!(p.mean_batch >= 1.0 - 1e-9 && p.mean_batch <= p.max_batch as f64 + 1e-9);
+        }
+        assert_eq!(pts[0].max_batch, 1);
+        // at max_batch = 1 every batch is a singleton by construction
+        assert_eq!(pts[0].batches, 8);
+        assert!((pts[0].mean_batch - 1.0).abs() < 1e-9);
+        let rendered = render_coalesced(&pts, "train", 8);
+        assert!(rendered.contains("max_batch"));
+        assert!(rendered.contains("Coalescing sweep"));
     }
 }

@@ -1,0 +1,259 @@
+//! Cross-request batch coalescing (DESIGN.md §6).
+//!
+//! GEMM-GS's blending scales with the batch dimension (Figure 7), but a
+//! request-per-worker service never exposes that dimension: each worker
+//! renders one frame at a time, so per-frame setup (scene lookup,
+//! preprocess/sort for identical poses, PJRT call overhead on the
+//! artifact backend — EXPERIMENTS.md §Perf) is paid once per request.
+//! The [`BatchScheduler`] converts the pull side of the request queue
+//! into a staged *admit → coalesce → execute* design: a worker drains up
+//! to `max_batch` **compatible** pending requests (same coalescing key —
+//! the service keys on scene + resolution) within a bounded `timeout`
+//! window and hands them downstream as one batch.
+//!
+//! Properties the tests pin down:
+//!
+//! * `max_batch = 1` short-circuits — no window, no reordering — and is
+//!   byte-identical to the pre-batching per-request path.
+//! * Incompatible requests are never merged: the first key mismatch ends
+//!   the batch and the mismatching request (there is at most one, see
+//!   below) seeds the next batch, preserving admission order.
+//! * A partial batch is flushed when the window expires or the queue
+//!   disconnects — coalescing adds at most `timeout` of latency and
+//!   never deadlocks waiting for a full batch.
+//!
+//! The scheduler is generic over the queued item and its key so the
+//! coalescing logic is testable without spinning up render workers.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Coalescing knobs (the `serve --max-batch --batch-timeout-ms` flags).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Largest number of requests merged into one batch. `1` disables
+    /// coalescing entirely (the pre-batching per-request path).
+    pub max_batch: usize,
+    /// How long a partially-filled batch may wait for more compatible
+    /// requests before it is flushed. `ZERO` drains only what is already
+    /// queued, adding no latency.
+    pub timeout: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 1, timeout: Duration::from_millis(2) }
+    }
+}
+
+/// Queue state shared by all workers: the admission channel plus at most
+/// one "stashed" item — a request that arrived inside some worker's
+/// coalescing window but didn't match its batch key. The stash always
+/// seeds the next batch, so admission order is preserved.
+struct Inner<T> {
+    rx: Receiver<T>,
+    stash: Option<T>,
+}
+
+/// Coalescing puller over an mpsc queue: workers call
+/// [`next_batch`](BatchScheduler::next_batch) instead of `recv`.
+///
+/// The whole drain (seed + window) runs under one lock, which serializes
+/// *coalescing* across workers but not *execution* — a worker releases
+/// the lock before rendering its batch. That is the staged design: admit
+/// (producers, bounded channel, backpressure preserved) → coalesce (one
+/// worker at a time, bounded by `timeout`) → execute (all workers in
+/// parallel).
+pub struct BatchScheduler<T, K, F>
+where
+    K: PartialEq,
+    F: Fn(&T) -> K,
+{
+    inner: Mutex<Inner<T>>,
+    policy: BatchPolicy,
+    key_of: F,
+}
+
+impl<T, K, F> BatchScheduler<T, K, F>
+where
+    K: PartialEq,
+    F: Fn(&T) -> K,
+{
+    /// Wrap the consumer end of the admission queue. `key_of` computes
+    /// the coalescing key; only items with equal keys are merged.
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy, key_of: F) -> Self {
+        BatchScheduler { inner: Mutex::new(Inner { rx, stash: None }), policy, key_of }
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Block for the next batch: one seed item (stash first, then a
+    /// blocking `recv`) plus up to `max_batch - 1` compatible followers
+    /// drained within the `timeout` window. Returns `None` once the
+    /// queue has disconnected and the stash is empty — the worker's
+    /// signal to exit.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut inner = self.inner.lock().expect("batch queue lock poisoned");
+
+        let seed = match inner.stash.take() {
+            Some(item) => item,
+            None => match inner.rx.recv() {
+                Ok(item) => item,
+                Err(_) => return None, // disconnected and nothing stashed
+            },
+        };
+
+        let max_batch = self.policy.max_batch.max(1);
+        let mut batch = vec![seed];
+        if max_batch == 1 {
+            return Some(batch);
+        }
+
+        let key = (self.key_of)(&batch[0]);
+        let deadline = Instant::now() + self.policy.timeout;
+        while batch.len() < max_batch {
+            // Drain what is already queued without waiting; only sleep
+            // out the remaining window when the queue runs empty.
+            let item = match inner.rx.try_recv() {
+                Ok(item) => item,
+                Err(TryRecvError::Disconnected) => break,
+                Err(TryRecvError::Empty) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match inner.rx.recv_timeout(deadline - now) {
+                        Ok(item) => item,
+                        // window expired or queue disconnected:
+                        // flush the partial batch
+                        Err(RecvTimeoutError::Timeout)
+                        | Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            };
+            if (self.key_of)(&item) == key {
+                batch.push(item);
+            } else {
+                // incompatible: never merged — it seeds the next batch
+                inner.stash = Some(item);
+                break;
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{channel, sync_channel};
+
+    fn keyed(policy: BatchPolicy) -> (std::sync::mpsc::Sender<(char, u32)>, BatchScheduler<(char, u32), char, impl Fn(&(char, u32)) -> char>) {
+        let (tx, rx) = channel();
+        (tx, BatchScheduler::new(rx, policy, |item: &(char, u32)| item.0))
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let (tx, sched) =
+            keyed(BatchPolicy { max_batch: 4, timeout: Duration::ZERO });
+        for i in 0..10 {
+            tx.send(('a', i)).unwrap();
+        }
+        drop(tx);
+        let sizes: Vec<usize> =
+            std::iter::from_fn(|| sched.next_batch()).map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn incompatible_requests_are_not_merged() {
+        let (tx, sched) =
+            keyed(BatchPolicy { max_batch: 8, timeout: Duration::ZERO });
+        for item in [('a', 0), ('a', 1), ('b', 2), ('a', 3)] {
+            tx.send(item).unwrap();
+        }
+        drop(tx);
+        let batches: Vec<Vec<(char, u32)>> =
+            std::iter::from_fn(|| sched.next_batch()).collect();
+        // the 'b' request ends the first batch, seeds the second, and
+        // admission order is preserved throughout
+        assert_eq!(
+            batches,
+            vec![vec![('a', 0), ('a', 1)], vec![('b', 2)], vec![('a', 3)]]
+        );
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let (tx, rx) = sync_channel::<(char, u32)>(8);
+        let sched = BatchScheduler::new(
+            rx,
+            BatchPolicy { max_batch: 8, timeout: Duration::from_millis(30) },
+            |item: &(char, u32)| item.0,
+        );
+        for i in 0..3 {
+            tx.send(('a', i)).unwrap();
+        }
+        // tx stays alive: only the window expiry can end the batch
+        let t0 = Instant::now();
+        let batch = sched.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(25),
+            "partial batch flushed before the window expired"
+        );
+    }
+
+    #[test]
+    fn max_batch_one_never_waits() {
+        let (tx, sched) =
+            keyed(BatchPolicy { max_batch: 1, timeout: Duration::from_secs(60) });
+        tx.send(('a', 0)).unwrap();
+        tx.send(('a', 1)).unwrap();
+        // a 60 s window must be irrelevant at max_batch = 1
+        let t0 = Instant::now();
+        assert_eq!(sched.next_batch().unwrap(), vec![('a', 0)]);
+        assert_eq!(sched.next_batch().unwrap(), vec![('a', 1)]);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        drop(tx);
+        assert!(sched.next_batch().is_none());
+    }
+
+    #[test]
+    fn coalesces_items_arriving_inside_the_window() {
+        let (tx, rx) = channel::<(char, u32)>();
+        let sched = BatchScheduler::new(
+            rx,
+            BatchPolicy { max_batch: 4, timeout: Duration::from_millis(500) },
+            |item: &(char, u32)| item.0,
+        );
+        tx.send(('a', 0)).unwrap();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            tx.send(('a', 1)).unwrap();
+            tx // keep the channel alive past the assertion
+        });
+        let batch = sched.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|i| i.1).collect::<Vec<_>>(), vec![0, 1]);
+        drop(sender.join().unwrap());
+    }
+
+    #[test]
+    fn disconnect_flushes_then_ends() {
+        let (tx, sched) =
+            keyed(BatchPolicy { max_batch: 8, timeout: Duration::from_secs(60) });
+        tx.send(('a', 0)).unwrap();
+        drop(tx);
+        // disconnect must flush the partial batch immediately, not wait
+        // out the 60 s window
+        let t0 = Instant::now();
+        assert_eq!(sched.next_batch().unwrap().len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert!(sched.next_batch().is_none());
+    }
+}

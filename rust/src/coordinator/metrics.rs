@@ -18,6 +18,11 @@ pub struct Metrics {
     stage_sort_us: AtomicU64,
     stage_blend_us: AtomicU64,
     histogram: [AtomicU64; BUCKETS],
+    // batch-coalescing counters (DESIGN.md §6)
+    batches: AtomicU64,
+    batch_size_sum: AtomicU64,
+    coalesced_frames: AtomicU64,
+    max_batch_size: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -32,6 +37,10 @@ impl Default for Metrics {
             stage_sort_us: AtomicU64::new(0),
             stage_blend_us: AtomicU64::new(0),
             histogram: std::array::from_fn(|_| AtomicU64::new(0)),
+            batches: AtomicU64::new(0),
+            batch_size_sum: AtomicU64::new(0),
+            coalesced_frames: AtomicU64::new(0),
+            max_batch_size: AtomicU64::new(0),
         }
     }
 }
@@ -60,6 +69,18 @@ impl Metrics {
         self.stage_sort_us.fetch_add(timings.sort.as_micros() as u64, Ordering::Relaxed);
         self.stage_blend_us
             .fetch_add(timings.blend.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one executed batch of `size` coalesced frames (`size = 1`
+    /// for the per-request path, so occupancy statistics cover every
+    /// batch the workers ran).
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
+        if size > 1 {
+            self.coalesced_frames.fetch_add(size as u64, Ordering::Relaxed);
+        }
+        self.max_batch_size.fetch_max(size as u64, Ordering::Relaxed);
     }
 
     /// Record a failed request.
@@ -113,6 +134,17 @@ impl Metrics {
             stage_dup: Duration::from_micros(self.stage_dup_us.load(Ordering::Relaxed)),
             stage_sort: Duration::from_micros(self.stage_sort_us.load(Ordering::Relaxed)),
             stage_blend: Duration::from_micros(self.stage_blend_us.load(Ordering::Relaxed)),
+            batches: self.batches.load(Ordering::Relaxed),
+            coalesced_frames: self.coalesced_frames.load(Ordering::Relaxed),
+            max_batch_size: self.max_batch_size.load(Ordering::Relaxed),
+            mean_batch_size: {
+                let b = self.batches.load(Ordering::Relaxed);
+                if b == 0 {
+                    0.0
+                } else {
+                    self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
+                }
+            },
         }
     }
 }
@@ -132,6 +164,14 @@ pub struct MetricsSnapshot {
     pub stage_dup: Duration,
     pub stage_sort: Duration,
     pub stage_blend: Duration,
+    /// Batches executed (one per worker drain, counting singletons).
+    pub batches: u64,
+    /// Frames that were delivered in a batch of size ≥ 2.
+    pub coalesced_frames: u64,
+    /// Largest batch any worker executed.
+    pub max_batch_size: u64,
+    /// Mean batch occupancy, `frames / batches` over recorded batches.
+    pub mean_batch_size: f64,
 }
 
 impl MetricsSnapshot {
@@ -182,6 +222,22 @@ mod tests {
         assert_eq!(s.mean_latency, Duration::ZERO);
         assert_eq!(s.p99, Duration::ZERO);
         assert_eq!(s.blend_fraction(), 0.0);
+    }
+
+    #[test]
+    fn batch_occupancy_tracks() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.batches, s.coalesced_frames, s.max_batch_size), (0, 0, 0));
+        assert_eq!(s.mean_batch_size, 0.0);
+        m.record_batch(1);
+        m.record_batch(4);
+        m.record_batch(3);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.coalesced_frames, 7); // the two batches of size ≥ 2
+        assert_eq!(s.max_batch_size, 4);
+        assert!((s.mean_batch_size - 8.0 / 3.0).abs() < 1e-9);
     }
 
     #[test]

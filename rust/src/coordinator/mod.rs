@@ -2,17 +2,21 @@
 //!
 //! GEMM-GS's contribution lives in the blending kernel (L1/L2), so per
 //! the architecture rules L3 is a lean but real serving layer: a scene
-//! store, a bounded request queue with backpressure, a worker pool
+//! store, a bounded request queue with backpressure, a cross-request
+//! batch coalescer ([`batch`] — DESIGN.md §6), a worker pool
 //! (std threads — tokio is unavailable in this offline image, see
-//! DESIGN.md §1), a tile-parallel frame scheduler, and latency/stage
-//! metrics. The E2E example (`examples/serve_trajectory.rs`) drives a
-//! camera orbit through this service against the PJRT artifact backend.
+//! DESIGN.md §1), a tile-parallel frame scheduler, and latency/stage/
+//! batch-occupancy metrics. The E2E example
+//! (`examples/serve_trajectory.rs`) drives a camera orbit through this
+//! service against the PJRT artifact backend.
 
+pub mod batch;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod service;
 
+pub use batch::{BatchPolicy, BatchScheduler};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{BackendKind, RenderRequest, RenderResponse};
 pub use service::{Coordinator, CoordinatorConfig};

@@ -11,8 +11,9 @@
 //! * **Layer 3** (this crate): the full 3DGS pipeline substrate, the
 //!   GEMM-GS blending transformation, the five published acceleration
 //!   baselines, a PJRT runtime that loads the AOT artifacts, a serving
-//!   coordinator, the GPU analytic performance model, and the benchmark
-//!   harness regenerating every table and figure of the paper.
+//!   coordinator with cross-request batch coalescing (DESIGN.md §6),
+//!   the GPU analytic performance model, and the benchmark harness
+//!   regenerating every table and figure of the paper.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.

@@ -5,12 +5,13 @@
 //! ```text
 //! gemm-gs render --scene train [--backend gemm|vanilla|pjrt] [--out img.ppm]
 //! gemm-gs serve  --frames 64 [--workers 4] [--backend gemm]
+//!                [--max-batch 8] [--batch-timeout-ms 2]
 //! gemm-gs fig1                      # Figure 1  (TC vs CUDA FLOPS)
 //! gemm-gs bench-fig3                # Figure 3  (stage breakdown)
 //! gemm-gs bench-table2              # Table 2   (A100 grid)
 //! gemm-gs bench-fig5                # Figure 5  (H100 grid)
 //! gemm-gs bench-fig6                # Figure 6  (resolution sweep)
-//! gemm-gs bench-fig7                # Figure 7  (batch-size sweep)
+//! gemm-gs bench-fig7                # Figure 7  (batch sweep + coordinator coalescing)
 //! gemm-gs inspect [--scale 0.02]    # Table 1   (workload statistics)
 //! ```
 
@@ -93,12 +94,24 @@ fn main() {
             let scene = args.get("scene", "train");
             let pts = fig7::run(&A100, scale, &scene);
             print!("{}", fig7::render(&pts, &A100, &scene));
+            // the same batch dimension, measured end to end through the
+            // real coordinator (DESIGN.md §6)
+            let frames = args.get_usize("frames", 32);
+            let cps = fig7::run_coalesced(
+                &scene,
+                scale,
+                frames,
+                &[1, 2, 4, 8],
+                BackendKind::NativeGemm,
+            );
+            print!("\n{}", fig7::render_coalesced(&cps, &scene, frames));
         }
         "inspect" => cmd_inspect(scale),
         _ => {
             println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
             println!("subcommands: render serve fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 inspect");
             println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
+            println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
         }
     }
 }
@@ -150,12 +163,17 @@ fn cmd_serve(args: &Args) {
     let mut scenes = HashMap::new();
     let spec = scene_by_name(&args.get("scene", "train")).expect("scene");
     scenes.insert(spec.name.to_string(), Arc::new(spec.synthesize(scale)));
+    let max_batch = args.get_usize("max-batch", 1);
+    let batch_timeout =
+        std::time::Duration::from_secs_f64(args.get_f64("batch-timeout-ms", 2.0) / 1e3);
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: args.get_usize("workers", 4),
             queue_capacity: 64,
             backend,
             render: RenderConfig::default(),
+            max_batch,
+            batch_timeout,
         },
         scenes,
     );
@@ -187,6 +205,12 @@ fn cmd_serve(args: &Args) {
         m.p95,
         m.blend_fraction() * 100.0
     );
+    if max_batch > 1 {
+        println!(
+            "coalescing: {} batches, mean occupancy {:.2}, max batch {}, {} coalesced frames",
+            m.batches, m.mean_batch_size, m.max_batch_size, m.coalesced_frames
+        );
+    }
     coord.shutdown();
 }
 

@@ -105,6 +105,35 @@ impl Camera {
         Some((px, py, cam.z))
     }
 
+    /// The resolution component of the batch scheduler's coalescing key
+    /// (DESIGN.md §6): same-resolution requests share tile-grid shape
+    /// and staging-buffer sizes, so they can blend as one batch. The
+    /// compatibility rule lives here; `coordinator::service` keys on it.
+    #[inline]
+    pub fn resolution_key(&self) -> (u32, u32) {
+        (self.width, self.height)
+    }
+
+    /// True when `other` renders at the same resolution.
+    #[inline]
+    pub fn same_resolution(&self, other: &Camera) -> bool {
+        self.resolution_key() == other.resolution_key()
+    }
+
+    /// Exact pose + intrinsics equality (element-wise on the matrices).
+    /// Two requests with the same view render pixel-identical frames, so
+    /// the batched path runs preprocess/duplicate/sort once and reuses
+    /// the blended image (`pipeline::batch::render_frames`).
+    pub fn same_view(&self, other: &Camera) -> bool {
+        self.same_resolution(other)
+            && self.view.m == other.view.m
+            && self.proj.m == other.proj.m
+            && self.tan_fovx == other.tan_fovx
+            && self.tan_fovy == other.tan_fovy
+            && self.znear == other.znear
+            && self.zfar == other.zfar
+    }
+
     /// Camera position in world space (inverse of the rigid view transform).
     pub fn position(&self) -> Vec3 {
         // view = [R | t]; position = -Rᵀ t
@@ -202,6 +231,34 @@ mod tests {
         // a point at the edge of the fov should project near the image edge
         let half_w = cam.width as f32 / 2.0;
         assert!((cam.focal_x() * cam.tan_fovx - half_w).abs() < 1e-3);
+    }
+
+    #[test]
+    fn same_view_discriminates_pose_and_resolution() {
+        let a = test_cam();
+        let b = test_cam();
+        assert!(a.same_view(&b) && a.same_resolution(&b));
+        // different pose, same resolution
+        let moved = Camera::look_at(
+            Vec3::new(0.0, 0.5, -5.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            640,
+            480,
+        );
+        assert!(!a.same_view(&moved));
+        assert!(a.same_resolution(&moved));
+        // different resolution
+        let small = Camera::look_at(
+            Vec3::new(0.0, 0.0, -5.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            320,
+            240,
+        );
+        assert!(!a.same_resolution(&small) && !a.same_view(&small));
     }
 
     #[test]

@@ -1,0 +1,126 @@
+//! Batched frame rendering — the execute stage of the coordinator's
+//! admit → coalesce → execute design (DESIGN.md §6).
+//!
+//! A batch handed down by the batch scheduler shares one scene and one
+//! resolution by construction. This module renders the whole batch with
+//! **one** blender (whose setup — and, on the artifact backend, whose
+//! compiled-executable cache — is thereby amortized across the batch)
+//! and additionally shares the geometry stages across frames whose
+//! cameras are *identical*: preprocessing, duplication and sorting run
+//! once per unique pose, and the blended image is reused for the
+//! duplicates. Identical poses are the common case for coalesced
+//! traffic (many clients watching the same viewpoint), and exactly the
+//! case Figure 7's batch-size sweep models at the kernel level.
+//!
+//! Determinism contract, pinned by `batched_matches_serial_bytes`: for
+//! any camera list, the outputs are **byte-identical** to calling
+//! [`render_frame`] sequentially with the same blender — coalescing is a
+//! scheduling optimization, never a numerical one.
+
+use super::render::{render_frame, RenderConfig, RenderOutput, StageTimings, TileBlend};
+use crate::math::Camera;
+use crate::scene::gaussian::GaussianCloud;
+
+/// Render one coalesced batch of frames over a single scene.
+///
+/// Per-frame stage timings are attributed to the first frame of each
+/// group of identical cameras; its duplicates report zero stage time
+/// (their cost really was amortized away), so coordinator-level stage
+/// sums never double-count shared work.
+pub fn render_frames(
+    cloud: &GaussianCloud,
+    cameras: &[Camera],
+    cfg: &RenderConfig,
+    blender: &mut dyn TileBlend,
+) -> Vec<RenderOutput> {
+    let mut outputs: Vec<RenderOutput> = Vec::with_capacity(cameras.len());
+    for (i, camera) in cameras.iter().enumerate() {
+        // share the whole pipeline with an earlier identical pose
+        if let Some(j) = (0..i).find(|&j| cameras[j].same_view(camera)) {
+            let (image, stats) = (outputs[j].image.clone(), outputs[j].stats);
+            outputs.push(RenderOutput { image, timings: StageTimings::default(), stats });
+            continue;
+        }
+        outputs.push(render_frame(cloud, camera, cfg, blender));
+    }
+    outputs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec3;
+    use crate::pipeline::render::Blender;
+    use crate::scene::synthetic::scene_by_name;
+
+    fn cam(eye: Vec3) -> Camera {
+        Camera::look_at(
+            eye,
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            160,
+            96,
+        )
+    }
+
+    fn small_cloud() -> GaussianCloud {
+        scene_by_name("train").unwrap().synthesize(0.001)
+    }
+
+    #[test]
+    fn batched_matches_serial_bytes() {
+        let cloud = small_cloud();
+        let cfg = RenderConfig::default();
+        let cameras = [
+            cam(Vec3::new(0.0, 1.0, -8.0)),
+            cam(Vec3::new(2.0, 1.0, -7.0)),
+            cam(Vec3::new(-3.0, 2.0, -6.0)),
+        ];
+
+        let mut serial_blender = Blender::Gemm.instantiate(cfg.batch);
+        let serial: Vec<RenderOutput> = cameras
+            .iter()
+            .map(|c| render_frame(&cloud, c, &cfg, serial_blender.as_mut()))
+            .collect();
+
+        let mut batched_blender = Blender::Gemm.instantiate(cfg.batch);
+        let batched = render_frames(&cloud, &cameras, &cfg, batched_blender.as_mut());
+
+        assert_eq!(batched.len(), serial.len());
+        for (b, s) in batched.iter().zip(serial.iter()) {
+            // bit-exact, not PSNR: coalescing must not change a single value
+            assert!(b.image.data == s.image.data, "batched image diverged");
+            assert_eq!(b.stats.n_pairs, s.stats.n_pairs);
+        }
+    }
+
+    #[test]
+    fn identical_cameras_render_once() {
+        let cloud = small_cloud();
+        let cfg = RenderConfig::default();
+        let c0 = cam(Vec3::new(0.0, 1.0, -8.0));
+        let c1 = cam(Vec3::new(4.0, 1.0, -5.0));
+        let cameras = [c0, c0, c1, c0];
+        let mut blender = Blender::Gemm.instantiate(cfg.batch);
+        let outs = render_frames(&cloud, &cameras, &cfg, blender.as_mut());
+        assert_eq!(outs.len(), 4);
+        // duplicates carry the shared image and zero stage time
+        assert!(outs[1].image.data == outs[0].image.data);
+        assert!(outs[3].image.data == outs[0].image.data);
+        assert_eq!(outs[1].timings.total(), std::time::Duration::ZERO);
+        assert_eq!(outs[3].timings.total(), std::time::Duration::ZERO);
+        // the unique poses actually rendered
+        assert!(outs[0].timings.total() > std::time::Duration::ZERO);
+        assert!(outs[2].timings.total() > std::time::Duration::ZERO);
+        assert!(outs[2].image.data != outs[0].image.data);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let cloud = small_cloud();
+        let cfg = RenderConfig::default();
+        let mut blender = Blender::Vanilla.instantiate(cfg.batch);
+        assert!(render_frames(&cloud, &[], &cfg, blender.as_mut()).is_empty());
+    }
+}

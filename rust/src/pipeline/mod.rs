@@ -2,6 +2,7 @@
 //! preprocessing, duplication, sorting, blending — plus the GEMM-GS
 //! blending variant (Algorithm 2) and the frame-level orchestrator.
 
+pub mod batch;
 pub mod blend_gemm;
 pub mod blend_vanilla;
 pub mod duplicate;
@@ -10,6 +11,7 @@ pub mod render;
 pub mod sort;
 pub mod tile;
 
+pub use batch::render_frames;
 pub use preprocess::{preprocess, Projected, PreprocessConfig};
 pub use render::{render_frame, Blender, RenderConfig, RenderOutput, StageTimings};
 pub use tile::TileGrid;

@@ -1,5 +1,5 @@
 //! Tile-grouped artifact rendering — the §Perf optimization of the
-//! production request path.
+//! production request path, extended across coalesced frames.
 //!
 //! Profiling (EXPERIMENTS.md §Perf) showed one PJRT execution costs
 //! ~14.7 ms end-to-end of which ~13.6 ms is per-call overhead (the
@@ -11,28 +11,52 @@
 //! overhead 16×. Tiles with longer Gaussian lists simply participate in
 //! multiple rounds, carrying their (C, T, done) state exactly like the
 //! single-tile path.
+//!
+//! [`render_frames_tiled`] extends the same amortization across a
+//! coalesced **batch of frames** (DESIGN.md §6): every frame's active
+//! tiles join one shared work pool, so the 16 slots of a grouped call
+//! fill with tiles from whichever frames still have work. Tail rounds —
+//! where a lone frame can no longer fill 16 slots and pads with no-op
+//! state — shrink from once per frame to once per batch, which is the
+//! Figure 7 batch-dimension argument applied to serving.
 
 use super::client::RuntimeClient;
 use crate::math::{Camera, Vec3};
-use crate::pipeline::duplicate::duplicate;
+use crate::pipeline::duplicate::{duplicate, Duplicated};
 use crate::pipeline::preprocess::{preprocess, Projected};
 use crate::pipeline::render::{FrameStats, Image, RenderConfig, RenderOutput, StageTimings};
 use crate::pipeline::sort::{sort_duplicated, tile_ranges};
 use crate::pipeline::tile::TileGrid;
 use crate::pipeline::{TILE_PIXELS, TILE_SIZE};
 use anyhow::Result;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-const ENTRY: &str = "gemm_blend_tiles16";
+/// Manifest entry of the 16-tile-grouped blend kernel; the coordinator
+/// checks for it to decide whether the pooled path is available.
+pub const TILED_ENTRY: &str = "gemm_blend_tiles16";
+const ENTRY: &str = TILED_ENTRY;
 
 /// Per-tile blending state carried across rounds.
 struct TileState {
+    /// Index into the batch's frame list (always 0 for single-frame).
+    frame: usize,
     tile_id: u32,
     /// Next offset into the tile's sorted list.
     cursor: usize,
     c: Vec<f32>,
     t: Vec<f32>,
     done: Vec<f32>,
+}
+
+/// One frame's geometry stages, run natively before the pooled blend.
+struct PreparedFrame {
+    grid: TileGrid,
+    projected: Projected,
+    dup: Duplicated,
+    ranges: Vec<(u32, u32)>,
+    t_pre: Duration,
+    t_dup: Duration,
+    t_sort: Duration,
 }
 
 /// Render one frame through the 16-tile-grouped artifact path.
@@ -42,42 +66,61 @@ pub fn render_frame_tiled(
     camera: &Camera,
     cfg: &RenderConfig,
 ) -> Result<RenderOutput> {
+    let mut outs = render_frames_tiled(client, cloud, std::slice::from_ref(camera), cfg)?;
+    Ok(outs.pop().expect("one camera in, one frame out"))
+}
+
+/// Render a coalesced batch of frames of one scene, pooling every
+/// frame's tiles into shared 16-tile grouped PJRT calls.
+pub fn render_frames_tiled(
+    client: &mut RuntimeClient,
+    cloud: &crate::scene::gaussian::GaussianCloud,
+    cameras: &[Camera],
+    cfg: &RenderConfig,
+) -> Result<Vec<RenderOutput>> {
+    if cameras.is_empty() {
+        return Ok(Vec::new());
+    }
     let group = client.manifest().entries.contains_key(ENTRY).then_some(16).unwrap_or(16);
     let batch = client.manifest().batch;
     let mp = client.manifest().mp.clone();
-    let grid = TileGrid::new(camera.width, camera.height);
+
+    // geometry stages per frame (native, timed individually)
+    let mut prepared: Vec<PreparedFrame> = Vec::with_capacity(cameras.len());
+    for camera in cameras {
+        let grid = TileGrid::new(camera.width, camera.height);
+        let t0 = Instant::now();
+        let projected = preprocess(cloud, camera, &cfg.preprocess);
+        let t_pre = t0.elapsed();
+
+        let t0 = Instant::now();
+        let mut dup = duplicate(&projected, &grid);
+        let t_dup = t0.elapsed();
+
+        let t0 = Instant::now();
+        sort_duplicated(&mut dup);
+        let ranges = tile_ranges(&dup.keys, grid.num_tiles());
+        let t_sort = t0.elapsed();
+
+        prepared.push(PreparedFrame { grid, projected, dup, ranges, t_pre, t_dup, t_sort });
+    }
 
     let t0 = Instant::now();
-    let projected = preprocess(cloud, camera, &cfg.preprocess);
-    let t_pre = t0.elapsed();
-
-    let t0 = Instant::now();
-    let mut dup = duplicate(&projected, &grid);
-    let t_dup = t0.elapsed();
-
-    let t0 = Instant::now();
-    sort_duplicated(&mut dup);
-    let ranges = tile_ranges(&dup.keys, grid.num_tiles());
-    let t_sort = t0.elapsed();
-
-    let t0 = Instant::now();
-    // states for non-empty tiles only
-    let mut states: Vec<TileState> = ranges
-        .iter()
-        .enumerate()
-        .filter(|(_, &(s, e))| e > s)
-        .map(|(tid, _)| TileState {
-            tile_id: tid as u32,
-            cursor: 0,
-            c: vec![0.0; TILE_PIXELS * 3],
-            t: vec![1.0; TILE_PIXELS],
-            done: vec![0.0; TILE_PIXELS],
-        })
-        .collect();
-    let n_active_tiles = states.len();
-    let mut max_len = 0usize;
-    for &(s, e) in &ranges {
-        max_len = max_len.max((e - s) as usize);
+    // states for every frame's non-empty tiles, pooled into one work set
+    let mut states: Vec<TileState> = Vec::new();
+    for (frame, pf) in prepared.iter().enumerate() {
+        for (tid, &(s, e)) in pf.ranges.iter().enumerate() {
+            if e > s {
+                states.push(TileState {
+                    frame,
+                    tile_id: tid as u32,
+                    cursor: 0,
+                    c: vec![0.0; TILE_PIXELS * 3],
+                    t: vec![1.0; TILE_PIXELS],
+                    done: vec![0.0; TILE_PIXELS],
+                });
+            }
+        }
     }
 
     // staging buffers for one grouped call
@@ -96,27 +139,28 @@ pub fn render_frame_tiled(
     while !alive.is_empty() {
         let mut next_alive = Vec::with_capacity(alive.len());
         for chunk_of_tiles in alive.chunks(g) {
-            // stage up to g tiles' next batches
+            // stage up to g tiles' next batches (tiles of any frame)
             opac.iter_mut().for_each(|v| *v = 0.0); // padding rows no-op
             for (slot, &si) in chunk_of_tiles.iter().enumerate() {
                 let st = &states[si];
-                let (s, e) = ranges[st.tile_id as usize];
-                let list = &dup.values[s as usize..e as usize];
+                let pf = &prepared[st.frame];
+                let (s, e) = pf.ranges[st.tile_id as usize];
+                let list = &pf.dup.values[s as usize..e as usize];
                 let take = (list.len() - st.cursor).min(batch);
-                let origin = grid.tile_origin(st.tile_id);
+                let origin = pf.grid.tile_origin(st.tile_id);
                 let (x0, y0) = (origin.0 as f32, origin.1 as f32);
                 for r in 0..take {
                     let gi = list[st.cursor + r] as usize;
                     let base = (slot * batch + r) * 3;
-                    let cn = projected.conics[gi];
+                    let cn = pf.projected.conics[gi];
                     conics[base] = cn[0];
                     conics[base + 1] = cn[1];
                     conics[base + 2] = cn[2];
-                    let m = projected.means2d[gi];
+                    let m = pf.projected.means2d[gi];
                     offsets[(slot * batch + r) * 2] = m.x - x0;
                     offsets[(slot * batch + r) * 2 + 1] = m.y - y0;
-                    opac[slot * batch + r] = projected.opacities[gi];
-                    let c = projected.colors[gi];
+                    opac[slot * batch + r] = pf.projected.opacities[gi];
+                    let c = pf.projected.colors[gi];
                     colors[base] = c.x;
                     colors[base + 1] = c.y;
                     colors[base + 2] = c.z;
@@ -133,15 +177,6 @@ pub fn render_frame_tiled(
                     .for_each(|v| *v = 1.0);
             }
 
-            let gb = (g * batch) as i64;
-            let gp = (g * TILE_PIXELS) as i64;
-            let dims = [
-                [g as i64, 256, 3],
-                [g as i64, 256, 2],
-                [g as i64, 256, 0],
-                [g as i64, 256, 3],
-            ];
-            let _ = (gb, gp, dims);
             let outs = client.run_f32(
                 ENTRY,
                 &[
@@ -164,7 +199,7 @@ pub fn render_frame_tiled(
                 st.t.copy_from_slice(&outs[1][slot * TILE_PIXELS..(slot + 1) * TILE_PIXELS]);
                 st.done
                     .copy_from_slice(&outs[2][slot * TILE_PIXELS..(slot + 1) * TILE_PIXELS]);
-                let (s, e) = ranges[st.tile_id as usize];
+                let (s, e) = prepared[st.frame].ranges[st.tile_id as usize];
                 let len = (e - s) as usize;
                 st.cursor = (st.cursor + batch).min(len);
                 let all_done = st.done.iter().all(|&d| d > 0.5);
@@ -175,17 +210,28 @@ pub fn render_frame_tiled(
         }
         alive = next_alive;
     }
+    let _ = calls;
 
-    // composite
-    let mut image = Image::new(camera.width, camera.height);
-    // background for empty tiles
-    if cfg.background != Vec3::ZERO {
-        for px in image.data.iter_mut() {
-            *px = [cfg.background.x, cfg.background.y, cfg.background.z];
-        }
-    }
+    // composite each frame (still inside the blend timing window, as in
+    // the single-frame path)
+    let mut images: Vec<Image> = cameras
+        .iter()
+        .map(|camera| {
+            let mut image = Image::new(camera.width, camera.height);
+            if cfg.background != Vec3::ZERO {
+                for px in image.data.iter_mut() {
+                    *px = [cfg.background.x, cfg.background.y, cfg.background.z];
+                }
+            }
+            image
+        })
+        .collect();
+    let mut active_tiles = vec![0usize; cameras.len()];
     for st in &states {
-        let origin = grid.tile_origin(st.tile_id);
+        active_tiles[st.frame] += 1;
+        let camera = &cameras[st.frame];
+        let origin = prepared[st.frame].grid.tile_origin(st.tile_id);
+        let image = &mut images[st.frame];
         for ly in 0..TILE_SIZE {
             let py = origin.1 + ly as u32;
             if py >= camera.height {
@@ -206,26 +252,37 @@ pub fn render_frame_tiled(
             }
         }
     }
-    let t_blend = t0.elapsed();
-    let _ = calls;
 
-    Ok(RenderOutput {
-        image,
-        timings: StageTimings {
-            preprocess: t_pre,
-            duplicate: t_dup,
-            sort: t_sort,
-            blend: t_blend,
-        },
-        stats: FrameStats {
-            n_gaussians: cloud.len(),
-            n_visible: projected.len(),
-            n_pairs: dup.len(),
-            n_tiles: grid.num_tiles(),
-            n_active_tiles,
-            max_tile_len: max_len,
-        },
-    })
+    // blend wall-clock (kernel rounds + composite) is shared work,
+    // attributed evenly so coordinator-level sums don't double-count
+    let t_blend_total = t0.elapsed();
+    let blend_each = t_blend_total / cameras.len() as u32;
+
+    let mut outputs = Vec::with_capacity(cameras.len());
+    for (frame, pf) in prepared.iter().enumerate() {
+        let mut max_len = 0usize;
+        for &(s, e) in &pf.ranges {
+            max_len = max_len.max((e - s) as usize);
+        }
+        outputs.push(RenderOutput {
+            image: std::mem::replace(&mut images[frame], Image::new(0, 0)),
+            timings: StageTimings {
+                preprocess: pf.t_pre,
+                duplicate: pf.t_dup,
+                sort: pf.t_sort,
+                blend: blend_each,
+            },
+            stats: FrameStats {
+                n_gaussians: cloud.len(),
+                n_visible: pf.projected.len(),
+                n_pairs: pf.dup.len(),
+                n_tiles: pf.grid.num_tiles(),
+                n_active_tiles: active_tiles[frame],
+                max_tile_len: max_len,
+            },
+        });
+    }
+    Ok(outputs)
 }
 
 /// Expose the projected set for tests that need it.
@@ -285,5 +342,42 @@ mod tests {
         // empty regions carry the background
         let has_bg = out.image.data.iter().any(|px| px[0] > 0.9 && px[1] < 0.1);
         assert!(has_bg);
+    }
+
+    #[test]
+    fn batched_tiled_matches_per_frame_tiled() {
+        if !artifacts_available() {
+            return;
+        }
+        let spec = scene_by_name("train").unwrap();
+        let cloud = spec.synthesize(0.0005);
+        let mut cam_a = default_camera(&spec);
+        cam_a.width = 96;
+        cam_a.height = 64;
+        let mut cam_b = cam_a;
+        cam_b.view.m[3] += 0.25; // nudge the pose
+        let cfg = RenderConfig::default();
+        let mut client = RuntimeClient::from_default_dir().unwrap();
+
+        let batched =
+            render_frames_tiled(&mut client, &cloud, &[cam_a, cam_b], &cfg).unwrap();
+        let one_a = render_frame_tiled(&mut client, &cloud, &cam_a, &cfg).unwrap();
+        let one_b = render_frame_tiled(&mut client, &cloud, &cam_b, &cfg).unwrap();
+        assert_eq!(batched.len(), 2);
+        assert!(batched[0].image.data == one_a.image.data);
+        assert!(batched[1].image.data == one_b.image.data);
+        assert_eq!(batched[0].stats.n_pairs, one_a.stats.n_pairs);
+        assert_eq!(batched[1].stats.n_pairs, one_b.stats.n_pairs);
+    }
+
+    #[test]
+    fn empty_camera_list_is_empty() {
+        if !artifacts_available() {
+            return;
+        }
+        let cloud = scene_by_name("train").unwrap().synthesize(0.0005);
+        let cfg = RenderConfig::default();
+        let mut client = RuntimeClient::from_default_dir().unwrap();
+        assert!(render_frames_tiled(&mut client, &cloud, &[], &cfg).unwrap().is_empty());
     }
 }

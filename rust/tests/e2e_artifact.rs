@@ -57,6 +57,7 @@ fn coordinator_serves_through_pjrt() {
             queue_capacity: 4,
             backend: BackendKind::ArtifactGemm,
             render: RenderConfig::default(),
+            ..CoordinatorConfig::default()
         },
         scenes,
     );

@@ -1,0 +1,163 @@
+//! Integration tests for cross-request batch coalescing (DESIGN.md §6):
+//! the public Coordinator API end to end — determinism against the
+//! per-request path, compatibility rules, and occupancy metrics.
+
+use gemm_gs::coordinator::{
+    BackendKind, Coordinator, CoordinatorConfig, RenderRequest,
+};
+use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::pipeline::render::{render_frame, RenderConfig};
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+const SCALE: f64 = 0.001;
+
+fn coordinator(max_batch: usize, timeout: Duration, workers: usize) -> Coordinator {
+    let mut scenes = HashMap::new();
+    scenes.insert(
+        "train".to_string(),
+        Arc::new(scene_by_name("train").unwrap().synthesize(SCALE)),
+    );
+    Coordinator::start(
+        CoordinatorConfig {
+            workers,
+            queue_capacity: 64,
+            backend: BackendKind::NativeGemm,
+            render: RenderConfig::default(),
+            max_batch,
+            batch_timeout: timeout,
+        },
+        scenes,
+    )
+}
+
+fn orbit_camera(i: usize, n: usize) -> Camera {
+    let theta = i as f32 / n as f32 * std::f32::consts::TAU;
+    Camera::look_at(
+        Vec3::new(8.0 * theta.cos(), 2.5, 8.0 * theta.sin()),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        160,
+        96,
+    )
+}
+
+/// The acceptance-criterion test: a `max_batch = 1` coordinator produces
+/// byte-identical output to rendering the same requests directly through
+/// `render_frame` (the pre-coalescing per-request path).
+#[test]
+fn max_batch_one_matches_per_request_path_bitwise() {
+    let n = 6;
+    let coord = coordinator(1, Duration::from_millis(50), 2);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            coord.submit(RenderRequest {
+                id: i as u64,
+                scene: "train".into(),
+                camera: orbit_camera(i, n),
+            })
+        })
+        .collect();
+    let served: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    coord.shutdown();
+
+    let cloud = scene_by_name("train").unwrap().synthesize(SCALE);
+    let cfg = RenderConfig::default();
+    let mut blender = BackendKind::NativeGemm.instantiate(cfg.batch).unwrap();
+    for (i, resp) in served.iter().enumerate() {
+        assert!(resp.error.is_none());
+        let direct = render_frame(&cloud, &orbit_camera(i, n), &cfg, blender.as_mut());
+        assert!(
+            resp.image.as_ref().unwrap().data == direct.image.data,
+            "frame {i}: served image differs from the per-request path"
+        );
+    }
+}
+
+/// Coalescing itself must also be output-invariant: a `max_batch = 8`
+/// coordinator returns the same bytes as `max_batch = 1` for the same
+/// request stream (scheduling optimization, not a numerical one).
+#[test]
+fn coalesced_output_equals_uncoalesced_output() {
+    let n = 8;
+    let run = |max_batch: usize| -> Vec<Vec<[f32; 3]>> {
+        let coord = coordinator(max_batch, Duration::from_millis(200), 1);
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                coord.submit(RenderRequest {
+                    id: i as u64,
+                    // two distinct poses alternating → batches mix poses
+                    camera: orbit_camera(i % 2, 4),
+                    scene: "train".into(),
+                })
+            })
+            .collect();
+        let imgs = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().image.unwrap().data)
+            .collect();
+        coord.shutdown();
+        imgs
+    };
+    let single = run(1);
+    let batched = run(8);
+    for (i, (a, b)) in single.iter().zip(batched.iter()).enumerate() {
+        assert!(a == b, "frame {i} differs between max_batch 1 and 8");
+    }
+}
+
+#[test]
+fn unknown_scene_in_a_batch_errors_cleanly() {
+    let coord = coordinator(4, Duration::from_millis(100), 1);
+    let bad: Vec<_> = (0..3)
+        .map(|i| {
+            coord.submit(RenderRequest {
+                id: i,
+                scene: "nope".into(),
+                camera: orbit_camera(0, 4),
+            })
+        })
+        .collect();
+    for rx in bad {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_some());
+        assert!(r.image.is_none());
+    }
+    // the service stays healthy for good requests afterwards
+    let ok = coord.render_sync(RenderRequest {
+        id: 9,
+        scene: "train".into(),
+        camera: orbit_camera(0, 4),
+    });
+    assert!(ok.error.is_none());
+    assert_eq!(coord.metrics().errors, 3);
+    coord.shutdown();
+}
+
+#[test]
+fn occupancy_metrics_are_consistent() {
+    let n = 12;
+    let coord = coordinator(4, Duration::from_millis(300), 1);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            coord.submit(RenderRequest {
+                id: i as u64,
+                scene: "train".into(),
+                camera: orbit_camera(0, 4),
+            })
+        })
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().error.is_none());
+    }
+    let m = coord.metrics();
+    assert_eq!(m.frames, n as u64);
+    // mean occupancy × batches = frames (every frame went through a batch)
+    assert!((m.mean_batch_size * m.batches as f64 - n as f64).abs() < 1e-9);
+    assert!(m.max_batch_size <= 4);
+    assert!(m.batches >= (n as u64 + 3) / 4); // can't beat perfect packing
+    coord.shutdown();
+}

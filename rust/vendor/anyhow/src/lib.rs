@@ -1,0 +1,165 @@
+//! Offline shim of the `anyhow` API surface used by `gemm-gs`.
+//!
+//! The build image has no crates.io access (DESIGN.md §1), so this path
+//! crate provides the subset the codebase relies on with the same names
+//! and semantics: [`Error`] (a context chain over a root cause),
+//! [`Result`], the [`anyhow!`] and [`ensure!`] macros, and the
+//! [`Context`] extension trait for `Result`. Swapping this for the real
+//! `anyhow` crate requires no source changes.
+
+use std::fmt;
+
+/// A dynamic error: a root cause plus a stack of human-readable context
+/// lines, newest first — mirroring `anyhow::Error`'s rendering.
+pub struct Error {
+    /// Context chain; `chain[0]` is the outermost (most recent) context,
+    /// the last element is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Error from any displayable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context line.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, outermost first, like anyhow
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            writeln!(f, "\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                writeln!(f, "    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any concrete `std::error::Error` converts via `?`, as with anyhow's
+/// blanket `From`. (`Error` itself deliberately does not implement
+/// `std::error::Error`, which keeps this impl coherent.)
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result`. Broader than real anyhow (any `Display` error converts),
+/// which is harmless for a shim.
+pub trait Context<T> {
+    /// Attach a context line, converting the error to [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-built context line.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error when a condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($rest:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($rest)*));
+        }
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($rest:tt)*) => {
+        return Err($crate::anyhow!($($rest)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let e: Error = Err::<(), _>(io_err()).context("loading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: no such file");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = anyhow!("bad value {x} of {}", 7);
+        assert_eq!(e.root_cause(), "bad value 3 of 7");
+        let from_value = anyhow!(String::from("plain"));
+        assert_eq!(from_value.root_cause(), "plain");
+        fn guarded(v: i32) -> Result<i32> {
+            ensure!(v > 0, "v must be positive, got {v}");
+            Ok(v)
+        }
+        assert!(guarded(1).is_ok());
+        assert_eq!(guarded(-2).unwrap_err().root_cause(), "v must be positive, got -2");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().root_cause(), "no such file");
+    }
+}
