@@ -79,7 +79,7 @@ fn main() {
                 w,
                 h,
             );
-            coord.submit(RenderRequest { id: i as u64, scene: scene.into(), camera })
+            coord.submit(RenderRequest::new(i as u64, scene, camera))
         })
         .collect();
 

@@ -47,6 +47,10 @@ impl AccelMethod for C3dgs {
         "c3dgs"
     }
 
+    fn transforms_model(&self) -> bool {
+        true
+    }
+
     fn prepare_model(&self, cloud: &GaussianCloud) -> GaussianCloud {
         let n = cloud.len();
         if n == 0 {

@@ -31,6 +31,10 @@ impl AccelMethod for FlashGs {
         tile_max_alpha(p, i, tx, ty, grid) >= self.alpha_threshold
     }
 
+    fn vetoes_pairs(&self) -> bool {
+        true
+    }
+
     // slightly richer intersection math per candidate pair
     fn preprocess_cost_factor(&self) -> f64 {
         1.15

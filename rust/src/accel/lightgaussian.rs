@@ -43,6 +43,10 @@ impl AccelMethod for LightGaussian {
         "LightGaussian"
     }
 
+    fn transforms_model(&self) -> bool {
+        true
+    }
+
     fn prepare_model(&self, cloud: &GaussianCloud) -> GaussianCloud {
         // ---- pruning ----
         let n = cloud.len();

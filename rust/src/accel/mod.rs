@@ -24,7 +24,12 @@ use crate::pipeline::tile::TileGrid;
 use crate::scene::gaussian::GaussianCloud;
 
 /// A 3DGS acceleration baseline.
-pub trait AccelMethod {
+///
+/// `Send + Sync` is a supertrait so one `Arc<dyn AccelMethod>` can ride
+/// inside [`crate::pipeline::render::RenderConfig`] across the
+/// coordinator's worker threads — the methods are plain parameter
+/// structs, so every implementation satisfies the bound for free.
+pub trait AccelMethod: Send + Sync {
     /// Method name as in the paper's tables.
     fn name(&self) -> &'static str;
 
@@ -34,11 +39,27 @@ pub trait AccelMethod {
         cloud.clone()
     }
 
+    /// True when [`prepare_model`](Self::prepare_model) is a genuine
+    /// transformation worth caching per `(scene, method)` in the
+    /// coordinator's scene store (c3dgs, LightGaussian). Methods that
+    /// leave the model untouched skip the cache and render the base
+    /// cloud directly.
+    fn transforms_model(&self) -> bool {
+        false
+    }
+
     /// Per-(Gaussian, tile) veto evaluated during duplication
     /// (preprocessing methods). Return `false` to drop the pair.
     /// The default keeps the vanilla rectangle-overlap behaviour.
     fn keep_pair(&self, _p: &Projected, _i: usize, _tx: u32, _ty: u32, _grid: &TileGrid) -> bool {
         true
+    }
+
+    /// True when [`keep_pair`](Self::keep_pair) can veto pairs — lets
+    /// [`crate::pipeline::plan::plan_frame`] skip the per-candidate
+    /// virtual call entirely for methods that never cull.
+    fn vetoes_pairs(&self) -> bool {
+        false
     }
 
     /// Multiplier on per-pixel blending compute that CANNOT be hidden by
@@ -65,11 +86,6 @@ pub trait AccelMethod {
     /// paper measures only +1.19x on top of it (vs +1.42x on vanilla).
     fn movable_quad_fraction(&self) -> f64 {
         1.0
-    }
-
-    /// Legacy aggregate view (pixel tax) kept for reporting.
-    fn blend_cost_factor(&self) -> f64 {
-        self.pixel_cost_factor()
     }
 
     /// Multiplier on per-Gaussian preprocessing cost in the GPU model.
@@ -102,6 +118,82 @@ pub fn all_methods() -> Vec<Box<dyn AccelMethod>> {
         Box::new(c3dgs::C3dgs::default()),
         Box::new(lightgaussian::LightGaussian::default()),
     ]
+}
+
+/// Nameable handle on the Table 2 method set — the value that travels
+/// through CLI flags, [`crate::coordinator::RenderRequest`]s, the batch
+/// coalescing key, and the coordinator's per-`(scene, method)`
+/// prepared-model cache. `Copy + Eq + Hash` where `dyn AccelMethod`
+/// cannot be; [`instantiate`](AccelKind::instantiate) converts back to
+/// the behavioural object (with default parameters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum AccelKind {
+    /// No acceleration method ("Vanilla 3DGS" rows).
+    #[default]
+    Vanilla,
+    /// FlashGS precise intersection + opacity skipping.
+    FlashGs,
+    /// StopThePop tile culling + resort tax.
+    StopThePop,
+    /// Speedy-Splat SnugBox + AccuTile.
+    SpeedySplat,
+    /// c3dgs compact codebook representation.
+    C3dgs,
+    /// LightGaussian pruning + SH VQ.
+    LightGaussian,
+}
+
+impl AccelKind {
+    /// Every kind, paper order (vanilla first).
+    pub fn all() -> [AccelKind; 6] {
+        [
+            AccelKind::Vanilla,
+            AccelKind::FlashGs,
+            AccelKind::StopThePop,
+            AccelKind::SpeedySplat,
+            AccelKind::C3dgs,
+            AccelKind::LightGaussian,
+        ]
+    }
+
+    /// Parse the CLI spelling (`--accel <name>`).
+    pub fn parse(s: &str) -> Option<AccelKind> {
+        Some(match s {
+            "vanilla" | "none" => AccelKind::Vanilla,
+            "flashgs" => AccelKind::FlashGs,
+            "stopthepop" => AccelKind::StopThePop,
+            "speedysplat" | "speedy-splat" => AccelKind::SpeedySplat,
+            "c3dgs" => AccelKind::C3dgs,
+            "lightgaussian" => AccelKind::LightGaussian,
+            _ => return None,
+        })
+    }
+
+    /// CLI spelling (round-trips through [`parse`](AccelKind::parse)).
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            AccelKind::Vanilla => "vanilla",
+            AccelKind::FlashGs => "flashgs",
+            AccelKind::StopThePop => "stopthepop",
+            AccelKind::SpeedySplat => "speedysplat",
+            AccelKind::C3dgs => "c3dgs",
+            AccelKind::LightGaussian => "lightgaussian",
+        }
+    }
+
+    /// Instantiate the method with its default parameters.
+    pub fn instantiate(self) -> std::sync::Arc<dyn AccelMethod> {
+        match self {
+            AccelKind::Vanilla => std::sync::Arc::new(Vanilla),
+            AccelKind::FlashGs => std::sync::Arc::new(flashgs::FlashGs::default()),
+            AccelKind::StopThePop => std::sync::Arc::new(stopthepop::StopThePop::default()),
+            AccelKind::SpeedySplat => std::sync::Arc::new(speedysplat::SpeedySplat::default()),
+            AccelKind::C3dgs => std::sync::Arc::new(c3dgs::C3dgs::default()),
+            AccelKind::LightGaussian => {
+                std::sync::Arc::new(lightgaussian::LightGaussian::default())
+            }
+        }
+    }
 }
 
 /// Shared helper: the **exact** maximum α a Gaussian can contribute
@@ -204,7 +296,28 @@ mod tests {
         let p = one_projected(Vec2::new(1.0, 1.0), [1.0, 0.0, 1.0], 0.001);
         let v = Vanilla;
         assert!(v.keep_pair(&p, 0, 3, 3, &grid));
-        assert_eq!(v.blend_cost_factor(), 1.0);
+        assert_eq!(v.pixel_cost_factor(), 1.0);
+        assert!(!v.vetoes_pairs());
+        assert!(!v.transforms_model());
         assert!(!v.is_lossy());
+    }
+
+    #[test]
+    fn kind_roundtrips_and_matches_registry() {
+        for kind in AccelKind::all() {
+            assert_eq!(AccelKind::parse(kind.cli_name()), Some(kind));
+        }
+        assert_eq!(AccelKind::parse("nope"), None);
+        // instantiated names line up with the all_methods() registry
+        let names: Vec<&str> =
+            AccelKind::all().iter().map(|k| k.instantiate().name()).collect();
+        let registry: Vec<&str> = all_methods().iter().map(|m| m.name()).collect();
+        assert_eq!(names, registry);
+        // only the compression methods transform the model; only the
+        // preprocessing methods veto pairs
+        assert!(AccelKind::C3dgs.instantiate().transforms_model());
+        assert!(AccelKind::LightGaussian.instantiate().transforms_model());
+        assert!(AccelKind::FlashGs.instantiate().vetoes_pairs());
+        assert!(!AccelKind::Vanilla.instantiate().vetoes_pairs());
     }
 }

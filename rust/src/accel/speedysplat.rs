@@ -39,6 +39,10 @@ impl AccelMethod for SpeedySplat {
         "Speedy-Splat"
     }
 
+    fn vetoes_pairs(&self) -> bool {
+        true
+    }
+
     fn keep_pair(&self, p: &Projected, i: usize, tx: u32, ty: u32, grid: &TileGrid) -> bool {
         // SnugBox prefilter: tile must intersect the tight AABB
         let (hx, hy) = snugbox_half_extents(p.conics[i], p.opacities[i]);
@@ -120,8 +124,10 @@ mod tests {
         let projected = preprocess(&cloud, &camera, &PreprocessConfig::default());
         let box_only = SpeedySplat { accutile: false };
         let full = SpeedySplat { accutile: true };
-        let m1 = |i: usize, tx: u32, ty: u32| box_only.keep_pair(&projected, i, tx, ty, &grid);
-        let m2 = |i: usize, tx: u32, ty: u32| full.keep_pair(&projected, i, tx, ty, &grid);
+        let m1 =
+            |p: &Projected, i: usize, tx: u32, ty: u32| box_only.keep_pair(p, i, tx, ty, &grid);
+        let m2 =
+            |p: &Projected, i: usize, tx: u32, ty: u32| full.keep_pair(p, i, tx, ty, &grid);
         let n1 = duplicate_with_mask(&projected, &grid, Some(&m1)).len();
         let n2 = duplicate_with_mask(&projected, &grid, Some(&m2)).len();
         assert!(n2 <= n1, "AccuTile must only remove pairs ({n2} vs {n1})");

@@ -34,6 +34,10 @@ impl AccelMethod for StopThePop {
         tile_max_alpha(p, i, tx, ty, grid) >= self.alpha_threshold
     }
 
+    fn vetoes_pairs(&self) -> bool {
+        true
+    }
+
     fn pixel_cost_factor(&self) -> f64 {
         self.resort_tax
     }
@@ -70,10 +74,10 @@ mod tests {
 
         let vanilla = duplicate_with_mask(&projected, &grid, None).len();
         let m_stp =
-            |i: usize, tx: u32, ty: u32| stp.keep_pair(&projected, i, tx, ty, &grid);
+            |p: &Projected, i: usize, tx: u32, ty: u32| stp.keep_pair(p, i, tx, ty, &grid);
         let stp_pairs = duplicate_with_mask(&projected, &grid, Some(&m_stp)).len();
         let m_fgs =
-            |i: usize, tx: u32, ty: u32| fgs.keep_pair(&projected, i, tx, ty, &grid);
+            |p: &Projected, i: usize, tx: u32, ty: u32| fgs.keep_pair(p, i, tx, ty, &grid);
         let fgs_pairs = duplicate_with_mask(&projected, &grid, Some(&m_fgs)).len();
 
         assert!(stp_pairs <= vanilla);

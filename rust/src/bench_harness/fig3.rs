@@ -6,7 +6,7 @@
 
 use super::report::Table;
 use super::workloads::measure_workload;
-use crate::accel::Vanilla;
+use crate::accel::{AccelKind, Vanilla};
 use crate::perfmodel::breakdown::{fig3_breakdown, mean_blend_fraction, BreakdownRow};
 use crate::perfmodel::GpuSpec;
 use crate::pipeline::render::{render_frame, Blender, RenderConfig, StageTimings};
@@ -26,9 +26,17 @@ pub fn run_modelled(gpu: &GpuSpec, sim_scale: f64) -> Vec<BreakdownRow> {
 
 /// Measured CPU stage timings for one scene at simulation scale.
 pub fn run_measured_cpu(scene: &str, sim_scale: f64) -> StageTimings {
+    run_measured_cpu_with(scene, sim_scale, AccelKind::Vanilla)
+}
+
+/// Measured CPU stage timings under an acceleration method: the
+/// method's transform and pair veto run through the FramePlan stage, so
+/// the breakdown shows where the method shifts the frame's time.
+pub fn run_measured_cpu_with(scene: &str, sim_scale: f64, kind: AccelKind) -> StageTimings {
     let spec = crate::scene::synthetic::scene_by_name(scene).expect("unknown scene");
-    let m = measure_workload(&spec, sim_scale, &Vanilla, 1.0);
-    let cfg = RenderConfig::default();
+    let method = kind.instantiate();
+    let m = measure_workload(&spec, sim_scale, method.as_ref(), 1.0);
+    let cfg = RenderConfig::default().with_accel(kind.instantiate());
     let mut blender = Blender::Vanilla.instantiate(cfg.batch);
     render_frame(&m.cloud, &m.camera, &cfg, blender.as_mut()).timings
 }

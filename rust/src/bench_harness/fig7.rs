@@ -126,11 +126,11 @@ pub fn run_coalesced(
             let t0 = Instant::now();
             let rxs: Vec<_> = (0..frames)
                 .map(|i| {
-                    coord.submit(RenderRequest {
-                        id: i as u64,
-                        scene: spec.name.to_string(),
-                        camera: poses[i % poses.len()],
-                    })
+                    coord.submit(RenderRequest::new(
+                        i as u64,
+                        spec.name.to_string(),
+                        poses[i % poses.len()],
+                    ))
                 })
                 .collect();
             for rx in rxs {

@@ -3,14 +3,18 @@
 //!
 //! Workloads are *measured* on the simulator (per scene × method — the
 //! methods genuinely change pair counts), extrapolated to Table 1 scale,
-//! and priced by the calibrated GPU model. Additionally the harness can
-//! measure native CPU wall-clock for the two blenders (the honest
-//! second column of EXPERIMENTS.md).
+//! and priced by the calibrated GPU model. [`run_measured`] additionally
+//! measures real CPU wall-clock for every `method × {vanilla, gemm}`
+//! cell through the actual pipeline — every method's veto runs inside
+//! the FramePlan stage and compression methods render their transformed
+//! models (the honest second table of EXPERIMENTS.md).
 
 use super::report::{ms, speedup, Table};
-use super::workloads::measure_workload;
-use crate::accel::{all_methods, AccelMethod};
+use super::timing::median_time;
+use super::workloads::{default_camera, measure_workload};
+use crate::accel::{all_methods, AccelKind, AccelMethod};
 use crate::perfmodel::{estimate, BlendKind, GpuSpec, MethodFactors};
+use crate::pipeline::render::{render_frame, Blender, RenderConfig};
 use crate::scene::synthetic::table1_scenes;
 
 /// One (method, scene) cell.
@@ -59,6 +63,85 @@ pub fn cell(
         base_ms: base.total_ms(),
         gemm_ms: gemm.total_ms(),
     }
+}
+
+/// One measured `method × {vanilla, gemm}` cell: real CPU wall-clock of
+/// the full pipeline (FramePlan + blend) under the method.
+#[derive(Debug, Clone)]
+pub struct MeasuredCell {
+    pub method: String,
+    /// Median frame wall-clock with Algorithm 1 blending, ms.
+    pub vanilla_ms: f64,
+    /// Median frame wall-clock with GEMM-GS blending, ms.
+    pub gemm_ms: f64,
+    /// (tile, Gaussian) pairs the method's plan produced.
+    pub n_pairs: usize,
+}
+
+impl MeasuredCell {
+    /// The measured "+ GEMM-GS" speedup.
+    pub fn speedup(&self) -> f64 {
+        self.vanilla_ms / self.gemm_ms
+    }
+}
+
+/// Measure every Table 2 method through the real pipeline on `scene` at
+/// `sim_scale`: the method's `prepare_model` transform is applied once,
+/// its pair veto runs inside [`crate::pipeline::plan::plan_frame`], and
+/// both blenders render the identical plan (median of 3 frames each).
+pub fn run_measured(scene: &str, sim_scale: f64) -> Vec<MeasuredCell> {
+    let spec = crate::scene::synthetic::scene_by_name(scene).expect("unknown scene");
+    let base = spec.synthesize(sim_scale);
+    let camera = default_camera(&spec);
+    AccelKind::all()
+        .iter()
+        .map(|&kind| {
+            let method = kind.instantiate();
+            let cloud = if method.transforms_model() {
+                method.prepare_model(&base)
+            } else {
+                base.clone()
+            };
+            let cfg = RenderConfig::default().with_accel(kind.instantiate());
+            let mut vanilla = Blender::Vanilla.instantiate(cfg.batch);
+            let mut gemm = Blender::Gemm.instantiate(cfg.batch);
+            let n_pairs =
+                render_frame(&cloud, &camera, &cfg, gemm.as_mut()).stats.n_pairs;
+            let tv = median_time(3, || {
+                std::hint::black_box(render_frame(&cloud, &camera, &cfg, vanilla.as_mut()));
+            });
+            let tg = median_time(3, || {
+                std::hint::black_box(render_frame(&cloud, &camera, &cfg, gemm.as_mut()));
+            });
+            MeasuredCell {
+                method: method.name().to_string(),
+                vanilla_ms: tv.as_secs_f64() * 1e3,
+                gemm_ms: tg.as_secs_f64() * 1e3,
+                n_pairs,
+            }
+        })
+        .collect()
+}
+
+/// Render the measured grid (EXPERIMENTS.md "measured method × blender"
+/// table).
+pub fn render_measured(rows: &[MeasuredCell], scene: &str, sim_scale: f64) -> String {
+    let mut t =
+        Table::new(&["Method", "Pairs", "Vanilla (ms)", "GEMM-GS (ms)", "Speedup"]);
+    for r in rows {
+        t.row(vec![
+            r.method.clone(),
+            r.n_pairs.to_string(),
+            ms(r.vanilla_ms),
+            ms(r.gemm_ms),
+            speedup(r.speedup()),
+        ]);
+    }
+    format!(
+        "Measured CPU wall-clock — method × blender through the real pipeline \
+         ('{scene}', sim scale {sim_scale}, median of 3)\n\n{}",
+        t.render()
+    )
 }
 
 /// Geometric-mean "+ GEMM-GS" speedup per method.
@@ -186,6 +269,34 @@ mod tests {
         assert!(lg < c3 * 1.05, "LightGaussian {lg:.2} ≲ c3dgs {c3:.2}");
         assert!((1.05..=1.35).contains(&flash), "FlashGS {flash:.2}");
         assert!((1.5..=1.9).contains(&c3), "c3dgs {c3:.2}");
+    }
+
+    #[test]
+    fn measured_grid_covers_all_methods_and_both_blenders() {
+        let rows = run_measured("train", 0.001);
+        assert_eq!(rows.len(), 6, "6 methods × 2 blenders");
+        let names: Vec<&str> = rows.iter().map(|r| r.method.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["Vanilla 3DGS", "FlashGS", "StopThePop", "Speedy-Splat", "c3dgs", "LightGaussian"]
+        );
+        for r in &rows {
+            assert!(r.vanilla_ms > 0.0 && r.gemm_ms > 0.0, "{}: empty cell", r.method);
+            assert!(r.n_pairs > 0, "{}: no pairs", r.method);
+        }
+        // the preprocessing methods' vetoes really ran: fewer pairs
+        let vanilla_pairs = rows[0].n_pairs;
+        for r in &rows[1..4] {
+            assert!(
+                r.n_pairs < vanilla_pairs,
+                "{} culled nothing: {} vs {}",
+                r.method,
+                r.n_pairs,
+                vanilla_pairs
+            );
+        }
+        let text = render_measured(&rows, "train", 0.001);
+        assert!(text.contains("FlashGS") && text.contains("Speedup"));
     }
 
     #[test]

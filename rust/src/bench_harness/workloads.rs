@@ -5,7 +5,7 @@ use crate::accel::AccelMethod;
 use crate::math::{Camera, Vec3};
 use crate::perfmodel::WorkloadProfile;
 use crate::pipeline::duplicate::duplicate_with_mask;
-use crate::pipeline::preprocess::{preprocess, PreprocessConfig};
+use crate::pipeline::preprocess::{preprocess, PreprocessConfig, Projected};
 use crate::pipeline::tile::TileGrid;
 use crate::scene::gaussian::GaussianCloud;
 use crate::scene::stats::SceneStats;
@@ -67,7 +67,7 @@ pub fn measure_workload(
     let grid = TileGrid::new(camera.width, camera.height);
     let projected = preprocess(&cloud, &camera, &PreprocessConfig::default());
     let mask =
-        |i: usize, tx: u32, ty: u32| method.keep_pair(&projected, i, tx, ty, &grid);
+        |p: &Projected, i: usize, tx: u32, ty: u32| method.keep_pair(p, i, tx, ty, &grid);
     let dup = duplicate_with_mask(&projected, &grid, Some(&mask));
 
     // per-tile stats

@@ -23,6 +23,9 @@ pub struct Metrics {
     batch_size_sum: AtomicU64,
     coalesced_frames: AtomicU64,
     max_batch_size: AtomicU64,
+    // prepared-model cache misses (DESIGN.md §8): how many times a
+    // compression method's `prepare_model` actually ran
+    prepared_models: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -41,6 +44,7 @@ impl Default for Metrics {
             batch_size_sum: AtomicU64::new(0),
             coalesced_frames: AtomicU64::new(0),
             max_batch_size: AtomicU64::new(0),
+            prepared_models: AtomicU64::new(0),
         }
     }
 }
@@ -86,6 +90,11 @@ impl Metrics {
     /// Record a failed request.
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one `prepare_model` run (a prepared-model cache miss).
+    pub fn record_prepare(&self) {
+        self.prepared_models.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Queue depth bookkeeping.
@@ -137,6 +146,7 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             coalesced_frames: self.coalesced_frames.load(Ordering::Relaxed),
             max_batch_size: self.max_batch_size.load(Ordering::Relaxed),
+            prepared_models: self.prepared_models.load(Ordering::Relaxed),
             mean_batch_size: {
                 let b = self.batches.load(Ordering::Relaxed);
                 if b == 0 {
@@ -172,6 +182,8 @@ pub struct MetricsSnapshot {
     pub max_batch_size: u64,
     /// Mean batch occupancy, `frames / batches` over recorded batches.
     pub mean_batch_size: f64,
+    /// `prepare_model` runs (prepared-model cache misses, DESIGN.md §8).
+    pub prepared_models: u64,
 }
 
 impl MetricsSnapshot {
@@ -238,6 +250,15 @@ mod tests {
         assert_eq!(s.coalesced_frames, 7); // the two batches of size ≥ 2
         assert_eq!(s.max_batch_size, 4);
         assert!((s.mean_batch_size - 8.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prepared_model_counter_tracks() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().prepared_models, 0);
+        m.record_prepare();
+        m.record_prepare();
+        assert_eq!(m.snapshot().prepared_models, 2);
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod request;
 pub mod scheduler;
 pub mod service;
 
+pub use crate::accel::AccelKind;
 pub use batch::{BatchPolicy, BatchScheduler};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{BackendKind, RenderRequest, RenderResponse};

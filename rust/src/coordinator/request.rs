@@ -1,7 +1,9 @@
 //! Request/response types for the render service.
 
+use crate::accel::AccelKind;
 use crate::math::Camera;
-use crate::pipeline::render::{FrameStats, StageTimings, TileBlend};
+use crate::pipeline::render::{FrameStats, Image, StageTimings, TileBlend};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Which blending backend a request (or worker) uses.
@@ -76,14 +78,35 @@ pub struct RenderRequest {
     pub scene: String,
     /// Camera pose + intrinsics.
     pub camera: Camera,
+    /// Acceleration method composed with the render (paper §4.1,
+    /// Table 2's "+ GEMM-GS" rows). Part of the coalescing key: a batch
+    /// never mixes methods, since they change the pair multiset and —
+    /// for compression methods — the model itself.
+    pub accel: AccelKind,
+}
+
+impl RenderRequest {
+    /// Request with no acceleration method (the common case).
+    pub fn new(id: u64, scene: impl Into<String>, camera: Camera) -> Self {
+        RenderRequest { id, scene: scene.into(), camera, accel: AccelKind::Vanilla }
+    }
+
+    /// The batch-coalescing key (DESIGN.md §6, §8): requests merge only
+    /// when they target the same scene, at the same resolution, under
+    /// the same acceleration method.
+    pub fn coalesce_key(&self) -> (String, (u32, u32), AccelKind) {
+        (self.scene.clone(), self.camera.resolution_key(), self.accel)
+    }
 }
 
 /// One completed render.
 pub struct RenderResponse {
     /// Echoed request id.
     pub id: u64,
-    /// The rendered image (`None` if the scene was unknown).
-    pub image: Option<crate::pipeline::render::Image>,
+    /// The rendered image (`None` if rendering failed). `Arc` so frames
+    /// shared across a coalesced batch of identical poses are delivered
+    /// without per-response full-frame copies.
+    pub image: Option<Arc<Image>>,
     /// Per-stage timings.
     pub timings: StageTimings,
     /// Workload counters.
@@ -92,6 +115,20 @@ pub struct RenderResponse {
     pub latency: Duration,
     /// Error message when rendering failed.
     pub error: Option<String>,
+}
+
+impl RenderResponse {
+    /// A failure response carrying `error` (no image, zero stats).
+    pub fn failure(id: u64, latency: Duration, error: String) -> Self {
+        RenderResponse {
+            id,
+            image: None,
+            timings: StageTimings::default(),
+            stats: FrameStats::default(),
+            latency,
+            error: Some(error),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +155,35 @@ mod tests {
         assert!(BackendKind::NativeVanilla.instantiate(256).is_ok());
         let b = BackendKind::NativeGemm.instantiate(128).unwrap();
         assert_eq!(b.name(), "gemm-gs");
+    }
+
+    #[test]
+    fn coalesce_key_separates_scene_resolution_and_accel() {
+        let camera = crate::math::Camera::look_at(
+            crate::math::Vec3::new(0.0, 1.0, -8.0),
+            crate::math::Vec3::ZERO,
+            crate::math::Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            160,
+            96,
+        );
+        let base = RenderRequest::new(0, "train", camera);
+        assert_eq!(base.accel, AccelKind::Vanilla);
+        let same = RenderRequest::new(1, "train", camera);
+        assert_eq!(base.coalesce_key(), same.coalesce_key());
+
+        // a different accel method must never merge (§4 invariant 3:
+        // the pair multiset differs between methods)
+        let mut flash = base.clone();
+        flash.accel = AccelKind::FlashGs;
+        assert_ne!(base.coalesce_key(), flash.coalesce_key());
+
+        let mut other_scene = base.clone();
+        other_scene.scene = "truck".into();
+        assert_ne!(base.coalesce_key(), other_scene.coalesce_key());
+
+        let mut small = base.clone();
+        small.camera.width = 80;
+        assert_ne!(base.coalesce_key(), small.coalesce_key());
     }
 }

@@ -1,22 +1,21 @@
-//! Tile-parallel frame scheduler: runs preprocessing/duplication/sort
-//! once, then fans the tile list out across a scoped thread pool, each
+//! Tile-parallel frame scheduler: plans the frame once through the
+//! shared [`crate::pipeline::plan::FramePlan`] stage (DESIGN.md §8),
+//! then fans the tile list out across a scoped thread pool, each
 //! thread owning its own blender (blenders are stateful and PJRT handles
 //! are not `Send`, so per-thread instantiation is the design, matching
 //! one-CUDA-stream-per-SM-partition in the GPU original).
 
 use super::request::BackendKind;
 use crate::math::Camera;
-use crate::pipeline::duplicate::duplicate;
-use crate::pipeline::preprocess::preprocess;
-use crate::pipeline::render::{FrameStats, Image, RenderConfig, RenderOutput, StageTimings};
-use crate::pipeline::sort::{sort_duplicated, tile_ranges};
-use crate::pipeline::tile::TileGrid;
+use crate::pipeline::plan::plan_frame;
+use crate::pipeline::render::{Image, RenderConfig, RenderOutput};
 use crate::pipeline::{TILE_PIXELS, TILE_SIZE};
 use crate::scene::gaussian::GaussianCloud;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
-/// Render one frame with `threads` tile workers using `backend`.
+/// Render one frame with `threads` tile workers using `backend`: one
+/// shared [`crate::pipeline::plan::FramePlan`], tiles fanned out.
 pub fn render_frame_parallel(
     cloud: &GaussianCloud,
     camera: &Camera,
@@ -24,23 +23,10 @@ pub fn render_frame_parallel(
     backend: BackendKind,
     threads: usize,
 ) -> RenderOutput {
-    let grid = TileGrid::new(camera.width, camera.height);
+    let plan = plan_frame(cloud, camera, cfg);
 
     let t0 = Instant::now();
-    let projected = preprocess(cloud, camera, &cfg.preprocess);
-    let t_pre = t0.elapsed();
-
-    let t0 = Instant::now();
-    let mut dup = duplicate(&projected, &grid);
-    let t_dup = t0.elapsed();
-
-    let t0 = Instant::now();
-    sort_duplicated(&mut dup);
-    let ranges = tile_ranges(&dup.keys, grid.num_tiles());
-    let t_sort = t0.elapsed();
-
-    let t0 = Instant::now();
-    let n_tiles = grid.num_tiles();
+    let n_tiles = plan.grid.num_tiles();
     let next_tile = AtomicUsize::new(0);
     let threads = threads.max(1).min(n_tiles.max(1));
     // each worker returns (tile_id, rgb, transmittance) triples
@@ -49,9 +35,7 @@ pub fn render_frame_parallel(
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for _ in 0..threads {
-            let projected = &projected;
-            let ranges = &ranges;
-            let dup = &dup;
+            let plan = &plan;
             let next = &next_tile;
             handles.push(scope.spawn(move || {
                 let mut blender = backend
@@ -67,10 +51,9 @@ pub fn render_frame_parallel(
                     if tid >= n_tiles {
                         break;
                     }
-                    let (s, e) = ranges[tid];
-                    let indices = &dup.values[s as usize..e as usize];
-                    let origin = grid.tile_origin(tid as u32);
-                    blender.blend_tile(origin, projected, indices, &mut buf);
+                    let indices = plan.tile_indices(tid);
+                    let origin = plan.grid.tile_origin(tid as u32);
+                    blender.blend_tile(origin, &plan.projected, indices, &mut buf);
                     out.push((
                         tid as u32,
                         buf.to_vec(),
@@ -87,17 +70,9 @@ pub fn render_frame_parallel(
 
     // composite
     let mut image = Image::new(camera.width, camera.height);
-    let mut active_tiles = 0usize;
-    let mut max_len = 0usize;
     for results in &per_thread {
         for (tid, rgb, t_left) in results {
-            let (s, e) = ranges[*tid as usize];
-            let len = (e - s) as usize;
-            if len > 0 {
-                active_tiles += 1;
-                max_len = max_len.max(len);
-            }
-            let origin = grid.tile_origin(*tid);
+            let origin = plan.grid.tile_origin(*tid);
             for ly in 0..TILE_SIZE {
                 let py = origin.1 + ly as u32;
                 if py >= camera.height {
@@ -121,23 +96,7 @@ pub fn render_frame_parallel(
     }
     let t_blend = t0.elapsed();
 
-    RenderOutput {
-        image,
-        timings: StageTimings {
-            preprocess: t_pre,
-            duplicate: t_dup,
-            sort: t_sort,
-            blend: t_blend,
-        },
-        stats: FrameStats {
-            n_gaussians: cloud.len(),
-            n_visible: projected.len(),
-            n_pairs: dup.len(),
-            n_tiles,
-            n_active_tiles: active_tiles,
-            max_tile_len: max_len,
-        },
-    }
+    RenderOutput { image, timings: plan.timings(t_blend), stats: plan.stats() }
 }
 
 #[cfg(test)]

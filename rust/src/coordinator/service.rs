@@ -1,6 +1,7 @@
 //! The render service: scene store + bounded request queue + batch
 //! coalescer + worker pool — the staged admit → coalesce → execute
-//! design of DESIGN.md §6.
+//! design of DESIGN.md §6, with acceleration-method composition
+//! threaded through every request (DESIGN.md §8).
 //!
 //! Workers are std threads, each owning its blender (PJRT handles are
 //! not `Send`); the queue is a `sync_channel` whose bound provides
@@ -8,26 +9,32 @@
 //! is the paper-appropriate behaviour for a real-time renderer (shed
 //! load at admission, never grow an unbounded backlog). On the pull
 //! side, each worker drains up to `max_batch` compatible requests (same
-//! scene + resolution, see [`super::batch`]) and renders them as one
-//! batched blend — native backends through
+//! scene + resolution + accel method, see [`super::batch`]) and renders
+//! them as one batched blend — native backends through
 //! [`crate::pipeline::batch::render_frames`], `ArtifactGemm` through
 //! the pooled tile-grouped runtime path
 //! ([`crate::runtime::render_frames_tiled`]). With `max_batch = 1` a
 //! native-backend service is byte-identical to the pre-batching
 //! request-per-worker path (proved bitwise in `tests/e2e_batching.rs`).
+//!
+//! Compression methods (c3dgs, LightGaussian) transform the model once:
+//! the scene store caches `prepare_model` outputs per `(scene, method)`
+//! so the k-means/VQ cost is paid on the first request and every later
+//! request — from any worker — reuses it.
 
 use super::batch::{BatchPolicy, BatchScheduler};
 use super::metrics::Metrics;
 use super::request::{BackendKind, RenderRequest, RenderResponse};
+use crate::accel::AccelKind;
 use crate::math::Camera;
 use crate::pipeline::batch::render_frames;
-use crate::pipeline::render::{RenderConfig, RenderOutput, StageTimings, TileBlend};
+use crate::pipeline::render::{FrameStats, Image, RenderConfig, StageTimings, TileBlend};
 use crate::runtime::tiled_render::{render_frames_tiled, TILED_ENTRY};
 use crate::runtime::RuntimeClient;
 use crate::scene::gaussian::GaussianCloud;
 use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Service configuration.
@@ -39,7 +46,9 @@ pub struct CoordinatorConfig {
     pub queue_capacity: usize,
     /// Blending backend each worker instantiates.
     pub backend: BackendKind,
-    /// Frame render configuration.
+    /// Frame render configuration. Its `accel` field is overridden per
+    /// batch by the requests' [`crate::accel::AccelKind`] (DESIGN.md
+    /// §8) — the method travels with the request, not the service.
     pub render: RenderConfig,
     /// Largest number of compatible requests coalesced into one batched
     /// blend; `1` disables coalescing (`serve --max-batch`).
@@ -68,17 +77,76 @@ struct Job {
     respond: SyncSender<RenderResponse>,
 }
 
-/// Coalescing key: requests merge only when they target the same scene
-/// at the same resolution (shared cloud, tile grid, staging shapes).
-/// The resolution rule is owned by [`Camera::resolution_key`].
-fn job_key(job: &Job) -> (String, (u32, u32)) {
-    (job.request.scene.clone(), job.request.camera.resolution_key())
+/// Coalescing key (DESIGN.md §6, §8): requests merge only when they
+/// target the same scene at the same resolution under the same accel
+/// method (shared cloud, tile grid, staging shapes, pair multiset).
+/// The rule is owned by [`RenderRequest::coalesce_key`].
+fn job_key(job: &Job) -> (String, (u32, u32), AccelKind) {
+    job.request.coalesce_key()
 }
 
 /// The scheduler type workers share (spelled out once — the closure in
 /// the generic parameter makes the full type unwieldy at use sites).
-type JobScheduler =
-    BatchScheduler<Job, (String, (u32, u32)), fn(&Job) -> (String, (u32, u32))>;
+type JobScheduler = BatchScheduler<
+    Job,
+    (String, (u32, u32), AccelKind),
+    fn(&Job) -> (String, (u32, u32), AccelKind),
+>;
+
+/// Scene store: base clouds plus a per-`(scene, method)` cache of
+/// [`crate::accel::AccelMethod::prepare_model`] outputs (DESIGN.md §8).
+/// Compression transforms (c3dgs's codebook fit, LightGaussian's
+/// prune + VQ) run once — on the first request that needs them — and
+/// every worker reuses the cached model afterwards. Methods that don't
+/// transform the model render the base cloud with no cache entry.
+struct SceneStore {
+    base: HashMap<String, Arc<GaussianCloud>>,
+    /// One `OnceLock` cell per `(scene, method)`: the map lock is held
+    /// only to fetch the cell, and the (expensive) transform runs under
+    /// the cell's own initialization guard — so concurrent workers never
+    /// duplicate a prepare, and a prepare in flight for one key never
+    /// stalls lookups for other keys.
+    prepared: Mutex<HashMap<(String, AccelKind), Arc<OnceLock<Arc<GaussianCloud>>>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl SceneStore {
+    fn new(base: HashMap<String, Arc<GaussianCloud>>, metrics: Arc<Metrics>) -> Self {
+        SceneStore { base, prepared: Mutex::new(HashMap::new()), metrics }
+    }
+
+    /// The cloud to render `scene` with under `accel`, preparing and
+    /// caching the transformed model on first use.
+    fn cloud_for(&self, scene: &str, accel: AccelKind) -> Option<Arc<GaussianCloud>> {
+        let base = self.base.get(scene)?;
+        let method = accel.instantiate();
+        if !method.transforms_model() {
+            return Some(Arc::clone(base));
+        }
+        let cell = {
+            let mut cache = self.prepared.lock().expect("prepared-model cache poisoned");
+            Arc::clone(
+                cache
+                    .entry((scene.to_string(), accel))
+                    .or_insert_with(|| Arc::new(OnceLock::new())),
+            )
+        };
+        Some(Arc::clone(cell.get_or_init(|| {
+            self.metrics.record_prepare();
+            Arc::new(method.prepare_model(base))
+        })))
+    }
+
+    /// Prepared models fully initialized in the cache.
+    fn prepared_count(&self) -> usize {
+        self.prepared
+            .lock()
+            .expect("prepared-model cache poisoned")
+            .values()
+            .filter(|cell| cell.get().is_some())
+            .count()
+    }
+}
 
 /// What a worker executes batches with. Created in-thread: PJRT handles
 /// are not `Send`.
@@ -92,50 +160,70 @@ enum Executor {
     Tiled(RuntimeClient),
 }
 
-/// Execute one coalesced batch (one scene, one resolution).
+/// One executed frame, image behind an `Arc` so duplicate-pose fan-out
+/// shares pixels instead of copying them per response.
+struct ExecutedFrame {
+    image: Arc<Image>,
+    timings: StageTimings,
+    stats: FrameStats,
+}
+
+/// Execute one coalesced batch (one scene, one resolution, one accel
+/// method — `cfg.accel` carries the method's pair veto into the plan).
+///
+/// Each *unique* pose renders once — through the worker's blender
+/// (`pipeline::batch::render_frames`) or the pooled tiled runtime path
+/// — and duplicate poses share the blended image's `Arc` rather than
+/// deep-copying a full frame per response. Stage timings are attributed
+/// to the first frame of each identical-pose group (zero for the
+/// duplicates), so coordinator-level sums never double-count.
 fn execute_batch(
     executor: &mut Executor,
     cloud: &GaussianCloud,
     cameras: &[Camera],
     cfg: &RenderConfig,
-) -> anyhow::Result<Vec<RenderOutput>> {
-    match executor {
-        Executor::Blender(blender) => Ok(render_frames(cloud, cameras, cfg, blender.as_mut())),
-        Executor::Tiled(client) => {
-            // render each unique pose once through the pooled tiled
-            // path; duplicates reuse the blended image (same sharing
-            // rule as pipeline::batch::render_frames)
-            let mut unique: Vec<Camera> = Vec::new();
-            let mut slot: Vec<usize> = Vec::with_capacity(cameras.len());
-            for cam in cameras {
-                match unique.iter().position(|u| u.same_view(cam)) {
-                    Some(j) => slot.push(j),
-                    None => {
-                        unique.push(*cam);
-                        slot.push(unique.len() - 1);
-                    }
-                }
+) -> anyhow::Result<Vec<ExecutedFrame>> {
+    let mut unique: Vec<Camera> = Vec::new();
+    let mut slot: Vec<usize> = Vec::with_capacity(cameras.len());
+    for cam in cameras {
+        match unique.iter().position(|u| u.same_view(cam)) {
+            Some(j) => slot.push(j),
+            None => {
+                unique.push(*cam);
+                slot.push(unique.len() - 1);
             }
-            let outs = render_frames_tiled(client, cloud, &unique, cfg)?;
-            let mut first_use = vec![true; outs.len()];
-            Ok(slot
-                .into_iter()
-                .map(|j| {
-                    let timings = if first_use[j] {
-                        first_use[j] = false;
-                        outs[j].timings
-                    } else {
-                        StageTimings::default()
-                    };
-                    RenderOutput { image: outs[j].image.clone(), timings, stats: outs[j].stats }
-                })
-                .collect())
         }
     }
+    let rendered = match executor {
+        Executor::Blender(blender) => render_frames(cloud, &unique, cfg, blender.as_mut()),
+        Executor::Tiled(client) => render_frames_tiled(client, cloud, &unique, cfg)?,
+    };
+    // move each unique image out once; duplicate poses share the Arc
+    let shared: Vec<ExecutedFrame> = rendered
+        .into_iter()
+        .map(|o| ExecutedFrame { image: Arc::new(o.image), timings: o.timings, stats: o.stats })
+        .collect();
+    let mut first_use = vec![true; shared.len()];
+    Ok(slot
+        .into_iter()
+        .map(|j| {
+            let timings = if first_use[j] {
+                first_use[j] = false;
+                shared[j].timings
+            } else {
+                StageTimings::default()
+            };
+            ExecutedFrame {
+                image: Arc::clone(&shared[j].image),
+                timings,
+                stats: shared[j].stats,
+            }
+        })
+        .collect())
 }
 
 /// Deliver one rendered frame and record its metrics.
-fn respond(metrics: &Metrics, job: &Job, out: RenderOutput) {
+fn respond(metrics: &Metrics, job: &Job, out: ExecutedFrame) {
     let latency = job.enqueued.elapsed();
     metrics.record_frame(latency, &out.timings);
     let _ = job.respond.send(RenderResponse {
@@ -153,7 +241,7 @@ pub struct Coordinator {
     tx: Option<SyncSender<Job>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
-    scenes: Arc<HashMap<String, Arc<GaussianCloud>>>,
+    store: Arc<SceneStore>,
 }
 
 impl Coordinator {
@@ -162,17 +250,17 @@ impl Coordinator {
         cfg: CoordinatorConfig,
         scenes: HashMap<String, Arc<GaussianCloud>>,
     ) -> Coordinator {
-        let scenes = Arc::new(scenes);
         let metrics = Arc::new(Metrics::new());
+        let store = Arc::new(SceneStore::new(scenes, Arc::clone(&metrics)));
         let (tx, rx) = sync_channel::<Job>(cfg.queue_capacity);
         let policy =
             BatchPolicy { max_batch: cfg.max_batch.max(1), timeout: cfg.batch_timeout };
-        let key_of: fn(&Job) -> (String, (u32, u32)) = job_key;
+        let key_of: fn(&Job) -> (String, (u32, u32), AccelKind) = job_key;
         let scheduler: Arc<JobScheduler> = Arc::new(BatchScheduler::new(rx, policy, key_of));
         let mut workers = Vec::with_capacity(cfg.workers);
         for _ in 0..cfg.workers.max(1) {
             let scheduler = Arc::clone(&scheduler);
-            let scenes = Arc::clone(&scenes);
+            let store = Arc::clone(&store);
             let metrics = Arc::clone(&metrics);
             let render_cfg = cfg.render.clone();
             let backend = cfg.backend;
@@ -189,13 +277,17 @@ impl Coordinator {
                     None => match backend.instantiate(render_cfg.batch) {
                         Ok(b) => Executor::Blender(b),
                         Err(e) => {
+                            // the worker exits; when every worker does,
+                            // `submit` surfaces the failure as an error
+                            // response instead of panicking the caller
                             eprintln!("worker backend init failed: {e:#}");
                             return;
                         }
                     },
                 };
-                // execute stage: each drained batch shares one scene and
-                // one resolution (the coalescing key guarantees it)
+                // execute stage: each drained batch shares one scene,
+                // one resolution, and one accel method (the coalescing
+                // key guarantees it)
                 while let Some(batch) = scheduler.next_batch() {
                     for _ in 0..batch.len() {
                         metrics.dequeue();
@@ -203,24 +295,24 @@ impl Coordinator {
                     let fail_all = |msg: String| {
                         for job in &batch {
                             metrics.record_error();
-                            let _ = job.respond.send(RenderResponse {
-                                id: job.request.id,
-                                image: None,
-                                timings: Default::default(),
-                                stats: Default::default(),
-                                latency: job.enqueued.elapsed(),
-                                error: Some(msg.clone()),
-                            });
+                            let _ = job.respond.send(RenderResponse::failure(
+                                job.request.id,
+                                job.enqueued.elapsed(),
+                                msg.clone(),
+                            ));
                         }
                     };
-                    let Some(cloud) = scenes.get(&batch[0].request.scene) else {
+                    let accel = batch[0].request.accel;
+                    let Some(cloud) = store.cloud_for(&batch[0].request.scene, accel)
+                    else {
                         fail_all(format!("unknown scene '{}'", batch[0].request.scene));
                         continue;
                     };
                     metrics.record_batch(batch.len());
                     let cameras: Vec<Camera> =
                         batch.iter().map(|j| j.request.camera).collect();
-                    match execute_batch(&mut executor, cloud, &cameras, &render_cfg) {
+                    let cfg = render_cfg.clone().with_accel(accel.instantiate());
+                    match execute_batch(&mut executor, &cloud, &cameras, &cfg) {
                         Ok(outs) => {
                             for (job, out) in batch.iter().zip(outs) {
                                 respond(&metrics, job, out);
@@ -231,32 +323,63 @@ impl Coordinator {
                 }
             }));
         }
-        Coordinator { tx: Some(tx), workers, metrics, scenes }
+        Coordinator { tx: Some(tx), workers, metrics, store }
     }
 
     /// Submit a request; returns the response channel. Blocks when the
-    /// queue is full (backpressure).
+    /// queue is full (backpressure). If the service has no live workers
+    /// (e.g. every worker failed backend init), the returned channel
+    /// carries an error [`RenderResponse`] instead of panicking.
     pub fn submit(&self, request: RenderRequest) -> Receiver<RenderResponse> {
         let (respond, rx) = sync_channel(1);
         self.metrics.enqueue();
-        self.tx
-            .as_ref()
-            .expect("coordinator already shut down")
-            .send(Job { request, enqueued: Instant::now(), respond })
-            .expect("all workers exited");
+        let job = Job { request, enqueued: Instant::now(), respond };
+        let undeliverable = match self.tx.as_ref() {
+            Some(tx) => tx.send(job).err().map(|e| e.0),
+            None => Some(job),
+        };
+        if let Some(job) = undeliverable {
+            // all workers exited, so the queue receiver is gone; fail
+            // the request through its own response channel
+            self.metrics.dequeue();
+            self.metrics.record_error();
+            let _ = job.respond.send(RenderResponse::failure(
+                job.request.id,
+                job.enqueued.elapsed(),
+                "render service unavailable: all workers exited \
+                 (backend initialization failed?)"
+                    .to_string(),
+            ));
+        }
         rx
     }
 
-    /// Submit and wait.
+    /// Submit and wait. A request dropped mid-flight (worker exited
+    /// with the job queued) comes back as an error response.
     pub fn render_sync(&self, request: RenderRequest) -> RenderResponse {
-        self.submit(request).recv().expect("worker dropped response")
+        let id = request.id;
+        let t0 = Instant::now();
+        self.submit(request).recv().unwrap_or_else(|_| {
+            self.metrics.record_error();
+            RenderResponse::failure(
+                id,
+                t0.elapsed(),
+                "render service dropped the request: workers exited while it was queued"
+                    .to_string(),
+            )
+        })
     }
 
     /// Registered scene names.
     pub fn scene_names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.scenes.keys().cloned().collect();
+        let mut v: Vec<String> = self.store.base.keys().cloned().collect();
         v.sort();
         v
+    }
+
+    /// Number of `(scene, method)` prepared models currently cached.
+    pub fn prepared_models_cached(&self) -> usize {
+        self.store.prepared_count()
     }
 
     /// Metrics snapshot.
@@ -323,11 +446,7 @@ mod tests {
     #[test]
     fn renders_through_the_service() {
         let (coord, camera) = test_setup(2);
-        let resp = coord.render_sync(RenderRequest {
-            id: 42,
-            scene: "train".into(),
-            camera,
-        });
+        let resp = coord.render_sync(RenderRequest::new(42, "train", camera));
         assert_eq!(resp.id, 42);
         assert!(resp.error.is_none());
         let img = resp.image.unwrap();
@@ -342,11 +461,7 @@ mod tests {
     #[test]
     fn unknown_scene_errors_gracefully() {
         let (coord, camera) = test_setup(1);
-        let resp = coord.render_sync(RenderRequest {
-            id: 1,
-            scene: "nope".into(),
-            camera,
-        });
+        let resp = coord.render_sync(RenderRequest::new(1, "nope", camera));
         assert!(resp.error.is_some());
         assert!(resp.image.is_none());
         assert_eq!(coord.metrics().errors, 1);
@@ -356,9 +471,7 @@ mod tests {
     fn concurrent_requests_all_complete() {
         let (coord, camera) = test_setup(4);
         let receivers: Vec<_> = (0..16)
-            .map(|i| {
-                coord.submit(RenderRequest { id: i, scene: "train".into(), camera })
-            })
+            .map(|i| coord.submit(RenderRequest::new(i, "train", camera)))
             .collect();
         let mut ids: Vec<u64> = receivers.into_iter().map(|r| r.recv().unwrap().id).collect();
         ids.sort();
@@ -374,9 +487,7 @@ mod tests {
         // service genuinely batches (asserted on the metrics).
         let (coord, camera) = test_setup_batched(1, 4, Duration::from_millis(500));
         let receivers: Vec<_> = (0..8)
-            .map(|i| {
-                coord.submit(RenderRequest { id: i, scene: "train".into(), camera })
-            })
+            .map(|i| coord.submit(RenderRequest::new(i, "train", camera)))
             .collect();
         let responses: Vec<_> = receivers.into_iter().map(|r| r.recv().unwrap()).collect();
         for r in &responses {
@@ -401,11 +512,7 @@ mod tests {
         // render through a max_batch = 1 coordinator and directly via
         // render_frame with the same backend: byte-identical images
         let (coord, camera) = test_setup_batched(2, 1, Duration::from_millis(500));
-        let resp = coord.render_sync(RenderRequest {
-            id: 7,
-            scene: "train".into(),
-            camera,
-        });
+        let resp = coord.render_sync(RenderRequest::new(7, "train", camera));
         coord.shutdown();
 
         let cloud = scene_by_name("train").unwrap().synthesize(0.001);
@@ -427,7 +534,7 @@ mod tests {
         let rxs: Vec<_> = (0..4)
             .map(|i| {
                 let cam = if i % 2 == 0 { camera } else { small };
-                coord.submit(RenderRequest { id: i, scene: "train".into(), camera: cam })
+                coord.submit(RenderRequest::new(i, "train", cam))
             })
             .collect();
         for (i, rx) in rxs.into_iter().enumerate() {
@@ -449,6 +556,92 @@ mod tests {
     fn shutdown_joins_cleanly() {
         let (coord, _camera) = test_setup(3);
         coord.shutdown(); // no requests; must not hang
+    }
+
+    #[test]
+    fn accel_request_executes_through_the_pipeline() {
+        let (coord, camera) = test_setup(2);
+        let vanilla = coord.render_sync(RenderRequest::new(0, "train", camera));
+        let mut req = RenderRequest::new(1, "train", camera);
+        req.accel = AccelKind::FlashGs;
+        let flash = coord.render_sync(req);
+        assert!(vanilla.error.is_none() && flash.error.is_none());
+        // the veto really ran: strictly fewer pairs, image preserved
+        // (§4 invariant 6)
+        assert!(
+            flash.stats.n_pairs < vanilla.stats.n_pairs,
+            "FlashGS culled nothing through the service: {} vs {}",
+            flash.stats.n_pairs,
+            vanilla.stats.n_pairs
+        );
+        let psnr =
+            flash.image.as_ref().unwrap().psnr(vanilla.image.as_ref().unwrap()).unwrap();
+        assert!(psnr > 55.0 || psnr.is_infinite(), "FlashGS not lossless: {psnr:.1} dB");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn prepared_models_cached_per_scene_and_method() {
+        let (coord, camera) = test_setup(2);
+        // vanilla + preprocessing methods never populate the cache
+        coord.render_sync(RenderRequest::new(0, "train", camera));
+        let mut flash = RenderRequest::new(1, "train", camera);
+        flash.accel = AccelKind::FlashGs;
+        coord.render_sync(flash);
+        assert_eq!(coord.prepared_models_cached(), 0);
+        assert_eq!(coord.metrics().prepared_models, 0);
+
+        // a compression method prepares once, then reuses the cache
+        for i in 0..3 {
+            let mut req = RenderRequest::new(10 + i, "train", camera);
+            req.accel = AccelKind::LightGaussian;
+            let resp = coord.render_sync(req);
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+        }
+        assert_eq!(coord.prepared_models_cached(), 1);
+        assert_eq!(
+            coord.metrics().prepared_models,
+            1,
+            "prepare_model must run once per (scene, method), not per request"
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dead_service_returns_error_response_instead_of_panicking() {
+        if crate::runtime::artifacts_available() {
+            return; // with artifacts the backend initializes fine
+        }
+        // every worker fails backend init (no PJRT artifacts on disk),
+        // so the service comes up with zero live workers
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.001));
+        let mut scenes = HashMap::new();
+        scenes.insert("train".to_string(), cloud);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                backend: BackendKind::ArtifactGemm,
+                ..CoordinatorConfig::default()
+            },
+            scenes,
+        );
+        let camera = Camera::look_at(
+            crate::math::Vec3::new(0.0, 1.0, -8.0),
+            crate::math::Vec3::ZERO,
+            crate::math::Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            160,
+            96,
+        );
+        // regardless of whether the send beats the workers' exit, the
+        // caller gets an error response — never a panic
+        for i in 0..3 {
+            let resp = coord.render_sync(RenderRequest::new(i, "train", camera));
+            assert!(resp.error.is_some(), "expected an error response");
+            assert!(resp.image.is_none());
+        }
+        assert!(coord.metrics().errors >= 3);
+        coord.shutdown();
     }
 
     #[test]

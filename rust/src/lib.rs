@@ -18,6 +18,19 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+// Clippy posture for CI's `clippy --all-targets -- -D warnings` gate:
+// style lints that fight the codebase's index-heavy numeric kernels
+// (multiple parallel SoA arrays indexed by one loop variable, GPU-shaped
+// argument lists, hand-spelled scheduler generics) are allowed
+// crate-wide; correctness lints stay hard errors.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::manual_div_ceil,
+    clippy::large_enum_variant
+)]
+
 pub mod accel;
 pub mod bench_harness;
 pub mod coordinator;

@@ -3,18 +3,27 @@
 //! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §5):
 //!
 //! ```text
-//! gemm-gs render --scene train [--backend gemm|vanilla|pjrt] [--out img.ppm]
-//! gemm-gs serve  --frames 64 [--workers 4] [--backend gemm]
+//! gemm-gs render --scene train [--backend gemm|vanilla|pjrt] [--accel flashgs] [--out img.ppm]
+//! gemm-gs serve  --frames 64 [--workers 4] [--backend gemm] [--accel c3dgs]
 //!                [--max-batch 8] [--batch-timeout-ms 2]
 //! gemm-gs fig1                      # Figure 1  (TC vs CUDA FLOPS)
 //! gemm-gs bench-fig3                # Figure 3  (stage breakdown)
-//! gemm-gs bench-table2              # Table 2   (A100 grid)
+//! gemm-gs bench-table2              # Table 2   (A100 grid + measured CPU grid)
 //! gemm-gs bench-fig5                # Figure 5  (H100 grid)
 //! gemm-gs bench-fig6                # Figure 6  (resolution sweep)
 //! gemm-gs bench-fig7                # Figure 7  (batch sweep + coordinator coalescing)
 //! gemm-gs inspect [--scale 0.02]    # Table 1   (workload statistics)
 //! ```
+//!
+//! `--accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>`
+//! composes a published acceleration baseline with the render
+//! (DESIGN.md §8): its pair veto runs inside the FramePlan stage and
+//! compression methods render the transformed model.
 
+// same clippy posture as the library crate (see src/lib.rs)
+#![allow(clippy::too_many_arguments, clippy::type_complexity)]
+
+use gemm_gs::accel::AccelKind;
 use gemm_gs::bench_harness::{self, fig3, fig6, fig7, report, table2, workloads};
 use gemm_gs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, RenderRequest};
 use gemm_gs::math::{Camera, Vec3};
@@ -71,16 +80,24 @@ fn main() {
         "bench-fig3" => {
             let rows = fig3::run_modelled(&A100, scale);
             print!("{}", fig3::render(&rows, &A100));
-            let t = fig3::run_measured_cpu(&args.get("scene", "train"), scale);
+            let accel = parse_accel(&args);
+            let t = fig3::run_measured_cpu_with(&args.get("scene", "train"), scale, accel);
             println!(
-                "\nCPU-measured (simulator, scene '{}', scale {scale}): blend share {:.1}%",
+                "\nCPU-measured (simulator, scene '{}', accel {}, scale {scale}): blend share {:.1}%",
                 args.get("scene", "train"),
+                accel.cli_name(),
                 t.blend_fraction() * 100.0
             );
         }
         "bench-table2" => {
             let cells = table2::run(&A100, scale);
             print!("{}", table2::render(&cells, &A100));
+            // the honest second column: real CPU wall-clock of every
+            // method × blender through the actual pipeline
+            let scene = args.get("scene", "train");
+            let measure_scale = args.get_f64("measure-scale", 0.004);
+            let rows = table2::run_measured(&scene, measure_scale);
+            print!("\n{}", table2::render_measured(&rows, &scene, measure_scale));
         }
         "bench-fig5" => {
             let cells = table2::run(&H100, scale);
@@ -111,9 +128,23 @@ fn main() {
             println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
             println!("subcommands: render serve fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 inspect");
             println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
+            println!("              --accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>");
             println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
         }
     }
+}
+
+/// `--accel` with a graceful unknown-name error (shared by render,
+/// serve, and the bench subcommands).
+fn parse_accel(args: &Args) -> AccelKind {
+    let name = args.get("accel", "vanilla");
+    AccelKind::parse(&name).unwrap_or_else(|| {
+        eprintln!(
+            "unknown accel method '{name}' \
+             (expected vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian)"
+        );
+        std::process::exit(1)
+    })
 }
 
 fn cmd_render(args: &Args) {
@@ -127,16 +158,22 @@ fn cmd_render(args: &Args) {
         eprintln!("unknown backend");
         std::process::exit(1)
     });
-    let cloud = spec.synthesize(scale);
+    let accel = parse_accel(args);
+    let method = accel.instantiate();
+    let base = spec.synthesize(scale);
+    // compression methods render the transformed model (DESIGN.md §8)
+    let cloud =
+        if method.transforms_model() { method.prepare_model(&base) } else { base };
     let camera = workloads::default_camera(&spec);
-    let cfg = RenderConfig::default();
+    let cfg = RenderConfig::default().with_accel(accel.instantiate());
     let mut blender = backend.instantiate(cfg.batch).expect("backend init");
     let out = render_frame(&cloud, &camera, &cfg, blender.as_mut());
     println!(
-        "rendered '{scene}' ({}x{}) with {} — {} gaussians, {} visible, {} pairs",
+        "rendered '{scene}' ({}x{}) with {} + {} — {} gaussians, {} visible, {} pairs",
         camera.width,
         camera.height,
         blender.name(),
+        method.name(),
         out.stats.n_gaussians,
         out.stats.n_visible,
         out.stats.n_pairs
@@ -160,6 +197,7 @@ fn cmd_serve(args: &Args) {
     let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
     let frames = args.get_usize("frames", 32);
     let backend = BackendKind::parse(&args.get("backend", "gemm")).expect("backend");
+    let accel = parse_accel(args);
     let mut scenes = HashMap::new();
     let spec = scene_by_name(&args.get("scene", "train")).expect("scene");
     scenes.insert(spec.name.to_string(), Arc::new(spec.synthesize(scale)));
@@ -189,7 +227,9 @@ fn cmd_serve(args: &Args) {
                 spec.width / 2,
                 spec.height / 2,
             );
-            coord.submit(RenderRequest { id: i as u64, scene: spec.name.into(), camera })
+            let mut request = RenderRequest::new(i as u64, spec.name, camera);
+            request.accel = accel;
+            coord.submit(request)
         })
         .collect();
     for rx in rxs {
@@ -199,7 +239,8 @@ fn cmd_serve(args: &Args) {
     let elapsed = t0.elapsed();
     let m = coord.metrics();
     println!(
-        "{frames} frames in {elapsed:.2?} — {:.1} fps, mean latency {:.2?}, p95 ≤ {:.2?}, blend share {:.1}%",
+        "{frames} frames ({}) in {elapsed:.2?} — {:.1} fps, mean latency {:.2?}, p95 ≤ {:.2?}, blend share {:.1}%",
+        accel.cli_name(),
         frames as f64 / elapsed.as_secs_f64(),
         m.mean_latency,
         m.p95,
@@ -209,6 +250,12 @@ fn cmd_serve(args: &Args) {
         println!(
             "coalescing: {} batches, mean occupancy {:.2}, max batch {}, {} coalesced frames",
             m.batches, m.mean_batch_size, m.max_batch_size, m.coalesced_frames
+        );
+    }
+    if m.prepared_models > 0 {
+        println!(
+            "prepared-model cache: {} transform(s) run for {frames} requests",
+            m.prepared_models
         );
     }
     coord.shutdown();

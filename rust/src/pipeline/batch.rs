@@ -14,14 +14,17 @@
 //!
 //! Determinism contract, pinned by `batched_matches_serial_bytes`: for
 //! any camera list, the outputs are **byte-identical** to calling
-//! [`render_frame`] sequentially with the same blender — coalescing is a
-//! scheduling optimization, never a numerical one.
+//! [`super::render::render_frame`] sequentially with the same blender —
+//! coalescing is a scheduling optimization, never a numerical one.
 
-use super::render::{render_frame, RenderConfig, RenderOutput, StageTimings, TileBlend};
+use super::plan::plan_frame;
+use super::render::{RenderConfig, RenderOutput, StageTimings, TileBlend};
 use crate::math::Camera;
 use crate::scene::gaussian::GaussianCloud;
 
-/// Render one coalesced batch of frames over a single scene.
+/// Render one coalesced batch of frames over a single scene: one
+/// [`super::plan::FramePlan`] per *unique* pose, blended with the
+/// shared blender; duplicates of an earlier pose reuse its image.
 ///
 /// Per-frame stage timings are attributed to the first frame of each
 /// group of identical cameras; its duplicates report zero stage time
@@ -41,7 +44,13 @@ pub fn render_frames(
             outputs.push(RenderOutput { image, timings: StageTimings::default(), stats });
             continue;
         }
-        outputs.push(render_frame(cloud, camera, cfg, blender));
+        let plan = plan_frame(cloud, camera, cfg);
+        let (image, t_blend) = plan.blend_serial(cfg, blender);
+        outputs.push(RenderOutput {
+            image,
+            timings: plan.timings(t_blend),
+            stats: plan.stats(),
+        });
     }
     outputs
 }
@@ -50,7 +59,7 @@ pub fn render_frames(
 mod tests {
     use super::*;
     use crate::math::Vec3;
-    use crate::pipeline::render::Blender;
+    use crate::pipeline::render::{render_frame, Blender};
     use crate::scene::synthetic::scene_by_name;
 
     fn cam(eye: Vec3) -> Camera {

@@ -51,14 +51,16 @@ pub fn key_tile(key: u64) -> u32 {
     (key >> 32) as u32
 }
 
-/// Build the duplicated key/value arrays. `tile_mask(i, tx, ty)` lets
-/// acceleration baselines (FlashGS / Speedy-Splat / StopThePop) veto
-/// individual (Gaussian, tile) pairs — `None` keeps the vanilla
-/// rectangle-overlap behaviour.
+/// Build the duplicated key/value arrays. `tile_mask(projected, i, tx,
+/// ty)` lets acceleration baselines (FlashGS / Speedy-Splat /
+/// StopThePop) veto individual (Gaussian, tile) pairs — `None` keeps
+/// the vanilla rectangle-overlap behaviour. The mask receives the
+/// projected set it is filtering, so `AccelMethod::keep_pair`
+/// implementations plug in without capturing it.
 pub fn duplicate_with_mask(
     projected: &Projected,
     grid: &TileGrid,
-    tile_mask: Option<&dyn Fn(usize, u32, u32) -> bool>,
+    tile_mask: Option<&dyn Fn(&Projected, usize, u32, u32) -> bool>,
 ) -> Duplicated {
     let mut out = Duplicated::default();
     // conservative reservation: most splats touch 1–4 tiles
@@ -71,7 +73,7 @@ pub fn duplicate_with_mask(
         for ty in y0..y1 {
             for tx in x0..x1 {
                 if let Some(mask) = tile_mask {
-                    if !mask(i, tx, ty) {
+                    if !mask(projected, i, tx, ty) {
                         continue;
                     }
                 }
@@ -142,7 +144,7 @@ mod tests {
         let grid = TileGrid::new(640, 480);
         let p = projected_one(Vec2::new(16.0, 16.0), 3.0, 1.0);
         // veto everything except tile (0,0)
-        let mask = |_i: usize, tx: u32, ty: u32| tx == 0 && ty == 0;
+        let mask = |_p: &Projected, _i: usize, tx: u32, ty: u32| tx == 0 && ty == 0;
         let d = duplicate_with_mask(&p, &grid, Some(&mask));
         assert_eq!(d.len(), 1);
         assert_eq!(key_tile(d.keys[0]), 0);

@@ -1,17 +1,21 @@
 //! The 3DGS render pipeline substrate — the four stages of Figure 2:
 //! preprocessing, duplication, sorting, blending — plus the GEMM-GS
-//! blending variant (Algorithm 2) and the frame-level orchestrator.
+//! blending variant (Algorithm 2) and the shared [`plan::FramePlan`]
+//! stage (DESIGN.md §8) that owns the preprocess → duplicate → sort
+//! orchestration for every render path.
 
 pub mod batch;
 pub mod blend_gemm;
 pub mod blend_vanilla;
 pub mod duplicate;
+pub mod plan;
 pub mod preprocess;
 pub mod render;
 pub mod sort;
 pub mod tile;
 
 pub use batch::render_frames;
+pub use plan::{plan_frame, plan_frame_masked, FramePlan};
 pub use preprocess::{preprocess, Projected, PreprocessConfig};
 pub use render::{render_frame, Blender, RenderConfig, RenderOutput, StageTimings};
 pub use tile::TileGrid;

@@ -1,0 +1,269 @@
+//! The **FramePlan** stage — the single preprocess → duplicate → sort
+//! orchestration every render path consumes (DESIGN.md §8).
+//!
+//! [`plan_frame`] owns preprocessing, the acceleration method's
+//! per-(Gaussian, tile) veto, duplication, sorting, tile-range
+//! extraction, and the per-stage wall-clock timings of those geometry
+//! stages. The resulting [`FramePlan`] is a reusable intermediate:
+//!
+//! * the serial frame renderer blends it with one [`TileBlend`]
+//!   ([`FramePlan::blend_serial`] → `pipeline::render::render_frame`),
+//! * the batched path plans once per unique pose and blends per frame
+//!   (`pipeline::batch::render_frames`),
+//! * the tile-parallel scheduler plans once and fans the tile list out
+//!   across worker threads (`coordinator::scheduler`),
+//! * the PJRT tiled-artifact executor plans each frame and pools every
+//!   frame's tiles into grouped kernel calls (`runtime::tiled_render`).
+//!
+//! Planning is deterministic (§4 invariant 1) and blender-independent
+//! (§4 invariant 3): every consumer sees the same pair multiset, so
+//! image differences can only come from the blend stage itself.
+
+use super::duplicate::{duplicate_with_mask, Duplicated};
+use super::preprocess::{preprocess, Projected};
+use super::render::{FrameStats, Image, RenderConfig, StageTimings, TileBlend};
+use super::sort::{sort_duplicated, tile_ranges};
+use super::tile::TileGrid;
+use super::{TILE_PIXELS, TILE_SIZE};
+use crate::math::Camera;
+use crate::scene::gaussian::GaussianCloud;
+use std::time::{Duration, Instant};
+
+/// The geometry stages of one frame, planned once and blended by any
+/// consumer. Fields are public: consumers walk `ranges`/`dup`/`projected`
+/// directly (the tile-parallel scheduler and the PJRT executor need raw
+/// access to stage their own blend loops).
+pub struct FramePlan {
+    /// Tile decomposition of the render target.
+    pub grid: TileGrid,
+    /// Camera the plan was built for (resolution + pose).
+    pub camera: Camera,
+    /// Projected (visible) Gaussians.
+    pub projected: Projected,
+    /// Sorted (tile, Gaussian) pairs.
+    pub dup: Duplicated,
+    /// Per-tile `[start, end)` ranges into `dup.values`.
+    pub ranges: Vec<(u32, u32)>,
+    /// Gaussians in the source cloud (for [`FrameStats`]).
+    pub n_gaussians: usize,
+    /// Stage 1 wall-clock.
+    pub t_preprocess: Duration,
+    /// Stage 2 wall-clock (includes the accel method's pair veto).
+    pub t_duplicate: Duration,
+    /// Stage 3 wall-clock.
+    pub t_sort: Duration,
+}
+
+/// Plan one frame under `cfg`: preprocessing, the configured
+/// acceleration method's pair veto (`cfg.accel`), duplication, sorting,
+/// and tile ranges, with per-stage timings.
+pub fn plan_frame(cloud: &GaussianCloud, camera: &Camera, cfg: &RenderConfig) -> FramePlan {
+    if cfg.accel.vetoes_pairs() {
+        let grid = TileGrid::new(camera.width, camera.height);
+        let accel = &cfg.accel;
+        let mask = move |p: &Projected, i: usize, tx: u32, ty: u32| {
+            accel.keep_pair(p, i, tx, ty, &grid)
+        };
+        plan_frame_masked(cloud, camera, cfg, Some(&mask))
+    } else {
+        plan_frame_masked(cloud, camera, cfg, None)
+    }
+}
+
+/// Plan one frame with an explicit pair veto. `Some(mask)` overrides
+/// `cfg.accel` entirely (legacy callers that carry their own closures);
+/// `None` applies no veto at all. Most callers want [`plan_frame`].
+pub fn plan_frame_masked(
+    cloud: &GaussianCloud,
+    camera: &Camera,
+    cfg: &RenderConfig,
+    tile_mask: Option<&dyn Fn(&Projected, usize, u32, u32) -> bool>,
+) -> FramePlan {
+    let grid = TileGrid::new(camera.width, camera.height);
+
+    // Stage 1 — preprocessing
+    let t0 = Instant::now();
+    let projected = preprocess(cloud, camera, &cfg.preprocess);
+    let t_preprocess = t0.elapsed();
+
+    // Stage 2 — duplication (with the optional pair veto)
+    let t0 = Instant::now();
+    let mut dup = duplicate_with_mask(&projected, &grid, tile_mask);
+    let t_duplicate = t0.elapsed();
+
+    // Stage 3 — sorting + tile-range extraction
+    let t0 = Instant::now();
+    sort_duplicated(&mut dup);
+    let ranges = tile_ranges(&dup.keys, grid.num_tiles());
+    let t_sort = t0.elapsed();
+
+    FramePlan {
+        grid,
+        camera: *camera,
+        projected,
+        dup,
+        ranges,
+        n_gaussians: cloud.len(),
+        t_preprocess,
+        t_duplicate,
+        t_sort,
+    }
+}
+
+impl FramePlan {
+    /// The tile's depth-sorted Gaussian indices.
+    #[inline]
+    pub fn tile_indices(&self, tile_id: usize) -> &[u32] {
+        let (s, e) = self.ranges[tile_id];
+        &self.dup.values[s as usize..e as usize]
+    }
+
+    /// Workload counters of the planned frame (tile-occupancy stats are
+    /// derived from `ranges`, so they agree across every blend backend).
+    pub fn stats(&self) -> FrameStats {
+        let mut active = 0usize;
+        let mut max_len = 0usize;
+        for &(s, e) in &self.ranges {
+            let len = (e - s) as usize;
+            if len > 0 {
+                active += 1;
+                max_len = max_len.max(len);
+            }
+        }
+        FrameStats {
+            n_gaussians: self.n_gaussians,
+            n_visible: self.projected.len(),
+            n_pairs: self.dup.len(),
+            n_tiles: self.grid.num_tiles(),
+            n_active_tiles: active,
+            max_tile_len: max_len,
+        }
+    }
+
+    /// Geometry-stage timings combined with a blend measurement.
+    pub fn timings(&self, blend: Duration) -> StageTimings {
+        StageTimings {
+            preprocess: self.t_preprocess,
+            duplicate: self.t_duplicate,
+            sort: self.t_sort,
+            blend,
+        }
+    }
+
+    /// Blend every tile serially with one blender, compositing
+    /// `cfg.background` where transmittance remains. Returns the image
+    /// and the blend-stage wall-clock (allocation included, as the
+    /// pre-FramePlan orchestration measured it).
+    pub fn blend_serial(
+        &self,
+        cfg: &RenderConfig,
+        blender: &mut dyn TileBlend,
+    ) -> (Image, Duration) {
+        let t0 = Instant::now();
+        let camera = &self.camera;
+        let mut image = Image::new(camera.width, camera.height);
+        let mut tile_buf = [[0.0f32; 3]; TILE_PIXELS];
+        for tid in 0..self.grid.num_tiles() {
+            let indices = self.tile_indices(tid);
+            let origin = self.grid.tile_origin(tid as u32);
+            blender.blend_tile(origin, &self.projected, indices, &mut tile_buf);
+            let t_left = blender.last_transmittance();
+            // write back valid pixels with background compositing
+            for ly in 0..TILE_SIZE {
+                let py = origin.1 + ly as u32;
+                if py >= camera.height {
+                    break;
+                }
+                for lx in 0..TILE_SIZE {
+                    let px = origin.0 + lx as u32;
+                    if px >= camera.width {
+                        break;
+                    }
+                    let j = ly * TILE_SIZE + lx;
+                    let t = t_left[j];
+                    image.data[(py * camera.width + px) as usize] = [
+                        tile_buf[j][0] + t * cfg.background.x,
+                        tile_buf[j][1] + t * cfg.background.y,
+                        tile_buf[j][2] + t * cfg.background.z,
+                    ];
+                }
+            }
+        }
+        (image, t0.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelKind;
+    use crate::math::Vec3;
+    use crate::scene::synthetic::scene_by_name;
+
+    fn small_scene() -> (GaussianCloud, Camera) {
+        let cloud = scene_by_name("train").unwrap().synthesize(0.002);
+        let camera = Camera::look_at(
+            Vec3::new(0.0, 1.0, -8.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            320,
+            192,
+        );
+        (cloud, camera)
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_sorted() {
+        let (cloud, camera) = small_scene();
+        let cfg = RenderConfig::default();
+        let a = plan_frame(&cloud, &camera, &cfg);
+        let b = plan_frame(&cloud, &camera, &cfg);
+        assert_eq!(a.dup.keys, b.dup.keys);
+        assert_eq!(a.dup.values, b.dup.values);
+        assert!(a.dup.keys.windows(2).all(|w| w[0] <= w[1]), "keys not sorted");
+        let stats = a.stats();
+        assert!(stats.n_visible > 0 && stats.n_pairs > 0 && stats.n_active_tiles > 0);
+    }
+
+    #[test]
+    fn accel_config_vetoes_pairs_in_the_plan() {
+        let (cloud, camera) = small_scene();
+        let vanilla = plan_frame(&cloud, &camera, &RenderConfig::default());
+        let flash = plan_frame(
+            &cloud,
+            &camera,
+            &RenderConfig::default().with_accel(AccelKind::FlashGs.instantiate()),
+        );
+        assert!(
+            flash.dup.len() < vanilla.dup.len(),
+            "FlashGS plan removed nothing: {} vs {}",
+            flash.dup.len(),
+            vanilla.dup.len()
+        );
+    }
+
+    #[test]
+    fn explicit_mask_overrides_config() {
+        let (cloud, camera) = small_scene();
+        let cfg = RenderConfig::default().with_accel(AccelKind::FlashGs.instantiate());
+        // an explicit always-true mask wins over the configured method
+        let keep_all = |_: &Projected, _: usize, _: u32, _: u32| true;
+        let masked = plan_frame_masked(&cloud, &camera, &cfg, Some(&keep_all));
+        let unmasked = plan_frame_masked(&cloud, &camera, &cfg, None);
+        assert_eq!(masked.dup.len(), unmasked.dup.len());
+    }
+
+    #[test]
+    fn stats_tile_occupancy_matches_ranges() {
+        let (cloud, camera) = small_scene();
+        let plan = plan_frame(&cloud, &camera, &RenderConfig::default());
+        let stats = plan.stats();
+        let active = plan.ranges.iter().filter(|&&(s, e)| e > s).count();
+        assert_eq!(stats.n_active_tiles, active);
+        assert_eq!(stats.n_tiles, plan.grid.num_tiles());
+        let sum: usize =
+            (0..plan.grid.num_tiles()).map(|t| plan.tile_indices(t).len()).sum();
+        assert_eq!(sum, stats.n_pairs);
+    }
+}

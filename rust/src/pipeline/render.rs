@@ -1,15 +1,17 @@
-//! Frame-level orchestration: runs the four pipeline stages for one
-//! camera, assembles the image, and reports per-stage wall-clock timings
-//! (the measurement behind Figure 3's latency breakdown).
+//! Frame-level rendering: plans one frame through the shared
+//! [`FramePlan`](super::plan::FramePlan) stage and blends it serially,
+//! reporting per-stage wall-clock timings (the measurement behind
+//! Figure 3's latency breakdown). The preprocess/duplicate/sort
+//! orchestration itself lives in [`super::plan`] — this module is one
+//! of its consumers.
 
-use super::duplicate::{duplicate_with_mask, Duplicated};
-use super::preprocess::{preprocess, PreprocessConfig, Projected};
-use super::sort::{sort_duplicated, tile_ranges};
-use super::tile::TileGrid;
-use super::{TILE_PIXELS, TILE_SIZE};
+use super::plan::{plan_frame, plan_frame_masked};
+use super::preprocess::{PreprocessConfig, Projected};
+use crate::accel::AccelMethod;
 use crate::math::{Camera, Vec3};
 use crate::scene::gaussian::GaussianCloud;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// A tile blender — Algorithm 1, Algorithm 2, or the PJRT-artifact
 /// executor (runtime module) behind one interface.
@@ -51,7 +53,7 @@ impl Blender {
 }
 
 /// Frame render configuration.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct RenderConfig {
     /// Preprocessing knobs.
     pub preprocess: PreprocessConfig,
@@ -59,6 +61,12 @@ pub struct RenderConfig {
     pub background: Vec3,
     /// Gaussian batch size per blending iteration.
     pub batch: usize,
+    /// Acceleration method composed with the render (paper §4.1): its
+    /// pair veto runs inside [`super::plan::plan_frame`]; callers that
+    /// serve compression methods render the
+    /// [`AccelMethod::prepare_model`]-transformed cloud. Defaults to
+    /// the identity ([`crate::accel::Vanilla`]).
+    pub accel: Arc<dyn AccelMethod>,
 }
 
 impl Default for RenderConfig {
@@ -67,7 +75,27 @@ impl Default for RenderConfig {
             preprocess: PreprocessConfig::default(),
             background: Vec3::ZERO,
             batch: super::DEFAULT_BATCH,
+            accel: Arc::new(crate::accel::Vanilla),
         }
+    }
+}
+
+impl std::fmt::Debug for RenderConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RenderConfig")
+            .field("preprocess", &self.preprocess)
+            .field("background", &self.background)
+            .field("batch", &self.batch)
+            .field("accel", &self.accel.name())
+            .finish()
+    }
+}
+
+impl RenderConfig {
+    /// Builder-style accel override.
+    pub fn with_accel(mut self, accel: Arc<dyn AccelMethod>) -> Self {
+        self.accel = accel;
+        self
     }
 }
 
@@ -221,9 +249,10 @@ pub struct RenderOutput {
     pub stats: FrameStats,
 }
 
-/// Render one frame through the full pipeline with `blender`.
-/// `tile_mask` lets preprocessing-based baselines veto (Gaussian, tile)
-/// pairs (FlashGS / StopThePop / Speedy-Splat — see `accel/`).
+/// Render one frame: plan through [`super::plan::plan_frame_masked`]
+/// and blend serially. `tile_mask` overrides `cfg.accel`'s veto with an
+/// explicit closure (legacy baseline tests); most callers want
+/// [`render_frame`], which applies the configured method.
 pub fn render_frame_masked(
     cloud: &GaussianCloud,
     camera: &Camera,
@@ -231,97 +260,21 @@ pub fn render_frame_masked(
     blender: &mut dyn TileBlend,
     tile_mask: Option<&dyn Fn(&Projected, usize, u32, u32) -> bool>,
 ) -> RenderOutput {
-    let grid = TileGrid::new(camera.width, camera.height);
-
-    // Stage 1 — preprocessing
-    let t0 = Instant::now();
-    let projected = preprocess(cloud, camera, &cfg.preprocess);
-    let t_pre = t0.elapsed();
-
-    // Stage 2 — duplication
-    let t0 = Instant::now();
-    let proj_ref = &projected;
-    let mask_adapter =
-        tile_mask.map(|m| move |i: usize, tx: u32, ty: u32| m(proj_ref, i, tx, ty));
-    let mut dup: Duplicated = match &mask_adapter {
-        Some(f) => duplicate_with_mask(proj_ref, &grid, Some(f)),
-        None => duplicate_with_mask(proj_ref, &grid, None),
-    };
-    let t_dup = t0.elapsed();
-
-    // Stage 3 — sorting
-    let t0 = Instant::now();
-    sort_duplicated(&mut dup);
-    let ranges = tile_ranges(&dup.keys, grid.num_tiles());
-    let t_sort = t0.elapsed();
-
-    // Stage 4 — blending
-    let t0 = Instant::now();
-    let mut image = Image::new(camera.width, camera.height);
-    let mut tile_buf = [[0.0f32; 3]; TILE_PIXELS];
-    let mut active_tiles = 0usize;
-    let mut max_len = 0usize;
-    for tid in 0..grid.num_tiles() {
-        let (s, e) = ranges[tid];
-        let indices = &dup.values[s as usize..e as usize];
-        let len = indices.len();
-        if len > 0 {
-            active_tiles += 1;
-            max_len = max_len.max(len);
-        }
-        let origin = grid.tile_origin(tid as u32);
-        blender.blend_tile(origin, &projected, indices, &mut tile_buf);
-        let t_left = blender.last_transmittance();
-        // write back valid pixels with background compositing
-        for ly in 0..TILE_SIZE {
-            let py = origin.1 + ly as u32;
-            if py >= camera.height {
-                break;
-            }
-            for lx in 0..TILE_SIZE {
-                let px = origin.0 + lx as u32;
-                if px >= camera.width {
-                    break;
-                }
-                let j = ly * TILE_SIZE + lx;
-                let t = t_left[j];
-                image.data[(py * camera.width + px) as usize] = [
-                    tile_buf[j][0] + t * cfg.background.x,
-                    tile_buf[j][1] + t * cfg.background.y,
-                    tile_buf[j][2] + t * cfg.background.z,
-                ];
-            }
-        }
-    }
-    let t_blend = t0.elapsed();
-
-    RenderOutput {
-        image,
-        timings: StageTimings {
-            preprocess: t_pre,
-            duplicate: t_dup,
-            sort: t_sort,
-            blend: t_blend,
-        },
-        stats: FrameStats {
-            n_gaussians: cloud.len(),
-            n_visible: projected.len(),
-            n_pairs: dup.len(),
-            n_tiles: grid.num_tiles(),
-            n_active_tiles: active_tiles,
-            max_tile_len: max_len,
-        },
-    }
+    let plan = plan_frame_masked(cloud, camera, cfg, tile_mask);
+    let (image, t_blend) = plan.blend_serial(cfg, blender);
+    RenderOutput { image, timings: plan.timings(t_blend), stats: plan.stats() }
 }
 
-/// Render one frame (no tile mask).
+/// Render one frame under `cfg` (including `cfg.accel`'s pair veto).
 pub fn render_frame(
     cloud: &GaussianCloud,
     camera: &Camera,
     cfg: &RenderConfig,
     blender: &mut dyn TileBlend,
 ) -> RenderOutput {
-    render_frame_masked(cloud, camera, cfg, blender, None)
+    let plan = plan_frame(cloud, camera, cfg);
+    let (image, t_blend) = plan.blend_serial(cfg, blender);
+    RenderOutput { image, timings: plan.timings(t_blend), stats: plan.stats() }
 }
 
 #[cfg(test)]

@@ -22,14 +22,12 @@
 
 use super::client::RuntimeClient;
 use crate::math::{Camera, Vec3};
-use crate::pipeline::duplicate::{duplicate, Duplicated};
+use crate::pipeline::plan::{plan_frame, FramePlan};
 use crate::pipeline::preprocess::{preprocess, Projected};
-use crate::pipeline::render::{FrameStats, Image, RenderConfig, RenderOutput, StageTimings};
-use crate::pipeline::sort::{sort_duplicated, tile_ranges};
-use crate::pipeline::tile::TileGrid;
+use crate::pipeline::render::{Image, RenderConfig, RenderOutput};
 use crate::pipeline::{TILE_PIXELS, TILE_SIZE};
 use anyhow::Result;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// Manifest entry of the 16-tile-grouped blend kernel; the coordinator
 /// checks for it to decide whether the pooled path is available.
@@ -46,17 +44,6 @@ struct TileState {
     c: Vec<f32>,
     t: Vec<f32>,
     done: Vec<f32>,
-}
-
-/// One frame's geometry stages, run natively before the pooled blend.
-struct PreparedFrame {
-    grid: TileGrid,
-    projected: Projected,
-    dup: Duplicated,
-    ranges: Vec<(u32, u32)>,
-    t_pre: Duration,
-    t_dup: Duration,
-    t_sort: Duration,
 }
 
 /// Render one frame through the 16-tile-grouped artifact path.
@@ -85,25 +72,10 @@ pub fn render_frames_tiled(
     let batch = client.manifest().batch;
     let mp = client.manifest().mp.clone();
 
-    // geometry stages per frame (native, timed individually)
-    let mut prepared: Vec<PreparedFrame> = Vec::with_capacity(cameras.len());
-    for camera in cameras {
-        let grid = TileGrid::new(camera.width, camera.height);
-        let t0 = Instant::now();
-        let projected = preprocess(cloud, camera, &cfg.preprocess);
-        let t_pre = t0.elapsed();
-
-        let t0 = Instant::now();
-        let mut dup = duplicate(&projected, &grid);
-        let t_dup = t0.elapsed();
-
-        let t0 = Instant::now();
-        sort_duplicated(&mut dup);
-        let ranges = tile_ranges(&dup.keys, grid.num_tiles());
-        let t_sort = t0.elapsed();
-
-        prepared.push(PreparedFrame { grid, projected, dup, ranges, t_pre, t_dup, t_sort });
-    }
+    // geometry stages per frame: the shared FramePlan stage (DESIGN.md
+    // §8), native and timed individually — including `cfg.accel`'s veto
+    let prepared: Vec<FramePlan> =
+        cameras.iter().map(|camera| plan_frame(cloud, camera, cfg)).collect();
 
     let t0 = Instant::now();
     // states for every frame's non-empty tiles, pooled into one work set
@@ -226,9 +198,7 @@ pub fn render_frames_tiled(
             image
         })
         .collect();
-    let mut active_tiles = vec![0usize; cameras.len()];
     for st in &states {
-        active_tiles[st.frame] += 1;
         let camera = &cameras[st.frame];
         let origin = prepared[st.frame].grid.tile_origin(st.tile_id);
         let image = &mut images[st.frame];
@@ -260,26 +230,10 @@ pub fn render_frames_tiled(
 
     let mut outputs = Vec::with_capacity(cameras.len());
     for (frame, pf) in prepared.iter().enumerate() {
-        let mut max_len = 0usize;
-        for &(s, e) in &pf.ranges {
-            max_len = max_len.max((e - s) as usize);
-        }
         outputs.push(RenderOutput {
             image: std::mem::replace(&mut images[frame], Image::new(0, 0)),
-            timings: StageTimings {
-                preprocess: pf.t_pre,
-                duplicate: pf.t_dup,
-                sort: pf.t_sort,
-                blend: blend_each,
-            },
-            stats: FrameStats {
-                n_gaussians: cloud.len(),
-                n_visible: pf.projected.len(),
-                n_pairs: pf.dup.len(),
-                n_tiles: pf.grid.num_tiles(),
-                n_active_tiles: active_tiles[frame],
-                max_tile_len: max_len,
-            },
+            timings: pf.timings(blend_each),
+            stats: pf.stats(),
         });
     }
     Ok(outputs)

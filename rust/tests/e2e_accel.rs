@@ -1,0 +1,181 @@
+//! Integration tests for acceleration-method composition (DESIGN.md
+//! §8): §4 invariant 6 at the public API surface — the lossless
+//! preprocessing baselines must not change pixels while strictly
+//! reducing pair counts, through both the direct `RenderConfig::accel`
+//! path and the coordinator — plus the extended coalescing key
+//! (scene, resolution, accel) and the per-`(scene, method)`
+//! prepared-model cache.
+
+use gemm_gs::accel::AccelKind;
+use gemm_gs::coordinator::{
+    BackendKind, Coordinator, CoordinatorConfig, RenderRequest,
+};
+use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::pipeline::render::{render_frame, Blender, RenderConfig};
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+const SCALE: f64 = 0.001;
+
+fn camera(w: u32, h: u32) -> Camera {
+    Camera::look_at(
+        Vec3::new(0.0, 1.0, -8.0),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        w,
+        h,
+    )
+}
+
+/// §4 invariant 6, end to end: FlashGS, StopThePop, and Speedy-Splat
+/// configured through `RenderConfig::accel` are lossless (PSNR > 55 dB
+/// against vanilla, the paper's tolerance) and every one of them
+/// *strictly* reduces `n_pairs`.
+#[test]
+fn lossless_methods_preserve_pixels_and_strictly_cut_pairs() {
+    for scene in ["train", "truck"] {
+        let cloud = scene_by_name(scene).unwrap().synthesize(SCALE * 2.0);
+        let cam = camera(320, 192);
+        let base_cfg = RenderConfig::default();
+        let mut blender = Blender::Gemm.instantiate(base_cfg.batch);
+        let reference = render_frame(&cloud, &cam, &base_cfg, blender.as_mut());
+
+        for kind in [AccelKind::FlashGs, AccelKind::StopThePop, AccelKind::SpeedySplat] {
+            let cfg = RenderConfig::default().with_accel(kind.instantiate());
+            let out = render_frame(&cloud, &cam, &cfg, blender.as_mut());
+            assert!(
+                out.stats.n_pairs < reference.stats.n_pairs,
+                "{scene}/{}: pairs must strictly decrease ({} vs {})",
+                kind.cli_name(),
+                out.stats.n_pairs,
+                reference.stats.n_pairs
+            );
+            let psnr = out.image.psnr(&reference.image).unwrap();
+            assert!(
+                psnr > 55.0 || psnr.is_infinite(),
+                "{scene}/{}: not lossless ({psnr:.1} dB)",
+                kind.cli_name()
+            );
+        }
+    }
+}
+
+fn accel_coordinator(max_batch: usize, workers: usize) -> Coordinator {
+    let mut scenes = HashMap::new();
+    scenes.insert(
+        "train".to_string(),
+        Arc::new(scene_by_name("train").unwrap().synthesize(SCALE)),
+    );
+    Coordinator::start(
+        CoordinatorConfig {
+            workers,
+            queue_capacity: 64,
+            backend: BackendKind::NativeGemm,
+            render: RenderConfig::default(),
+            max_batch,
+            batch_timeout: Duration::from_millis(300),
+        },
+        scenes,
+    )
+}
+
+/// The extended coalescing key: requests that differ only in accel
+/// method are never merged into one batch, and each request's method
+/// really executes (the responses' pair counts differ accordingly).
+#[test]
+fn different_accel_methods_are_never_coalesced() {
+    let n = 8u64;
+    // one worker + a wide window: same-key requests would coalesce
+    let coord = accel_coordinator(8, 1);
+    let cam = camera(160, 96);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let mut req = RenderRequest::new(i, "train", cam);
+            // strict alternation: the single-stash FIFO scheduler must
+            // flush at every key change, so every batch is a singleton
+            req.accel =
+                if i % 2 == 0 { AccelKind::Vanilla } else { AccelKind::FlashGs };
+            coord.submit(req)
+        })
+        .collect();
+    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    for r in &responses {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.frames, n);
+    assert_eq!(
+        m.batches, n,
+        "requests with different accel methods were merged into a batch"
+    );
+    assert_eq!(m.coalesced_frames, 0);
+    // and the methods really ran per request: FlashGS responses carry
+    // strictly fewer pairs than the vanilla ones
+    let vanilla_pairs = responses[0].stats.n_pairs;
+    let flash_pairs = responses[1].stats.n_pairs;
+    assert!(
+        flash_pairs < vanilla_pairs,
+        "FlashGS response shows no culling: {flash_pairs} vs {vanilla_pairs}"
+    );
+    for (i, r) in responses.iter().enumerate() {
+        let expect = if i % 2 == 0 { vanilla_pairs } else { flash_pairs };
+        assert_eq!(r.stats.n_pairs, expect, "response {i}");
+    }
+    coord.shutdown();
+}
+
+/// Same-key accel requests still coalesce — the extended key only
+/// separates *different* methods — and identical poses inside the batch
+/// share one plan, delivering bitwise-equal images.
+#[test]
+fn same_accel_method_still_coalesces() {
+    let n = 6u64;
+    let coord = accel_coordinator(4, 1);
+    let cam = camera(160, 96);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let mut req = RenderRequest::new(i, "train", cam);
+            req.accel = AccelKind::FlashGs;
+            coord.submit(req)
+        })
+        .collect();
+    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    for r in &responses {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let first = responses[0].image.as_ref().unwrap();
+    for r in &responses[1..] {
+        assert!(r.image.as_ref().unwrap().data == first.data, "coalesced image diverged");
+    }
+    let m = coord.metrics();
+    assert!(m.batches < n, "no coalescing happened: {} batches for {n} frames", m.batches);
+    coord.shutdown();
+}
+
+/// Compression methods prepare the model once per `(scene, method)` and
+/// the cached model is reused across requests and workers.
+#[test]
+fn prepared_model_cache_is_shared_across_requests() {
+    let coord = accel_coordinator(1, 2);
+    let cam = camera(160, 96);
+    let rxs: Vec<_> = (0..6u64)
+        .map(|i| {
+            let mut req = RenderRequest::new(i, "train", cam);
+            req.accel =
+                if i % 2 == 0 { AccelKind::LightGaussian } else { AccelKind::C3dgs };
+            coord.submit(req)
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    // two methods → exactly two transforms, regardless of 6 requests
+    // racing across 2 workers
+    assert_eq!(coord.metrics().prepared_models, 2);
+    assert_eq!(coord.prepared_models_cached(), 2);
+    coord.shutdown();
+}

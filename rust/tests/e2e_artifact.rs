@@ -65,7 +65,7 @@ fn coordinator_serves_through_pjrt() {
     camera.width = 128;
     camera.height = 80;
     for i in 0..3 {
-        let r = coord.render_sync(RenderRequest { id: i, scene: "playroom".into(), camera });
+        let r = coord.render_sync(RenderRequest::new(i, "playroom", camera));
         assert!(r.error.is_none(), "{:?}", r.error);
         assert!(r.image.is_some());
     }

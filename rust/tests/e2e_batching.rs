@@ -54,11 +54,7 @@ fn max_batch_one_matches_per_request_path_bitwise() {
     let coord = coordinator(1, Duration::from_millis(50), 2);
     let rxs: Vec<_> = (0..n)
         .map(|i| {
-            coord.submit(RenderRequest {
-                id: i as u64,
-                scene: "train".into(),
-                camera: orbit_camera(i, n),
-            })
+            coord.submit(RenderRequest::new(i as u64, "train", orbit_camera(i, n)))
         })
         .collect();
     let served: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
@@ -87,17 +83,13 @@ fn coalesced_output_equals_uncoalesced_output() {
         let coord = coordinator(max_batch, Duration::from_millis(200), 1);
         let rxs: Vec<_> = (0..n)
             .map(|i| {
-                coord.submit(RenderRequest {
-                    id: i as u64,
-                    // two distinct poses alternating → batches mix poses
-                    camera: orbit_camera(i % 2, 4),
-                    scene: "train".into(),
-                })
+                // two distinct poses alternating → batches mix poses
+                coord.submit(RenderRequest::new(i as u64, "train", orbit_camera(i % 2, 4)))
             })
             .collect();
         let imgs = rxs
             .into_iter()
-            .map(|rx| rx.recv().unwrap().image.unwrap().data)
+            .map(|rx| rx.recv().unwrap().image.unwrap().data.clone())
             .collect();
         coord.shutdown();
         imgs
@@ -114,11 +106,7 @@ fn unknown_scene_in_a_batch_errors_cleanly() {
     let coord = coordinator(4, Duration::from_millis(100), 1);
     let bad: Vec<_> = (0..3)
         .map(|i| {
-            coord.submit(RenderRequest {
-                id: i,
-                scene: "nope".into(),
-                camera: orbit_camera(0, 4),
-            })
+            coord.submit(RenderRequest::new(i, "nope", orbit_camera(0, 4)))
         })
         .collect();
     for rx in bad {
@@ -127,11 +115,7 @@ fn unknown_scene_in_a_batch_errors_cleanly() {
         assert!(r.image.is_none());
     }
     // the service stays healthy for good requests afterwards
-    let ok = coord.render_sync(RenderRequest {
-        id: 9,
-        scene: "train".into(),
-        camera: orbit_camera(0, 4),
-    });
+    let ok = coord.render_sync(RenderRequest::new(9, "train", orbit_camera(0, 4)));
     assert!(ok.error.is_none());
     assert_eq!(coord.metrics().errors, 3);
     coord.shutdown();
@@ -143,11 +127,7 @@ fn occupancy_metrics_are_consistent() {
     let coord = coordinator(4, Duration::from_millis(300), 1);
     let rxs: Vec<_> = (0..n)
         .map(|i| {
-            coord.submit(RenderRequest {
-                id: i as u64,
-                scene: "train".into(),
-                camera: orbit_camera(0, 4),
-            })
+            coord.submit(RenderRequest::new(i as u64, "train", orbit_camera(0, 4)))
         })
         .collect();
     for rx in rxs {
