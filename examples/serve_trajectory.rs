@@ -56,6 +56,7 @@ fn main() {
             // strict per-request alternation would break every batch)
             max_batch: 4,
             batch_timeout: std::time::Duration::from_millis(2),
+            ..CoordinatorConfig::default()
         },
         scenes,
     );

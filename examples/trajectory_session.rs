@@ -1,0 +1,120 @@
+//! TRAJECTORY DRIVER: temporal-coherence serving end to end
+//! (DESIGN.md §9).
+//!
+//! Streams a coherent camera path — the sub-pixel-per-frame motion of a
+//! high-frame-rate viewer — through the coordinator's session API: the
+//! frames carry a session id, the scheduler routes them to one sticky
+//! worker, and that worker's warm `TrajectorySession` plan cache
+//! replaces the global per-frame sort with per-tile repairs. Plain
+//! (sessionless) requests run alongside on the shared coalescing queue
+//! to show the two request classes interleave. Reports throughput,
+//! latency, and the `plan_reuse` metric; asserts plans really were
+//! reused and that malformed requests come back as error responses.
+//!
+//! ```bash
+//! cargo run --release --example trajectory_session
+//! # or, smaller: FRAMES=12 cargo run --release --example trajectory_session
+//! ```
+
+use gemm_gs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, RenderRequest};
+use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::runtime;
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn orbit(theta: f32, w: u32, h: u32) -> Camera {
+    Camera::look_at(
+        Vec3::new(8.0 * theta.cos(), 2.0, 8.0 * theta.sin()),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        w,
+        h,
+    )
+}
+
+fn main() {
+    let frames: usize =
+        std::env::var("FRAMES").ok().and_then(|v| v.parse().ok()).unwrap_or(48);
+    let sim_scale: f64 =
+        std::env::var("SIM_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.005);
+
+    let backend = if runtime::artifacts_available() {
+        println!("artifacts found — serving through the PJRT-compiled Pallas kernel");
+        BackendKind::ArtifactGemm
+    } else {
+        println!("artifacts missing — using native GEMM backend");
+        BackendKind::NativeGemm
+    };
+
+    let spec = scene_by_name("train").unwrap();
+    let mut scenes = HashMap::new();
+    scenes.insert(spec.name.to_string(), Arc::new(spec.synthesize(sim_scale)));
+    println!("loaded scene '{}' at sim scale {sim_scale}", spec.name);
+
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, backend, ..CoordinatorConfig::default() },
+        scenes,
+    );
+
+    // One coherent trajectory session (sticky worker, warm plans) plus
+    // an interleaved stream of independent same-pose requests on the
+    // shared coalescing queue.
+    let (w, h) = (320u32, 192u32);
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::new();
+    for i in 0..frames {
+        let theta = 0.4 + i as f32 * 3e-4; // sub-pixel screen motion
+        receivers.push(coord.submit(
+            RenderRequest::new(i as u64, spec.name, orbit(theta, w, h))
+                .with_session(1, i as u64),
+        ));
+        if i % 4 == 0 {
+            receivers.push(
+                coord.submit(RenderRequest::new(1000 + i as u64, spec.name, orbit(2.5, w, h))),
+            );
+        }
+    }
+
+    let total = receivers.len();
+    let mut latencies: Vec<f64> = Vec::with_capacity(total);
+    for rx in receivers {
+        let r = rx.recv().expect("response");
+        assert!(r.error.is_none(), "render failed: {:?}", r.error);
+        assert!(r.image.is_some());
+        latencies.push(r.latency.as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = |q: f64| latencies[((q * latencies.len() as f64) as usize).min(latencies.len() - 1)];
+
+    // Malformed inputs come back as error responses, never panics.
+    let mut zero = orbit(0.0, w, h);
+    zero.width = 0;
+    let resp = coord.render_sync(RenderRequest::new(9000, spec.name, zero));
+    assert!(resp.error.is_some(), "zero-resolution request must be rejected");
+    let mut nan = orbit(0.0, w, h);
+    nan.view.m[0] = f32::NAN;
+    let resp = coord.render_sync(RenderRequest::new(9001, spec.name, nan).with_session(1, 999));
+    assert!(resp.error.is_some(), "NaN-pose request must be rejected");
+
+    let m = coord.metrics();
+    println!("\n=== trajectory serving results ===");
+    println!("frames:       {total} ({frames} session + {} shared)", total - frames);
+    println!("wall time:    {wall:.2?} ({:.1} frames/s)", total as f64 / wall.as_secs_f64());
+    println!("latency p50:  {:.2} ms  p95: {:.2} ms", p(0.50), p(0.95));
+    println!(
+        "plan reuse:   {} warm / {} cold (session frames only)",
+        m.plan_reuse, m.plan_fallbacks
+    );
+    println!("rejected:     {} malformed requests (error responses, no panics)", m.errors);
+    assert_eq!(m.plan_reuse + m.plan_fallbacks, frames as u64);
+    assert!(
+        m.plan_reuse > 0,
+        "coherent session traffic must reuse plans (got {} warm)",
+        m.plan_reuse
+    );
+    coord.shutdown();
+    println!("coordinator drained and shut down cleanly");
+}

@@ -120,6 +120,7 @@ pub fn run_coalesced(
                     render: RenderConfig::default(),
                     max_batch,
                     batch_timeout: Duration::from_millis(5),
+                    ..CoordinatorConfig::default()
                 },
                 scenes,
             );

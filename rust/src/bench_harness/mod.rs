@@ -10,6 +10,7 @@
 //! | Fig. 5 (H100 latency)     | [`table2`] (H100 spec) | `gemm-gs bench-fig5` |
 //! | Fig. 6 (resolution sweep) | [`fig6`] | `gemm-gs bench-fig6` |
 //! | Fig. 7 (batch-size sweep) | [`fig7`] | `gemm-gs bench-fig7` |
+//! | Trajectory cold-vs-warm sweep (§9) | [`trajectory`] | `gemm-gs bench-trajectory` |
 
 pub mod fig3;
 pub mod fig6;
@@ -17,6 +18,7 @@ pub mod fig7;
 pub mod report;
 pub mod table2;
 pub mod timing;
+pub mod trajectory;
 pub mod workloads;
 
 pub use workloads::{default_camera, measure_workload, MeasuredWorkload};

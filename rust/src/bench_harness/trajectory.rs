@@ -1,0 +1,167 @@
+//! Cold-vs-warm trajectory sweep (DESIGN.md §9, EXPERIMENTS.md
+//! §Trajectory): drives one coherent camera arc through the planning
+//! stages twice — once replanning every frame from scratch
+//! ([`crate::pipeline::plan::plan_frame`]) and once through a
+//! [`TrajectorySession`] that reuses the previous frame's tile
+//! structure — for every acceleration method, and reports measured
+//! plan-stage wall-clock, the sort-stage share the warm path attacks,
+//! and the achieved reuse rate. The fig7-style serving analogue of the
+//! temporal-coherence argument: intra-frame acceleration (GEMM
+//! blending, pair vetoes) composes multiplicatively with inter-frame
+//! reuse, because they cut different stages.
+
+use super::report::{ms, speedup, Table};
+use crate::accel::AccelKind;
+use crate::math::{Camera, Vec3};
+use crate::pipeline::plan::plan_frame;
+use crate::pipeline::render::RenderConfig;
+use crate::pipeline::trajectory::{plan_time, TrajectoryConfig, TrajectorySession};
+use crate::scene::synthetic::scene_by_name;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One measured accel-method row of the sweep.
+#[derive(Debug, Clone)]
+pub struct TrajectoryPoint {
+    /// Acceleration method composed with the planner.
+    pub accel: AccelKind,
+    /// Total plan-stage wall-clock (ms) replanning cold every frame.
+    pub cold_plan_ms: f64,
+    /// Total plan-stage wall-clock (ms) through the warm session.
+    pub warm_plan_ms: f64,
+    /// Sort-stage share of the cold total (ms) — what the warm path replaces.
+    pub cold_sort_ms: f64,
+    /// Sort-stage share of the warm total (ms).
+    pub warm_sort_ms: f64,
+    /// Fraction of frames planned warm (first frame is always cold).
+    pub reuse_rate: f64,
+    /// Frames in the trajectory.
+    pub frames: usize,
+}
+
+/// A pose on the standard camera orbit (radius 8, the serve loop's arc).
+pub fn orbit_pose(theta: f32, width: u32, height: u32) -> Camera {
+    Camera::look_at(
+        Vec3::new(8.0 * theta.cos(), 2.0, 8.0 * theta.sin()),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        width,
+        height,
+    )
+}
+
+/// Measure one coherent arc (`frames` poses, `step` radians apart —
+/// small steps are the high-frame-rate regime where tile structure is
+/// stable) under every acceleration method, cold vs. warm.
+pub fn run(scene: &str, sim_scale: f64, frames: usize, step: f32) -> Vec<TrajectoryPoint> {
+    let spec = scene_by_name(scene).expect("unknown scene");
+    let base = Arc::new(spec.synthesize(sim_scale));
+    // quarter resolution: the sweep measures planning, and must finish
+    // in seconds on a CPU testbed
+    let (w, h) = ((spec.width / 4).max(64), (spec.height / 4).max(64));
+    AccelKind::all()
+        .iter()
+        .map(|&accel| {
+            let method = accel.instantiate();
+            // compression methods plan the transformed model, exactly as
+            // the coordinator's scene store serves it (DESIGN.md §8)
+            let cloud = if method.transforms_model() {
+                Arc::new(method.prepare_model(&base))
+            } else {
+                Arc::clone(&base)
+            };
+            let cfg = RenderConfig::default().with_accel(accel.instantiate());
+            let poses: Vec<Camera> =
+                (0..frames).map(|i| orbit_pose(0.4 + i as f32 * step, w, h)).collect();
+
+            let mut cold_total = Duration::ZERO;
+            let mut cold_sort = Duration::ZERO;
+            for camera in &poses {
+                let plan = plan_frame(&cloud, camera, &cfg);
+                cold_total += plan_time(&plan);
+                cold_sort += plan.t_sort;
+            }
+
+            let mut session = TrajectorySession::new(
+                Arc::clone(&cloud),
+                cfg.clone(),
+                TrajectoryConfig::default(),
+            );
+            let mut warm_total = Duration::ZERO;
+            let mut warm_sort = Duration::ZERO;
+            for camera in &poses {
+                let (plan, _source) = session.plan_next(camera);
+                warm_total += plan_time(&plan);
+                warm_sort += plan.t_sort;
+            }
+            let stats = session.stats();
+
+            TrajectoryPoint {
+                accel,
+                cold_plan_ms: cold_total.as_secs_f64() * 1e3,
+                warm_plan_ms: warm_total.as_secs_f64() * 1e3,
+                cold_sort_ms: cold_sort.as_secs_f64() * 1e3,
+                warm_sort_ms: warm_sort.as_secs_f64() * 1e3,
+                reuse_rate: stats.warm_plans as f64 / stats.frames.max(1) as f64,
+                frames,
+            }
+        })
+        .collect()
+}
+
+/// Paper-style rendering of the sweep.
+pub fn render(points: &[TrajectoryPoint], scene: &str, frames: usize, step: f32) -> String {
+    let mut t = Table::new(&[
+        "Accel",
+        "Cold plan (ms)",
+        "Warm plan (ms)",
+        "Plan speedup",
+        "Cold sort (ms)",
+        "Warm sort (ms)",
+        "Sort speedup",
+        "Reuse",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.accel.cli_name().to_string(),
+            ms(p.cold_plan_ms),
+            ms(p.warm_plan_ms),
+            speedup(p.cold_plan_ms / p.warm_plan_ms.max(1e-9)),
+            ms(p.cold_sort_ms),
+            ms(p.warm_sort_ms),
+            speedup(p.cold_sort_ms / p.warm_sort_ms.max(1e-9)),
+            format!("{:.0}%", p.reuse_rate * 100.0),
+        ]);
+    }
+    format!(
+        "Trajectory sweep — {frames}-frame coherent arc (step {step} rad) on '{scene}', \
+         cold replan vs. warm session (measured CPU wall-clock, DESIGN.md §9)\n\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_every_method_and_reuses_plans() {
+        let pts = run("train", 0.001, 6, 3e-4);
+        assert_eq!(pts.len(), AccelKind::all().len());
+        for p in &pts {
+            assert_eq!(p.frames, 6);
+            assert!(p.cold_plan_ms > 0.0 && p.warm_plan_ms > 0.0);
+            assert!(
+                p.reuse_rate > 0.0,
+                "{}: coherent arc reused no plans",
+                p.accel.cli_name()
+            );
+            // the first frame is always cold
+            assert!(p.reuse_rate <= (p.frames - 1) as f64 / p.frames as f64 + 1e-9);
+        }
+        let rendered = render(&pts, "train", 6, 3e-4);
+        assert!(rendered.contains("Trajectory sweep"));
+        assert!(rendered.contains("vanilla") && rendered.contains("flashgs"));
+    }
+}

@@ -106,11 +106,53 @@ where
                 Err(_) => return None, // disconnected and nothing stashed
             },
         };
+        Some(self.fill_batch(&mut inner, seed))
+    }
 
+    /// Like [`next_batch`](Self::next_batch), but waits at most `idle`
+    /// for the seed item. Coordinator workers that also service a
+    /// sticky trajectory-session queue (DESIGN.md §9) use this to
+    /// interleave both queues without a blocking `recv` starving one.
+    ///
+    /// The receiver lives under the scheduler mutex, so a timed seed
+    /// wait necessarily holds the lock (exactly as the blocking
+    /// [`next_batch`](Self::next_batch) always has). A **zero**-wait
+    /// poll therefore refuses to queue behind another worker's timed
+    /// wait: under contention it returns `Idle` immediately — the lock
+    /// holder is already draining the queue on everyone's behalf — so
+    /// a session-busy worker's between-frame poll never stalls for
+    /// another worker's idle tick.
+    pub fn poll_batch(&self, idle: Duration) -> BatchPoll<T> {
+        let mut inner = if idle.is_zero() {
+            match self.inner.try_lock() {
+                Ok(guard) => guard,
+                Err(std::sync::TryLockError::WouldBlock) => return BatchPoll::Idle,
+                Err(std::sync::TryLockError::Poisoned(_)) => {
+                    panic!("batch queue lock poisoned")
+                }
+            }
+        } else {
+            self.inner.lock().expect("batch queue lock poisoned")
+        };
+
+        let seed = match inner.stash.take() {
+            Some(item) => item,
+            None => match inner.rx.recv_timeout(idle) {
+                Ok(item) => item,
+                Err(RecvTimeoutError::Timeout) => return BatchPoll::Idle,
+                Err(RecvTimeoutError::Disconnected) => return BatchPoll::Closed,
+            },
+        };
+        BatchPoll::Batch(self.fill_batch(&mut inner, seed))
+    }
+
+    /// The shared coalescing window: grow a batch from `seed` with up to
+    /// `max_batch - 1` compatible followers within `timeout`.
+    fn fill_batch(&self, inner: &mut Inner<T>, seed: T) -> Vec<T> {
         let max_batch = self.policy.max_batch.max(1);
         let mut batch = vec![seed];
         if max_batch == 1 {
-            return Some(batch);
+            return batch;
         }
 
         let key = (self.key_of)(&batch[0]);
@@ -143,8 +185,18 @@ where
                 break;
             }
         }
-        Some(batch)
+        batch
     }
+}
+
+/// Outcome of one bounded-wait [`BatchScheduler::poll_batch`] call.
+pub enum BatchPoll<T> {
+    /// A batch was drained.
+    Batch(Vec<T>),
+    /// Nothing arrived within the wait window; the queue is still live.
+    Idle,
+    /// The queue has disconnected and nothing is stashed.
+    Closed,
 }
 
 #[cfg(test)]
@@ -241,6 +293,43 @@ mod tests {
         let batch = sched.next_batch().unwrap();
         assert_eq!(batch.iter().map(|i| i.1).collect::<Vec<_>>(), vec![0, 1]);
         drop(sender.join().unwrap());
+    }
+
+    #[test]
+    fn poll_batch_reports_idle_and_closed() {
+        let (tx, sched) =
+            keyed(BatchPolicy { max_batch: 4, timeout: Duration::ZERO });
+        // empty but connected → Idle within the bounded wait
+        assert!(matches!(sched.poll_batch(Duration::from_millis(1)), BatchPoll::Idle));
+        tx.send(('a', 0)).unwrap();
+        tx.send(('a', 1)).unwrap();
+        match sched.poll_batch(Duration::from_millis(50)) {
+            BatchPoll::Batch(b) => assert_eq!(b, vec![('a', 0), ('a', 1)]),
+            _ => panic!("expected a batch"),
+        }
+        drop(tx);
+        assert!(matches!(sched.poll_batch(Duration::from_millis(1)), BatchPoll::Closed));
+    }
+
+    #[test]
+    fn poll_batch_stash_seeds_before_the_wait() {
+        let (tx, sched) =
+            keyed(BatchPolicy { max_batch: 8, timeout: Duration::ZERO });
+        for item in [('a', 0), ('b', 1)] {
+            tx.send(item).unwrap();
+        }
+        // first poll takes the 'a', stashes the incompatible 'b'
+        match sched.poll_batch(Duration::from_millis(50)) {
+            BatchPoll::Batch(b) => assert_eq!(b, vec![('a', 0)]),
+            _ => panic!("expected a batch"),
+        }
+        drop(tx);
+        // the stashed 'b' must come out even though the queue is closed
+        match sched.poll_batch(Duration::from_millis(1)) {
+            BatchPoll::Batch(b) => assert_eq!(b, vec![('b', 1)]),
+            _ => panic!("expected the stashed item"),
+        }
+        assert!(matches!(sched.poll_batch(Duration::from_millis(1)), BatchPoll::Closed));
     }
 
     #[test]

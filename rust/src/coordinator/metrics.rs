@@ -26,6 +26,10 @@ pub struct Metrics {
     // prepared-model cache misses (DESIGN.md §8): how many times a
     // compression method's `prepare_model` actually ran
     prepared_models: AtomicU64,
+    // trajectory-session planning (DESIGN.md §9): frames whose plan was
+    // reused warm from the previous frame vs. planned cold
+    plan_reuse: AtomicU64,
+    plan_fallbacks: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -45,6 +49,8 @@ impl Default for Metrics {
             coalesced_frames: AtomicU64::new(0),
             max_batch_size: AtomicU64::new(0),
             prepared_models: AtomicU64::new(0),
+            plan_reuse: AtomicU64::new(0),
+            plan_fallbacks: AtomicU64::new(0),
         }
     }
 }
@@ -97,6 +103,17 @@ impl Metrics {
         self.prepared_models.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one warm (reused) trajectory-session plan (DESIGN.md §9).
+    pub fn record_plan_reuse(&self) {
+        self.plan_reuse.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one cold trajectory-session plan (first frame, camera
+    /// jump, intrinsics change, or drift fallback).
+    pub fn record_plan_fallback(&self) {
+        self.plan_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Queue depth bookkeeping.
     pub fn enqueue(&self) {
         self.queue_depth.fetch_add(1, Ordering::Relaxed);
@@ -147,6 +164,8 @@ impl Metrics {
             coalesced_frames: self.coalesced_frames.load(Ordering::Relaxed),
             max_batch_size: self.max_batch_size.load(Ordering::Relaxed),
             prepared_models: self.prepared_models.load(Ordering::Relaxed),
+            plan_reuse: self.plan_reuse.load(Ordering::Relaxed),
+            plan_fallbacks: self.plan_fallbacks.load(Ordering::Relaxed),
             mean_batch_size: {
                 let b = self.batches.load(Ordering::Relaxed);
                 if b == 0 {
@@ -184,6 +203,10 @@ pub struct MetricsSnapshot {
     pub mean_batch_size: f64,
     /// `prepare_model` runs (prepared-model cache misses, DESIGN.md §8).
     pub prepared_models: u64,
+    /// Trajectory-session frames planned warm (reused plans, DESIGN.md §9).
+    pub plan_reuse: u64,
+    /// Trajectory-session frames planned cold (first frames + fallbacks).
+    pub plan_fallbacks: u64,
 }
 
 impl MetricsSnapshot {
@@ -259,6 +282,18 @@ mod tests {
         m.record_prepare();
         m.record_prepare();
         assert_eq!(m.snapshot().prepared_models, 2);
+    }
+
+    #[test]
+    fn plan_reuse_counters_track() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.plan_reuse, s.plan_fallbacks), (0, 0));
+        m.record_plan_reuse();
+        m.record_plan_reuse();
+        m.record_plan_fallback();
+        let s = m.snapshot();
+        assert_eq!((s.plan_reuse, s.plan_fallbacks), (2, 1));
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! store, a bounded request queue with backpressure, a cross-request
 //! batch coalescer ([`batch`] — DESIGN.md §6), a worker pool
 //! (std threads — tokio is unavailable in this offline image, see
-//! DESIGN.md §1), a tile-parallel frame scheduler, and latency/stage/
-//! batch-occupancy metrics. The E2E example
-//! (`examples/serve_trajectory.rs`) drives a camera orbit through this
-//! service against the PJRT artifact backend.
+//! DESIGN.md §1), a tile-parallel frame scheduler, sticky-routed
+//! trajectory sessions with warm plan reuse (DESIGN.md §9), admission
+//! validation of malformed requests, and latency/stage/batch-occupancy/
+//! plan-reuse metrics. The E2E examples
+//! (`examples/serve_trajectory.rs`, `examples/trajectory_session.rs`)
+//! drive camera orbits and coherent trajectories through this service.
 
 pub mod batch;
 pub mod metrics;
@@ -17,7 +19,7 @@ pub mod scheduler;
 pub mod service;
 
 pub use crate::accel::AccelKind;
-pub use batch::{BatchPolicy, BatchScheduler};
+pub use batch::{BatchPoll, BatchPolicy, BatchScheduler};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{BackendKind, RenderRequest, RenderResponse};
+pub use request::{BackendKind, RenderRequest, RenderResponse, SessionKey};
 pub use service::{Coordinator, CoordinatorConfig};

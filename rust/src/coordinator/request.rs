@@ -69,6 +69,18 @@ impl BackendKind {
     }
 }
 
+/// Identifies one frame of a streamed trajectory session (DESIGN.md
+/// §9): all frames sharing a `session` id route to the same sticky
+/// worker, whose warm [`crate::pipeline::trajectory::TrajectorySession`]
+/// plan cache makes coherent consecutive poses cheaper to plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SessionKey {
+    /// Caller-chosen session id; constant across one trajectory.
+    pub session: u64,
+    /// Monotone frame sequence number within the session.
+    pub seq: u64,
+}
+
 /// One render request.
 #[derive(Debug, Clone)]
 pub struct RenderRequest {
@@ -83,12 +95,37 @@ pub struct RenderRequest {
     /// never mixes methods, since they change the pair multiset and —
     /// for compression methods — the model itself.
     pub accel: AccelKind,
+    /// `Some` marks this request as one frame of a trajectory session
+    /// (DESIGN.md §9): the coordinator routes it to the session's
+    /// sticky worker instead of the shared coalescing queue.
+    pub session: Option<SessionKey>,
 }
 
 impl RenderRequest {
     /// Request with no acceleration method (the common case).
     pub fn new(id: u64, scene: impl Into<String>, camera: Camera) -> Self {
-        RenderRequest { id, scene: scene.into(), camera, accel: AccelKind::Vanilla }
+        RenderRequest {
+            id,
+            scene: scene.into(),
+            camera,
+            accel: AccelKind::Vanilla,
+            session: None,
+        }
+    }
+
+    /// Mark this request as frame `seq` of trajectory `session`.
+    pub fn with_session(mut self, session: u64, seq: u64) -> Self {
+        self.session = Some(SessionKey { session, seq });
+        self
+    }
+
+    /// Admission-time validation (DESIGN.md §9): malformed requests —
+    /// zero resolution, non-finite pose or intrinsics — are rejected
+    /// with an error *response* before they reach a worker, where they
+    /// would poison the tile grid, the depth keys, or (since a NaN pose
+    /// defeats duplicate-pose detection) a whole coalesced batch.
+    pub fn validate(&self) -> Result<(), String> {
+        self.camera.validate()
     }
 
     /// The batch-coalescing key (DESIGN.md §6, §8): requests merge only
@@ -155,6 +192,32 @@ mod tests {
         assert!(BackendKind::NativeVanilla.instantiate(256).is_ok());
         let b = BackendKind::NativeGemm.instantiate(128).unwrap();
         assert_eq!(b.name(), "gemm-gs");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_and_session_tags() {
+        let camera = crate::math::Camera::look_at(
+            crate::math::Vec3::new(0.0, 1.0, -8.0),
+            crate::math::Vec3::ZERO,
+            crate::math::Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            160,
+            96,
+        );
+        let req = RenderRequest::new(0, "train", camera);
+        assert!(req.validate().is_ok());
+        assert_eq!(req.session, None);
+
+        let tagged = RenderRequest::new(1, "train", camera).with_session(9, 4);
+        assert_eq!(tagged.session, Some(SessionKey { session: 9, seq: 4 }));
+
+        let mut zero = RenderRequest::new(2, "train", camera);
+        zero.camera.height = 0;
+        assert!(zero.validate().unwrap_err().contains("resolution"));
+
+        let mut nan = RenderRequest::new(3, "train", camera);
+        nan.camera.view.m[0] = f32::NAN;
+        assert!(nan.validate().is_err());
     }
 
     #[test]

@@ -22,20 +22,36 @@
 //! so the k-means/VQ cost is paid on the first request and every later
 //! request — from any worker — reuses it.
 
-use super::batch::{BatchPolicy, BatchScheduler};
+use super::batch::{BatchPolicy, BatchPoll, BatchScheduler};
 use super::metrics::Metrics;
 use super::request::{BackendKind, RenderRequest, RenderResponse};
 use crate::accel::AccelKind;
 use crate::math::Camera;
 use crate::pipeline::batch::render_frames;
 use crate::pipeline::render::{FrameStats, Image, RenderConfig, StageTimings, TileBlend};
-use crate::runtime::tiled_render::{render_frames_tiled, TILED_ENTRY};
+use crate::pipeline::trajectory::{TrajectoryConfig, TrajectorySession};
+use crate::runtime::tiled_render::{
+    render_frames_tiled, render_frames_tiled_with_plans, TILED_ENTRY,
+};
 use crate::runtime::RuntimeClient;
 use crate::scene::gaussian::GaussianCloud;
-use std::collections::HashMap;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+/// How long a worker blocked on one queue waits before checking the
+/// other (the shared coalescing queue vs. its sticky session queue).
+/// A session frame whose worker idles on the shared queue waits up to
+/// one poll tick — and, because the coalescing seed wait happens under
+/// the scheduler's shared lock (as the pre-existing `next_batch` did),
+/// up to `workers × SESSION_POLL` when every worker idles at once.
+const SESSION_POLL: Duration = Duration::from_millis(5);
+
+/// Most session frames a worker drains before giving the shared queue
+/// a turn — a saturating session stream must not starve sessionless
+/// traffic (the reverse direction is covered by the bounded poll).
+const STICKY_BURST: usize = 8;
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -56,6 +72,11 @@ pub struct CoordinatorConfig {
     /// How long a partial batch waits for more compatible requests
     /// before flushing (`serve --batch-timeout-ms`).
     pub batch_timeout: Duration,
+    /// Warm-plan reuse thresholds for trajectory sessions (DESIGN.md §9).
+    pub trajectory: TrajectoryConfig,
+    /// Most trajectory sessions one worker keeps warm simultaneously;
+    /// the oldest session's plan cache is evicted beyond this.
+    pub max_sessions_per_worker: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -67,6 +88,8 @@ impl Default for CoordinatorConfig {
             render: RenderConfig::default(),
             max_batch: 1,
             batch_timeout: Duration::from_millis(2),
+            trajectory: TrajectoryConfig::default(),
+            max_sessions_per_worker: 16,
         }
     }
 }
@@ -236,9 +259,189 @@ fn respond(metrics: &Metrics, job: &Job, out: ExecutedFrame) {
     });
 }
 
+/// One worker-held trajectory session: the warm plan cache plus the
+/// identity it was built for. A scene or accel-method change mid-stream
+/// rebuilds the session (the warm cache is per model + veto).
+struct WorkerSession {
+    scene: String,
+    accel: AccelKind,
+    /// Sequence number of the last frame rendered — an out-of-order or
+    /// replayed `seq` resets the warm state, since the cached "previous
+    /// frame" is no longer this frame's predecessor.
+    last_seq: u64,
+    session: TrajectorySession,
+}
+
+/// FIFO-evicting cache of the trajectory sessions one worker keeps
+/// warm. Insertion order doubles as eviction order: trajectory traffic
+/// is long-lived streams, not a reuse-skewed mix, so FIFO ≈ LRU here
+/// and stays O(1) without timestamp bookkeeping.
+struct SessionCache {
+    cap: usize,
+    order: VecDeque<u64>,
+    map: HashMap<u64, WorkerSession>,
+}
+
+impl SessionCache {
+    fn new(cap: usize) -> Self {
+        SessionCache { cap: cap.max(1), order: VecDeque::new(), map: HashMap::new() }
+    }
+
+    fn insert(&mut self, id: u64, ws: WorkerSession) {
+        if !self.map.contains_key(&id) {
+            while self.map.len() >= self.cap {
+                match self.order.pop_front() {
+                    Some(old) => {
+                        self.map.remove(&old);
+                    }
+                    None => break,
+                }
+            }
+            self.order.push_back(id);
+        }
+        self.map.insert(id, ws);
+    }
+}
+
+/// Execute one trajectory-session frame on its sticky worker: look up
+/// (or build) the session's warm plan cache, plan the frame — warm when
+/// the pose is coherent with the previous one — and blend it through
+/// the worker's executor. Warm plans are byte-identical to cold ones
+/// (`pipeline::trajectory`), so this path changes latency, never pixels.
+fn handle_session_job(
+    executor: &mut Executor,
+    sessions: &mut SessionCache,
+    store: &SceneStore,
+    metrics: &Metrics,
+    base_cfg: &RenderConfig,
+    tcfg: TrajectoryConfig,
+    job: Job,
+) {
+    metrics.dequeue();
+    let key = job.request.session.expect("session job routed without a session key");
+    let accel = job.request.accel;
+    let scene = &job.request.scene;
+    let fail = |msg: String| {
+        metrics.record_error();
+        let _ = job.respond.send(RenderResponse::failure(
+            job.request.id,
+            job.enqueued.elapsed(),
+            msg,
+        ));
+    };
+    let Some(cloud) = store.cloud_for(scene, accel) else {
+        fail(format!("unknown scene '{scene}'"));
+        return;
+    };
+    let needs_rebuild = match sessions.map.get(&key.session) {
+        Some(ws) => ws.scene != *scene || ws.accel != accel,
+        None => true,
+    };
+    if needs_rebuild {
+        let cfg = base_cfg.clone().with_accel(accel.instantiate());
+        sessions.insert(
+            key.session,
+            WorkerSession {
+                scene: scene.clone(),
+                accel,
+                last_seq: key.seq,
+                session: TrajectorySession::new(cloud, cfg, tcfg),
+            },
+        );
+    }
+    let ws = sessions.map.get_mut(&key.session).expect("session just inserted");
+    if !needs_rebuild {
+        // frames of a session must arrive in sequence order for the
+        // warm cache to describe this frame's predecessor; a replayed
+        // or reordered seq plans cold instead of reusing stale state
+        if key.seq <= ws.last_seq {
+            ws.session.reset();
+        }
+        ws.last_seq = key.seq;
+    }
+
+    let camera = job.request.camera;
+    let rendered = match executor {
+        Executor::Blender(blender) => Ok(ws.session.render_next(&camera, blender.as_mut())),
+        Executor::Tiled(client) => {
+            let (plan, source) = ws.session.plan_next(&camera);
+            render_frames_tiled_with_plans(
+                client,
+                std::slice::from_ref(&plan),
+                ws.session.render_config(),
+            )
+            .map(|mut outs| (outs.pop().expect("one plan in, one frame out"), source))
+        }
+    };
+    match rendered {
+        Ok((out, source)) => {
+            if source.is_warm() {
+                metrics.record_plan_reuse();
+            } else {
+                metrics.record_plan_fallback();
+            }
+            respond(
+                metrics,
+                &job,
+                ExecutedFrame {
+                    image: Arc::new(out.image),
+                    timings: out.timings,
+                    stats: out.stats,
+                },
+            );
+        }
+        Err(e) => fail(format!("render failed: {e:#}")),
+    }
+}
+
+/// Execute one coalesced batch pulled from the shared queue (extracted
+/// from the worker loop so the loop can interleave the sticky session
+/// queue — the logic is unchanged from the pre-trajectory service).
+fn handle_shared_batch(
+    executor: &mut Executor,
+    store: &SceneStore,
+    metrics: &Metrics,
+    render_cfg: &RenderConfig,
+    batch: Vec<Job>,
+) {
+    for _ in 0..batch.len() {
+        metrics.dequeue();
+    }
+    let fail_all = |msg: String| {
+        for job in &batch {
+            metrics.record_error();
+            let _ = job.respond.send(RenderResponse::failure(
+                job.request.id,
+                job.enqueued.elapsed(),
+                msg.clone(),
+            ));
+        }
+    };
+    let accel = batch[0].request.accel;
+    let Some(cloud) = store.cloud_for(&batch[0].request.scene, accel) else {
+        fail_all(format!("unknown scene '{}'", batch[0].request.scene));
+        return;
+    };
+    metrics.record_batch(batch.len());
+    let cameras: Vec<Camera> = batch.iter().map(|j| j.request.camera).collect();
+    let cfg = render_cfg.clone().with_accel(accel.instantiate());
+    match execute_batch(executor, &cloud, &cameras, &cfg) {
+        Ok(outs) => {
+            for (job, out) in batch.iter().zip(outs) {
+                respond(metrics, job, out);
+            }
+        }
+        Err(e) => fail_all(format!("render failed: {e:#}")),
+    }
+}
+
 /// The running service.
 pub struct Coordinator {
     tx: Option<SyncSender<Job>>,
+    /// Per-worker sticky session queues (DESIGN.md §9): frames of one
+    /// trajectory session always land on `session_id % workers`, so the
+    /// warm plan cache they need lives on exactly that worker.
+    sticky_txs: Vec<SyncSender<Job>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     store: Arc<SceneStore>,
@@ -257,13 +460,23 @@ impl Coordinator {
             BatchPolicy { max_batch: cfg.max_batch.max(1), timeout: cfg.batch_timeout };
         let key_of: fn(&Job) -> (String, (u32, u32), AccelKind) = job_key;
         let scheduler: Arc<JobScheduler> = Arc::new(BatchScheduler::new(rx, policy, key_of));
-        let mut workers = Vec::with_capacity(cfg.workers);
-        for _ in 0..cfg.workers.max(1) {
+        let worker_count = cfg.workers.max(1);
+        let mut sticky_txs = Vec::with_capacity(worker_count);
+        let mut sticky_rxs = Vec::with_capacity(worker_count);
+        for _ in 0..worker_count {
+            let (stx, srx) = sync_channel::<Job>(cfg.queue_capacity.max(1));
+            sticky_txs.push(stx);
+            sticky_rxs.push(srx);
+        }
+        let mut workers = Vec::with_capacity(worker_count);
+        for sticky_rx in sticky_rxs {
             let scheduler = Arc::clone(&scheduler);
             let store = Arc::clone(&store);
             let metrics = Arc::clone(&metrics);
             let render_cfg = cfg.render.clone();
             let backend = cfg.backend;
+            let tcfg = cfg.trajectory;
+            let max_sessions = cfg.max_sessions_per_worker;
             workers.push(std::thread::spawn(move || {
                 // executor created in-thread (PJRT handles are not Send);
                 // ArtifactGemm upgrades to the pooled tiled path when the
@@ -285,58 +498,111 @@ impl Coordinator {
                         }
                     },
                 };
-                // execute stage: each drained batch shares one scene,
-                // one resolution, and one accel method (the coalescing
-                // key guarantees it)
-                while let Some(batch) = scheduler.next_batch() {
-                    for _ in 0..batch.len() {
-                        metrics.dequeue();
-                    }
-                    let fail_all = |msg: String| {
-                        for job in &batch {
-                            metrics.record_error();
-                            let _ = job.respond.send(RenderResponse::failure(
-                                job.request.id,
-                                job.enqueued.elapsed(),
-                                msg.clone(),
-                            ));
-                        }
-                    };
-                    let accel = batch[0].request.accel;
-                    let Some(cloud) = store.cloud_for(&batch[0].request.scene, accel)
-                    else {
-                        fail_all(format!("unknown scene '{}'", batch[0].request.scene));
-                        continue;
-                    };
-                    metrics.record_batch(batch.len());
-                    let cameras: Vec<Camera> =
-                        batch.iter().map(|j| j.request.camera).collect();
-                    let cfg = render_cfg.clone().with_accel(accel.instantiate());
-                    match execute_batch(&mut executor, &cloud, &cameras, &cfg) {
-                        Ok(outs) => {
-                            for (job, out) in batch.iter().zip(outs) {
-                                respond(&metrics, job, out);
+                let mut sessions = SessionCache::new(max_sessions);
+                let mut sticky_open = true;
+                loop {
+                    // session frames first: they are ordered and their
+                    // warm cache lives only here — but at most a burst,
+                    // so a saturating stream cannot starve the shared
+                    // queue
+                    let mut drained = 0usize;
+                    while sticky_open && drained < STICKY_BURST {
+                        match sticky_rx.try_recv() {
+                            Ok(job) => {
+                                handle_session_job(
+                                    &mut executor,
+                                    &mut sessions,
+                                    &store,
+                                    &metrics,
+                                    &render_cfg,
+                                    tcfg,
+                                    job,
+                                );
+                                drained += 1;
+                            }
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => {
+                                sticky_open = false;
+                                break;
                             }
                         }
-                        Err(e) => fail_all(format!("render failed: {e:#}")),
+                    }
+                    // execute stage: each drained batch shares one
+                    // scene, one resolution, and one accel method (the
+                    // coalescing key guarantees it). The bounded wait
+                    // keeps the session queue from starving; when
+                    // session work is flowing, take only what is
+                    // already queued so the next session frame is not
+                    // held behind a full poll tick
+                    let wait = if drained > 0 { Duration::ZERO } else { SESSION_POLL };
+                    match scheduler.poll_batch(wait) {
+                        BatchPoll::Batch(batch) => handle_shared_batch(
+                            &mut executor,
+                            &store,
+                            &metrics,
+                            &render_cfg,
+                            batch,
+                        ),
+                        BatchPoll::Idle => {}
+                        BatchPoll::Closed => {
+                            if !sticky_open {
+                                break;
+                            }
+                            // only the session queue remains live
+                            match sticky_rx.recv_timeout(SESSION_POLL) {
+                                Ok(job) => handle_session_job(
+                                    &mut executor,
+                                    &mut sessions,
+                                    &store,
+                                    &metrics,
+                                    &render_cfg,
+                                    tcfg,
+                                    job,
+                                ),
+                                Err(RecvTimeoutError::Timeout) => {}
+                                Err(RecvTimeoutError::Disconnected) => break,
+                            }
+                        }
                     }
                 }
             }));
         }
-        Coordinator { tx: Some(tx), workers, metrics, store }
+        Coordinator { tx: Some(tx), sticky_txs, workers, metrics, store }
     }
 
     /// Submit a request; returns the response channel. Blocks when the
-    /// queue is full (backpressure). If the service has no live workers
-    /// (e.g. every worker failed backend init), the returned channel
-    /// carries an error [`RenderResponse`] instead of panicking.
+    /// queue is full (backpressure). Malformed requests (zero
+    /// resolution, non-finite pose/intrinsics) are rejected at
+    /// admission with an error response — they never reach a worker.
+    /// If the service has no live workers (e.g. every worker failed
+    /// backend init), the returned channel carries an error
+    /// [`RenderResponse`] instead of panicking.
     pub fn submit(&self, request: RenderRequest) -> Receiver<RenderResponse> {
         let (respond, rx) = sync_channel(1);
+        if let Err(msg) = request.validate() {
+            self.metrics.record_error();
+            let _ = respond.send(RenderResponse::failure(
+                request.id,
+                Duration::ZERO,
+                format!("rejected at admission: {msg}"),
+            ));
+            return rx;
+        }
         self.metrics.enqueue();
         let job = Job { request, enqueued: Instant::now(), respond };
-        let undeliverable = match self.tx.as_ref() {
-            Some(tx) => tx.send(job).err().map(|e| e.0),
-            None => Some(job),
+        // session frames route to their sticky worker's own queue
+        // (DESIGN.md §9); everything else goes through the shared
+        // coalescing queue
+        let undeliverable = match job.request.session {
+            Some(key) if !self.sticky_txs.is_empty() => {
+                let w = (key.session % self.sticky_txs.len() as u64) as usize;
+                self.sticky_txs[w].send(job).err().map(|e| e.0)
+            }
+            Some(_) => Some(job),
+            None => match self.tx.as_ref() {
+                Some(tx) => tx.send(job).err().map(|e| e.0),
+                None => Some(job),
+            },
         };
         if let Some(job) = undeliverable {
             // all workers exited, so the queue receiver is gone; fail
@@ -387,9 +653,10 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Drain the queue and join all workers.
+    /// Drain the queues and join all workers.
     pub fn shutdown(mut self) {
-        self.tx.take(); // close the channel
+        self.tx.take(); // close the shared channel
+        self.sticky_txs.clear(); // close every session queue
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -399,6 +666,7 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.tx.take();
+        self.sticky_txs.clear();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -431,6 +699,7 @@ mod tests {
             render: RenderConfig::default(),
             max_batch,
             batch_timeout,
+            ..CoordinatorConfig::default()
         };
         let camera = Camera::look_at(
             Vec3::new(0.0, 1.0, -8.0),
@@ -648,5 +917,112 @@ mod tests {
     fn scene_names_listed() {
         let (coord, _camera) = test_setup(1);
         assert_eq!(coord.scene_names(), vec!["train".to_string()]);
+    }
+
+    #[test]
+    fn malformed_requests_rejected_at_admission() {
+        let (coord, camera) = test_setup(1);
+
+        let mut zero = RenderRequest::new(1, "train", camera);
+        zero.camera.width = 0;
+        let resp = coord.render_sync(zero);
+        assert!(resp.image.is_none());
+        let msg = resp.error.expect("zero resolution must error");
+        assert!(msg.contains("admission") && msg.contains("resolution"), "{msg}");
+
+        let mut nan = RenderRequest::new(2, "train", camera);
+        nan.camera.view.m[6] = f32::NAN;
+        let resp = coord.render_sync(nan);
+        assert!(resp.error.is_some() && resp.image.is_none());
+
+        // the service is still healthy for valid requests afterwards
+        let ok = coord.render_sync(RenderRequest::new(3, "train", camera));
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        let m = coord.metrics();
+        assert_eq!(m.errors, 2);
+        assert_eq!(m.frames, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn session_frames_reuse_plans_on_the_sticky_worker() {
+        let (coord, camera) = test_setup(3);
+        // a coherent arc around the pose: sub-pixel motion per frame
+        let frames = 6u64;
+        let rxs: Vec<_> = (0..frames)
+            .map(|i| {
+                let theta = 0.4 + i as f32 * 3e-4;
+                let cam = Camera::look_at(
+                    Vec3::new(8.0 * theta.cos(), 1.0, 8.0 * theta.sin()),
+                    Vec3::ZERO,
+                    Vec3::new(0.0, 1.0, 0.0),
+                    std::f32::consts::FRAC_PI_3,
+                    camera.width,
+                    camera.height,
+                );
+                coord.submit(RenderRequest::new(i, "train", cam).with_session(11, i))
+            })
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().expect("session frame response");
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.image.is_some());
+        }
+        let m = coord.metrics();
+        assert_eq!(m.frames, frames);
+        assert_eq!(m.plan_reuse + m.plan_fallbacks, frames);
+        assert!(m.plan_reuse >= 1, "sticky worker reused no plans: {m:?}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn replayed_sequence_number_resets_warm_state() {
+        let (coord, camera) = test_setup(2);
+        // same pose throughout: seq 0 cold (first frame), seq 1 warm,
+        // replayed seq 0 must plan cold (the cached previous frame is
+        // no longer its predecessor), seq 1 warms again
+        for seq in [0u64, 1, 0, 1] {
+            let resp = coord
+                .render_sync(RenderRequest::new(seq, "train", camera).with_session(4, seq));
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+        }
+        let m = coord.metrics();
+        assert_eq!(m.frames, 4);
+        assert_eq!(m.plan_reuse, 2, "{m:?}");
+        assert_eq!(m.plan_fallbacks, 2, "{m:?}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn session_scene_switch_resets_and_still_renders() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.001));
+        let other = Arc::new(scene_by_name("playroom").unwrap().synthesize(0.001));
+        let mut scenes = HashMap::new();
+        scenes.insert("train".to_string(), cloud);
+        scenes.insert("playroom".to_string(), other);
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() },
+            scenes,
+        );
+        let camera = Camera::look_at(
+            Vec3::new(0.0, 1.0, -8.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            160,
+            96,
+        );
+        for (i, scene) in ["train", "train", "playroom", "train"].iter().enumerate() {
+            let req = RenderRequest::new(i as u64, *scene, camera).with_session(3, i as u64);
+            let resp = coord.render_sync(req);
+            assert!(resp.error.is_none(), "{scene}: {:?}", resp.error);
+        }
+        let m = coord.metrics();
+        assert_eq!(m.frames, 4);
+        // identical poses on an unchanged scene reuse; each scene switch
+        // rebuilds the session (frame 0 cold, frame 1 warm, 2 and 3 cold)
+        assert_eq!(m.plan_reuse, 1, "{m:?}");
+        assert_eq!(m.plan_fallbacks, 3, "{m:?}");
+        coord.shutdown();
     }
 }

@@ -4,6 +4,9 @@
 //!
 //! ```text
 //! gemm-gs render --scene train [--backend gemm|vanilla|pjrt] [--accel flashgs] [--out img.ppm]
+//! gemm-gs render-trajectory --scene train --frames 64 [--step 0.001] [--via direct|coordinator]
+//!                [--width W --height H] [--max-translation 1.0] [--max-rotation 0.2]
+//!                [--max-drift 0.05]     # temporal-coherence session (DESIGN.md §9)
 //! gemm-gs serve  --frames 64 [--workers 4] [--backend gemm] [--accel c3dgs]
 //!                [--max-batch 8] [--batch-timeout-ms 2]
 //! gemm-gs fig1                      # Figure 1  (TC vs CUDA FLOPS)
@@ -12,6 +15,7 @@
 //! gemm-gs bench-fig5                # Figure 5  (H100 grid)
 //! gemm-gs bench-fig6                # Figure 6  (resolution sweep)
 //! gemm-gs bench-fig7                # Figure 7  (batch sweep + coordinator coalescing)
+//! gemm-gs bench-trajectory          # cold-vs-warm plan sweep across accel methods (§9)
 //! gemm-gs inspect [--scale 0.02]    # Table 1   (workload statistics)
 //! ```
 //!
@@ -75,6 +79,7 @@ fn main() {
 
     match cmd {
         "render" => cmd_render(&args),
+        "render-trajectory" => cmd_render_trajectory(&args),
         "serve" => cmd_serve(&args),
         "fig1" => cmd_fig1(),
         "bench-fig3" => {
@@ -123,13 +128,23 @@ fn main() {
             );
             print!("\n{}", fig7::render_coalesced(&cps, &scene, frames));
         }
+        "bench-trajectory" => {
+            let scene = args.get("scene", "train");
+            let frames = args.get_usize("frames", 24);
+            let step = args.get_f64("step", 0.0005) as f32;
+            let sweep_scale = args.get_f64("scale", 0.004);
+            let pts = bench_harness::trajectory::run(&scene, sweep_scale, frames, step);
+            print!("{}", bench_harness::trajectory::render(&pts, &scene, frames, step));
+        }
         "inspect" => cmd_inspect(scale),
         _ => {
             println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
-            println!("subcommands: render serve fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 inspect");
+            println!("subcommands: render render-trajectory serve fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory inspect");
             println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
             println!("              --accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>");
             println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
+            println!("trajectory:   --frames N --step RAD --via <direct|coordinator> --width W --height H");
+            println!("              --max-translation T --max-rotation R --max-drift D");
         }
     }
 }
@@ -193,6 +208,129 @@ fn cmd_render(args: &Args) {
     }
 }
 
+/// `render-trajectory` — stream a coherent camera arc through a
+/// temporal-coherence [`TrajectorySession`] (DESIGN.md §9), either
+/// directly (`--via direct`, default) or through the coordinator's
+/// sticky session API (`--via coordinator`), and report plan-reuse.
+fn cmd_render_trajectory(args: &Args) {
+    use gemm_gs::pipeline::trajectory::{TrajectoryConfig, TrajectorySession};
+
+    let scene = args.get("scene", "train");
+    let spec = scene_by_name(&scene).unwrap_or_else(|| {
+        eprintln!("unknown scene '{scene}'");
+        std::process::exit(1)
+    });
+    let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
+    let frames = args.get_usize("frames", 64);
+    let step = args.get_f64("step", 0.001) as f32;
+    let width = args.get_usize("width", (spec.width / 2) as usize) as u32;
+    let height = args.get_usize("height", (spec.height / 2) as usize) as u32;
+    let backend = BackendKind::parse(&args.get("backend", "gemm")).unwrap_or_else(|| {
+        eprintln!("unknown backend");
+        std::process::exit(1)
+    });
+    let accel = parse_accel(args);
+    let tcfg = TrajectoryConfig {
+        max_translation: args.get_f64("max-translation", 1.0) as f32,
+        max_rotation: args.get_f64("max-rotation", 0.2) as f32,
+        max_pair_drift: args.get_f64("max-drift", 0.05),
+    };
+    let poses: Vec<Camera> = (0..frames)
+        .map(|i| bench_harness::trajectory::orbit_pose(0.4 + i as f32 * step, width, height))
+        .collect();
+    // admission validation, exactly as the coordinator applies it: a
+    // zero resolution or non-finite pose is an error, never a panic
+    if let Some(cam) = poses.first() {
+        if let Err(msg) = cam.validate() {
+            eprintln!("invalid trajectory camera: {msg}");
+            std::process::exit(1);
+        }
+    }
+
+    match args.get("via", "direct").as_str() {
+        "direct" => {
+            let method = accel.instantiate();
+            let base = spec.synthesize(scale);
+            let cloud = Arc::new(if method.transforms_model() {
+                method.prepare_model(&base)
+            } else {
+                base
+            });
+            let cfg = RenderConfig::default().with_accel(accel.instantiate());
+            let mut session = TrajectorySession::new(cloud, cfg.clone(), tcfg);
+            let mut blender = backend.instantiate(cfg.batch).expect("backend init");
+            let t0 = std::time::Instant::now();
+            let mut totals = gemm_gs::pipeline::StageTimings::default();
+            for camera in &poses {
+                let (out, _source) = session.render_next(camera, blender.as_mut());
+                totals.accumulate(&out.timings);
+            }
+            let elapsed = t0.elapsed();
+            let s = session.stats();
+            println!(
+                "{frames} trajectory frames of '{scene}' ({width}x{height}, {} + {}) in {elapsed:.2?} — {:.1} fps",
+                blender.name(),
+                accel.cli_name(),
+                frames as f64 / elapsed.as_secs_f64()
+            );
+            println!(
+                "plan reuse: {} warm / {} cold ({} patched, {} tiles re-sorted, {} jumps, {} drift fallbacks)",
+                s.warm_plans, s.cold_plans, s.patched_plans, s.resorted_tiles, s.jumps,
+                s.drift_fallbacks
+            );
+            println!(
+                "stage totals: pre {:.2?} dup {:.2?} sort {:.2?} blend {:.2?}",
+                totals.preprocess, totals.duplicate, totals.sort, totals.blend
+            );
+        }
+        "coordinator" => {
+            let mut scenes = HashMap::new();
+            scenes.insert(spec.name.to_string(), Arc::new(spec.synthesize(scale)));
+            let coord = Coordinator::start(
+                CoordinatorConfig {
+                    workers: args.get_usize("workers", 2),
+                    backend,
+                    trajectory: tcfg,
+                    ..CoordinatorConfig::default()
+                },
+                scenes,
+            );
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = poses
+                .iter()
+                .enumerate()
+                .map(|(i, camera)| {
+                    let mut request = RenderRequest::new(i as u64, spec.name, *camera)
+                        .with_session(1, i as u64);
+                    request.accel = accel;
+                    coord.submit(request)
+                })
+                .collect();
+            for rx in rxs {
+                let r = rx.recv().expect("response");
+                assert!(r.error.is_none(), "{:?}", r.error);
+            }
+            let elapsed = t0.elapsed();
+            let m = coord.metrics();
+            println!(
+                "{frames} session frames of '{scene}' ({}) in {elapsed:.2?} — {:.1} fps, mean latency {:.2?}",
+                accel.cli_name(),
+                frames as f64 / elapsed.as_secs_f64(),
+                m.mean_latency
+            );
+            println!(
+                "plan reuse: {} warm / {} cold through the sticky worker",
+                m.plan_reuse, m.plan_fallbacks
+            );
+            coord.shutdown();
+        }
+        other => {
+            eprintln!("unknown --via '{other}' (expected direct|coordinator)");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) {
     let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
     let frames = args.get_usize("frames", 32);
@@ -212,6 +350,7 @@ fn cmd_serve(args: &Args) {
             render: RenderConfig::default(),
             max_batch,
             batch_timeout,
+            ..CoordinatorConfig::default()
         },
         scenes,
     );

@@ -120,18 +120,106 @@ impl Camera {
         self.resolution_key() == other.resolution_key()
     }
 
-    /// Exact pose + intrinsics equality (element-wise on the matrices).
+    /// Canonical bit pattern of pose + intrinsics + resolution — the
+    /// duplicate-pose detection key of the batched paths. `-0.0` folds
+    /// to `0.0` (the two render identically, so a sign-of-zero
+    /// difference must still coalesce); every other value compares
+    /// bitwise, which makes the key total and hashable where raw `f32`
+    /// comparison is not. Non-finite poses never reach this key: they
+    /// are rejected at admission ([`Camera::validate`]).
+    pub fn pose_key(&self) -> [u32; 38] {
+        let mut key = [0u32; 38];
+        for (slot, v) in key
+            .iter_mut()
+            .zip(self.view.m.iter().chain(self.proj.m.iter()))
+        {
+            *slot = canonical_bits(*v);
+        }
+        key[32] = canonical_bits(self.tan_fovx);
+        key[33] = canonical_bits(self.tan_fovy);
+        key[34] = canonical_bits(self.znear);
+        key[35] = canonical_bits(self.zfar);
+        key[36] = self.width;
+        key[37] = self.height;
+        key
+    }
+
+    /// Exact pose + intrinsics equality, via the canonical
+    /// [`pose_key`](Self::pose_key) (so `-0.0` and `0.0` entries match).
     /// Two requests with the same view render pixel-identical frames, so
     /// the batched path runs preprocess/duplicate/sort once and reuses
     /// the blended image (`pipeline::batch::render_frames`).
     pub fn same_view(&self, other: &Camera) -> bool {
+        self.pose_key() == other.pose_key()
+    }
+
+    /// Intrinsics-only equality (resolution, fov, depth range): the
+    /// precondition for a trajectory session's warm-plan reuse — a
+    /// resolution or fov change always replans from scratch.
+    pub fn same_intrinsics(&self, other: &Camera) -> bool {
         self.same_resolution(other)
-            && self.view.m == other.view.m
-            && self.proj.m == other.proj.m
-            && self.tan_fovx == other.tan_fovx
-            && self.tan_fovy == other.tan_fovy
-            && self.znear == other.znear
-            && self.zfar == other.zfar
+            && canonical_bits(self.tan_fovx) == canonical_bits(other.tan_fovx)
+            && canonical_bits(self.tan_fovy) == canonical_bits(other.tan_fovy)
+            && canonical_bits(self.znear) == canonical_bits(other.znear)
+            && canonical_bits(self.zfar) == canonical_bits(other.zfar)
+    }
+
+    /// Pose delta to another camera: `(translation, rotation)` — world
+    /// units between the camera centres and the relative rotation angle
+    /// in radians. `pipeline::trajectory` gates warm-plan reuse on both
+    /// staying under its thresholds (DESIGN.md §9).
+    pub fn pose_delta(&self, other: &Camera) -> (f32, f32) {
+        let translation = (self.position() - other.position()).length();
+        let ra = self.view.upper3();
+        let rb = other.view.upper3();
+        // relative rotation Ra·Rbᵀ; angle from the trace identity
+        let rel = ra.mul(&rb.transpose());
+        let trace = rel.at(0, 0) + rel.at(1, 1) + rel.at(2, 2);
+        let rotation = ((trace - 1.0) * 0.5).clamp(-1.0, 1.0).acos();
+        (translation, rotation)
+    }
+
+    /// Admission-time validation (DESIGN.md §9): a camera that passes
+    /// can be planned without panicking — non-zero resolution, finite
+    /// matrices and intrinsics, positive fov, ordered depth range. The
+    /// coordinator and the CLI reject failures with an error *response*
+    /// before the request reaches a worker; `TileGrid` and `depth_bits`
+    /// assume this has run.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.width == 0 || self.height == 0 {
+            return Err(format!(
+                "invalid resolution {}x{}: both dimensions must be non-zero",
+                self.width, self.height
+            ));
+        }
+        for (name, m) in [("view", &self.view.m), ("proj", &self.proj.m)] {
+            if let Some(v) = m.iter().find(|v| !v.is_finite()) {
+                return Err(format!("non-finite value {v} in camera {name} matrix"));
+            }
+        }
+        for (name, v) in [
+            ("tan_fovx", self.tan_fovx),
+            ("tan_fovy", self.tan_fovy),
+            ("znear", self.znear),
+            ("zfar", self.zfar),
+        ] {
+            if !v.is_finite() {
+                return Err(format!("non-finite camera intrinsic {name} = {v}"));
+            }
+        }
+        if self.tan_fovx <= 0.0 || self.tan_fovy <= 0.0 {
+            return Err(format!(
+                "camera field of view must be positive (tan_fovx {}, tan_fovy {})",
+                self.tan_fovx, self.tan_fovy
+            ));
+        }
+        if self.znear <= 0.0 || self.zfar <= self.znear {
+            return Err(format!(
+                "invalid depth range: znear {} must satisfy 0 < znear < zfar {}",
+                self.znear, self.zfar
+            ));
+        }
+        Ok(())
     }
 
     /// Camera position in world space (inverse of the rigid view transform).
@@ -140,6 +228,20 @@ impl Camera {
         let r = self.view.upper3();
         let t = Vec3::new(self.view.at(0, 3), self.view.at(1, 3), self.view.at(2, 3));
         -(r.transpose().mul_vec(t))
+    }
+}
+
+/// Canonical bit pattern of one `f32` for pose keys: folds `-0.0` into
+/// `0.0` so sign-of-zero differences (common after trigonometric pose
+/// construction) never split a coalescing key or defeat duplicate-pose
+/// detection. All other values — including the non-finite ones rejected
+/// at admission — keep their raw bits.
+#[inline(always)]
+fn canonical_bits(v: f32) -> u32 {
+    if v == 0.0 {
+        0
+    } else {
+        v.to_bits()
     }
 }
 
@@ -259,6 +361,63 @@ mod tests {
             240,
         );
         assert!(!a.same_resolution(&small) && !a.same_view(&small));
+    }
+
+    #[test]
+    fn negative_zero_pose_entries_still_match() {
+        let a = test_cam();
+        let mut b = a;
+        // the view matrix's homogeneous row is [0, 0, 0, 1]; flip one of
+        // its zeros to -0.0 — the pose is unchanged, so the key must be
+        b.view.m[3] = -0.0;
+        assert!(b.view.m[3].is_sign_negative() && b.view.m[3] == 0.0);
+        assert!(a.same_view(&b));
+        assert_eq!(a.pose_key(), b.pose_key());
+    }
+
+    #[test]
+    fn pose_delta_zero_for_identical_and_grows_with_motion() {
+        let a = test_cam();
+        let (dt, dr) = a.pose_delta(&a);
+        assert!(dt < 1e-5 && dr < 1e-3, "dt={dt} dr={dr}");
+        let moved = Camera::look_at(
+            Vec3::new(0.0, 2.0, -5.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            640,
+            480,
+        );
+        let (dt, dr) = a.pose_delta(&moved);
+        assert!((dt - 2.0).abs() < 1e-3, "translation {dt}");
+        assert!(dr > 0.1, "rotation {dr}");
+        assert!(a.same_intrinsics(&moved));
+    }
+
+    #[test]
+    fn validate_accepts_good_and_rejects_malformed() {
+        let cam = test_cam();
+        assert!(cam.validate().is_ok());
+
+        let mut zero = cam;
+        zero.width = 0;
+        assert!(zero.validate().unwrap_err().contains("resolution"));
+
+        let mut nan_pose = cam;
+        nan_pose.view.m[5] = f32::NAN;
+        assert!(nan_pose.validate().unwrap_err().contains("view"));
+
+        let mut inf_proj = cam;
+        inf_proj.proj.m[0] = f32::INFINITY;
+        assert!(inf_proj.validate().unwrap_err().contains("proj"));
+
+        let mut bad_fov = cam;
+        bad_fov.tan_fovx = -1.0;
+        assert!(bad_fov.validate().is_err());
+
+        let mut bad_depth = cam;
+        bad_depth.zfar = bad_depth.znear;
+        assert!(bad_depth.validate().unwrap_err().contains("depth range"));
     }
 
     #[test]

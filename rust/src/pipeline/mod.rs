@@ -1,8 +1,10 @@
 //! The 3DGS render pipeline substrate — the four stages of Figure 2:
 //! preprocessing, duplication, sorting, blending — plus the GEMM-GS
-//! blending variant (Algorithm 2) and the shared [`plan::FramePlan`]
+//! blending variant (Algorithm 2), the shared [`plan::FramePlan`]
 //! stage (DESIGN.md §8) that owns the preprocess → duplicate → sort
-//! orchestration for every render path.
+//! orchestration for every render path, and the temporal-coherence
+//! [`trajectory`] planner (DESIGN.md §9) that reuses a frame's tile
+//! structure across a coherent camera path.
 
 pub mod batch;
 pub mod blend_gemm;
@@ -13,12 +15,14 @@ pub mod preprocess;
 pub mod render;
 pub mod sort;
 pub mod tile;
+pub mod trajectory;
 
 pub use batch::render_frames;
 pub use plan::{plan_frame, plan_frame_masked, FramePlan};
 pub use preprocess::{preprocess, Projected, PreprocessConfig};
 pub use render::{render_frame, Blender, RenderConfig, RenderOutput, StageTimings};
 pub use tile::TileGrid;
+pub use trajectory::{PlanSource, TrajectoryConfig, TrajectorySession};
 
 /// Tile edge in pixels — 16×16 tiles, as in the official rasterizer and
 /// throughout the paper.

@@ -58,16 +58,33 @@ pub struct FramePlan {
 /// acceleration method's pair veto (`cfg.accel`), duplication, sorting,
 /// and tile ranges, with per-stage timings.
 pub fn plan_frame(cloud: &GaussianCloud, camera: &Camera, cfg: &RenderConfig) -> FramePlan {
-    if cfg.accel.vetoes_pairs() {
-        let grid = TileGrid::new(camera.width, camera.height);
-        let accel = &cfg.accel;
-        let mask = move |p: &Projected, i: usize, tx: u32, ty: u32| {
-            accel.keep_pair(p, i, tx, ty, &grid)
-        };
-        plan_frame_masked(cloud, camera, cfg, Some(&mask))
-    } else {
-        plan_frame_masked(cloud, camera, cfg, None)
-    }
+    let (grid, projected, dup, t_preprocess, t_duplicate) = plan_stages(cloud, camera, cfg);
+    finish_plan(grid, *camera, projected, dup, cloud.len(), t_preprocess, t_duplicate)
+}
+
+/// Stages 1–2 of one frame under `cfg`, individually timed: the
+/// grid + preprocess + duplicate prologue shared by [`plan_frame`] and
+/// `pipeline::trajectory`'s warm/cold paths. One copy on purpose — the
+/// warm path's byte-identity invariant depends on its inputs never
+/// drifting from the cold path's.
+pub fn plan_stages(
+    cloud: &GaussianCloud,
+    camera: &Camera,
+    cfg: &RenderConfig,
+) -> (TileGrid, Projected, Duplicated, Duration, Duration) {
+    let grid = TileGrid::new(camera.width, camera.height);
+
+    // Stage 1 — preprocessing
+    let t0 = Instant::now();
+    let projected = preprocess(cloud, camera, &cfg.preprocess);
+    let t_preprocess = t0.elapsed();
+
+    // Stage 2 — duplication (with `cfg.accel`'s pair veto)
+    let t0 = Instant::now();
+    let dup = duplicate_for_cfg(&projected, &grid, cfg);
+    let t_duplicate = t0.elapsed();
+
+    (grid, projected, dup, t_preprocess, t_duplicate)
 }
 
 /// Plan one frame with an explicit pair veto. `Some(mask)` overrides
@@ -88,10 +105,47 @@ pub fn plan_frame_masked(
 
     // Stage 2 — duplication (with the optional pair veto)
     let t0 = Instant::now();
-    let mut dup = duplicate_with_mask(&projected, &grid, tile_mask);
+    let dup = duplicate_with_mask(&projected, &grid, tile_mask);
     let t_duplicate = t0.elapsed();
 
-    // Stage 3 — sorting + tile-range extraction
+    finish_plan(grid, *camera, projected, dup, cloud.len(), t_preprocess, t_duplicate)
+}
+
+/// Stage 2 under `cfg`: duplication with the configured acceleration
+/// method's pair veto when it has one. The hook `pipeline::trajectory`
+/// shares with [`plan_frame`] — a warm plan must apply the *same* veto
+/// as a cold one or the pair multisets (and therefore the images)
+/// diverge.
+pub fn duplicate_for_cfg(
+    projected: &Projected,
+    grid: &TileGrid,
+    cfg: &RenderConfig,
+) -> Duplicated {
+    if cfg.accel.vetoes_pairs() {
+        let accel = &cfg.accel;
+        let mask = move |p: &Projected, i: usize, tx: u32, ty: u32| {
+            accel.keep_pair(p, i, tx, ty, grid)
+        };
+        duplicate_with_mask(projected, grid, Some(&mask))
+    } else {
+        duplicate_with_mask(projected, grid, None)
+    }
+}
+
+/// Stage 3 + assembly: sort an emission-order [`Duplicated`], extract
+/// tile ranges, and assemble the [`FramePlan`]. Exposed so
+/// `pipeline::trajectory` can finish a plan from stages it ran itself
+/// (it needs the pre-sort emission order, which [`plan_frame`]
+/// discards).
+pub fn finish_plan(
+    grid: TileGrid,
+    camera: Camera,
+    projected: Projected,
+    mut dup: Duplicated,
+    n_gaussians: usize,
+    t_preprocess: Duration,
+    t_duplicate: Duration,
+) -> FramePlan {
     let t0 = Instant::now();
     sort_duplicated(&mut dup);
     let ranges = tile_ranges(&dup.keys, grid.num_tiles());
@@ -99,11 +153,11 @@ pub fn plan_frame_masked(
 
     FramePlan {
         grid,
-        camera: *camera,
+        camera,
         projected,
         dup,
         ranges,
-        n_gaussians: cloud.len(),
+        n_gaussians,
         t_preprocess,
         t_duplicate,
         t_sort,

@@ -19,14 +19,35 @@ pub struct TileGrid {
 }
 
 impl TileGrid {
-    /// Grid for a `width`×`height` image.
-    pub fn new(width: u32, height: u32) -> Self {
+    /// Grid for a `width`×`height` image; `Err` when either dimension
+    /// is zero. A zero-size grid has `tiles_x == 0`, which would poison
+    /// every later `tile_coords`/`tile_origin` with a division by zero —
+    /// reject it here instead of constructing it. Request admission
+    /// (coordinator + CLI) validates resolutions up front, so render
+    /// paths keep using the infallible [`new`](Self::new).
+    pub fn try_new(width: u32, height: u32) -> Result<Self, String> {
+        if width == 0 || height == 0 {
+            return Err(format!(
+                "invalid tile grid: resolution {width}x{height} has a zero dimension"
+            ));
+        }
         let ts = TILE_SIZE as u32;
-        TileGrid {
+        Ok(TileGrid {
             width,
             height,
             tiles_x: (width + ts - 1) / ts,
             tiles_y: (height + ts - 1) / ts,
+        })
+    }
+
+    /// Grid for a `width`×`height` image. Panics (with the
+    /// [`try_new`](Self::try_new) message) on zero dimensions — callers
+    /// sit behind admission validation ([`crate::math::Camera::validate`]),
+    /// so a zero here is a missed-validation bug, not a request error.
+    pub fn new(width: u32, height: u32) -> Self {
+        match Self::try_new(width, height) {
+            Ok(grid) => grid,
+            Err(msg) => panic!("{msg} (validate resolutions at admission)"),
         }
     }
 
@@ -87,6 +108,20 @@ mod tests {
         assert_eq!(g.tiles_x, 62); // ceil(980/16) = 61.25 → 62
         assert_eq!(g.tiles_y, 35); // ceil(545/16) = 34.06 → 35
         assert_eq!(g.num_tiles(), 62 * 35);
+    }
+
+    #[test]
+    fn zero_dimensions_are_rejected() {
+        assert!(TileGrid::try_new(0, 480).is_err());
+        assert!(TileGrid::try_new(640, 0).is_err());
+        assert!(TileGrid::try_new(0, 0).unwrap_err().contains("0x0"));
+        assert!(TileGrid::try_new(1, 1).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "zero dimension")]
+    fn new_panics_instead_of_poisoning() {
+        let _ = TileGrid::new(0, 480);
     }
 
     #[test]

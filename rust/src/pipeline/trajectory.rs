@@ -1,0 +1,651 @@
+//! Temporal-coherence trajectory planning (DESIGN.md §9).
+//!
+//! Real deployments render *camera trajectories* — ordered pose
+//! sequences whose tile/depth structure barely changes frame to frame —
+//! yet [`super::plan::plan_frame`] recomputes duplication order and the
+//! global `tile | depth` sort from scratch every frame. A
+//! [`TrajectorySession`] exploits the coherence: when the pose delta to
+//! the previous frame is small ([`TrajectoryConfig::max_translation`] /
+//! [`TrajectoryConfig::max_rotation`]) and the duplication *structure*
+//! (which Gaussian lands in which tile, in emission order) is unchanged
+//! or nearly so, the session keeps the previous frame's per-tile lists
+//! and replaces the global O(P log P) sort with per-tile repairs of the
+//! nearly-sorted depth keys. A camera jump, an intrinsics change, or
+//! structural drift beyond [`TrajectoryConfig::max_pair_drift`] falls
+//! back to a full cold plan.
+//!
+//! **Byte-identity invariant** (pinned by `tests/e2e_trajectory.rs`):
+//! a warm plan is *bit-identical* to the cold
+//! [`plan_frame`](super::plan::plan_frame) for the same camera, for
+//! every acceleration method. The argument: the cold
+//! path's stable sort by `tile_id << 32 | depth_bits` orders each
+//! tile's pairs by `(depth_bits, value)` — ties in depth resolve to
+//! emission order, which within one tile is ascending Gaussian index,
+//! i.e. ascending `value` (each Gaussian is emitted at most once per
+//! tile). That canonical `(key, value)` order is exactly what the warm
+//! per-tile repair and the patched re-bucket produce, so every
+//! downstream consumer (any blender, the tile-parallel scheduler, the
+//! pooled PJRT executor) sees the same plan and renders the same bytes.
+//! Temporal reuse is a scheduling optimization, never a numerical one —
+//! the same contract the batch coalescer keeps (DESIGN.md §6).
+//!
+//! Preprocessing and duplication still run every frame (they depend on
+//! the new pose and carry the acceleration method's veto); only the
+//! sort stage is replaced. That is the profitable trade: Figure 3's
+//! geometry stages put the sort at a significant share of plan time,
+//! and verifying near-sortedness of an already-sorted list is O(P)
+//! versus the cold comparison sort's O(P log P).
+
+use super::duplicate::{depth_bits, key_tile, Duplicated};
+use super::plan::{finish_plan, plan_stages, FramePlan};
+use super::preprocess::Projected;
+use super::render::{RenderConfig, RenderOutput, TileBlend};
+use crate::math::Camera;
+use crate::scene::gaussian::GaussianCloud;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Reuse thresholds of one trajectory session.
+#[derive(Debug, Clone, Copy)]
+pub struct TrajectoryConfig {
+    /// Largest camera-centre translation (world units) between
+    /// consecutive frames that still attempts warm reuse; beyond it the
+    /// camera "jumped" and the session replans cold.
+    pub max_translation: f32,
+    /// Largest relative rotation (radians) that still attempts reuse.
+    pub max_rotation: f32,
+    /// Reuse-error bound: the fraction of duplicated (tile, Gaussian)
+    /// pairs allowed to change tile membership between frames. Within
+    /// the bound the session patches the affected tiles (linear
+    /// re-bucket + per-tile sorts — still byte-exact); beyond it the
+    /// structure has drifted too far for per-tile work to beat the
+    /// global sort, and the session replans cold.
+    pub max_pair_drift: f64,
+}
+
+impl Default for TrajectoryConfig {
+    fn default() -> Self {
+        TrajectoryConfig {
+            max_translation: 1.0,
+            max_rotation: 0.2,
+            max_pair_drift: 0.05,
+        }
+    }
+}
+
+/// Why a frame planned cold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FallbackReason {
+    /// No previous frame to reuse.
+    FirstFrame,
+    /// Resolution / fov / depth-range change — the tile grid itself moved.
+    IntrinsicsChanged,
+    /// Pose delta exceeded `max_translation` / `max_rotation`.
+    CameraJump,
+    /// Tile-membership drift exceeded `max_pair_drift`.
+    PairDrift,
+}
+
+/// How one frame's plan was produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    /// Full cold plan (global sort), for the given reason.
+    Cold(FallbackReason),
+    /// Warm reuse of the previous frame's tile structure.
+    Warm {
+        /// Tiles whose depth keys needed repair (the rest verified as
+        /// already sorted and were kept as-is).
+        resorted_tiles: usize,
+        /// True when membership drifted within the error bound and the
+        /// plan was patched by re-bucketing instead of pure reuse.
+        patched: bool,
+    },
+}
+
+impl PlanSource {
+    /// True for either warm variant (the `plan_reuse` metric).
+    pub fn is_warm(&self) -> bool {
+        matches!(self, PlanSource::Warm { .. })
+    }
+}
+
+/// Session lifetime counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrajectoryStats {
+    /// Frames planned.
+    pub frames: u64,
+    /// Warm plans (tile structure reused, sort replaced by repairs).
+    pub warm_plans: u64,
+    /// Cold plans (first frame + every fallback).
+    pub cold_plans: u64,
+    /// Warm plans that took the patched (re-bucket) path.
+    pub patched_plans: u64,
+    /// Tiles repaired across all warm plans.
+    pub resorted_tiles: u64,
+    /// Cold plans caused by a camera jump.
+    pub jumps: u64,
+    /// Cold plans caused by drift beyond the reuse-error bound.
+    pub drift_fallbacks: u64,
+}
+
+/// What the session remembers of the previous frame: its camera, its
+/// sorted per-tile structure, and the pre-sort emission order (the
+/// structural fingerprint the reuse check compares).
+struct PrevFrame {
+    camera: Camera,
+    /// Per-tile `[start, end)` into `sorted_values`.
+    ranges: Vec<(u32, u32)>,
+    /// Depth-sorted values (projected-set indices), all tiles concatenated.
+    sorted_values: Vec<u32>,
+    /// Emission-order tile of each duplicated pair.
+    emission_tiles: Vec<u32>,
+    /// Emission-order value of each duplicated pair.
+    emission_values: Vec<u32>,
+}
+
+/// A stateful planner over an ordered pose sequence: feed consecutive
+/// cameras to [`plan_next`](Self::plan_next) (or render directly with
+/// [`render_next`](Self::render_next)) and coherent frames reuse the
+/// previous frame's tile structure. The scene and render configuration
+/// are fixed at construction — compression methods hand the
+/// *prepared* model in, exactly as the coordinator's scene store does.
+pub struct TrajectorySession {
+    cloud: Arc<GaussianCloud>,
+    cfg: RenderConfig,
+    tcfg: TrajectoryConfig,
+    prev: Option<PrevFrame>,
+    stats: TrajectoryStats,
+}
+
+impl TrajectorySession {
+    /// New session over `cloud` with the render and reuse configuration.
+    pub fn new(cloud: Arc<GaussianCloud>, cfg: RenderConfig, tcfg: TrajectoryConfig) -> Self {
+        TrajectorySession { cloud, cfg, tcfg, prev: None, stats: TrajectoryStats::default() }
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> TrajectoryStats {
+        self.stats
+    }
+
+    /// The session's render configuration (consumers that stage their
+    /// own blend, e.g. the coordinator's pooled PJRT executor, need it
+    /// alongside [`plan_next`](Self::plan_next)'s plan).
+    pub fn render_config(&self) -> &RenderConfig {
+        &self.cfg
+    }
+
+    /// Drop the warm state; the next frame plans cold.
+    pub fn reset(&mut self) {
+        self.prev = None;
+    }
+
+    /// Plan the next frame of the trajectory. Warm or cold, the
+    /// returned plan is bit-identical to `plan_frame` for this camera.
+    /// Cameras are assumed admission-validated
+    /// ([`crate::math::Camera::validate`]).
+    pub fn plan_next(&mut self, camera: &Camera) -> (FramePlan, PlanSource) {
+        self.stats.frames += 1;
+        let cold_reason = match &self.prev {
+            None => Some(FallbackReason::FirstFrame),
+            Some(prev) => {
+                if !prev.camera.same_intrinsics(camera) {
+                    Some(FallbackReason::IntrinsicsChanged)
+                } else {
+                    let (dt, dr) = prev.camera.pose_delta(camera);
+                    if dt > self.tcfg.max_translation || dr > self.tcfg.max_rotation {
+                        Some(FallbackReason::CameraJump)
+                    } else {
+                        None
+                    }
+                }
+            }
+        };
+
+        let (plan, source) = match cold_reason {
+            Some(reason) => (self.plan_cold(camera), PlanSource::Cold(reason)),
+            None => self.plan_coherent(camera),
+        };
+
+        match source {
+            PlanSource::Warm { resorted_tiles, patched } => {
+                self.stats.warm_plans += 1;
+                self.stats.resorted_tiles += resorted_tiles as u64;
+                if patched {
+                    self.stats.patched_plans += 1;
+                }
+            }
+            PlanSource::Cold(reason) => {
+                self.stats.cold_plans += 1;
+                match reason {
+                    FallbackReason::CameraJump => self.stats.jumps += 1,
+                    FallbackReason::PairDrift => self.stats.drift_fallbacks += 1,
+                    _ => {}
+                }
+            }
+        }
+        (plan, source)
+    }
+
+    /// Plan and blend the next frame serially with `blender` (the
+    /// native-backend serving path).
+    pub fn render_next(
+        &mut self,
+        camera: &Camera,
+        blender: &mut dyn TileBlend,
+    ) -> (RenderOutput, PlanSource) {
+        let (plan, source) = self.plan_next(camera);
+        let (image, t_blend) = plan.blend_serial(&self.cfg, blender);
+        let output =
+            RenderOutput { image, timings: plan.timings(t_blend), stats: plan.stats() };
+        (output, source)
+    }
+
+    /// Cold plan: the same stages as `plan_frame`, run here so the
+    /// pre-sort emission order can be captured for the next frame's
+    /// reuse check.
+    fn plan_cold(&mut self, camera: &Camera) -> FramePlan {
+        let (grid, projected, dup, t_preprocess, t_duplicate) =
+            plan_stages(&self.cloud, camera, &self.cfg);
+
+        let emission_tiles: Vec<u32> = dup.keys.iter().map(|&k| key_tile(k)).collect();
+        let emission_values = dup.values.clone();
+        let plan = finish_plan(
+            grid,
+            *camera,
+            projected,
+            dup,
+            self.cloud.len(),
+            t_preprocess,
+            t_duplicate,
+        );
+        self.remember(&plan, emission_tiles, emission_values);
+        plan
+    }
+
+    /// Coherent-pose path: preprocess + duplicate fresh (pose-dependent,
+    /// veto included), then reuse the previous tile structure when the
+    /// emission fingerprint allows it.
+    fn plan_coherent(&mut self, camera: &Camera) -> (FramePlan, PlanSource) {
+        let (grid, projected, dup, t_preprocess, t_duplicate) =
+            plan_stages(&self.cloud, camera, &self.cfg);
+
+        let emission_tiles: Vec<u32> = dup.keys.iter().map(|&k| key_tile(k)).collect();
+        let prev = self.prev.as_ref().expect("plan_coherent requires a previous frame");
+
+        // structural drift: fraction of emission positions whose
+        // (tile, value) changed since the previous frame
+        let drift = if emission_tiles.len() != prev.emission_tiles.len() {
+            1.0
+        } else if emission_tiles.is_empty() {
+            0.0
+        } else {
+            let mismatched = (0..emission_tiles.len())
+                .filter(|&i| {
+                    emission_tiles[i] != prev.emission_tiles[i]
+                        || dup.values[i] != prev.emission_values[i]
+                })
+                .count();
+            mismatched as f64 / emission_tiles.len() as f64
+        };
+
+        if drift > self.tcfg.max_pair_drift {
+            // reuse-error bound exceeded: finish cold from the stages
+            // already run (identical to plan_frame)
+            let emission_values = dup.values.clone();
+            let plan = finish_plan(
+                grid,
+                *camera,
+                projected,
+                dup,
+                self.cloud.len(),
+                t_preprocess,
+                t_duplicate,
+            );
+            self.remember(&plan, emission_tiles, emission_values);
+            return (plan, PlanSource::Cold(FallbackReason::PairDrift));
+        }
+
+        // Stage 3, warm: per-tile work instead of the global sort.
+        let t0 = Instant::now();
+        let (keys, values, ranges, resorted_tiles, patched) = if drift == 0.0 {
+            let (keys, values, resorted) =
+                resort_reused_tiles(&prev.ranges, &prev.sorted_values, &projected);
+            (keys, values, prev.ranges.clone(), resorted, false)
+        } else {
+            let (keys, values, ranges, sorted) =
+                rebucket(&emission_tiles, &dup.values, &projected, grid.num_tiles());
+            (keys, values, ranges, sorted, true)
+        };
+        let t_sort = t0.elapsed();
+
+        let emission_values = dup.values;
+        let plan = FramePlan {
+            grid,
+            camera: *camera,
+            projected,
+            dup: Duplicated { keys, values },
+            ranges,
+            n_gaussians: self.cloud.len(),
+            t_preprocess,
+            t_duplicate,
+            t_sort,
+        };
+        self.remember(&plan, emission_tiles, emission_values);
+        (plan, PlanSource::Warm { resorted_tiles, patched })
+    }
+
+    fn remember(
+        &mut self,
+        plan: &FramePlan,
+        emission_tiles: Vec<u32>,
+        emission_values: Vec<u32>,
+    ) {
+        self.prev = Some(PrevFrame {
+            camera: plan.camera,
+            ranges: plan.ranges.clone(),
+            sorted_values: plan.dup.values.clone(),
+            emission_tiles,
+            emission_values,
+        });
+    }
+}
+
+/// Warm stage 3 with *unchanged* membership: seed each tile from the
+/// previous frame's depth order, recompute the keys from the new
+/// depths, and repair only tiles that fell out of order — an O(P)
+/// verification plus O(n + inversions) insertion sorts on the touched
+/// tiles (the CPU analogue of StopThePop-style hierarchical re-sorting
+/// of nearly-sorted keys).
+fn resort_reused_tiles(
+    ranges: &[(u32, u32)],
+    prev_sorted_values: &[u32],
+    projected: &Projected,
+) -> (Vec<u64>, Vec<u32>, usize) {
+    let n = prev_sorted_values.len();
+    let mut keys = vec![0u64; n];
+    let mut values = prev_sorted_values.to_vec();
+    let mut resorted = 0usize;
+    for (tile, &(s, e)) in ranges.iter().enumerate() {
+        let (s, e) = (s as usize, e as usize);
+        if e <= s {
+            continue;
+        }
+        let tile_hi = (tile as u64) << 32;
+        for i in s..e {
+            keys[i] = tile_hi | depth_bits(projected.depths[values[i] as usize]) as u64;
+        }
+        // canonical within-tile order is (key, value) — see the module
+        // docs for why this matches the cold stable sort bit for bit
+        let in_order =
+            (s + 1..e).all(|i| (keys[i - 1], values[i - 1]) <= (keys[i], values[i]));
+        if in_order {
+            continue;
+        }
+        resorted += 1;
+        for i in s + 1..e {
+            let (k, v) = (keys[i], values[i]);
+            let mut j = i;
+            while j > s && (keys[j - 1], values[j - 1]) > (k, v) {
+                keys[j] = keys[j - 1];
+                values[j] = values[j - 1];
+                j -= 1;
+            }
+            keys[j] = k;
+            values[j] = v;
+        }
+    }
+    (keys, values, resorted)
+}
+
+/// Warm stage 3 with membership drift inside the error bound: a stable
+/// linear counting-sort of the *new* emission list by tile, then a
+/// per-tile `(key, value)` sort — O(P + Σ nₜ log nₜ), no global sort.
+/// Returns `(keys, values, ranges, tiles_sorted)`.
+fn rebucket(
+    emission_tiles: &[u32],
+    emission_values: &[u32],
+    projected: &Projected,
+    num_tiles: usize,
+) -> (Vec<u64>, Vec<u32>, Vec<(u32, u32)>, usize) {
+    let n = emission_values.len();
+    let mut counts = vec![0u32; num_tiles];
+    for &t in emission_tiles {
+        counts[t as usize] += 1;
+    }
+    let mut ranges = vec![(0u32, 0u32); num_tiles];
+    let mut cursor = vec![0u32; num_tiles];
+    let mut acc = 0u32;
+    for (t, &c) in counts.iter().enumerate() {
+        cursor[t] = acc;
+        // empty tiles keep the canonical (0, 0) that `tile_ranges`
+        // emits — the ranges vector must match the cold plan bitwise
+        if c > 0 {
+            ranges[t] = (acc, acc + c);
+        }
+        acc += c;
+    }
+    let mut keys = vec![0u64; n];
+    let mut values = vec![0u32; n];
+    for i in 0..n {
+        let t = emission_tiles[i] as usize;
+        let dst = cursor[t] as usize;
+        cursor[t] += 1;
+        let v = emission_values[i];
+        keys[dst] = ((t as u64) << 32) | depth_bits(projected.depths[v as usize]) as u64;
+        values[dst] = v;
+    }
+    let mut tiles_sorted = 0usize;
+    for &(s, e) in &ranges {
+        let (s, e) = (s as usize, e as usize);
+        if e - s <= 1 {
+            continue;
+        }
+        // count (and sort) only tiles genuinely out of order, matching
+        // the pure-reuse path's accounting
+        let in_order =
+            (s + 1..e).all(|i| (keys[i - 1], values[i - 1]) <= (keys[i], values[i]));
+        if in_order {
+            continue;
+        }
+        let mut pairs: Vec<(u64, u32)> = keys[s..e]
+            .iter()
+            .copied()
+            .zip(values[s..e].iter().copied())
+            .collect();
+        pairs.sort_unstable();
+        for (j, (k, v)) in pairs.into_iter().enumerate() {
+            keys[s + j] = k;
+            values[s + j] = v;
+        }
+        tiles_sorted += 1;
+    }
+    (keys, values, ranges, tiles_sorted)
+}
+
+/// Total plan-stage wall-clock of one frame (preprocess + duplicate +
+/// sort) — the quantity the cold-vs-warm sweep compares.
+pub fn plan_time(plan: &FramePlan) -> Duration {
+    plan.t_preprocess + plan.t_duplicate + plan.t_sort
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelKind;
+    use crate::math::Vec3;
+    use crate::pipeline::plan::plan_frame;
+    use crate::scene::synthetic::scene_by_name;
+
+    fn orbit(theta: f32, w: u32, h: u32) -> Camera {
+        Camera::look_at(
+            Vec3::new(8.0 * theta.cos(), 2.0, 8.0 * theta.sin()),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            w,
+            h,
+        )
+    }
+
+    fn assert_plans_identical(a: &FramePlan, b: &FramePlan, ctx: &str) {
+        assert_eq!(a.dup.keys, b.dup.keys, "{ctx}: keys diverged");
+        assert_eq!(a.dup.values, b.dup.values, "{ctx}: values diverged");
+        assert_eq!(a.ranges, b.ranges, "{ctx}: ranges diverged");
+    }
+
+    #[test]
+    fn warm_plan_bit_identical_to_cold_on_coherent_arc() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.002));
+        let cfg = RenderConfig::default();
+        let mut session =
+            TrajectorySession::new(Arc::clone(&cloud), cfg.clone(), TrajectoryConfig::default());
+        let mut saw_warm = false;
+        for i in 0..5 {
+            // sub-pixel screen motion per frame: the coherent regime
+            let camera = orbit(0.4 + i as f32 * 3e-4, 320, 192);
+            let (plan, source) = session.plan_next(&camera);
+            let cold = plan_frame(&cloud, &camera, &cfg);
+            assert_plans_identical(&plan, &cold, &format!("frame {i} ({source:?})"));
+            saw_warm |= source.is_warm();
+        }
+        let stats = session.stats();
+        assert!(saw_warm, "no frame planned warm: {stats:?}");
+        assert_eq!(stats.frames, 5);
+        assert_eq!(stats.warm_plans + stats.cold_plans, 5);
+    }
+
+    #[test]
+    fn identical_pose_reuses_with_zero_resorts() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.002));
+        let cfg = RenderConfig::default();
+        let mut session =
+            TrajectorySession::new(Arc::clone(&cloud), cfg.clone(), TrajectoryConfig::default());
+        let camera = orbit(0.4, 320, 192);
+        let (_, first) = session.plan_next(&camera);
+        assert_eq!(first, PlanSource::Cold(FallbackReason::FirstFrame));
+        let (plan, second) = session.plan_next(&camera);
+        assert_eq!(second, PlanSource::Warm { resorted_tiles: 0, patched: false });
+        assert_plans_identical(&plan, &plan_frame(&cloud, &camera, &cfg), "identical pose");
+    }
+
+    #[test]
+    fn camera_jump_falls_back_cold() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.002));
+        let cfg = RenderConfig::default();
+        let mut session =
+            TrajectorySession::new(Arc::clone(&cloud), cfg.clone(), TrajectoryConfig::default());
+        session.plan_next(&orbit(0.4, 320, 192));
+        // opposite side of the orbit: far beyond any reuse threshold
+        let jumped = orbit(0.4 + std::f32::consts::PI, 320, 192);
+        let (plan, source) = session.plan_next(&jumped);
+        assert_eq!(source, PlanSource::Cold(FallbackReason::CameraJump));
+        assert_plans_identical(&plan, &plan_frame(&cloud, &jumped, &cfg), "jump");
+        assert_eq!(session.stats().jumps, 1);
+    }
+
+    #[test]
+    fn intrinsics_change_falls_back_cold() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.002));
+        let mut session = TrajectorySession::new(
+            Arc::clone(&cloud),
+            RenderConfig::default(),
+            TrajectoryConfig::default(),
+        );
+        session.plan_next(&orbit(0.4, 320, 192));
+        let (_, source) = session.plan_next(&orbit(0.4, 160, 96));
+        assert_eq!(source, PlanSource::Cold(FallbackReason::IntrinsicsChanged));
+    }
+
+    #[test]
+    fn patched_reuse_is_bit_identical_including_empty_tile_ranges() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.002));
+        let cfg = RenderConfig::default();
+        // drift tolerance 1.0: any structural drift takes the patched
+        // re-bucket path instead of falling back
+        let tcfg = TrajectoryConfig {
+            max_translation: 10.0,
+            max_rotation: 3.0,
+            max_pair_drift: 1.0,
+        };
+        let mut session = TrajectorySession::new(Arc::clone(&cloud), cfg.clone(), tcfg);
+        session.plan_next(&orbit(0.4, 320, 192));
+        let moved = orbit(0.45, 320, 192); // ~5 px of screen motion → drift > 0
+        let (plan, source) = session.plan_next(&moved);
+        assert!(source.is_warm(), "expected a warm (patched) plan: {source:?}");
+        // bitwise identity must include `ranges` — empty tiles keep the
+        // canonical (0, 0) that tile_ranges emits
+        assert_plans_identical(&plan, &plan_frame(&cloud, &moved, &cfg), "patched");
+        assert!(
+            plan.ranges.contains(&(0, 0)),
+            "framing should leave at least one empty tile to pin the canonical range"
+        );
+    }
+
+    #[test]
+    fn drift_beyond_bound_falls_back_and_stays_exact() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.002));
+        let cfg = RenderConfig::default();
+        // zero drift tolerance + generous pose gate: a visibly moving
+        // camera must structurally drift and fall back, yet stay exact
+        let tcfg = TrajectoryConfig {
+            max_translation: 10.0,
+            max_rotation: 3.0,
+            max_pair_drift: 0.0,
+        };
+        let mut session = TrajectorySession::new(Arc::clone(&cloud), cfg.clone(), tcfg);
+        session.plan_next(&orbit(0.4, 320, 192));
+        let moved = orbit(0.55, 320, 192); // ~15 px of screen motion
+        let (plan, source) = session.plan_next(&moved);
+        assert_eq!(source, PlanSource::Cold(FallbackReason::PairDrift));
+        assert_plans_identical(&plan, &plan_frame(&cloud, &moved, &cfg), "drift");
+        assert_eq!(session.stats().drift_fallbacks, 1);
+    }
+
+    #[test]
+    fn warm_plans_stay_exact_under_accel_veto() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.002));
+        let cfg = RenderConfig::default().with_accel(AccelKind::FlashGs.instantiate());
+        let mut session =
+            TrajectorySession::new(Arc::clone(&cloud), cfg.clone(), TrajectoryConfig::default());
+        for i in 0..4 {
+            let camera = orbit(0.4 + i as f32 * 3e-4, 320, 192);
+            let (plan, source) = session.plan_next(&camera);
+            let cold = plan_frame(&cloud, &camera, &cfg);
+            assert_plans_identical(&plan, &cold, &format!("flashgs frame {i} ({source:?})"));
+        }
+    }
+
+    #[test]
+    fn render_next_matches_cold_render_bytes() {
+        use crate::pipeline::render::{render_frame, Blender};
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.002));
+        let cfg = RenderConfig::default();
+        let mut session =
+            TrajectorySession::new(Arc::clone(&cloud), cfg.clone(), TrajectoryConfig::default());
+        let mut warm_blender = Blender::Gemm.instantiate(cfg.batch);
+        let mut cold_blender = Blender::Gemm.instantiate(cfg.batch);
+        for i in 0..3 {
+            let camera = orbit(0.4 + i as f32 * 3e-4, 160, 96);
+            let (out, _) = session.render_next(&camera, warm_blender.as_mut());
+            let cold = render_frame(&cloud, &camera, &cfg, cold_blender.as_mut());
+            assert!(out.image.data == cold.image.data, "frame {i}: image bytes diverged");
+            assert_eq!(out.stats.n_pairs, cold.stats.n_pairs);
+        }
+    }
+
+    #[test]
+    fn reset_forgets_warm_state() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.002));
+        let mut session = TrajectorySession::new(
+            cloud,
+            RenderConfig::default(),
+            TrajectoryConfig::default(),
+        );
+        let camera = orbit(0.4, 160, 96);
+        session.plan_next(&camera);
+        session.reset();
+        let (_, source) = session.plan_next(&camera);
+        assert_eq!(source, PlanSource::Cold(FallbackReason::FirstFrame));
+    }
+}

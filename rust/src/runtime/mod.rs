@@ -17,7 +17,7 @@ pub mod tiled_render;
 pub use blend_exec::ArtifactBlender;
 pub use client::RuntimeClient;
 pub use manifest::Manifest;
-pub use tiled_render::{render_frame_tiled, render_frames_tiled};
+pub use tiled_render::{render_frame_tiled, render_frames_tiled, render_frames_tiled_with_plans};
 
 /// Default artifacts directory, relative to the crate root.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

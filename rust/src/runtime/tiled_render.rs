@@ -65,17 +65,29 @@ pub fn render_frames_tiled(
     cameras: &[Camera],
     cfg: &RenderConfig,
 ) -> Result<Vec<RenderOutput>> {
-    if cameras.is_empty() {
+    // geometry stages per frame: the shared FramePlan stage (DESIGN.md
+    // §8), native and timed individually — including `cfg.accel`'s veto
+    let prepared: Vec<FramePlan> =
+        cameras.iter().map(|camera| plan_frame(cloud, camera, cfg)).collect();
+    render_frames_tiled_with_plans(client, &prepared, cfg)
+}
+
+/// Blend already-planned frames through the pooled 16-tile grouped
+/// path. The plans may come from [`plan_frame`] (the cold path above)
+/// or from a warm `pipeline::trajectory` session (DESIGN.md §9) — the
+/// blend stage only *reads* the plan, and warm plans are bit-identical
+/// to cold ones, so the executor needs no temporal awareness at all.
+pub fn render_frames_tiled_with_plans(
+    client: &mut RuntimeClient,
+    prepared: &[FramePlan],
+    cfg: &RenderConfig,
+) -> Result<Vec<RenderOutput>> {
+    if prepared.is_empty() {
         return Ok(Vec::new());
     }
     let group = client.manifest().entries.contains_key(ENTRY).then_some(16).unwrap_or(16);
     let batch = client.manifest().batch;
     let mp = client.manifest().mp.clone();
-
-    // geometry stages per frame: the shared FramePlan stage (DESIGN.md
-    // §8), native and timed individually — including `cfg.accel`'s veto
-    let prepared: Vec<FramePlan> =
-        cameras.iter().map(|camera| plan_frame(cloud, camera, cfg)).collect();
 
     let t0 = Instant::now();
     // states for every frame's non-empty tiles, pooled into one work set
@@ -186,10 +198,10 @@ pub fn render_frames_tiled(
 
     // composite each frame (still inside the blend timing window, as in
     // the single-frame path)
-    let mut images: Vec<Image> = cameras
+    let mut images: Vec<Image> = prepared
         .iter()
-        .map(|camera| {
-            let mut image = Image::new(camera.width, camera.height);
+        .map(|pf| {
+            let mut image = Image::new(pf.camera.width, pf.camera.height);
             if cfg.background != Vec3::ZERO {
                 for px in image.data.iter_mut() {
                     *px = [cfg.background.x, cfg.background.y, cfg.background.z];
@@ -199,7 +211,7 @@ pub fn render_frames_tiled(
         })
         .collect();
     for st in &states {
-        let camera = &cameras[st.frame];
+        let camera = &prepared[st.frame].camera;
         let origin = prepared[st.frame].grid.tile_origin(st.tile_id);
         let image = &mut images[st.frame];
         for ly in 0..TILE_SIZE {
@@ -226,9 +238,9 @@ pub fn render_frames_tiled(
     // blend wall-clock (kernel rounds + composite) is shared work,
     // attributed evenly so coordinator-level sums don't double-count
     let t_blend_total = t0.elapsed();
-    let blend_each = t_blend_total / cameras.len() as u32;
+    let blend_each = t_blend_total / prepared.len() as u32;
 
-    let mut outputs = Vec::with_capacity(cameras.len());
+    let mut outputs = Vec::with_capacity(prepared.len());
     for (frame, pf) in prepared.iter().enumerate() {
         outputs.push(RenderOutput {
             image: std::mem::replace(&mut images[frame], Image::new(0, 0)),
@@ -322,6 +334,36 @@ mod tests {
         assert!(batched[1].image.data == one_b.image.data);
         assert_eq!(batched[0].stats.n_pairs, one_a.stats.n_pairs);
         assert_eq!(batched[1].stats.n_pairs, one_b.stats.n_pairs);
+    }
+
+    #[test]
+    fn warm_trajectory_plans_render_identically_through_tiled_path() {
+        if !artifacts_available() {
+            return;
+        }
+        use crate::pipeline::trajectory::{TrajectoryConfig, TrajectorySession};
+        use std::sync::Arc;
+        let spec = scene_by_name("train").unwrap();
+        let cloud = Arc::new(spec.synthesize(0.0005));
+        let cfg = RenderConfig::default();
+        let mut camera = default_camera(&spec);
+        camera.width = 96;
+        camera.height = 64;
+        let mut client = RuntimeClient::from_default_dir().unwrap();
+        let mut session =
+            TrajectorySession::new(Arc::clone(&cloud), cfg.clone(), TrajectoryConfig::default());
+        // frame 1 cold, frame 2 warm (identical pose) — both must match
+        // the stateless tiled path byte for byte
+        for _ in 0..2 {
+            let (plan, _source) = session.plan_next(&camera);
+            let warm = render_frames_tiled_with_plans(&mut client, std::slice::from_ref(&plan), &cfg)
+                .unwrap()
+                .pop()
+                .unwrap();
+            let cold = render_frame_tiled(&mut client, &cloud, &camera, &cfg).unwrap();
+            assert!(warm.image.data == cold.image.data);
+            assert_eq!(warm.stats.n_pairs, cold.stats.n_pairs);
+        }
     }
 
     #[test]

@@ -52,8 +52,10 @@ fn parse_header<R: BufRead>(r: &mut R) -> Result<Header, PlyError> {
     let mut count = None;
     let mut properties = Vec::new();
     let mut in_vertex = false;
+    let mut lineno = 1usize;
     loop {
         line.clear();
+        lineno += 1;
         if r.read_line(&mut line)? == 0 {
             return Err(PlyError::Format("unexpected EOF in header".into()));
         }
@@ -61,29 +63,48 @@ fn parse_header<R: BufRead>(r: &mut R) -> Result<Header, PlyError> {
         if l == "end_header" {
             break;
         }
+        // a truncated token is reported at its exact header line — a
+        // silent empty-string default would only fail later, far from
+        // the offending line, with a misleading message
+        let truncated = |what: &str| {
+            PlyError::Format(format!("header line {lineno}: truncated {what} line: '{l}'"))
+        };
         let mut parts = l.split_whitespace();
         match parts.next() {
             Some("format") => {
-                let fmt = parts.next().unwrap_or("");
+                let fmt = parts.next().ok_or_else(|| truncated("'format'"))?;
                 if fmt != "binary_little_endian" {
-                    return Err(PlyError::Format(format!("unsupported format '{fmt}'")));
+                    return Err(PlyError::Format(format!(
+                        "header line {lineno}: unsupported format '{fmt}'"
+                    )));
                 }
             }
             Some("element") => {
-                let name = parts.next().unwrap_or("");
+                let name = parts.next().ok_or_else(|| truncated("'element'"))?;
                 in_vertex = name == "vertex";
                 if in_vertex {
-                    count = parts
-                        .next()
-                        .and_then(|c| c.parse::<usize>().ok());
+                    let c = parts.next().ok_or_else(|| {
+                        PlyError::Format(format!(
+                            "header line {lineno}: 'element vertex' missing a count: '{l}'"
+                        ))
+                    })?;
+                    count = Some(c.parse::<usize>().map_err(|_| {
+                        PlyError::Format(format!(
+                            "header line {lineno}: invalid vertex count '{c}'"
+                        ))
+                    })?);
                 }
             }
             Some("property") if in_vertex => {
-                let ty = parts.next().unwrap_or("");
+                let ty = parts.next().ok_or_else(|| truncated("'property' (missing type)"))?;
                 if ty != "float" {
-                    return Err(PlyError::Format(format!("unsupported property type '{ty}'")));
+                    return Err(PlyError::Format(format!(
+                        "header line {lineno}: unsupported property type '{ty}'"
+                    )));
                 }
-                properties.push(parts.next().unwrap_or("").to_string());
+                let name =
+                    parts.next().ok_or_else(|| truncated("'property' (missing name)"))?;
+                properties.push(name.to_string());
             }
             _ => {}
         }
@@ -271,6 +292,38 @@ mod tests {
         let data = b"ply\nformat binary_little_endian 1.0\nelement vertex 1\nproperty float x\nend_header\n";
         let err = read_ply(&data[..]).unwrap_err();
         assert!(err.to_string().contains("missing property"));
+    }
+
+    #[test]
+    fn truncated_header_lines_error_precisely() {
+        // each malformed header reports the offending line, never an
+        // empty-string token that fails later with a confusing message
+        let cases: [(&[u8], &str); 5] = [
+            (b"ply\nformat\n", "line 2: truncated 'format'"),
+            (b"ply\nformat binary_little_endian 1.0\nelement\n", "line 3: truncated 'element'"),
+            (
+                b"ply\nformat binary_little_endian 1.0\nelement vertex\n",
+                "line 3: 'element vertex' missing a count",
+            ),
+            (
+                b"ply\nformat binary_little_endian 1.0\nelement vertex nope\nend_header\n",
+                "line 3: invalid vertex count 'nope'",
+            ),
+            (
+                b"ply\nformat binary_little_endian 1.0\nelement vertex 1\nproperty float\n",
+                "line 4: truncated 'property' (missing name)",
+            ),
+        ];
+        for (data, want) in cases {
+            let err = read_ply(data).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(want), "expected '{want}' in '{msg}'");
+        }
+        // a bare 'property' line (no type token) inside the vertex element
+        let data: &[u8] =
+            b"ply\nformat binary_little_endian 1.0\nelement vertex 1\nproperty\n";
+        let msg = read_ply(data).unwrap_err().to_string();
+        assert!(msg.contains("missing type"), "got '{msg}'");
     }
 
     #[test]

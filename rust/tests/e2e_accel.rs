@@ -77,6 +77,7 @@ fn accel_coordinator(max_batch: usize, workers: usize) -> Coordinator {
             render: RenderConfig::default(),
             max_batch,
             batch_timeout: Duration::from_millis(300),
+            ..CoordinatorConfig::default()
         },
         scenes,
     )

@@ -28,6 +28,7 @@ fn coordinator(max_batch: usize, timeout: Duration, workers: usize) -> Coordinat
             render: RenderConfig::default(),
             max_batch,
             batch_timeout: timeout,
+            ..CoordinatorConfig::default()
         },
         scenes,
     )

@@ -1,0 +1,236 @@
+//! End-to-end trajectory-session tests (DESIGN.md §9):
+//!
+//! * warm-plan rendering is **byte-identical** to cold-plan rendering
+//!   for every acceleration method — temporal reuse is a scheduling
+//!   optimization, never a numerical one (the same contract the batch
+//!   coalescer keeps in `e2e_batching.rs`);
+//! * a camera jump triggers the cold fallback;
+//! * malformed inputs (zero resolution, NaN poses) come back as error
+//!   responses — not panics — through the live coordinator;
+//! * session frames streamed through the coordinator reach a sticky
+//!   worker and actually reuse plans (`plan_reuse` metric).
+
+use gemm_gs::accel::AccelKind;
+use gemm_gs::coordinator::{
+    BackendKind, Coordinator, CoordinatorConfig, RenderRequest,
+};
+use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::pipeline::render::{render_frame, RenderConfig};
+use gemm_gs::pipeline::trajectory::{
+    FallbackReason, PlanSource, TrajectoryConfig, TrajectorySession,
+};
+use gemm_gs::scene::gaussian::GaussianCloud;
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+const SCALE: f64 = 0.001;
+
+fn orbit(theta: f32, w: u32, h: u32) -> Camera {
+    Camera::look_at(
+        Vec3::new(8.0 * theta.cos(), 2.0, 8.0 * theta.sin()),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        w,
+        h,
+    )
+}
+
+/// A coherent arc: sub-pixel screen motion per frame (the
+/// high-frame-rate regime trajectory sessions target).
+fn coherent_arc(frames: usize, w: u32, h: u32) -> Vec<Camera> {
+    (0..frames).map(|i| orbit(0.4 + i as f32 * 3e-4, w, h)).collect()
+}
+
+fn train_cloud() -> Arc<GaussianCloud> {
+    Arc::new(scene_by_name("train").unwrap().synthesize(SCALE))
+}
+
+fn start_coordinator(workers: usize) -> Coordinator {
+    let mut scenes = HashMap::new();
+    scenes.insert("train".to_string(), train_cloud());
+    Coordinator::start(
+        CoordinatorConfig {
+            workers,
+            backend: BackendKind::NativeGemm,
+            ..CoordinatorConfig::default()
+        },
+        scenes,
+    )
+}
+
+/// The acceptance-criterion invariant: for **every** accel method, a
+/// warm-plan trajectory renders byte-identically to cold per-frame
+/// rendering, while actually reusing plans on the coherent arc.
+#[test]
+fn warm_trajectory_bytes_match_cold_for_every_accel_method() {
+    let spec = scene_by_name("train").unwrap();
+    let base = Arc::new(spec.synthesize(0.002));
+    for accel in AccelKind::all() {
+        let method = accel.instantiate();
+        // compression methods render the transformed model on both
+        // paths, exactly as the coordinator's scene store serves it
+        let cloud = if method.transforms_model() {
+            Arc::new(method.prepare_model(&base))
+        } else {
+            Arc::clone(&base)
+        };
+        let cfg = RenderConfig::default().with_accel(accel.instantiate());
+        let mut session =
+            TrajectorySession::new(Arc::clone(&cloud), cfg.clone(), TrajectoryConfig::default());
+        let mut warm_blender = BackendKind::NativeGemm.instantiate(cfg.batch).unwrap();
+        let mut cold_blender = BackendKind::NativeGemm.instantiate(cfg.batch).unwrap();
+        for (i, camera) in coherent_arc(5, 160, 96).iter().enumerate() {
+            let (warm, source) = session.render_next(camera, warm_blender.as_mut());
+            let cold = render_frame(&cloud, camera, &cfg, cold_blender.as_mut());
+            assert!(
+                warm.image.data == cold.image.data,
+                "{}: frame {i} ({source:?}) diverged from the cold render",
+                accel.cli_name()
+            );
+            assert_eq!(warm.stats.n_pairs, cold.stats.n_pairs, "{}", accel.cli_name());
+        }
+        let stats = session.stats();
+        assert!(
+            stats.warm_plans >= 1,
+            "{}: coherent arc reused no plans ({stats:?})",
+            accel.cli_name()
+        );
+    }
+}
+
+#[test]
+fn camera_jump_falls_back_and_recovers() {
+    let cloud = train_cloud();
+    let cfg = RenderConfig::default();
+    let mut session =
+        TrajectorySession::new(Arc::clone(&cloud), cfg.clone(), TrajectoryConfig::default());
+    let mut blender = BackendKind::NativeGemm.instantiate(cfg.batch).unwrap();
+
+    let start = orbit(0.4, 160, 96);
+    let (_, first) = session.render_next(&start, blender.as_mut());
+    assert_eq!(first, PlanSource::Cold(FallbackReason::FirstFrame));
+
+    // teleport to the opposite side of the orbit
+    let jumped = orbit(0.4 + std::f32::consts::PI, 160, 96);
+    let (out, source) = session.render_next(&jumped, blender.as_mut());
+    assert_eq!(source, PlanSource::Cold(FallbackReason::CameraJump));
+    assert_eq!(session.stats().jumps, 1);
+
+    // the fallback must still be exact
+    let mut cold_blender = BackendKind::NativeGemm.instantiate(cfg.batch).unwrap();
+    let cold = render_frame(&cloud, &jumped, &cfg, cold_blender.as_mut());
+    assert!(out.image.data == cold.image.data, "jump fallback diverged");
+
+    // and the session re-warms at the new location
+    let (_, next) = session.render_next(&orbit(0.4 + std::f32::consts::PI, 160, 96), blender.as_mut());
+    assert!(next.is_warm(), "session did not re-warm after the jump: {next:?}");
+}
+
+#[test]
+fn zero_resolution_request_errors_through_live_coordinator() {
+    let coord = start_coordinator(2);
+    let mut cam = orbit(0.0, 160, 96);
+    cam.width = 0;
+    let resp = coord.render_sync(RenderRequest::new(1, "train", cam));
+    assert!(resp.image.is_none());
+    let msg = resp.error.expect("zero-resolution request must error, not panic");
+    assert!(msg.contains("resolution"), "unhelpful error: {msg}");
+
+    // a zero-height *session* frame is rejected the same way
+    let mut cam = orbit(0.0, 160, 96);
+    cam.height = 0;
+    let resp = coord.render_sync(RenderRequest::new(2, "train", cam).with_session(5, 0));
+    assert!(resp.error.is_some() && resp.image.is_none());
+
+    // the service stays healthy
+    let ok = coord.render_sync(RenderRequest::new(3, "train", orbit(0.0, 160, 96)));
+    assert!(ok.error.is_none(), "{:?}", ok.error);
+    assert_eq!(coord.metrics().errors, 2);
+    coord.shutdown();
+}
+
+#[test]
+fn nan_pose_request_errors_through_live_coordinator() {
+    let coord = start_coordinator(2);
+    let mut cam = orbit(0.0, 160, 96);
+    cam.view.m[4] = f32::NAN;
+    let resp = coord.render_sync(RenderRequest::new(1, "train", cam));
+    assert!(resp.image.is_none());
+    assert!(resp.error.expect("NaN pose must error").contains("view"));
+
+    let mut inf = orbit(0.0, 160, 96);
+    inf.tan_fovx = f32::INFINITY;
+    let resp = coord.render_sync(RenderRequest::new(2, "train", inf));
+    assert!(resp.error.is_some());
+
+    // a -0.0 pose entry is NOT malformed — and it must still coalesce
+    // with its +0.0 twin (the canonical pose key folds signed zero)
+    let a = orbit(0.0, 160, 96);
+    let mut b = a;
+    b.view.m[3] = -0.0; // homogeneous row zero
+    assert!(a.same_view(&b));
+    let resp = coord.render_sync(RenderRequest::new(3, "train", b));
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(coord.metrics().errors, 2);
+    coord.shutdown();
+}
+
+/// Session frames streamed through the coordinator reach the sticky
+/// worker, reuse plans, and return byte-identical images to the
+/// stateless cold path.
+#[test]
+fn coordinator_session_stream_reuses_plans_and_stays_exact() {
+    let coord = start_coordinator(3);
+    let poses = coherent_arc(8, 160, 96);
+    let rxs: Vec<_> = poses
+        .iter()
+        .enumerate()
+        .map(|(i, cam)| {
+            coord.submit(RenderRequest::new(i as u64, "train", *cam).with_session(42, i as u64))
+        })
+        .collect();
+    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+
+    let cloud = train_cloud();
+    let cfg = RenderConfig::default();
+    let mut cold_blender = BackendKind::NativeGemm.instantiate(cfg.batch).unwrap();
+    for (resp, cam) in responses.iter().zip(&poses) {
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        let cold = render_frame(&cloud, cam, &cfg, cold_blender.as_mut());
+        assert!(
+            resp.image.as_ref().unwrap().data == cold.image.data,
+            "session frame diverged from stateless rendering"
+        );
+    }
+    let m = coord.metrics();
+    assert_eq!(m.frames, poses.len() as u64);
+    assert_eq!(m.plan_reuse + m.plan_fallbacks, poses.len() as u64);
+    assert!(m.plan_reuse >= 1, "no warm plans through the coordinator: {m:?}");
+    coord.shutdown();
+}
+
+/// Sessions and plain coalesced traffic interleave on the same service
+/// without starving each other.
+#[test]
+fn sessions_and_shared_traffic_interleave() {
+    let coord = start_coordinator(2);
+    let poses = coherent_arc(4, 160, 96);
+    let mut rxs = Vec::new();
+    for (i, cam) in poses.iter().enumerate() {
+        rxs.push(
+            coord.submit(RenderRequest::new(i as u64, "train", *cam).with_session(9, i as u64)),
+        );
+        rxs.push(coord.submit(RenderRequest::new(100 + i as u64, "train", *cam)));
+    }
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.image.is_some());
+    }
+    let m = coord.metrics();
+    assert_eq!(m.frames, 8);
+    assert_eq!(m.plan_reuse + m.plan_fallbacks, 4); // only the session frames
+    coord.shutdown();
+}
