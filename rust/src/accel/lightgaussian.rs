@@ -94,6 +94,12 @@ impl AccelMethod for LightGaussian {
         1.12
     }
 
+    // pruning keeps `keep_fraction` of the model, and pair counts track
+    // the model size near-linearly at fixed resolution
+    fn modelled_pair_keep(&self) -> f64 {
+        self.keep_fraction
+    }
+
     fn is_lossy(&self) -> bool {
         true
     }

@@ -93,6 +93,16 @@ pub trait AccelMethod: Send + Sync {
         1.0
     }
 
+    /// Modelled fraction of (Gaussian, tile) pairs surviving this
+    /// method — the pair-veto survival rate for preprocessing methods,
+    /// the keep fraction for pruning compression methods. Feeds the
+    /// quality ladder's perfmodel cost ordering (`qos::ladder`); the
+    /// *measured* counterpart is asserted non-increasing down the
+    /// ladder in `tests/e2e_qos.rs`.
+    fn modelled_pair_keep(&self) -> f64 {
+        1.0
+    }
+
     /// Whether the method changes rendered pixels (lossy).
     fn is_lossy(&self) -> bool {
         false

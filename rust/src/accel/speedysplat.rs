@@ -64,6 +64,12 @@ impl AccelMethod for SpeedySplat {
     fn preprocess_cost_factor(&self) -> f64 {
         1.05
     }
+
+    // SnugBox + AccuTile lands between StopThePop's hierarchical cull
+    // and FlashGS's exact test
+    fn modelled_pair_keep(&self) -> f64 {
+        0.70
+    }
 }
 
 #[cfg(test)]

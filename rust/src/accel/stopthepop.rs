@@ -45,6 +45,11 @@ impl AccelMethod for StopThePop {
     fn preprocess_cost_factor(&self) -> f64 {
         1.1
     }
+
+    // hierarchical (not exact) culling: keeps more than FlashGS
+    fn modelled_pair_keep(&self) -> f64 {
+        0.80
+    }
 }
 
 #[cfg(test)]

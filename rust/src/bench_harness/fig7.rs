@@ -96,14 +96,7 @@ pub fn run_coalesced(
     let poses: Vec<_> = (0..4)
         .map(|i| {
             let theta = i as f32 / 4.0 * std::f32::consts::TAU;
-            crate::math::Camera::look_at(
-                crate::math::Vec3::new(8.0 * theta.cos(), 2.5, 8.0 * theta.sin()),
-                crate::math::Vec3::ZERO,
-                crate::math::Vec3::new(0.0, 1.0, 0.0),
-                std::f32::consts::FRAC_PI_3,
-                base.width / 2,
-                base.height / 2,
-            )
+            workloads::orbit_camera(theta, base.width / 2, base.height / 2)
         })
         .collect();
 

@@ -11,11 +11,13 @@
 //! | Fig. 6 (resolution sweep) | [`fig6`] | `gemm-gs bench-fig6` |
 //! | Fig. 7 (batch-size sweep) | [`fig7`] | `gemm-gs bench-fig7` |
 //! | Trajectory cold-vs-warm sweep (§9) | [`trajectory`] | `gemm-gs bench-trajectory` |
+//! | Soak: service under contention (§10) | [`soak`] | `gemm-gs bench-soak` |
 
 pub mod fig3;
 pub mod fig6;
 pub mod fig7;
 pub mod report;
+pub mod soak;
 pub mod table2;
 pub mod timing;
 pub mod trajectory;

@@ -42,6 +42,22 @@ pub fn default_camera_scaled(spec: &SceneSpec, res_scale: f64) -> Camera {
     }
 }
 
+/// The canonical serving-orbit camera: eye on a radius-8 ring at height
+/// 2.5, looking at the origin with a 60° fov. One definition shared by
+/// `gemm-gs serve`, fig7's coalescing sweep, and the soak harness, so
+/// every serving benchmark offers the same traffic shape — change it
+/// here and they all move together.
+pub fn orbit_camera(theta: f32, width: u32, height: u32) -> Camera {
+    Camera::look_at(
+        Vec3::new(8.0 * theta.cos(), 2.5, 8.0 * theta.sin()),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        width,
+        height,
+    )
+}
+
 /// A measured workload: statistics at simulation scale plus the
 /// full-scale profile the GPU model consumes.
 #[derive(Debug, Clone)]

@@ -1,4 +1,5 @@
-//! Cross-request batch coalescing (DESIGN.md §6).
+//! Cross-request batch coalescing (DESIGN.md §6), with an optional
+//! deadline-aware (EDF) pop order for the QoS subsystem (DESIGN.md §10).
 //!
 //! GEMM-GS's blending scales with the batch dimension (Figure 7), but a
 //! request-per-worker service never exposes that dimension: each worker
@@ -8,28 +9,59 @@
 //! The [`BatchScheduler`] converts the pull side of the request queue
 //! into a staged *admit → coalesce → execute* design: a worker drains up
 //! to `max_batch` **compatible** pending requests (same coalescing key —
-//! the service keys on scene + resolution) within a bounded `timeout`
-//! window and hands them downstream as one batch.
+//! the service keys on scene + resolution + accel method) within a
+//! bounded `timeout` window and hands them downstream as one batch.
 //!
 //! Properties the tests pin down:
 //!
 //! * `max_batch = 1` short-circuits — no window, no reordering — and is
 //!   byte-identical to the pre-batching per-request path.
-//! * Incompatible requests are never merged: the first key mismatch ends
-//!   the batch and the mismatching request (there is at most one, see
-//!   below) seeds the next batch, preserving admission order.
+//! * Incompatible requests are never merged: in FIFO mode the first key
+//!   mismatch ends the batch and the mismatching request seeds the next
+//!   batch, preserving admission order.
 //! * A partial batch is flushed when the window expires or the queue
 //!   disconnects — coalescing adds at most `timeout` of latency and
 //!   never deadlocks waiting for a full batch.
 //!
-//! The scheduler is generic over the queued item and its key so the
-//! coalescing logic is testable without spinning up render workers.
+//! **EDF mode** (`BatchPolicy::edf`, enabled by the coordinator when it
+//! runs with a QoS config): pops respect deadlines instead of admission
+//! order. The scheduler drains already-admitted requests into a
+//! *bounded* pending reorder buffer (once the buffer is full the
+//! admission channel keeps filling, so `queue_capacity` backpressure
+//! and `try_submit`'s queue-full shedding still work), seeds the batch
+//! with the earliest-deadline request (deadline-less requests sort
+//! last, FIFO among themselves), and fills with same-key requests in
+//! earliest-deadline-first order — EDF *within a coalescing key*, and
+//! urgent keys first across keys. EDF mode never sleeps out the
+//! coalescing window: a deadline-driven service must not add waiting
+//! latency to urgent work, so it batches only what is already queued.
+//! A starvation guard bounds how long any pending request (deadline-less
+//! or perpetually out-ranked) can be passed over: after
+//! [`STARVE_LIMIT`] pops it seeds the next batch regardless of urgency.
+//!
+//! The scheduler is generic over the queued item, its key, and its
+//! deadline accessor so the coalescing logic is testable without
+//! spinning up render workers.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-/// Coalescing knobs (the `serve --max-batch --batch-timeout-ms` flags).
+/// Most pops an EDF-pending request may be passed over before it is
+/// force-served (the anti-starvation bound: a deadline-less request
+/// waits at most this many batch executions behind deadlined traffic).
+const STARVE_LIMIT: u32 = 16;
+
+/// EDF pending-buffer bound, as a multiple of `max_batch` (floored at
+/// [`EDF_PENDING_MIN`]): large enough for a meaningful reorder window,
+/// small enough that the admission channel — not this buffer — is where
+/// queued requests accumulate, preserving `queue_capacity` semantics.
+const EDF_PENDING_FACTOR: usize = 8;
+const EDF_PENDING_MIN: usize = 64;
+
+/// Coalescing knobs (the `serve --max-batch --batch-timeout-ms` flags;
+/// `edf` is switched on by `CoordinatorConfig::qos`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatchPolicy {
     /// Largest number of requests merged into one batch. `1` disables
@@ -37,27 +69,42 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// How long a partially-filled batch may wait for more compatible
     /// requests before it is flushed. `ZERO` drains only what is already
-    /// queued, adding no latency.
+    /// queued, adding no latency. Ignored in EDF mode (which never
+    /// waits).
     pub timeout: Duration,
+    /// Earliest-deadline-first pops (DESIGN.md §10) instead of strict
+    /// admission order.
+    pub edf: bool,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 1, timeout: Duration::from_millis(2) }
+        BatchPolicy { max_batch: 1, timeout: Duration::from_millis(2), edf: false }
     }
 }
 
-/// Queue state shared by all workers: the admission channel plus at most
-/// one "stashed" item — a request that arrived inside some worker's
-/// coalescing window but didn't match its batch key. The stash always
-/// seeds the next batch, so admission order is preserved.
+/// One buffered item plus how many pops have passed it over (the
+/// starvation-guard counter; always 0 in FIFO mode).
+struct Aged<T> {
+    item: T,
+    passes: u32,
+}
+
+/// Queue state shared by all workers: the admission channel plus the
+/// pending reorder buffer. In FIFO mode the buffer holds at most one
+/// item — a request that arrived inside some worker's coalescing window
+/// but didn't match its batch key; it always seeds the next batch, so
+/// admission order is preserved. In EDF mode the buffer holds up to the
+/// pending bound, in admission order (the EDF sort is computed per pop
+/// and ties break FIFO).
 struct Inner<T> {
     rx: Receiver<T>,
-    stash: Option<T>,
+    pending: VecDeque<Aged<T>>,
 }
 
 /// Coalescing puller over an mpsc queue: workers call
-/// [`next_batch`](BatchScheduler::next_batch) instead of `recv`.
+/// [`next_batch`](BatchScheduler::next_batch) /
+/// [`poll_batch`](BatchScheduler::poll_batch) instead of `recv`.
 ///
 /// The whole drain (seed + window) runs under one lock, which serializes
 /// *coalescing* across workers but not *execution* — a worker releases
@@ -65,14 +112,16 @@ struct Inner<T> {
 /// (producers, bounded channel, backpressure preserved) → coalesce (one
 /// worker at a time, bounded by `timeout`) → execute (all workers in
 /// parallel).
-pub struct BatchScheduler<T, K, F>
+pub struct BatchScheduler<T, K, F, G = fn(&T) -> Option<Instant>>
 where
     K: PartialEq,
     F: Fn(&T) -> K,
+    G: Fn(&T) -> Option<Instant>,
 {
     inner: Mutex<Inner<T>>,
     policy: BatchPolicy,
     key_of: F,
+    deadline_of: G,
 }
 
 impl<T, K, F> BatchScheduler<T, K, F>
@@ -80,10 +129,32 @@ where
     K: PartialEq,
     F: Fn(&T) -> K,
 {
-    /// Wrap the consumer end of the admission queue. `key_of` computes
-    /// the coalescing key; only items with equal keys are merged.
+    /// Wrap the consumer end of the admission queue with no deadline
+    /// accessor (every item sorts "deadline-less"; EDF mode degenerates
+    /// to FIFO seeds). `key_of` computes the coalescing key; only items
+    /// with equal keys are merged.
     pub fn new(rx: Receiver<T>, policy: BatchPolicy, key_of: F) -> Self {
-        BatchScheduler { inner: Mutex::new(Inner { rx, stash: None }), policy, key_of }
+        BatchScheduler::with_deadlines(rx, policy, key_of, (|_| None) as fn(&T) -> Option<Instant>)
+    }
+}
+
+impl<T, K, F, G> BatchScheduler<T, K, F, G>
+where
+    K: PartialEq,
+    F: Fn(&T) -> K,
+    G: Fn(&T) -> Option<Instant>,
+{
+    /// Wrap the consumer end of the admission queue. `deadline_of`
+    /// exposes each item's deadline to the EDF pop order (items mapping
+    /// to `None` are served after every deadlined item, FIFO among
+    /// themselves, subject to the starvation guard).
+    pub fn with_deadlines(rx: Receiver<T>, policy: BatchPolicy, key_of: F, deadline_of: G) -> Self {
+        BatchScheduler {
+            inner: Mutex::new(Inner { rx, pending: VecDeque::new() }),
+            policy,
+            key_of,
+            deadline_of,
+        }
     }
 
     /// The configured policy.
@@ -91,22 +162,21 @@ where
         self.policy
     }
 
-    /// Block for the next batch: one seed item (stash first, then a
-    /// blocking `recv`) plus up to `max_batch - 1` compatible followers
-    /// drained within the `timeout` window. Returns `None` once the
-    /// queue has disconnected and the stash is empty — the worker's
-    /// signal to exit.
+    /// Block for the next batch: one seed item (pending buffer first,
+    /// then a blocking `recv`) plus up to `max_batch - 1` compatible
+    /// followers. Returns `None` once the queue has disconnected and
+    /// the pending buffer is empty — the worker's signal to exit.
     pub fn next_batch(&self) -> Option<Vec<T>> {
         let mut inner = self.inner.lock().expect("batch queue lock poisoned");
 
-        let seed = match inner.stash.take() {
-            Some(item) => item,
+        let seed = match inner.pending.pop_front() {
+            Some(aged) => aged,
             None => match inner.rx.recv() {
-                Ok(item) => item,
-                Err(_) => return None, // disconnected and nothing stashed
+                Ok(item) => Aged { item, passes: 0 },
+                Err(_) => return None, // disconnected and nothing pending
             },
         };
-        Some(self.fill_batch(&mut inner, seed))
+        Some(self.fill(&mut inner, seed))
     }
 
     /// Like [`next_batch`](Self::next_batch), but waits at most `idle`
@@ -135,18 +205,27 @@ where
             self.inner.lock().expect("batch queue lock poisoned")
         };
 
-        let seed = match inner.stash.take() {
-            Some(item) => item,
+        let seed = match inner.pending.pop_front() {
+            Some(aged) => aged,
             None => match inner.rx.recv_timeout(idle) {
-                Ok(item) => item,
+                Ok(item) => Aged { item, passes: 0 },
                 Err(RecvTimeoutError::Timeout) => return BatchPoll::Idle,
                 Err(RecvTimeoutError::Disconnected) => return BatchPoll::Closed,
             },
         };
-        BatchPoll::Batch(self.fill_batch(&mut inner, seed))
+        BatchPoll::Batch(self.fill(&mut inner, seed))
     }
 
-    /// The shared coalescing window: grow a batch from `seed` with up to
+    /// Grow a batch from `seed` under the configured policy.
+    fn fill(&self, inner: &mut Inner<T>, seed: Aged<T>) -> Vec<T> {
+        if self.policy.edf {
+            self.fill_batch_edf(inner, seed)
+        } else {
+            self.fill_batch(inner, seed.item)
+        }
+    }
+
+    /// The FIFO coalescing window: grow a batch from `seed` with up to
     /// `max_batch - 1` compatible followers within `timeout`.
     fn fill_batch(&self, inner: &mut Inner<T>, seed: T) -> Vec<T> {
         let max_batch = self.policy.max_batch.max(1);
@@ -181,10 +260,71 @@ where
                 batch.push(item);
             } else {
                 // incompatible: never merged — it seeds the next batch
-                inner.stash = Some(item);
+                inner.pending.push_front(Aged { item, passes: 0 });
                 break;
             }
         }
+        batch
+    }
+
+    /// The EDF pop (DESIGN.md §10): top up the bounded pending buffer
+    /// from the channel, re-seed with the earliest-deadline item overall
+    /// (or a starved one, see [`STARVE_LIMIT`]), and fill with same-key
+    /// items in EDF order. Never waits — urgency must not pay the
+    /// coalescing window.
+    fn fill_batch_edf(&self, inner: &mut Inner<T>, seed: Aged<T>) -> Vec<T> {
+        let max_batch = self.policy.max_batch.max(1);
+        let cap = (max_batch * EDF_PENDING_FACTOR).max(EDF_PENDING_MIN);
+        inner.pending.push_front(seed);
+        // bounded drain: once the reorder window is full, arrivals stay
+        // in the admission channel, so its `queue_capacity` bound (and
+        // the backpressure / try_submit shedding built on it) holds
+        while inner.pending.len() < cap {
+            match inner.rx.try_recv() {
+                Ok(item) => inner.pending.push_back(Aged { item, passes: 0 }),
+                Err(_) => break,
+            }
+        }
+
+        // sort key: deadlined before deadline-less, earlier deadlines
+        // first, admission order among equals. `far` only pads the
+        // `None` arm — the leading bool already ranks it last.
+        let far = Instant::now();
+        let urgency = |item: &T, idx: usize| -> (bool, Instant, usize) {
+            let d = (self.deadline_of)(item);
+            (d.is_none(), d.unwrap_or(far), idx)
+        };
+        // starvation guard first (oldest starved item wins), then EDF
+        let seed_at = inner
+            .pending
+            .iter()
+            .position(|aged| aged.passes >= STARVE_LIMIT)
+            .unwrap_or_else(|| {
+                (0..inner.pending.len())
+                    .min_by_key(|&i| urgency(&inner.pending[i].item, i))
+                    .expect("pending holds at least the seed")
+            });
+        let seed = inner.pending.remove(seed_at).expect("index in range").item;
+        let key = (self.key_of)(&seed);
+
+        let mut compatible: Vec<usize> = (0..inner.pending.len())
+            .filter(|&i| (self.key_of)(&inner.pending[i].item) == key)
+            .collect();
+        compatible.sort_by_key(|&i| urgency(&inner.pending[i].item, i));
+        compatible.truncate(max_batch - 1);
+        // remove back-to-front so earlier indices stay valid
+        compatible.sort_unstable();
+        let mut tail: Vec<(usize, T)> = Vec::with_capacity(compatible.len());
+        for &i in compatible.iter().rev() {
+            tail.push((i, inner.pending.remove(i).expect("index in range").item));
+        }
+        // everything left behind was passed over by this pop
+        for aged in inner.pending.iter_mut() {
+            aged.passes = aged.passes.saturating_add(1);
+        }
+        tail.sort_by_key(|e| urgency(&e.1, e.0));
+        let mut batch = vec![seed];
+        batch.extend(tail.into_iter().map(|(_, item)| item));
         batch
     }
 }
@@ -195,7 +335,7 @@ pub enum BatchPoll<T> {
     Batch(Vec<T>),
     /// Nothing arrived within the wait window; the queue is still live.
     Idle,
-    /// The queue has disconnected and nothing is stashed.
+    /// The queue has disconnected and nothing is pending.
     Closed,
 }
 
@@ -204,7 +344,12 @@ mod tests {
     use super::*;
     use std::sync::mpsc::{channel, sync_channel};
 
-    fn keyed(policy: BatchPolicy) -> (std::sync::mpsc::Sender<(char, u32)>, BatchScheduler<(char, u32), char, impl Fn(&(char, u32)) -> char>) {
+    fn keyed(
+        policy: BatchPolicy,
+    ) -> (
+        std::sync::mpsc::Sender<(char, u32)>,
+        BatchScheduler<(char, u32), char, impl Fn(&(char, u32)) -> char>,
+    ) {
         let (tx, rx) = channel();
         (tx, BatchScheduler::new(rx, policy, |item: &(char, u32)| item.0))
     }
@@ -212,7 +357,7 @@ mod tests {
     #[test]
     fn respects_max_batch() {
         let (tx, sched) =
-            keyed(BatchPolicy { max_batch: 4, timeout: Duration::ZERO });
+            keyed(BatchPolicy { max_batch: 4, timeout: Duration::ZERO, edf: false });
         for i in 0..10 {
             tx.send(('a', i)).unwrap();
         }
@@ -225,7 +370,7 @@ mod tests {
     #[test]
     fn incompatible_requests_are_not_merged() {
         let (tx, sched) =
-            keyed(BatchPolicy { max_batch: 8, timeout: Duration::ZERO });
+            keyed(BatchPolicy { max_batch: 8, timeout: Duration::ZERO, edf: false });
         for item in [('a', 0), ('a', 1), ('b', 2), ('a', 3)] {
             tx.send(item).unwrap();
         }
@@ -245,7 +390,7 @@ mod tests {
         let (tx, rx) = sync_channel::<(char, u32)>(8);
         let sched = BatchScheduler::new(
             rx,
-            BatchPolicy { max_batch: 8, timeout: Duration::from_millis(30) },
+            BatchPolicy { max_batch: 8, timeout: Duration::from_millis(30), edf: false },
             |item: &(char, u32)| item.0,
         );
         for i in 0..3 {
@@ -264,7 +409,7 @@ mod tests {
     #[test]
     fn max_batch_one_never_waits() {
         let (tx, sched) =
-            keyed(BatchPolicy { max_batch: 1, timeout: Duration::from_secs(60) });
+            keyed(BatchPolicy { max_batch: 1, timeout: Duration::from_secs(60), edf: false });
         tx.send(('a', 0)).unwrap();
         tx.send(('a', 1)).unwrap();
         // a 60 s window must be irrelevant at max_batch = 1
@@ -281,7 +426,7 @@ mod tests {
         let (tx, rx) = channel::<(char, u32)>();
         let sched = BatchScheduler::new(
             rx,
-            BatchPolicy { max_batch: 4, timeout: Duration::from_millis(500) },
+            BatchPolicy { max_batch: 4, timeout: Duration::from_millis(500), edf: false },
             |item: &(char, u32)| item.0,
         );
         tx.send(('a', 0)).unwrap();
@@ -298,7 +443,7 @@ mod tests {
     #[test]
     fn poll_batch_reports_idle_and_closed() {
         let (tx, sched) =
-            keyed(BatchPolicy { max_batch: 4, timeout: Duration::ZERO });
+            keyed(BatchPolicy { max_batch: 4, timeout: Duration::ZERO, edf: false });
         // empty but connected → Idle within the bounded wait
         assert!(matches!(sched.poll_batch(Duration::from_millis(1)), BatchPoll::Idle));
         tx.send(('a', 0)).unwrap();
@@ -314,7 +459,7 @@ mod tests {
     #[test]
     fn poll_batch_stash_seeds_before_the_wait() {
         let (tx, sched) =
-            keyed(BatchPolicy { max_batch: 8, timeout: Duration::ZERO });
+            keyed(BatchPolicy { max_batch: 8, timeout: Duration::ZERO, edf: false });
         for item in [('a', 0), ('b', 1)] {
             tx.send(item).unwrap();
         }
@@ -335,7 +480,7 @@ mod tests {
     #[test]
     fn disconnect_flushes_then_ends() {
         let (tx, sched) =
-            keyed(BatchPolicy { max_batch: 8, timeout: Duration::from_secs(60) });
+            keyed(BatchPolicy { max_batch: 8, timeout: Duration::from_secs(60), edf: false });
         tx.send(('a', 0)).unwrap();
         drop(tx);
         // disconnect must flush the partial batch immediately, not wait
@@ -344,5 +489,174 @@ mod tests {
         assert_eq!(sched.next_batch().unwrap().len(), 1);
         assert!(t0.elapsed() < Duration::from_secs(5));
         assert!(sched.next_batch().is_none());
+    }
+
+    // ---- EDF mode (DESIGN.md §10) ----
+
+    /// Items carry `(key, id, deadline-offset-ms)`; `None` = no deadline.
+    type Item = (char, u32, Option<u64>);
+
+    fn edf_sched(
+        max_batch: usize,
+    ) -> (
+        std::sync::mpsc::Sender<Item>,
+        BatchScheduler<Item, char, fn(&Item) -> char, Box<dyn Fn(&Item) -> Option<Instant> + Send>>,
+        Instant,
+    ) {
+        let (tx, rx) = channel::<Item>();
+        let base = Instant::now() + Duration::from_secs(60);
+        let deadline_of: Box<dyn Fn(&Item) -> Option<Instant> + Send> =
+            Box::new(move |item: &Item| item.2.map(|ms| base + Duration::from_millis(ms)));
+        let key_of: fn(&Item) -> char = |item| item.0;
+        let sched = BatchScheduler::with_deadlines(
+            rx,
+            BatchPolicy { max_batch, timeout: Duration::ZERO, edf: true },
+            key_of,
+            deadline_of,
+        );
+        (tx, sched, base)
+    }
+
+    #[test]
+    fn edf_orders_within_a_key_and_picks_the_urgent_key_first() {
+        let (tx, sched, _) = edf_sched(8);
+        // 'a' items admitted out of deadline order; one 'b' more urgent
+        // than every 'a'
+        for item in [
+            ('a', 0, Some(30u64)),
+            ('a', 1, Some(10)),
+            ('b', 2, Some(5)),
+            ('a', 3, Some(20)),
+        ] {
+            tx.send(item).unwrap();
+        }
+        // the urgent 'b' is served first even though it arrived third
+        match sched.poll_batch(Duration::from_millis(50)) {
+            BatchPoll::Batch(b) => {
+                assert_eq!(b.iter().map(|i| i.1).collect::<Vec<_>>(), vec![2]);
+            }
+            _ => panic!("expected a batch"),
+        }
+        // then the 'a's, earliest deadline first — not admission order
+        match sched.poll_batch(Duration::from_millis(50)) {
+            BatchPoll::Batch(b) => {
+                assert_eq!(b.iter().map(|i| i.1).collect::<Vec<_>>(), vec![1, 3, 0]);
+            }
+            _ => panic!("expected a batch"),
+        }
+    }
+
+    #[test]
+    fn edf_ranks_deadline_less_items_last_fifo_among_themselves() {
+        let (tx, sched, _) = edf_sched(8);
+        for item in [('a', 0, None), ('a', 1, None), ('a', 2, Some(10u64))] {
+            tx.send(item).unwrap();
+        }
+        match sched.poll_batch(Duration::from_millis(50)) {
+            BatchPoll::Batch(b) => {
+                assert_eq!(b.iter().map(|i| i.1).collect::<Vec<_>>(), vec![2, 0, 1]);
+            }
+            _ => panic!("expected a batch"),
+        }
+    }
+
+    #[test]
+    fn edf_respects_max_batch_and_keeps_leftovers() {
+        let (tx, sched, _) = edf_sched(2);
+        for item in [('a', 0, Some(30u64)), ('a', 1, Some(10)), ('a', 2, Some(20))] {
+            tx.send(item).unwrap();
+        }
+        drop(tx);
+        match sched.poll_batch(Duration::from_millis(50)) {
+            BatchPoll::Batch(b) => {
+                assert_eq!(b.iter().map(|i| i.1).collect::<Vec<_>>(), vec![1, 2]);
+            }
+            _ => panic!("expected a batch"),
+        }
+        // the leftover is served on the next pop, then the queue closes
+        match sched.poll_batch(Duration::from_millis(50)) {
+            BatchPoll::Batch(b) => {
+                assert_eq!(b.iter().map(|i| i.1).collect::<Vec<_>>(), vec![0]);
+            }
+            _ => panic!("expected the leftover"),
+        }
+        assert!(matches!(sched.poll_batch(Duration::from_millis(1)), BatchPoll::Closed));
+    }
+
+    #[test]
+    fn edf_never_merges_incompatible_keys() {
+        let (tx, sched, _) = edf_sched(8);
+        for item in [('a', 0, Some(10u64)), ('b', 1, Some(11)), ('a', 2, Some(12))] {
+            tx.send(item).unwrap();
+        }
+        match sched.poll_batch(Duration::from_millis(50)) {
+            BatchPoll::Batch(b) => {
+                assert_eq!(
+                    b.iter().map(|i| (i.0, i.1)).collect::<Vec<_>>(),
+                    vec![('a', 0), ('a', 2)]
+                );
+            }
+            _ => panic!("expected a batch"),
+        }
+        match sched.poll_batch(Duration::from_millis(50)) {
+            BatchPoll::Batch(b) => {
+                assert_eq!(b.iter().map(|i| i.1).collect::<Vec<_>>(), vec![1]);
+            }
+            _ => panic!("expected the b batch"),
+        }
+    }
+
+    #[test]
+    fn edf_starvation_guard_bounds_deadline_less_wait() {
+        // a deadline-less request under a continuous stream of deadlined
+        // traffic on a different key: the guard must serve it within
+        // STARVE_LIMIT pops, never let it wait forever
+        let (tx, sched, _) = edf_sched(4);
+        tx.send(('a', 0, None)).unwrap();
+        let mut served_at = None;
+        for round in 0..64u32 {
+            tx.send(('b', 1000 + round, Some(round as u64))).unwrap();
+            match sched.poll_batch(Duration::from_millis(50)) {
+                BatchPoll::Batch(b) => {
+                    if b.iter().any(|i| i.1 == 0) {
+                        served_at = Some(round);
+                        break;
+                    }
+                }
+                _ => panic!("expected a batch"),
+            }
+        }
+        let round = served_at.expect("deadline-less item starved past 64 pops");
+        assert!(
+            round <= STARVE_LIMIT + 2,
+            "guard too lazy: served only at pop {round}"
+        );
+    }
+
+    #[test]
+    fn edf_pending_buffer_is_bounded() {
+        // flood far more items than the reorder window: the scheduler
+        // must leave the excess in the channel (that is what preserves
+        // queue_capacity backpressure) and still serve everything
+        let (tx, sched, _) = edf_sched(1);
+        let total = 2 * EDF_PENDING_MIN + 17;
+        for i in 0..total {
+            tx.send(('a', i as u32, Some(i as u64))).unwrap();
+        }
+        drop(tx);
+        let mut served = 0usize;
+        loop {
+            match sched.poll_batch(Duration::from_millis(1)) {
+                BatchPoll::Batch(b) => {
+                    served += b.len();
+                    let cap = EDF_PENDING_FACTOR.max(EDF_PENDING_MIN); // max_batch = 1
+                    let pending = sched.inner.lock().unwrap().pending.len();
+                    assert!(pending <= cap, "pending buffer grew to {pending} > {cap}");
+                }
+                BatchPoll::Idle => {}
+                BatchPoll::Closed => break,
+            }
+        }
+        assert_eq!(served, total, "items lost between channel and pending buffer");
     }
 }

@@ -1,10 +1,44 @@
-//! Service metrics: lock-free counters + a log₂-bucketed latency
-//! histogram (microseconds), snapshotted for reports.
+//! Service metrics: lock-free counters + a fixed-bucket **log-linear**
+//! latency histogram (microseconds), snapshotted for reports.
+//!
+//! The histogram is HDR-style: each power-of-two octave is split into
+//! [`SUBS`] linear sub-buckets, so the p50/p95/p99 read off it carry at
+//! most ~25 % relative error (vs. 100 % for plain power-of-two buckets)
+//! while staying a fixed array of atomics — no locks on the record
+//! path. The QoS controller and the soak harness both read these
+//! percentiles (DESIGN.md §10); the `serve` stats line prints them.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-const BUCKETS: usize = 40; // 2^39 µs ≈ 6 days — plenty
+/// Power-of-two octaves covered: 2^40 µs ≈ 12.7 days — plenty.
+const OCTAVES: usize = 40;
+/// Linear sub-buckets per octave (= 2^SUB_BITS).
+const SUB_BITS: u32 = 2;
+const SUBS: usize = 1 << SUB_BITS;
+const BUCKETS: usize = OCTAVES * SUBS;
+
+/// Histogram bucket of a latency in microseconds.
+fn bucket_of(us: u64) -> usize {
+    let v = us.max(1);
+    let msb = 63 - v.leading_zeros() as usize; // floor(log2 v)
+    if msb < SUB_BITS as usize {
+        // 1, 2, 3 µs: exact singleton buckets below the first split octave
+        return (v - 1) as usize;
+    }
+    let sub = ((v >> (msb as u32 - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+    (SUBS * (msb - 1) + sub).min(BUCKETS - 1)
+}
+
+/// Inclusive upper edge (µs) of a bucket — what the percentile reports.
+fn bucket_upper_us(bucket: usize) -> u64 {
+    if bucket < SUBS {
+        return bucket as u64 + 1;
+    }
+    let msb = (bucket / SUBS + 1) as u32;
+    let sub = (bucket % SUBS) as u64;
+    (1u64 << msb) + (sub + 1) * (1u64 << (msb - SUB_BITS))
+}
 
 /// Shared, thread-safe metrics sink.
 #[derive(Debug)]
@@ -30,6 +64,16 @@ pub struct Metrics {
     // reused warm from the previous frame vs. planned cold
     plan_reuse: AtomicU64,
     plan_fallbacks: AtomicU64,
+    // QoS (DESIGN.md §10): requests deliberately dropped, frames served
+    // below full quality, the active quality-ladder rung (gauge; the
+    // deepest worker wins on simultaneous updates — a momentary race in
+    // a gauge, not an accounting error), and the EWMA of per-frame
+    // execute-stage cost normalized to rung 0 (µs; admission control's
+    // wait predictor)
+    shed: AtomicU64,
+    degraded_frames: AtomicU64,
+    rung: AtomicU64,
+    exec_ewma_us: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -51,6 +95,10 @@ impl Default for Metrics {
             prepared_models: AtomicU64::new(0),
             plan_reuse: AtomicU64::new(0),
             plan_fallbacks: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            degraded_frames: AtomicU64::new(0),
+            rung: AtomicU64::new(0),
+            exec_ewma_us: AtomicU64::new(0),
         }
     }
 }
@@ -70,8 +118,7 @@ impl Metrics {
         self.frames.fetch_add(1, Ordering::Relaxed);
         let us = latency.as_micros() as u64;
         self.latency_us_sum.fetch_add(us, Ordering::Relaxed);
-        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
-        self.histogram[bucket].fetch_add(1, Ordering::Relaxed);
+        self.histogram[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
         self.stage_pre_us
             .fetch_add(timings.preprocess.as_micros() as u64, Ordering::Relaxed);
         self.stage_dup_us
@@ -114,6 +161,45 @@ impl Metrics {
         self.plan_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one shed request (DESIGN.md §10). Shed is policy, not
+    /// failure: it does not touch the `errors` counter.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` frames delivered below full quality (rung > 0).
+    pub fn record_degraded(&self, n: u64) {
+        self.degraded_frames.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Publish the active quality-ladder rung (gauge).
+    pub fn set_rung(&self, rung: u64) {
+        self.rung.store(rung, Ordering::Relaxed);
+    }
+
+    /// Feed one frame's execute-stage cost, normalized to rung 0 (the
+    /// worker divides out the ladder's modelled cost ratio before
+    /// reporting). EWMA with α = 1/5 — load-tracking without a lock;
+    /// the read-modify-write races only against other EWMA updates and
+    /// a lost sample is noise, not drift.
+    pub fn record_exec(&self, per_frame: Duration) {
+        let sample = per_frame.as_micros() as u64;
+        let old = self.exec_ewma_us.load(Ordering::Relaxed);
+        let new = if old == 0 { sample } else { (old * 4 + sample) / 5 };
+        self.exec_ewma_us.store(new, Ordering::Relaxed);
+    }
+
+    /// Current rung-0-equivalent per-frame execute estimate
+    /// (`Duration::ZERO` until the first frame lands).
+    pub fn exec_estimate(&self) -> Duration {
+        Duration::from_micros(self.exec_ewma_us.load(Ordering::Relaxed))
+    }
+
+    /// Requests currently admitted but not yet executing.
+    pub fn queue_depth_now(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
     /// Queue depth bookkeeping.
     pub fn enqueue(&self) {
         self.queue_depth.fetch_add(1, Ordering::Relaxed);
@@ -138,11 +224,10 @@ impl Metrics {
             for (i, &c) in hist.iter().enumerate() {
                 seen += c;
                 if seen >= target {
-                    // upper edge of the log bucket
-                    return Duration::from_micros(1u64 << (i + 1));
+                    return Duration::from_micros(bucket_upper_us(i));
                 }
             }
-            Duration::from_micros(1u64 << BUCKETS)
+            Duration::from_micros(bucket_upper_us(BUCKETS - 1))
         };
         MetricsSnapshot {
             frames,
@@ -166,6 +251,9 @@ impl Metrics {
             prepared_models: self.prepared_models.load(Ordering::Relaxed),
             plan_reuse: self.plan_reuse.load(Ordering::Relaxed),
             plan_fallbacks: self.plan_fallbacks.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            degraded_frames: self.degraded_frames.load(Ordering::Relaxed),
+            rung: self.rung.load(Ordering::Relaxed),
             mean_batch_size: {
                 let b = self.batches.load(Ordering::Relaxed);
                 if b == 0 {
@@ -185,7 +273,7 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub queue_depth: u64,
     pub mean_latency: Duration,
-    /// Log-bucket upper bounds — coarse (powers of two) but lock-free.
+    /// Log-linear bucket upper bounds (≤ ~25 % high) — lock-free.
     pub p50: Duration,
     pub p95: Duration,
     pub p99: Duration,
@@ -207,6 +295,12 @@ pub struct MetricsSnapshot {
     pub plan_reuse: u64,
     /// Trajectory-session frames planned cold (first frames + fallbacks).
     pub plan_fallbacks: u64,
+    /// Requests shed by QoS policy (DESIGN.md §10) — never in `errors`.
+    pub shed: u64,
+    /// Frames delivered below full quality (quality-ladder rung > 0).
+    pub degraded_frames: u64,
+    /// The active quality-ladder rung (gauge; 0 = full quality).
+    pub rung: u64,
 }
 
 impl MetricsSnapshot {
@@ -257,6 +351,53 @@ mod tests {
         assert_eq!(s.mean_latency, Duration::ZERO);
         assert_eq!(s.p99, Duration::ZERO);
         assert_eq!(s.blend_fraction(), 0.0);
+        assert_eq!((s.shed, s.degraded_frames, s.rung), (0, 0, 0));
+    }
+
+    #[test]
+    fn buckets_are_monotone_and_cover_the_range() {
+        // bucket index is non-decreasing in the value, and every
+        // value's bucket upper edge bounds the value itself
+        let mut last = 0usize;
+        for us in (1..4u64).chain((2..36).flat_map(|m| {
+            let base = 1u64 << m;
+            [base, base + base / 3, base + base / 2, 2 * base - 1]
+        })) {
+            let b = bucket_of(us);
+            assert!(b >= last, "bucket regressed at {us} µs: {b} < {last}");
+            assert!(
+                bucket_upper_us(b) >= us,
+                "upper edge {} below value {us}",
+                bucket_upper_us(b)
+            );
+            // log-linear promise: the edge overshoots by at most ~25 %
+            assert!(
+                (bucket_upper_us(b) as f64) <= us as f64 * 1.34 + 1.0,
+                "edge {} too far above {us}",
+                bucket_upper_us(b)
+            );
+            last = b;
+        }
+        // the clamp: absurd values land in the last bucket, not panic
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentiles_carry_subbucket_resolution() {
+        // 100 frames at 48 ms, 1 at 90 ms: plain power-of-two buckets
+        // would report p50 = 65.5 ms; log-linear resolves ~49 ms
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.record_frame(Duration::from_millis(48), &timings(1));
+        }
+        m.record_frame(Duration::from_millis(90), &timings(1));
+        let s = m.snapshot();
+        assert!(
+            s.p50 >= Duration::from_millis(48) && s.p50 <= Duration::from_millis(57),
+            "p50 {:?} lost sub-bucket resolution",
+            s.p50
+        );
+        assert!(s.p99 >= Duration::from_millis(48));
     }
 
     #[test]
@@ -297,12 +438,42 @@ mod tests {
     }
 
     #[test]
+    fn qos_counters_track() {
+        let m = Metrics::new();
+        m.record_shed();
+        m.record_shed();
+        m.record_degraded(3);
+        m.set_rung(2);
+        let s = m.snapshot();
+        assert_eq!((s.shed, s.degraded_frames, s.rung), (2, 3, 2));
+        // shed is policy, not failure
+        assert_eq!(s.errors, 0);
+    }
+
+    #[test]
+    fn exec_ewma_converges() {
+        let m = Metrics::new();
+        assert_eq!(m.exec_estimate(), Duration::ZERO);
+        m.record_exec(Duration::from_millis(10));
+        assert_eq!(m.exec_estimate(), Duration::from_millis(10));
+        for _ in 0..64 {
+            m.record_exec(Duration::from_millis(2));
+        }
+        let est = m.exec_estimate();
+        assert!(
+            est > Duration::from_millis(1) && est < Duration::from_millis(3),
+            "EWMA {est:?} did not converge toward the new level"
+        );
+    }
+
+    #[test]
     fn queue_depth_tracks() {
         let m = Metrics::new();
         m.enqueue();
         m.enqueue();
         m.dequeue();
         assert_eq!(m.snapshot().queue_depth, 1);
+        assert_eq!(m.queue_depth_now(), 1);
     }
 
     #[test]

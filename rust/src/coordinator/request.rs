@@ -4,7 +4,7 @@ use crate::accel::AccelKind;
 use crate::math::Camera;
 use crate::pipeline::render::{FrameStats, Image, StageTimings, TileBlend};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Which blending backend a request (or worker) uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,6 +99,21 @@ pub struct RenderRequest {
     /// (DESIGN.md §9): the coordinator routes it to the session's
     /// sticky worker instead of the shared coalescing queue.
     pub session: Option<SessionKey>,
+    /// Latest instant by which the caller still wants this frame
+    /// (DESIGN.md §10). `Some` opts the request into deadline-aware
+    /// service: EDF ordering at the batch scheduler, degradation along
+    /// the quality ladder when the coordinator runs with
+    /// `CoordinatorConfig::qos`, and an explicit *shed* response —
+    /// never a late render — when even the cheapest rung cannot meet
+    /// it. `None` requests are never shed *by deadline policy* (only a
+    /// full queue under [`try_submit`](super::Coordinator::try_submit)
+    /// can shed them); on a non-QoS service they behave exactly as
+    /// before, while on a QoS service they rank behind deadlined work
+    /// in the pop order (the scheduler's starvation guard bounds how
+    /// long they can be passed over, `coordinator::batch`) and ride
+    /// whatever ladder rung their worker is currently at — so they may
+    /// come back degraded (`RenderResponse::rung > 0`) under overload.
+    pub deadline: Option<Instant>,
 }
 
 impl RenderRequest {
@@ -110,6 +125,7 @@ impl RenderRequest {
             camera,
             accel: AccelKind::Vanilla,
             session: None,
+            deadline: None,
         }
     }
 
@@ -117,6 +133,18 @@ impl RenderRequest {
     pub fn with_session(mut self, session: u64, seq: u64) -> Self {
         self.session = Some(SessionKey { session, seq });
         self
+    }
+
+    /// Give this request an absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Give this request a deadline `slo` from now (the common caller
+    /// spelling: "I need this frame within the SLO").
+    pub fn with_slo(self, slo: Duration) -> Self {
+        self.with_deadline(Instant::now() + slo)
     }
 
     /// Admission-time validation (DESIGN.md §9): malformed requests —
@@ -152,6 +180,15 @@ pub struct RenderResponse {
     pub latency: Duration,
     /// Error message when rendering failed.
     pub error: Option<String>,
+    /// Quality-ladder rung the frame was rendered at (DESIGN.md §10):
+    /// `0` = full quality (always, when the service runs without QoS);
+    /// higher = degraded, with the image at the rung's resolution.
+    pub rung: usize,
+    /// True when the request was *shed* — deliberately dropped by QoS
+    /// admission or deadline policy, not failed. `error` carries the
+    /// `shed: …` reason; shed responses count in the `shed` metric,
+    /// never in `errors`.
+    pub shed: bool,
 }
 
 impl RenderResponse {
@@ -164,7 +201,15 @@ impl RenderResponse {
             stats: FrameStats::default(),
             latency,
             error: Some(error),
+            rung: 0,
+            shed: false,
         }
+    }
+
+    /// A shed response: the QoS policy dropped the request on purpose
+    /// (deadline unmeetable, or admission queue full under `try_submit`).
+    pub fn shed(id: u64, latency: Duration, reason: String) -> Self {
+        RenderResponse { shed: true, ..RenderResponse::failure(id, latency, reason) }
     }
 }
 
@@ -218,6 +263,33 @@ mod tests {
         let mut nan = RenderRequest::new(3, "train", camera);
         nan.camera.view.m[0] = f32::NAN;
         assert!(nan.validate().is_err());
+    }
+
+    #[test]
+    fn deadline_and_shed_response_plumbing() {
+        let camera = crate::math::Camera::look_at(
+            crate::math::Vec3::new(0.0, 1.0, -8.0),
+            crate::math::Vec3::ZERO,
+            crate::math::Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            160,
+            96,
+        );
+        let plain = RenderRequest::new(0, "train", camera);
+        assert_eq!(plain.deadline, None);
+        let slo = Duration::from_millis(25);
+        let before = Instant::now();
+        let tagged = RenderRequest::new(1, "train", camera).with_slo(slo);
+        let d = tagged.deadline.expect("with_slo must set a deadline");
+        assert!(d >= before + slo && d <= Instant::now() + slo);
+        // a deadline changes nothing about batching compatibility
+        assert_eq!(plain.coalesce_key(), tagged.coalesce_key());
+
+        let shed = RenderResponse::shed(7, Duration::from_millis(1), "shed: test".into());
+        assert!(shed.shed && shed.image.is_none() && shed.rung == 0);
+        assert!(shed.error.as_deref().unwrap().starts_with("shed:"));
+        let fail = RenderResponse::failure(8, Duration::ZERO, "boom".into());
+        assert!(!fail.shed);
     }
 
     #[test]

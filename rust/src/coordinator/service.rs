@@ -21,6 +21,15 @@
 //! the scene store caches `prepare_model` outputs per `(scene, method)`
 //! so the k-means/VQ cost is paid on the first request and every later
 //! request — from any worker — reuses it.
+//!
+//! With `CoordinatorConfig::qos` set the service runs **SLO-driven**
+//! (DESIGN.md §10): the shared queue pops earliest-deadline-first,
+//! requests whose deadline cannot be met even at the quality ladder's
+//! cheapest rung are *shed* with an explicit response (at admission
+//! when the queue alone already blows the deadline, at pop time
+//! otherwise), and each worker's closed-loop [`RungController`] moves
+//! the active rung against its rolling latency window — degrading
+//! resolution/method under overload, recovering when load drops.
 
 use super::batch::{BatchPolicy, BatchPoll, BatchScheduler};
 use super::metrics::Metrics;
@@ -30,13 +39,16 @@ use crate::math::Camera;
 use crate::pipeline::batch::render_frames;
 use crate::pipeline::render::{FrameStats, Image, RenderConfig, StageTimings, TileBlend};
 use crate::pipeline::trajectory::{TrajectoryConfig, TrajectorySession};
+use crate::qos::{QosConfig, RungController};
 use crate::runtime::tiled_render::{
     render_frames_tiled, render_frames_tiled_with_plans, TILED_ENTRY,
 };
 use crate::runtime::RuntimeClient;
 use crate::scene::gaussian::GaussianCloud;
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -77,6 +89,11 @@ pub struct CoordinatorConfig {
     /// Most trajectory sessions one worker keeps warm simultaneously;
     /// the oldest session's plan cache is evicted beyond this.
     pub max_sessions_per_worker: usize,
+    /// `Some` turns the service SLO-driven (DESIGN.md §10): EDF pops,
+    /// deadline shedding, and closed-loop degradation along the quality
+    /// ladder. `None` (the default) is the pre-QoS best-effort service,
+    /// byte-for-byte.
+    pub qos: Option<QosConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -90,6 +107,7 @@ impl Default for CoordinatorConfig {
             batch_timeout: Duration::from_millis(2),
             trajectory: TrajectoryConfig::default(),
             max_sessions_per_worker: 16,
+            qos: None,
         }
     }
 }
@@ -106,6 +124,11 @@ struct Job {
 /// The rule is owned by [`RenderRequest::coalesce_key`].
 fn job_key(job: &Job) -> (String, (u32, u32), AccelKind) {
     job.request.coalesce_key()
+}
+
+/// Deadline accessor for the scheduler's EDF mode (DESIGN.md §10).
+fn job_deadline(job: &Job) -> Option<Instant> {
+    job.request.deadline
 }
 
 /// The scheduler type workers share (spelled out once — the closure in
@@ -245,8 +268,9 @@ fn execute_batch(
         .collect())
 }
 
-/// Deliver one rendered frame and record its metrics.
-fn respond(metrics: &Metrics, job: &Job, out: ExecutedFrame) {
+/// Deliver one rendered frame and record its metrics. `rung` is the
+/// quality-ladder rung it was rendered at (0 outside QoS).
+fn respond(metrics: &Metrics, job: &Job, out: ExecutedFrame, rung: usize) -> Duration {
     let latency = job.enqueued.elapsed();
     metrics.record_frame(latency, &out.timings);
     let _ = job.respond.send(RenderResponse {
@@ -256,7 +280,37 @@ fn respond(metrics: &Metrics, job: &Job, out: ExecutedFrame) {
         stats: out.stats,
         latency,
         error: None,
+        rung,
+        shed: false,
     });
+    latency
+}
+
+/// Shed one request (DESIGN.md §10): an explicit policy drop, delivered
+/// as a `shed` response and counted in the `shed` metric — never as an
+/// error, never as a late render.
+fn shed_job(metrics: &Metrics, job: &Job, why: &str) {
+    metrics.record_shed();
+    let _ = job.respond.send(RenderResponse::shed(
+        job.request.id,
+        job.enqueued.elapsed(),
+        format!("shed: {why}"),
+    ));
+}
+
+/// One worker's QoS state: the shared policy plus its own closed-loop
+/// rung controller (per-worker, as each worker's latency stream is what
+/// its controller steers on).
+struct WorkerQos {
+    cfg: QosConfig,
+    controller: RungController,
+}
+
+impl WorkerQos {
+    fn new(cfg: QosConfig) -> WorkerQos {
+        let controller = RungController::new(cfg.slo, cfg.ladder.len(), cfg.controller);
+        WorkerQos { cfg, controller }
+    }
 }
 
 /// One worker-held trajectory session: the warm plan cache plus the
@@ -318,6 +372,16 @@ fn handle_session_job(
     job: Job,
 ) {
     metrics.dequeue();
+    // Deadline expiry holds on the sticky path too: a session frame
+    // whose deadline passed in queue is shed, never rendered late.
+    // (Degradation does not apply here — sessions always render full
+    // quality, since warm plans are resolution-specific; DESIGN.md §10.)
+    if let Some(d) = job.request.deadline {
+        if Instant::now() >= d {
+            shed_job(metrics, &job, "deadline expired before execution");
+            return;
+        }
+    }
     let key = job.request.session.expect("session job routed without a session key");
     let accel = job.request.accel;
     let scene = &job.request.scene;
@@ -388,6 +452,7 @@ fn handle_session_job(
                     timings: out.timings,
                     stats: out.stats,
                 },
+                0, // trajectory sessions always render full quality
             );
         }
         Err(e) => fail(format!("render failed: {e:#}")),
@@ -396,19 +461,83 @@ fn handle_session_job(
 
 /// Execute one coalesced batch pulled from the shared queue (extracted
 /// from the worker loop so the loop can interleave the sticky session
-/// queue — the logic is unchanged from the pre-trajectory service).
+/// queue). Without QoS the logic is unchanged from the pre-trajectory
+/// service; with QoS (DESIGN.md §10) it first sheds requests whose
+/// deadline is unmeetable, then renders the survivors at one ladder
+/// rung — the controller's rung, pushed deeper if the tightest deadline
+/// in the batch needs a cheaper point — and feeds the controller the
+/// resulting latencies.
 fn handle_shared_batch(
     executor: &mut Executor,
     store: &SceneStore,
     metrics: &Metrics,
     render_cfg: &RenderConfig,
+    qos: &mut Option<WorkerQos>,
     batch: Vec<Job>,
 ) {
     for _ in 0..batch.len() {
         metrics.dequeue();
     }
-    let fail_all = |msg: String| {
-        for job in &batch {
+    // Deadline triage. Expired requests are shed unconditionally —
+    // rendering them would be late no matter the rung. With QoS, the
+    // execute-cost estimate then sheds requests that cannot fit even at
+    // the cheapest rung, and picks the batch rung: the controller's,
+    // degraded further if some survivor's deadline needs it.
+    let now = Instant::now();
+    let mut live: Vec<Job> = Vec::with_capacity(batch.len());
+    for job in batch {
+        match job.request.deadline {
+            Some(d) if now >= d => shed_job(metrics, &job, "deadline expired before execution"),
+            _ => live.push(job),
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    // one method per batch (the coalescing key guarantees it) — the
+    // ladder's cost ratios are per request method, since `None` rungs
+    // inherit it (qos::ladder)
+    let request_accel = live[0].request.accel;
+    let mut rung = 0usize;
+    if let Some(q) = qos.as_mut() {
+        rung = q.controller.rung();
+        let est_full = metrics.exec_estimate();
+        if !est_full.is_zero() {
+            let ladder = &q.cfg.ladder;
+            let mut fitting: Vec<Job> = Vec::with_capacity(live.len());
+            for job in live {
+                if let Some(d) = job.request.deadline {
+                    let remaining = d.saturating_duration_since(now);
+                    let mut r = rung;
+                    while est_full.mul_f64(ladder.cost_ratio_for(r, request_accel)) > remaining
+                        && r + 1 < ladder.len()
+                    {
+                        r += 1;
+                    }
+                    if est_full.mul_f64(ladder.cost_ratio_for(r, request_accel)) > remaining {
+                        shed_job(
+                            metrics,
+                            &job,
+                            "deadline unmeetable even at the cheapest quality rung",
+                        );
+                        continue;
+                    }
+                    rung = rung.max(r);
+                }
+                fitting.push(job);
+            }
+            live = fitting;
+        }
+        // the rung actually rendered: never a point the ladder prices
+        // higher than a shallower one for this request's method
+        rung = q.cfg.ladder.effective_rung(rung, request_accel);
+    }
+    if live.is_empty() {
+        return;
+    }
+
+    let fail_all = |live: &[Job], msg: String| {
+        for job in live {
             metrics.record_error();
             let _ = job.respond.send(RenderResponse::failure(
                 job.request.id,
@@ -417,21 +546,56 @@ fn handle_shared_batch(
             ));
         }
     };
-    let accel = batch[0].request.accel;
-    let Some(cloud) = store.cloud_for(&batch[0].request.scene, accel) else {
-        fail_all(format!("unknown scene '{}'", batch[0].request.scene));
+    // Resolve the rung's operating point: camera scaled to the rung's
+    // resolution (rung 0 passes the camera through bitwise — the
+    // byte-identity invariant of tests/e2e_qos.rs), accel possibly
+    // overridden. The prepared-model cache serves whichever method the
+    // rung lands on (DESIGN.md §8).
+    let (accel, cameras): (AccelKind, Vec<Camera>) = match qos.as_ref() {
+        Some(q) => {
+            let accel = q.cfg.ladder.apply(rung, &live[0].request.camera, request_accel).1;
+            let cams = live
+                .iter()
+                .map(|j| q.cfg.ladder.apply(rung, &j.request.camera, request_accel).0)
+                .collect();
+            (accel, cams)
+        }
+        None => (request_accel, live.iter().map(|j| j.request.camera).collect()),
+    };
+    let Some(cloud) = store.cloud_for(&live[0].request.scene, accel) else {
+        fail_all(&live, format!("unknown scene '{}'", live[0].request.scene));
         return;
     };
-    metrics.record_batch(batch.len());
-    let cameras: Vec<Camera> = batch.iter().map(|j| j.request.camera).collect();
+    metrics.record_batch(live.len());
     let cfg = render_cfg.clone().with_accel(accel.instantiate());
+    let t_exec = Instant::now();
     match execute_batch(executor, &cloud, &cameras, &cfg) {
         Ok(outs) => {
-            for (job, out) in batch.iter().zip(outs) {
-                respond(metrics, job, out);
+            let per_frame = t_exec.elapsed() / live.len() as u32;
+            if let Some(q) = qos.as_ref() {
+                // normalize the sample to rung 0 so the estimate stays a
+                // full-quality cost whatever rung this batch ran at
+                metrics.record_exec(
+                    per_frame
+                        .div_f64(q.cfg.ladder.cost_ratio_for(rung, request_accel).max(1e-6)),
+                );
+                metrics.set_rung(rung as u64);
+                if rung > 0 {
+                    metrics.record_degraded(live.len() as u64);
+                }
+            } else {
+                metrics.record_exec(per_frame);
+            }
+            for (job, out) in live.iter().zip(outs) {
+                let latency = respond(metrics, job, out, rung);
+                if let Some(q) = qos.as_mut() {
+                    if let Some(moved) = q.controller.observe(latency) {
+                        metrics.set_rung(moved as u64);
+                    }
+                }
             }
         }
-        Err(e) => fail_all(format!("render failed: {e:#}")),
+        Err(e) => fail_all(&live, format!("render failed: {e:#}")),
     }
 }
 
@@ -445,6 +609,11 @@ pub struct Coordinator {
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     store: Arc<SceneStore>,
+    /// Admission-control inputs when the service runs with QoS
+    /// (DESIGN.md §10): the ladder (its cheapest cost ratio is per
+    /// request method) and the worker count, pricing the "can this
+    /// deadline possibly be met?" check at submit time.
+    admission: Option<(crate::qos::QualityLadder, usize)>,
 }
 
 impl Coordinator {
@@ -456,10 +625,16 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let store = Arc::new(SceneStore::new(scenes, Arc::clone(&metrics)));
         let (tx, rx) = sync_channel::<Job>(cfg.queue_capacity);
-        let policy =
-            BatchPolicy { max_batch: cfg.max_batch.max(1), timeout: cfg.batch_timeout };
+        let policy = BatchPolicy {
+            max_batch: cfg.max_batch.max(1),
+            timeout: cfg.batch_timeout,
+            // deadline-aware service pops earliest-deadline-first
+            edf: cfg.qos.is_some(),
+        };
         let key_of: fn(&Job) -> (String, (u32, u32), AccelKind) = job_key;
-        let scheduler: Arc<JobScheduler> = Arc::new(BatchScheduler::new(rx, policy, key_of));
+        let deadline_of: fn(&Job) -> Option<Instant> = job_deadline;
+        let scheduler: Arc<JobScheduler> =
+            Arc::new(BatchScheduler::with_deadlines(rx, policy, key_of, deadline_of));
         let worker_count = cfg.workers.max(1);
         let mut sticky_txs = Vec::with_capacity(worker_count);
         let mut sticky_rxs = Vec::with_capacity(worker_count);
@@ -477,6 +652,7 @@ impl Coordinator {
             let backend = cfg.backend;
             let tcfg = cfg.trajectory;
             let max_sessions = cfg.max_sessions_per_worker;
+            let qos_cfg = cfg.qos.clone();
             workers.push(std::thread::spawn(move || {
                 // executor created in-thread (PJRT handles are not Send);
                 // ArtifactGemm upgrades to the pooled tiled path when the
@@ -499,6 +675,7 @@ impl Coordinator {
                     },
                 };
                 let mut sessions = SessionCache::new(max_sessions);
+                let mut worker_qos: Option<WorkerQos> = qos_cfg.map(WorkerQos::new);
                 let mut sticky_open = true;
                 loop {
                     // session frames first: they are ordered and their
@@ -541,6 +718,7 @@ impl Coordinator {
                             &store,
                             &metrics,
                             &render_cfg,
+                            &mut worker_qos,
                             batch,
                         ),
                         BatchPoll::Idle => {}
@@ -567,17 +745,35 @@ impl Coordinator {
                 }
             }));
         }
-        Coordinator { tx: Some(tx), sticky_txs, workers, metrics, store }
+        let admission = cfg.qos.as_ref().map(|q| (q.ladder.clone(), worker_count));
+        Coordinator { tx: Some(tx), sticky_txs, workers, metrics, store, admission }
     }
 
     /// Submit a request; returns the response channel. Blocks when the
     /// queue is full (backpressure). Malformed requests (zero
     /// resolution, non-finite pose/intrinsics) are rejected at
     /// admission with an error response — they never reach a worker.
+    /// Deadlined requests that already cannot be met (expired, or — on
+    /// a QoS service — the queue alone outlasts the deadline even at
+    /// the cheapest rung) are shed at admission (DESIGN.md §10).
     /// If the service has no live workers (e.g. every worker failed
     /// backend init), the returned channel carries an error
     /// [`RenderResponse`] instead of panicking.
     pub fn submit(&self, request: RenderRequest) -> Receiver<RenderResponse> {
+        self.submit_inner(request, true)
+    }
+
+    /// [`submit`](Self::submit) without blocking: when the admission
+    /// queue is full the request is *shed* (a `shed` response, counted
+    /// in the `shed` metric) instead of waiting for capacity. This is
+    /// what an open-loop load generator needs (`qos::soak`) — offered
+    /// load must keep arriving at its own rate, and a saturated service
+    /// must answer with policy, not backpressure on the generator.
+    pub fn try_submit(&self, request: RenderRequest) -> Receiver<RenderResponse> {
+        self.submit_inner(request, false)
+    }
+
+    fn submit_inner(&self, request: RenderRequest, blocking: bool) -> Receiver<RenderResponse> {
         let (respond, rx) = sync_channel(1);
         if let Err(msg) = request.validate() {
             self.metrics.record_error();
@@ -588,34 +784,92 @@ impl Coordinator {
             ));
             return rx;
         }
+        if let Some(deadline) = request.deadline {
+            let now = Instant::now();
+            let shed_reason = if now >= deadline {
+                Some("shed: deadline already expired at admission".to_string())
+            } else if let Some((ladder, workers)) = &self.admission {
+                // predictive admission control: price the queued work
+                // ahead of this request at the cheapest rung (for this
+                // request's method — `None` rungs inherit it), spread
+                // across the workers; if that alone outlasts the
+                // deadline, shedding now is strictly better than
+                // shedding after the request has queued
+                let min_ratio = ladder.min_cost_ratio_for(request.accel);
+                let est = self.metrics.exec_estimate();
+                let depth = self.metrics.queue_depth_now();
+                if !est.is_zero()
+                    && now
+                        + est.mul_f64(min_ratio * (depth as f64 / *workers as f64 + 1.0))
+                        > deadline
+                {
+                    Some(format!(
+                        "shed: {depth} queued requests already outlast the deadline \
+                         at the cheapest quality rung"
+                    ))
+                } else {
+                    None
+                }
+            } else {
+                None
+            };
+            if let Some(reason) = shed_reason {
+                self.metrics.record_shed();
+                let _ = respond.send(RenderResponse::shed(request.id, Duration::ZERO, reason));
+                return rx;
+            }
+        }
         self.metrics.enqueue();
         let job = Job { request, enqueued: Instant::now(), respond };
         // session frames route to their sticky worker's own queue
         // (DESIGN.md §9); everything else goes through the shared
         // coalescing queue
+        enum NotSent {
+            Dead(Job),
+            Full(Job),
+        }
+        let send = |tx: &SyncSender<Job>, job: Job| -> Option<NotSent> {
+            if blocking {
+                tx.send(job).err().map(|e| NotSent::Dead(e.0))
+            } else {
+                match tx.try_send(job) {
+                    Ok(()) => None,
+                    Err(TrySendError::Full(job)) => Some(NotSent::Full(job)),
+                    Err(TrySendError::Disconnected(job)) => Some(NotSent::Dead(job)),
+                }
+            }
+        };
         let undeliverable = match job.request.session {
             Some(key) if !self.sticky_txs.is_empty() => {
                 let w = (key.session % self.sticky_txs.len() as u64) as usize;
-                self.sticky_txs[w].send(job).err().map(|e| e.0)
+                send(&self.sticky_txs[w], job)
             }
-            Some(_) => Some(job),
+            Some(_) => Some(NotSent::Dead(job)),
             None => match self.tx.as_ref() {
-                Some(tx) => tx.send(job).err().map(|e| e.0),
-                None => Some(job),
+                Some(tx) => send(tx, job),
+                None => Some(NotSent::Dead(job)),
             },
         };
-        if let Some(job) = undeliverable {
-            // all workers exited, so the queue receiver is gone; fail
-            // the request through its own response channel
-            self.metrics.dequeue();
-            self.metrics.record_error();
-            let _ = job.respond.send(RenderResponse::failure(
-                job.request.id,
-                job.enqueued.elapsed(),
-                "render service unavailable: all workers exited \
-                 (backend initialization failed?)"
-                    .to_string(),
-            ));
+        match undeliverable {
+            None => {}
+            Some(NotSent::Full(job)) => {
+                // non-blocking admission against a full queue: shed
+                self.metrics.dequeue();
+                shed_job(&self.metrics, &job, "admission queue full");
+            }
+            Some(NotSent::Dead(job)) => {
+                // all workers exited, so the queue receiver is gone;
+                // fail the request through its own response channel
+                self.metrics.dequeue();
+                self.metrics.record_error();
+                let _ = job.respond.send(RenderResponse::failure(
+                    job.request.id,
+                    job.enqueued.elapsed(),
+                    "render service unavailable: all workers exited \
+                     (backend initialization failed?)"
+                        .to_string(),
+                ));
+            }
         }
         rx
     }
@@ -941,6 +1195,108 @@ mod tests {
         let m = coord.metrics();
         assert_eq!(m.errors, 2);
         assert_eq!(m.frames, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_admission() {
+        let (coord, camera) = test_setup(1);
+        let past = Instant::now() - Duration::from_millis(1);
+        let resp =
+            coord.render_sync(RenderRequest::new(1, "train", camera).with_deadline(past));
+        assert!(resp.shed, "expired deadline must shed, got {:?}", resp.error);
+        assert!(resp.image.is_none());
+        assert!(resp.error.as_deref().unwrap().starts_with("shed:"));
+        let m = coord.metrics();
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.errors, 0, "shed is policy, not failure");
+        // the service still renders deadline-less requests
+        let ok = coord.render_sync(RenderRequest::new(2, "train", camera));
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn try_submit_sheds_on_a_full_queue_instead_of_blocking() {
+        // one slow worker + a one-slot queue: a rapid burst must come
+        // back as shed responses, never block the submitter
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.002));
+        let mut scenes = HashMap::new();
+        scenes.insert("train".to_string(), cloud);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                queue_capacity: 1,
+                ..CoordinatorConfig::default()
+            },
+            scenes,
+        );
+        let camera = Camera::look_at(
+            Vec3::new(0.0, 1.0, -8.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            320,
+            192,
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..50)
+            .map(|i| coord.try_submit(RenderRequest::new(i, "train", camera)))
+            .collect();
+        let submit_wall = t0.elapsed();
+        let (mut done, mut shed) = (0u64, 0u64);
+        for rx in rxs {
+            let r = rx.recv().expect("response");
+            if r.shed {
+                shed += 1;
+            } else {
+                assert!(r.error.is_none(), "{:?}", r.error);
+                done += 1;
+            }
+        }
+        assert_eq!(done + shed, 50);
+        assert!(shed >= 1, "a 1-slot queue under a 50-burst must shed");
+        assert_eq!(coord.metrics().shed, shed);
+        // open-loop property: submission never waited on rendering
+        assert!(
+            submit_wall < Duration::from_secs(5),
+            "try_submit blocked for {submit_wall:?}"
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn qos_service_degrades_and_recovers_nothing_on_one_frame() {
+        // a single in-SLO frame through a QoS service: rung stays 0,
+        // nothing shed, nothing degraded — and the response carries the
+        // rung so callers can tell
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.001));
+        let mut scenes = HashMap::new();
+        scenes.insert("train".to_string(), cloud);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                qos: Some(crate::qos::QosConfig::with_slo(Duration::from_secs(60))),
+                ..CoordinatorConfig::default()
+            },
+            scenes,
+        );
+        let camera = Camera::look_at(
+            Vec3::new(0.0, 1.0, -8.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            160,
+            96,
+        );
+        let resp = coord
+            .render_sync(RenderRequest::new(0, "train", camera).with_slo(Duration::from_secs(60)));
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.rung, 0);
+        let img = resp.image.expect("image");
+        assert_eq!((img.width, img.height), (160, 96), "rung 0 must not rescale");
+        let m = coord.metrics();
+        assert_eq!((m.shed, m.degraded_frames, m.rung), (0, 0, 0));
         coord.shutdown();
     }
 

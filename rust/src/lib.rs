@@ -11,9 +11,12 @@
 //! * **Layer 3** (this crate): the full 3DGS pipeline substrate, the
 //!   GEMM-GS blending transformation, the five published acceleration
 //!   baselines, a PJRT runtime that loads the AOT artifacts, a serving
-//!   coordinator with cross-request batch coalescing (DESIGN.md §6),
-//!   the GPU analytic performance model, and the benchmark harness
-//!   regenerating every table and figure of the paper.
+//!   coordinator with cross-request batch coalescing (DESIGN.md §6)
+//!   and a deadline-aware QoS subsystem — quality ladder, EDF
+//!   admission, closed-loop degradation, measured soak harness
+//!   (DESIGN.md §10) — the GPU analytic performance model, and the
+//!   benchmark harness regenerating every table and figure of the
+//!   paper.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -38,5 +41,6 @@ pub mod gemm;
 pub mod math;
 pub mod perfmodel;
 pub mod pipeline;
+pub mod qos;
 pub mod runtime;
 pub mod scene;

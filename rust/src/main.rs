@@ -16,8 +16,21 @@
 //! gemm-gs bench-fig6                # Figure 6  (resolution sweep)
 //! gemm-gs bench-fig7                # Figure 7  (batch sweep + coordinator coalescing)
 //! gemm-gs bench-trajectory          # cold-vs-warm plan sweep across accel methods (§9)
+//! gemm-gs bench-soak --rate 400 --duration 2 [--slo-ms 30] [--seed 42]
+//!                                   # service under contention: best-effort vs
+//!                                   # SLO-driven policy (§10, EXPERIMENTS.md §Soak)
 //! gemm-gs inspect [--scale 0.02]    # Table 1   (workload statistics)
 //! ```
+//!
+//! `serve --slo-ms <ms> [--ladder <spec>]` turns the service SLO-driven
+//! (DESIGN.md §10): requests carry deadlines, pops are EDF, overload
+//! degrades along the quality ladder and sheds what cannot be served in
+//! time. `--ladder` takes `scale[:accel]` items, e.g.
+//! `1.0,0.75,0.5:flashgs,0.25:lightgaussian`, or `default`.
+//!
+//! Exit codes: `0` success, `1` runtime failure (unknown scene, soak
+//! transport errors), `2` usage errors (unknown subcommand, malformed
+//! flags) — so CI and scripts can tell misuse from breakage.
 //!
 //! `--accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>`
 //! composes a published acceleration baseline with the render
@@ -30,14 +43,28 @@
 use gemm_gs::accel::AccelKind;
 use gemm_gs::bench_harness::{self, fig3, fig6, fig7, report, table2, workloads};
 use gemm_gs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, RenderRequest};
-use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::math::Camera;
 use gemm_gs::perfmodel::{gpu, A100, H100};
 use gemm_gs::pipeline::render::{render_frame, RenderConfig};
+use gemm_gs::qos::{QosConfig, QualityLadder};
 use gemm_gs::scene::synthetic::{scene_by_name, table1_scenes};
 use std::collections::HashMap;
 use std::sync::Arc;
 
+/// Usage error: report to stderr and exit non-zero (exit code 2 — CLI
+/// misuse, distinct from runtime failures' exit 1). Malformed flags
+/// must never silently fall back to defaults: a typo in `--scale`
+/// silently benchmarking at the default scale produces wrong numbers
+/// that *look* right.
+fn bail(msg: &str) -> ! {
+    eprintln!("gemm-gs: {msg}");
+    eprintln!("run 'gemm-gs help' for usage");
+    std::process::exit(2)
+}
+
 /// Minimal flag parser: `--key value` pairs after the subcommand.
+/// Strict — unknown positionals, missing values, and unparseable
+/// numbers exit 2 instead of being ignored.
 struct Args {
     flags: HashMap<String, String>,
 }
@@ -47,12 +74,18 @@ impl Args {
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
-            if let Some(key) = argv[i].strip_prefix("--") {
-                let val = argv.get(i + 1).cloned().unwrap_or_default();
-                flags.insert(key.to_string(), val);
-                i += 2;
-            } else {
-                i += 1;
+            let Some(key) = argv[i].strip_prefix("--") else {
+                bail(&format!(
+                    "unexpected argument '{}' (flags are --key value pairs)",
+                    argv[i]
+                ));
+            };
+            match argv.get(i + 1) {
+                Some(val) if !val.starts_with("--") => {
+                    flags.insert(key.to_string(), val.clone());
+                    i += 2;
+                }
+                _ => bail(&format!("flag --{key} expects a value")),
             }
         }
         Args { flags }
@@ -63,11 +96,21 @@ impl Args {
     }
 
     fn get_f64(&self, key: &str, default: f64) -> f64 {
-        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| bail(&format!("flag --{key}: invalid number '{v}'"))),
+        }
     }
 
     fn get_usize(&self, key: &str, default: usize) -> usize {
-        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| bail(&format!("flag --{key}: invalid integer '{v}'"))),
+        }
     }
 }
 
@@ -136,29 +179,51 @@ fn main() {
             let pts = bench_harness::trajectory::run(&scene, sweep_scale, frames, step);
             print!("{}", bench_harness::trajectory::render(&pts, &scene, frames, step));
         }
+        "bench-soak" => cmd_bench_soak(&args),
         "inspect" => cmd_inspect(scale),
-        _ => {
-            println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
-            println!("subcommands: render render-trajectory serve fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory inspect");
-            println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
-            println!("              --accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>");
-            println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
-            println!("trajectory:   --frames N --step RAD --via <direct|coordinator> --width W --height H");
-            println!("              --max-translation T --max-rotation R --max-drift D");
+        "help" | "--help" | "-h" => usage(),
+        other => {
+            eprintln!("gemm-gs: unknown subcommand '{other}'");
+            usage();
+            std::process::exit(2);
         }
     }
 }
 
+fn usage() {
+    println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
+    println!("subcommands: render render-trajectory serve fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak inspect");
+    println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
+    println!("              --accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>");
+    println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
+    println!("              --slo-ms MS --ladder <default|scale[:accel],...>   (QoS, DESIGN.md §10)");
+    println!("trajectory:   --frames N --step RAD --via <direct|coordinator> --width W --height H");
+    println!("              --max-translation T --max-rotation R --max-drift D");
+    println!("bench-soak:   --rate REQ_S --duration SECS --slo-ms MS --seed N --workers N");
+    println!("              (rate 0 / slo-ms 0 auto-calibrate against the measured frame cost)");
+}
+
 /// `--accel` with a graceful unknown-name error (shared by render,
-/// serve, and the bench subcommands).
+/// serve, and the bench subcommands). A bad method name is a malformed
+/// flag — exit 2, like every other flag-parse failure.
 fn parse_accel(args: &Args) -> AccelKind {
     let name = args.get("accel", "vanilla");
     AccelKind::parse(&name).unwrap_or_else(|| {
-        eprintln!(
-            "unknown accel method '{name}' \
+        bail(&format!(
+            "flag --accel: unknown method '{name}' \
              (expected vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian)"
-        );
-        std::process::exit(1)
+        ))
+    })
+}
+
+/// `--backend` with the same exit-2 contract.
+fn parse_backend(args: &Args) -> BackendKind {
+    let name = args.get("backend", "gemm");
+    BackendKind::parse(&name).unwrap_or_else(|| {
+        bail(&format!(
+            "flag --backend: unknown backend '{name}' \
+             (expected vanilla|gemm|pjrt|artifact-gemm|artifact-vanilla|artifact-bf16)"
+        ))
     })
 }
 
@@ -169,10 +234,7 @@ fn cmd_render(args: &Args) {
         std::process::exit(1)
     });
     let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
-    let backend = BackendKind::parse(&args.get("backend", "gemm")).unwrap_or_else(|| {
-        eprintln!("unknown backend");
-        std::process::exit(1)
-    });
+    let backend = parse_backend(args);
     let accel = parse_accel(args);
     let method = accel.instantiate();
     let base = spec.synthesize(scale);
@@ -225,10 +287,7 @@ fn cmd_render_trajectory(args: &Args) {
     let step = args.get_f64("step", 0.001) as f32;
     let width = args.get_usize("width", (spec.width / 2) as usize) as u32;
     let height = args.get_usize("height", (spec.height / 2) as usize) as u32;
-    let backend = BackendKind::parse(&args.get("backend", "gemm")).unwrap_or_else(|| {
-        eprintln!("unknown backend");
-        std::process::exit(1)
-    });
+    let backend = parse_backend(args);
     let accel = parse_accel(args);
     let tcfg = TrajectoryConfig {
         max_translation: args.get_f64("max-translation", 1.0) as f32,
@@ -334,14 +393,28 @@ fn cmd_render_trajectory(args: &Args) {
 fn cmd_serve(args: &Args) {
     let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
     let frames = args.get_usize("frames", 32);
-    let backend = BackendKind::parse(&args.get("backend", "gemm")).expect("backend");
+    let backend = parse_backend(args);
     let accel = parse_accel(args);
     let mut scenes = HashMap::new();
-    let spec = scene_by_name(&args.get("scene", "train")).expect("scene");
+    let spec = scene_by_name(&args.get("scene", "train")).unwrap_or_else(|| {
+        eprintln!("unknown scene '{}'", args.get("scene", "train"));
+        std::process::exit(1)
+    });
     scenes.insert(spec.name.to_string(), Arc::new(spec.synthesize(scale)));
     let max_batch = args.get_usize("max-batch", 1);
     let batch_timeout =
         std::time::Duration::from_secs_f64(args.get_f64("batch-timeout-ms", 2.0) / 1e3);
+    // --slo-ms turns the service SLO-driven (DESIGN.md §10): requests
+    // carry deadlines, the scheduler pops EDF, workers degrade along
+    // --ladder and shed what cannot be served in time
+    let slo_ms = args.get_f64("slo-ms", 0.0);
+    let slo = (slo_ms > 0.0)
+        .then(|| std::time::Duration::from_secs_f64(slo_ms / 1e3));
+    let qos = slo.map(|slo| {
+        let ladder = QualityLadder::parse(&args.get("ladder", "default"))
+            .unwrap_or_else(|e| bail(&format!("--ladder: {e}")));
+        QosConfig { slo, ladder, controller: Default::default() }
+    });
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: args.get_usize("workers", 4),
@@ -350,6 +423,7 @@ fn cmd_serve(args: &Args) {
             render: RenderConfig::default(),
             max_batch,
             batch_timeout,
+            qos,
             ..CoordinatorConfig::default()
         },
         scenes,
@@ -358,31 +432,36 @@ fn cmd_serve(args: &Args) {
     let rxs: Vec<_> = (0..frames)
         .map(|i| {
             let theta = i as f32 / frames as f32 * std::f32::consts::TAU;
-            let camera = Camera::look_at(
-                Vec3::new(8.0 * theta.cos(), 2.5, 8.0 * theta.sin()),
-                Vec3::ZERO,
-                Vec3::new(0.0, 1.0, 0.0),
-                std::f32::consts::FRAC_PI_3,
-                spec.width / 2,
-                spec.height / 2,
-            );
+            let camera =
+                workloads::orbit_camera(theta, spec.width / 2, spec.height / 2);
             let mut request = RenderRequest::new(i as u64, spec.name, camera);
             request.accel = accel;
+            if let Some(slo) = slo {
+                request = request.with_slo(slo);
+            }
             coord.submit(request)
         })
         .collect();
+    let mut served = 0u64;
     for rx in rxs {
         let r = rx.recv().expect("response");
+        if r.shed {
+            continue; // explicit policy drop, reported via metrics below
+        }
         assert!(r.error.is_none(), "{:?}", r.error);
+        served += 1;
     }
     let elapsed = t0.elapsed();
     let m = coord.metrics();
     println!(
-        "{frames} frames ({}) in {elapsed:.2?} — {:.1} fps, mean latency {:.2?}, p95 ≤ {:.2?}, blend share {:.1}%",
+        "{served}/{frames} frames ({}) in {elapsed:.2?} — {:.1} fps, mean latency {:.2?}, \
+         p50 ≤ {:.2?}, p95 ≤ {:.2?}, p99 ≤ {:.2?}, blend share {:.1}%",
         accel.cli_name(),
-        frames as f64 / elapsed.as_secs_f64(),
+        served as f64 / elapsed.as_secs_f64(),
         m.mean_latency,
+        m.p50,
         m.p95,
+        m.p99,
         m.blend_fraction() * 100.0
     );
     if max_batch > 1 {
@@ -397,7 +476,40 @@ fn cmd_serve(args: &Args) {
             m.prepared_models
         );
     }
+    if slo.is_some() {
+        println!(
+            "qos: shed {}, degraded_frames {}, rung {} (slo {slo_ms} ms)",
+            m.shed, m.degraded_frames, m.rung
+        );
+    }
     coord.shutdown();
+}
+
+/// `bench-soak` — the service-under-contention benchmark (DESIGN.md
+/// §10, EXPERIMENTS.md §Soak): one seeded Poisson stream, two policies.
+/// Exits 1 on transport errors (the CI smoke's health gate).
+fn cmd_bench_soak(args: &Args) {
+    let scene = args.get("scene", "train");
+    if scene_by_name(&scene).is_none() {
+        eprintln!("unknown scene '{scene}'");
+        std::process::exit(1);
+    }
+    let sim_scale = args.get_f64("scale", 0.004);
+    let workers = args.get_usize("workers", 2);
+    let rate = args.get_f64("rate", 0.0);
+    let duration = std::time::Duration::from_secs_f64(args.get_f64("duration", 2.0));
+    let slo_ms = args.get_f64("slo-ms", 0.0);
+    let slo = (slo_ms > 0.0).then(|| std::time::Duration::from_secs_f64(slo_ms / 1e3));
+    let seed = args.get_usize("seed", 42) as u64;
+    let outcome =
+        bench_harness::soak::run(&scene, sim_scale, workers, rate, duration, slo, seed);
+    print!("{}", bench_harness::soak::render(&outcome, &scene, workers, duration));
+    let transport =
+        outcome.best_effort.transport_errors + outcome.slo_driven.transport_errors;
+    if transport > 0 {
+        eprintln!("gemm-gs: {transport} transport error(s) during soak — service unhealthy");
+        std::process::exit(1);
+    }
 }
 
 fn cmd_fig1() {

@@ -54,6 +54,25 @@ pub struct WorkloadProfile {
     pub n_active_tiles: f64,
 }
 
+impl WorkloadProfile {
+    /// The profile rendered at `res_scale` of the original resolution
+    /// (the quality ladder's rung dimension, `qos::ladder`): pair and
+    /// active-tile counts scale ~quadratically with linear resolution —
+    /// splat radii are fixed in world space, so halving the image
+    /// quarters the tiles each splat covers (the inverse of Figure 6's
+    /// resolution sweep) — while the model and its visible set are
+    /// untouched.
+    pub fn scaled_resolution(&self, res_scale: f64) -> WorkloadProfile {
+        let s2 = res_scale * res_scale;
+        WorkloadProfile {
+            n_gaussians: self.n_gaussians,
+            n_visible: self.n_visible,
+            n_pairs: self.n_pairs * s2,
+            n_active_tiles: (self.n_active_tiles * s2).max(1.0),
+        }
+    }
+}
+
 /// Which blending algorithm the model prices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BlendKind {
@@ -281,6 +300,25 @@ mod tests {
         // pixel tax applies to the F_RENDER share (13/25) of the compute
         assert!(taxed.blend > 1.12 * base.blend);
         assert!(taxed.preprocess > base.preprocess);
+    }
+
+    #[test]
+    fn resolution_scaling_orders_costs() {
+        // the quality-ladder invariant: lower resolution is strictly
+        // cheaper, for either blender, at every intermediate scale
+        let w = train_like();
+        let mut last = f64::INFINITY;
+        for s in [1.0, 0.75, 0.5, 0.25] {
+            let p = w.scaled_resolution(s);
+            let t = estimate(&A100, &p, BlendKind::Gemm, Default::default(), 256).total();
+            assert!(t < last, "scale {s}: {t} not cheaper than {last}");
+            last = t;
+        }
+        // scaling floors active tiles at 1 and never touches the model
+        let tiny = w.scaled_resolution(1e-4);
+        assert_eq!(tiny.n_gaussians, w.n_gaussians);
+        assert_eq!(tiny.n_visible, w.n_visible);
+        assert!(tiny.n_active_tiles >= 1.0);
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! The **closed-loop rung controller**: each worker watches a rolling
+//! window of its own end-to-end frame latencies and moves the active
+//! ladder rung with hysteresis (DESIGN.md §10).
+//!
+//! Rung indices grow *down* the ladder: rung 0 is full quality, higher
+//! indices are cheaper. "Degrade" therefore increments the rung,
+//! "recover" decrements it. Three mechanisms prevent oscillation:
+//!
+//! * a **threshold gap** — degrade when the windowed p95 exceeds
+//!   `high_ratio × SLO`, recover only when it falls below
+//!   `low_ratio × SLO` (a strictly lower bar);
+//! * a **cooldown** — at least `cooldown` observed frames between
+//!   moves, so one move's effect is measured before the next;
+//! * **window reset on move** — latencies measured at the old rung
+//!   never vote on the new one.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Controller tuning knobs (`CoordinatorConfig::qos`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerConfig {
+    /// Latencies per rolling window; no move happens before the window
+    /// fills at the current rung.
+    pub window: usize,
+    /// Degrade when windowed p95 > `high_ratio × SLO`.
+    pub high_ratio: f64,
+    /// Recover when windowed p95 < `low_ratio × SLO` (must sit well
+    /// below `high_ratio` — the gap *is* the hysteresis).
+    pub low_ratio: f64,
+    /// Minimum observed frames between rung moves.
+    pub cooldown: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig { window: 16, high_ratio: 0.9, low_ratio: 0.45, cooldown: 16 }
+    }
+}
+
+/// Per-worker closed-loop controller over one [`super::QualityLadder`].
+#[derive(Debug)]
+pub struct RungController {
+    cfg: ControllerConfig,
+    slo: Duration,
+    n_rungs: usize,
+    rung: usize,
+    window: VecDeque<Duration>,
+    since_move: usize,
+}
+
+impl RungController {
+    /// Controller starting at rung 0 (full quality).
+    pub fn new(slo: Duration, n_rungs: usize, cfg: ControllerConfig) -> RungController {
+        RungController {
+            cfg: ControllerConfig {
+                window: cfg.window.max(1),
+                cooldown: cfg.cooldown,
+                ..cfg
+            },
+            slo,
+            n_rungs: n_rungs.max(1),
+            rung: 0,
+            window: VecDeque::new(),
+            since_move: 0,
+        }
+    }
+
+    /// The active rung.
+    pub fn rung(&self) -> usize {
+        self.rung
+    }
+
+    /// The SLO the controller steers toward.
+    pub fn slo(&self) -> Duration {
+        self.slo
+    }
+
+    /// Feed one completed frame's end-to-end latency. Returns the new
+    /// rung when this observation triggered a move, `None` otherwise.
+    pub fn observe(&mut self, latency: Duration) -> Option<usize> {
+        if self.window.len() == self.cfg.window {
+            self.window.pop_front();
+        }
+        self.window.push_back(latency);
+        self.since_move += 1;
+        if self.window.len() < self.cfg.window || self.since_move < self.cfg.cooldown {
+            return None;
+        }
+        let p95 = self.window_p95();
+        if p95 > self.slo.mul_f64(self.cfg.high_ratio) && self.rung + 1 < self.n_rungs {
+            self.move_to(self.rung + 1)
+        } else if p95 < self.slo.mul_f64(self.cfg.low_ratio) && self.rung > 0 {
+            self.move_to(self.rung - 1)
+        } else {
+            None
+        }
+    }
+
+    fn move_to(&mut self, rung: usize) -> Option<usize> {
+        self.rung = rung;
+        self.window.clear();
+        self.since_move = 0;
+        Some(rung)
+    }
+
+    /// p95 over the current window (exact, by sorting a copy — the
+    /// window is a handful of samples, not the service histogram).
+    fn window_p95(&self) -> Duration {
+        let mut v: Vec<Duration> = self.window.iter().copied().collect();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * 0.95).round() as usize;
+        v[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(n_rungs: usize) -> RungController {
+        RungController::new(
+            Duration::from_millis(10),
+            n_rungs,
+            ControllerConfig { window: 4, high_ratio: 0.9, low_ratio: 0.45, cooldown: 4 },
+        )
+    }
+
+    #[test]
+    fn degrades_under_sustained_overload() {
+        let mut c = ctl(3);
+        let mut moves = Vec::new();
+        for _ in 0..16 {
+            if let Some(r) = c.observe(Duration::from_millis(30)) {
+                moves.push(r);
+            }
+        }
+        // one move per filled window + cooldown, never past the bottom
+        assert_eq!(moves, vec![1, 2]);
+        assert_eq!(c.rung(), 2);
+    }
+
+    #[test]
+    fn recovers_when_comfortably_under_slo() {
+        let mut c = ctl(3);
+        for _ in 0..8 {
+            c.observe(Duration::from_millis(30));
+        }
+        assert_eq!(c.rung(), 2);
+        let mut recovered = Vec::new();
+        for _ in 0..16 {
+            if let Some(r) = c.observe(Duration::from_millis(1)) {
+                recovered.push(r);
+            }
+        }
+        assert_eq!(recovered, vec![1, 0]);
+        assert_eq!(c.rung(), 0);
+    }
+
+    #[test]
+    fn hysteresis_band_holds_the_rung() {
+        // latencies between low and high water: no movement either way
+        let mut c = ctl(3);
+        for _ in 0..8 {
+            c.observe(Duration::from_millis(30));
+        }
+        let rung = c.rung();
+        for _ in 0..32 {
+            assert_eq!(c.observe(Duration::from_millis(7)), None);
+        }
+        assert_eq!(c.rung(), rung);
+    }
+
+    #[test]
+    fn cooldown_spaces_moves() {
+        let mut c = RungController::new(
+            Duration::from_millis(10),
+            4,
+            ControllerConfig { window: 2, high_ratio: 0.9, low_ratio: 0.45, cooldown: 8 },
+        );
+        let mut observed_before_first_move = 0;
+        loop {
+            observed_before_first_move += 1;
+            if c.observe(Duration::from_millis(50)).is_some() {
+                break;
+            }
+            assert!(observed_before_first_move < 64, "controller never moved");
+        }
+        // the window fills after 2 frames but the cooldown gates the move
+        assert!(observed_before_first_move >= 8);
+    }
+
+    #[test]
+    fn single_rung_ladder_never_moves() {
+        let mut c = ctl(1);
+        for _ in 0..32 {
+            assert_eq!(c.observe(Duration::from_millis(100)), None);
+        }
+        assert_eq!(c.rung(), 0);
+    }
+}

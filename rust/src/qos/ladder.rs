@@ -1,0 +1,429 @@
+//! The **quality ladder**: the ordered degradation rungs the QoS
+//! subsystem trades quality for latency along (DESIGN.md §10).
+//!
+//! Each rung is a `(resolution scale, accel method)` point. Rung 0 is
+//! full quality — the request rendered exactly as submitted — and every
+//! deeper rung must be *strictly cheaper* under the analytic perfmodel
+//! (`perfmodel::estimate` over a resolution-scaled workload profile).
+//! That ordering is what the paper's orthogonality claim buys us for
+//! free: GEMM-compatible blending composes with any [`AccelKind`], so a
+//! rung is just a different `(resolution, method)` operating point whose
+//! prepared model the coordinator already caches per `(scene, method)`.
+//!
+//! Validation happens at construction: a ladder that is empty, whose
+//! rung 0 is not the identity, or whose modelled cost is not strictly
+//! decreasing is rejected with an explanatory error — the controller
+//! assumes "deeper rung ⇒ cheaper" and would oscillate otherwise.
+
+use crate::accel::AccelKind;
+use crate::math::Camera;
+use crate::perfmodel::{estimate, BlendKind, MethodFactors, WorkloadProfile, A100};
+
+/// One degradation rung: render at `res_scale` of the requested
+/// resolution, optionally overriding the request's acceleration method.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QualityRung {
+    /// Fraction of the requested resolution, in `(0, 1]`.
+    pub res_scale: f64,
+    /// `Some` replaces the request's accel method at this rung; `None`
+    /// keeps whatever the request asked for (required at rung 0, where
+    /// the render must be byte-identical to the non-QoS path).
+    pub accel: Option<AccelKind>,
+}
+
+impl QualityRung {
+    /// Full quality: the identity rung.
+    pub fn full() -> Self {
+        QualityRung { res_scale: 1.0, accel: None }
+    }
+
+    /// A rung at `res_scale` keeping the request's method.
+    pub fn scaled(res_scale: f64) -> Self {
+        QualityRung { res_scale, accel: None }
+    }
+
+    /// A rung at `res_scale` under an explicit method.
+    pub fn with_accel(res_scale: f64, accel: AccelKind) -> Self {
+        QualityRung { res_scale, accel: Some(accel) }
+    }
+}
+
+/// The reference workload the ladder's cost ordering is priced against:
+/// the paper's "train" row at full scale (Table 1), the same profile
+/// `perfmodel::cost` is calibrated on. The *ordering* of rung costs is
+/// what matters, and it is stable across realistic profiles because
+/// every stage scales monotonically in pairs/visible counts.
+fn reference_profile() -> WorkloadProfile {
+    WorkloadProfile {
+        n_gaussians: 1_090_000.0,
+        n_visible: 760_000.0,
+        n_pairs: 2_300_000.0,
+        n_active_tiles: 2100.0,
+    }
+}
+
+/// Modelled per-frame cost (seconds) of rendering the reference
+/// workload at one rung: the profile is resolution-scaled, the method's
+/// modelled pair survival applied, and the GEMM blender priced with the
+/// method's own cost factors (DESIGN.md §8's composition knobs).
+fn rung_model_cost(rung: &QualityRung, request_accel: AccelKind) -> f64 {
+    let kind = rung.accel.unwrap_or(request_accel);
+    let method = kind.instantiate();
+    let mut profile = reference_profile().scaled_resolution(rung.res_scale);
+    let keep = method.modelled_pair_keep();
+    profile.n_pairs *= keep;
+    if method.transforms_model() {
+        // compression methods shrink the model itself, not just the
+        // pair list (LightGaussian's pruning)
+        profile.n_gaussians *= keep;
+        profile.n_visible *= keep;
+    }
+    let factors = MethodFactors::from_method(method.as_ref());
+    estimate(&A100, &profile, BlendKind::Gemm, factors, 256).total()
+}
+
+/// An ordered, validated set of degradation rungs. Construction
+/// computes and checks the perfmodel cost of every rung; the controller
+/// and the deadline-fit check consume the resulting cost ratios.
+///
+/// Because a `None` rung inherits the *request's* method, the effective
+/// cost of a rung depends on the request: a LightGaussian request's
+/// inherited rung renders a pruned model, which can undercut a deeper
+/// rung's override on the full model. The ladder therefore prices every
+/// rung for every [`AccelKind`] and maps each `(rung, request method)`
+/// to its **effective rung** — the cheapest rung at or above it for
+/// that method — so "deeper ⇒ never costlier" holds per request, not
+/// just for the vanilla column the strict validation runs on.
+#[derive(Debug, Clone)]
+pub struct QualityLadder {
+    rungs: Vec<QualityRung>,
+    /// Modelled seconds per `[request-kind][rung]` against the
+    /// reference profile (kind order = [`AccelKind::all`]).
+    costs: Vec<Vec<f64>>,
+    /// Prefix-argmin of `costs` per kind: `effective[k][r]` = cheapest
+    /// rung index in `0..=r` for request kind `k` (ties → shallower).
+    effective: Vec<Vec<usize>>,
+}
+
+/// Index of `kind` in [`AccelKind::all`] (the cost-matrix row order).
+fn kind_index(kind: AccelKind) -> usize {
+    AccelKind::all()
+        .iter()
+        .position(|k| *k == kind)
+        .expect("AccelKind::all() covers every kind")
+}
+
+impl QualityLadder {
+    /// Build and validate a ladder. Errors (with the offending rung
+    /// spelled out) when the ladder is empty, rung 0 is not the
+    /// identity, any scale leaves `(0, 1]`, an accel override names a
+    /// method absent from the registry (unrepresentable by construction
+    /// — [`AccelKind`] *is* the registry), or the modelled cost is not
+    /// strictly decreasing down the ladder.
+    pub fn new(rungs: Vec<QualityRung>) -> Result<QualityLadder, String> {
+        if rungs.is_empty() {
+            return Err("quality ladder must have at least one rung".to_string());
+        }
+        if rungs[0] != QualityRung::full() {
+            return Err(format!(
+                "rung 0 must be full quality (res_scale 1.0, request's own accel), got {:?}",
+                rungs[0]
+            ));
+        }
+        for (i, r) in rungs.iter().enumerate() {
+            if !r.res_scale.is_finite() || r.res_scale <= 0.0 || r.res_scale > 1.0 {
+                return Err(format!(
+                    "rung {i}: res_scale {} outside (0, 1]",
+                    r.res_scale
+                ));
+            }
+        }
+        // price every rung for every request method; the *vanilla*
+        // column is the canonical one the strict-decrease validation
+        // runs on (other columns get the prefix-min effective mapping)
+        let costs: Vec<Vec<f64>> = AccelKind::all()
+            .iter()
+            .map(|kind| rungs.iter().map(|r| rung_model_cost(r, *kind)).collect())
+            .collect();
+        let vanilla = &costs[kind_index(AccelKind::Vanilla)];
+        for (i, w) in vanilla.windows(2).enumerate() {
+            if w[1] >= w[0] {
+                return Err(format!(
+                    "rung {} (modelled {:.3} ms) is not strictly cheaper than rung {} \
+                     ({:.3} ms): every rung must cost less than the one above it",
+                    i + 1,
+                    w[1] * 1e3,
+                    i,
+                    w[0] * 1e3
+                ));
+            }
+        }
+        let effective: Vec<Vec<usize>> = costs
+            .iter()
+            .map(|col| {
+                let mut best = 0usize;
+                col.iter()
+                    .enumerate()
+                    .map(|(r, &c)| {
+                        if c < col[best] {
+                            best = r;
+                        }
+                        best
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(QualityLadder { rungs, costs, effective })
+    }
+
+    /// The default ladder: resolution back-off first (cheap, lossless in
+    /// method terms), then the lossless FlashGS veto, then LightGaussian
+    /// compression at the bottom — the Table 2 composition rows turned
+    /// into a degradation policy.
+    pub fn default_ladder() -> QualityLadder {
+        QualityLadder::new(vec![
+            QualityRung::full(),
+            QualityRung::scaled(0.75),
+            QualityRung::with_accel(0.5, AccelKind::FlashGs),
+            QualityRung::with_accel(0.35, AccelKind::FlashGs),
+            QualityRung::with_accel(0.25, AccelKind::LightGaussian),
+        ])
+        .expect("default ladder must validate")
+    }
+
+    /// Parse a CLI ladder spec: comma-separated `scale[:accel]` items,
+    /// e.g. `1.0,0.75,0.5:flashgs,0.25:lightgaussian`; the literal
+    /// `default` yields [`default_ladder`](Self::default_ladder).
+    pub fn parse(spec: &str) -> Result<QualityLadder, String> {
+        if spec == "default" {
+            return Ok(Self::default_ladder());
+        }
+        let mut rungs = Vec::new();
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (scale_s, accel) = match item.split_once(':') {
+                Some((s, a)) => {
+                    let kind = AccelKind::parse(a).ok_or_else(|| {
+                        format!("ladder rung '{item}': unknown accel method '{a}'")
+                    })?;
+                    (s, Some(kind))
+                }
+                None => (item, None),
+            };
+            let res_scale: f64 = scale_s
+                .parse()
+                .map_err(|_| format!("ladder rung '{item}': invalid scale '{scale_s}'"))?;
+            rungs.push(QualityRung { res_scale, accel });
+        }
+        QualityLadder::new(rungs)
+    }
+
+    /// Number of rungs (≥ 1).
+    pub fn len(&self) -> usize {
+        self.rungs.len()
+    }
+
+    /// True only for the single-rung (no-degradation) ladder — a ladder
+    /// is never empty, but clippy insists `len` has an `is_empty` twin.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// The rungs, top (full quality) first.
+    pub fn rungs(&self) -> &[QualityRung] {
+        &self.rungs
+    }
+
+    /// Modelled cost of `rung` in milliseconds (reference profile,
+    /// vanilla request — the validated canonical column).
+    pub fn cost_ms(&self, rung: usize) -> f64 {
+        self.costs[kind_index(AccelKind::Vanilla)][rung] * 1e3
+    }
+
+    /// Modelled cost of `rung` relative to rung 0 for a vanilla request.
+    pub fn cost_ratio(&self, rung: usize) -> f64 {
+        self.cost_ratio_for(rung, AccelKind::Vanilla)
+    }
+
+    /// The rung actually rendered when the controller asks for `rung`
+    /// on a request using `request_accel`: the cheapest rung at or
+    /// above it for that method (idempotent; identity whenever the
+    /// method's cost column is already monotone, which the vanilla
+    /// validation guarantees for `None`-inheriting ladders).
+    pub fn effective_rung(&self, rung: usize, request_accel: AccelKind) -> usize {
+        self.effective[kind_index(request_accel)][rung]
+    }
+
+    /// Modelled cost of [`effective_rung`](Self::effective_rung)`(rung)`
+    /// relative to rung 0, for `request_accel` — non-increasing in
+    /// `rung` by construction, which the worker's deadline-fit walk and
+    /// the exec-estimate normalization both rely on.
+    pub fn cost_ratio_for(&self, rung: usize, request_accel: AccelKind) -> f64 {
+        let col = &self.costs[kind_index(request_accel)];
+        col[self.effective_rung(rung, request_accel)] / col[0]
+    }
+
+    /// The cheapest rung's cost ratio for a vanilla request.
+    pub fn min_cost_ratio(&self) -> f64 {
+        self.cost_ratio(self.rungs.len() - 1)
+    }
+
+    /// The cheapest rung's cost ratio for `request_accel` (the
+    /// deadline-fit floor used by admission control).
+    pub fn min_cost_ratio_for(&self, request_accel: AccelKind) -> f64 {
+        self.cost_ratio_for(self.rungs.len() - 1, request_accel)
+    }
+
+    /// Apply `rung` to a request: the camera scaled to the **effective**
+    /// rung's resolution and the effective accel method. Rung 0 returns
+    /// the camera *bitwise unchanged* and the request's own method — the
+    /// byte-identity invariant `tests/e2e_qos.rs` pins down. Scaled
+    /// cameras keep pose, fov and depth range (only `width`/`height`
+    /// shrink, exactly what `Camera::look_at` would build at that
+    /// resolution), so [`Camera::validate`] still holds.
+    pub fn apply(&self, rung: usize, camera: &Camera, request_accel: AccelKind) -> (Camera, AccelKind) {
+        let r = &self.rungs[self.effective_rung(rung, request_accel)];
+        let accel = r.accel.unwrap_or(request_accel);
+        if r.res_scale >= 1.0 {
+            return (*camera, accel);
+        }
+        let mut scaled = *camera;
+        scaled.width = ((camera.width as f64 * r.res_scale).round() as u32).max(1);
+        scaled.height = ((camera.height as f64 * r.res_scale).round() as u32).max(1);
+        (scaled, accel)
+    }
+}
+
+impl Default for QualityLadder {
+    fn default() -> Self {
+        Self::default_ladder()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec3;
+
+    fn cam() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 1.0, -8.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            640,
+            384,
+        )
+    }
+
+    #[test]
+    fn default_ladder_validates_and_orders_costs() {
+        let ladder = QualityLadder::default_ladder();
+        assert!(ladder.len() >= 3);
+        for r in 1..ladder.len() {
+            assert!(
+                ladder.cost_ms(r) < ladder.cost_ms(r - 1),
+                "rung {r} not cheaper: {} vs {}",
+                ladder.cost_ms(r),
+                ladder.cost_ms(r - 1)
+            );
+            assert!(ladder.cost_ratio(r) < 1.0);
+        }
+        assert!((ladder.cost_ratio(0) - 1.0).abs() < 1e-12);
+        assert!(ladder.min_cost_ratio() < 0.5);
+    }
+
+    #[test]
+    fn rung0_apply_is_bitwise_identity() {
+        let ladder = QualityLadder::default_ladder();
+        let c = cam();
+        for kind in AccelKind::all() {
+            let (scaled, accel) = ladder.apply(0, &c, kind);
+            assert_eq!(accel, kind);
+            assert!(scaled.same_view(&c), "rung 0 changed the camera");
+            assert_eq!(scaled.pose_key(), c.pose_key());
+        }
+    }
+
+    #[test]
+    fn deeper_rungs_scale_resolution_and_stay_valid() {
+        let ladder = QualityLadder::default_ladder();
+        let c = cam();
+        let mut last = (c.width, c.height);
+        for r in 1..ladder.len() {
+            let (scaled, _) = ladder.apply(r, &c, AccelKind::Vanilla);
+            assert!(scaled.width <= last.0 && scaled.height <= last.1);
+            assert!(scaled.width >= 1 && scaled.height >= 1);
+            scaled.validate().expect("rung-scaled camera must pass admission");
+            assert!(c.same_intrinsics(&scaled) || scaled.width != c.width);
+            last = (scaled.width, scaled.height);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_ladders() {
+        assert!(QualityLadder::new(vec![]).is_err());
+        // rung 0 must be the identity
+        assert!(QualityLadder::new(vec![QualityRung::scaled(0.5)]).is_err());
+        // out-of-range scale
+        assert!(QualityLadder::new(vec![QualityRung::full(), QualityRung::scaled(0.0)])
+            .is_err());
+        assert!(QualityLadder::new(vec![QualityRung::full(), QualityRung::scaled(1.5)])
+            .is_err());
+        // cost must strictly decrease: a duplicated identity rung costs
+        // exactly the same as rung 0, so it can never validate
+        let err = QualityLadder::new(vec![QualityRung::full(), QualityRung::scaled(1.0)])
+            .unwrap_err();
+        assert!(err.contains("not strictly cheaper"), "{err}");
+    }
+
+    #[test]
+    fn effective_rung_never_renders_a_costlier_point() {
+        let ladder = QualityLadder::default_ladder();
+        for kind in AccelKind::all() {
+            let mut last = f64::INFINITY;
+            for r in 0..ladder.len() {
+                let ratio = ladder.cost_ratio_for(r, kind);
+                assert!(
+                    ratio <= last + 1e-12,
+                    "{}: cost ratio rose at rung {r}: {ratio} > {last}",
+                    kind.cli_name()
+                );
+                last = ratio;
+                let eff = ladder.effective_rung(r, kind);
+                assert!(eff <= r);
+                // idempotent: the effective rung is its own effective rung
+                assert_eq!(ladder.effective_rung(eff, kind), eff);
+            }
+            assert_eq!(ladder.effective_rung(0, kind), 0, "rung 0 is always itself");
+        }
+        // the documented inversion: a LightGaussian request's inherited
+        // rung renders a pruned model, undercutting the next rung's
+        // full-model override — the mapping must skip past it, never
+        // render the costlier point
+        let lg = AccelKind::LightGaussian;
+        assert!(
+            ladder.effective_rung(2, lg) < 2,
+            "full-model override rung should be skipped for LightGaussian requests"
+        );
+        // vanilla's validated column is strictly monotone ⇒ identity map
+        for r in 0..ladder.len() {
+            assert_eq!(ladder.effective_rung(r, AccelKind::Vanilla), r);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips_and_rejects_junk() {
+        let ladder = QualityLadder::parse("1.0,0.75,0.5:flashgs,0.25:lightgaussian").unwrap();
+        assert_eq!(ladder.len(), 4);
+        assert_eq!(ladder.rungs()[2].accel, Some(AccelKind::FlashGs));
+        assert!(QualityLadder::parse("default").is_ok());
+        assert!(QualityLadder::parse("1.0,0.5:nope").is_err());
+        assert!(QualityLadder::parse("1.0,abc").is_err());
+        // a parsed ladder still has to pass cost validation
+        assert!(QualityLadder::parse("1.0,1.0").is_err());
+    }
+}

@@ -1,0 +1,57 @@
+//! Deadline-aware **quality-of-service** for the render service
+//! (DESIGN.md §10): the serving-policy layer that turns the coordinator
+//! from best-effort into SLO-driven.
+//!
+//! Four pieces, composed by `coordinator::service`:
+//!
+//! * [`ladder`] — the [`QualityLadder`]: ordered `(resolution scale,
+//!   accel method)` degradation rungs, each strictly cheaper than the
+//!   one above under the analytic perfmodel. The paper's orthogonality
+//!   claim (GEMM blending composes with any accelerator) is what makes
+//!   a rung cheap to switch to: it is just another `(scene, method)`
+//!   point the coordinator's prepared-model cache already serves.
+//! * **deadline-aware admission** — `RenderRequest::deadline`, EDF pops
+//!   in `coordinator::batch`, and shedding (admission-time when the
+//!   queue alone already blows the deadline, pop-time when even the
+//!   cheapest rung cannot fit) with explicit `shed` responses, never a
+//!   late render.
+//! * [`controller`] — the per-worker closed-loop [`RungController`]:
+//!   rolling p95 against the SLO, hysteresis band + cooldown, exporting
+//!   `rung` / `shed` / `degraded_frames` through `coordinator::metrics`.
+//! * [`soak`] — the open-loop Poisson load generator behind
+//!   `gemm-gs bench-soak`, measuring p50/p95/p99, goodput and shed rate
+//!   per policy under genuine contention.
+
+pub mod controller;
+pub mod ladder;
+pub mod soak;
+
+pub use controller::{ControllerConfig, RungController};
+pub use ladder::{QualityLadder, QualityRung};
+pub use soak::{poisson_schedule, run_soak, SoakConfig, SoakReport};
+
+use std::time::Duration;
+
+/// Everything the coordinator needs to run SLO-driven
+/// (`CoordinatorConfig::qos`).
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// The latency objective each worker's controller steers toward,
+    /// and the default deadline the CLI attaches to requests.
+    pub slo: Duration,
+    /// The degradation rungs (validated at construction).
+    pub ladder: QualityLadder,
+    /// Controller hysteresis knobs.
+    pub controller: ControllerConfig,
+}
+
+impl QosConfig {
+    /// SLO-driven config with the default ladder and controller.
+    pub fn with_slo(slo: Duration) -> QosConfig {
+        QosConfig {
+            slo,
+            ladder: QualityLadder::default_ladder(),
+            controller: ControllerConfig::default(),
+        }
+    }
+}

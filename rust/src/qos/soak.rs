@@ -1,0 +1,183 @@
+//! The **open-loop soak generator**: Poisson arrivals at a configured
+//! offered rate, driven against a live [`Coordinator`] (DESIGN.md §10).
+//!
+//! Open-loop means arrivals never wait for completions — the schedule
+//! is drawn up front from a seeded exponential inter-arrival stream and
+//! requests are submitted with [`Coordinator::try_submit`], so a
+//! saturated service sees genuine overload (queueing, shedding) instead
+//! of the generator politely slowing down. This is the repo's first
+//! benchmark that measures the *service under contention* rather than a
+//! single pipeline (EXPERIMENTS.md §Soak).
+
+use crate::coordinator::{Coordinator, RenderRequest, RenderResponse};
+use crate::math::Camera;
+use crate::scene::rng::Rng;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+/// One soak run's knobs.
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    /// Offered rate, requests per second (Poisson arrivals).
+    pub rate: f64,
+    /// How long arrivals are generated for.
+    pub duration: Duration,
+    /// The latency objective: sets request deadlines (when
+    /// [`deadlines`](Self::deadlines) is on) and the goodput bar.
+    pub slo: Duration,
+    /// Seed for the arrival schedule — the same seed offers the same
+    /// load to every policy under comparison.
+    pub seed: u64,
+    /// Attach `deadline = arrival + slo` to every request (the
+    /// SLO-driven policy); off for the best-effort baseline.
+    pub deadlines: bool,
+}
+
+/// What one soak run measured.
+#[derive(Debug, Clone)]
+pub struct SoakReport {
+    /// Requests the schedule offered (all submitted via `try_submit`).
+    pub offered: usize,
+    /// Requests that rendered to completion.
+    pub completed: u64,
+    /// Of the completed, how many met the SLO (latency ≤ `slo`).
+    pub within_slo: u64,
+    /// Requests shed — at admission or at a worker pop.
+    pub shed: u64,
+    /// Completed frames rendered below full quality (rung > 0).
+    pub degraded: u64,
+    /// Non-shed render failures (should be zero on a healthy service).
+    pub render_errors: u64,
+    /// Response channels that died without a response — a worker crash;
+    /// always zero on a healthy run (the CI smoke asserts it).
+    pub transport_errors: u64,
+    /// Exact percentiles over completed-frame latencies.
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub mean_latency: Duration,
+    /// Wall-clock from first arrival to last collected response.
+    pub wall: Duration,
+    /// `within_slo / wall` — frames per second delivered on time.
+    pub goodput: f64,
+}
+
+/// Exact percentile over a sorted latency list.
+fn pct(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p / 100.0).round() as usize;
+    sorted[idx]
+}
+
+/// Draw the arrival schedule: offsets from t₀, exponential gaps at
+/// `rate` per second, until `duration`. Seeded — byte-reproducible.
+pub fn poisson_schedule(rate: f64, duration: Duration, seed: u64) -> Vec<Duration> {
+    assert!(rate > 0.0, "offered rate must be positive");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut arrivals = Vec::new();
+    loop {
+        // inverse-CDF exponential; 1 - U keeps the log argument in (0, 1]
+        let u = 1.0 - rng.f32() as f64;
+        t += -u.ln() / rate;
+        if t >= duration.as_secs_f64() {
+            return arrivals;
+        }
+        arrivals.push(Duration::from_secs_f64(t));
+    }
+}
+
+/// Drive one soak run against `coord`: submit the schedule open-loop
+/// (poses cycle over `poses`, all at the same resolution so batching
+/// stays effective), then drain every response and aggregate.
+pub fn run_soak(
+    coord: &Coordinator,
+    scene: &str,
+    poses: &[Camera],
+    cfg: &SoakConfig,
+) -> SoakReport {
+    assert!(!poses.is_empty(), "soak needs at least one pose");
+    let schedule = poisson_schedule(cfg.rate, cfg.duration, cfg.seed);
+    let t0 = Instant::now();
+    let mut rxs: Vec<Receiver<RenderResponse>> = Vec::with_capacity(schedule.len());
+    for (i, &offset) in schedule.iter().enumerate() {
+        let now = t0.elapsed();
+        if offset > now {
+            std::thread::sleep(offset - now);
+        }
+        let mut request =
+            RenderRequest::new(i as u64, scene.to_string(), poses[i % poses.len()]);
+        if cfg.deadlines {
+            request.deadline = Some(Instant::now() + cfg.slo);
+        }
+        rxs.push(coord.try_submit(request));
+    }
+
+    let mut latencies: Vec<Duration> = Vec::with_capacity(rxs.len());
+    let (mut shed, mut degraded, mut render_errors, mut transport_errors) = (0u64, 0, 0, 0);
+    for rx in rxs {
+        match rx.recv() {
+            Ok(resp) if resp.shed => shed += 1,
+            Ok(resp) if resp.error.is_some() => render_errors += 1,
+            Ok(resp) => {
+                if resp.rung > 0 {
+                    degraded += 1;
+                }
+                latencies.push(resp.latency);
+            }
+            Err(_) => transport_errors += 1,
+        }
+    }
+    let wall = t0.elapsed();
+    let mean = if latencies.is_empty() {
+        Duration::ZERO
+    } else {
+        latencies.iter().sum::<Duration>() / latencies.len() as u32
+    };
+    let within_slo = latencies.iter().filter(|&&l| l <= cfg.slo).count() as u64;
+    latencies.sort_unstable();
+    SoakReport {
+        offered: schedule.len(),
+        completed: latencies.len() as u64,
+        within_slo,
+        shed,
+        degraded,
+        render_errors,
+        transport_errors,
+        p50: pct(&latencies, 50.0),
+        p95: pct(&latencies, 95.0),
+        p99: pct(&latencies, 99.0),
+        mean_latency: mean,
+        wall,
+        goodput: within_slo as f64 / wall.as_secs_f64().max(1e-9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_seeded_and_rate_shaped() {
+        let a = poisson_schedule(200.0, Duration::from_millis(500), 9);
+        let b = poisson_schedule(200.0, Duration::from_millis(500), 9);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        let c = poisson_schedule(200.0, Duration::from_millis(500), 10);
+        assert_ne!(a, c);
+        // ~100 expected arrivals; Poisson spread stays well inside ±60%
+        assert!((40..=160).contains(&a.len()), "{} arrivals", a.len());
+        // offsets are increasing and inside the window
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        assert!(a.last().unwrap() < &Duration::from_millis(500));
+    }
+
+    #[test]
+    fn percentiles_on_empty_and_singleton() {
+        assert_eq!(pct(&[], 99.0), Duration::ZERO);
+        let one = [Duration::from_millis(7)];
+        assert_eq!(pct(&one, 50.0), Duration::from_millis(7));
+        assert_eq!(pct(&one, 99.0), Duration::from_millis(7));
+    }
+}

@@ -7,6 +7,11 @@
 //! `scale_*` are log-space, and `rot_*` is an unnormalized (w,x,y,z)
 //! quaternion. This module reads/writes that exact layout so real trained
 //! checkpoints drop into the harness when available (DESIGN.md §1).
+//! Both `binary_little_endian` and `ascii` bodies are accepted on read
+//! (some exporters and most hand-edited fixtures are ascii);
+//! [`write_ply_ascii`] emits the ascii twin, with floats printed as
+//! Rust's shortest round-trip decimals so an ascii↔binary round trip is
+//! bit-exact (proved in the tests).
 
 use crate::math::{sh, util::sigmoid, Quat, Vec3};
 use crate::scene::gaussian::GaussianCloud;
@@ -37,8 +42,17 @@ impl From<io::Error> for PlyError {
     }
 }
 
-/// Parsed header: vertex count and property names in file order.
+/// Body encodings this loader understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PlyFormat {
+    BinaryLittleEndian,
+    Ascii,
+}
+
+/// Parsed header: body format, vertex count and property names in file
+/// order.
 struct Header {
+    format: PlyFormat,
     count: usize,
     properties: Vec<String>,
 }
@@ -49,6 +63,7 @@ fn parse_header<R: BufRead>(r: &mut R) -> Result<Header, PlyError> {
     if line.trim() != "ply" {
         return Err(PlyError::Format("missing 'ply' magic".into()));
     }
+    let mut format = None;
     let mut count = None;
     let mut properties = Vec::new();
     let mut in_vertex = false;
@@ -73,11 +88,16 @@ fn parse_header<R: BufRead>(r: &mut R) -> Result<Header, PlyError> {
         match parts.next() {
             Some("format") => {
                 let fmt = parts.next().ok_or_else(|| truncated("'format'"))?;
-                if fmt != "binary_little_endian" {
-                    return Err(PlyError::Format(format!(
-                        "header line {lineno}: unsupported format '{fmt}'"
-                    )));
-                }
+                format = Some(match fmt {
+                    "binary_little_endian" => PlyFormat::BinaryLittleEndian,
+                    "ascii" => PlyFormat::Ascii,
+                    _ => {
+                        return Err(PlyError::Format(format!(
+                            "header line {lineno}: unsupported format '{fmt}' \
+                             (expected binary_little_endian or ascii)"
+                        )))
+                    }
+                });
             }
             Some("element") => {
                 let name = parts.next().ok_or_else(|| truncated("'element'"))?;
@@ -109,8 +129,10 @@ fn parse_header<R: BufRead>(r: &mut R) -> Result<Header, PlyError> {
             _ => {}
         }
     }
+    let format =
+        format.ok_or_else(|| PlyError::Format("header has no 'format' line".into()))?;
     let count = count.ok_or_else(|| PlyError::Format("no vertex element".into()))?;
-    Ok(Header { count, properties })
+    Ok(Header { format, count, properties })
 }
 
 /// Infer SH degree from the number of `f_rest_*` properties.
@@ -151,10 +173,47 @@ pub fn read_ply<R: Read>(reader: R) -> Result<GaussianCloud, PlyError> {
     let mut buf = vec![0u8; stride * 4];
     let mut row = vec![0f32; stride];
     let mut sh_block = vec![[0f32; 3]; k];
-    for _ in 0..header.count {
-        r.read_exact(&mut buf)?;
-        for (j, chunk) in buf.chunks_exact(4).enumerate() {
-            row[j] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    let mut line = String::new();
+    for v in 0..header.count {
+        match header.format {
+            PlyFormat::BinaryLittleEndian => {
+                r.read_exact(&mut buf)?;
+                for (j, chunk) in buf.chunks_exact(4).enumerate() {
+                    row[j] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                }
+            }
+            PlyFormat::Ascii => {
+                // one vertex per non-blank line, whitespace-separated
+                loop {
+                    line.clear();
+                    if r.read_line(&mut line)? == 0 {
+                        return Err(PlyError::Format(format!(
+                            "ascii body ended at vertex {v} of {}",
+                            header.count
+                        )));
+                    }
+                    if !line.trim().is_empty() {
+                        break;
+                    }
+                }
+                let mut tokens = line.split_whitespace();
+                for (j, slot) in row.iter_mut().enumerate() {
+                    let tok = tokens.next().ok_or_else(|| {
+                        PlyError::Format(format!(
+                            "ascii vertex {v}: expected {stride} values, found {j}"
+                        ))
+                    })?;
+                    *slot = tok.parse::<f32>().map_err(|_| {
+                        PlyError::Format(format!("ascii vertex {v}: invalid float '{tok}'"))
+                    })?;
+                }
+                if let Some(extra) = tokens.next() {
+                    return Err(PlyError::Format(format!(
+                        "ascii vertex {v}: trailing value '{extra}' beyond the \
+                         {stride} declared properties"
+                    )));
+                }
+            }
         }
         let pos = Vec3::new(row[ix], row[iy], row[iz]);
         // f_rest layout in checkpoints: channel-major — all R coeffs for
@@ -175,14 +234,17 @@ pub fn read_ply<R: Read>(reader: R) -> Result<GaussianCloud, PlyError> {
     Ok(cloud)
 }
 
-/// Write a cloud in the 3DGS checkpoint layout (inverse conversions:
-/// log scales, logit opacity).
-pub fn write_ply<W: Write>(writer: W, cloud: &GaussianCloud) -> Result<(), PlyError> {
-    let mut w = BufWriter::new(writer);
+/// Write the checkpoint header for `cloud` with the given body format
+/// token (`binary_little_endian` / `ascii`).
+fn write_header<W: Write>(
+    w: &mut BufWriter<W>,
+    cloud: &GaussianCloud,
+    format: &str,
+) -> Result<(), PlyError> {
     let k = cloud.sh_coeffs_per_gaussian();
     let n_rest = 3 * (k - 1);
     writeln!(w, "ply")?;
-    writeln!(w, "format binary_little_endian 1.0")?;
+    writeln!(w, "format {format} 1.0")?;
     writeln!(w, "element vertex {}", cloud.len())?;
     for p in ["x", "y", "z", "nx", "ny", "nz"] {
         writeln!(w, "property float {p}")?;
@@ -201,36 +263,72 @@ pub fn write_ply<W: Write>(writer: W, cloud: &GaussianCloud) -> Result<(), PlyEr
         writeln!(w, "property float rot_{c}")?;
     }
     writeln!(w, "end_header")?;
+    Ok(())
+}
 
+/// One vertex's property values in checkpoint order (inverse
+/// conversions applied: log scales, logit opacity) — the single source
+/// both body writers serialize, so the two formats can never drift.
+fn vertex_values(cloud: &GaussianCloud, i: usize, out: &mut Vec<f32>) {
+    let k = cloud.sh_coeffs_per_gaussian();
     let logit = |o: f32| {
         let o = o.clamp(1e-6, 1.0 - 1e-6);
         (o / (1.0 - o)).ln()
     };
-    let put = |w: &mut BufWriter<W>, v: f32| w.write_all(&v.to_le_bytes());
+    out.clear();
+    let p = cloud.positions[i];
+    out.extend_from_slice(&[p.x, p.y, p.z, 0.0, 0.0, 0.0]);
+    let shs = cloud.sh_of(i);
+    for c in 0..3 {
+        out.push(shs[0][c]);
+    }
+    // channel-major rest block
+    for c in 0..3 {
+        for b in 1..k {
+            out.push(shs[b][c]);
+        }
+    }
+    out.push(logit(cloud.opacities[i]));
+    let s = cloud.scales[i];
+    out.extend_from_slice(&[s.x.ln(), s.y.ln(), s.z.ln()]);
+    let q = cloud.rotations[i];
+    out.extend_from_slice(&[q.w, q.x, q.y, q.z]);
+}
+
+/// Write a cloud in the 3DGS checkpoint layout, binary body.
+pub fn write_ply<W: Write>(writer: W, cloud: &GaussianCloud) -> Result<(), PlyError> {
+    let mut w = BufWriter::new(writer);
+    write_header(&mut w, cloud, "binary_little_endian")?;
+    let mut row = Vec::new();
     for i in 0..cloud.len() {
-        let p = cloud.positions[i];
-        for v in [p.x, p.y, p.z, 0.0, 0.0, 0.0] {
-            put(&mut w, v)?;
+        vertex_values(cloud, i, &mut row);
+        for v in &row {
+            w.write_all(&v.to_le_bytes())?;
         }
-        let shs = cloud.sh_of(i);
-        for c in 0..3 {
-            put(&mut w, shs[0][c])?;
-        }
-        // channel-major rest block
-        for c in 0..3 {
-            for b in 1..k {
-                put(&mut w, shs[b][c])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a cloud in the 3DGS checkpoint layout, ascii body: one vertex
+/// per line, floats as Rust's shortest round-trip decimals — parsing
+/// the output reproduces every `f32` bit-exactly, so ascii and binary
+/// round trips yield identical clouds (pinned by the tests).
+pub fn write_ply_ascii<W: Write>(writer: W, cloud: &GaussianCloud) -> Result<(), PlyError> {
+    let mut w = BufWriter::new(writer);
+    write_header(&mut w, cloud, "ascii")?;
+    let mut row = Vec::new();
+    for i in 0..cloud.len() {
+        vertex_values(cloud, i, &mut row);
+        let mut first = true;
+        for v in &row {
+            if !first {
+                write!(w, " ")?;
             }
+            write!(w, "{v}")?;
+            first = false;
         }
-        put(&mut w, logit(cloud.opacities[i]))?;
-        let s = cloud.scales[i];
-        for v in [s.x.ln(), s.y.ln(), s.z.ln()] {
-            put(&mut w, v)?;
-        }
-        let q = cloud.rotations[i];
-        for v in [q.w, q.x, q.y, q.z] {
-            put(&mut w, v)?;
-        }
+        writeln!(w)?;
     }
     w.flush()?;
     Ok(())
@@ -282,9 +380,81 @@ mod tests {
     }
 
     #[test]
-    fn rejects_ascii_format() {
-        let data = b"ply\nformat ascii 1.0\nelement vertex 0\nend_header\n";
-        assert!(matches!(read_ply(&data[..]), Err(PlyError::Format(_))));
+    fn accepts_ascii_format_and_rejects_others() {
+        // an ascii checkpoint round-trips through the ascii writer
+        let source = scene_by_name("train").unwrap().synthesize(0.0001);
+        let mut txt = Vec::new();
+        write_ply_ascii(&mut txt, &source).unwrap();
+        assert!(txt.starts_with(b"ply\nformat ascii 1.0\n"));
+        let cloud = read_ply(&txt[..]).unwrap();
+        assert_eq!(cloud.len(), source.len());
+        // unknown formats still fail with the line number
+        let bad = b"ply\nformat binary_big_endian 1.0\nelement vertex 0\nend_header\n";
+        let msg = read_ply(&bad[..]).unwrap_err().to_string();
+        assert!(msg.contains("unsupported format"), "{msg}");
+        // a header with no format line at all is rejected
+        let none = b"ply\nelement vertex 0\nend_header\n";
+        let msg = read_ply(&none[..]).unwrap_err().to_string();
+        assert!(msg.contains("no 'format' line"), "{msg}");
+    }
+
+    #[test]
+    fn ascii_and_binary_roundtrips_are_bit_identical() {
+        let cloud = scene_by_name("train").unwrap().synthesize(0.0002);
+        let mut bin = Vec::new();
+        write_ply(&mut bin, &cloud).unwrap();
+        let via_binary = read_ply(&bin[..]).unwrap();
+        let mut txt = Vec::new();
+        write_ply_ascii(&mut txt, &cloud).unwrap();
+        let via_ascii = read_ply(&txt[..]).unwrap();
+
+        assert_eq!(via_ascii.len(), via_binary.len());
+        assert_eq!(via_ascii.sh_degree, via_binary.sh_degree);
+        for i in 0..via_binary.len() {
+            let (a, b) = (&via_ascii, &via_binary);
+            assert_eq!(
+                a.positions[i].x.to_bits(),
+                b.positions[i].x.to_bits(),
+                "pos x {i}"
+            );
+            assert_eq!(a.positions[i].y.to_bits(), b.positions[i].y.to_bits());
+            assert_eq!(a.positions[i].z.to_bits(), b.positions[i].z.to_bits());
+            assert_eq!(a.scales[i].x.to_bits(), b.scales[i].x.to_bits(), "scale {i}");
+            assert_eq!(a.scales[i].y.to_bits(), b.scales[i].y.to_bits());
+            assert_eq!(a.scales[i].z.to_bits(), b.scales[i].z.to_bits());
+            assert_eq!(a.opacities[i].to_bits(), b.opacities[i].to_bits(), "opacity {i}");
+            let (qa, qb) = (a.rotations[i], b.rotations[i]);
+            for (x, y) in [(qa.w, qb.w), (qa.x, qb.x), (qa.y, qb.y), (qa.z, qb.z)] {
+                assert_eq!(x.to_bits(), y.to_bits(), "rot {i}");
+            }
+            for (sa, sb) in a.sh_of(i).iter().zip(b.sh_of(i).iter()) {
+                for c in 0..3 {
+                    assert_eq!(sa[c].to_bits(), sb[c].to_bits(), "sh {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ascii_body_errors_are_precise() {
+        let head = "ply\nformat ascii 1.0\nelement vertex 2\nproperty float x\nproperty float y\nproperty float z\nproperty float f_dc_0\nproperty float f_dc_1\nproperty float f_dc_2\nproperty float opacity\nproperty float scale_0\nproperty float scale_1\nproperty float scale_2\nproperty float rot_0\nproperty float rot_1\nproperty float rot_2\nproperty float rot_3\nend_header\n";
+        let row_ok = "0 0 0 0.5 0.5 0.5 0 0.1 0.1 0.1 1 0 0 0\n";
+        // truncated row
+        let data = format!("{head}{row_ok}1 2 3\n");
+        let msg = read_ply(data.as_bytes()).unwrap_err().to_string();
+        assert!(msg.contains("vertex 1") && msg.contains("found 3"), "{msg}");
+        // junk token
+        let data = format!("{head}{row_ok}{}", row_ok.replace("0.5", "zebra"));
+        let msg = read_ply(data.as_bytes()).unwrap_err().to_string();
+        assert!(msg.contains("invalid float 'zebra'"), "{msg}");
+        // trailing values
+        let data = format!("{head}{row_ok}{} 9 9\n", row_ok.trim());
+        let msg = read_ply(data.as_bytes()).unwrap_err().to_string();
+        assert!(msg.contains("trailing value"), "{msg}");
+        // body that ends early
+        let data = format!("{head}{row_ok}");
+        let msg = read_ply(data.as_bytes()).unwrap_err().to_string();
+        assert!(msg.contains("ended at vertex 1"), "{msg}");
     }
 
     #[test]

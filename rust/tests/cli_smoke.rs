@@ -1,0 +1,100 @@
+//! CLI contract smoke: exit codes and flag strictness (`main.rs`).
+//!
+//! `0` success, `1` runtime failure, `2` usage error — scripts and CI
+//! must be able to tell misuse from breakage, and a typoed flag must
+//! never silently benchmark at its default value.
+
+use std::process::Command;
+
+fn gemm_gs() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gemm-gs"))
+}
+
+#[test]
+fn no_args_prints_usage_and_exits_zero() {
+    let out = gemm_gs().output().expect("spawn");
+    assert!(out.status.success(), "bare invocation must exit 0: {:?}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("subcommands:"), "usage missing: {stdout}");
+    assert!(stdout.contains("bench-soak"), "usage must list bench-soak: {stdout}");
+}
+
+#[test]
+fn help_subcommand_exits_zero() {
+    for arg in ["help", "--help"] {
+        let out = gemm_gs().arg(arg).output().expect("spawn");
+        assert!(out.status.success(), "'{arg}' must exit 0: {:?}", out.status);
+    }
+}
+
+#[test]
+fn unknown_subcommand_exits_nonzero() {
+    let out = gemm_gs().arg("frobnicate").output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "unknown subcommand must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown subcommand 'frobnicate'"), "{stderr}");
+}
+
+#[test]
+fn malformed_flag_value_exits_nonzero() {
+    // --scale is parsed for every subcommand; junk must exit 2, not
+    // silently run at the default scale
+    let out = gemm_gs().args(["fig1", "--scale", "banana"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "bad numeric flag must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("invalid number 'banana'"), "{stderr}");
+}
+
+#[test]
+fn missing_flag_value_exits_nonzero() {
+    let out = gemm_gs().args(["inspect", "--scale"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("expects a value"), "{stderr}");
+}
+
+#[test]
+fn stray_positional_exits_nonzero() {
+    let out = gemm_gs().args(["inspect", "stray"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unexpected argument 'stray'"), "{stderr}");
+}
+
+#[test]
+fn bad_accel_and_backend_values_exit_two() {
+    // enum-valued flags follow the same exit-2 contract as numeric ones
+    let out = gemm_gs().args(["render", "--accel", "nope"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "bad --accel must exit 2");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--accel"));
+
+    let out = gemm_gs().args(["serve", "--backend", "nope"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "bad --backend must exit 2");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--backend"));
+}
+
+#[test]
+fn bad_ladder_spec_exits_nonzero() {
+    let out = gemm_gs()
+        .args(["serve", "--frames", "1", "--slo-ms", "50", "--ladder", "1.0,nope"])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "malformed --ladder must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--ladder"), "{stderr}");
+}
+
+#[test]
+fn fig1_succeeds() {
+    // the cheapest real subcommand: a pure datasheet table
+    let out = gemm_gs().arg("fig1").output().expect("spawn");
+    assert!(out.status.success(), "fig1 failed: {:?}", out.status);
+    assert!(String::from_utf8_lossy(&out.stdout).contains("Figure 1"));
+}
+
+#[test]
+fn unknown_scene_exits_one() {
+    let out = gemm_gs().args(["render", "--scene", "atlantis"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(1), "runtime failure must exit 1");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown scene"));
+}

@@ -1,0 +1,243 @@
+//! Integration tests for the deadline-aware QoS subsystem (DESIGN.md
+//! §10) at the public API surface:
+//!
+//! * **rung-0 byte-identity** — a QoS-enabled coordinator with no
+//!   pressure renders every accel method bit-for-bit the same as the
+//!   direct (non-QoS) pipeline;
+//! * **ladder monotonicity** — down the default ladder, both the
+//!   perfmodel cost and the *measured* (Gaussian, tile) pair count are
+//!   non-increasing (cost strictly so);
+//! * **deadline semantics** — unmeetable work is shed with explicit
+//!   responses, never rendered late or surfaced as an error;
+//! * **soak accounting** — a short open-loop run answers every request
+//!   with zero transport errors and exports shed/rung metrics.
+
+use gemm_gs::accel::AccelKind;
+use gemm_gs::bench_harness::soak;
+use gemm_gs::coordinator::{Coordinator, CoordinatorConfig, RenderRequest};
+use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::pipeline::plan::plan_frame;
+use gemm_gs::pipeline::render::{render_frame, RenderConfig};
+use gemm_gs::qos::{QosConfig, QualityLadder};
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const SCALE: f64 = 0.001;
+
+fn camera(w: u32, h: u32) -> Camera {
+    Camera::look_at(
+        Vec3::new(0.0, 1.0, -8.0),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        w,
+        h,
+    )
+}
+
+fn qos_coordinator(
+    cloud: Arc<gemm_gs::scene::gaussian::GaussianCloud>,
+    slo: Duration,
+    workers: usize,
+) -> Coordinator {
+    let mut scenes = HashMap::new();
+    scenes.insert("train".to_string(), cloud);
+    Coordinator::start(
+        CoordinatorConfig {
+            workers,
+            qos: Some(QosConfig::with_slo(slo)),
+            ..CoordinatorConfig::default()
+        },
+        scenes,
+    )
+}
+
+/// The acceptance invariant: rung 0 through a QoS service is
+/// byte-identical to the default (non-QoS) render path, for every
+/// accel method — QoS at rest must be a no-op on pixels.
+#[test]
+fn rung0_is_byte_identical_to_the_default_path_for_every_method() {
+    let base = Arc::new(scene_by_name("train").unwrap().synthesize(SCALE));
+    // a 60 s SLO with one frame in flight: the controller cannot move
+    // off rung 0 (its window never fills) and nothing can be shed
+    let coord = qos_coordinator(Arc::clone(&base), Duration::from_secs(60), 2);
+    let cam = camera(160, 96);
+    for (i, kind) in AccelKind::all().into_iter().enumerate() {
+        let mut request = RenderRequest::new(i as u64, "train", cam)
+            .with_slo(Duration::from_secs(60));
+        request.accel = kind;
+        let resp = coord.render_sync(request);
+        assert!(resp.error.is_none(), "{}: {:?}", kind.cli_name(), resp.error);
+        assert_eq!(resp.rung, 0, "{}: no pressure, no degradation", kind.cli_name());
+
+        // the direct path: prepare the model exactly as the scene store
+        // does, then render with the method's veto
+        let method = kind.instantiate();
+        let model = if method.transforms_model() {
+            Arc::new(method.prepare_model(&base))
+        } else {
+            Arc::clone(&base)
+        };
+        let cfg = RenderConfig::default().with_accel(kind.instantiate());
+        let mut blender =
+            gemm_gs::coordinator::BackendKind::NativeGemm.instantiate(cfg.batch).unwrap();
+        let direct = render_frame(&model, &cam, &cfg, blender.as_mut());
+        assert!(
+            resp.image.unwrap().data == direct.image.data,
+            "{}: rung 0 through the QoS service is not byte-identical",
+            kind.cli_name()
+        );
+    }
+    let m = coord.metrics();
+    assert_eq!((m.shed, m.degraded_frames, m.rung), (0, 0, 0));
+    coord.shutdown();
+}
+
+/// Ladder property test: the perfmodel cost is strictly decreasing and
+/// the *measured* pair count non-increasing down every rung of the
+/// default ladder and of a parsed custom ladder — for several request
+/// methods, since a `None` rung inherits the request's method.
+#[test]
+fn ladder_cost_and_measured_pairs_are_monotone() {
+    let cloud = scene_by_name("train").unwrap().synthesize(SCALE * 2.0);
+    let cam = camera(640, 384);
+    let ladders = [
+        QualityLadder::default_ladder(),
+        QualityLadder::parse("1.0,0.6,0.4:flashgs,0.2:lightgaussian").unwrap(),
+    ];
+    for ladder in &ladders {
+        // LightGaussian is the documented inversion case: its inherited
+        // rungs render a pruned model, so the ladder's effective-rung
+        // mapping must skip the costlier full-model override — measured
+        // pairs stay non-increasing regardless
+        for request_accel in
+            [AccelKind::Vanilla, AccelKind::FlashGs, AccelKind::LightGaussian]
+        {
+            let mut last_pairs = usize::MAX;
+            for rung in 0..ladder.len() {
+                if rung > 0 {
+                    assert!(
+                        ladder.cost_ms(rung) < ladder.cost_ms(rung - 1),
+                        "rung {rung}: modelled cost must strictly decrease"
+                    );
+                }
+                let (scaled_cam, kind) = ladder.apply(rung, &cam, request_accel);
+                scaled_cam.validate().expect("rung camera must pass admission");
+                let method = kind.instantiate();
+                let model = if method.transforms_model() {
+                    method.prepare_model(&cloud)
+                } else {
+                    cloud.clone()
+                };
+                let cfg = RenderConfig::default().with_accel(kind.instantiate());
+                let plan = plan_frame(&model, &scaled_cam, &cfg);
+                let pairs = plan.stats().n_pairs;
+                assert!(
+                    pairs <= last_pairs,
+                    "rung {rung} ({}, scale {:.2}): {pairs} pairs > {last_pairs} above it",
+                    kind.cli_name(),
+                    ladder.rungs()[rung].res_scale
+                );
+                last_pairs = pairs;
+            }
+        }
+    }
+}
+
+/// Deadline semantics end to end: expired deadlines shed at admission,
+/// hopeless deadlines shed at the worker, and neither counts as an
+/// error; generous deadlines render normally.
+#[test]
+fn unmeetable_deadlines_shed_instead_of_rendering_late() {
+    let base = Arc::new(scene_by_name("train").unwrap().synthesize(SCALE));
+    let coord = qos_coordinator(base, Duration::from_millis(20), 1);
+    let cam = camera(320, 192);
+
+    // prime the execute-cost estimate with one honest frame
+    let warm = coord.render_sync(
+        RenderRequest::new(0, "train", cam).with_slo(Duration::from_secs(60)),
+    );
+    assert!(warm.error.is_none(), "{:?}", warm.error);
+
+    // expired before admission
+    let resp = coord.render_sync(
+        RenderRequest::new(1, "train", cam)
+            .with_deadline(Instant::now() - Duration::from_millis(1)),
+    );
+    assert!(resp.shed, "expired deadline must shed: {:?}", resp.error);
+
+    // a deadline tighter than the cheapest rung's cost: shed, not late.
+    // The 320×192 frame at this scale takes ≫ 50 µs even at the bottom
+    // of the ladder.
+    let resp = coord.render_sync(
+        RenderRequest::new(2, "train", cam).with_slo(Duration::from_micros(50)),
+    );
+    assert!(
+        resp.shed,
+        "hopeless deadline must shed, got error {:?} rung {}",
+        resp.error, resp.rung
+    );
+
+    let m = coord.metrics();
+    assert!(m.shed >= 2, "{m:?}");
+    assert_eq!(m.errors, 0, "sheds must never count as errors: {m:?}");
+    coord.shutdown();
+}
+
+/// A saturating deadlined burst drives the closed loop: every request
+/// is answered (served or shed), served-below-SLO frames dominate
+/// and degradation/shedding shows up in the exported metrics.
+#[test]
+fn saturating_burst_degrades_or_sheds_but_answers_everything() {
+    let base = Arc::new(scene_by_name("train").unwrap().synthesize(SCALE * 4.0));
+    let slo = Duration::from_millis(15);
+    let coord = qos_coordinator(base, slo, 2);
+    let cam = camera(480, 288);
+    let n = 64u64;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| coord.try_submit(RenderRequest::new(i, "train", cam).with_slo(slo)))
+        .collect();
+    let (mut served, mut shed) = (0u64, 0u64);
+    for rx in rxs {
+        let r = rx.recv().expect("transport failure");
+        if r.shed {
+            shed += 1;
+        } else {
+            assert!(r.error.is_none(), "{:?}", r.error);
+            served += 1;
+        }
+    }
+    assert_eq!(served + shed, n, "every request must be answered exactly once");
+    let m = coord.metrics();
+    assert_eq!(m.shed, shed);
+    assert_eq!(m.errors, 0);
+    assert!(
+        shed > 0 || m.degraded_frames > 0,
+        "a 64-frame burst against a 15 ms SLO must trigger the policy: {m:?}"
+    );
+    coord.shutdown();
+}
+
+/// The soak harness itself: a short run offers load open-loop to both
+/// policies, answers everything, and renders the comparison table with
+/// the metric exports the CI smoke greps for.
+#[test]
+fn short_soak_run_is_healthy_and_reports() {
+    let o = soak::run("train", 0.0005, 2, 150.0, Duration::from_millis(400), None, 3);
+    for (name, r) in [("best-effort", &o.best_effort), ("slo-driven", &o.slo_driven)] {
+        assert_eq!(r.transport_errors, 0, "{name}: transport errors");
+        assert_eq!(r.render_errors, 0, "{name}: render errors");
+        assert_eq!(r.completed + r.shed, r.offered as u64, "{name}: lost requests");
+    }
+    // the baseline never sheds by deadline (it has none) and never
+    // degrades; only queue overflow could shed it, and the soak queue
+    // is sized for the offered load
+    assert_eq!(o.best_effort.degraded, 0);
+    let table = soak::render(&o, "train", 2, Duration::from_millis(400));
+    for needle in ["best-effort", "slo-driven", "p99", "qos metrics exported: shed", "rung"]
+    {
+        assert!(table.contains(needle), "missing '{needle}' in:\n{table}");
+    }
+}
