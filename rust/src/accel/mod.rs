@@ -41,7 +41,7 @@ pub trait AccelMethod: Send + Sync {
 
     /// True when [`prepare_model`](Self::prepare_model) is a genuine
     /// transformation worth caching per `(scene, method)` in the
-    /// coordinator's scene store (c3dgs, LightGaussian). Methods that
+    /// coordinator's scene catalog (c3dgs, LightGaussian). Methods that
     /// leave the model untouched skip the cache and render the base
     /// cloud directly.
     fn transforms_model(&self) -> bool {

@@ -17,11 +17,14 @@
 //! while the baseline queues without bound.
 
 use super::report::Table;
-use crate::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use crate::coordinator::{
+    BackendKind, CatalogConfig, Coordinator, CoordinatorConfig, MetricsSnapshot, SceneSet,
+};
 use crate::pipeline::render::{render_frame, RenderConfig};
-use crate::qos::{run_soak, QosConfig, SoakConfig, SoakReport};
-use crate::scene::synthetic::scene_by_name;
-use crate::coordinator::MetricsSnapshot;
+use crate::qos::{run_soak, run_soak_with, QosConfig, SoakConfig, SoakReport};
+use crate::scene::rng::Rng;
+use crate::scene::source::SceneSource;
+use crate::scene::synthetic::{scene_by_name, table1_scenes};
 use crate::math::Camera;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -216,6 +219,217 @@ pub fn render(o: &SoakOutcome, scene: &str, workers: usize, duration: Duration) 
     out
 }
 
+/// One budget point of the multi-scene catalog sweep.
+#[derive(Debug, Clone)]
+pub struct MultiSoakRow {
+    /// The memory budget this row ran under (`None` = unbounded).
+    pub budget: Option<u64>,
+    /// The open-loop generator's aggregate (latency tail incl. parked
+    /// cold-load waits).
+    pub report: SoakReport,
+    /// Coordinator metrics after the run (loads/reloads/evictions).
+    pub metrics: MetricsSnapshot,
+}
+
+/// Everything one `bench-soak --scenes N` invocation measured
+/// (DESIGN.md §11, EXPERIMENTS.md §Catalog).
+#[derive(Debug, Clone)]
+pub struct MultiSoakOutcome {
+    /// Offered rate (req/s, auto-calibrated when the caller passed 0).
+    pub rate: f64,
+    /// The latency objective the percentiles are read against.
+    pub slo: Duration,
+    /// Scene names in Zipf-popularity order (rank 0 hottest).
+    pub scenes: Vec<String>,
+    /// Summed resident footprint of every scene at this sim scale.
+    pub total_footprint: u64,
+    /// Zipf exponent of the scene mix.
+    pub zipf: f64,
+    /// One row per swept budget.
+    pub rows: Vec<MultiSoakRow>,
+}
+
+/// Sampling CDF of a Zipf distribution over `n` ranks:
+/// `p(k) ∝ 1/(k+1)^s`. `s = 0` is uniform; larger `s` concentrates
+/// traffic on the head — the realistic shape for a scene mix where a
+/// few scenes are hot and a long tail is cold.
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let weights: Vec<f64> = (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    weights
+        .iter()
+        .map(|w| {
+            acc += w / total;
+            acc
+        })
+        .collect()
+}
+
+/// Run the multi-scene sweep: the *same* seeded Poisson schedule and
+/// the *same* seeded Zipf scene assignment driven against one
+/// coordinator per budget in `budget_fractions` (`None` = unbounded,
+/// `Some(f)` = `f × total_footprint`, floored at the largest single
+/// scene so every row can serve every scene instead of latching the
+/// biggest one as a permanent load failure). Scenes register as lazy
+/// synthetic sources, so every cold hit pays a real load and every
+/// eviction a real reload — the p99 column *is* the cold-load tail.
+pub fn run_multi(
+    scene_count: usize,
+    sim_scale: f64,
+    workers: usize,
+    rate: f64,
+    duration: Duration,
+    slo: Option<Duration>,
+    seed: u64,
+    zipf: f64,
+    budget_fractions: &[Option<f64>],
+) -> MultiSoakOutcome {
+    let all = table1_scenes();
+    assert!(
+        (2..=all.len()).contains(&scene_count),
+        "multi-scene sweep needs 2..=13 scenes, got {scene_count} (the CLI validates \
+         this before calling — silently sweeping fewer scenes than asked would \
+         mislabel the results)"
+    );
+    let specs: Vec<_> = all.into_iter().take(scene_count).collect();
+    let footprints: Vec<u64> =
+        specs.iter().map(|s| s.synthesize(sim_scale).footprint_bytes()).collect();
+    let total_footprint: u64 = footprints.iter().sum();
+    // every row must be able to serve every scene: a budget below the
+    // largest single footprint would latch that scene as a permanent
+    // load failure and fill the Errors column (the catalog's
+    // budget-too-small semantics), which is not what a residency sweep
+    // measures — floor each fraction at the largest scene
+    let max_footprint: u64 = footprints.iter().copied().max().unwrap_or(0);
+    let poses = orbit_poses(specs[0].width / 2, specs[0].height / 2);
+
+    // calibrate rate/SLO against the hottest scene, as `run` does
+    let cal_cloud = specs[0].synthesize(sim_scale);
+    let cal_cfg = RenderConfig::default();
+    let mut blender =
+        BackendKind::NativeGemm.instantiate(cal_cfg.batch).expect("native backend");
+    render_frame(&cal_cloud, &poses[0], &cal_cfg, blender.as_mut());
+    let frame_cost = render_frame(&cal_cloud, &poses[0], &cal_cfg, blender.as_mut())
+        .timings
+        .total()
+        .max(Duration::from_micros(200));
+    drop(blender);
+    let capacity = workers.max(1) as f64 / frame_cost.as_secs_f64();
+    let rate = if rate > 0.0 { rate } else { (capacity * 1.5).clamp(10.0, 5000.0) };
+    let slo = slo.unwrap_or_else(|| frame_cost.mul_f64(3.0).max(Duration::from_millis(2)));
+    let queue_capacity =
+        ((rate * duration.as_secs_f64()).ceil() as usize).clamp(64, 8192);
+
+    let cdf = zipf_cdf(specs.len(), zipf);
+    let names: Vec<String> = specs.iter().map(|s| s.name.to_string()).collect();
+    let rows = budget_fractions
+        .iter()
+        .map(|frac| {
+            let budget =
+                frac.map(|f| ((total_footprint as f64 * f) as u64).max(max_footprint));
+            let mut set = SceneSet::new();
+            for spec in &specs {
+                set.insert(
+                    spec.name,
+                    SceneSource::Synthetic { spec: spec.clone(), scale: sim_scale },
+                );
+            }
+            let coord = Coordinator::start(
+                CoordinatorConfig {
+                    workers: workers.max(1),
+                    queue_capacity,
+                    backend: BackendKind::NativeGemm,
+                    max_batch: 4,
+                    batch_timeout: Duration::from_millis(1),
+                    catalog: CatalogConfig { memory_budget: budget },
+                    ..CoordinatorConfig::default()
+                },
+                set,
+            );
+            // same seed per row → identical scene assignment across
+            // budgets; only residency behaviour differs
+            let mut pick = Rng::new(seed ^ 0x5ce0_cafe);
+            let names_for_pick = names.clone();
+            let cdf = cdf.clone();
+            let report = run_soak_with(
+                &coord,
+                move |_| {
+                    let u = pick.f32() as f64;
+                    let rank = cdf.iter().position(|&c| u <= c).unwrap_or(cdf.len() - 1);
+                    names_for_pick[rank].clone()
+                },
+                &poses,
+                &SoakConfig { rate, duration, slo, seed, deadlines: false },
+            );
+            let metrics = coord.metrics();
+            coord.shutdown();
+            MultiSoakRow { budget, report, metrics }
+        })
+        .collect();
+
+    MultiSoakOutcome { rate, slo, scenes: names, total_footprint, zipf, rows }
+}
+
+/// The budget-sweep table plus the metric-export lines the CI smoke and
+/// EXPERIMENTS.md read.
+pub fn render_multi(o: &MultiSoakOutcome, workers: usize, duration: Duration) -> String {
+    let mut t = Table::new(&[
+        "Budget",
+        "Offered",
+        "Done",
+        "Shed",
+        "Loads",
+        "Reloads",
+        "Evictions",
+        "p50 (ms)",
+        "p99 (ms)",
+        "MeanLoad (ms)",
+        "Errors",
+    ]);
+    for row in &o.rows {
+        let budget = match row.budget {
+            None => "unbounded".to_string(),
+            Some(b) => format!(
+                "{:.0}% ({} KiB)",
+                b as f64 / o.total_footprint as f64 * 100.0,
+                b / 1024
+            ),
+        };
+        t.row(vec![
+            budget,
+            row.report.offered.to_string(),
+            row.report.completed.to_string(),
+            row.report.shed.to_string(),
+            row.metrics.scene_loads.to_string(),
+            row.metrics.scene_reloads.to_string(),
+            row.metrics.scene_evictions.to_string(),
+            dur_ms(row.report.p50),
+            dur_ms(row.report.p99),
+            dur_ms(row.metrics.mean_scene_load),
+            (row.report.render_errors + row.report.transport_errors).to_string(),
+        ]);
+    }
+    let mut out = format!(
+        "Catalog soak — {:.0} req/s Poisson over {} scenes (Zipf s = {}), {:.1} s, \
+         {workers} workers, total footprint {} KiB\n\n{}",
+        o.rate,
+        o.scenes.len(),
+        o.zipf,
+        duration.as_secs_f64(),
+        o.total_footprint / 1024,
+        t.render()
+    );
+    let transport: u64 = o.rows.iter().map(|r| r.report.transport_errors).sum();
+    out.push_str(&format!("\ntransport errors: {transport} across the sweep\n"));
+    out.push_str(
+        "reading: shrinking the budget trades memory for cold-load tail — loads, \
+         reloads and evictions rise while p50 (hot scenes, resident) moves far less \
+         than p99 (cold scenes, parked behind reloads)\n",
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,5 +462,59 @@ mod tests {
         assert!(table.contains("slo-driven") && table.contains("p99"));
         assert!(table.contains("transport errors: 0 (best-effort) / 0 (slo-driven)"));
         assert!(table.contains("qos metrics exported: shed"));
+    }
+
+    #[test]
+    fn zipf_cdf_is_monotone_and_head_heavy() {
+        let cdf = zipf_cdf(5, 1.1);
+        assert_eq!(cdf.len(), 5);
+        assert!(cdf.windows(2).all(|w| w[0] < w[1]));
+        assert!((cdf[4] - 1.0).abs() < 1e-12);
+        // rank 0 carries more mass than uniform would
+        assert!(cdf[0] > 1.0 / 5.0);
+        // s = 0 degenerates to uniform
+        let flat = zipf_cdf(4, 0.0);
+        assert!((flat[0] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_scene_sweep_accounts_and_evicts_under_a_tight_budget() {
+        // 3 synthetic scenes, same seeded Zipf mix, two budgets: the
+        // unbounded row must never evict; the half-footprint row (any
+        // two of the three scenes exceed it) must evict and reload
+        let o = run_multi(
+            3,
+            0.0005,
+            2,
+            150.0,
+            Duration::from_millis(400),
+            None,
+            23,
+            1.1,
+            &[None, Some(0.5)],
+        );
+        assert_eq!(o.scenes.len(), 3);
+        assert_eq!(o.rows.len(), 2);
+        for row in &o.rows {
+            let r = &row.report;
+            assert_eq!(r.transport_errors, 0, "worker died: {row:?}");
+            assert_eq!(r.render_errors, 0, "render errors: {row:?}");
+            assert_eq!(r.completed + r.shed, r.offered as u64, "requests lost");
+            // every touched scene loaded at least once, lazily
+            assert!(row.metrics.scene_loads >= 1);
+        }
+        let unbounded = &o.rows[0];
+        assert_eq!(unbounded.metrics.scene_evictions, 0, "unbounded budget evicted");
+        assert_eq!(unbounded.metrics.scene_reloads, 0);
+        let tight = &o.rows[1];
+        assert!(
+            tight.metrics.scene_evictions >= 1,
+            "half-footprint budget never evicted: {:?}",
+            tight.metrics
+        );
+        assert!(tight.metrics.scene_reloads >= 1, "evicted scenes never reloaded");
+        let table = render_multi(&o, 2, Duration::from_millis(400));
+        assert!(table.contains("unbounded") && table.contains("Evictions"));
+        assert!(table.contains("transport errors: 0 across the sweep"));
     }
 }

@@ -65,7 +65,7 @@ pub fn run(scene: &str, sim_scale: f64, frames: usize, step: f32) -> Vec<Traject
         .map(|&accel| {
             let method = accel.instantiate();
             // compression methods plan the transformed model, exactly as
-            // the coordinator's scene store serves it (DESIGN.md §8)
+            // the coordinator's scene catalog serves it (DESIGN.md §8)
             let cloud = if method.transforms_model() {
                 Arc::new(method.prepare_model(&base))
             } else {

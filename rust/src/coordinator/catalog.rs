@@ -1,0 +1,990 @@
+//! The **scene catalog**: budgeted residency for every scene the
+//! service can render (DESIGN.md §11).
+//!
+//! The pre-catalog coordinator required every scene loaded into a map
+//! before [`super::Coordinator::start`] and kept all of them resident
+//! forever — a non-starter for a deployment serving many scenes whose
+//! summed footprint exceeds memory. The catalog replaces that map with
+//! a registry of [`SceneSource`]s and a per-scene residency state
+//! machine:
+//!
+//! ```text
+//! registered ──acquire──▶ loading ──ok──▶ resident ──LRU evict──▶ registered
+//!      ▲                     │                                        │
+//!      └──────(reload on next acquire, byte-identical)◀───────────────┘
+//!                            └──err──▶ failed (latched, explicit errors)
+//! ```
+//!
+//! * **Lazy, off-request-path loading.** The first acquire of a
+//!   non-resident scene *parks* the caller's payloads (render jobs) and
+//!   spawns a loader thread; workers return to the queue immediately
+//!   instead of blocking on I/O, and concurrent acquires of the same
+//!   scene append to the parked queue rather than double-loading. When
+//!   the load completes, parked payloads are redelivered **in arrival
+//!   order** (FIFO fairness, pinned in `tests/e2e_catalog.rs`).
+//! * **Budgeted LRU eviction.** Resident clouds and their prepared
+//!   models are charged against [`CatalogConfig::memory_budget`] via
+//!   [`GaussianCloud::footprint_bytes`]; when the total exceeds the
+//!   budget, the least-recently-acquired *idle* scene is evicted — its
+//!   cloud and every prepared model dropped — and transparently
+//!   reloaded from its source on the next acquire, byte-identically
+//!   (the sources are deterministic, `scene::source`).
+//! * **Pinning by reference.** A scene is *idle* exactly when the
+//!   catalog holds the only `Arc` to its cloud and prepared models.
+//!   In-flight batches and warm trajectory sessions
+//!   ([`crate::pipeline::trajectory::TrajectorySession`] keeps the
+//!   cloud `Arc` alive) therefore pin their scene automatically — no
+//!   explicit pin bookkeeping, and no window in which a pinned scene
+//!   can be evicted, because new references are only minted under the
+//!   catalog lock. The scene just admitted by a load is likewise never
+//!   the victim of its own admission. A consequence: the budget is a
+//!   *target* the catalog converges to — when the pinned working set
+//!   alone exceeds it, the catalog runs over budget (and reports so in
+//!   the `bytes_resident` gauge) rather than evicting memory that a
+//!   render still holds — and converges back under budget at the next
+//!   acquire or admission after those references drop.
+//! * **Failure latching.** A source that fails to load (malformed
+//!   checkpoint — the line-numbered [`PlyError`] travels into the
+//!   message — missing file, or a footprint larger than the whole
+//!   budget) parks no further work: the failure is delivered to every
+//!   parked payload as an explicit error and latched, so subsequent
+//!   acquires fail fast with the same message.
+//!
+//! The catalog is generic over the parked payload `P` so it can be unit
+//! tested without a running service; `coordinator::service` instantiates
+//! it with its job type and wires [`SceneCatalog::connect`] to re-inject
+//! redelivered jobs into the admission queues.
+
+use super::metrics::Metrics;
+use crate::accel::AccelKind;
+use crate::scene::gaussian::GaussianCloud;
+use crate::scene::ply::PlyError;
+use crate::scene::source::{sources_from_dir, SceneSource};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::Instant;
+
+/// Residency knobs for the scene catalog (DESIGN.md §11;
+/// `CoordinatorConfig::catalog`).
+#[derive(Debug, Clone, Default)]
+pub struct CatalogConfig {
+    /// Estimated-bytes budget for resident clouds plus prepared
+    /// models ([`GaussianCloud::footprint_bytes`]). `None` (the
+    /// default) never evicts — the pre-catalog behaviour. See the
+    /// module docs for the convergence semantics when pinned scenes
+    /// exceed the budget.
+    pub memory_budget: Option<u64>,
+}
+
+/// An ordered set of scene registrations handed to
+/// [`super::Coordinator::start`]. Converts from the pre-catalog
+/// `HashMap<String, Arc<GaussianCloud>>` (as [`SceneSource::Preloaded`]
+/// entries, sorted by name) so existing callers keep working unchanged.
+#[derive(Default)]
+pub struct SceneSet {
+    entries: Vec<(String, SceneSource)>,
+}
+
+impl SceneSet {
+    /// Empty set.
+    pub fn new() -> SceneSet {
+        SceneSet::default()
+    }
+
+    /// Add one registration. Later duplicates of a name are ignored at
+    /// registration time (first wins).
+    pub fn insert(&mut self, name: impl Into<String>, source: SceneSource) -> &mut Self {
+        self.entries.push((name.into(), source));
+        self
+    }
+
+    /// One lazy [`SceneSource::PlyFile`] registration per `*.ply` in
+    /// `dir`, named by file stem, sorted by name (the CLI's
+    /// `--scene-dir`). Nothing is read beyond the directory listing —
+    /// checkpoints load on first use.
+    pub fn from_dir(dir: &Path) -> Result<SceneSet, PlyError> {
+        Ok(SceneSet { entries: sources_from_dir(dir)? })
+    }
+
+    /// Number of registrations.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no scenes are registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|(n, _)| n.clone()).collect()
+    }
+}
+
+impl From<HashMap<String, Arc<GaussianCloud>>> for SceneSet {
+    fn from(map: HashMap<String, Arc<GaussianCloud>>) -> SceneSet {
+        let mut entries: Vec<(String, SceneSource)> = map
+            .into_iter()
+            .map(|(name, cloud)| (name, SceneSource::Preloaded(cloud)))
+            .collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        SceneSet { entries }
+    }
+}
+
+impl From<Vec<(String, SceneSource)>> for SceneSet {
+    fn from(entries: Vec<(String, SceneSource)>) -> SceneSet {
+        SceneSet { entries }
+    }
+}
+
+/// Outcome of [`SceneCatalog::acquire`].
+pub enum Acquire<P> {
+    /// The scene is resident: the cloud to render with (the prepared
+    /// model when `accel` transforms, DESIGN.md §8) and the caller's
+    /// payloads, returned untouched.
+    Ready(Arc<GaussianCloud>, Vec<P>),
+    /// The scene is loading. The payloads were parked and will be
+    /// redelivered through the [`connect`](SceneCatalog::connect)ed
+    /// hook — in arrival order — when the load completes (or failed
+    /// through the failure hook if it doesn't).
+    Parked,
+    /// Unknown scene, latched load failure, or a footprint the budget
+    /// can never admit: the payloads come back with the reason, for
+    /// the caller to answer with explicit error responses.
+    Failed(Vec<P>, String),
+}
+
+/// Point-in-time residency summary (tests, the `serve` stats line).
+#[derive(Debug, Clone)]
+pub struct CatalogStats {
+    /// Scenes registered, resident or not.
+    pub registered: usize,
+    /// Resident scene names in eviction order: least recently acquired
+    /// first.
+    pub resident_lru: Vec<String>,
+    /// Scenes with a load in flight.
+    pub loading: usize,
+    /// Estimated bytes charged against the budget.
+    pub bytes_resident: u64,
+}
+
+type RedeliverHook<P> = Box<dyn Fn(Vec<P>) + Send + Sync>;
+type FailHook<P> = Box<dyn Fn(P, &str) + Send + Sync>;
+
+struct Hooks<P> {
+    redeliver: RedeliverHook<P>,
+    fail: FailHook<P>,
+}
+
+/// One resident scene: the base cloud plus the per-method prepared
+/// models (DESIGN.md §8), all charged against the budget together and
+/// evicted together.
+struct Resident {
+    cloud: Arc<GaussianCloud>,
+    /// Bytes charged: the base cloud plus every accounted prepared
+    /// model.
+    bytes: u64,
+    /// LRU tick of the last acquire.
+    last_use: u64,
+    /// Per-method `prepare_model` cells; the `OnceLock` keeps the map
+    /// lock out of the (expensive) transform and deduplicates
+    /// concurrent prepares, exactly as the pre-catalog store did.
+    prepared: HashMap<AccelKind, Arc<OnceLock<Arc<GaussianCloud>>>>,
+}
+
+enum EntryState<P> {
+    /// Source registered, nothing in memory.
+    Registered,
+    /// A loader thread is running; payloads parked in arrival order.
+    Loading(Vec<P>),
+    /// Cloud (and prepared models) in memory.
+    Resident(Resident),
+    /// The load failed; acquires fail fast with this message.
+    Failed(String),
+}
+
+struct Entry<P> {
+    source: SceneSource,
+    state: EntryState<P>,
+    /// Completed loads — `> 0` at load time marks a *reload*.
+    loads: u64,
+    /// Bumped on every successful load so a stale prepared-model
+    /// charge can never land on a later residency.
+    generation: u64,
+}
+
+struct Inner<P> {
+    entries: HashMap<String, Entry<P>>,
+    /// Monotone LRU clock, bumped per acquire.
+    tick: u64,
+    bytes_resident: u64,
+    /// Acquire-time opportunistic eviction is suppressed until this
+    /// tick after a *futile* scan (over budget, no evictable victim —
+    /// e.g. the pinned or preloaded working set alone exceeds the
+    /// budget). Without this, a permanently over-budget catalog would
+    /// pay an O(scenes) scan on every acquire, under the lock that
+    /// serializes every worker. Cleared whenever residency changes, so
+    /// convergence after pins drop is delayed by at most
+    /// [`EVICT_BACKOFF_TICKS`] acquires.
+    evict_backoff_until: u64,
+}
+
+/// Acquires to skip between futile opportunistic-eviction scans.
+const EVICT_BACKOFF_TICKS: u64 = 64;
+
+/// The catalog. See the module docs for the residency state machine;
+/// `P` is the parked-payload type (the service's render jobs).
+pub struct SceneCatalog<P> {
+    cfg: CatalogConfig,
+    inner: Mutex<Inner<P>>,
+    /// Redelivery/failure hooks. Kept out of `inner`, and behind an
+    /// `Arc` that callers clone *before* invoking a hook, so a
+    /// redelivery blocking on a full admission queue never holds any
+    /// catalog lock — other loads complete and `disconnect` proceeds
+    /// concurrently. Taken by [`disconnect`](Self::disconnect) at
+    /// shutdown so the catalog stops holding queue senders (an
+    /// in-flight hook call keeps its clone alive until it returns).
+    hooks: Mutex<Option<Arc<Hooks<P>>>>,
+    /// Self-handle for spawning loader threads from `&self` methods
+    /// (set by [`new`](Self::new) via `Arc::new_cyclic`).
+    weak: Weak<SceneCatalog<P>>,
+    metrics: Arc<Metrics>,
+}
+
+/// What [`SceneCatalog::acquire`] decided under the lock, executed
+/// after releasing it (loads spawn a thread, prepares run the
+/// transform).
+enum Action<P> {
+    StartLoad { source: SceneSource, reload: bool },
+    Prepare {
+        cell: Arc<OnceLock<Arc<GaussianCloud>>>,
+        base: Arc<GaussianCloud>,
+        generation: u64,
+        method: Arc<dyn crate::accel::AccelMethod>,
+        payloads: Vec<P>,
+    },
+}
+
+impl<P: Send + 'static> SceneCatalog<P> {
+    /// Empty catalog publishing residency gauges through `metrics`.
+    pub fn new(cfg: CatalogConfig, metrics: Arc<Metrics>) -> Arc<SceneCatalog<P>> {
+        Arc::new_cyclic(|weak| SceneCatalog {
+            cfg,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                tick: 0,
+                bytes_resident: 0,
+                evict_backoff_until: 0,
+            }),
+            hooks: Mutex::new(None),
+            weak: weak.clone(),
+            metrics,
+        })
+    }
+
+    /// Wire the parked-payload hooks: `redeliver` re-injects payloads
+    /// (in the order given) once their scene is resident; `fail`
+    /// answers a payload whose load failed. Without connected hooks,
+    /// completed loads drop their parked payloads — connect before
+    /// serving.
+    pub fn connect(
+        &self,
+        redeliver: impl Fn(Vec<P>) + Send + Sync + 'static,
+        fail: impl Fn(P, &str) + Send + Sync + 'static,
+    ) {
+        *self.hooks.lock().expect("catalog hooks poisoned") =
+            Some(Arc::new(Hooks { redeliver: Box::new(redeliver), fail: Box::new(fail) }));
+    }
+
+    /// Drop the hooks (releasing any queue senders they hold) and fail
+    /// every currently parked payload with a shutting-down error.
+    /// Called by the coordinator before it closes its queues, so
+    /// shutdown never deadlocks on a channel the catalog keeps open.
+    /// Idempotent.
+    pub fn disconnect(&self) {
+        let hooks = self.hooks.lock().expect("catalog hooks poisoned").take();
+        let mut drained: Vec<P> = Vec::new();
+        {
+            let mut guard = self.inner.lock().expect("catalog lock poisoned");
+            for entry in guard.entries.values_mut() {
+                if let EntryState::Loading(parked) = &mut entry.state {
+                    drained.append(parked);
+                    entry.state = EntryState::Registered;
+                }
+            }
+        }
+        if !drained.is_empty() {
+            self.metrics.unpark(drained.len() as u64);
+            if let Some(h) = &hooks {
+                for p in drained {
+                    (h.fail)(p, "render service is shutting down");
+                }
+            }
+        }
+    }
+
+    /// Register `source` under `name`. Returns `false` (and changes
+    /// nothing) when the name is taken. [`SceneSource::Preloaded`]
+    /// entries are admitted as resident immediately — their source
+    /// pins the memory regardless, so lazy loading could never save
+    /// anything — and are never LRU victims (the source's `Arc` keeps
+    /// them permanently pinned).
+    pub fn register(&self, name: impl Into<String>, source: SceneSource) -> bool {
+        let name = name.into();
+        let mut guard = self.inner.lock().expect("catalog lock poisoned");
+        let inner = &mut *guard;
+        if inner.entries.contains_key(&name) {
+            return false;
+        }
+        let state = match &source {
+            SceneSource::Preloaded(cloud) => {
+                let bytes = cloud.footprint_bytes();
+                inner.bytes_resident += bytes;
+                inner.tick += 1;
+                EntryState::Resident(Resident {
+                    cloud: Arc::clone(cloud),
+                    bytes,
+                    last_use: inner.tick,
+                    prepared: HashMap::new(),
+                })
+            }
+            _ => EntryState::Registered,
+        };
+        inner
+            .entries
+            .insert(name, Entry { source, state, loads: 0, generation: 0 });
+        self.metrics.set_scenes_registered(inner.entries.len() as u64);
+        self.publish_residency(inner);
+        true
+    }
+
+    /// Register every entry of `set` (duplicates ignored, first wins).
+    pub fn register_set(&self, set: SceneSet) {
+        for (name, source) in set.entries {
+            self.register(name, source);
+        }
+    }
+
+    /// The heart of the request path: resolve `scene` under `accel`
+    /// for the given payloads. See [`Acquire`] for the three outcomes;
+    /// a `Ready` bumps the scene's LRU stamp, and a first-use of a
+    /// model-transforming method runs `prepare_model` here (off the
+    /// lock, deduplicated) and charges the result against the budget.
+    pub fn acquire(&self, scene: &str, accel: AccelKind, payloads: Vec<P>) -> Acquire<P> {
+        let action = {
+            let mut guard = self.inner.lock().expect("catalog lock poisoned");
+            let inner = &mut *guard;
+            inner.tick += 1;
+            let tick = inner.tick;
+            // Opportunistic convergence: an admission that ran while
+            // every candidate was pinned leaves the catalog over
+            // budget; pins released since then make it reducible now.
+            // A futile scan (nothing evictable) backs off so a
+            // permanently over-budget working set doesn't pay an
+            // O(scenes) scan per request under this lock.
+            if tick >= inner.evict_backoff_until
+                && self.cfg.memory_budget.is_some_and(|b| inner.bytes_resident > b)
+            {
+                let freed = self.evict_to_budget(inner, Some(scene));
+                if freed == 0 {
+                    inner.evict_backoff_until = tick + EVICT_BACKOFF_TICKS;
+                } else {
+                    self.publish_residency(inner);
+                }
+            }
+            let Some(entry) = inner.entries.get_mut(scene) else {
+                return Acquire::Failed(payloads, format!("unknown scene '{scene}'"));
+            };
+            match &mut entry.state {
+                EntryState::Failed(msg) => {
+                    return Acquire::Failed(payloads, msg.clone());
+                }
+                EntryState::Loading(parked) => {
+                    self.metrics.park(payloads.len() as u64);
+                    parked.extend(payloads);
+                    return Acquire::Parked;
+                }
+                EntryState::Registered => {
+                    self.metrics.park(payloads.len() as u64);
+                    let reload = entry.loads > 0;
+                    let source = entry.source.clone();
+                    entry.state = EntryState::Loading(payloads);
+                    Action::StartLoad { source, reload }
+                }
+                EntryState::Resident(res) => {
+                    res.last_use = tick;
+                    let method = accel.instantiate();
+                    if !method.transforms_model() {
+                        return Acquire::Ready(Arc::clone(&res.cloud), payloads);
+                    }
+                    let cell = Arc::clone(
+                        res.prepared
+                            .entry(accel)
+                            .or_insert_with(|| Arc::new(OnceLock::new())),
+                    );
+                    Action::Prepare {
+                        cell,
+                        base: Arc::clone(&res.cloud),
+                        generation: entry.generation,
+                        method,
+                        payloads,
+                    }
+                }
+            }
+        };
+        match action {
+            Action::StartLoad { source, reload } => {
+                let name = scene.to_string();
+                let this = self.weak.upgrade().expect("catalog alive during acquire");
+                std::thread::spawn(move || this.run_load(name, source, reload));
+                Acquire::Parked
+            }
+            Action::Prepare { cell, base, generation, method, payloads } => {
+                let mut initialized = false;
+                let prepared = Arc::clone(cell.get_or_init(|| {
+                    initialized = true;
+                    self.metrics.record_prepare();
+                    Arc::new(method.prepare_model(&base))
+                }));
+                if initialized {
+                    self.charge_prepared(scene, generation, prepared.footprint_bytes());
+                }
+                Acquire::Ready(prepared, payloads)
+            }
+        }
+    }
+
+    /// The loader thread: materialize the source off every lock, then
+    /// admit the cloud (evicting LRU victims to fit the budget) and
+    /// redeliver the parked payloads — or latch the failure and fail
+    /// them.
+    fn run_load(self: Arc<Self>, name: String, source: SceneSource, reload: bool) {
+        let t0 = Instant::now();
+        let result = source.load();
+        let elapsed = t0.elapsed();
+        let (parked, outcome) = {
+            let mut guard = self.inner.lock().expect("catalog lock poisoned");
+            let inner = &mut *guard;
+            inner.tick += 1;
+            let tick = inner.tick;
+            let Some(entry) = inner.entries.get_mut(&name) else {
+                return;
+            };
+            let parked = match std::mem::replace(&mut entry.state, EntryState::Registered) {
+                EntryState::Loading(p) => p,
+                other => {
+                    // a disconnect() drained us mid-load; restore what
+                    // it left and discard this (now ownerless) result
+                    entry.state = other;
+                    return;
+                }
+            };
+            match result {
+                Err(e) => {
+                    let msg = format!("scene '{name}': {e}");
+                    entry.state = EntryState::Failed(msg.clone());
+                    self.metrics.record_load_failure();
+                    (parked, Err(msg))
+                }
+                Ok(cloud) => {
+                    let bytes = cloud.footprint_bytes();
+                    let too_big = self.cfg.memory_budget.is_some_and(|b| bytes > b);
+                    if too_big {
+                        let budget = self.cfg.memory_budget.unwrap_or(0);
+                        let msg = format!(
+                            "scene '{name}' footprint (~{bytes} B) exceeds the memory \
+                             budget ({budget} B) even with every other scene evicted"
+                        );
+                        entry.state = EntryState::Failed(msg.clone());
+                        self.metrics.record_load_failure();
+                        (parked, Err(msg))
+                    } else {
+                        entry.loads += 1;
+                        entry.generation += 1;
+                        entry.state = EntryState::Resident(Resident {
+                            cloud,
+                            bytes,
+                            last_use: tick,
+                            prepared: HashMap::new(),
+                        });
+                        inner.bytes_resident += bytes;
+                        self.evict_to_budget(inner, Some(name.as_str()));
+                        self.metrics.record_scene_load(elapsed, reload);
+                        self.publish_residency(inner);
+                        (parked, Ok(()))
+                    }
+                }
+            }
+        };
+        let n = parked.len() as u64;
+        if n > 0 {
+            self.metrics.unpark(n);
+        }
+        match outcome {
+            Ok(()) => self.redeliver(parked),
+            Err(msg) => self.fail_all(parked, &msg),
+        }
+    }
+
+    /// Charge a freshly prepared model against the budget (unless the
+    /// scene was reloaded meanwhile — `generation` guards the stale
+    /// case) and evict to fit.
+    fn charge_prepared(&self, scene: &str, generation: u64, bytes: u64) {
+        let mut guard = self.inner.lock().expect("catalog lock poisoned");
+        let inner = &mut *guard;
+        let mut charged = false;
+        if let Some(entry) = inner.entries.get_mut(scene) {
+            if entry.generation == generation {
+                if let EntryState::Resident(res) = &mut entry.state {
+                    res.bytes += bytes;
+                    charged = true;
+                }
+            }
+        }
+        if charged {
+            inner.bytes_resident += bytes;
+            self.evict_to_budget(inner, Some(scene));
+            self.publish_residency(inner);
+        }
+    }
+
+    /// Evict least-recently-acquired idle scenes until the budget is
+    /// met. `protect` (the scene being admitted) is never a victim,
+    /// and neither is any scene whose cloud or prepared models are
+    /// still referenced outside the catalog (see the module docs on
+    /// pinning). Stops — possibly still over budget — when no victim
+    /// remains. Returns the bytes freed; residency changed, so the
+    /// futile-scan backoff is reset either way.
+    fn evict_to_budget(&self, inner: &mut Inner<P>, protect: Option<&str>) -> u64 {
+        inner.evict_backoff_until = 0;
+        let Some(budget) = self.cfg.memory_budget else { return 0 };
+        let mut total_freed = 0u64;
+        while inner.bytes_resident > budget {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(name, _)| protect != Some(name.as_str()))
+                .filter_map(|(name, e)| match &e.state {
+                    EntryState::Resident(r) if Self::evictable(r) => {
+                        Some((r.last_use, name.clone()))
+                    }
+                    _ => None,
+                })
+                .min()
+                .map(|(_, name)| name);
+            let Some(name) = victim else { break };
+            let freed = match inner.entries.get_mut(&name) {
+                Some(e) => match std::mem::replace(&mut e.state, EntryState::Registered) {
+                    EntryState::Resident(r) => r.bytes,
+                    other => {
+                        e.state = other;
+                        0
+                    }
+                },
+                None => 0,
+            };
+            if freed == 0 {
+                break;
+            }
+            inner.bytes_resident = inner.bytes_resident.saturating_sub(freed);
+            total_freed += freed;
+            self.metrics.record_eviction();
+        }
+        total_freed
+    }
+
+    /// A resident scene is evictable when the catalog holds the only
+    /// reference to its cloud and every prepared model. Sound because
+    /// external references are only minted under the catalog lock
+    /// (`acquire`), which eviction holds.
+    fn evictable(r: &Resident) -> bool {
+        if Arc::strong_count(&r.cloud) != 1 {
+            return false;
+        }
+        r.prepared.values().all(|cell| {
+            if Arc::strong_count(cell) != 1 {
+                return false; // a prepare is in flight on this cell
+            }
+            match cell.get() {
+                Some(model) => Arc::strong_count(model) == 1,
+                None => true,
+            }
+        })
+    }
+
+    fn publish_residency(&self, inner: &Inner<P>) {
+        let resident = inner
+            .entries
+            .values()
+            .filter(|e| matches!(e.state, EntryState::Resident(_)))
+            .count() as u64;
+        self.metrics.set_residency(resident, inner.bytes_resident);
+    }
+
+    /// Clone the hooks handle out of the lock — a hook call that blocks
+    /// (bounded queue) must never serialize other loads or shutdown.
+    fn hooks_handle(&self) -> Option<Arc<Hooks<P>>> {
+        self.hooks.lock().expect("catalog hooks poisoned").clone()
+    }
+
+    fn redeliver(&self, parked: Vec<P>) {
+        if parked.is_empty() {
+            return;
+        }
+        if let Some(h) = self.hooks_handle() {
+            (h.redeliver)(parked);
+        }
+        // hooks gone: shutdown already failed/drained what it could;
+        // dropping the payloads closes their response channels
+    }
+
+    fn fail_all(&self, parked: Vec<P>, msg: &str) {
+        if parked.is_empty() {
+            return;
+        }
+        if let Some(h) = self.hooks_handle() {
+            for p in parked {
+                (h.fail)(p, msg);
+            }
+        }
+    }
+
+    /// Whether `scene` is registered (any state).
+    pub fn is_registered(&self, scene: &str) -> bool {
+        self.inner.lock().expect("catalog lock poisoned").entries.contains_key(scene)
+    }
+
+    /// Registration and residency in one lock round-trip — what
+    /// admission control wants per request: `None` when unregistered,
+    /// otherwise `Some(resident)`.
+    pub fn residency(&self, scene: &str) -> Option<bool> {
+        let guard = self.inner.lock().expect("catalog lock poisoned");
+        guard
+            .entries
+            .get(scene)
+            .map(|e| matches!(e.state, EntryState::Resident(_)))
+    }
+
+    /// Whether `scene` is resident right now (admission control uses
+    /// this to price the load a request would have to wait for).
+    pub fn is_resident(&self, scene: &str) -> bool {
+        let guard = self.inner.lock().expect("catalog lock poisoned");
+        matches!(
+            guard.entries.get(scene).map(|e| &e.state),
+            Some(EntryState::Resident(_))
+        )
+    }
+
+    /// Registered scene names, sorted.
+    pub fn registered_names(&self) -> Vec<String> {
+        let guard = self.inner.lock().expect("catalog lock poisoned");
+        let mut names: Vec<String> = guard.entries.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Prepared models fully initialized across resident scenes
+    /// (`Coordinator::prepared_models_cached`).
+    pub fn prepared_count(&self) -> usize {
+        let guard = self.inner.lock().expect("catalog lock poisoned");
+        guard
+            .entries
+            .values()
+            .filter_map(|e| match &e.state {
+                EntryState::Resident(r) => Some(r),
+                _ => None,
+            })
+            .map(|r| r.prepared.values().filter(|c| c.get().is_some()).count())
+            .sum()
+    }
+
+    /// Residency summary (LRU order, bytes, loading count).
+    pub fn stats(&self) -> CatalogStats {
+        let guard = self.inner.lock().expect("catalog lock poisoned");
+        let mut resident: Vec<(u64, String)> = guard
+            .entries
+            .iter()
+            .filter_map(|(name, e)| match &e.state {
+                EntryState::Resident(r) => Some((r.last_use, name.clone())),
+                _ => None,
+            })
+            .collect();
+        resident.sort();
+        CatalogStats {
+            registered: guard.entries.len(),
+            resident_lru: resident.into_iter().map(|(_, n)| n).collect(),
+            loading: guard
+                .entries
+                .values()
+                .filter(|e| matches!(e.state, EntryState::Loading(_)))
+                .count(),
+            bytes_resident: guard.bytes_resident,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::synthetic::scene_by_name;
+    use std::time::Duration;
+
+    /// A catalog over `u64` payloads with hooks that collect into
+    /// shared vectors — the service without the service.
+    fn harness(
+        budget: Option<u64>,
+    ) -> (
+        Arc<SceneCatalog<u64>>,
+        Arc<Metrics>,
+        Arc<Mutex<Vec<u64>>>,
+        Arc<Mutex<Vec<(u64, String)>>>,
+    ) {
+        let metrics = Arc::new(Metrics::new());
+        let catalog: Arc<SceneCatalog<u64>> =
+            SceneCatalog::new(CatalogConfig { memory_budget: budget }, Arc::clone(&metrics));
+        let delivered = Arc::new(Mutex::new(Vec::new()));
+        let failed = Arc::new(Mutex::new(Vec::new()));
+        let (d, f) = (Arc::clone(&delivered), Arc::clone(&failed));
+        catalog.connect(
+            move |jobs| d.lock().unwrap().extend(jobs),
+            move |job, msg| f.lock().unwrap().push((job, msg.to_string())),
+        );
+        (catalog, metrics, delivered, failed)
+    }
+
+    fn wait_until(mut cond: impl FnMut() -> bool) {
+        for _ in 0..500 {
+            if cond() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("condition not reached within 5 s");
+    }
+
+    fn synthetic(name: &str, scale: f64) -> SceneSource {
+        SceneSource::Synthetic { spec: scene_by_name(name).unwrap(), scale }
+    }
+
+    /// In-memory PLY bytes of a small synthesized cloud — all
+    /// registrations share the byte buffer, so footprints are equal.
+    fn ply_bytes(scale: f64) -> Arc<Vec<u8>> {
+        let cloud = scene_by_name("train").unwrap().synthesize(scale);
+        let mut buf = Vec::new();
+        crate::scene::ply::write_ply(&mut buf, &cloud).unwrap();
+        Arc::new(buf)
+    }
+
+    #[test]
+    fn lazy_load_parks_fifo_and_redelivers_in_order() {
+        let (catalog, metrics, delivered, _failed) = harness(None);
+        assert!(catalog.register("train", synthetic("train", 0.0005)));
+        assert!(!catalog.is_resident("train"));
+        // the first acquire parks its payloads and starts the load
+        assert!(matches!(
+            catalog.acquire("train", AccelKind::Vanilla, vec![1, 2, 3]),
+            Acquire::Parked
+        ));
+        wait_until(|| delivered.lock().unwrap().len() == 3);
+        assert_eq!(*delivered.lock().unwrap(), vec![1, 2, 3], "FIFO order lost");
+        assert!(catalog.is_resident("train"));
+        let m = metrics.snapshot();
+        assert_eq!(m.scene_loads, 1, "parked acquires must not double-load");
+        assert_eq!(m.parked, 0, "park gauge must return to zero");
+        assert!(m.mean_scene_load > Duration::ZERO);
+        // now resident: acquire is synchronous
+        match catalog.acquire("train", AccelKind::Vanilla, vec![9]) {
+            Acquire::Ready(cloud, jobs) => {
+                assert!(!cloud.is_empty());
+                assert_eq!(jobs, vec![9]);
+            }
+            _ => panic!("resident scene must be Ready"),
+        }
+    }
+
+    #[test]
+    fn unknown_scene_and_duplicate_registration() {
+        let (catalog, _m, _d, _f) = harness(None);
+        assert!(catalog.register("train", synthetic("train", 0.0005)));
+        assert!(!catalog.register("train", synthetic("truck", 0.0005)), "duplicate name");
+        match catalog.acquire("atlantis", AccelKind::Vanilla, vec![5]) {
+            Acquire::Failed(jobs, msg) => {
+                assert_eq!(jobs, vec![5]);
+                assert!(msg.contains("unknown scene 'atlantis'"), "{msg}");
+            }
+            _ => panic!("unknown scene must fail"),
+        }
+        assert_eq!(catalog.registered_names(), vec!["train".to_string()]);
+    }
+
+    #[test]
+    fn load_failure_latches_with_the_ply_line_number() {
+        let (catalog, metrics, _d, failed) = harness(None);
+        catalog.register(
+            "broken",
+            SceneSource::PlyBytes(Arc::new(b"ply\nformat\n".to_vec())),
+        );
+        assert!(matches!(
+            catalog.acquire("broken", AccelKind::Vanilla, vec![7]),
+            Acquire::Parked
+        ));
+        wait_until(|| !failed.lock().unwrap().is_empty());
+        let (job, msg) = failed.lock().unwrap()[0].clone();
+        assert_eq!(job, 7);
+        assert!(msg.contains("line 2") && msg.contains("truncated 'format'"), "{msg}");
+        // latched: the next acquire fails fast with the same message
+        match catalog.acquire("broken", AccelKind::Vanilla, vec![8]) {
+            Acquire::Failed(jobs, m2) => {
+                assert_eq!(jobs, vec![8]);
+                assert_eq!(m2, msg);
+            }
+            _ => panic!("latched failure must fail fast"),
+        }
+        assert_eq!(metrics.snapshot().scene_load_failures, 1);
+    }
+
+    #[test]
+    fn budget_too_small_for_one_scene_fails_explicitly() {
+        let (catalog, metrics, _d, failed) = harness(Some(64));
+        catalog.register("train", synthetic("train", 0.0005));
+        assert!(matches!(
+            catalog.acquire("train", AccelKind::Vanilla, vec![1]),
+            Acquire::Parked
+        ));
+        wait_until(|| !failed.lock().unwrap().is_empty());
+        let (_, msg) = failed.lock().unwrap()[0].clone();
+        assert!(msg.contains("exceeds the memory budget"), "{msg}");
+        assert!(!catalog.is_resident("train"));
+        assert_eq!(metrics.snapshot().bytes_resident, 0);
+    }
+
+    #[test]
+    fn lru_eviction_prefers_the_coldest_idle_scene() {
+        let bytes = ply_bytes(0.0005);
+        let cloud = crate::scene::ply::read_ply(&bytes[..]).unwrap();
+        let fp = cloud.footprint_bytes();
+        // budget fits two copies, not three
+        let (catalog, metrics, delivered, _f) = harness(Some(2 * fp + fp / 2));
+        for name in ["a", "b", "c"] {
+            catalog.register(name, SceneSource::PlyBytes(Arc::clone(&bytes)));
+        }
+        let load = |name: &str, tag: u64| {
+            if let Acquire::Ready(..) = catalog.acquire(name, AccelKind::Vanilla, vec![tag]) {
+                return; // already resident
+            }
+            wait_until(|| delivered.lock().unwrap().contains(&tag));
+        };
+        load("a", 1);
+        load("b", 2);
+        // touch a: b becomes the LRU victim
+        load("a", 3);
+        load("c", 4);
+        wait_until(|| metrics.snapshot().scene_evictions == 1);
+        let stats = catalog.stats();
+        assert_eq!(stats.resident_lru, vec!["a".to_string(), "c".to_string()]);
+        assert!(!catalog.is_resident("b"));
+        assert!(stats.bytes_resident <= 2 * fp + fp / 2);
+        // b reloads transparently on the next acquire
+        load("b", 5);
+        assert!(catalog.is_resident("b"));
+        assert!(metrics.snapshot().scene_reloads >= 1);
+    }
+
+    #[test]
+    fn externally_held_clouds_are_pinned_against_eviction() {
+        let bytes = ply_bytes(0.0005);
+        let fp = crate::scene::ply::read_ply(&bytes[..]).unwrap().footprint_bytes();
+        let (catalog, metrics, delivered, _f) = harness(Some(fp + fp / 2));
+        catalog.register("a", SceneSource::PlyBytes(Arc::clone(&bytes)));
+        catalog.register("b", SceneSource::PlyBytes(Arc::clone(&bytes)));
+        catalog.acquire("a", AccelKind::Vanilla, vec![1]);
+        wait_until(|| delivered.lock().unwrap().contains(&1));
+        // hold a's cloud, as an executing batch or a warm session would
+        let held = match catalog.acquire("a", AccelKind::Vanilla, vec![2]) {
+            Acquire::Ready(cloud, _) => cloud,
+            _ => panic!("a must be resident"),
+        };
+        catalog.acquire("b", AccelKind::Vanilla, vec![3]);
+        wait_until(|| delivered.lock().unwrap().contains(&3));
+        // over budget, but a is pinned and b was just admitted: both stay
+        assert!(catalog.is_resident("a") && catalog.is_resident("b"));
+        assert_eq!(metrics.snapshot().scene_evictions, 0);
+        assert!(metrics.snapshot().bytes_resident > fp + fp / 2, "honest over-budget gauge");
+        drop(held);
+        // the next admission can now evict the idle pair down to budget
+        catalog.register("c", SceneSource::PlyBytes(Arc::clone(&bytes)));
+        catalog.acquire("c", AccelKind::Vanilla, vec![4]);
+        wait_until(|| delivered.lock().unwrap().contains(&4));
+        wait_until(|| metrics.snapshot().scene_evictions >= 1);
+    }
+
+    #[test]
+    fn preloaded_scenes_are_resident_at_registration_and_never_evicted() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.0005));
+        let fp = cloud.footprint_bytes();
+        // budget below even one footprint: preloaded still registers
+        let (catalog, metrics, _d, _f) = harness(Some(fp / 2));
+        catalog.register("train", SceneSource::Preloaded(Arc::clone(&cloud)));
+        assert!(catalog.is_resident("train"));
+        match catalog.acquire("train", AccelKind::Vanilla, vec![1]) {
+            Acquire::Ready(got, jobs) => {
+                assert!(Arc::ptr_eq(&got, &cloud));
+                assert_eq!(jobs, vec![1]);
+            }
+            _ => panic!("preloaded must be Ready immediately"),
+        }
+        let m = metrics.snapshot();
+        assert_eq!(m.scene_loads, 0, "no load thread for preloaded scenes");
+        assert_eq!(m.scene_evictions, 0, "source-pinned scenes are not victims");
+        assert_eq!(m.bytes_resident, fp);
+    }
+
+    #[test]
+    fn prepared_models_are_charged_and_evicted_with_their_scene() {
+        let (catalog, metrics, delivered, _f) = harness(None);
+        catalog.register("train", synthetic("train", 0.001));
+        catalog.acquire("train", AccelKind::Vanilla, vec![1]);
+        wait_until(|| delivered.lock().unwrap().contains(&1));
+        let base_bytes = metrics.snapshot().bytes_resident;
+        let prepared = match catalog.acquire("train", AccelKind::LightGaussian, vec![2]) {
+            Acquire::Ready(cloud, _) => cloud,
+            _ => panic!("resident scene must prepare synchronously"),
+        };
+        assert_eq!(catalog.prepared_count(), 1);
+        assert_eq!(metrics.snapshot().prepared_models, 1);
+        assert_eq!(
+            metrics.snapshot().bytes_resident,
+            base_bytes + prepared.footprint_bytes(),
+            "prepared model must be charged against the budget"
+        );
+        // second acquire reuses the cache — no extra prepare, no extra charge
+        catalog.acquire("train", AccelKind::LightGaussian, vec![3]);
+        assert_eq!(metrics.snapshot().prepared_models, 1);
+        assert_eq!(
+            metrics.snapshot().bytes_resident,
+            base_bytes + prepared.footprint_bytes()
+        );
+    }
+
+    #[test]
+    fn disconnect_fails_parked_payloads_and_is_idempotent() {
+        let (catalog, metrics, _d, failed) = harness(None);
+        catalog.register("train", synthetic("train", 0.0005));
+        catalog.acquire("train", AccelKind::Vanilla, vec![1, 2]);
+        catalog.disconnect();
+        {
+            let f = failed.lock().unwrap();
+            // either the load won the race (payloads redelivered before
+            // disconnect) or both were failed with the shutdown message
+            if !f.is_empty() {
+                assert_eq!(f.len(), 2);
+                assert!(f[0].1.contains("shutting down"), "{}", f[0].1);
+            }
+        }
+        assert_eq!(metrics.parked_now(), 0);
+        catalog.disconnect(); // idempotent, no panic
+    }
+}

@@ -74,6 +74,19 @@ pub struct Metrics {
     degraded_frames: AtomicU64,
     rung: AtomicU64,
     exec_ewma_us: AtomicU64,
+    // scene catalog (DESIGN.md §11): registration/residency gauges,
+    // load/eviction counters, and the load-latency estimate admission
+    // control adds for scenes that would have to be (re)loaded
+    scenes_registered: AtomicU64,
+    scenes_resident: AtomicU64,
+    bytes_resident: AtomicU64,
+    parked: AtomicU64,
+    scene_loads: AtomicU64,
+    scene_reloads: AtomicU64,
+    scene_load_failures: AtomicU64,
+    scene_evictions: AtomicU64,
+    scene_load_us_sum: AtomicU64,
+    load_ewma_us: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -99,6 +112,16 @@ impl Default for Metrics {
             degraded_frames: AtomicU64::new(0),
             rung: AtomicU64::new(0),
             exec_ewma_us: AtomicU64::new(0),
+            scenes_registered: AtomicU64::new(0),
+            scenes_resident: AtomicU64::new(0),
+            bytes_resident: AtomicU64::new(0),
+            parked: AtomicU64::new(0),
+            scene_loads: AtomicU64::new(0),
+            scene_reloads: AtomicU64::new(0),
+            scene_load_failures: AtomicU64::new(0),
+            scene_evictions: AtomicU64::new(0),
+            scene_load_us_sum: AtomicU64::new(0),
+            load_ewma_us: AtomicU64::new(0),
         }
     }
 }
@@ -200,6 +223,69 @@ impl Metrics {
         self.queue_depth.load(Ordering::Relaxed)
     }
 
+    /// Publish the catalog's registered-scene count (gauge).
+    pub fn set_scenes_registered(&self, n: u64) {
+        self.scenes_registered.store(n, Ordering::Relaxed);
+    }
+
+    /// Publish the catalog's residency gauges: scenes resident and
+    /// estimated bytes charged against the budget (DESIGN.md §11).
+    pub fn set_residency(&self, scenes: u64, bytes: u64) {
+        self.scenes_resident.store(scenes, Ordering::Relaxed);
+        self.bytes_resident.store(bytes, Ordering::Relaxed);
+    }
+
+    /// Record one completed scene load (a cold load, or a reload of a
+    /// previously evicted scene) and fold its latency into the EWMA
+    /// admission control uses to price pending loads.
+    pub fn record_scene_load(&self, latency: Duration, reload: bool) {
+        self.scene_loads.fetch_add(1, Ordering::Relaxed);
+        if reload {
+            self.scene_reloads.fetch_add(1, Ordering::Relaxed);
+        }
+        let us = latency.as_micros() as u64;
+        self.scene_load_us_sum.fetch_add(us, Ordering::Relaxed);
+        // same lock-free EWMA shape as `record_exec`: α = 1/5, races
+        // lose a sample of noise, never accumulate drift
+        let old = self.load_ewma_us.load(Ordering::Relaxed);
+        let new = if old == 0 { us.max(1) } else { (old * 4 + us) / 5 };
+        self.load_ewma_us.store(new.max(1), Ordering::Relaxed);
+    }
+
+    /// Record one failed scene load (malformed checkpoint, missing
+    /// file, or a footprint the budget can never admit).
+    pub fn record_load_failure(&self) {
+        self.scene_load_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one scene eviction (the LRU victim's cloud and prepared
+    /// models dropped to fit the budget).
+    pub fn record_eviction(&self) {
+        self.scene_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests currently parked behind an in-flight scene load.
+    pub fn parked_now(&self) -> u64 {
+        self.parked.load(Ordering::Relaxed)
+    }
+
+    /// Park `n` requests behind a scene load (gauge up).
+    pub fn park(&self, n: u64) {
+        self.parked.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Unpark `n` requests (redelivered or failed; gauge down).
+    pub fn unpark(&self, n: u64) {
+        self.parked.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// EWMA of scene-load latency — admission control's estimate of
+    /// the extra wait a request against a non-resident scene will pay
+    /// (`Duration::ZERO` until the first load completes).
+    pub fn load_estimate(&self) -> Duration {
+        Duration::from_micros(self.load_ewma_us.load(Ordering::Relaxed))
+    }
+
     /// Queue depth bookkeeping.
     pub fn enqueue(&self) {
         self.queue_depth.fetch_add(1, Ordering::Relaxed);
@@ -254,6 +340,24 @@ impl Metrics {
             shed: self.shed.load(Ordering::Relaxed),
             degraded_frames: self.degraded_frames.load(Ordering::Relaxed),
             rung: self.rung.load(Ordering::Relaxed),
+            scenes_registered: self.scenes_registered.load(Ordering::Relaxed),
+            scenes_resident: self.scenes_resident.load(Ordering::Relaxed),
+            bytes_resident: self.bytes_resident.load(Ordering::Relaxed),
+            parked: self.parked.load(Ordering::Relaxed),
+            scene_loads: self.scene_loads.load(Ordering::Relaxed),
+            scene_reloads: self.scene_reloads.load(Ordering::Relaxed),
+            scene_load_failures: self.scene_load_failures.load(Ordering::Relaxed),
+            scene_evictions: self.scene_evictions.load(Ordering::Relaxed),
+            mean_scene_load: {
+                let loads = self.scene_loads.load(Ordering::Relaxed);
+                if loads == 0 {
+                    Duration::ZERO
+                } else {
+                    Duration::from_micros(
+                        self.scene_load_us_sum.load(Ordering::Relaxed) / loads,
+                    )
+                }
+            },
             mean_batch_size: {
                 let b = self.batches.load(Ordering::Relaxed);
                 if b == 0 {
@@ -269,17 +373,28 @@ impl Metrics {
 /// Immutable snapshot of [`Metrics`].
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Frames rendered to completion.
     pub frames: u64,
+    /// Failed requests (admission rejections + render failures).
     pub errors: u64,
+    /// Requests admitted but not yet executing at snapshot time.
     pub queue_depth: u64,
+    /// Mean end-to-end latency over completed frames.
     pub mean_latency: Duration,
-    /// Log-linear bucket upper bounds (≤ ~25 % high) — lock-free.
+    /// Median latency as a log-linear bucket upper bound (≤ ~25 %
+    /// high) — lock-free, like `p95`/`p99`.
     pub p50: Duration,
+    /// 95th-percentile latency (bucket upper bound).
     pub p95: Duration,
+    /// 99th-percentile latency (bucket upper bound).
     pub p99: Duration,
+    /// Total preprocess-stage time across frames.
     pub stage_pre: Duration,
+    /// Total duplicate-stage time across frames.
     pub stage_dup: Duration,
+    /// Total sort-stage time across frames.
     pub stage_sort: Duration,
+    /// Total blend-stage time across frames.
     pub stage_blend: Duration,
     /// Batches executed (one per worker drain, counting singletons).
     pub batches: u64,
@@ -301,6 +416,28 @@ pub struct MetricsSnapshot {
     pub degraded_frames: u64,
     /// The active quality-ladder rung (gauge; 0 = full quality).
     pub rung: u64,
+    /// Scenes registered with the catalog (gauge, DESIGN.md §11).
+    pub scenes_registered: u64,
+    /// Scenes currently resident in memory (gauge).
+    pub scenes_resident: u64,
+    /// Estimated bytes of resident clouds + prepared models charged
+    /// against the catalog's memory budget (gauge).
+    pub bytes_resident: u64,
+    /// Requests currently parked behind an in-flight scene load
+    /// (gauge; admission control adds these to its queue estimate).
+    pub parked: u64,
+    /// Scene loads completed (cold loads + reloads).
+    pub scene_loads: u64,
+    /// Of `scene_loads`, how many re-materialized a previously evicted
+    /// scene.
+    pub scene_reloads: u64,
+    /// Scene loads that failed (malformed checkpoint, missing file, or
+    /// a footprint the budget can never admit).
+    pub scene_load_failures: u64,
+    /// Scenes evicted by the LRU policy to fit the memory budget.
+    pub scene_evictions: u64,
+    /// Mean scene-load latency over completed loads.
+    pub mean_scene_load: Duration,
 }
 
 impl MetricsSnapshot {
@@ -464,6 +601,34 @@ mod tests {
             est > Duration::from_millis(1) && est < Duration::from_millis(3),
             "EWMA {est:?} did not converge toward the new level"
         );
+    }
+
+    #[test]
+    fn catalog_counters_track() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.scenes_registered, s.scenes_resident, s.bytes_resident), (0, 0, 0));
+        assert_eq!((s.scene_loads, s.scene_reloads, s.scene_evictions), (0, 0, 0));
+        assert_eq!(s.mean_scene_load, Duration::ZERO);
+        assert_eq!(m.load_estimate(), Duration::ZERO);
+
+        m.set_scenes_registered(3);
+        m.set_residency(2, 4096);
+        m.record_scene_load(Duration::from_millis(10), false);
+        m.record_scene_load(Duration::from_millis(20), true);
+        m.record_eviction();
+        m.record_load_failure();
+        m.park(4);
+        m.unpark(1);
+        let s = m.snapshot();
+        assert_eq!((s.scenes_registered, s.scenes_resident, s.bytes_resident), (3, 2, 4096));
+        assert_eq!((s.scene_loads, s.scene_reloads), (2, 1));
+        assert_eq!((s.scene_evictions, s.scene_load_failures), (1, 1));
+        assert_eq!(s.parked, 3);
+        assert_eq!(m.parked_now(), 3);
+        assert_eq!(s.mean_scene_load, Duration::from_millis(15));
+        // EWMA: 10 ms seeded, then (4·10 + 20)/5 = 12 ms
+        assert_eq!(m.load_estimate(), Duration::from_millis(12));
     }
 
     #[test]

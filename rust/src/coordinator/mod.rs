@@ -2,17 +2,20 @@
 //!
 //! GEMM-GS's contribution lives in the blending kernel (L1/L2), so per
 //! the architecture rules L3 is a lean but real serving layer: a scene
-//! store, a bounded request queue with backpressure, a cross-request
-//! batch coalescer ([`batch`] — DESIGN.md §6), a worker pool
-//! (std threads — tokio is unavailable in this offline image, see
+//! catalog with lazy loading and budgeted LRU residency ([`catalog`] —
+//! DESIGN.md §11), a bounded request queue with backpressure, a
+//! cross-request batch coalescer ([`batch`] — DESIGN.md §6), a worker
+//! pool (std threads — tokio is unavailable in this offline image, see
 //! DESIGN.md §1), a tile-parallel frame scheduler, sticky-routed
 //! trajectory sessions with warm plan reuse (DESIGN.md §9), admission
 //! validation of malformed requests, and latency/stage/batch-occupancy/
-//! plan-reuse metrics. The E2E examples
+//! plan-reuse/residency metrics. The E2E examples
 //! (`examples/serve_trajectory.rs`, `examples/trajectory_session.rs`)
 //! drive camera orbits and coherent trajectories through this service.
+#![warn(missing_docs)]
 
 pub mod batch;
+pub mod catalog;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
@@ -20,6 +23,7 @@ pub mod service;
 
 pub use crate::accel::AccelKind;
 pub use batch::{BatchPoll, BatchPolicy, BatchScheduler};
+pub use catalog::{Acquire, CatalogConfig, CatalogStats, SceneCatalog, SceneSet};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{BackendKind, RenderRequest, RenderResponse, SessionKey};
 pub use service::{Coordinator, CoordinatorConfig};

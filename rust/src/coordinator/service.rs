@@ -1,4 +1,4 @@
-//! The render service: scene store + bounded request queue + batch
+//! The render service: scene catalog + bounded request queue + batch
 //! coalescer + worker pool — the staged admit → coalesce → execute
 //! design of DESIGN.md §6, with acceleration-method composition
 //! threaded through every request (DESIGN.md §8).
@@ -17,10 +17,16 @@
 //! native-backend service is byte-identical to the pre-batching
 //! request-per-worker path (proved bitwise in `tests/e2e_batching.rs`).
 //!
+//! Scenes live in the [`SceneCatalog`] (DESIGN.md §11): registered as
+//! lazy [`crate::scene::source::SceneSource`]s, loaded off the request
+//! path on first use (the batch *parks* and the worker returns to the
+//! queue), and — under `CoordinatorConfig::catalog`'s memory budget —
+//! LRU-evicted when cold and transparently reloaded byte-identically.
 //! Compression methods (c3dgs, LightGaussian) transform the model once:
-//! the scene store caches `prepare_model` outputs per `(scene, method)`
+//! the catalog caches `prepare_model` outputs per `(scene, method)`
 //! so the k-means/VQ cost is paid on the first request and every later
-//! request — from any worker — reuses it.
+//! request — from any worker — reuses it; prepared models are charged
+//! against the same budget and evicted with their scene.
 //!
 //! With `CoordinatorConfig::qos` set the service runs **SLO-driven**
 //! (DESIGN.md §10): the shared queue pops earliest-deadline-first,
@@ -32,6 +38,7 @@
 //! resolution/method under overload, recovering when load drops.
 
 use super::batch::{BatchPolicy, BatchPoll, BatchScheduler};
+use super::catalog::{Acquire, CatalogConfig, CatalogStats, SceneCatalog, SceneSet};
 use super::metrics::Metrics;
 use super::request::{BackendKind, RenderRequest, RenderResponse};
 use crate::accel::AccelKind;
@@ -45,11 +52,12 @@ use crate::runtime::tiled_render::{
 };
 use crate::runtime::RuntimeClient;
 use crate::scene::gaussian::GaussianCloud;
+use crate::scene::source::SceneSource;
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
 };
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// How long a worker blocked on one queue waits before checking the
@@ -94,6 +102,10 @@ pub struct CoordinatorConfig {
     /// ladder. `None` (the default) is the pre-QoS best-effort service,
     /// byte-for-byte.
     pub qos: Option<QosConfig>,
+    /// Scene-catalog residency knobs (DESIGN.md §11): the memory
+    /// budget lazy-loaded scenes and prepared models are LRU-evicted
+    /// to fit (`serve --memory-budget`). Default: unbounded.
+    pub catalog: CatalogConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -108,6 +120,7 @@ impl Default for CoordinatorConfig {
             trajectory: TrajectoryConfig::default(),
             max_sessions_per_worker: 16,
             qos: None,
+            catalog: CatalogConfig::default(),
         }
     }
 }
@@ -115,6 +128,16 @@ impl Default for CoordinatorConfig {
 struct Job {
     request: RenderRequest,
     enqueued: Instant,
+    /// Total time this job spent parked behind scene loads (DESIGN.md
+    /// §11). Response latency and the histogram keep counting it (the
+    /// cold-load tail must be visible), but the QoS rung controller
+    /// subtracts it — degrading render quality cannot shorten a load,
+    /// so feeding load-inflated samples would steer the controller
+    /// against a disturbance it cannot affect.
+    parked: Duration,
+    /// Set just before the job is handed to the catalog; folded into
+    /// `parked` by the redelivery hook (cleared again on `Ready`).
+    park_started: Option<Instant>,
     respond: SyncSender<RenderResponse>,
 }
 
@@ -139,60 +162,10 @@ type JobScheduler = BatchScheduler<
     fn(&Job) -> (String, (u32, u32), AccelKind),
 >;
 
-/// Scene store: base clouds plus a per-`(scene, method)` cache of
-/// [`crate::accel::AccelMethod::prepare_model`] outputs (DESIGN.md §8).
-/// Compression transforms (c3dgs's codebook fit, LightGaussian's
-/// prune + VQ) run once — on the first request that needs them — and
-/// every worker reuses the cached model afterwards. Methods that don't
-/// transform the model render the base cloud with no cache entry.
-struct SceneStore {
-    base: HashMap<String, Arc<GaussianCloud>>,
-    /// One `OnceLock` cell per `(scene, method)`: the map lock is held
-    /// only to fetch the cell, and the (expensive) transform runs under
-    /// the cell's own initialization guard — so concurrent workers never
-    /// duplicate a prepare, and a prepare in flight for one key never
-    /// stalls lookups for other keys.
-    prepared: Mutex<HashMap<(String, AccelKind), Arc<OnceLock<Arc<GaussianCloud>>>>>,
-    metrics: Arc<Metrics>,
-}
-
-impl SceneStore {
-    fn new(base: HashMap<String, Arc<GaussianCloud>>, metrics: Arc<Metrics>) -> Self {
-        SceneStore { base, prepared: Mutex::new(HashMap::new()), metrics }
-    }
-
-    /// The cloud to render `scene` with under `accel`, preparing and
-    /// caching the transformed model on first use.
-    fn cloud_for(&self, scene: &str, accel: AccelKind) -> Option<Arc<GaussianCloud>> {
-        let base = self.base.get(scene)?;
-        let method = accel.instantiate();
-        if !method.transforms_model() {
-            return Some(Arc::clone(base));
-        }
-        let cell = {
-            let mut cache = self.prepared.lock().expect("prepared-model cache poisoned");
-            Arc::clone(
-                cache
-                    .entry((scene.to_string(), accel))
-                    .or_insert_with(|| Arc::new(OnceLock::new())),
-            )
-        };
-        Some(Arc::clone(cell.get_or_init(|| {
-            self.metrics.record_prepare();
-            Arc::new(method.prepare_model(base))
-        })))
-    }
-
-    /// Prepared models fully initialized in the cache.
-    fn prepared_count(&self) -> usize {
-        self.prepared
-            .lock()
-            .expect("prepared-model cache poisoned")
-            .values()
-            .filter(|cell| cell.get().is_some())
-            .count()
-    }
-}
+/// The catalog instantiated over the service's job type (DESIGN.md
+/// §11): parked payloads are whole [`Job`]s, redelivered through the
+/// admission queues when their scene's load completes.
+type Catalog = SceneCatalog<Job>;
 
 /// What a worker executes batches with. Created in-thread: PJRT handles
 /// are not `Send`.
@@ -362,10 +335,17 @@ impl SessionCache {
 /// the pose is coherent with the previous one — and blend it through
 /// the worker's executor. Warm plans are byte-identical to cold ones
 /// (`pipeline::trajectory`), so this path changes latency, never pixels.
+///
+/// A session frame against a non-resident scene parks in the catalog
+/// like any other request (DESIGN.md §11) and returns to this worker's
+/// sticky queue when the load completes — the worker keeps serving
+/// other sessions meanwhile. The session's `TrajectorySession` holds
+/// the cloud's `Arc`, which is exactly what pins a scene with live
+/// sessions against eviction.
 fn handle_session_job(
     executor: &mut Executor,
     sessions: &mut SessionCache,
-    store: &SceneStore,
+    catalog: &Arc<Catalog>,
     metrics: &Metrics,
     base_cfg: &RenderConfig,
     tcfg: TrajectoryConfig,
@@ -384,7 +364,52 @@ fn handle_session_job(
     }
     let key = job.request.session.expect("session job routed without a session key");
     let accel = job.request.accel;
-    let scene = &job.request.scene;
+    let scene = job.request.scene.clone();
+    let needs_rebuild = match sessions.map.get(&key.session) {
+        Some(ws) => ws.scene != scene || ws.accel != accel,
+        None => true,
+    };
+    // Warm fast path: a live session already holds the (pinned) cloud
+    // it renders from, so touching the catalog would only contend on
+    // its lock for an LRU stamp that eviction could never act on
+    // anyway. Only a (re)build goes through `acquire` — where it may
+    // park behind a load like any other request.
+    let job = if needs_rebuild {
+        let mut job = job;
+        job.park_started = Some(Instant::now());
+        match catalog.acquire(&scene, accel, vec![job]) {
+            Acquire::Ready(cloud, mut jobs) => {
+                let mut job = jobs.pop().expect("one payload in, one payload out");
+                job.park_started = None; // resident: no park happened
+                let cfg = base_cfg.clone().with_accel(accel.instantiate());
+                sessions.insert(
+                    key.session,
+                    WorkerSession {
+                        scene: scene.clone(),
+                        accel,
+                        last_seq: key.seq,
+                        session: TrajectorySession::new(cloud, cfg, tcfg),
+                    },
+                );
+                job
+            }
+            // redelivered to this sticky queue after the load
+            Acquire::Parked => return,
+            Acquire::Failed(jobs, msg) => {
+                for job in jobs {
+                    metrics.record_error();
+                    let _ = job.respond.send(RenderResponse::failure(
+                        job.request.id,
+                        job.enqueued.elapsed(),
+                        msg.clone(),
+                    ));
+                }
+                return;
+            }
+        }
+    } else {
+        job
+    };
     let fail = |msg: String| {
         metrics.record_error();
         let _ = job.respond.send(RenderResponse::failure(
@@ -393,26 +418,6 @@ fn handle_session_job(
             msg,
         ));
     };
-    let Some(cloud) = store.cloud_for(scene, accel) else {
-        fail(format!("unknown scene '{scene}'"));
-        return;
-    };
-    let needs_rebuild = match sessions.map.get(&key.session) {
-        Some(ws) => ws.scene != *scene || ws.accel != accel,
-        None => true,
-    };
-    if needs_rebuild {
-        let cfg = base_cfg.clone().with_accel(accel.instantiate());
-        sessions.insert(
-            key.session,
-            WorkerSession {
-                scene: scene.clone(),
-                accel,
-                last_seq: key.seq,
-                session: TrajectorySession::new(cloud, cfg, tcfg),
-            },
-        );
-    }
     let ws = sessions.map.get_mut(&key.session).expect("session just inserted");
     if !needs_rebuild {
         // frames of a session must arrive in sequence order for the
@@ -469,7 +474,7 @@ fn handle_session_job(
 /// resulting latencies.
 fn handle_shared_batch(
     executor: &mut Executor,
-    store: &SceneStore,
+    catalog: &Arc<Catalog>,
     metrics: &Metrics,
     render_cfg: &RenderConfig,
     qos: &mut Option<WorkerQos>,
@@ -562,9 +567,29 @@ fn handle_shared_batch(
         }
         None => (request_accel, live.iter().map(|j| j.request.camera).collect()),
     };
-    let Some(cloud) = store.cloud_for(&live[0].request.scene, accel) else {
-        fail_all(&live, format!("unknown scene '{}'", live[0].request.scene));
-        return;
+    // Resolve the scene through the catalog (DESIGN.md §11). A
+    // non-resident scene parks the whole batch — the jobs re-enter the
+    // admission queue in order once the load completes, and this worker
+    // immediately returns to the queue instead of blocking on I/O.
+    // (`cameras` is recomputed on redelivery, at whatever rung the
+    // controller holds then.)
+    let scene = live[0].request.scene.clone();
+    let park_mark = Instant::now();
+    for job in &mut live {
+        job.park_started = Some(park_mark);
+    }
+    let (cloud, live) = match catalog.acquire(&scene, accel, live) {
+        Acquire::Ready(cloud, mut jobs) => {
+            for job in &mut jobs {
+                job.park_started = None; // resident: no park happened
+            }
+            (cloud, jobs)
+        }
+        Acquire::Parked => return,
+        Acquire::Failed(jobs, msg) => {
+            fail_all(&jobs, msg);
+            return;
+        }
     };
     metrics.record_batch(live.len());
     let cfg = render_cfg.clone().with_accel(accel.instantiate());
@@ -589,7 +614,12 @@ fn handle_shared_batch(
             for (job, out) in live.iter().zip(outs) {
                 let latency = respond(metrics, job, out, rung);
                 if let Some(q) = qos.as_mut() {
-                    if let Some(moved) = q.controller.observe(latency) {
+                    // controller steers on queue + execute time only:
+                    // parked (scene-load) time is not actionable by a
+                    // rung change and would cause spurious degradation
+                    if let Some(moved) =
+                        q.controller.observe(latency.saturating_sub(job.parked))
+                    {
                         metrics.set_rung(moved as u64);
                     }
                 }
@@ -608,7 +638,7 @@ pub struct Coordinator {
     sticky_txs: Vec<SyncSender<Job>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
-    store: Arc<SceneStore>,
+    catalog: Arc<Catalog>,
     /// Admission-control inputs when the service runs with QoS
     /// (DESIGN.md §10): the ladder (its cheapest cost ratio is per
     /// request method) and the worker count, pricing the "can this
@@ -617,13 +647,17 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the service over a fixed scene set.
-    pub fn start(
-        cfg: CoordinatorConfig,
-        scenes: HashMap<String, Arc<GaussianCloud>>,
-    ) -> Coordinator {
+    /// Start the service over a scene registry (DESIGN.md §11). Accepts
+    /// a [`SceneSet`] of lazy [`SceneSource`] registrations — or, for
+    /// the pre-catalog spelling, a `HashMap<String, Arc<GaussianCloud>>`
+    /// whose clouds register preloaded (resident immediately, never
+    /// evicted). Lazy scenes load on first request, off the request
+    /// path, and live under `CoordinatorConfig::catalog`'s budget.
+    pub fn start(cfg: CoordinatorConfig, scenes: impl Into<SceneSet>) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
-        let store = Arc::new(SceneStore::new(scenes, Arc::clone(&metrics)));
+        let catalog: Arc<Catalog> =
+            SceneCatalog::new(cfg.catalog.clone(), Arc::clone(&metrics));
+        catalog.register_set(scenes.into());
         let (tx, rx) = sync_channel::<Job>(cfg.queue_capacity);
         let policy = BatchPolicy {
             max_batch: cfg.max_batch.max(1),
@@ -643,10 +677,61 @@ impl Coordinator {
             sticky_txs.push(stx);
             sticky_rxs.push(srx);
         }
+        // Parked-job plumbing (DESIGN.md §11): when a scene load
+        // completes, the catalog re-injects the parked jobs — in
+        // arrival order — through the same admission queues they came
+        // from (sticky for session frames, shared otherwise); a failed
+        // load answers each with an explicit error response. The hooks
+        // hold queue senders, so `shutdown` disconnects the catalog
+        // *before* closing the queues.
+        {
+            let shared = tx.clone();
+            let sticky = sticky_txs.clone();
+            let m = Arc::clone(&metrics);
+            let redeliver = move |jobs: Vec<Job>| {
+                for mut job in jobs {
+                    // account the park so QoS can separate load wait
+                    // from render wait (the response latency keeps
+                    // counting both)
+                    if let Some(t) = job.park_started.take() {
+                        job.parked += t.elapsed();
+                    }
+                    m.enqueue();
+                    let dead = match job.request.session {
+                        Some(key) => {
+                            let w = (key.session % sticky.len() as u64) as usize;
+                            sticky[w].send(job).err().map(|e| e.0)
+                        }
+                        None => shared.send(job).err().map(|e| e.0),
+                    };
+                    if let Some(job) = dead {
+                        m.dequeue();
+                        m.record_error();
+                        let _ = job.respond.send(RenderResponse::failure(
+                            job.request.id,
+                            job.enqueued.elapsed(),
+                            "render service unavailable: workers exited while the \
+                             scene was loading"
+                                .to_string(),
+                        ));
+                    }
+                }
+            };
+            let m = Arc::clone(&metrics);
+            let fail = move |job: Job, msg: &str| {
+                m.record_error();
+                let _ = job.respond.send(RenderResponse::failure(
+                    job.request.id,
+                    job.enqueued.elapsed(),
+                    msg.to_string(),
+                ));
+            };
+            catalog.connect(redeliver, fail);
+        }
         let mut workers = Vec::with_capacity(worker_count);
         for sticky_rx in sticky_rxs {
             let scheduler = Arc::clone(&scheduler);
-            let store = Arc::clone(&store);
+            let catalog = Arc::clone(&catalog);
             let metrics = Arc::clone(&metrics);
             let render_cfg = cfg.render.clone();
             let backend = cfg.backend;
@@ -689,7 +774,7 @@ impl Coordinator {
                                 handle_session_job(
                                     &mut executor,
                                     &mut sessions,
-                                    &store,
+                                    &catalog,
                                     &metrics,
                                     &render_cfg,
                                     tcfg,
@@ -715,7 +800,7 @@ impl Coordinator {
                     match scheduler.poll_batch(wait) {
                         BatchPoll::Batch(batch) => handle_shared_batch(
                             &mut executor,
-                            &store,
+                            &catalog,
                             &metrics,
                             &render_cfg,
                             &mut worker_qos,
@@ -731,7 +816,7 @@ impl Coordinator {
                                 Ok(job) => handle_session_job(
                                     &mut executor,
                                     &mut sessions,
-                                    &store,
+                                    &catalog,
                                     &metrics,
                                     &render_cfg,
                                     tcfg,
@@ -746,7 +831,7 @@ impl Coordinator {
             }));
         }
         let admission = cfg.qos.as_ref().map(|q| (q.ladder.clone(), worker_count));
-        Coordinator { tx: Some(tx), sticky_txs, workers, metrics, store, admission }
+        Coordinator { tx: Some(tx), sticky_txs, workers, metrics, catalog, admission }
     }
 
     /// Submit a request; returns the response channel. Blocks when the
@@ -784,6 +869,20 @@ impl Coordinator {
             ));
             return rx;
         }
+        // the catalog knows every servable scene up front (DESIGN.md
+        // §11), so an unknown name is rejected here instead of
+        // occupying queue space on its way to a worker; residency
+        // comes back from the same single lock round-trip for the
+        // deadline check below
+        let Some(scene_resident) = self.catalog.residency(&request.scene) else {
+            self.metrics.record_error();
+            let _ = respond.send(RenderResponse::failure(
+                request.id,
+                Duration::ZERO,
+                format!("unknown scene '{}'", request.scene),
+            ));
+            return rx;
+        };
         if let Some(deadline) = request.deadline {
             let now = Instant::now();
             let shed_reason = if now >= deadline {
@@ -794,18 +893,35 @@ impl Coordinator {
                 // request's method — `None` rungs inherit it), spread
                 // across the workers; if that alone outlasts the
                 // deadline, shedding now is strictly better than
-                // shedding after the request has queued
+                // shedding after the request has queued. Parked
+                // requests count as queued, and a request against a
+                // non-resident scene additionally pays the catalog's
+                // measured load latency before it can execute
+                // (DESIGN.md §11).
                 let min_ratio = ladder.min_cost_ratio_for(request.accel);
                 let est = self.metrics.exec_estimate();
-                let depth = self.metrics.queue_depth_now();
-                if !est.is_zero()
-                    && now
-                        + est.mul_f64(min_ratio * (depth as f64 / *workers as f64 + 1.0))
-                        > deadline
+                let depth = self.metrics.queue_depth_now() + self.metrics.parked_now();
+                let load_penalty = if scene_resident {
+                    Duration::ZERO
+                } else {
+                    self.metrics.load_estimate()
+                };
+                let queue_wait = if est.is_zero() {
+                    Duration::ZERO
+                } else {
+                    est.mul_f64(min_ratio * (depth as f64 / *workers as f64 + 1.0))
+                };
+                if !(load_penalty + queue_wait).is_zero()
+                    && now + load_penalty + queue_wait > deadline
                 {
+                    let and_load = if load_penalty.is_zero() {
+                        ""
+                    } else {
+                        " plus the pending scene load"
+                    };
                     Some(format!(
-                        "shed: {depth} queued requests already outlast the deadline \
-                         at the cheapest quality rung"
+                        "shed: {depth} queued requests{and_load} already outlast the \
+                         deadline at the cheapest quality rung"
                     ))
                 } else {
                     None
@@ -820,7 +936,13 @@ impl Coordinator {
             }
         }
         self.metrics.enqueue();
-        let job = Job { request, enqueued: Instant::now(), respond };
+        let job = Job {
+            request,
+            enqueued: Instant::now(),
+            parked: Duration::ZERO,
+            park_started: None,
+            respond,
+        };
         // session frames route to their sticky worker's own queue
         // (DESIGN.md §9); everything else goes through the shared
         // coalescing queue
@@ -890,16 +1012,28 @@ impl Coordinator {
         })
     }
 
-    /// Registered scene names.
+    /// Registered scene names (resident or not), sorted.
     pub fn scene_names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.store.base.keys().cloned().collect();
-        v.sort();
-        v
+        self.catalog.registered_names()
     }
 
-    /// Number of `(scene, method)` prepared models currently cached.
+    /// Number of `(scene, method)` prepared models currently cached
+    /// across resident scenes (evicted scenes drop theirs).
     pub fn prepared_models_cached(&self) -> usize {
-        self.store.prepared_count()
+        self.catalog.prepared_count()
+    }
+
+    /// Register an additional scene while the service runs. Returns
+    /// `false` when the name is already taken. Lazy sources load on
+    /// their first request (DESIGN.md §11).
+    pub fn register_scene(&self, name: impl Into<String>, source: SceneSource) -> bool {
+        self.catalog.register(name, source)
+    }
+
+    /// Residency snapshot: registered count, resident scenes in LRU
+    /// order, in-flight loads, and bytes charged against the budget.
+    pub fn catalog_stats(&self) -> CatalogStats {
+        self.catalog.stats()
     }
 
     /// Metrics snapshot.
@@ -907,8 +1041,13 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Drain the queues and join all workers.
+    /// Drain the queues and join all workers. The catalog disconnects
+    /// first — its redelivery hooks hold queue senders, which would
+    /// otherwise keep the channels open and the workers alive forever;
+    /// any requests still parked behind a load are answered with an
+    /// explicit shutting-down error.
     pub fn shutdown(mut self) {
+        self.catalog.disconnect();
         self.tx.take(); // close the shared channel
         self.sticky_txs.clear(); // close every session queue
         for w in self.workers.drain(..) {
@@ -919,6 +1058,7 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
+        self.catalog.disconnect();
         self.tx.take();
         self.sticky_txs.clear();
         for w in self.workers.drain(..) {

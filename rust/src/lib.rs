@@ -11,10 +11,11 @@
 //! * **Layer 3** (this crate): the full 3DGS pipeline substrate, the
 //!   GEMM-GS blending transformation, the five published acceleration
 //!   baselines, a PJRT runtime that loads the AOT artifacts, a serving
-//!   coordinator with cross-request batch coalescing (DESIGN.md §6)
-//!   and a deadline-aware QoS subsystem — quality ladder, EDF
-//!   admission, closed-loop degradation, measured soak harness
-//!   (DESIGN.md §10) — the GPU analytic performance model, and the
+//!   coordinator with cross-request batch coalescing (DESIGN.md §6),
+//!   a deadline-aware QoS subsystem — quality ladder, EDF admission,
+//!   closed-loop degradation, measured soak harness (DESIGN.md §10) —
+//!   a scene catalog with lazy loading and budgeted LRU residency
+//!   (DESIGN.md §11), the GPU analytic performance model, and the
 //!   benchmark harness regenerating every table and figure of the
 //!   paper.
 //!

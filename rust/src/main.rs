@@ -9,6 +9,8 @@
 //!                [--max-drift 0.05]     # temporal-coherence session (DESIGN.md §9)
 //! gemm-gs serve  --frames 64 [--workers 4] [--backend gemm] [--accel c3dgs]
 //!                [--max-batch 8] [--batch-timeout-ms 2]
+//!                [--scene-dir DIR] [--memory-budget 512mb]   # scene catalog (§11)
+//! gemm-gs export-ply --scene train --out train.ply [--scale 0.002] [--format ascii]
 //! gemm-gs fig1                      # Figure 1  (TC vs CUDA FLOPS)
 //! gemm-gs bench-fig3                # Figure 3  (stage breakdown)
 //! gemm-gs bench-table2              # Table 2   (A100 grid + measured CPU grid)
@@ -19,6 +21,9 @@
 //! gemm-gs bench-soak --rate 400 --duration 2 [--slo-ms 30] [--seed 42]
 //!                                   # service under contention: best-effort vs
 //!                                   # SLO-driven policy (§10, EXPERIMENTS.md §Soak)
+//! gemm-gs bench-soak --scenes 6 [--zipf 1.1]
+//!                                   # multi-scene catalog sweep: Zipf scene mix vs
+//!                                   # memory budget (§11, EXPERIMENTS.md §Catalog)
 //! gemm-gs inspect [--scale 0.02]    # Table 1   (workload statistics)
 //! ```
 //!
@@ -36,19 +41,29 @@
 //! composes a published acceleration baseline with the render
 //! (DESIGN.md §8): its pair veto runs inside the FramePlan stage and
 //! compression methods render the transformed model.
+//!
+//! `serve --scene-dir DIR` registers every `*.ply` under `DIR` lazily
+//! (DESIGN.md §11): checkpoints load on first request, off the request
+//! path, and `--memory-budget` (e.g. `512mb`, `2gb`, or raw bytes)
+//! bounds resident scenes with LRU eviction + transparent reload. The
+//! README's "Serving many scenes" walkthrough builds such a directory
+//! with `export-ply`.
 
 // same clippy posture as the library crate (see src/lib.rs)
 #![allow(clippy::too_many_arguments, clippy::type_complexity)]
 
 use gemm_gs::accel::AccelKind;
 use gemm_gs::bench_harness::{self, fig3, fig6, fig7, report, table2, workloads};
-use gemm_gs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, RenderRequest};
+use gemm_gs::coordinator::{
+    BackendKind, CatalogConfig, Coordinator, CoordinatorConfig, RenderRequest, SceneSet,
+};
 use gemm_gs::math::Camera;
 use gemm_gs::perfmodel::{gpu, A100, H100};
 use gemm_gs::pipeline::render::{render_frame, RenderConfig};
 use gemm_gs::qos::{QosConfig, QualityLadder};
 use gemm_gs::scene::synthetic::{scene_by_name, table1_scenes};
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::Arc;
 
 /// Usage error: report to stderr and exit non-zero (exit code 2 — CLI
@@ -180,6 +195,7 @@ fn main() {
             print!("{}", bench_harness::trajectory::render(&pts, &scene, frames, step));
         }
         "bench-soak" => cmd_bench_soak(&args),
+        "export-ply" => cmd_export_ply(&args),
         "inspect" => cmd_inspect(scale),
         "help" | "--help" | "-h" => usage(),
         other => {
@@ -192,15 +208,18 @@ fn main() {
 
 fn usage() {
     println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
-    println!("subcommands: render render-trajectory serve fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak inspect");
+    println!("subcommands: render render-trajectory serve export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak inspect");
     println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
     println!("              --accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>");
     println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
     println!("              --slo-ms MS --ladder <default|scale[:accel],...>   (QoS, DESIGN.md §10)");
+    println!("              --scene-dir DIR --memory-budget <512mb|2gb|BYTES>  (catalog, DESIGN.md §11)");
+    println!("export-ply:   --scene NAME --out PATH --scale S --format <binary|ascii>");
     println!("trajectory:   --frames N --step RAD --via <direct|coordinator> --width W --height H");
     println!("              --max-translation T --max-rotation R --max-drift D");
     println!("bench-soak:   --rate REQ_S --duration SECS --slo-ms MS --seed N --workers N");
     println!("              (rate 0 / slo-ms 0 auto-calibrate against the measured frame cost)");
+    println!("              --scenes N --zipf S  (N ≥ 2: multi-scene catalog sweep, DESIGN.md §11)");
 }
 
 /// `--accel` with a graceful unknown-name error (shared by render,
@@ -216,6 +235,35 @@ fn parse_accel(args: &Args) -> AccelKind {
     })
 }
 
+/// `--memory-budget` (DESIGN.md §11): accepts raw bytes or a
+/// `kb`/`mb`/`gb` suffix, case-insensitive, fractional values allowed
+/// (`1.5gb`). Absent flag → `None` (unbounded). Malformed values exit 2
+/// like every other flag.
+fn parse_memory_budget(args: &Args) -> Option<u64> {
+    let raw = args.get("memory-budget", "");
+    if raw.is_empty() {
+        return None;
+    }
+    let t = raw.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(p) = t.strip_suffix("gb") {
+        (p, 1u64 << 30)
+    } else if let Some(p) = t.strip_suffix("mb") {
+        (p, 1u64 << 20)
+    } else if let Some(p) = t.strip_suffix("kb") {
+        (p, 1u64 << 10)
+    } else if let Some(p) = t.strip_suffix('b') {
+        (p, 1)
+    } else {
+        (t.as_str(), 1)
+    };
+    match num.trim().parse::<f64>() {
+        Ok(v) if v > 0.0 && v.is_finite() => Some((v * mult as f64) as u64),
+        _ => bail(&format!(
+            "flag --memory-budget: invalid size '{raw}' (expected e.g. 512mb, 2gb, or bytes)"
+        )),
+    }
+}
+
 /// `--backend` with the same exit-2 contract.
 fn parse_backend(args: &Args) -> BackendKind {
     let name = args.get("backend", "gemm");
@@ -229,19 +277,37 @@ fn parse_backend(args: &Args) -> BackendKind {
 
 fn cmd_render(args: &Args) {
     let scene = args.get("scene", "train");
-    let spec = scene_by_name(&scene).unwrap_or_else(|| {
-        eprintln!("unknown scene '{scene}'");
-        std::process::exit(1)
-    });
     let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
     let backend = parse_backend(args);
     let accel = parse_accel(args);
     let method = accel.instantiate();
-    let base = spec.synthesize(scale);
+    // --scene-dir renders a checkpoint from disk (DESIGN.md §11);
+    // otherwise the scene is a synthetic Table 1 workload
+    let scene_dir = args.get("scene-dir", "");
+    let (base, camera) = if scene_dir.is_empty() {
+        let spec = scene_by_name(&scene).unwrap_or_else(|| {
+            eprintln!("unknown scene '{scene}'");
+            std::process::exit(1)
+        });
+        let camera = workloads::default_camera(&spec);
+        (spec.synthesize(scale), camera)
+    } else {
+        let path = Path::new(&scene_dir).join(format!("{scene}.ply"));
+        // load through SceneSource so the checkpoint passes the same
+        // validation the serving catalog applies (DESIGN.md §11) — a
+        // NaN-position file must error here, not render garbage
+        let cloud = gemm_gs::scene::SceneSource::PlyFile(path).load().unwrap_or_else(|e| {
+            eprintln!("failed to load scene '{scene}': {e}");
+            std::process::exit(1)
+        });
+        let cloud = Arc::try_unwrap(cloud).unwrap_or_else(|arc| (*arc).clone());
+        let width = args.get_usize("width", 960) as u32;
+        let height = args.get_usize("height", 540) as u32;
+        (cloud, workloads::orbit_camera(0.4, width, height))
+    };
     // compression methods render the transformed model (DESIGN.md §8)
     let cloud =
         if method.transforms_model() { method.prepare_model(&base) } else { base };
-    let camera = workloads::default_camera(&spec);
     let cfg = RenderConfig::default().with_accel(accel.instantiate());
     let mut blender = backend.instantiate(cfg.batch).expect("backend init");
     let out = render_frame(&cloud, &camera, &cfg, blender.as_mut());
@@ -395,12 +461,32 @@ fn cmd_serve(args: &Args) {
     let frames = args.get_usize("frames", 32);
     let backend = parse_backend(args);
     let accel = parse_accel(args);
-    let mut scenes = HashMap::new();
-    let spec = scene_by_name(&args.get("scene", "train")).unwrap_or_else(|| {
-        eprintln!("unknown scene '{}'", args.get("scene", "train"));
-        std::process::exit(1)
-    });
-    scenes.insert(spec.name.to_string(), Arc::new(spec.synthesize(scale)));
+    // scene registrations (DESIGN.md §11): --scene-dir registers every
+    // *.ply lazily; the default path preloads one synthetic scene
+    let scene_dir = args.get("scene-dir", "");
+    let memory_budget = parse_memory_budget(args);
+    let (scene_set, width, height) = if scene_dir.is_empty() {
+        let spec = scene_by_name(&args.get("scene", "train")).unwrap_or_else(|| {
+            eprintln!("unknown scene '{}'", args.get("scene", "train"));
+            std::process::exit(1)
+        });
+        let mut scenes = HashMap::new();
+        scenes.insert(spec.name.to_string(), Arc::new(spec.synthesize(scale)));
+        (SceneSet::from(scenes), spec.width / 2, spec.height / 2)
+    } else {
+        let set = SceneSet::from_dir(Path::new(&scene_dir)).unwrap_or_else(|e| {
+            eprintln!("--scene-dir: {e}");
+            std::process::exit(1)
+        });
+        if set.is_empty() {
+            eprintln!("--scene-dir: no *.ply checkpoints under '{scene_dir}'");
+            std::process::exit(1);
+        }
+        let width = args.get_usize("width", 480) as u32;
+        let height = args.get_usize("height", 272) as u32;
+        (set, width, height)
+    };
+    let scene_names = scene_set.names();
     let max_batch = args.get_usize("max-batch", 1);
     let batch_timeout =
         std::time::Duration::from_secs_f64(args.get_f64("batch-timeout-ms", 2.0) / 1e3);
@@ -424,17 +510,21 @@ fn cmd_serve(args: &Args) {
             max_batch,
             batch_timeout,
             qos,
+            catalog: CatalogConfig { memory_budget },
             ..CoordinatorConfig::default()
         },
-        scenes,
+        scene_set,
     );
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..frames)
         .map(|i| {
             let theta = i as f32 / frames as f32 * std::f32::consts::TAU;
-            let camera =
-                workloads::orbit_camera(theta, spec.width / 2, spec.height / 2);
-            let mut request = RenderRequest::new(i as u64, spec.name, camera);
+            let camera = workloads::orbit_camera(theta, width, height);
+            // round-robin across the registered scenes, so a
+            // multi-scene catalog under a tight budget genuinely
+            // cycles loads and evictions
+            let scene = &scene_names[i % scene_names.len()];
+            let mut request = RenderRequest::new(i as u64, scene.clone(), camera);
             request.accel = accel;
             if let Some(slo) = slo {
                 request = request.with_slo(slo);
@@ -448,7 +538,12 @@ fn cmd_serve(args: &Args) {
         if r.shed {
             continue; // explicit policy drop, reported via metrics below
         }
-        assert!(r.error.is_none(), "{:?}", r.error);
+        if let Some(err) = r.error {
+            // runtime failure (e.g. a corrupt checkpoint in
+            // --scene-dir): report and exit 1, not a panic
+            eprintln!("gemm-gs: render failed: {err}");
+            std::process::exit(1);
+        }
         served += 1;
     }
     let elapsed = t0.elapsed();
@@ -482,18 +577,31 @@ fn cmd_serve(args: &Args) {
             m.shed, m.degraded_frames, m.rung
         );
     }
+    // residency export (DESIGN.md §11) — the CI catalog smoke greps
+    // these fields; loads/evictions stay 0 on the preloaded default path
+    let cs = coord.catalog_stats();
+    println!(
+        "catalog: registered {}, resident {}, bytes {}, loads {} (reloads {}), \
+         evictions {}, mean load {:.2?}",
+        m.scenes_registered,
+        cs.resident_lru.len(),
+        m.bytes_resident,
+        m.scene_loads,
+        m.scene_reloads,
+        m.scene_evictions,
+        m.mean_scene_load
+    );
     coord.shutdown();
 }
 
 /// `bench-soak` — the service-under-contention benchmark (DESIGN.md
 /// §10, EXPERIMENTS.md §Soak): one seeded Poisson stream, two policies.
-/// Exits 1 on transport errors (the CI smoke's health gate).
+/// With `--scenes N` (N ≥ 2) it instead runs the multi-scene catalog
+/// sweep (DESIGN.md §11, EXPERIMENTS.md §Catalog): the same seeded
+/// Zipf-distributed scene mix against a shrinking memory budget,
+/// measuring the cold-load tail. Exits 1 on transport errors (the CI
+/// smoke's health gate).
 fn cmd_bench_soak(args: &Args) {
-    let scene = args.get("scene", "train");
-    if scene_by_name(&scene).is_none() {
-        eprintln!("unknown scene '{scene}'");
-        std::process::exit(1);
-    }
     let sim_scale = args.get_f64("scale", 0.004);
     let workers = args.get_usize("workers", 2);
     let rate = args.get_f64("rate", 0.0);
@@ -501,6 +609,39 @@ fn cmd_bench_soak(args: &Args) {
     let slo_ms = args.get_f64("slo-ms", 0.0);
     let slo = (slo_ms > 0.0).then(|| std::time::Duration::from_secs_f64(slo_ms / 1e3));
     let seed = args.get_usize("seed", 42) as u64;
+
+    let scenes = args.get_usize("scenes", 1);
+    if scenes >= 2 {
+        if scenes > 13 {
+            bail(&format!(
+                "flag --scenes: {scenes} exceeds the 13 Table 1 scenes \
+                 (silently sweeping fewer would mislabel the results)"
+            ));
+        }
+        let zipf = args.get_f64("zipf", 1.1);
+        // unbounded baseline, then a shrinking fraction of the summed
+        // footprint: the cold-load tail grows as the budget tightens
+        let budgets = [None, Some(1.0), Some(0.6), Some(0.35)];
+        let outcome = bench_harness::soak::run_multi(
+            scenes, sim_scale, workers, rate, duration, slo, seed, zipf, &budgets,
+        );
+        print!("{}", bench_harness::soak::render_multi(&outcome, workers, duration));
+        let transport: u64 =
+            outcome.rows.iter().map(|r| r.report.transport_errors).sum();
+        if transport > 0 {
+            eprintln!(
+                "gemm-gs: {transport} transport error(s) during soak — service unhealthy"
+            );
+            std::process::exit(1);
+        }
+        return;
+    }
+
+    let scene = args.get("scene", "train");
+    if scene_by_name(&scene).is_none() {
+        eprintln!("unknown scene '{scene}'");
+        std::process::exit(1);
+    }
     let outcome =
         bench_harness::soak::run(&scene, sim_scale, workers, rate, duration, slo, seed);
     print!("{}", bench_harness::soak::render(&outcome, &scene, workers, duration));
@@ -510,6 +651,39 @@ fn cmd_bench_soak(args: &Args) {
         eprintln!("gemm-gs: {transport} transport error(s) during soak — service unhealthy");
         std::process::exit(1);
     }
+}
+
+/// `export-ply` — write a synthetic Table 1 scene as a 3DGS checkpoint
+/// (binary by default, `--format ascii` for the text twin). This is
+/// how the README's "Serving many scenes" walkthrough and the CI
+/// catalog smoke build a `--scene-dir` (DESIGN.md §11).
+fn cmd_export_ply(args: &Args) {
+    let scene = args.get("scene", "train");
+    let spec = scene_by_name(&scene).unwrap_or_else(|| {
+        eprintln!("unknown scene '{scene}'");
+        std::process::exit(1)
+    });
+    let out = args.get("out", "");
+    if out.is_empty() {
+        bail("export-ply requires --out <path>");
+    }
+    let scale = args.get_f64("scale", 0.002);
+    let cloud = spec.synthesize(scale);
+    let path = Path::new(&out);
+    let result = match args.get("format", "binary").as_str() {
+        "binary" => gemm_gs::scene::ply::write_ply_file(path, &cloud),
+        "ascii" => gemm_gs::scene::ply::write_ply_ascii_file(path, &cloud),
+        other => bail(&format!("flag --format: unknown '{other}' (expected binary|ascii)")),
+    };
+    if let Err(e) = result {
+        eprintln!("export-ply failed: {e}");
+        std::process::exit(1);
+    }
+    println!(
+        "wrote '{scene}' ({} gaussians, ~{} KiB resident) to {out}",
+        cloud.len(),
+        cloud.footprint_bytes() / 1024
+    );
 }
 
 fn cmd_fig1() {

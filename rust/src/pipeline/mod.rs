@@ -5,6 +5,7 @@
 //! orchestration for every render path, and the temporal-coherence
 //! [`trajectory`] planner (DESIGN.md §9) that reuses a frame's tile
 //! structure across a coherent camera path.
+#![warn(missing_docs)]
 
 pub mod batch;
 pub mod blend_gemm;

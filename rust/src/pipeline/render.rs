@@ -102,9 +102,13 @@ impl RenderConfig {
 /// Wall-clock per-stage timings for one frame (Figure 3's quantities).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StageTimings {
+    /// Projection + covariance + SH evaluation (Figure 2 stage 1).
     pub preprocess: Duration,
+    /// Tile-overlap duplication (stage 2).
     pub duplicate: Duration,
+    /// Global depth-key sort (stage 3).
     pub sort: Duration,
+    /// α-blending (stage 4 — the paper's target).
     pub blend: Duration,
 }
 
@@ -136,7 +140,9 @@ impl StageTimings {
 /// A rendered RGB image.
 #[derive(Debug, Clone)]
 pub struct Image {
+    /// Width in pixels.
     pub width: u32,
+    /// Height in pixels.
     pub height: u32,
     /// Row-major RGB, `height × width` entries.
     pub data: Vec<[f32; 3]>,
@@ -244,8 +250,11 @@ impl FrameStats {
 
 /// Output of [`render_frame`].
 pub struct RenderOutput {
+    /// The blended frame.
     pub image: Image,
+    /// Wall-clock per-stage timings.
     pub timings: StageTimings,
+    /// Workload counters (visible Gaussians, pair count, …).
     pub stats: FrameStats,
 }
 

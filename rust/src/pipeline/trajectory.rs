@@ -148,7 +148,7 @@ struct PrevFrame {
 /// [`render_next`](Self::render_next)) and coherent frames reuse the
 /// previous frame's tile structure. The scene and render configuration
 /// are fixed at construction — compression methods hand the
-/// *prepared* model in, exactly as the coordinator's scene store does.
+/// *prepared* model in, exactly as the coordinator's scene catalog does.
 pub struct TrajectorySession {
     cloud: Arc<GaussianCloud>,
     cfg: RenderConfig,

@@ -21,6 +21,7 @@
 //! * [`soak`] — the open-loop Poisson load generator behind
 //!   `gemm-gs bench-soak`, measuring p50/p95/p99, goodput and shed rate
 //!   per policy under genuine contention.
+#![warn(missing_docs)]
 
 pub mod controller;
 pub mod ladder;
@@ -28,7 +29,7 @@ pub mod soak;
 
 pub use controller::{ControllerConfig, RungController};
 pub use ladder::{QualityLadder, QualityRung};
-pub use soak::{poisson_schedule, run_soak, SoakConfig, SoakReport};
+pub use soak::{poisson_schedule, run_soak, run_soak_with, SoakConfig, SoakReport};
 
 use std::time::Duration;
 

@@ -51,10 +51,14 @@ pub struct SoakReport {
     /// Response channels that died without a response — a worker crash;
     /// always zero on a healthy run (the CI smoke asserts it).
     pub transport_errors: u64,
-    /// Exact percentiles over completed-frame latencies.
+    /// Exact median over completed-frame latencies (unlike the
+    /// service histogram's bucketed percentiles).
     pub p50: Duration,
+    /// Exact 95th percentile over completed-frame latencies.
     pub p95: Duration,
+    /// Exact 99th percentile over completed-frame latencies.
     pub p99: Duration,
+    /// Mean completed-frame latency.
     pub mean_latency: Duration,
     /// Wall-clock from first arrival to last collected response.
     pub wall: Duration,
@@ -98,6 +102,19 @@ pub fn run_soak(
     poses: &[Camera],
     cfg: &SoakConfig,
 ) -> SoakReport {
+    run_soak_with(coord, |_| scene.to_string(), poses, cfg)
+}
+
+/// [`run_soak`] with a per-request scene: `scene_of(i)` names the scene
+/// of the `i`-th arrival. This is what the multi-scene catalog sweep
+/// drives (`bench_harness::soak`, DESIGN.md §11) — a Zipf-distributed
+/// scene mix whose cold scenes pay load latency under a memory budget.
+pub fn run_soak_with(
+    coord: &Coordinator,
+    mut scene_of: impl FnMut(usize) -> String,
+    poses: &[Camera],
+    cfg: &SoakConfig,
+) -> SoakReport {
     assert!(!poses.is_empty(), "soak needs at least one pose");
     let schedule = poisson_schedule(cfg.rate, cfg.duration, cfg.seed);
     let t0 = Instant::now();
@@ -107,8 +124,7 @@ pub fn run_soak(
         if offset > now {
             std::thread::sleep(offset - now);
         }
-        let mut request =
-            RenderRequest::new(i as u64, scene.to_string(), poses[i % poses.len()]);
+        let mut request = RenderRequest::new(i as u64, scene_of(i), poses[i % poses.len()]);
         if cfg.deadlines {
             request.deadline = Some(Instant::now() + cfg.slo);
         }

@@ -47,9 +47,25 @@ impl GaussianCloud {
         self.positions.len()
     }
 
+    /// True when the cloud holds no Gaussians.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.positions.is_empty()
+    }
+
+    /// Estimated resident memory of the cloud's attribute arrays in
+    /// bytes — what the scene catalog charges against its memory
+    /// budget (DESIGN.md §11). An estimate: it counts live elements at
+    /// their in-memory size and ignores `Vec` over-allocation and
+    /// allocator slack, which is the right granularity for an eviction
+    /// policy (proportional to Gaussian count, stable across runs).
+    pub fn footprint_bytes(&self) -> u64 {
+        use std::mem::size_of;
+        (self.positions.len() * size_of::<Vec3>()
+            + self.scales.len() * size_of::<Vec3>()
+            + self.rotations.len() * size_of::<Quat>()
+            + self.opacities.len() * size_of::<f32>()
+            + self.sh.len() * size_of::<[f32; 3]>()) as u64
     }
 
     /// SH coefficients per Gaussian at the cloud's degree.
@@ -218,6 +234,17 @@ mod tests {
         assert_eq!(lo, Vec3::new(0.0, 0.0, 0.0));
         assert_eq!(hi, Vec3::new(2.0, 0.0, 0.0));
         assert!(GaussianCloud::default().bounds().is_none());
+    }
+
+    #[test]
+    fn footprint_scales_with_count_and_degree() {
+        let c = tiny_cloud(); // 3 gaussians, degree 0
+        // 3 × (pos 12 + scale 12 + rot 16 + opacity 4 + 1 sh triple 12)
+        assert_eq!(c.footprint_bytes(), 3 * (12 + 12 + 16 + 4 + 12));
+        assert_eq!(GaussianCloud::default().footprint_bytes(), 0);
+        let mut deg1 = GaussianCloud::with_capacity(1, 1);
+        deg1.push(Vec3::ZERO, Vec3::ONE, Quat::IDENTITY, 0.5, &[[0.0; 3]; 4]);
+        assert_eq!(deg1.footprint_bytes(), 12 + 12 + 16 + 4 + 4 * 12);
     }
 
     #[test]

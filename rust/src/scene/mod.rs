@@ -1,12 +1,16 @@
-//! Scene representation: the Gaussian point cloud, checkpoint I/O, and
+//! Scene representation: the Gaussian point cloud, checkpoint I/O,
+//! scene sources for the catalog's lazy loading (DESIGN.md §11), and
 //! procedural scene synthesis matching the paper's Table 1 workloads.
+#![warn(missing_docs)]
 
 pub mod gaussian;
 pub mod ply;
 pub mod rng;
+pub mod source;
 pub mod stats;
 pub mod synthetic;
 
 pub use gaussian::GaussianCloud;
+pub use source::{sources_from_dir, SceneSource};
 pub use stats::SceneStats;
-pub use synthetic::{SceneSpec, SceneKind};
+pub use synthetic::{SceneKind, SceneSpec};

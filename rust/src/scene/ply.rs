@@ -21,7 +21,11 @@ use std::path::Path;
 /// Errors from PLY parsing.
 #[derive(Debug)]
 pub enum PlyError {
+    /// The underlying reader/writer failed; file wrappers annotate the
+    /// error with the offending path.
     Io(io::Error),
+    /// The bytes are not a checkpoint this loader understands; the
+    /// message carries the header line number or vertex index.
     Format(String),
 }
 
@@ -334,14 +338,42 @@ pub fn write_ply_ascii<W: Write>(writer: W, cloud: &GaussianCloud) -> Result<(),
     Ok(())
 }
 
-/// Convenience file wrappers.
-pub fn read_ply_file(path: &Path) -> Result<GaussianCloud, PlyError> {
-    read_ply(std::fs::File::open(path)?)
+/// Wrap an `io::Error` with the path it occurred on: a bare "No such
+/// file or directory" from a registry of dozens of scene checkpoints
+/// loses *which* scene failed, and the catalog surfaces these messages
+/// verbatim in error responses (DESIGN.md §11).
+fn io_with_path(path: &Path, e: io::Error) -> PlyError {
+    PlyError::Io(io::Error::new(e.kind(), format!("{}: {e}", path.display())))
 }
 
-/// Write `cloud` to `path` in checkpoint layout.
+/// `map_err` adapter for the file wrappers: annotate `Io` errors with
+/// the path, pass `Format` errors through (they already carry a line
+/// number or vertex index).
+fn annotate_io(path: &Path) -> impl Fn(PlyError) -> PlyError + '_ {
+    move |e| match e {
+        PlyError::Io(io) => io_with_path(path, io),
+        format_err => format_err,
+    }
+}
+
+/// Read a 3DGS checkpoint from `path`; I/O errors name the path.
+pub fn read_ply_file(path: &Path) -> Result<GaussianCloud, PlyError> {
+    let file = std::fs::File::open(path).map_err(|e| io_with_path(path, e))?;
+    read_ply(file).map_err(annotate_io(path))
+}
+
+/// Write `cloud` to `path` in checkpoint layout; I/O errors name the
+/// path.
 pub fn write_ply_file(path: &Path, cloud: &GaussianCloud) -> Result<(), PlyError> {
-    write_ply(std::fs::File::create(path)?, cloud)
+    let file = std::fs::File::create(path).map_err(|e| io_with_path(path, e))?;
+    write_ply(file, cloud).map_err(annotate_io(path))
+}
+
+/// Write `cloud` to `path` with an ascii body ([`write_ply_ascii`]);
+/// I/O errors name the path, like the binary twin.
+pub fn write_ply_ascii_file(path: &Path, cloud: &GaussianCloud) -> Result<(), PlyError> {
+    let file = std::fs::File::create(path).map_err(|e| io_with_path(path, e))?;
+    write_ply_ascii(file, cloud).map_err(annotate_io(path))
 }
 
 #[cfg(test)]
@@ -494,6 +526,21 @@ mod tests {
             b"ply\nformat binary_little_endian 1.0\nelement vertex 1\nproperty\n";
         let msg = read_ply(data).unwrap_err().to_string();
         assert!(msg.contains("missing type"), "got '{msg}'");
+    }
+
+    #[test]
+    fn file_errors_name_the_offending_path() {
+        let missing = Path::new("/nonexistent/gemm-gs/atlantis.ply");
+        let msg = read_ply_file(missing).unwrap_err().to_string();
+        assert!(
+            msg.contains("/nonexistent/gemm-gs/atlantis.ply"),
+            "io error lost the path: {msg}"
+        );
+        let cloud = scene_by_name("train").unwrap().synthesize(0.0001);
+        let msg = write_ply_file(missing, &cloud).unwrap_err().to_string();
+        assert!(msg.contains("atlantis.ply"), "{msg}");
+        let msg = write_ply_ascii_file(missing, &cloud).unwrap_err().to_string();
+        assert!(msg.contains("atlantis.ply"), "ascii writer lost the path: {msg}");
     }
 
     #[test]

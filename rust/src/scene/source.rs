@@ -1,0 +1,197 @@
+//! Scene *sources*: where a scene's Gaussians come from, decoupled from
+//! when they are materialized in memory (DESIGN.md §11).
+//!
+//! The scene catalog (`coordinator::catalog`) registers scenes as
+//! sources and loads them lazily on first use; under a memory budget it
+//! evicts cold clouds and reloads them from their source on the next
+//! request. That contract only works if a source is **deterministic**:
+//! loading it twice must produce byte-identical clouds, which every
+//! variant here guarantees — a PLY file re-read yields the same floats,
+//! in-memory PLY bytes are immutable, and synthetic scenes re-run a
+//! seeded generator (`scene::synthetic`). The eviction→reload
+//! byte-identity is pinned per acceleration method in
+//! `tests/e2e_catalog.rs`.
+
+use crate::scene::gaussian::GaussianCloud;
+use crate::scene::ply::{read_ply, read_ply_file, PlyError};
+use crate::scene::synthetic::SceneSpec;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One registered scene's backing data. Cheap to clone (paths, shared
+/// byte buffers, specs) so the catalog can hand a copy to its loader
+/// thread without holding locks across the load.
+#[derive(Clone)]
+pub enum SceneSource {
+    /// A 3DGS checkpoint on disk, re-read on every load
+    /// ([`crate::scene::ply::read_ply_file`]).
+    PlyFile(PathBuf),
+    /// An in-memory 3DGS checkpoint (e.g. received over a wire); the
+    /// bytes stay resident, only the decoded cloud is evictable.
+    PlyBytes(Arc<Vec<u8>>),
+    /// A procedural Table 1 scene, re-synthesized deterministically
+    /// from its seed on every load ([`SceneSpec::synthesize`]).
+    Synthetic {
+        /// The workload entry to synthesize.
+        spec: SceneSpec,
+        /// Fraction of the full Gaussian count (`SceneSpec::synthesize`).
+        scale: f64,
+    },
+    /// An already-materialized cloud (the pre-catalog
+    /// `Coordinator::start` map, tests, embedders). The source itself
+    /// keeps the `Arc` alive, so the catalog treats these as
+    /// permanently resident: evicting one could never free memory.
+    Preloaded(Arc<GaussianCloud>),
+}
+
+impl SceneSource {
+    /// Materialize the cloud. Deterministic: two loads of the same
+    /// source yield byte-identical clouds (the catalog's
+    /// eviction→reload transparency rests on this). File and byte
+    /// sources additionally run [`GaussianCloud::validate`] so a
+    /// checkpoint carrying non-finite positions or zero scales fails
+    /// here — with a message naming the defect — instead of poisoning
+    /// a render worker later.
+    pub fn load(&self) -> Result<Arc<GaussianCloud>, PlyError> {
+        let validated = |cloud: GaussianCloud| {
+            cloud
+                .validate()
+                .map_err(|msg| PlyError::Format(format!("checkpoint invalid: {msg}")))?;
+            Ok(Arc::new(cloud))
+        };
+        match self {
+            SceneSource::PlyFile(path) => validated(read_ply_file(path)?),
+            SceneSource::PlyBytes(bytes) => validated(read_ply(&bytes[..])?),
+            SceneSource::Synthetic { spec, scale } => Ok(Arc::new(spec.synthesize(*scale))),
+            SceneSource::Preloaded(cloud) => Ok(Arc::clone(cloud)),
+        }
+    }
+
+    /// Whether loads of this source are free of real I/O or compute —
+    /// [`SceneSource::Preloaded`] only, which the catalog admits as
+    /// resident at registration instead of lazily.
+    pub fn is_preloaded(&self) -> bool {
+        matches!(self, SceneSource::Preloaded(_))
+    }
+
+    /// Short human-readable description for error messages and logs.
+    pub fn describe(&self) -> String {
+        match self {
+            SceneSource::PlyFile(path) => format!("ply file {}", path.display()),
+            SceneSource::PlyBytes(bytes) => format!("{} bytes of in-memory ply", bytes.len()),
+            SceneSource::Synthetic { spec, scale } => {
+                format!("synthetic '{}' at scale {scale}", spec.name)
+            }
+            SceneSource::Preloaded(cloud) => {
+                format!("preloaded cloud ({} gaussians)", cloud.len())
+            }
+        }
+    }
+}
+
+/// Scan `dir` for `*.ply` checkpoints and return one
+/// [`SceneSource::PlyFile`] per file, named by file stem, sorted by
+/// name (deterministic registration order). Non-PLY entries are
+/// ignored; an unreadable directory is an error naming the path.
+pub fn sources_from_dir(dir: &Path) -> Result<Vec<(String, SceneSource)>, PlyError> {
+    let entries = std::fs::read_dir(dir).map_err(|e| {
+        PlyError::Io(std::io::Error::new(
+            e.kind(),
+            format!("scene dir {}: {e}", dir.display()),
+        ))
+    })?;
+    let mut sources = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| {
+            PlyError::Io(std::io::Error::new(
+                e.kind(),
+                format!("scene dir {}: {e}", dir.display()),
+            ))
+        })?;
+        let path = entry.path();
+        let is_ply = path
+            .extension()
+            .and_then(|e| e.to_str())
+            .is_some_and(|e| e.eq_ignore_ascii_case("ply"));
+        if !is_ply {
+            continue;
+        }
+        let Some(name) = path.file_stem().and_then(|s| s.to_str()) else {
+            continue;
+        };
+        sources.push((name.to_string(), SceneSource::PlyFile(path.clone())));
+    }
+    sources.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(sources)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::ply::write_ply_file;
+    use crate::scene::synthetic::scene_by_name;
+
+    #[test]
+    fn synthetic_loads_are_byte_identical() {
+        let spec = scene_by_name("train").unwrap();
+        let src = SceneSource::Synthetic { spec, scale: 0.0005 };
+        let a = src.load().unwrap();
+        let b = src.load().unwrap();
+        assert_eq!(a.positions, b.positions);
+        assert_eq!(a.opacities, b.opacities);
+        assert_eq!(a.sh, b.sh);
+        assert!(!src.is_preloaded());
+        assert!(src.describe().contains("synthetic 'train'"));
+    }
+
+    #[test]
+    fn ply_bytes_load_and_validate() {
+        let cloud = scene_by_name("train").unwrap().synthesize(0.0002);
+        let mut buf = Vec::new();
+        crate::scene::ply::write_ply(&mut buf, &cloud).unwrap();
+        let src = SceneSource::PlyBytes(Arc::new(buf));
+        let a = src.load().unwrap();
+        let b = src.load().unwrap();
+        assert_eq!(a.len(), cloud.len());
+        assert_eq!(a.positions, b.positions);
+    }
+
+    #[test]
+    fn malformed_bytes_error_with_line_numbers() {
+        let src = SceneSource::PlyBytes(Arc::new(b"ply\nformat\n".to_vec()));
+        let msg = src.load().unwrap_err().to_string();
+        assert!(msg.contains("line 2") && msg.contains("truncated 'format'"), "{msg}");
+    }
+
+    #[test]
+    fn preloaded_shares_the_cloud() {
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.0002));
+        let src = SceneSource::Preloaded(Arc::clone(&cloud));
+        assert!(src.is_preloaded());
+        let loaded = src.load().unwrap();
+        assert!(Arc::ptr_eq(&loaded, &cloud));
+    }
+
+    #[test]
+    fn dir_scan_finds_ply_files_sorted() {
+        let dir = std::env::temp_dir().join("gemm_gs_source_dir_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cloud = scene_by_name("train").unwrap().synthesize(0.0001);
+        write_ply_file(&dir.join("beta.ply"), &cloud).unwrap();
+        write_ply_file(&dir.join("alpha.ply"), &cloud).unwrap();
+        std::fs::write(dir.join("notes.txt"), b"ignored").unwrap();
+        let sources = sources_from_dir(&dir).unwrap();
+        let names: Vec<&str> = sources.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "beta"]);
+        assert!(sources[0].1.load().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_errors_with_path() {
+        let msg = sources_from_dir(Path::new("/nonexistent/gemm-gs-scenes"))
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("/nonexistent/gemm-gs-scenes"), "{msg}");
+    }
+}

@@ -98,3 +98,49 @@ fn unknown_scene_exits_one() {
     assert_eq!(out.status.code(), Some(1), "runtime failure must exit 1");
     assert!(String::from_utf8_lossy(&out.stderr).contains("unknown scene"));
 }
+
+#[test]
+fn bad_memory_budget_exits_two() {
+    let out = gemm_gs()
+        .args(["serve", "--frames", "1", "--memory-budget", "lots"])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "malformed --memory-budget must exit 2");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--memory-budget"));
+}
+
+#[test]
+fn export_ply_requires_out_and_roundtrips_through_render() {
+    // missing --out is a usage error
+    let out = gemm_gs().args(["export-ply", "--scene", "train"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "export-ply without --out must exit 2");
+
+    // export a tiny checkpoint, then render it back via --scene-dir
+    // (the README's "Serving many scenes" workflow in miniature)
+    let dir = std::env::temp_dir().join("gemm_gs_cli_export_test");
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let ply = dir.join("train.ply");
+    let out = gemm_gs()
+        .args([
+            "export-ply",
+            "--scene",
+            "train",
+            "--scale",
+            "0.0005",
+            "--out",
+            ply.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "export-ply failed: {:?}", out.status);
+    assert!(ply.exists());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("wrote 'train'"));
+
+    let out = gemm_gs()
+        .args(["render", "--scene", "train", "--scene-dir", dir.to_str().unwrap()])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "render --scene-dir failed: {:?}", out.status);
+    assert!(String::from_utf8_lossy(&out.stdout).contains("rendered 'train'"));
+    std::fs::remove_dir_all(&dir).ok();
+}

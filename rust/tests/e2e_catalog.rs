@@ -1,0 +1,241 @@
+//! E2E: the scene catalog through the coordinator (DESIGN.md §11).
+//!
+//! Pins the tentpole contract: a service whose memory budget is smaller
+//! than the sum of its scenes' footprints still serves every scene
+//! correctly — lazy loads park requests instead of blocking workers,
+//! LRU eviction keeps residency under the budget, and an evicted scene
+//! reloads **byte-identically** under every acceleration method — while
+//! the same workload under an unbounded budget never evicts. Plus the
+//! failure surfaces: a malformed checkpoint's line-numbered `PlyError`
+//! and a budget-too-small-for-one-scene both come back as explicit
+//! error responses, never panics.
+
+use gemm_gs::accel::AccelKind;
+use gemm_gs::coordinator::{
+    CatalogConfig, Coordinator, CoordinatorConfig, RenderRequest, SceneSet,
+};
+use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::scene::source::SceneSource;
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::sync::Arc;
+use std::time::Duration;
+
+const SCALE: f64 = 0.001;
+
+fn camera() -> Camera {
+    Camera::look_at(
+        Vec3::new(0.0, 1.0, -8.0),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        160,
+        96,
+    )
+}
+
+fn footprint(name: &str) -> u64 {
+    scene_by_name(name).unwrap().synthesize(SCALE).footprint_bytes()
+}
+
+fn lazy_set(names: &[&str]) -> SceneSet {
+    let mut set = SceneSet::new();
+    for name in names {
+        set.insert(
+            *name,
+            SceneSource::Synthetic { spec: scene_by_name(name).unwrap(), scale: SCALE },
+        );
+    }
+    set
+}
+
+fn start(names: &[&str], memory_budget: Option<u64>, workers: usize) -> Coordinator {
+    Coordinator::start(
+        CoordinatorConfig {
+            workers,
+            catalog: CatalogConfig { memory_budget },
+            ..CoordinatorConfig::default()
+        },
+        lazy_set(names),
+    )
+}
+
+/// Let the worker that just responded drop its cloud `Arc` so the next
+/// admission sees the scene as idle (eviction candidates are
+/// pin-checked; the pin is released microseconds after the response).
+fn settle() {
+    std::thread::sleep(Duration::from_millis(100));
+}
+
+#[test]
+fn eviction_and_reload_are_byte_identical_per_accel_method() {
+    // budget admits either scene alone (plus its prepared model) but
+    // never both bases at once, so the train → playroom → train cycle
+    // must evict and reload
+    let budget = footprint("train").max(footprint("playroom")) + footprint("train") / 2;
+    for accel in [AccelKind::Vanilla, AccelKind::FlashGs, AccelKind::LightGaussian] {
+        let coord = start(&["train", "playroom"], Some(budget), 2);
+        let render = |scene: &str, id: u64| {
+            let mut req = RenderRequest::new(id, scene, camera());
+            req.accel = accel;
+            let resp = coord.render_sync(req);
+            assert!(resp.error.is_none(), "{accel:?} {scene}: {:?}", resp.error);
+            let img = resp.image.expect("image");
+            settle();
+            img
+        };
+        let first = render("train", 0);
+        render("playroom", 1); // forces train's eviction
+        let m = coord.metrics();
+        assert!(
+            m.scene_evictions >= 1,
+            "{accel:?}: budget {budget} admitted both scenes: {m:?}"
+        );
+        let again = render("train", 2); // transparent reload
+        assert!(
+            first.data == again.data,
+            "{accel:?}: reloaded scene rendered different bytes"
+        );
+        let m = coord.metrics();
+        assert!(m.scene_reloads >= 1, "{accel:?}: no reload recorded: {m:?}");
+        assert_eq!(m.errors, 0);
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn unbounded_budget_never_evicts_the_same_workload() {
+    let coord = start(&["train", "playroom"], None, 2);
+    for (id, scene) in ["train", "playroom", "train", "playroom"].iter().enumerate() {
+        let resp = coord.render_sync(RenderRequest::new(id as u64, *scene, camera()));
+        assert!(resp.error.is_none(), "{scene}: {:?}", resp.error);
+        settle();
+    }
+    let m = coord.metrics();
+    assert_eq!(m.scene_evictions, 0, "unbounded budget must never evict: {m:?}");
+    assert_eq!(m.scene_reloads, 0);
+    assert_eq!(m.scene_loads, 2, "one lazy load per scene, ever");
+    let stats = coord.catalog_stats();
+    assert_eq!(stats.resident_lru.len(), 2);
+    assert_eq!(m.scenes_registered, 2);
+    assert!(m.bytes_resident >= footprint("train") + footprint("playroom"));
+    coord.shutdown();
+}
+
+#[test]
+fn a_parked_burst_completes_with_a_single_load() {
+    // every request of a concurrent burst against a cold scene parks
+    // behind ONE load — no double-loading, no blocked workers, and all
+    // frames identical (same pose)
+    let coord = start(&["train"], None, 3);
+    let rxs: Vec<_> = (0..12)
+        .map(|i| coord.submit(RenderRequest::new(i, "train", camera())))
+        .collect();
+    let mut images = Vec::new();
+    for rx in rxs {
+        let r = rx.recv().expect("response");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        images.push(r.image.expect("image"));
+    }
+    for img in &images[1..] {
+        assert!(img.data == images[0].data);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.scene_loads, 1, "burst must not double-load: {m:?}");
+    assert_eq!(m.frames, 12);
+    assert_eq!(m.parked, 0, "park gauge must drain");
+    coord.shutdown();
+}
+
+#[test]
+fn budget_too_small_for_one_scene_is_an_error_response_not_a_panic() {
+    let coord = start(&["train"], Some(1024), 1);
+    let resp = coord.render_sync(RenderRequest::new(0, "train", camera()));
+    assert!(resp.image.is_none() && !resp.shed);
+    let msg = resp.error.expect("must error");
+    assert!(msg.contains("exceeds the memory budget"), "{msg}");
+    // latched: the second request fails fast with the same reason
+    let resp = coord.render_sync(RenderRequest::new(1, "train", camera()));
+    assert!(resp.error.expect("latched error").contains("exceeds the memory budget"));
+    let m = coord.metrics();
+    assert_eq!(m.errors, 2);
+    assert_eq!(m.scene_load_failures, 1, "the load runs once, the failure latches");
+    coord.shutdown();
+}
+
+#[test]
+fn malformed_ply_surfaces_the_line_numbered_error_through_the_coordinator() {
+    let mut set = SceneSet::new();
+    set.insert(
+        "corrupt",
+        SceneSource::PlyBytes(Arc::new(b"ply\nformat\n".to_vec())),
+    );
+    let coord = Coordinator::start(CoordinatorConfig::default(), set);
+    let resp = coord.render_sync(RenderRequest::new(0, "corrupt", camera()));
+    let msg = resp.error.expect("corrupt checkpoint must error");
+    assert!(
+        msg.contains("line 2") && msg.contains("truncated 'format'"),
+        "PlyError lost its line number through the coordinator: {msg}"
+    );
+    assert_eq!(coord.metrics().scene_load_failures, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_scene_rejected_at_admission_with_catalog_registry() {
+    let coord = start(&["train"], None, 1);
+    let resp = coord.render_sync(RenderRequest::new(0, "atlantis", camera()));
+    let msg = resp.error.expect("unknown scene must error");
+    assert!(msg.contains("unknown scene 'atlantis'"), "{msg}");
+    assert_eq!(coord.scene_names(), vec!["train".to_string()]);
+    coord.shutdown();
+}
+
+#[test]
+fn live_trajectory_sessions_pin_their_scene_against_eviction() {
+    // budget below the two footprints combined: scene pressure from
+    // 'playroom' must never evict 'train' while a session holds it warm
+    let budget = footprint("train") + footprint("playroom") - 1;
+    let coord = start(&["train", "playroom"], Some(budget), 2);
+    let session_frame = |seq: u64| {
+        let resp = coord
+            .render_sync(RenderRequest::new(seq, "train", camera()).with_session(7, seq));
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    };
+    session_frame(0);
+    session_frame(1);
+    // pressure: load the other scene (over budget, train pinned)
+    let resp = coord.render_sync(RenderRequest::new(100, "playroom", camera()));
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    // the session continues warm on the still-resident scene
+    session_frame(2);
+    session_frame(3);
+    let m = coord.metrics();
+    assert!(
+        coord.catalog_stats().resident_lru.contains(&"train".to_string()),
+        "a scene with a live session was evicted: {:?}",
+        coord.catalog_stats()
+    );
+    assert!(m.plan_reuse >= 2, "session lost its warm state: {m:?}");
+    assert_eq!(m.errors, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn runtime_registration_serves_new_scenes() {
+    let coord = start(&["train"], None, 1);
+    assert!(coord.register_scene(
+        "late",
+        SceneSource::Synthetic { spec: scene_by_name("truck").unwrap(), scale: SCALE },
+    ));
+    assert!(!coord.register_scene(
+        "train",
+        SceneSource::Synthetic { spec: scene_by_name("truck").unwrap(), scale: SCALE },
+    ));
+    let resp = coord.render_sync(RenderRequest::new(0, "late", camera()));
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(
+        coord.scene_names(),
+        vec!["late".to_string(), "train".to_string()]
+    );
+    coord.shutdown();
+}

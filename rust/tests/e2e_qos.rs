@@ -72,7 +72,7 @@ fn rung0_is_byte_identical_to_the_default_path_for_every_method() {
         assert!(resp.error.is_none(), "{}: {:?}", kind.cli_name(), resp.error);
         assert_eq!(resp.rung, 0, "{}: no pressure, no degradation", kind.cli_name());
 
-        // the direct path: prepare the model exactly as the scene store
+        // the direct path: prepare the model exactly as the scene catalog
         // does, then render with the method's veto
         let method = kind.instantiate();
         let model = if method.transforms_model() {

@@ -70,7 +70,7 @@ fn warm_trajectory_bytes_match_cold_for_every_accel_method() {
     for accel in AccelKind::all() {
         let method = accel.instantiate();
         // compression methods render the transformed model on both
-        // paths, exactly as the coordinator's scene store serves it
+        // paths, exactly as the coordinator's scene catalog serves it
         let cloud = if method.transforms_model() {
             Arc::new(method.prepare_model(&base))
         } else {
