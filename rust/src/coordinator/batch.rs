@@ -43,6 +43,7 @@
 //! deadline accessor so the coalescing logic is testable without
 //! spinning up render workers.
 
+use crate::model::request::Stage;
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Mutex;
@@ -51,14 +52,28 @@ use std::time::{Duration, Instant};
 /// Most pops an EDF-pending request may be passed over before it is
 /// force-served (the anti-starvation bound: a deadline-less request
 /// waits at most this many batch executions behind deadlined traffic).
-const STARVE_LIMIT: u32 = 16;
+/// Public so the model checker (`model::request`) and the scheduler
+/// share one bound.
+pub const STARVE_LIMIT: u32 = 16;
 
 /// EDF pending-buffer bound, as a multiple of `max_batch` (floored at
 /// [`EDF_PENDING_MIN`]): large enough for a meaningful reorder window,
 /// small enough that the admission channel — not this buffer — is where
 /// queued requests accumulate, preserving `queue_capacity` semantics.
-const EDF_PENDING_FACTOR: usize = 8;
-const EDF_PENDING_MIN: usize = 64;
+pub const EDF_PENDING_FACTOR: usize = 8;
+
+/// Floor of the EDF pending-buffer bound (see [`EDF_PENDING_FACTOR`]).
+pub const EDF_PENDING_MIN: usize = 64;
+
+/// Observer invoked as items move through the scheduler's lifecycle
+/// stages (`model::request::Stage`): `Pending` when an item leaves the
+/// admission channel for the scheduler's hands (reorder buffer or an
+/// in-progress batch), `Coalesced` when it is selected into the batch
+/// handed to a worker. The coordinator wires this to each job's
+/// [`LifecycleCell`](crate::model::request::LifecycleCell), which is
+/// what makes the production scheduler *drive* the checked state
+/// machine instead of keeping ad-hoc inline state.
+pub type StageObserver<T> = Box<dyn Fn(&mut T, Stage) + Send + Sync>;
 
 /// Coalescing knobs (the `serve --max-batch --batch-timeout-ms` flags;
 /// `edf` is switched on by `CoordinatorConfig::qos`).
@@ -122,6 +137,7 @@ where
     policy: BatchPolicy,
     key_of: F,
     deadline_of: G,
+    observer: Option<StageObserver<T>>,
 }
 
 impl<T, K, F> BatchScheduler<T, K, F>
@@ -154,6 +170,21 @@ where
             policy,
             key_of,
             deadline_of,
+            observer: None,
+        }
+    }
+
+    /// Install a lifecycle [`StageObserver`]. Must be called before the
+    /// scheduler is shared (it takes `&mut self`); the coordinator does
+    /// this at construction, before workers spawn.
+    pub fn set_stage_observer(&mut self, observer: StageObserver<T>) {
+        self.observer = Some(observer);
+    }
+
+    /// Notify the observer, if any, of an item's stage transition.
+    fn note(&self, item: &mut T, stage: Stage) {
+        if let Some(observer) = &self.observer {
+            observer(item, stage);
         }
     }
 
@@ -172,7 +203,10 @@ where
         let seed = match inner.pending.pop_front() {
             Some(aged) => aged,
             None => match inner.rx.recv() {
-                Ok(item) => Aged { item, passes: 0 },
+                Ok(mut item) => {
+                    self.note(&mut item, Stage::Pending);
+                    Aged { item, passes: 0 }
+                }
                 Err(_) => return None, // disconnected and nothing pending
             },
         };
@@ -208,7 +242,10 @@ where
         let seed = match inner.pending.pop_front() {
             Some(aged) => aged,
             None => match inner.rx.recv_timeout(idle) {
-                Ok(item) => Aged { item, passes: 0 },
+                Ok(mut item) => {
+                    self.note(&mut item, Stage::Pending);
+                    Aged { item, passes: 0 }
+                }
                 Err(RecvTimeoutError::Timeout) => return BatchPoll::Idle,
                 Err(RecvTimeoutError::Disconnected) => return BatchPoll::Closed,
             },
@@ -216,13 +253,18 @@ where
         BatchPoll::Batch(self.fill(&mut inner, seed))
     }
 
-    /// Grow a batch from `seed` under the configured policy.
+    /// Grow a batch from `seed` under the configured policy, then mark
+    /// every selected item `Coalesced` — the one place batches form.
     fn fill(&self, inner: &mut Inner<T>, seed: Aged<T>) -> Vec<T> {
-        if self.policy.edf {
+        let mut batch = if self.policy.edf {
             self.fill_batch_edf(inner, seed)
         } else {
             self.fill_batch(inner, seed.item)
+        };
+        for item in batch.iter_mut() {
+            self.note(item, Stage::Coalesced);
         }
+        batch
     }
 
     /// The FIFO coalescing window: grow a batch from `seed` with up to
@@ -239,7 +281,7 @@ where
         while batch.len() < max_batch {
             // Drain what is already queued without waiting; only sleep
             // out the remaining window when the queue runs empty.
-            let item = match inner.rx.try_recv() {
+            let mut item = match inner.rx.try_recv() {
                 Ok(item) => item,
                 Err(TryRecvError::Disconnected) => break,
                 Err(TryRecvError::Empty) => {
@@ -256,6 +298,7 @@ where
                     }
                 }
             };
+            self.note(&mut item, Stage::Pending);
             if (self.key_of)(&item) == key {
                 batch.push(item);
             } else {
@@ -281,7 +324,10 @@ where
         // the backpressure / try_submit shedding built on it) holds
         while inner.pending.len() < cap {
             match inner.rx.try_recv() {
-                Ok(item) => inner.pending.push_back(Aged { item, passes: 0 }),
+                Ok(mut item) => {
+                    self.note(&mut item, Stage::Pending);
+                    inner.pending.push_back(Aged { item, passes: 0 });
+                }
                 Err(_) => break,
             }
         }

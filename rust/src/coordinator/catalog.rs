@@ -57,6 +57,7 @@
 
 use super::metrics::Metrics;
 use crate::accel::AccelKind;
+use crate::model::catalog::Residency;
 use crate::scene::gaussian::GaussianCloud;
 use crate::scene::ply::PlyError;
 use crate::scene::source::{sources_from_dir, SceneSource};
@@ -206,6 +207,34 @@ enum EntryState<P> {
     Failed(String),
 }
 
+impl<P> EntryState<P> {
+    /// This entry's position in the model residency machine
+    /// ([`crate::model::catalog::Residency`]). Pinning is implicit here
+    /// (`Arc` strong counts, not a stored state), so a pinned scene
+    /// still reads `Resident`; the explicit `Pinned`/`Evicted` states
+    /// exist only in the model, where the checker needs them visible.
+    fn residency(&self) -> Residency {
+        match self {
+            EntryState::Registered => Residency::Registered,
+            EntryState::Loading(_) => Residency::Loading,
+            EntryState::Resident(_) => Residency::Resident,
+            EntryState::Failed(_) => Residency::Failed,
+        }
+    }
+}
+
+/// Assert one production state flip against the model's transition
+/// table — the catalog and the checked model share a single set of
+/// legal edges, so a drift between them fails loudly in debug builds
+/// (and costs nothing on the release request path).
+fn check_residency_edge(scene: &str, from: Residency, to: Residency) {
+    debug_assert!(
+        Residency::legal(from, to),
+        "scene '{scene}': illegal residency transition {from:?} -> {to:?} \
+         (model::catalog::Residency::legal)"
+    );
+}
+
 struct Entry<P> {
     source: SceneSource,
     state: EntryState<P>,
@@ -309,9 +338,10 @@ impl<P: Send + 'static> SceneCatalog<P> {
         let mut drained: Vec<P> = Vec::new();
         {
             let mut guard = self.inner.lock().expect("catalog lock poisoned");
-            for entry in guard.entries.values_mut() {
+            for (name, entry) in guard.entries.iter_mut() {
                 if let EntryState::Loading(parked) = &mut entry.state {
                     drained.append(parked);
+                    check_residency_edge(name, Residency::Loading, Residency::Registered);
                     entry.state = EntryState::Registered;
                 }
             }
@@ -341,6 +371,10 @@ impl<P: Send + 'static> SceneCatalog<P> {
         }
         let state = match &source {
             SceneSource::Preloaded(cloud) => {
+                // admission at birth — validated as the composed legal
+                // path registered → loading → resident of the machine
+                check_residency_edge(&name, Residency::Registered, Residency::Loading);
+                check_residency_edge(&name, Residency::Loading, Residency::Resident);
                 let bytes = cloud.footprint_bytes();
                 inner.bytes_resident += bytes;
                 inner.tick += 1;
@@ -411,6 +445,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
                     self.metrics.park(payloads.len() as u64);
                     let reload = entry.loads > 0;
                     let source = entry.source.clone();
+                    check_residency_edge(scene, Residency::Registered, Residency::Loading);
                     entry.state = EntryState::Loading(payloads);
                     Action::StartLoad { source, reload }
                 }
@@ -485,6 +520,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
             match result {
                 Err(e) => {
                     let msg = format!("scene '{name}': {e}");
+                    check_residency_edge(&name, Residency::Loading, Residency::Failed);
                     entry.state = EntryState::Failed(msg.clone());
                     self.metrics.record_load_failure();
                     (parked, Err(msg))
@@ -498,12 +534,14 @@ impl<P: Send + 'static> SceneCatalog<P> {
                             "scene '{name}' footprint (~{bytes} B) exceeds the memory \
                              budget ({budget} B) even with every other scene evicted"
                         );
+                        check_residency_edge(&name, Residency::Loading, Residency::Failed);
                         entry.state = EntryState::Failed(msg.clone());
                         self.metrics.record_load_failure();
                         (parked, Err(msg))
                     } else {
                         entry.loads += 1;
                         entry.generation += 1;
+                        check_residency_edge(&name, Residency::Loading, Residency::Resident);
                         entry.state = EntryState::Resident(Resident {
                             cloud,
                             bytes,
@@ -578,7 +616,14 @@ impl<P: Send + 'static> SceneCatalog<P> {
             let Some(name) = victim else { break };
             let freed = match inner.entries.get_mut(&name) {
                 Some(e) => match std::mem::replace(&mut e.state, EntryState::Registered) {
-                    EntryState::Resident(r) => r.bytes,
+                    EntryState::Resident(r) => {
+                        // eviction is the model's two-hop resident →
+                        // evicted → registered (evicted is transient:
+                        // the retained source re-registers immediately)
+                        check_residency_edge(&name, Residency::Resident, Residency::Evicted);
+                        check_residency_edge(&name, Residency::Evicted, Residency::Registered);
+                        r.bytes
+                    }
                     other => {
                         e.state = other;
                         0
@@ -666,6 +711,15 @@ impl<P: Send + 'static> SceneCatalog<P> {
             .entries
             .get(scene)
             .map(|e| matches!(e.state, EntryState::Resident(_)))
+    }
+
+    /// The scene's position in the model residency machine
+    /// ([`crate::model::catalog::Residency`]) — `None` when
+    /// unregistered. Tests use this to pin the production ↔ model
+    /// state mapping; implicit `Arc` pinning reads as `Resident`.
+    pub fn residency_state(&self, scene: &str) -> Option<Residency> {
+        let guard = self.inner.lock().expect("catalog lock poisoned");
+        guard.entries.get(scene).map(|e| e.state.residency())
     }
 
     /// Whether `scene` is resident right now (admission control uses
@@ -803,6 +857,26 @@ mod tests {
             }
             _ => panic!("resident scene must be Ready"),
         }
+    }
+
+    #[test]
+    fn residency_state_tracks_the_model_machine() {
+        let (catalog, _m, delivered, failed) = harness(None);
+        assert_eq!(catalog.residency_state("train"), None);
+        catalog.register("train", synthetic("train", 0.0005));
+        assert_eq!(catalog.residency_state("train"), Some(Residency::Registered));
+        catalog.acquire("train", AccelKind::Vanilla, vec![1]);
+        let mid = catalog.residency_state("train").unwrap();
+        assert!(matches!(mid, Residency::Loading | Residency::Resident), "{mid:?}");
+        wait_until(|| delivered.lock().unwrap().contains(&1));
+        assert_eq!(catalog.residency_state("train"), Some(Residency::Resident));
+        // a failed load latches in the model state too
+        catalog.register("broken", SceneSource::PlyBytes(Arc::new(b"ply\nformat\n".to_vec())));
+        catalog.acquire("broken", AccelKind::Vanilla, vec![2]);
+        wait_until(|| !failed.lock().unwrap().is_empty());
+        let latched = catalog.residency_state("broken").unwrap();
+        assert_eq!(latched, Residency::Failed);
+        assert!(latched.latched());
     }
 
     #[test]

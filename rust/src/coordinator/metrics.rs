@@ -16,10 +16,14 @@ const OCTAVES: usize = 40;
 /// Linear sub-buckets per octave (= 2^SUB_BITS).
 const SUB_BITS: u32 = 2;
 const SUBS: usize = 1 << SUB_BITS;
-const BUCKETS: usize = OCTAVES * SUBS;
+/// Total histogram buckets ([`OCTAVES`] octaves × [`SUBS`] sub-buckets);
+/// [`bucket_of`] clamps to the last one.
+pub const BUCKETS: usize = OCTAVES * SUBS;
 
-/// Histogram bucket of a latency in microseconds.
-fn bucket_of(us: u64) -> usize {
+/// Histogram bucket of a latency in microseconds. Public so
+/// `tests/properties.rs` can pin the log-linear bucketing contract
+/// (monotone, ≤ ~25 % relative edge error) property-style.
+pub fn bucket_of(us: u64) -> usize {
     let v = us.max(1);
     let msb = 63 - v.leading_zeros() as usize; // floor(log2 v)
     if msb < SUB_BITS as usize {
@@ -31,7 +35,8 @@ fn bucket_of(us: u64) -> usize {
 }
 
 /// Inclusive upper edge (µs) of a bucket — what the percentile reports.
-fn bucket_upper_us(bucket: usize) -> u64 {
+/// Public alongside [`bucket_of`] for the histogram property tests.
+pub fn bucket_upper_us(bucket: usize) -> u64 {
     if bucket < SUBS {
         return bucket as u64 + 1;
     }
@@ -45,6 +50,10 @@ fn bucket_upper_us(bucket: usize) -> u64 {
 pub struct Metrics {
     frames: AtomicU64,
     errors: AtomicU64,
+    /// Of `errors`, responses delivered by the `Job` drop backstop —
+    /// a request some path dropped without answering (DESIGN.md §12).
+    /// Nonzero outside worker-death scenarios indicates a lifecycle bug.
+    backstopped: AtomicU64,
     queue_depth: AtomicU64,
     latency_us_sum: AtomicU64,
     stage_pre_us: AtomicU64,
@@ -94,6 +103,7 @@ impl Default for Metrics {
         Metrics {
             frames: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            backstopped: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             latency_us_sum: AtomicU64::new(0),
             stage_pre_us: AtomicU64::new(0),
@@ -166,6 +176,13 @@ impl Metrics {
     /// Record a failed request.
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one backstopped response: a request that would otherwise
+    /// have been dropped unanswered, caught by the `Job` drop backstop
+    /// (DESIGN.md §12). Always paired with a `record_error`.
+    pub fn record_backstop(&self) {
+        self.backstopped.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one `prepare_model` run (a prepared-model cache miss).
@@ -318,6 +335,7 @@ impl Metrics {
         MetricsSnapshot {
             frames,
             errors: self.errors.load(Ordering::Relaxed),
+            backstopped_responses: self.backstopped.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             mean_latency: if frames == 0 {
                 Duration::ZERO
@@ -377,6 +395,11 @@ pub struct MetricsSnapshot {
     pub frames: u64,
     /// Failed requests (admission rejections + render failures).
     pub errors: u64,
+    /// Of `errors`, responses delivered by the exactly-once drop
+    /// backstop — requests some path dropped without answering
+    /// (DESIGN.md §12). Nonzero outside worker-death scenarios
+    /// indicates a request-lifecycle bug.
+    pub backstopped_responses: u64,
     /// Requests admitted but not yet executing at snapshot time.
     pub queue_depth: u64,
     /// Mean end-to-end latency over completed frames.
@@ -572,6 +595,17 @@ mod tests {
         m.record_plan_fallback();
         let s = m.snapshot();
         assert_eq!((s.plan_reuse, s.plan_fallbacks), (2, 1));
+    }
+
+    #[test]
+    fn backstop_counter_tracks() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().backstopped_responses, 0);
+        m.record_backstop();
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.backstopped_responses, 1);
+        assert_eq!(s.errors, 1);
     }
 
     #[test]

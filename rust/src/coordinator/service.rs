@@ -43,6 +43,7 @@ use super::metrics::Metrics;
 use super::request::{BackendKind, RenderRequest, RenderResponse};
 use crate::accel::AccelKind;
 use crate::math::Camera;
+use crate::model::request::{LifecycleCell, Outcome, Stage};
 use crate::pipeline::batch::render_frames;
 use crate::pipeline::render::{FrameStats, Image, RenderConfig, StageTimings, TileBlend};
 use crate::pipeline::trajectory::{TrajectoryConfig, TrajectorySession};
@@ -139,6 +140,94 @@ struct Job {
     /// `parked` by the redelivery hook (cleared again on `Ready`).
     park_started: Option<Instant>,
     respond: SyncSender<RenderResponse>,
+    /// The request lifecycle machine (DESIGN.md §12) — every queue hop
+    /// and every response runs through its validated transition table
+    /// (`model::request::Stage::legal`), the same table the model
+    /// checker explores. Terminal exactly when a response was sent.
+    lifecycle: LifecycleCell,
+    /// For the drop backstop: an unanswered job records its backstopped
+    /// error response against the service metrics.
+    metrics: Arc<Metrics>,
+}
+
+impl Job {
+    /// Advance the lifecycle machine (panics on a transition outside
+    /// `model::request::Stage::legal` — drift between the service and
+    /// the checked model must fail loudly, and the [`Drop`] backstop
+    /// still answers the caller during the unwind).
+    fn mark(&mut self, stage: Stage) {
+        self.lifecycle.advance(stage);
+    }
+
+    /// Deliver the terminal response, advancing the machine first so
+    /// the `Drop` backstop knows this job was answered. Every response
+    /// send after admission goes through here — that is what makes
+    /// exactly-once checkable.
+    fn deliver(&mut self, outcome: Outcome, response: RenderResponse) {
+        self.mark(Stage::Responded(outcome));
+        let _ = self.respond.send(response);
+    }
+
+    /// Deliver one rendered frame and record its metrics. `rung` is the
+    /// quality-ladder rung it was rendered at (0 outside QoS).
+    fn deliver_frame(&mut self, metrics: &Metrics, out: ExecutedFrame, rung: usize) -> Duration {
+        let latency = self.enqueued.elapsed();
+        metrics.record_frame(latency, &out.timings);
+        let response = RenderResponse {
+            id: self.request.id,
+            image: Some(out.image),
+            timings: out.timings,
+            stats: out.stats,
+            latency,
+            error: None,
+            rung,
+            shed: false,
+        };
+        self.deliver(Outcome::Frame, response);
+        latency
+    }
+
+    /// Shed this request (DESIGN.md §10): an explicit policy drop,
+    /// delivered as a `shed` response and counted in the `shed` metric
+    /// — never as an error, never as a late render.
+    fn deliver_shed(&mut self, metrics: &Metrics, why: &str) {
+        metrics.record_shed();
+        let response =
+            RenderResponse::shed(self.request.id, self.enqueued.elapsed(), format!("shed: {why}"));
+        self.deliver(Outcome::Shed, response);
+    }
+
+    /// Fail this request with an explicit error response.
+    fn deliver_error(&mut self, metrics: &Metrics, msg: String) {
+        metrics.record_error();
+        let response = RenderResponse::failure(self.request.id, self.enqueued.elapsed(), msg);
+        self.deliver(Outcome::Error, response);
+    }
+}
+
+impl Drop for Job {
+    /// The exactly-once-response backstop. A job dropped before any
+    /// `deliver` — a worker exiting with frames still in its sticky
+    /// queue, the scheduler tearing down with requests buffered, a
+    /// panic mid-batch — still owes its caller exactly one response.
+    /// `try_send` on the capacity-1 response channel never blocks, and
+    /// cannot double-respond: the lifecycle is non-terminal here, so no
+    /// response was sent on this channel yet.
+    fn drop(&mut self) {
+        if self.lifecycle.is_terminal() {
+            return;
+        }
+        let _ = self.lifecycle.try_advance(Stage::Responded(Outcome::Error));
+        self.metrics.record_backstop();
+        self.metrics.record_error();
+        let _ = self.respond.try_send(RenderResponse::failure(
+            self.request.id,
+            self.enqueued.elapsed(),
+            "render service dropped the request before answering it \
+             (worker exited or the service shut down)"
+                .to_string(),
+        ));
+    }
 }
 
 /// Coalescing key (DESIGN.md §6, §8): requests merge only when they
@@ -241,36 +330,6 @@ fn execute_batch(
         .collect())
 }
 
-/// Deliver one rendered frame and record its metrics. `rung` is the
-/// quality-ladder rung it was rendered at (0 outside QoS).
-fn respond(metrics: &Metrics, job: &Job, out: ExecutedFrame, rung: usize) -> Duration {
-    let latency = job.enqueued.elapsed();
-    metrics.record_frame(latency, &out.timings);
-    let _ = job.respond.send(RenderResponse {
-        id: job.request.id,
-        image: Some(out.image),
-        timings: out.timings,
-        stats: out.stats,
-        latency,
-        error: None,
-        rung,
-        shed: false,
-    });
-    latency
-}
-
-/// Shed one request (DESIGN.md §10): an explicit policy drop, delivered
-/// as a `shed` response and counted in the `shed` metric — never as an
-/// error, never as a late render.
-fn shed_job(metrics: &Metrics, job: &Job, why: &str) {
-    metrics.record_shed();
-    let _ = job.respond.send(RenderResponse::shed(
-        job.request.id,
-        job.enqueued.elapsed(),
-        format!("shed: {why}"),
-    ));
-}
-
 /// One worker's QoS state: the shared policy plus its own closed-loop
 /// rung controller (per-worker, as each worker's latency stream is what
 /// its controller steers on).
@@ -349,16 +408,22 @@ fn handle_session_job(
     metrics: &Metrics,
     base_cfg: &RenderConfig,
     tcfg: TrajectoryConfig,
-    job: Job,
+    mut job: Job,
 ) {
     metrics.dequeue();
+    // Lifecycle: a session frame is its own batch of one, so it passes
+    // the pending and coalesced stages degenerately on dequeue (a
+    // redelivered frame arrives Coalesced — the park edge loops it
+    // back through Pending, same as the shared queue).
+    job.mark(Stage::Pending);
+    job.mark(Stage::Coalesced);
     // Deadline expiry holds on the sticky path too: a session frame
     // whose deadline passed in queue is shed, never rendered late.
     // (Degradation does not apply here — sessions always render full
     // quality, since warm plans are resolution-specific; DESIGN.md §10.)
     if let Some(d) = job.request.deadline {
         if Instant::now() >= d {
-            shed_job(metrics, &job, "deadline expired before execution");
+            job.deliver_shed(metrics, "deadline expired before execution");
             return;
         }
     }
@@ -374,7 +439,7 @@ fn handle_session_job(
     // its lock for an LRU stamp that eviction could never act on
     // anyway. Only a (re)build goes through `acquire` — where it may
     // park behind a load like any other request.
-    let job = if needs_rebuild {
+    let mut job = if needs_rebuild {
         let mut job = job;
         job.park_started = Some(Instant::now());
         match catalog.acquire(&scene, accel, vec![job]) {
@@ -396,27 +461,14 @@ fn handle_session_job(
             // redelivered to this sticky queue after the load
             Acquire::Parked => return,
             Acquire::Failed(jobs, msg) => {
-                for job in jobs {
-                    metrics.record_error();
-                    let _ = job.respond.send(RenderResponse::failure(
-                        job.request.id,
-                        job.enqueued.elapsed(),
-                        msg.clone(),
-                    ));
+                for mut job in jobs {
+                    job.deliver_error(metrics, msg.clone());
                 }
                 return;
             }
         }
     } else {
         job
-    };
-    let fail = |msg: String| {
-        metrics.record_error();
-        let _ = job.respond.send(RenderResponse::failure(
-            job.request.id,
-            job.enqueued.elapsed(),
-            msg,
-        ));
     };
     let ws = sessions.map.get_mut(&key.session).expect("session just inserted");
     if !needs_rebuild {
@@ -430,6 +482,7 @@ fn handle_session_job(
     }
 
     let camera = job.request.camera;
+    job.mark(Stage::Executing);
     let rendered = match executor {
         Executor::Blender(blender) => Ok(ws.session.render_next(&camera, blender.as_mut())),
         Executor::Tiled(client) => {
@@ -449,9 +502,8 @@ fn handle_session_job(
             } else {
                 metrics.record_plan_fallback();
             }
-            respond(
+            job.deliver_frame(
                 metrics,
-                &job,
                 ExecutedFrame {
                     image: Arc::new(out.image),
                     timings: out.timings,
@@ -460,7 +512,7 @@ fn handle_session_job(
                 0, // trajectory sessions always render full quality
             );
         }
-        Err(e) => fail(format!("render failed: {e:#}")),
+        Err(e) => job.deliver_error(metrics, format!("render failed: {e:#}")),
     }
 }
 
@@ -490,9 +542,11 @@ fn handle_shared_batch(
     // degraded further if some survivor's deadline needs it.
     let now = Instant::now();
     let mut live: Vec<Job> = Vec::with_capacity(batch.len());
-    for job in batch {
+    for mut job in batch {
         match job.request.deadline {
-            Some(d) if now >= d => shed_job(metrics, &job, "deadline expired before execution"),
+            Some(d) if now >= d => {
+                job.deliver_shed(metrics, "deadline expired before execution")
+            }
             _ => live.push(job),
         }
     }
@@ -510,7 +564,7 @@ fn handle_shared_batch(
         if !est_full.is_zero() {
             let ladder = &q.cfg.ladder;
             let mut fitting: Vec<Job> = Vec::with_capacity(live.len());
-            for job in live {
+            for mut job in live {
                 if let Some(d) = job.request.deadline {
                     let remaining = d.saturating_duration_since(now);
                     let mut r = rung;
@@ -520,9 +574,8 @@ fn handle_shared_batch(
                         r += 1;
                     }
                     if est_full.mul_f64(ladder.cost_ratio_for(r, request_accel)) > remaining {
-                        shed_job(
+                        job.deliver_shed(
                             metrics,
-                            &job,
                             "deadline unmeetable even at the cheapest quality rung",
                         );
                         continue;
@@ -541,14 +594,9 @@ fn handle_shared_batch(
         return;
     }
 
-    let fail_all = |live: &[Job], msg: String| {
-        for job in live {
-            metrics.record_error();
-            let _ = job.respond.send(RenderResponse::failure(
-                job.request.id,
-                job.enqueued.elapsed(),
-                msg.clone(),
-            ));
+    let fail_all = |jobs: &mut [Job], msg: String| {
+        for job in jobs.iter_mut() {
+            job.deliver_error(metrics, msg.clone());
         }
     };
     // Resolve the rung's operating point: camera scaled to the rung's
@@ -578,7 +626,7 @@ fn handle_shared_batch(
     for job in &mut live {
         job.park_started = Some(park_mark);
     }
-    let (cloud, live) = match catalog.acquire(&scene, accel, live) {
+    let (cloud, mut live) = match catalog.acquire(&scene, accel, live) {
         Acquire::Ready(cloud, mut jobs) => {
             for job in &mut jobs {
                 job.park_started = None; // resident: no park happened
@@ -586,11 +634,14 @@ fn handle_shared_batch(
             (cloud, jobs)
         }
         Acquire::Parked => return,
-        Acquire::Failed(jobs, msg) => {
-            fail_all(&jobs, msg);
+        Acquire::Failed(mut jobs, msg) => {
+            fail_all(&mut jobs, msg);
             return;
         }
     };
+    for job in live.iter_mut() {
+        job.mark(Stage::Executing);
+    }
     metrics.record_batch(live.len());
     let cfg = render_cfg.clone().with_accel(accel.instantiate());
     let t_exec = Instant::now();
@@ -611,8 +662,8 @@ fn handle_shared_batch(
             } else {
                 metrics.record_exec(per_frame);
             }
-            for (job, out) in live.iter().zip(outs) {
-                let latency = respond(metrics, job, out, rung);
+            for (job, out) in live.iter_mut().zip(outs) {
+                let latency = job.deliver_frame(metrics, out, rung);
                 if let Some(q) = qos.as_mut() {
                     // controller steers on queue + execute time only:
                     // parked (scene-load) time is not actionable by a
@@ -625,7 +676,7 @@ fn handle_shared_batch(
                 }
             }
         }
-        Err(e) => fail_all(&live, format!("render failed: {e:#}")),
+        Err(e) => fail_all(&mut live, format!("render failed: {e:#}")),
     }
 }
 
@@ -667,8 +718,13 @@ impl Coordinator {
         };
         let key_of: fn(&Job) -> (String, (u32, u32), AccelKind) = job_key;
         let deadline_of: fn(&Job) -> Option<Instant> = job_deadline;
-        let scheduler: Arc<JobScheduler> =
-            Arc::new(BatchScheduler::with_deadlines(rx, policy, key_of, deadline_of));
+        let mut raw_scheduler = BatchScheduler::with_deadlines(rx, policy, key_of, deadline_of);
+        // the scheduler drives each job's lifecycle machine: Pending on
+        // channel drain (including into the EDF reorder buffer),
+        // Coalesced on batch selection — validated against the same
+        // transition table the model checker explores (DESIGN.md §12)
+        raw_scheduler.set_stage_observer(Box::new(|job: &mut Job, stage| job.mark(stage)));
+        let scheduler: Arc<JobScheduler> = Arc::new(raw_scheduler);
         let worker_count = cfg.workers.max(1);
         let mut sticky_txs = Vec::with_capacity(worker_count);
         let mut sticky_rxs = Vec::with_capacity(worker_count);
@@ -704,27 +760,20 @@ impl Coordinator {
                         }
                         None => shared.send(job).err().map(|e| e.0),
                     };
-                    if let Some(job) = dead {
+                    if let Some(mut job) = dead {
                         m.dequeue();
-                        m.record_error();
-                        let _ = job.respond.send(RenderResponse::failure(
-                            job.request.id,
-                            job.enqueued.elapsed(),
+                        job.deliver_error(
+                            &m,
                             "render service unavailable: workers exited while the \
                              scene was loading"
                                 .to_string(),
-                        ));
+                        );
                     }
                 }
             };
             let m = Arc::clone(&metrics);
-            let fail = move |job: Job, msg: &str| {
-                m.record_error();
-                let _ = job.respond.send(RenderResponse::failure(
-                    job.request.id,
-                    job.enqueued.elapsed(),
-                    msg.to_string(),
-                ));
+            let fail = move |mut job: Job, msg: &str| {
+                job.deliver_error(&m, msg.to_string());
             };
             catalog.connect(redeliver, fail);
         }
@@ -942,6 +991,8 @@ impl Coordinator {
             parked: Duration::ZERO,
             park_started: None,
             respond,
+            lifecycle: LifecycleCell::new(),
+            metrics: Arc::clone(&self.metrics),
         };
         // session frames route to their sticky worker's own queue
         // (DESIGN.md §9); everything else goes through the shared
@@ -974,23 +1025,21 @@ impl Coordinator {
         };
         match undeliverable {
             None => {}
-            Some(NotSent::Full(job)) => {
+            Some(NotSent::Full(mut job)) => {
                 // non-blocking admission against a full queue: shed
                 self.metrics.dequeue();
-                shed_job(&self.metrics, &job, "admission queue full");
+                job.deliver_shed(&self.metrics, "admission queue full");
             }
-            Some(NotSent::Dead(job)) => {
+            Some(NotSent::Dead(mut job)) => {
                 // all workers exited, so the queue receiver is gone;
                 // fail the request through its own response channel
                 self.metrics.dequeue();
-                self.metrics.record_error();
-                let _ = job.respond.send(RenderResponse::failure(
-                    job.request.id,
-                    job.enqueued.elapsed(),
+                job.deliver_error(
+                    &self.metrics,
                     "render service unavailable: all workers exited \
                      (backend initialization failed?)"
                         .to_string(),
-                ));
+                );
             }
         }
         rx
@@ -1304,6 +1353,56 @@ mod tests {
             assert!(resp.image.is_none());
         }
         assert!(coord.metrics().errors >= 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dead_workers_backstop_queued_session_frames_with_exactly_one_response() {
+        if crate::runtime::artifacts_available() {
+            return; // with artifacts the backend initializes fine
+        }
+        // Every worker fails backend init and exits. A session frame
+        // already sitting in a sticky queue when its worker dies used
+        // to be silently dropped — the caller's recv() saw a closed
+        // channel, not a response. The Job drop backstop now answers
+        // it: exactly one error response, never zero, never two.
+        let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(0.001));
+        let mut scenes = HashMap::new();
+        scenes.insert("train".to_string(), cloud);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                backend: BackendKind::ArtifactGemm,
+                ..CoordinatorConfig::default()
+            },
+            scenes,
+        );
+        let camera = Camera::look_at(
+            Vec3::new(0.0, 1.0, -8.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            160,
+            96,
+        );
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                coord.submit(RenderRequest::new(i, "train", camera).with_session(i, 0))
+            })
+            .collect();
+        for rx in rxs {
+            // a response always arrives — whether the send lost the
+            // race (explicit unavailable error) or the queued job was
+            // dropped with the dying worker (backstop response)
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("a dropped request must still be answered");
+            assert!(resp.error.is_some(), "expected an error response");
+            assert!(resp.image.is_none());
+            assert!(!resp.shed);
+        }
+        let m = coord.metrics();
+        assert!(m.errors >= 4, "every request counted as an error: {m:?}");
         coord.shutdown();
     }
 

@@ -40,6 +40,7 @@ pub mod bench_harness;
 pub mod coordinator;
 pub mod gemm;
 pub mod math;
+pub mod model;
 pub mod perfmodel;
 pub mod pipeline;
 pub mod qos;

@@ -25,6 +25,8 @@
 //!                                   # multi-scene catalog sweep: Zipf scene mix vs
 //!                                   # memory budget (§11, EXPERIMENTS.md §Catalog)
 //! gemm-gs inspect [--scale 0.02]    # Table 1   (workload statistics)
+//! gemm-gs check-model [--seed 42] [--depth 7] [--steps 20000] [--fault none]
+//!                                   # lifecycle model checker (DESIGN.md §12)
 //! ```
 //!
 //! `serve --slo-ms <ms> [--ladder <spec>]` turns the service SLO-driven
@@ -195,6 +197,7 @@ fn main() {
             print!("{}", bench_harness::trajectory::render(&pts, &scene, frames, step));
         }
         "bench-soak" => cmd_bench_soak(&args),
+        "check-model" => cmd_check_model(&args),
         "export-ply" => cmd_export_ply(&args),
         "inspect" => cmd_inspect(scale),
         "help" | "--help" | "-h" => usage(),
@@ -208,7 +211,7 @@ fn main() {
 
 fn usage() {
     println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
-    println!("subcommands: render render-trajectory serve export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak inspect");
+    println!("subcommands: render render-trajectory serve export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak inspect check-model");
     println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
     println!("              --accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>");
     println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
@@ -220,6 +223,8 @@ fn usage() {
     println!("bench-soak:   --rate REQ_S --duration SECS --slo-ms MS --seed N --workers N");
     println!("              (rate 0 / slo-ms 0 auto-calibrate against the measured frame cost)");
     println!("              --scenes N --zipf S  (N ≥ 2: multi-scene catalog sweep, DESIGN.md §11)");
+    println!("check-model:  --seed N --depth D --steps N  (model checker, DESIGN.md §12)");
+    println!("              --fault <none|drop-on-death|skip-starvation|lifo-redeliver|evict-pinned>");
 }
 
 /// `--accel` with a graceful unknown-name error (shared by render,
@@ -651,6 +656,108 @@ fn cmd_bench_soak(args: &Args) {
         eprintln!("gemm-gs: {transport} transport error(s) during soak — service unhealthy");
         std::process::exit(1);
     }
+}
+
+/// `check-model` — the DESIGN.md §12 lifecycle model checker: a bounded
+/// exhaustive BFS plus a seeded stochastic walk over the request and
+/// catalog machines. Exit 0 when every invariant holds; exit 1 printing
+/// the shrunk replayable counterexample trace when one does not
+/// (`--fault` injects a deliberate bug to demonstrate exactly that);
+/// exit 2 on malformed flags, like every subcommand.
+fn cmd_check_model(args: &Args) {
+    use gemm_gs::model::catalog::{CatalogFault, CatalogModel, CatalogModelCfg};
+    use gemm_gs::model::explore::{bfs, random_walk, Machine, Violation};
+    use gemm_gs::model::request::{RequestFault, RequestModel, RequestModelCfg};
+
+    fn violated<M: Machine>(machine: &str, v: &Violation<M>) -> ! {
+        eprintln!("check-model: {machine} machine:");
+        eprint!("{}", v.render());
+        std::process::exit(1)
+    }
+
+    let seed = args.get_usize("seed", 42) as u64;
+    let depth = args.get_usize("depth", 7);
+    let steps = args.get_usize("steps", 20_000);
+    let fault = args.get("fault", "none");
+    const MAX_STATES: usize = 400_000;
+
+    let (req_fault, cat_fault) = match fault.as_str() {
+        "none" => (None, None),
+        "drop-on-death" => (Some(RequestFault::DropResponsesOnWorkerDeath), None),
+        "skip-starvation" => (Some(RequestFault::SkipStarvationGuard), None),
+        "lifo-redeliver" => (None, Some(CatalogFault::RedeliverLifo)),
+        "evict-pinned" => (None, Some(CatalogFault::EvictPinned)),
+        other => bail(&format!(
+            "flag --fault: unknown fault '{other}' \
+             (expected none|drop-on-death|skip-starvation|lifo-redeliver|evict-pinned)"
+        )),
+    };
+
+    // Faulted worlds mirror the minimal configurations the in-crate
+    // regression tests use, so an injected bug is caught
+    // deterministically within the default depth/step budget instead of
+    // probabilistically.
+    let req_cfg = match req_fault {
+        Some(RequestFault::SkipStarvationGuard) => RequestModelCfg {
+            workers: 1,
+            requests: 3,
+            queue_cap: 4,
+            max_batch: 1,
+            starve_limit: 1,
+            fault: req_fault,
+        },
+        _ => RequestModelCfg { fault: req_fault, ..RequestModelCfg::default() },
+    };
+    let req = RequestModel::new(req_cfg);
+    match bfs(&req, depth, MAX_STATES) {
+        Ok(st) => println!(
+            "request model: BFS clean — {} states, {} transitions, depth {}{}",
+            st.states,
+            st.transitions,
+            st.max_depth,
+            if st.truncated { " (state cap hit: coverage below the bound is partial)" } else { "" }
+        ),
+        Err(v) => violated("request", &v),
+    }
+    match random_walk(&req, seed, steps, 64) {
+        Ok(st) => println!(
+            "request model: walk clean — {} steps, {} resets (seed {seed})",
+            st.steps, st.resets
+        ),
+        Err(v) => violated("request", &v),
+    }
+
+    // The catalog state embeds an LRU clock, so BFS deduplication is
+    // weak there: explore a tight two-scene world exhaustively and lean
+    // on the long stochastic walk for the full default world.
+    let small = CatalogModel::new(CatalogModelCfg {
+        scenes: 2,
+        budget: 50,
+        scene_bytes: vec![40, 30],
+        max_pins: 1,
+        fault: cat_fault,
+    });
+    match bfs(&small, depth.min(6), MAX_STATES) {
+        Ok(st) => println!(
+            "catalog model: BFS clean — {} states, {} transitions, depth {}{}",
+            st.states,
+            st.transitions,
+            st.max_depth,
+            if st.truncated { " (state cap hit: coverage below the bound is partial)" } else { "" }
+        ),
+        Err(v) => violated("catalog", &v),
+    }
+    let cat = CatalogModel::new(CatalogModelCfg { fault: cat_fault, ..CatalogModelCfg::default() });
+    match random_walk(&cat, seed ^ 0xCA7A, steps, 128) {
+        Ok(st) => println!(
+            "catalog model: walk clean — {} steps, {} resets (seed {})",
+            st.steps,
+            st.resets,
+            seed ^ 0xCA7A
+        ),
+        Err(v) => violated("catalog", &v),
+    }
+    println!("check-model: all invariants hold (seed {seed}, depth {depth}, steps {steps})");
 }
 
 /// `export-ply` — write a synthetic Table 1 scene as a 3DGS checkpoint

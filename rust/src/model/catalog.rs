@@ -1,0 +1,499 @@
+//! The catalog residency lifecycle as an explicit state machine.
+//!
+//! As with [`super::request`], there are two layers sharing one
+//! transition table:
+//!
+//! * [`Residency`] — the residency stages and their legal transitions.
+//!   The production `coordinator::catalog::SceneCatalog` maps its
+//!   per-entry state onto these tags and validates **every** state flip
+//!   against [`Residency::legal`] before performing it.
+//! * [`CatalogModel`] — a closed-world model of the catalog (lazy
+//!   loads, parked payloads, LRU eviction under a byte budget,
+//!   pinning, failure latching) for the exploration harness. Its
+//!   invariants are the documented catalog guarantees: **no scene
+//!   double-load**, **parked-payload FIFO redelivery**, **budget
+//!   convergence once pins drop**, and **failure latching**.
+
+use super::explore::Machine;
+
+/// The residency stages (DESIGN.md §12).
+///
+/// ```text
+/// Registered ──► Loading ──► Resident ◄──► Pinned
+///     ▲             │  │         │
+///     │             │  └──► Failed (latched)
+///     │             └─────► Registered   (disconnect rollback)
+///     └── Evicted ◄─────── Resident
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Residency {
+    /// Source known, nothing resident; a first acquire starts a load.
+    Registered,
+    /// Exactly one load in flight; incoming requests park FIFO.
+    Loading,
+    /// Cloud (and prepared caches) in memory, evictable.
+    Resident,
+    /// Resident and referenced beyond the catalog (in production:
+    /// `Arc::strong_count > 1`, or prepared cells/models checked out) —
+    /// never a victim.
+    Pinned,
+    /// Just evicted; transient — immediately re-registers since the
+    /// source is retained for transparent reload.
+    Evicted,
+    /// Load failed; latched so one bad checkpoint cannot put the
+    /// loader thread into a retry loop.
+    Failed,
+}
+
+impl Residency {
+    /// The transition table — the single source of truth the
+    /// production catalog validates against.
+    pub fn legal(from: Residency, to: Residency) -> bool {
+        use Residency::*;
+        matches!(
+            (from, to),
+            (Registered, Loading)
+                | (Loading, Resident)
+                | (Loading, Failed)
+                | (Loading, Registered) // disconnect rolls a load back
+                | (Resident, Pinned)
+                | (Pinned, Resident)
+                | (Resident, Evicted)
+                | (Evicted, Registered)
+        )
+    }
+
+    /// Is this stage terminal (absorbing)? Only [`Residency::Failed`]:
+    /// the failure latch.
+    pub fn latched(&self) -> bool {
+        matches!(self, Residency::Failed)
+    }
+}
+
+/// Deliberate faults for checker demonstrations (test-only hooks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CatalogFault {
+    /// Redeliver parked payloads in LIFO order — breaking the
+    /// documented FIFO fairness of park/redeliver.
+    RedeliverLifo,
+    /// Evict pinned scenes too — breaking the pin guarantee and the
+    /// byte accounting behind budget convergence.
+    EvictPinned,
+}
+
+/// Closed-world model configuration.
+#[derive(Debug, Clone)]
+pub struct CatalogModelCfg {
+    /// Number of registered scenes.
+    pub scenes: usize,
+    /// Resident-byte budget.
+    pub budget: u64,
+    /// Bytes per scene, indexed by scene id.
+    pub scene_bytes: Vec<u64>,
+    /// Maximum simultaneous pins per scene the environment may take.
+    pub max_pins: u8,
+    /// Injected fault, if any.
+    pub fault: Option<CatalogFault>,
+}
+
+impl Default for CatalogModelCfg {
+    fn default() -> Self {
+        CatalogModelCfg {
+            scenes: 4,
+            budget: 100,
+            scene_bytes: vec![60, 50, 40, 30],
+            max_pins: 2,
+            fault: None,
+        }
+    }
+}
+
+/// One modeled scene entry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SceneEntry {
+    /// Residency stage.
+    pub res: Residency,
+    /// Parked request tickets, FIFO.
+    pub parked: Vec<u16>,
+    /// Outstanding pins (> 0 iff [`Residency::Pinned`]).
+    pub pins: u8,
+    /// LRU clock value of the last touch.
+    pub last_touch: u32,
+    /// Loads in flight — the no-double-load invariant caps this at 1.
+    pub inflight: u8,
+}
+
+/// The model's world state.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CatalogState {
+    /// Per-scene entries.
+    pub scenes: Vec<SceneEntry>,
+    /// LRU clock.
+    pub clock: u32,
+    /// Next parked-request ticket id.
+    pub next_ticket: u16,
+    /// Sum of bytes of Resident/Pinned scenes (checked against the
+    /// per-scene stages by an accounting invariant).
+    pub resident_bytes: u64,
+    /// History flag: an eviction scan ran while nothing was pinned and
+    /// no load was in flight, and no bytes have been added since — the
+    /// budget-convergence invariant asserts bytes ≤ budget while set.
+    pub scanned_clean: bool,
+    /// Last completed redelivery: `(expected FIFO order, actual order)`
+    /// — the FIFO invariant asserts they match.
+    pub last_redelivery: Vec<(u16, u16)>,
+}
+
+/// Model events — each an atomic step of the real catalog.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum CatalogEvent {
+    /// A request arrives for scene `s`: starts a load (Registered),
+    /// parks (Loading), touches LRU (Resident/Pinned), or fails fast
+    /// (Failed — the latch).
+    Acquire {
+        /// Scene id.
+        s: u8,
+    },
+    /// Scene `s`'s load completes; parked tickets redeliver FIFO.
+    LoadOk {
+        /// Scene id.
+        s: u8,
+    },
+    /// Scene `s`'s load fails; parked tickets fail; the entry latches.
+    LoadErr {
+        /// Scene id.
+        s: u8,
+    },
+    /// Disconnect-mid-load rollback: the load is abandoned and the
+    /// entry returns to Registered; parked tickets fail.
+    AbortLoad {
+        /// Scene id.
+        s: u8,
+    },
+    /// The environment takes a reference to resident scene `s`
+    /// (`Arc` clone / prepared-model checkout).
+    Pin {
+        /// Scene id.
+        s: u8,
+    },
+    /// A pin on scene `s` drops.
+    Unpin {
+        /// Scene id.
+        s: u8,
+    },
+    /// An eviction scan: evict LRU unpinned resident scenes until the
+    /// budget is met or nothing is evictable.
+    EvictScan,
+}
+
+/// The catalog-residency world model. See module docs.
+#[derive(Debug, Clone)]
+pub struct CatalogModel {
+    /// Model configuration.
+    pub cfg: CatalogModelCfg,
+}
+
+impl CatalogModel {
+    /// Model over `cfg`.
+    pub fn new(cfg: CatalogModelCfg) -> CatalogModel {
+        assert!(cfg.scenes >= 1);
+        assert_eq!(cfg.scene_bytes.len(), cfg.scenes, "one byte size per scene");
+        CatalogModel { cfg }
+    }
+
+    fn transition(entry: &mut SceneEntry, to: Residency) {
+        debug_assert!(
+            Residency::legal(entry.res, to),
+            "model produced illegal residency transition {:?} -> {to:?}",
+            entry.res
+        );
+        entry.res = to;
+    }
+}
+
+impl Machine for CatalogModel {
+    type State = CatalogState;
+    type Event = CatalogEvent;
+
+    fn initial(&self) -> CatalogState {
+        CatalogState {
+            scenes: (0..self.cfg.scenes)
+                .map(|_| SceneEntry {
+                    res: Residency::Registered,
+                    parked: Vec::new(),
+                    pins: 0,
+                    last_touch: 0,
+                    inflight: 0,
+                })
+                .collect(),
+            clock: 0,
+            next_ticket: 0,
+            resident_bytes: 0,
+            scanned_clean: false,
+            last_redelivery: Vec::new(),
+        }
+    }
+
+    fn events(&self, s: &CatalogState) -> Vec<CatalogEvent> {
+        let mut evs = vec![CatalogEvent::EvictScan];
+        for (i, e) in s.scenes.iter().enumerate() {
+            let id = i as u8;
+            evs.push(CatalogEvent::Acquire { s: id });
+            if e.res == Residency::Loading {
+                evs.push(CatalogEvent::LoadOk { s: id });
+                evs.push(CatalogEvent::LoadErr { s: id });
+                evs.push(CatalogEvent::AbortLoad { s: id });
+            }
+            if matches!(e.res, Residency::Resident | Residency::Pinned)
+                && e.pins < self.cfg.max_pins
+            {
+                evs.push(CatalogEvent::Pin { s: id });
+            }
+            if e.pins > 0 {
+                evs.push(CatalogEvent::Unpin { s: id });
+            }
+        }
+        evs
+    }
+
+    fn step(&self, s: &CatalogState, e: &CatalogEvent) -> CatalogState {
+        let mut s = s.clone();
+        match *e {
+            CatalogEvent::Acquire { s: id } => {
+                s.clock += 1;
+                let clock = s.clock;
+                let ticket = s.next_ticket;
+                let entry = &mut s.scenes[id as usize];
+                match entry.res {
+                    Residency::Registered => {
+                        Self::transition(entry, Residency::Loading);
+                        entry.inflight += 1;
+                        entry.parked.push(ticket);
+                        s.next_ticket += 1;
+                    }
+                    Residency::Loading => {
+                        entry.parked.push(ticket);
+                        s.next_ticket += 1;
+                    }
+                    Residency::Resident | Residency::Pinned => entry.last_touch = clock,
+                    Residency::Failed => {} // latched: fails fast, no state change
+                    Residency::Evicted => unreachable!("Evicted is transient"),
+                }
+            }
+            CatalogEvent::LoadOk { s: id } => {
+                let fault_lifo = self.cfg.fault == Some(CatalogFault::RedeliverLifo);
+                s.clock += 1;
+                let clock = s.clock;
+                let bytes = self.cfg.scene_bytes[id as usize];
+                let entry = &mut s.scenes[id as usize];
+                Self::transition(entry, Residency::Resident);
+                entry.inflight -= 1;
+                entry.last_touch = clock;
+                let expected = std::mem::take(&mut entry.parked);
+                let mut actual = expected.clone();
+                if fault_lifo {
+                    actual.reverse();
+                }
+                s.last_redelivery = expected.into_iter().zip(actual).collect();
+                s.resident_bytes += bytes;
+                s.scanned_clean = false; // new bytes: convergence must re-run
+            }
+            CatalogEvent::LoadErr { s: id } => {
+                let entry = &mut s.scenes[id as usize];
+                Self::transition(entry, Residency::Failed);
+                entry.inflight -= 1;
+                entry.parked.clear(); // parked tickets fail with the load
+            }
+            CatalogEvent::AbortLoad { s: id } => {
+                let entry = &mut s.scenes[id as usize];
+                Self::transition(entry, Residency::Registered);
+                entry.inflight -= 1;
+                entry.parked.clear(); // parked tickets fail on disconnect
+            }
+            CatalogEvent::Pin { s: id } => {
+                let entry = &mut s.scenes[id as usize];
+                if entry.res == Residency::Resident {
+                    Self::transition(entry, Residency::Pinned);
+                }
+                entry.pins += 1;
+            }
+            CatalogEvent::Unpin { s: id } => {
+                let entry = &mut s.scenes[id as usize];
+                entry.pins -= 1;
+                if entry.pins == 0 {
+                    Self::transition(entry, Residency::Resident);
+                }
+            }
+            CatalogEvent::EvictScan => {
+                let evict_pinned = self.cfg.fault == Some(CatalogFault::EvictPinned);
+                let no_pins = s.scenes.iter().all(|e| e.pins == 0);
+                let no_loads = s.scenes.iter().all(|e| e.inflight == 0);
+                while s.resident_bytes > self.cfg.budget {
+                    // LRU victim among evictable scenes
+                    let victim = s
+                        .scenes
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, e)| {
+                            e.res == Residency::Resident
+                                || (evict_pinned && e.res == Residency::Pinned)
+                        })
+                        .min_by_key(|(_, e)| e.last_touch)
+                        .map(|(i, _)| i);
+                    let Some(i) = victim else { break }; // futile scan: back off
+                    let bytes = self.cfg.scene_bytes[i];
+                    let entry = &mut s.scenes[i];
+                    if entry.res == Residency::Pinned {
+                        // only reachable under the EvictPinned fault:
+                        // the catalog drops the bytes while the
+                        // environment still holds the reference
+                        entry.res = Residency::Registered;
+                    } else {
+                        Self::transition(entry, Residency::Evicted);
+                        Self::transition(entry, Residency::Registered);
+                    }
+                    s.resident_bytes = s.resident_bytes.saturating_sub(bytes);
+                }
+                if no_pins && no_loads {
+                    // with nothing pinned and no load racing the scan,
+                    // the budget must now be met — and stay met until
+                    // bytes are added again
+                    s.scanned_clean = true;
+                }
+            }
+        }
+        s
+    }
+
+    fn invariant(&self, s: &CatalogState) -> Result<(), String> {
+        let mut accounted = 0u64;
+        for (i, e) in s.scenes.iter().enumerate() {
+            // (1) no double-load, and loads only while Loading
+            if e.inflight > 1 {
+                return Err(format!("scene {i}: {} loads in flight (double-load)", e.inflight));
+            }
+            if (e.inflight == 1) != (e.res == Residency::Loading) {
+                return Err(format!(
+                    "scene {i}: inflight={} disagrees with residency {:?}",
+                    e.inflight, e.res
+                ));
+            }
+            // (4) failure latch: a failed entry holds nothing
+            if e.res == Residency::Failed && (!e.parked.is_empty() || e.pins > 0) {
+                return Err(format!("scene {i}: latched-failed entry still holds work"));
+            }
+            // pin bookkeeping: Pinned ⇔ pins > 0
+            if (e.pins > 0) != (e.res == Residency::Pinned) {
+                return Err(format!(
+                    "scene {i}: pins={} disagrees with residency {:?}",
+                    e.pins, e.res
+                ));
+            }
+            // parked payloads only exist while a load is in flight
+            if !e.parked.is_empty() && e.res != Residency::Loading {
+                return Err(format!("scene {i}: parked payloads outside Loading"));
+            }
+            if matches!(e.res, Residency::Resident | Residency::Pinned) {
+                accounted += self.cfg.scene_bytes[i];
+            }
+        }
+        // byte accounting must match the per-scene stages exactly
+        if accounted != s.resident_bytes {
+            return Err(format!(
+                "resident-byte accounting drift: counter {} vs actual {accounted}",
+                s.resident_bytes
+            ));
+        }
+        // (2) parked FIFO redelivery order
+        for &(expected, actual) in &s.last_redelivery {
+            if expected != actual {
+                return Err(format!(
+                    "parked redelivery out of FIFO order: expected ticket {expected}, \
+                     delivered {actual}"
+                ));
+            }
+        }
+        // (3) budget convergence once pins drop
+        if s.scanned_clean && s.resident_bytes > self.cfg.budget {
+            return Err(format!(
+                "budget not converged after unpinned scan: {} resident > budget {}",
+                s.resident_bytes, self.cfg.budget
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::explore::{bfs, random_walk};
+
+    #[test]
+    fn transition_table_shape() {
+        use Residency::*;
+        assert!(Residency::legal(Registered, Loading));
+        assert!(Residency::legal(Loading, Resident));
+        assert!(Residency::legal(Loading, Failed));
+        assert!(Residency::legal(Loading, Registered));
+        assert!(Residency::legal(Resident, Pinned));
+        assert!(Residency::legal(Pinned, Resident));
+        assert!(Residency::legal(Resident, Evicted));
+        assert!(Residency::legal(Evicted, Registered));
+        // the failure latch is absorbing; no shortcuts exist
+        assert!(!Residency::legal(Failed, Loading));
+        assert!(!Residency::legal(Failed, Registered));
+        assert!(!Residency::legal(Registered, Resident));
+        assert!(!Residency::legal(Pinned, Evicted));
+        assert!(!Residency::legal(Evicted, Loading));
+        assert!(Failed.latched());
+        assert!(!Resident.latched());
+    }
+
+    #[test]
+    fn stochastic_walk_is_clean() {
+        let m = CatalogModel::new(CatalogModelCfg::default());
+        let stats = random_walk(&m, 0xCA7A, 20_000, 128).expect("faithful model walks clean");
+        assert_eq!(stats.steps, 20_000);
+    }
+
+    #[test]
+    fn bounded_bfs_is_clean() {
+        // small world: 2 scenes, tight budget — exhaustive to depth 6
+        let m = CatalogModel::new(CatalogModelCfg {
+            scenes: 2,
+            budget: 50,
+            scene_bytes: vec![40, 30],
+            max_pins: 1,
+            fault: None,
+        });
+        let stats = bfs(&m, 5, 150_000).expect("no violation in the faithful model");
+        assert!(stats.states > 50, "explored {} states", stats.states);
+    }
+
+    #[test]
+    fn lifo_redelivery_fault_is_caught_and_shrinks() {
+        let m = CatalogModel::new(CatalogModelCfg {
+            fault: Some(CatalogFault::RedeliverLifo),
+            ..CatalogModelCfg::default()
+        });
+        let v = random_walk(&m, 0xF1F0, 50_000, 128).expect_err("LIFO fault must be caught");
+        assert!(v.message.contains("FIFO"), "{}", v.render());
+        // minimal trace: two parking acquires and the load completion
+        assert_eq!(v.trace.len(), 3, "{}", v.render());
+    }
+
+    #[test]
+    fn evict_pinned_fault_is_caught() {
+        let m = CatalogModel::new(CatalogModelCfg {
+            fault: Some(CatalogFault::EvictPinned),
+            ..CatalogModelCfg::default()
+        });
+        let v = random_walk(&m, 0xE71C, 50_000, 128).expect_err("pin violation must be caught");
+        assert!(
+            v.message.contains("pins=") || v.message.contains("accounting"),
+            "{}",
+            v.render()
+        );
+    }
+}

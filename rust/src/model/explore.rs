@@ -1,0 +1,418 @@
+//! The exploration harness: a pure-transition [`Machine`] trait, a
+//! bounded exhaustive breadth-first explorer, a seeded stochastic
+//! walker, and a delta-debugging trace shrinker.
+//!
+//! The layering follows the polestar fsm / model-checker split: the
+//! machines in [`super::request`] and [`super::catalog`] define states,
+//! enabled events, and pure `step` functions with **no** side effects;
+//! this module owns every search strategy and never inspects machine
+//! internals beyond the trait. A counterexample is always delivered as
+//! a replayable event trace ([`Violation::trace`]) already shrunk to a
+//! local minimum — paste the printed trace into [`replay`] to step
+//! through it again.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt::Debug;
+use std::hash::Hash;
+
+use crate::scene::rng::Rng;
+
+/// A finite state machine with pure transitions and checkable
+/// invariants. `step` is only ever called with an event returned by
+/// `events` for that exact state; on any other pair its behavior is
+/// unspecified (the harness never does this).
+pub trait Machine {
+    /// Machine state: cheap to clone, hashable for BFS deduplication.
+    type State: Clone + Eq + Hash + Debug;
+    /// One atomic transition label.
+    type Event: Clone + Debug;
+
+    /// The single initial state.
+    fn initial(&self) -> Self::State;
+
+    /// All events enabled in `state`. An empty vector means the state
+    /// is quiescent (a BFS leaf; the walker resets to `initial`).
+    fn events(&self, state: &Self::State) -> Vec<Self::Event>;
+
+    /// Apply one enabled event. Pure: no I/O, no interior mutability.
+    fn step(&self, state: &Self::State, event: &Self::Event) -> Self::State;
+
+    /// The conjunction of the machine's invariants, as a predicate over
+    /// a single state. `Err` carries the human-readable violation.
+    fn invariant(&self, state: &Self::State) -> Result<(), String>;
+}
+
+/// A found invariant violation: the message, the already-shrunk
+/// replayable trace that reaches it, and the offending state.
+pub struct Violation<M: Machine> {
+    /// The invariant's failure message.
+    pub message: String,
+    /// Minimal event trace from `initial` to the violating state.
+    pub trace: Vec<M::Event>,
+    /// The state that failed the invariant.
+    pub state: M::State,
+}
+
+// hand-written impls: a derive would demand `M: Debug`/`M: Clone` on
+// the machine itself, but only the associated types are stored
+impl<M: Machine> std::fmt::Debug for Violation<M> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Violation")
+            .field("message", &self.message)
+            .field("trace", &self.trace)
+            .field("state", &self.state)
+            .finish()
+    }
+}
+
+impl<M: Machine> Clone for Violation<M> {
+    fn clone(&self) -> Self {
+        Violation {
+            message: self.message.clone(),
+            trace: self.trace.clone(),
+            state: self.state.clone(),
+        }
+    }
+}
+
+impl<M: Machine> Violation<M> {
+    /// Render the trace as numbered lines, one event per line — the
+    /// form the `check-model` subcommand prints and DESIGN.md §12
+    /// documents as the reproduce format.
+    pub fn render(&self) -> String {
+        let mut out = format!("invariant violated: {}\n", self.message);
+        out.push_str(&format!("counterexample ({} events):\n", self.trace.len()));
+        for (i, ev) in self.trace.iter().enumerate() {
+            out.push_str(&format!("  {i:3}: {ev:?}\n"));
+        }
+        out.push_str(&format!("final state: {:?}\n", self.state));
+        out
+    }
+}
+
+/// Statistics from a completed (violation-free) BFS exploration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BfsStats {
+    /// Distinct states visited (after deduplication).
+    pub states: usize,
+    /// Transitions taken (enabled events expanded).
+    pub transitions: usize,
+    /// Depth of the deepest visited state.
+    pub max_depth: usize,
+    /// True when the state cap stopped expansion before the depth
+    /// bound was reached — coverage below the bound is then partial.
+    pub truncated: bool,
+}
+
+/// Exhaustive breadth-first exploration of all interleavings up to
+/// `max_depth` events, deduplicating states, checking the invariant on
+/// every *distinct* state. `max_states` caps memory; hitting it sets
+/// [`BfsStats::truncated`] instead of erroring.
+pub fn bfs<M: Machine>(
+    machine: &M,
+    max_depth: usize,
+    max_states: usize,
+) -> Result<BfsStats, Violation<M>> {
+    let initial = machine.initial();
+    if let Err(message) = machine.invariant(&initial) {
+        return Err(Violation { message, trace: Vec::new(), state: initial });
+    }
+
+    // state → id; parent links reconstruct the trace on violation
+    let mut ids: HashMap<M::State, u32> = HashMap::new();
+    let mut meta: Vec<(u32, Option<M::Event>, u32)> = Vec::new(); // (parent, via, depth)
+    let mut frontier: VecDeque<(M::State, u32)> = VecDeque::new();
+
+    ids.insert(initial.clone(), 0);
+    meta.push((0, None, 0));
+    frontier.push_back((initial, 0));
+
+    let mut transitions = 0usize;
+    let mut max_seen_depth = 0usize;
+    let mut truncated = false;
+
+    while let Some((state, id)) = frontier.pop_front() {
+        let depth = meta[id as usize].2 as usize;
+        max_seen_depth = max_seen_depth.max(depth);
+        if depth == max_depth {
+            continue;
+        }
+        for event in machine.events(&state) {
+            transitions += 1;
+            let next = machine.step(&state, &event);
+            if ids.contains_key(&next) {
+                continue;
+            }
+            if ids.len() >= max_states {
+                truncated = true;
+                continue;
+            }
+            let next_id = meta.len() as u32;
+            meta.push((id, Some(event.clone()), depth as u32 + 1));
+            if let Err(message) = machine.invariant(&next) {
+                // reconstruct, then shrink to a local minimum
+                let mut trace = Vec::new();
+                let mut cur = next_id as usize;
+                while let (parent, Some(ev), _) = &meta[cur] {
+                    trace.push(ev.clone());
+                    cur = *parent as usize;
+                }
+                trace.reverse();
+                let trace = shrink(machine, &trace);
+                let (state, message) = replay_violation(machine, &trace, message);
+                return Err(Violation { message, trace, state });
+            }
+            ids.insert(next.clone(), next_id);
+            frontier.push_back((next, next_id));
+        }
+    }
+
+    Ok(BfsStats { states: ids.len(), transitions, max_depth: max_seen_depth, truncated })
+}
+
+/// Statistics from a completed (violation-free) stochastic walk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalkStats {
+    /// Events actually taken.
+    pub steps: usize,
+    /// Times the walk reset to the initial state (quiescence or the
+    /// periodic restart).
+    pub resets: usize,
+}
+
+/// Seeded stochastic long-run walk: from `initial`, repeatedly pick a
+/// uniformly random enabled event, checking the invariant after every
+/// step. Restarts from `initial` on quiescence and every
+/// `restart_every` steps so counterexample traces stay shrinkable.
+pub fn random_walk<M: Machine>(
+    machine: &M,
+    seed: u64,
+    steps: usize,
+    restart_every: usize,
+) -> Result<WalkStats, Violation<M>> {
+    let restart_every = restart_every.max(1);
+    let mut rng = Rng::new(seed);
+    let mut state = machine.initial();
+    if let Err(message) = machine.invariant(&state) {
+        return Err(Violation { message, trace: Vec::new(), state });
+    }
+    let mut trace: Vec<M::Event> = Vec::new();
+    let mut resets = 0usize;
+
+    for _ in 0..steps {
+        let enabled = machine.events(&state);
+        if enabled.is_empty() || trace.len() >= restart_every {
+            state = machine.initial();
+            trace.clear();
+            resets += 1;
+            continue;
+        }
+        let event = enabled[rng.index(enabled.len())].clone();
+        state = machine.step(&state, &event);
+        trace.push(event);
+        if let Err(message) = machine.invariant(&state) {
+            let trace = shrink(machine, &trace);
+            let (state, message) = replay_violation(machine, &trace, message);
+            return Err(Violation { message, trace, state });
+        }
+    }
+    Ok(WalkStats { steps, resets })
+}
+
+/// Replay a trace with skip-disabled semantics: events that are not
+/// enabled in the current state are skipped (shrinking removes their
+/// enablers). Returns the first violation hit, or the final state.
+pub fn replay<M: Machine>(
+    machine: &M,
+    trace: &[M::Event],
+) -> Result<M::State, (usize, String, M::State)>
+where
+    M::Event: PartialEq,
+{
+    let mut state = machine.initial();
+    if let Err(msg) = machine.invariant(&state) {
+        return Err((0, msg, state));
+    }
+    for (i, event) in trace.iter().enumerate() {
+        if !machine.events(&state).iter().any(|e| e == event) {
+            continue;
+        }
+        state = machine.step(&state, event);
+        if let Err(msg) = machine.invariant(&state) {
+            return Err((i, msg, state));
+        }
+    }
+    Ok(state)
+}
+
+/// Does replaying `trace` (skip-disabled) hit any invariant violation?
+fn violates<M: Machine>(machine: &M, trace: &[M::Event]) -> bool {
+    let mut state = machine.initial();
+    if machine.invariant(&state).is_err() {
+        return true;
+    }
+    for event in trace {
+        // membership by debug render: Event only requires Clone + Debug
+        let enabled = machine.events(&state);
+        let key = format!("{event:?}");
+        if !enabled.iter().any(|e| format!("{e:?}") == key) {
+            continue;
+        }
+        state = machine.step(&state, event);
+        if machine.invariant(&state).is_err() {
+            return true;
+        }
+    }
+    false
+}
+
+/// Final state and violation message after a skip-disabled replay of a
+/// shrunk trace. The message is recomputed from the *shrunk* replay —
+/// shrinking can land on the same invariant with different fresh ids
+/// (ticket numbers, request ids) than the original discovery, and a
+/// [`Violation`] must be self-consistent: its message, trace and state
+/// all describe one replay. `fallback` covers the (shrinker-guaranteed
+/// unreachable) case of a clean replay.
+fn replay_violation<M: Machine>(
+    machine: &M,
+    trace: &[M::Event],
+    fallback: String,
+) -> (M::State, String) {
+    let mut state = machine.initial();
+    for event in trace {
+        let enabled = machine.events(&state);
+        let key = format!("{event:?}");
+        if !enabled.iter().any(|e| format!("{e:?}") == key) {
+            continue;
+        }
+        state = machine.step(&state, event);
+        if let Err(msg) = machine.invariant(&state) {
+            return (state, msg);
+        }
+    }
+    (state, fallback)
+}
+
+/// Delta-debugging (ddmin-style) shrink of a violating trace: try
+/// removing progressively smaller chunks, keeping any removal after
+/// which the replay still violates some invariant; iterate to a local
+/// minimum where no single-event removal preserves the failure.
+pub fn shrink<M: Machine>(machine: &M, trace: &[M::Event]) -> Vec<M::Event> {
+    let mut current: Vec<M::Event> = trace.to_vec();
+    debug_assert!(violates(machine, &current), "shrink() requires a violating trace");
+
+    let mut chunk = (current.len() / 2).max(1);
+    loop {
+        let mut progressed = false;
+        let mut start = 0;
+        while start < current.len() {
+            let end = (start + chunk).min(current.len());
+            let mut candidate = Vec::with_capacity(current.len() - (end - start));
+            candidate.extend_from_slice(&current[..start]);
+            candidate.extend_from_slice(&current[end..]);
+            if !candidate.is_empty() && violates(machine, &candidate) {
+                current = candidate;
+                progressed = true;
+                // stay at the same start: the next chunk slid into place
+            } else {
+                start = end;
+            }
+        }
+        if !progressed {
+            if chunk == 1 {
+                break;
+            }
+            chunk = (chunk / 2).max(1);
+        }
+    }
+    current
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy counter machine: Inc/Dec/Noise events, invariant `n < bound`.
+    struct Counter {
+        bound: i32,
+    }
+
+    #[derive(Clone, Debug, PartialEq, Eq, Hash)]
+    enum Ev {
+        Inc,
+        Dec,
+        Noise,
+    }
+
+    impl Machine for Counter {
+        type State = i32;
+        type Event = Ev;
+
+        fn initial(&self) -> i32 {
+            0
+        }
+
+        fn events(&self, s: &i32) -> Vec<Ev> {
+            let mut evs = vec![Ev::Inc, Ev::Noise];
+            if *s > 0 {
+                evs.push(Ev::Dec);
+            }
+            evs
+        }
+
+        fn step(&self, s: &i32, e: &Ev) -> i32 {
+            match e {
+                Ev::Inc => s + 1,
+                Ev::Dec => s - 1,
+                Ev::Noise => *s,
+            }
+        }
+
+        fn invariant(&self, s: &i32) -> Result<(), String> {
+            if *s < self.bound {
+                Ok(())
+            } else {
+                Err(format!("counter reached bound: {s}"))
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_explores_safe_machine_exhaustively() {
+        let stats = bfs(&Counter { bound: 100 }, 6, 100_000).expect("no violation below bound");
+        // distinct states are just counter values 0..=6
+        assert_eq!(stats.states, 7);
+        assert!(!stats.truncated);
+        assert_eq!(stats.max_depth, 6);
+    }
+
+    #[test]
+    fn bfs_finds_and_shrinks_violation() {
+        let v = bfs(&Counter { bound: 3 }, 10, 100_000).expect_err("bound 3 reachable");
+        // the minimal trace is exactly three increments
+        assert_eq!(v.trace, vec![Ev::Inc, Ev::Inc, Ev::Inc], "{}", v.render());
+        assert_eq!(v.state, 3);
+        assert!(v.message.contains("bound"));
+    }
+
+    #[test]
+    fn walk_finds_and_shrinks_violation() {
+        let v = random_walk(&Counter { bound: 5 }, 42, 10_000, 256).expect_err("reachable");
+        assert_eq!(v.trace.len(), 5, "shrunk to 5 increments: {}", v.render());
+        assert!(v.trace.iter().all(|e| *e == Ev::Inc));
+    }
+
+    #[test]
+    fn walk_clean_on_safe_machine() {
+        let stats = random_walk(&Counter { bound: 1_000_000 }, 7, 5_000, 128).expect("safe");
+        assert_eq!(stats.steps, 5_000);
+    }
+
+    #[test]
+    fn replay_reproduces_shrunk_trace() {
+        let v = bfs(&Counter { bound: 3 }, 10, 100_000).unwrap_err();
+        let err = replay(&Counter { bound: 3 }, &v.trace).expect_err("trace must reproduce");
+        assert!(err.1.contains("bound"));
+        assert_eq!(err.2, 3);
+    }
+}

@@ -1,0 +1,400 @@
+//! Seeded property-test toolkit: strategies, shrinking, and a runner.
+//!
+//! The offline image has no crates.io access, so this is a small
+//! in-crate stand-in for the proptest strategy/value-tree split (the
+//! `Generator` shim in SNIPPETS.md Snippet 3 is the stylistic model):
+//! a [`Strategy`] knows how to *generate* a value from the
+//! deterministic [`Rng`](crate::scene::rng::Rng) and how to *shrink* a
+//! failing value toward a simpler one, and [`Checker`] drives the
+//! generate → falsify → shrink loop.
+//!
+//! Shrinking is greedy: each round asks the strategy for candidate
+//! simplifications of the current failing value and moves to the first
+//! candidate that still fails, stopping at a local minimum. That is
+//! exactly the proptest `simplify()` walk without the `complicate()`
+//! backtracking — cruder, but dependency-free and deterministic.
+//!
+//! Both the property tests in `tests/properties.rs` and the model
+//! checker ([`super::explore`]) build on this module; the checker adds
+//! its own trace-specific delta-debugging shrinker on top.
+
+use crate::scene::rng::Rng;
+use std::fmt::Debug;
+
+/// A generator of values of one type, with an optional shrinker.
+///
+/// Implementations must be deterministic functions of the `Rng` stream:
+/// the same seed must reproduce the same value, or the seed printed in
+/// a failure report is useless.
+pub trait Strategy {
+    /// The generated value type.
+    type Value: Clone + Debug;
+
+    /// Draw one value from the generator.
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+
+    /// Candidate simplifications of a failing value, most aggressive
+    /// first. The default is no shrinking. Candidates need not fail —
+    /// the checker re-runs the property on each and keeps the first
+    /// that does.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Uniform `f32` in `[lo, hi)`, shrinking toward the interval midpoint
+/// and toward zero when zero is inside the interval.
+#[derive(Debug, Clone, Copy)]
+pub struct RangedF32 {
+    lo: f32,
+    hi: f32,
+}
+
+impl RangedF32 {
+    /// Strategy over `[lo, hi)`.
+    pub fn new(lo: f32, hi: f32) -> RangedF32 {
+        assert!(lo < hi, "empty range [{lo}, {hi})");
+        RangedF32 { lo, hi }
+    }
+}
+
+impl Strategy for RangedF32 {
+    type Value = f32;
+
+    fn generate(&self, rng: &mut Rng) -> f32 {
+        rng.range(self.lo, self.hi)
+    }
+
+    fn shrink(&self, value: &f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        if self.lo <= 0.0 && 0.0 < self.hi && *value != 0.0 {
+            out.push(0.0);
+        }
+        let mid = 0.5 * (self.lo + self.hi);
+        let toward = 0.5 * (*value + mid);
+        if toward != *value {
+            out.push(toward);
+        }
+        out
+    }
+}
+
+/// Uniform `u64` in `[lo, hi]`, shrinking by halving the distance to
+/// `lo` (the classic integer bisection ladder).
+#[derive(Debug, Clone, Copy)]
+pub struct RangedU64 {
+    lo: u64,
+    hi: u64,
+}
+
+impl RangedU64 {
+    /// Strategy over the inclusive range `[lo, hi]`.
+    pub fn new(lo: u64, hi: u64) -> RangedU64 {
+        assert!(lo <= hi, "empty range [{lo}, {hi}]");
+        RangedU64 { lo, hi }
+    }
+}
+
+impl Strategy for RangedU64 {
+    type Value = u64;
+
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        self.lo + rng.next_u64() % (self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, value: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut v = *value;
+        while v > self.lo {
+            v = self.lo + (v - self.lo) / 2;
+            out.push(v);
+            if out.len() >= 8 {
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// `u64` drawn log-uniformly over `[lo, hi]`: a uniformly random bit
+/// width first, then uniform within it. Exercises every octave of a
+/// log-scaled domain (latency buckets) equally instead of spending
+/// almost all samples in the top octave.
+#[derive(Debug, Clone, Copy)]
+pub struct LogU64 {
+    lo: u64,
+    hi: u64,
+}
+
+impl LogU64 {
+    /// Strategy over the inclusive range `[lo, hi]`, `lo ≥ 1`.
+    pub fn new(lo: u64, hi: u64) -> LogU64 {
+        assert!(1 <= lo && lo <= hi, "bad log range [{lo}, {hi}]");
+        LogU64 { lo, hi }
+    }
+}
+
+impl Strategy for LogU64 {
+    type Value = u64;
+
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        let lo_bits = 64 - self.lo.leading_zeros();
+        let hi_bits = 64 - self.hi.leading_zeros();
+        let bits = lo_bits + (rng.next_u64() % (hi_bits - lo_bits + 1) as u64) as u32;
+        let base = 1u64 << (bits - 1);
+        let span = base; // [base, 2*base)
+        (base + rng.next_u64() % span).clamp(self.lo, self.hi)
+    }
+
+    fn shrink(&self, value: &u64) -> Vec<u64> {
+        RangedU64::new(self.lo, self.hi).shrink(value)
+    }
+}
+
+/// A vector of values from an element strategy, with a length drawn
+/// from `[min_len, max_len]`. Shrinks by dropping elements (halves,
+/// then singletons) and by shrinking individual elements in place.
+#[derive(Debug, Clone)]
+pub struct VecOf<S> {
+    elem: S,
+    min_len: usize,
+    max_len: usize,
+}
+
+impl<S> VecOf<S> {
+    /// Vector strategy with the given element strategy and length range.
+    pub fn new(elem: S, min_len: usize, max_len: usize) -> VecOf<S> {
+        assert!(min_len <= max_len, "empty length range");
+        VecOf { elem, min_len, max_len }
+    }
+}
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Value = Vec<S::Value>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<S::Value> {
+        let n = self.min_len + rng.index(self.max_len - self.min_len + 1);
+        (0..n).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, value: &Vec<S::Value>) -> Vec<Vec<S::Value>> {
+        let mut out = Vec::new();
+        // drop the front or back half, then single elements
+        if value.len() > self.min_len {
+            let half = value.len() / 2;
+            if value.len() - half >= self.min_len && half > 0 {
+                out.push(value[half..].to_vec());
+                out.push(value[..value.len() - half].to_vec());
+            }
+            for i in 0..value.len().min(8) {
+                let mut v = value.clone();
+                v.remove(i);
+                if v.len() >= self.min_len {
+                    out.push(v);
+                }
+            }
+        }
+        // shrink individual elements (bounded fan-out)
+        for i in 0..value.len().min(4) {
+            for cand in self.elem.shrink(&value[i]).into_iter().take(2) {
+                let mut v = value.clone();
+                v[i] = cand;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// A strategy from a plain closure, with no shrinking. The porting
+/// path for ad-hoc generators: wrap first, add a shrinker when the
+/// domain has a meaningful "simpler".
+pub struct FromFn<T, F: Fn(&mut Rng) -> T> {
+    f: F,
+    _value: std::marker::PhantomData<fn() -> T>,
+}
+
+impl<T, F: Fn(&mut Rng) -> T> FromFn<T, F> {
+    /// Wrap `f` as a [`Strategy`].
+    pub fn new(f: F) -> FromFn<T, F> {
+        FromFn { f, _value: std::marker::PhantomData }
+    }
+}
+
+impl<T: Clone + Debug, F: Fn(&mut Rng) -> T> Strategy for FromFn<T, F> {
+    type Value = T;
+
+    fn generate(&self, rng: &mut Rng) -> T {
+        (self.f)(rng)
+    }
+}
+
+/// Outcome of a [`Checker`] run that found a counterexample.
+#[derive(Debug, Clone)]
+pub struct Falsified<T> {
+    /// Seed that reproduces the run.
+    pub seed: u64,
+    /// 0-based index of the failing case within the run.
+    pub case: usize,
+    /// The originally generated failing value.
+    pub original: T,
+    /// The locally-minimal failing value after greedy shrinking.
+    pub shrunk: T,
+    /// Number of successful shrink steps taken.
+    pub shrink_steps: usize,
+    /// The property's failure message for the shrunk value.
+    pub message: String,
+}
+
+/// Drives the generate → falsify → shrink loop for one strategy and
+/// one property.
+#[derive(Debug, Clone, Copy)]
+pub struct Checker {
+    seed: u64,
+    cases: usize,
+    max_shrink_rounds: usize,
+}
+
+impl Checker {
+    /// Checker with the given seed and a default of 256 cases.
+    pub fn new(seed: u64) -> Checker {
+        Checker { seed, cases: 256, max_shrink_rounds: 512 }
+    }
+
+    /// Override the number of generated cases.
+    pub fn cases(mut self, cases: usize) -> Checker {
+        self.cases = cases.max(1);
+        self
+    }
+
+    /// Run the property over generated values; return the shrunk
+    /// counterexample if any case fails.
+    pub fn run<S: Strategy>(
+        &self,
+        strategy: &S,
+        prop: impl Fn(&S::Value) -> Result<(), String>,
+    ) -> Result<(), Falsified<S::Value>> {
+        let mut rng = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let value = strategy.generate(&mut rng);
+            if let Err(first_msg) = prop(&value) {
+                let mut current = value.clone();
+                let mut message = first_msg;
+                let mut steps = 0;
+                'rounds: for _ in 0..self.max_shrink_rounds {
+                    for cand in strategy.shrink(&current) {
+                        if let Err(msg) = prop(&cand) {
+                            current = cand;
+                            message = msg;
+                            steps += 1;
+                            continue 'rounds;
+                        }
+                    }
+                    break; // local minimum: no candidate still fails
+                }
+                return Err(Falsified {
+                    seed: self.seed,
+                    case,
+                    original: value,
+                    shrunk: current,
+                    shrink_steps: steps,
+                    message,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Checker::run`], panicking with a reproducible report on
+    /// failure — the form the `#[test]` property suites use.
+    pub fn assert<S: Strategy>(&self, strategy: &S, prop: impl Fn(&S::Value) -> Result<(), String>) {
+        if let Err(f) = self.run(strategy, prop) {
+            panic!(
+                "property falsified (seed {:#x}, case {}): {}\n  \
+                 shrunk ({} steps): {:?}\n  original: {:?}",
+                f.seed, f.case, f.message, f.shrink_steps, f.shrunk, f.original
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_ok() {
+        Checker::new(1).cases(200).assert(&RangedU64::new(0, 100), |v| {
+            if *v <= 100 {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinks_integer_counterexample_to_boundary() {
+        let r = Checker::new(2)
+            .cases(500)
+            .run(&RangedU64::new(0, 1 << 20), |v| {
+                if *v < 1000 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            })
+            .unwrap_err();
+        // bisection lands within one halving of the true boundary
+        assert!(r.shrunk >= 1000 && r.shrunk < 2000, "shrunk to {}", r.shrunk);
+        assert!(r.shrink_steps > 0);
+    }
+
+    #[test]
+    fn shrinks_vec_by_dropping_elements() {
+        let s = VecOf::new(RangedU64::new(0, 9), 0, 64);
+        let r = Checker::new(3)
+            .cases(200)
+            .run(&s, |v| {
+                if v.contains(&7) {
+                    Err("contains a 7".into())
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap_err();
+        assert_eq!(r.shrunk, vec![7], "minimal failing vec is [7]: {:?}", r.shrunk);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let s = VecOf::new(RangedU64::new(0, 1 << 30), 1, 16);
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        for _ in 0..32 {
+            assert_eq!(s.generate(&mut a), s.generate(&mut b));
+        }
+    }
+
+    #[test]
+    fn log_u64_spans_octaves() {
+        let s = LogU64::new(1, 1 << 30);
+        let mut rng = Rng::new(5);
+        let mut low = 0;
+        let mut high = 0;
+        for _ in 0..2000 {
+            let v = s.generate(&mut rng);
+            assert!((1..=(1 << 30)).contains(&v));
+            if v < 1024 {
+                low += 1;
+            }
+            if v > 1 << 20 {
+                high += 1;
+            }
+        }
+        // a uniform draw would almost never land below 1024
+        assert!(low > 100, "log-uniform must visit low octaves: {low}");
+        assert!(high > 100, "and high ones: {high}");
+    }
+}

@@ -1,0 +1,652 @@
+//! The request lifecycle as an explicit state machine.
+//!
+//! Two layers share one transition table:
+//!
+//! * [`Stage`] / [`LifecycleCell`] — the per-request machine the
+//!   *production* coordinator drives. Every `Job` in
+//!   `coordinator::service` carries a cell; the batch scheduler's stage
+//!   observer and the centralized response methods advance it, and an
+//!   illegal transition panics at the exact line that performed it
+//!   instead of surfacing three subsystems later as a hung client.
+//! * [`RequestModel`] — a closed-world model of the whole coordinator
+//!   (N workers, a bounded admission queue, the EDF reorder buffer with
+//!   its starvation guard, deadline triage, shedding, and worker death)
+//!   for the exploration harness in [`super::explore`]. Its invariants
+//!   are the documented service guarantees: **exactly one response per
+//!   admitted request**, **no lost request**, and **the EDF reorder
+//!   bound** (a pending request is passed over at most
+//!   `starve_limit` times).
+//!
+//! The model's deliberate fault hooks ([`RequestFault`]) re-introduce
+//! historical bug classes so tests can demonstrate the checker catches
+//! them and shrinks the counterexample to a minimal trace.
+
+use super::explore::Machine;
+
+/// Terminal disposition of a request: exactly one of these is ever
+/// delivered per admitted request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Outcome {
+    /// A rendered frame.
+    Frame,
+    /// Load-shed (admission, deadline triage, or rung-fit).
+    Shed,
+    /// An error response (backend failure, worker death, scene failure).
+    Error,
+}
+
+/// The request lifecycle stages (DESIGN.md §12).
+///
+/// ```text
+/// Admitted ──► Pending ──► Coalesced ──► Executing ──► Responded{Frame|Error}
+///    │            │            │  ▲           │
+///    │            │            │  └── park/redeliver loops back to Pending
+///    └────────────┴────────────┴──► Responded{Shed|Error}
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Validated and accepted into the service (in a queue channel).
+    Admitted,
+    /// In the scheduler's hands: drained from the channel, possibly
+    /// held in the EDF reorder buffer awaiting a compatible batch.
+    Pending,
+    /// Selected into a coalesced batch, not yet executing (deadline
+    /// triage, rung fitting, and catalog acquire happen here).
+    Coalesced,
+    /// The batch is rendering.
+    Executing,
+    /// Exactly one response has been delivered.
+    Responded(Outcome),
+}
+
+impl Stage {
+    /// Is this a terminal stage?
+    pub fn terminal(&self) -> bool {
+        matches!(self, Stage::Responded(_))
+    }
+
+    /// The transition table — the single source of truth both the
+    /// production [`LifecycleCell`] and the model checker validate
+    /// against.
+    pub fn legal(from: Stage, to: Stage) -> bool {
+        use Stage::*;
+        match (from, to) {
+            // forward path
+            (Admitted, Pending) | (Pending, Coalesced) | (Coalesced, Executing) => true,
+            // park/redeliver: a coalesced request whose scene is still
+            // loading re-enters the queue
+            (Coalesced, Pending) => true,
+            // responses: frames only from Executing; sheds from any
+            // pre-execution stage; errors from anywhere non-terminal
+            (Executing, Responded(Outcome::Frame)) => true,
+            (Admitted | Pending | Coalesced, Responded(Outcome::Shed)) => true,
+            (Admitted | Pending | Coalesced | Executing, Responded(Outcome::Error)) => true,
+            // terminal stages are absorbing
+            _ => false,
+        }
+    }
+}
+
+/// The per-request lifecycle cell production code drives. Transitions
+/// are validated against [`Stage::legal`]; an illegal one panics — a
+/// lifecycle bug is a programming error, and the panic is contained by
+/// the worker's response backstop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LifecycleCell {
+    stage: Stage,
+}
+
+impl Default for LifecycleCell {
+    fn default() -> Self {
+        LifecycleCell::new()
+    }
+}
+
+impl LifecycleCell {
+    /// A freshly admitted request.
+    pub fn new() -> LifecycleCell {
+        LifecycleCell { stage: Stage::Admitted }
+    }
+
+    /// Current stage.
+    pub fn stage(&self) -> Stage {
+        self.stage
+    }
+
+    /// Has a response been delivered?
+    pub fn is_terminal(&self) -> bool {
+        self.stage.terminal()
+    }
+
+    /// Validated transition; panics on an illegal one.
+    pub fn advance(&mut self, to: Stage) {
+        assert!(
+            Stage::legal(self.stage, to),
+            "illegal request lifecycle transition {:?} -> {:?}",
+            self.stage,
+            to
+        );
+        self.stage = to;
+    }
+
+    /// Validated transition returning the error instead of panicking.
+    pub fn try_advance(&mut self, to: Stage) -> Result<(), String> {
+        if Stage::legal(self.stage, to) {
+            self.stage = to;
+            Ok(())
+        } else {
+            Err(format!("illegal request lifecycle transition {:?} -> {to:?}", self.stage))
+        }
+    }
+}
+
+/// Deliberate faults for checker demonstrations (test-only hooks —
+/// production never constructs these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestFault {
+    /// A dying worker discards its in-flight batch without responding —
+    /// the bug class the `Job` drop backstop exists to prevent.
+    DropResponsesOnWorkerDeath,
+    /// EDF seed selection ignores the starvation guard, so a request
+    /// with no deadline can be passed over forever under urgent load.
+    SkipStarvationGuard,
+}
+
+/// Closed-world model configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestModelCfg {
+    /// Worker count (≥ 1).
+    pub workers: usize,
+    /// Total requests the environment may submit.
+    pub requests: usize,
+    /// Admission queue capacity; submits beyond it are shed.
+    pub queue_cap: usize,
+    /// Maximum coalesced batch size.
+    pub max_batch: usize,
+    /// Starvation guard bound: a pending request is force-seeded after
+    /// being passed over this many times. Mirrors
+    /// `coordinator::batch::STARVE_LIMIT` (kept small here so BFS can
+    /// reach the bound within its depth budget).
+    pub starve_limit: u32,
+    /// Injected fault, if any.
+    pub fault: Option<RequestFault>,
+}
+
+impl Default for RequestModelCfg {
+    fn default() -> Self {
+        RequestModelCfg {
+            workers: 3,
+            requests: 4,
+            queue_cap: 2,
+            max_batch: 2,
+            starve_limit: 2,
+            fault: None,
+        }
+    }
+}
+
+/// One modeled request.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Req {
+    /// Lifecycle stage.
+    pub stage: Stage,
+    /// Deadline class: `true` = urgent (EDF-sorts ahead of everything
+    /// without a deadline).
+    pub urgent: bool,
+    /// Has the deadline lapsed (set by [`RequestEvent::Lapse`])?
+    pub expired: bool,
+    /// Responses delivered — the exactly-once invariant asserts ≤ 1
+    /// always and == 1 at terminal stages.
+    pub responses: u8,
+}
+
+/// One modeled worker.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Worker {
+    /// Alive until a [`RequestEvent::Die`].
+    pub alive: bool,
+    /// Request ids of the in-flight coalesced batch.
+    pub batch: Vec<u8>,
+}
+
+/// The model's world state.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct RequestState {
+    /// Per-request state, indexed by id (ids are submission order).
+    pub reqs: Vec<Req>,
+    /// The admission channel, FIFO.
+    pub queue: Vec<u8>,
+    /// The EDF reorder buffer: `(request id, times passed over)`.
+    pub pending: Vec<(u8, u32)>,
+    /// Per-worker state.
+    pub workers: Vec<Worker>,
+    /// How many requests have been submitted so far.
+    pub submitted: u8,
+    /// History flag for the EDF reorder bound: cleared the moment a
+    /// batch selection seeds a fresh request while some starved one
+    /// (passes ≥ `starve_limit`) sits in the buffer. With the guard in
+    /// place this is an inductive invariant; the
+    /// [`RequestFault::SkipStarvationGuard`] fault trips it.
+    pub guard_ok: bool,
+}
+
+/// Model events — each one an atomic step of the real coordinator.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum RequestEvent {
+    /// The environment submits the next request; `urgent` picks its
+    /// deadline class. Sheds at admission when the queue is full.
+    Submit {
+        /// Deadline class of the submitted request.
+        urgent: bool,
+    },
+    /// A deadline lapses before execution begins.
+    Lapse {
+        /// Request id whose deadline expires.
+        req: u8,
+    },
+    /// Worker `w` drains the queue into the reorder buffer and selects
+    /// a batch (EDF + starvation guard).
+    Pop {
+        /// Worker index.
+        w: u8,
+    },
+    /// Worker `w` starts executing its batch; expired requests are
+    /// triaged (shed) here.
+    Begin {
+        /// Worker index.
+        w: u8,
+    },
+    /// Worker `w` finishes its batch successfully.
+    Finish {
+        /// Worker index.
+        w: u8,
+    },
+    /// Worker `w`'s batch fails; every member gets an error response.
+    Fail {
+        /// Worker index.
+        w: u8,
+    },
+    /// Worker `w` dies. Its in-flight batch is error-responded by the
+    /// drop backstop (unless the drop-on-death fault is injected); if
+    /// it was the last worker, queued and pending requests are flushed
+    /// the same way.
+    Die {
+        /// Worker index.
+        w: u8,
+    },
+}
+
+/// The request-lifecycle world model. See module docs.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestModel {
+    /// Model configuration.
+    pub cfg: RequestModelCfg,
+}
+
+impl RequestModel {
+    /// Model over `cfg`.
+    pub fn new(cfg: RequestModelCfg) -> RequestModel {
+        assert!(cfg.workers >= 1 && cfg.requests >= 1 && cfg.max_batch >= 1);
+        RequestModel { cfg }
+    }
+
+    fn respond(req: &mut Req, outcome: Outcome) {
+        // the model mirrors production's validated transition
+        debug_assert!(
+            Stage::legal(req.stage, Stage::Responded(outcome)),
+            "model produced illegal transition {:?} -> Responded({outcome:?})",
+            req.stage
+        );
+        req.stage = Stage::Responded(outcome);
+        req.responses = req.responses.saturating_add(1);
+    }
+
+    /// EDF batch selection over the pending buffer: seed = starved
+    /// oldest if any (unless faulted), else most urgent; fill with
+    /// requests of the same deadline class up to `max_batch`; everyone
+    /// left behind accrues one pass-over.
+    fn select_batch(&self, state: &mut RequestState, w: usize) {
+        let mut pending = std::mem::take(&mut state.pending);
+        if pending.is_empty() {
+            return;
+        }
+        let skip_guard = self.cfg.fault == Some(RequestFault::SkipStarvationGuard);
+        let starved = pending.iter().position(|&(_, passes)| passes >= self.cfg.starve_limit);
+        let seed_pos = match starved {
+            Some(pos) if !skip_guard => pos,
+            _ => Self::most_urgent(&pending, &state.reqs),
+        };
+        if starved.is_some() && pending[seed_pos].1 < self.cfg.starve_limit {
+            // a starved request was passed over in favor of a fresh one
+            state.guard_ok = false;
+        }
+        let seed_urgent = state.reqs[pending[seed_pos].0 as usize].urgent;
+
+        // take the seed plus same-class requests, in urgency order —
+        // which within one deadline class is buffer (arrival) order
+        let mut batch: Vec<u8> = Vec::new();
+        let mut keep: Vec<(u8, u32)> = Vec::new();
+        let (seed_id, _) = pending.remove(seed_pos);
+        batch.push(seed_id);
+        for (id, passes) in pending {
+            if batch.len() < self.cfg.max_batch && state.reqs[id as usize].urgent == seed_urgent {
+                batch.push(id);
+            } else {
+                keep.push((id, passes + 1));
+            }
+        }
+        state.pending = keep;
+        for &id in &batch {
+            debug_assert!(Stage::legal(state.reqs[id as usize].stage, Stage::Coalesced));
+            state.reqs[id as usize].stage = Stage::Coalesced;
+        }
+        state.workers[w].batch = batch;
+    }
+
+    /// Position of the most urgent pending request: urgent class first,
+    /// then buffer (arrival) order.
+    fn most_urgent(pending: &[(u8, u32)], reqs: &[Req]) -> usize {
+        pending
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, &(id, _))| (!reqs[id as usize].urgent, *i))
+            .map(|(i, _)| i)
+            .expect("pending non-empty")
+    }
+
+    fn flush_unserved(state: &mut RequestState) {
+        // last worker gone: channel receivers drop, and every queued or
+        // pending job's drop backstop delivers an error response
+        for &id in state.queue.iter() {
+            Self::respond(&mut state.reqs[id as usize], Outcome::Error);
+        }
+        state.queue.clear();
+        let pending: Vec<u8> = state.pending.iter().map(|&(id, _)| id).collect();
+        for id in pending {
+            Self::respond(&mut state.reqs[id as usize], Outcome::Error);
+        }
+        state.pending.clear();
+    }
+}
+
+impl Machine for RequestModel {
+    type State = RequestState;
+    type Event = RequestEvent;
+
+    fn initial(&self) -> RequestState {
+        RequestState {
+            reqs: Vec::new(),
+            queue: Vec::new(),
+            pending: Vec::new(),
+            workers: (0..self.cfg.workers)
+                .map(|_| Worker { alive: true, batch: Vec::new() })
+                .collect(),
+            submitted: 0,
+            guard_ok: true,
+        }
+    }
+
+    fn events(&self, s: &RequestState) -> Vec<RequestEvent> {
+        let mut evs = Vec::new();
+        if (s.submitted as usize) < self.cfg.requests {
+            evs.push(RequestEvent::Submit { urgent: false });
+            evs.push(RequestEvent::Submit { urgent: true });
+        }
+        for (id, req) in s.reqs.iter().enumerate() {
+            if req.urgent && !req.expired && !req.stage.terminal() {
+                evs.push(RequestEvent::Lapse { req: id as u8 });
+            }
+        }
+        for (w, worker) in s.workers.iter().enumerate() {
+            let w8 = w as u8;
+            if !worker.alive {
+                continue;
+            }
+            evs.push(RequestEvent::Die { w: w8 });
+            if worker.batch.is_empty() {
+                if !s.queue.is_empty() || !s.pending.is_empty() {
+                    evs.push(RequestEvent::Pop { w: w8 });
+                }
+            } else {
+                let executing = s.reqs[worker.batch[0] as usize].stage == Stage::Executing;
+                if executing {
+                    evs.push(RequestEvent::Finish { w: w8 });
+                    evs.push(RequestEvent::Fail { w: w8 });
+                } else {
+                    evs.push(RequestEvent::Begin { w: w8 });
+                }
+            }
+        }
+        evs
+    }
+
+    fn step(&self, s: &RequestState, e: &RequestEvent) -> RequestState {
+        let mut s = s.clone();
+        match *e {
+            RequestEvent::Submit { urgent } => {
+                let id = s.submitted;
+                s.submitted += 1;
+                let mut req =
+                    Req { stage: Stage::Admitted, urgent, expired: false, responses: 0 };
+                if s.queue.len() >= self.cfg.queue_cap {
+                    Self::respond(&mut req, Outcome::Shed);
+                } else {
+                    s.queue.push(id);
+                }
+                s.reqs.push(req);
+            }
+            RequestEvent::Lapse { req } => {
+                s.reqs[req as usize].expired = true;
+            }
+            RequestEvent::Pop { w } => {
+                // drain the channel into the reorder buffer…
+                for id in std::mem::take(&mut s.queue) {
+                    s.reqs[id as usize].stage = Stage::Pending;
+                    s.pending.push((id, 0));
+                }
+                // …then select a batch EDF-first with the starvation guard
+                self.select_batch(&mut s, w as usize);
+            }
+            RequestEvent::Begin { w } => {
+                let batch = std::mem::take(&mut s.workers[w as usize].batch);
+                let mut kept = Vec::new();
+                for id in batch {
+                    let req = &mut s.reqs[id as usize];
+                    if req.expired {
+                        Self::respond(req, Outcome::Shed); // deadline triage
+                    } else {
+                        req.stage = Stage::Executing;
+                        kept.push(id);
+                    }
+                }
+                s.workers[w as usize].batch = kept;
+            }
+            RequestEvent::Finish { w } => {
+                for id in std::mem::take(&mut s.workers[w as usize].batch) {
+                    Self::respond(&mut s.reqs[id as usize], Outcome::Frame);
+                }
+            }
+            RequestEvent::Fail { w } => {
+                for id in std::mem::take(&mut s.workers[w as usize].batch) {
+                    Self::respond(&mut s.reqs[id as usize], Outcome::Error);
+                }
+            }
+            RequestEvent::Die { w } => {
+                let batch = std::mem::take(&mut s.workers[w as usize].batch);
+                s.workers[w as usize].alive = false;
+                if self.cfg.fault == Some(RequestFault::DropResponsesOnWorkerDeath) {
+                    // the injected bug: the dying worker leaks its batch
+                    s.workers[w as usize].batch = batch;
+                } else {
+                    for id in batch {
+                        Self::respond(&mut s.reqs[id as usize], Outcome::Error);
+                    }
+                }
+                if s.workers.iter().all(|wk| !wk.alive) {
+                    Self::flush_unserved(&mut s);
+                }
+            }
+        }
+        s
+    }
+
+    fn invariant(&self, s: &RequestState) -> Result<(), String> {
+        // (1) exactly-once: never more than one response; terminal iff
+        // exactly one
+        for (id, req) in s.reqs.iter().enumerate() {
+            if req.responses > 1 {
+                return Err(format!("request {id} received {} responses", req.responses));
+            }
+            if req.stage.terminal() != (req.responses == 1) {
+                return Err(format!(
+                    "request {id} stage {:?} disagrees with response count {}",
+                    req.stage, req.responses
+                ));
+            }
+        }
+        // (2) no lost request: every non-terminal request sits in
+        // exactly one live container
+        for (id, req) in s.reqs.iter().enumerate() {
+            if req.stage.terminal() {
+                continue;
+            }
+            let id8 = id as u8;
+            let in_queue = s.queue.iter().filter(|&&q| q == id8).count();
+            let in_pending = s.pending.iter().filter(|&&(p, _)| p == id8).count();
+            let in_batches = s
+                .workers
+                .iter()
+                .filter(|wk| wk.alive)
+                .map(|wk| wk.batch.iter().filter(|&&b| b == id8).count())
+                .sum::<usize>();
+            if in_queue + in_pending + in_batches != 1 {
+                return Err(format!(
+                    "request {id} ({:?}) held by {} live containers (exactly-once violated)",
+                    req.stage,
+                    in_queue + in_pending + in_batches
+                ));
+            }
+        }
+        // (3) EDF reorder bound. The guard's contract: once a request
+        // has been passed over `starve_limit` times, no later selection
+        // may seed a fresh request ahead of it — which inductively
+        // bounds pass-overs by starve_limit + the starved backlog.
+        if !s.guard_ok {
+            return Err(format!(
+                "EDF starvation guard violated: a request passed over ≥ {} times \
+                 was skipped for a fresher one",
+                self.cfg.starve_limit
+            ));
+        }
+        for &(id, passes) in &s.pending {
+            let bound = self.cfg.starve_limit + self.cfg.requests as u32;
+            if passes > bound {
+                return Err(format!(
+                    "request {id} passed over {passes} times (bound {bound})"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::explore::{bfs, random_walk};
+
+    #[test]
+    fn transition_table_shape() {
+        use Outcome::*;
+        use Stage::*;
+        assert!(Stage::legal(Admitted, Pending));
+        assert!(Stage::legal(Pending, Coalesced));
+        assert!(Stage::legal(Coalesced, Executing));
+        assert!(Stage::legal(Coalesced, Pending)); // park/redeliver
+        assert!(Stage::legal(Executing, Responded(Frame)));
+        assert!(Stage::legal(Admitted, Responded(Shed)));
+        assert!(Stage::legal(Executing, Responded(Error)));
+        // no skipping, no resurrection, no frames without execution
+        assert!(!Stage::legal(Admitted, Coalesced));
+        assert!(!Stage::legal(Admitted, Executing));
+        assert!(!Stage::legal(Pending, Responded(Frame)));
+        assert!(!Stage::legal(Responded(Frame), Pending));
+        assert!(!Stage::legal(Responded(Frame), Responded(Error)));
+        assert!(!Stage::legal(Executing, Responded(Shed)));
+    }
+
+    #[test]
+    fn lifecycle_cell_enforces_table() {
+        let mut cell = LifecycleCell::new();
+        cell.advance(Stage::Pending);
+        cell.advance(Stage::Coalesced);
+        cell.advance(Stage::Pending); // parked and redelivered
+        cell.advance(Stage::Coalesced);
+        cell.advance(Stage::Executing);
+        cell.advance(Stage::Responded(Outcome::Frame));
+        assert!(cell.is_terminal());
+        assert!(cell.try_advance(Stage::Responded(Outcome::Error)).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal request lifecycle transition")]
+    fn lifecycle_cell_panics_on_double_response() {
+        let mut cell = LifecycleCell::new();
+        cell.advance(Stage::Responded(Outcome::Shed));
+        cell.advance(Stage::Responded(Outcome::Shed));
+    }
+
+    #[test]
+    fn small_world_is_clean() {
+        let m = RequestModel::new(RequestModelCfg {
+            workers: 2,
+            requests: 2,
+            ..RequestModelCfg::default()
+        });
+        let stats = bfs(&m, 9, 400_000).expect("no violation in the faithful model");
+        assert!(stats.states > 100, "explored {} states", stats.states);
+        assert!(!stats.truncated);
+    }
+
+    #[test]
+    fn drop_on_death_fault_is_caught_and_shrinks_small() {
+        let m = RequestModel::new(RequestModelCfg {
+            workers: 1,
+            requests: 1,
+            fault: Some(RequestFault::DropResponsesOnWorkerDeath),
+            ..RequestModelCfg::default()
+        });
+        let v = bfs(&m, 6, 100_000).expect_err("fault must be caught");
+        // minimal trace: Submit, Pop, Die
+        assert_eq!(v.trace.len(), 3, "{}", v.render());
+    }
+
+    #[test]
+    fn stochastic_walk_is_clean() {
+        let m = RequestModel::new(RequestModelCfg::default());
+        let stats = random_walk(&m, 0xE0F, 20_000, 64).expect("faithful model walks clean");
+        assert_eq!(stats.steps, 20_000);
+    }
+
+    #[test]
+    fn starvation_guard_fault_is_caught() {
+        let m = RequestModel::new(RequestModelCfg {
+            workers: 1,
+            requests: 3,
+            queue_cap: 4,
+            max_batch: 1,
+            starve_limit: 1,
+            fault: Some(RequestFault::SkipStarvationGuard),
+        });
+        // minimal scenario: a no-deadline request starves behind one
+        // urgent request, then a fresh urgent one is seeded over it —
+        // Submit(f), Submit(t), Pop, Begin, Finish, Submit(t), Pop
+        let v = bfs(&m, 7, 400_000).expect_err("starvation must be caught");
+        assert!(v.message.contains("starvation guard"), "{}", v.render());
+        assert!(v.trace.len() <= 7, "{}", v.render());
+
+        // the same fault also falls to the stochastic walker
+        let v = random_walk(&m, 0xBEEF, 50_000, 128).expect_err("walker must catch it too");
+        assert!(v.message.contains("starvation guard"), "{}", v.render());
+    }
+}

@@ -38,6 +38,29 @@ impl Default for ControllerConfig {
     }
 }
 
+/// The pure degrade/recover decision (DESIGN.md §12): given a windowed
+/// p95 and the controller's position, where would it move? Side-effect
+/// free and total — [`RungController::observe`] drives production
+/// through this single definition, and the property tests drive it
+/// directly with generated inputs (bounded: the result is always a
+/// valid rung one step away, degrade only above the high water, recover
+/// only below the low water).
+pub fn plan_move(
+    cfg: &ControllerConfig,
+    slo: Duration,
+    rung: usize,
+    n_rungs: usize,
+    p95: Duration,
+) -> Option<usize> {
+    if p95 > slo.mul_f64(cfg.high_ratio) && rung + 1 < n_rungs {
+        Some(rung + 1)
+    } else if p95 < slo.mul_f64(cfg.low_ratio) && rung > 0 {
+        Some(rung - 1)
+    } else {
+        None
+    }
+}
+
 /// Per-worker closed-loop controller over one [`super::QualityLadder`].
 #[derive(Debug)]
 pub struct RungController {
@@ -88,12 +111,9 @@ impl RungController {
             return None;
         }
         let p95 = self.window_p95();
-        if p95 > self.slo.mul_f64(self.cfg.high_ratio) && self.rung + 1 < self.n_rungs {
-            self.move_to(self.rung + 1)
-        } else if p95 < self.slo.mul_f64(self.cfg.low_ratio) && self.rung > 0 {
-            self.move_to(self.rung - 1)
-        } else {
-            None
+        match plan_move(&self.cfg, self.slo, self.rung, self.n_rungs, p95) {
+            Some(rung) => self.move_to(rung),
+            None => None,
         }
     }
 
@@ -188,6 +208,44 @@ mod tests {
         }
         // the window fills after 2 frames but the cooldown gates the move
         assert!(observed_before_first_move >= 8);
+    }
+
+    #[test]
+    fn plan_move_is_bounded_and_directional() {
+        // property-style over the seeded toolkit: whatever the inputs,
+        // the planned move is one step, in range, and on the right side
+        // of the hysteresis band
+        use crate::model::gen::{Checker, FromFn};
+        let cfg = ControllerConfig::default();
+        let slo = Duration::from_millis(10);
+        let strat = FromFn::new(|rng: &mut crate::scene::rng::Rng| {
+            let n_rungs = 1 + rng.index(6);
+            let rung = rng.index(n_rungs);
+            let p95_us = rng.range(0.0, 30_000.0) as u64;
+            (rung, n_rungs, p95_us)
+        });
+        Checker::new(0x51ab_c0de).cases(512).assert(&strat, |&(rung, n_rungs, p95_us)| {
+            let p95 = Duration::from_micros(p95_us);
+            match plan_move(&cfg, slo, rung, n_rungs, p95) {
+                None => Ok(()),
+                Some(to) if to >= n_rungs => Err(format!("moved out of range: {to}")),
+                Some(to) if to == rung + 1 => {
+                    if p95 > slo.mul_f64(cfg.high_ratio) {
+                        Ok(())
+                    } else {
+                        Err(format!("degraded below the high water at {p95:?}"))
+                    }
+                }
+                Some(to) if rung > 0 && to == rung - 1 => {
+                    if p95 < slo.mul_f64(cfg.low_ratio) {
+                        Ok(())
+                    } else {
+                        Err(format!("recovered above the low water at {p95:?}"))
+                    }
+                }
+                Some(to) => Err(format!("jumped more than one step: {rung} -> {to}")),
+            }
+        });
     }
 
     #[test]

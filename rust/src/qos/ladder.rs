@@ -105,6 +105,17 @@ pub struct QualityLadder {
     effective: Vec<Vec<usize>>,
 }
 
+/// Index of the first rung whose modelled cost breaks the
+/// strictly-cheaper ordering (`costs[i] >= costs[i - 1]`), or `None`
+/// when the column strictly decreases. Pure and total — the
+/// constructor's validation and the model checker's ladder invariant
+/// (DESIGN.md §12, invariant 6) share this single definition, so the
+/// property "a deeper rung is never costlier" cannot drift between the
+/// code that enforces it and the tests that explore it.
+pub fn first_cost_inversion(costs: &[f64]) -> Option<usize> {
+    costs.windows(2).position(|w| w[1] >= w[0]).map(|i| i + 1)
+}
+
 /// Index of `kind` in [`AccelKind::all`] (the cost-matrix row order).
 fn kind_index(kind: AccelKind) -> usize {
     AccelKind::all()
@@ -146,17 +157,14 @@ impl QualityLadder {
             .map(|kind| rungs.iter().map(|r| rung_model_cost(r, *kind)).collect())
             .collect();
         let vanilla = &costs[kind_index(AccelKind::Vanilla)];
-        for (i, w) in vanilla.windows(2).enumerate() {
-            if w[1] >= w[0] {
-                return Err(format!(
-                    "rung {} (modelled {:.3} ms) is not strictly cheaper than rung {} \
-                     ({:.3} ms): every rung must cost less than the one above it",
-                    i + 1,
-                    w[1] * 1e3,
-                    i,
-                    w[0] * 1e3
-                ));
-            }
+        if let Some(i) = first_cost_inversion(vanilla) {
+            return Err(format!(
+                "rung {i} (modelled {:.3} ms) is not strictly cheaper than rung {} \
+                 ({:.3} ms): every rung must cost less than the one above it",
+                vanilla[i] * 1e3,
+                i - 1,
+                vanilla[i - 1] * 1e3
+            ));
         }
         let effective: Vec<Vec<usize>> = costs
             .iter()

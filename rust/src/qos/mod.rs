@@ -27,8 +27,8 @@ pub mod controller;
 pub mod ladder;
 pub mod soak;
 
-pub use controller::{ControllerConfig, RungController};
-pub use ladder::{QualityLadder, QualityRung};
+pub use controller::{plan_move, ControllerConfig, RungController};
+pub use ladder::{first_cost_inversion, QualityLadder, QualityRung};
 pub use soak::{poisson_schedule, run_soak, run_soak_with, SoakConfig, SoakReport};
 
 use std::time::Duration;

@@ -17,6 +17,7 @@ fn no_args_prints_usage_and_exits_zero() {
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("subcommands:"), "usage missing: {stdout}");
     assert!(stdout.contains("bench-soak"), "usage must list bench-soak: {stdout}");
+    assert!(stdout.contains("check-model"), "usage must list check-model: {stdout}");
 }
 
 #[test]
@@ -107,6 +108,45 @@ fn bad_memory_budget_exits_two() {
         .expect("spawn");
     assert_eq!(out.status.code(), Some(2), "malformed --memory-budget must exit 2");
     assert!(String::from_utf8_lossy(&out.stderr).contains("--memory-budget"));
+}
+
+#[test]
+fn check_model_clean_exits_zero() {
+    // shallow depth/steps keep this a smoke test; the full-budget run
+    // lives in tests/model_check.rs and the CI check-model job
+    let out = gemm_gs()
+        .args(["check-model", "--seed", "7", "--depth", "5", "--steps", "3000"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "check-model must exit 0 when clean: {:?}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("request model: BFS clean"), "{stdout}");
+    assert!(stdout.contains("catalog model: walk clean"), "{stdout}");
+    assert!(stdout.contains("all invariants hold"), "{stdout}");
+}
+
+#[test]
+fn check_model_injected_fault_exits_one_with_shrunk_trace() {
+    let out = gemm_gs()
+        .args(["check-model", "--fault", "drop-on-death", "--depth", "5", "--steps", "2000"])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(1), "an invariant violation must exit 1");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("invariant violated"), "{stderr}");
+    // the drop-on-death counterexample shrinks to Submit → Pop → Die
+    assert!(stderr.contains("counterexample (3 events)"), "trace not shrunk: {stderr}");
+    assert!(stderr.contains("Die"), "{stderr}");
+}
+
+#[test]
+fn check_model_bad_fault_exits_two() {
+    let out = gemm_gs()
+        .args(["check-model", "--fault", "gremlins"])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "unknown --fault must exit 2");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--fault"));
 }
 
 #[test]

@@ -1,0 +1,206 @@
+//! The model-check suite (DESIGN.md §12): the in-crate exploration
+//! harness driven over the coordinator's two lifecycle machines, at
+//! integration volume.
+//!
+//! Three kinds of test live here:
+//!
+//! * **clean exploration** — bounded exhaustive BFS over the request
+//!   world (3 workers × 4 requests, with admission shedding and
+//!   deadline lapses among the interleaved events) and a long seeded
+//!   stochastic walk of the catalog world, asserting every invariant
+//!   holds on every visited state;
+//! * **fault demonstrations** — each deliberately injected fault
+//!   (test-only hooks; production never constructs them) must be
+//!   *caught*, the counterexample must *shrink* to the known-minimal
+//!   trace, and the shrunk trace must *replay* to the same violation —
+//!   the full reproduce workflow DESIGN.md §12 documents;
+//! * **the ladder invariant** — "a deeper rung is never costlier"
+//!   checked through the same `first_cost_inversion` definition the
+//!   `QualityLadder` constructor enforces, over generated ladders.
+
+use gemm_gs::model::catalog::{CatalogFault, CatalogModel, CatalogModelCfg};
+use gemm_gs::model::explore::{bfs, random_walk, replay};
+use gemm_gs::model::gen::{Checker, FromFn};
+use gemm_gs::model::request::{RequestFault, RequestModel, RequestModelCfg};
+use gemm_gs::qos::{first_cost_inversion, QualityLadder, QualityRung};
+
+// ---------------------------------------------------------------- clean
+
+/// Exhaustive interleaving coverage of the faithful request world:
+/// 3 workers, 4 requests (so admission shedding at queue_cap 2 and
+/// urgent/lapse events are all reachable), every state checked against
+/// the exactly-once, no-lost-request, and EDF reorder-bound invariants.
+#[test]
+fn request_world_bfs_is_clean_at_three_workers_four_requests() {
+    let cfg = RequestModelCfg::default();
+    assert!(cfg.workers >= 3 && cfg.requests >= 4, "the world must be at least 3x4");
+    let m = RequestModel::new(cfg);
+    let stats = bfs(&m, 6, 400_000).unwrap_or_else(|v| panic!("{}", v.render()));
+    assert!(stats.states > 2_000, "explored only {} states", stats.states);
+    assert!(stats.max_depth >= 6, "never reached the depth bound");
+}
+
+/// The same world under a long seeded random walk — depth the BFS
+/// budget cannot reach (full drain/refill cycles, repeated deaths).
+#[test]
+fn request_world_long_walk_is_clean() {
+    let m = RequestModel::new(RequestModelCfg::default());
+    let stats =
+        random_walk(&m, 0x6E3A_11, 30_000, 64).unwrap_or_else(|v| panic!("{}", v.render()));
+    assert_eq!(stats.steps, 30_000);
+}
+
+/// The catalog residency world walked for well over 10^4 seeded steps:
+/// lazy loads, parked payloads, pins, eviction scans and failure
+/// latches interleaved, with the no-double-load, FIFO-redelivery,
+/// budget-convergence and latch invariants checked after every step.
+#[test]
+fn catalog_world_walks_ten_thousand_plus_steps_clean() {
+    let m = CatalogModel::new(CatalogModelCfg::default());
+    let stats =
+        random_walk(&m, 0xCA7A_41, 25_000, 128).unwrap_or_else(|v| panic!("{}", v.render()));
+    assert_eq!(stats.steps, 25_000);
+    assert!(stats.resets > 10, "the walk should cycle through many lifetimes");
+}
+
+// --------------------------------------------------- fault demonstrations
+
+/// Injected fault: a dying worker leaks its in-flight batch (the bug
+/// class the production `Job` drop backstop exists for). The checker
+/// must catch it, shrink the counterexample to the minimal
+/// Submit → Pop → Die trace, and the shrunk trace must replay to the
+/// same violation.
+#[test]
+fn drop_on_death_fault_caught_shrunk_and_replayable() {
+    let m = RequestModel::new(RequestModelCfg {
+        fault: Some(RequestFault::DropResponsesOnWorkerDeath),
+        ..RequestModelCfg::default()
+    });
+    let v = bfs(&m, 6, 400_000).expect_err("the injected fault must be caught");
+    assert_eq!(v.trace.len(), 3, "not minimal:\n{}", v.render());
+    assert!(v.message.contains("live containers"), "{}", v.render());
+
+    // the printed trace is the reproduce artifact: replaying it must
+    // hit the same invariant
+    let (_, msg, _) = replay(&m, &v.trace).expect_err("shrunk trace must reproduce");
+    assert_eq!(msg, v.message);
+}
+
+/// Injected fault: EDF seed selection ignores the starvation guard, so
+/// a no-deadline request starves behind a stream of urgent ones. Caught
+/// by BFS within the documented depth bound, and the trace replays.
+#[test]
+fn starvation_guard_fault_caught_and_replayable() {
+    let m = RequestModel::new(RequestModelCfg {
+        workers: 1,
+        requests: 3,
+        queue_cap: 4,
+        max_batch: 1,
+        starve_limit: 1,
+        fault: Some(RequestFault::SkipStarvationGuard),
+    });
+    let v = bfs(&m, 7, 400_000).expect_err("starvation must be caught");
+    assert!(v.message.contains("starvation guard"), "{}", v.render());
+    assert!(v.trace.len() <= 7, "not shrunk:\n{}", v.render());
+    let (_, msg, _) = replay(&m, &v.trace).expect_err("shrunk trace must reproduce");
+    assert_eq!(msg, v.message);
+}
+
+/// Injected fault: parked payloads redeliver LIFO. Minimal
+/// counterexample: two parking acquires and the load completion.
+#[test]
+fn lifo_redelivery_fault_caught_shrunk_and_replayable() {
+    let m = CatalogModel::new(CatalogModelCfg {
+        fault: Some(CatalogFault::RedeliverLifo),
+        ..CatalogModelCfg::default()
+    });
+    let v = random_walk(&m, 0xF1F0_2, 50_000, 128).expect_err("LIFO fault must be caught");
+    assert!(v.message.contains("FIFO"), "{}", v.render());
+    assert_eq!(v.trace.len(), 3, "not minimal:\n{}", v.render());
+    let (_, msg, _) = replay(&m, &v.trace).expect_err("shrunk trace must reproduce");
+    assert_eq!(msg, v.message);
+}
+
+/// Injected fault: the eviction scan also evicts pinned scenes,
+/// breaking the pin guarantee (and with it the byte accounting behind
+/// budget convergence). Caught deterministically by exhaustive BFS of a
+/// tight two-scene world.
+#[test]
+fn evict_pinned_fault_caught_by_exhaustive_bfs() {
+    let m = CatalogModel::new(CatalogModelCfg {
+        scenes: 2,
+        budget: 50,
+        scene_bytes: vec![40, 30],
+        max_pins: 1,
+        fault: Some(CatalogFault::EvictPinned),
+    });
+    let v = bfs(&m, 6, 400_000).expect_err("pin violation must be caught");
+    assert!(
+        v.message.contains("pins=") || v.message.contains("accounting"),
+        "{}",
+        v.render()
+    );
+    let (_, msg, _) = replay(&m, &v.trace).expect_err("shrunk trace must reproduce");
+    assert_eq!(msg, v.message);
+}
+
+// --------------------------------------------------- the ladder invariant
+
+/// `first_cost_inversion` is the single shared definition of "strictly
+/// cheaper down the ladder" (invariant 6). Pin it against the naive
+/// quadratic spec over generated cost vectors.
+#[test]
+fn first_cost_inversion_matches_naive_spec() {
+    let strat = FromFn::new(|rng: &mut gemm_gs::scene::rng::Rng| {
+        let n = 1 + rng.index(8);
+        (0..n).map(|_| rng.range(0.1, 40.0) as f64).collect::<Vec<f64>>()
+    });
+    Checker::new(0x1adde7).cases(512).assert(&strat, |costs| {
+        let naive = (1..costs.len()).find(|&i| costs[i] >= costs[i - 1]);
+        let got = first_cost_inversion(costs);
+        if got == naive {
+            Ok(())
+        } else {
+            Err(format!("inversion at {got:?}, spec says {naive:?} for {costs:?}"))
+        }
+    });
+}
+
+/// Any `QualityLadder` that passes construction has a strictly
+/// decreasing modelled cost column — over generated rung lists, either
+/// the constructor rejects (fine) or the priced ladder shows no
+/// inversion through the very same `first_cost_inversion` definition.
+#[test]
+fn constructed_ladders_are_strictly_cheaper_down() {
+    let strat = FromFn::new(|rng: &mut gemm_gs::scene::rng::Rng| {
+        let n = 1 + rng.index(4);
+        let mut rungs = vec![QualityRung::full()];
+        for _ in 0..n {
+            rungs.push(QualityRung::scaled(rng.range(0.05, 1.0) as f64));
+        }
+        rungs
+    });
+    Checker::new(0x1add3).cases(64).assert(&strat, |rungs| {
+        match QualityLadder::new(rungs.clone()) {
+            // rejected ladders must blame the ordering or a bad scale,
+            // never panic
+            Err(msg) => {
+                if msg.contains("strictly cheaper") || msg.contains("res_scale") {
+                    Ok(())
+                } else {
+                    Err(format!("unexpected rejection: {msg}"))
+                }
+            }
+            Ok(ladder) => {
+                let costs: Vec<f64> =
+                    (0..ladder.len()).map(|r| ladder.cost_ms(r)).collect();
+                match first_cost_inversion(&costs) {
+                    None => Ok(()),
+                    Some(i) => Err(format!(
+                        "constructed ladder inverts at rung {i}: {costs:?}"
+                    )),
+                }
+            }
+        }
+    });
+}

@@ -1,11 +1,19 @@
-//! Property-based tests (hand-rolled generators over the deterministic
-//! `scene::rng` — proptest is unavailable offline): randomized sweeps of
-//! the §4 invariants at higher volume than the unit tests.
+//! Property-based tests over the shared seeded toolkit
+//! (`model::gen` — proptest is unavailable offline): randomized sweeps
+//! of the §4 invariants at higher volume than the unit tests.
+//!
+//! The workload generators ([`Conic`], [`ProjectedN`]) are
+//! [`Strategy`] implementations, so the suites that drive them through
+//! [`Checker`] get seed-reported, *shrunk* counterexamples — a failing
+//! blend case arrives as the few Gaussians that matter, not a 500-splat
+//! dump. The remaining sweeps draw from the same strategies directly.
 
+use gemm_gs::coordinator::metrics::{bucket_of, bucket_upper_us, BUCKETS};
 use gemm_gs::gemm::mg::{build_vg, power_direct};
 use gemm_gs::gemm::microkernel::{gemm_k8, gemm_k8_naive};
 use gemm_gs::gemm::mp::Mp;
 use gemm_gs::math::{Camera, Quat, Vec2, Vec3};
+use gemm_gs::model::gen::{Checker, FromFn, LogU64, Strategy};
 use gemm_gs::pipeline::blend_gemm::GemmBlender;
 use gemm_gs::pipeline::blend_vanilla::VanillaBlender;
 use gemm_gs::pipeline::duplicate::{depth_bits, duplicate};
@@ -17,75 +25,200 @@ use gemm_gs::pipeline::{TILE_PIXELS, TILE_SIZE};
 use gemm_gs::scene::gaussian::GaussianCloud;
 use gemm_gs::scene::rng::Rng;
 
+/// Well-conditioned SPD conics (the old ad-hoc `random_conic`, ported
+/// onto the toolkit). Shrinks toward the isotropic unit conic — the
+/// simplest splat that can still exhibit a blending bug.
+struct Conic;
+
+impl Strategy for Conic {
+    type Value = [f32; 3];
+
+    fn generate(&self, rng: &mut Rng) -> [f32; 3] {
+        let a = rng.range(0.005, 3.0);
+        let c = rng.range(0.005, 3.0);
+        let b = rng.range(-0.98, 0.98) * (a * c).sqrt();
+        [a, b, c]
+    }
+
+    fn shrink(&self, v: &[f32; 3]) -> Vec<[f32; 3]> {
+        let mut out = Vec::new();
+        if v[1] != 0.0 {
+            out.push([v[0], 0.0, v[2]]); // drop the cross term first
+        }
+        let toward = [0.5 * (v[0] + 1.0), 0.5 * v[1], 0.5 * (v[2] + 1.0)];
+        if toward != *v {
+            out.push(toward);
+        }
+        out
+    }
+}
+
 fn random_conic(rng: &mut Rng) -> [f32; 3] {
-    let a = rng.range(0.005, 3.0);
-    let c = rng.range(0.005, 3.0);
-    let b = rng.range(-0.98, 0.98) * (a * c).sqrt();
-    [a, b, c]
+    Conic.generate(rng)
+}
+
+/// Keep only the rows of `p` whose index passes `keep` (the shrink
+/// primitive for projected workloads).
+fn projected_subset(p: &Projected, keep: impl Fn(usize) -> bool) -> Projected {
+    let mut out = Projected::default();
+    for i in 0..p.len() {
+        if keep(i) {
+            out.means2d.push(p.means2d[i]);
+            out.conics.push(p.conics[i]);
+            out.depths.push(p.depths[i]);
+            out.radii.push(p.radii[i]);
+            out.colors.push(p.colors[i]);
+            out.opacities.push(p.opacities[i]);
+            out.source.push(out.means2d.len() as u32 - 1);
+        }
+    }
+    out
+}
+
+/// Random tile workloads of exactly `n` projected Gaussians (the old
+/// ad-hoc `random_projected`, ported onto the toolkit). Shrinks by
+/// dropping Gaussians — halves first, then singletons — which is the
+/// only simplification that matters when a blend property fails.
+struct ProjectedN {
+    n: usize,
+}
+
+impl Strategy for ProjectedN {
+    type Value = Projected;
+
+    fn generate(&self, rng: &mut Rng) -> Projected {
+        let mut p = Projected::default();
+        for i in 0..self.n {
+            p.means2d.push(Vec2::new(rng.range(-20.0, 40.0), rng.range(-20.0, 40.0)));
+            p.conics.push(Conic.generate(rng));
+            p.depths.push(rng.range(0.3, 60.0));
+            p.radii.push(rng.range(1.0, 40.0));
+            p.colors.push(Vec3::new(rng.f32(), rng.f32(), rng.f32()));
+            p.opacities.push(rng.range(0.01, 0.995));
+            p.source.push(i as u32);
+        }
+        p
+    }
+
+    fn shrink(&self, p: &Projected) -> Vec<Projected> {
+        let n = p.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let half = n / 2;
+        if half > 0 {
+            out.push(projected_subset(p, |i| i >= half));
+            out.push(projected_subset(p, |i| i < n - half));
+        }
+        for drop in 0..n.min(8) {
+            out.push(projected_subset(p, |i| i != drop));
+        }
+        out
+    }
 }
 
 fn random_projected(rng: &mut Rng, n: usize) -> Projected {
-    let mut p = Projected::default();
-    for i in 0..n {
-        p.means2d.push(Vec2::new(rng.range(-20.0, 40.0), rng.range(-20.0, 40.0)));
-        p.conics.push(random_conic(rng));
-        p.depths.push(rng.range(0.3, 60.0));
-        p.radii.push(rng.range(1.0, 40.0));
-        p.colors.push(Vec3::new(rng.f32(), rng.f32(), rng.f32()));
-        p.opacities.push(rng.range(0.01, 0.995));
-        p.source.push(i as u32);
-    }
-    p
+    ProjectedN { n }.generate(rng)
 }
 
-/// Property: Eq. 6 — v_g · v_p == direct quadratic, 10k random cases.
+/// Property: Eq. 6 — v_g · v_p == direct quadratic, 10k random cases
+/// driven through the checker (a failing case reports its seed and a
+/// conic shrunk toward isotropy).
 #[test]
 fn prop_eq6_identity() {
     let mp = Mp::new(16);
-    let mut rng = Rng::new(0xE96);
-    for _ in 0..10_000 {
-        let conic = random_conic(&mut rng);
+    let strat = FromFn::new(|rng: &mut Rng| {
+        let conic = Conic.generate(rng);
         let (xh, yh) = (rng.range(-40.0, 56.0), rng.range(-40.0, 56.0));
-        let vg = build_vg(conic, xh, yh);
         let (lx, ly) = (rng.index(16), rng.index(16));
+        (conic, xh, yh, lx, ly)
+    });
+    Checker::new(0xE96).cases(10_000).assert(&strat, |&(conic, xh, yh, lx, ly)| {
+        let vg = build_vg(conic, xh, yh);
         let vp = mp.column(lx, ly);
         let got: f32 = vg.iter().zip(vp.iter()).map(|(a, b)| a * b).sum();
         let want = power_direct(conic, xh - lx as f32, yh - ly as f32);
         let tol = 2e-3 * (1.0 + want.abs());
-        assert!((got - want).abs() <= tol, "{conic:?} ({xh},{yh}) px({lx},{ly}): {got} vs {want}");
+        if (got - want).abs() <= tol {
+            Ok(())
+        } else {
+            Err(format!("{conic:?} ({xh},{yh}) px({lx},{ly}): {got} vs {want}"))
+        }
+    });
+}
+
+/// Property: GEMM blending == vanilla blending on random tile workloads
+/// of varying size, including degenerate ones. Checker-driven per size
+/// class: a failing workload shrinks to the few Gaussians that
+/// actually disagree.
+#[test]
+fn prop_blend_equivalence() {
+    for (trial, &n) in [0usize, 1, 2, 17, 100, 256, 300, 513].iter().enumerate() {
+        let origin = (16 * (trial % 5) as u32, 16 * (trial % 7) as u32);
+        Checker::new(0xB1E + trial as u64).cases(5).assert(&ProjectedN { n }, |p| {
+            let idx: Vec<u32> = (0..p.len() as u32).collect();
+            let mut v = VanillaBlender::default();
+            let mut g = GemmBlender::default();
+            let mut out_v = [[0.0f32; 3]; TILE_PIXELS];
+            let mut out_g = [[0.0f32; 3]; TILE_PIXELS];
+            v.blend_tile(origin, p, &idx, &mut out_v);
+            g.blend_tile(origin, p, &idx, &mut out_g);
+            for j in 0..TILE_PIXELS {
+                for ch in 0..3 {
+                    if (out_v[j][ch] - out_g[j][ch]).abs() >= 2e-3 {
+                        return Err(format!("n {} px {j} ch {ch} diverges", p.len()));
+                    }
+                }
+            }
+            // transmittance invariants: bounds + agreement
+            for (a, b) in v.last_transmittance().iter().zip(g.last_transmittance()) {
+                if !(0.0..=1.0).contains(a) {
+                    return Err(format!("transmittance {a} out of [0,1]"));
+                }
+                if (a - b).abs() >= 2e-3 {
+                    return Err(format!("transmittance diverges: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
     }
 }
 
-/// Property: GEMM blending == vanilla blending on 40 random tile
-/// workloads of varying size, including degenerate ones.
+/// Property: the service latency histogram's log-linear bucketing
+/// contract (`coordinator::metrics`): indices in range and monotone in
+/// the latency, every value covered by its bucket's upper edge with at
+/// most 25 % relative error, and strictly increasing bucket edges — an
+/// exact monotone CDF across octave boundaries.
 #[test]
-fn prop_blend_equivalence() {
-    let mut rng = Rng::new(0xB1E);
-    for trial in 0..40 {
-        let n = [0usize, 1, 2, 17, 100, 256, 300, 513][trial % 8] + trial / 8;
-        let p = random_projected(&mut rng, n);
-        let idx: Vec<u32> = (0..n as u32).collect();
-        let origin = (16 * (trial % 5) as u32, 16 * (trial % 7) as u32);
-        let mut v = VanillaBlender::default();
-        let mut g = GemmBlender::default();
-        let mut out_v = [[0.0f32; 3]; TILE_PIXELS];
-        let mut out_g = [[0.0f32; 3]; TILE_PIXELS];
-        v.blend_tile(origin, &p, &idx, &mut out_v);
-        g.blend_tile(origin, &p, &idx, &mut out_g);
-        for j in 0..TILE_PIXELS {
-            for ch in 0..3 {
-                assert!(
-                    (out_v[j][ch] - out_g[j][ch]).abs() < 2e-3,
-                    "trial {trial} n {n} px {j}"
-                );
-            }
-        }
-        // transmittance invariants: bounds + agreement
-        for (a, b) in v.last_transmittance().iter().zip(g.last_transmittance()) {
-            assert!((0.0..=1.0).contains(a));
-            assert!((a - b).abs() < 2e-3);
-        }
+fn prop_histogram_bucket_contract() {
+    // exact edge chain: a cumulative count over buckets can never
+    // decrease, including across every octave boundary
+    for b in 1..BUCKETS {
+        assert!(
+            bucket_upper_us(b) > bucket_upper_us(b - 1),
+            "edge inversion at bucket {b}"
+        );
     }
+    // log-uniform draws hit every octave, not just the top one
+    let strat = LogU64::new(1, 1 << 40);
+    Checker::new(0x4157).cases(4096).assert(&strat, |&us| {
+        let b = bucket_of(us);
+        if b >= BUCKETS {
+            return Err(format!("bucket {b} out of range for {us} µs"));
+        }
+        let upper = bucket_upper_us(b);
+        if us > upper {
+            return Err(format!("{us} µs above its own bucket edge {upper}"));
+        }
+        if upper - us > us / 4 {
+            return Err(format!("edge error {} µs > 25 % of {us} µs", upper - us));
+        }
+        if bucket_of(us + 1) < b {
+            return Err(format!("bucket_of not monotone at {us} µs"));
+        }
+        Ok(())
+    });
 }
 
 /// Property: transmittance is monotone non-increasing as more Gaussians
