@@ -1,40 +1,62 @@
-//! Micro-bench: the radix sort over (tile‖depth) keys vs std unstable
-//! sort — Stage 3's substrate.
+//! Micro-bench: Stage 3's substrate, three ways over the same
+//! (tile‖depth) keys — std's pdqsort (the reference comparison sort's
+//! core), the LSD radix sort (the GPU-structural CUB analogue), and the
+//! tile-bucketed counting sort the arena hot path runs
+//! (`bucket_sort_duplicated`, which also yields the tile-range table
+//! its competitors would still have to scan for).
 
 use gemm_gs::bench_harness::timing;
-use gemm_gs::pipeline::sort::radix_sort_pairs;
+use gemm_gs::pipeline::duplicate::Duplicated;
+use gemm_gs::pipeline::sort::{bucket_sort_duplicated, radix_sort_pairs, SortScratch};
 use gemm_gs::scene::rng::Rng;
 
 fn main() {
+    const NUM_TILES: u64 = 4096;
     for n in [100_000usize, 1_000_000] {
         let mut rng = Rng::new(7);
         let keys: Vec<u64> = (0..n)
             .map(|_| {
-                let tile = rng.next_u64() % 4096;
+                let tile = rng.next_u64() % NUM_TILES;
                 let depth = (rng.range(0.2, 50.0)).to_bits() as u64;
                 (tile << 32) | depth
             })
             .collect();
         let values: Vec<u32> = (0..n as u32).collect();
 
-        let t_radix = timing::median_time(5, || {
-            let mut k = keys.clone();
-            let mut v = values.clone();
-            radix_sort_pairs(&mut k, &mut v);
-            std::hint::black_box((k, v));
-        });
         let t_std = timing::median_time(5, || {
             let mut pairs: Vec<(u64, u32)> =
                 keys.iter().cloned().zip(values.iter().cloned()).collect();
             pairs.sort_unstable_by_key(|&(k, _)| k);
             std::hint::black_box(pairs);
         });
+        let t_radix = timing::median_time(5, || {
+            let mut k = keys.clone();
+            let mut v = values.clone();
+            radix_sort_pairs(&mut k, &mut v);
+            std::hint::black_box((k, v));
+        });
+        // warm scratch outside the timed closure, as the arena holds it
+        // across frames in the steady state the bench models
+        let mut scratch = SortScratch::default();
+        let mut ranges = Vec::new();
+        let t_bucket = timing::median_time(5, || {
+            let mut dup = Duplicated { keys: keys.clone(), values: values.clone() };
+            bucket_sort_duplicated(&mut dup, NUM_TILES as usize, &mut scratch, &mut ranges);
+            std::hint::black_box(&dup);
+        });
+
+        let mkeys = |t: std::time::Duration| n as f64 / t.as_secs_f64() / 1e6;
         println!(
-            "n={n}: radix {} ({:.1} Mkeys/s), std {} — radix {:.2}x",
-            timing::fmt_ms(t_radix),
-            n as f64 / t_radix.as_secs_f64() / 1e6,
+            "n={n}: pdqsort {} ({:.1} Mkeys/s) | radix {} ({:.1} Mkeys/s, {:.2}x) | \
+             tile-bucket {} ({:.1} Mkeys/s, {:.2}x, tile ranges included)",
             timing::fmt_ms(t_std),
-            t_std.as_secs_f64() / t_radix.as_secs_f64()
+            mkeys(t_std),
+            timing::fmt_ms(t_radix),
+            mkeys(t_radix),
+            t_std.as_secs_f64() / t_radix.as_secs_f64(),
+            timing::fmt_ms(t_bucket),
+            mkeys(t_bucket),
+            t_std.as_secs_f64() / t_bucket.as_secs_f64(),
         );
     }
 }

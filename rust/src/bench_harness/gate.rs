@@ -1,0 +1,580 @@
+//! `bench-gate`: the recorded perf baseline behind the frame-planning
+//! hot path (EXPERIMENTS.md §Perf-trajectory).
+//!
+//! One run measures, on ≥ 2 seeded synthetic scenes:
+//!
+//! * per-stage plan cost (preprocess / duplicate / sort) in
+//!   ns per Gaussian through the arena hot path
+//!   ([`plan_frame_in`]), plus sort throughput in pairs/s;
+//! * the same plan through the *legacy* reference path
+//!   ([`plan_frame_masked`]: fresh allocations + global comparison
+//!   sort) — the ratio is the measured plan-stage speedup the arena +
+//!   tile-bucketed sort deliver;
+//! * warm-vs-cold trajectory plan speedup (the §9 session);
+//! * coordinator coalescing occupancy (the fig7 serving sweep);
+//! * soak latency percentiles under the SLO-driven policy.
+//!
+//! The report serializes to JSON (schema
+//! [`BENCH_SCHEMA_VERSION`]) — `BENCH_7.json` at the repo root is the
+//! committed baseline — and [`compare`] diffs a fresh run against it
+//! over the *scale-invariant* metrics only (ns/Gaussian, throughput,
+//! speedup ratios, occupancy, tail ratio), failing on regression beyond
+//! a multiplicative tolerance. Absolute wall-clock and scene sizes are
+//! recorded for reading, never gated: they move with machine and
+//! `--scale`, and a gate that fails on a slower runner teaches people
+//! to ignore it.
+
+use super::report::BENCH_SCHEMA_VERSION;
+use super::workloads::default_camera;
+use super::{fig7, soak, trajectory};
+use crate::coordinator::BackendKind;
+use crate::pipeline::arena::FrameArena;
+use crate::pipeline::plan::{plan_frame_in, plan_frame_masked};
+use crate::pipeline::render::RenderConfig;
+use crate::pipeline::trajectory::plan_time;
+use crate::runtime::json::{parse, Json};
+use crate::scene::synthetic::scene_by_name;
+use std::time::Duration;
+
+/// The two seeded synthetic scenes every gate run measures — one
+/// outdoor, one indoor, so both tile-occupancy shapes are covered.
+pub const GATE_SCENES: [&str; 2] = ["train", "truck"];
+
+/// Per-scene gate measurements. The `*_ns_per_gaussian` and
+/// `pairs_per_sec` fields are the scale-invariant hot-path numbers
+/// [`compare`] diffs; the counts are context for reading the report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SceneGate {
+    /// Scene name (a Table 1 synthetic workload).
+    pub name: String,
+    /// Gaussians in the synthesized cloud at this run's sim scale.
+    pub n_gaussians: usize,
+    /// (tile, Gaussian) pairs the plan emitted.
+    pub n_pairs: usize,
+    /// Stage 1 cost, ns per Gaussian (arena path).
+    pub preprocess_ns_per_gaussian: f64,
+    /// Stage 2 cost, ns per Gaussian (arena path).
+    pub duplicate_ns_per_gaussian: f64,
+    /// Stage 3 cost, ns per Gaussian (arena path: tile-bucketed sort).
+    pub sort_ns_per_gaussian: f64,
+    /// Whole-plan cost, ns per Gaussian (arena path).
+    pub plan_ns_per_gaussian: f64,
+    /// Sort-stage throughput: pairs sorted per second.
+    pub pairs_per_sec: f64,
+    /// Whole-plan speedup of the arena + bucketed-sort path over the
+    /// legacy fresh-allocation + comparison-sort path, same inputs.
+    pub plan_speedup_vs_legacy: f64,
+}
+
+/// Everything one `bench-gate` run measured.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateReport {
+    /// Report schema ([`BENCH_SCHEMA_VERSION`] at write time).
+    pub schema_version: u32,
+    /// True when the run used the reduced `--quick` budget.
+    pub quick: bool,
+    /// Sim scale the scenes were synthesized at.
+    pub scale: f64,
+    /// Seed for the soak's Poisson stream.
+    pub seed: u64,
+    /// One entry per [`GATE_SCENES`] scene.
+    pub scenes: Vec<SceneGate>,
+    /// Cold-replan / warm-session plan-time ratio on a coherent arc
+    /// (vanilla accel row of the §9 trajectory sweep).
+    pub warm_plan_speedup: f64,
+    /// Mean batch occupancy the coordinator achieved at `max_batch = 4`
+    /// under the fig7 serving stream (upper bound 4).
+    pub coalesce_occupancy: f64,
+    /// Soak p50 under the SLO-driven policy, ms (recorded, not gated).
+    pub soak_p50_ms: f64,
+    /// Soak p95, ms (recorded, not gated).
+    pub soak_p95_ms: f64,
+    /// Soak p99, ms (recorded, not gated).
+    pub soak_p99_ms: f64,
+    /// p99 / p50 — the tail amplification [`compare`] gates (the
+    /// absolute percentiles move with the machine; the ratio says
+    /// whether the service's tail behaviour regressed).
+    pub soak_tail_ratio: f64,
+}
+
+fn ns_per(total: Duration, iters: usize, units: usize) -> f64 {
+    total.as_nanos() as f64 / (iters.max(1) * units.max(1)) as f64
+}
+
+/// Measure one scene's plan stages: `iters` arena-path plans through a
+/// persistent [`FrameArena`] (warmed once, so this is the steady state)
+/// against `iters` legacy-path plans.
+fn measure_scene(name: &str, scale: f64, iters: usize) -> SceneGate {
+    let spec = scene_by_name(name).expect("gate scene");
+    let cloud = spec.synthesize(scale);
+    let camera = default_camera(&spec);
+    let cfg = RenderConfig::default();
+
+    let mut arena = FrameArena::new();
+    // warmup: grows every pool to its high-water mark
+    let warm = plan_frame_in(&mut arena, &cloud, &camera, &cfg);
+    let n_pairs = warm.dup.len();
+    arena.retire_plan(warm);
+
+    let mut t_pre = Duration::ZERO;
+    let mut t_dup = Duration::ZERO;
+    let mut t_sort = Duration::ZERO;
+    for _ in 0..iters {
+        let plan = plan_frame_in(&mut arena, &cloud, &camera, &cfg);
+        t_pre += plan.t_preprocess;
+        t_dup += plan.t_duplicate;
+        t_sort += plan.t_sort;
+        arena.retire_plan(plan);
+    }
+    let arena_total = t_pre + t_dup + t_sort;
+
+    // the pre-arena planner: fresh buffers every frame, global stable
+    // comparison sort, separate range scan
+    let _warm_legacy = plan_frame_masked(&cloud, &camera, &cfg, None);
+    let mut legacy_total = Duration::ZERO;
+    for _ in 0..iters {
+        legacy_total += plan_time(&plan_frame_masked(&cloud, &camera, &cfg, None));
+    }
+
+    let n = cloud.len();
+    SceneGate {
+        name: name.to_string(),
+        n_gaussians: n,
+        n_pairs,
+        preprocess_ns_per_gaussian: ns_per(t_pre, iters, n),
+        duplicate_ns_per_gaussian: ns_per(t_dup, iters, n),
+        sort_ns_per_gaussian: ns_per(t_sort, iters, n),
+        plan_ns_per_gaussian: ns_per(arena_total, iters, n),
+        pairs_per_sec: (n_pairs * iters) as f64
+            / t_sort.as_secs_f64().max(1e-9),
+        plan_speedup_vs_legacy: legacy_total.as_secs_f64()
+            / arena_total.as_secs_f64().max(1e-9),
+    }
+}
+
+/// Run the full gate measurement. `quick` shrinks iteration counts and
+/// the soak window to CI-smoke size (seconds, not minutes); `scale` is
+/// the sim scale for every scene; `seed` feeds the soak stream.
+pub fn run(quick: bool, scale: f64, seed: u64) -> GateReport {
+    let (iters, traj_frames, coalesce_frames, soak_secs) =
+        if quick { (3, 5, 8, 0.3) } else { (9, 16, 32, 2.0) };
+
+    let scenes: Vec<SceneGate> =
+        GATE_SCENES.iter().map(|s| measure_scene(s, scale, iters)).collect();
+
+    // warm-vs-cold: the vanilla row of the §9 trajectory sweep
+    let traj = trajectory::run(GATE_SCENES[0], scale, traj_frames, 3e-4);
+    let vanilla = traj
+        .iter()
+        .find(|p| p.accel.cli_name() == "vanilla")
+        .expect("trajectory sweep always includes vanilla");
+    let warm_plan_speedup = vanilla.cold_plan_ms / vanilla.warm_plan_ms.max(1e-9);
+
+    // coalescing occupancy at max_batch = 4 through the real coordinator
+    let coalesce = fig7::run_coalesced(
+        GATE_SCENES[0],
+        scale,
+        coalesce_frames,
+        &[4],
+        BackendKind::NativeGemm,
+    );
+    let coalesce_occupancy = coalesce[0].mean_batch;
+
+    // soak under the SLO-driven policy (auto-calibrated rate and SLO)
+    let outcome = soak::run(
+        GATE_SCENES[0],
+        scale,
+        2,
+        0.0,
+        Duration::from_secs_f64(soak_secs),
+        None,
+        seed,
+    );
+    let r = &outcome.slo_driven;
+    let p50 = r.p50.as_secs_f64() * 1e3;
+    let p99 = r.p99.as_secs_f64() * 1e3;
+
+    GateReport {
+        schema_version: BENCH_SCHEMA_VERSION,
+        quick,
+        scale,
+        seed,
+        scenes,
+        warm_plan_speedup,
+        coalesce_occupancy,
+        soak_p50_ms: p50,
+        soak_p95_ms: r.p95.as_secs_f64() * 1e3,
+        soak_p99_ms: p99,
+        soak_tail_ratio: p99 / p50.max(1e-9),
+    }
+}
+
+/// JSON-safe number: `f64::Display` round-trips, but NaN/inf are not
+/// JSON — they become 0, which any comparison then flags loudly.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Serialize a report as pretty-printed JSON with a fixed key order
+/// (diff-friendly: the committed `BENCH_7.json` is reviewed by eye).
+pub fn to_json(r: &GateReport) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"schema_version\": {},\n", r.schema_version));
+    out.push_str(&format!("  \"quick\": {},\n", r.quick));
+    out.push_str(&format!("  \"scale\": {},\n", num(r.scale)));
+    out.push_str(&format!("  \"seed\": {},\n", r.seed));
+    out.push_str(&format!(
+        "  \"warm_plan_speedup\": {},\n",
+        num(r.warm_plan_speedup)
+    ));
+    out.push_str(&format!(
+        "  \"coalesce_occupancy\": {},\n",
+        num(r.coalesce_occupancy)
+    ));
+    out.push_str(&format!("  \"soak_p50_ms\": {},\n", num(r.soak_p50_ms)));
+    out.push_str(&format!("  \"soak_p95_ms\": {},\n", num(r.soak_p95_ms)));
+    out.push_str(&format!("  \"soak_p99_ms\": {},\n", num(r.soak_p99_ms)));
+    out.push_str(&format!("  \"soak_tail_ratio\": {},\n", num(r.soak_tail_ratio)));
+    out.push_str("  \"scenes\": [\n");
+    for (i, s) in r.scenes.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"name\": \"{}\",\n", s.name));
+        out.push_str(&format!("      \"n_gaussians\": {},\n", s.n_gaussians));
+        out.push_str(&format!("      \"n_pairs\": {},\n", s.n_pairs));
+        out.push_str(&format!(
+            "      \"preprocess_ns_per_gaussian\": {},\n",
+            num(s.preprocess_ns_per_gaussian)
+        ));
+        out.push_str(&format!(
+            "      \"duplicate_ns_per_gaussian\": {},\n",
+            num(s.duplicate_ns_per_gaussian)
+        ));
+        out.push_str(&format!(
+            "      \"sort_ns_per_gaussian\": {},\n",
+            num(s.sort_ns_per_gaussian)
+        ));
+        out.push_str(&format!(
+            "      \"plan_ns_per_gaussian\": {},\n",
+            num(s.plan_ns_per_gaussian)
+        ));
+        out.push_str(&format!("      \"pairs_per_sec\": {},\n", num(s.pairs_per_sec)));
+        out.push_str(&format!(
+            "      \"plan_speedup_vs_legacy\": {}\n",
+            num(s.plan_speedup_vs_legacy)
+        ));
+        out.push_str(if i + 1 < r.scenes.len() { "    },\n" } else { "    }\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn field(doc: &Json, key: &str) -> Result<f64, String> {
+    doc.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("bench report: missing numeric field '{key}'"))
+}
+
+/// Parse a serialized [`GateReport`] (the committed baseline). Rejects
+/// schema-version mismatches outright — diffing across schemas would
+/// compare unlike quantities.
+pub fn parse_report(text: &str) -> Result<GateReport, String> {
+    let doc = parse(text)?;
+    let schema_version = field(&doc, "schema_version")? as u32;
+    if schema_version != BENCH_SCHEMA_VERSION {
+        return Err(format!(
+            "bench report schema {schema_version} does not match this binary's \
+             {BENCH_SCHEMA_VERSION} — re-record the baseline with bench-gate --out"
+        ));
+    }
+    let scenes_json = doc
+        .get("scenes")
+        .and_then(Json::as_arr)
+        .ok_or("bench report: missing 'scenes' array")?;
+    let mut scenes = Vec::with_capacity(scenes_json.len());
+    for s in scenes_json {
+        scenes.push(SceneGate {
+            name: s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("bench report: scene missing 'name'")?
+                .to_string(),
+            n_gaussians: field(s, "n_gaussians")? as usize,
+            n_pairs: field(s, "n_pairs")? as usize,
+            preprocess_ns_per_gaussian: field(s, "preprocess_ns_per_gaussian")?,
+            duplicate_ns_per_gaussian: field(s, "duplicate_ns_per_gaussian")?,
+            sort_ns_per_gaussian: field(s, "sort_ns_per_gaussian")?,
+            plan_ns_per_gaussian: field(s, "plan_ns_per_gaussian")?,
+            pairs_per_sec: field(s, "pairs_per_sec")?,
+            plan_speedup_vs_legacy: field(s, "plan_speedup_vs_legacy")?,
+        });
+    }
+    Ok(GateReport {
+        schema_version,
+        quick: matches!(doc.get("quick"), Some(Json::Bool(true))),
+        scale: field(&doc, "scale")?,
+        seed: field(&doc, "seed")? as u64,
+        scenes,
+        warm_plan_speedup: field(&doc, "warm_plan_speedup")?,
+        coalesce_occupancy: field(&doc, "coalesce_occupancy")?,
+        soak_p50_ms: field(&doc, "soak_p50_ms")?,
+        soak_p95_ms: field(&doc, "soak_p95_ms")?,
+        soak_p99_ms: field(&doc, "soak_p99_ms")?,
+        soak_tail_ratio: field(&doc, "soak_tail_ratio")?,
+    })
+}
+
+/// Diff `current` against `baseline` over the scale-invariant metrics,
+/// returning one message per regression beyond `tolerance` (a
+/// multiplicative factor ≥ 1; CI uses a generous 3.0 because baseline
+/// and runner are different machines). Empty vec = gate passes.
+/// Improvements never fail the gate — only regressions do.
+pub fn compare(current: &GateReport, baseline: &GateReport, tolerance: f64) -> Vec<String> {
+    // lower-is-better metric: fails when current exceeds baseline × tol
+    fn ceil(what: String, cur: f64, base: f64, tol: f64) -> Option<String> {
+        (cur > base * tol).then(|| {
+            format!("{what}: {cur:.3} vs baseline {base:.3} (limit {:.3})", base * tol)
+        })
+    }
+    // higher-is-better metric: fails when current drops below base / tol
+    fn floor(what: String, cur: f64, base: f64, tol: f64) -> Option<String> {
+        (cur < base / tol).then(|| {
+            format!("{what}: {cur:.3} vs baseline {base:.3} (floor {:.3})", base / tol)
+        })
+    }
+    let mut bad = Vec::new();
+    for b in &baseline.scenes {
+        let Some(c) = current.scenes.iter().find(|s| s.name == b.name) else {
+            bad.push(format!("scene '{}' missing from current run", b.name));
+            continue;
+        };
+        bad.extend(ceil(
+            format!("{}: preprocess ns/gaussian", b.name),
+            c.preprocess_ns_per_gaussian,
+            b.preprocess_ns_per_gaussian,
+            tolerance,
+        ));
+        bad.extend(ceil(
+            format!("{}: duplicate ns/gaussian", b.name),
+            c.duplicate_ns_per_gaussian,
+            b.duplicate_ns_per_gaussian,
+            tolerance,
+        ));
+        bad.extend(ceil(
+            format!("{}: sort ns/gaussian", b.name),
+            c.sort_ns_per_gaussian,
+            b.sort_ns_per_gaussian,
+            tolerance,
+        ));
+        bad.extend(ceil(
+            format!("{}: plan ns/gaussian", b.name),
+            c.plan_ns_per_gaussian,
+            b.plan_ns_per_gaussian,
+            tolerance,
+        ));
+        bad.extend(floor(
+            format!("{}: sort pairs/s", b.name),
+            c.pairs_per_sec,
+            b.pairs_per_sec,
+            tolerance,
+        ));
+        bad.extend(floor(
+            format!("{}: plan speedup vs legacy", b.name),
+            c.plan_speedup_vs_legacy,
+            b.plan_speedup_vs_legacy,
+            tolerance,
+        ));
+    }
+    bad.extend(floor(
+        "warm plan speedup".to_string(),
+        current.warm_plan_speedup,
+        baseline.warm_plan_speedup,
+        tolerance,
+    ));
+    bad.extend(floor(
+        "coalesce occupancy".to_string(),
+        current.coalesce_occupancy,
+        baseline.coalesce_occupancy,
+        tolerance,
+    ));
+    bad.extend(ceil(
+        "soak tail ratio p99/p50".to_string(),
+        current.soak_tail_ratio,
+        baseline.soak_tail_ratio,
+        tolerance,
+    ));
+    bad
+}
+
+/// Human-readable rendering of a gate run (the `--out` JSON is the
+/// machine artifact; this is what the terminal shows).
+pub fn render(r: &GateReport) -> String {
+    use super::report::Table;
+    let mut t = Table::new(&[
+        "Scene",
+        "Gaussians",
+        "Pairs",
+        "Pre ns/G",
+        "Dup ns/G",
+        "Sort ns/G",
+        "Plan ns/G",
+        "Pairs/s",
+        "vs legacy",
+    ]);
+    for s in &r.scenes {
+        t.row(vec![
+            s.name.clone(),
+            s.n_gaussians.to_string(),
+            s.n_pairs.to_string(),
+            format!("{:.1}", s.preprocess_ns_per_gaussian),
+            format!("{:.1}", s.duplicate_ns_per_gaussian),
+            format!("{:.1}", s.sort_ns_per_gaussian),
+            format!("{:.1}", s.plan_ns_per_gaussian),
+            format!("{:.2e}", s.pairs_per_sec),
+            format!("{:.2}x", s.plan_speedup_vs_legacy),
+        ]);
+    }
+    format!(
+        "Perf gate — arena-path plan stages at scale {} ({} mode, schema v{})\n\n{}\n\
+         warm plan speedup {:.2}x | coalesce occupancy {:.2}/4 | \
+         soak p50/p95/p99 {:.1}/{:.1}/{:.1} ms (tail ratio {:.2})\n",
+        r.scale,
+        if r.quick { "quick" } else { "full" },
+        r.schema_version,
+        t.render(),
+        r.warm_plan_speedup,
+        r.coalesce_occupancy,
+        r.soak_p50_ms,
+        r.soak_p95_ms,
+        r.soak_p99_ms,
+        r.soak_tail_ratio,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> GateReport {
+        GateReport {
+            schema_version: BENCH_SCHEMA_VERSION,
+            quick: true,
+            scale: 0.002,
+            seed: 42,
+            scenes: vec![
+                SceneGate {
+                    name: "train".into(),
+                    n_gaussians: 2000,
+                    n_pairs: 9000,
+                    preprocess_ns_per_gaussian: 40.0,
+                    duplicate_ns_per_gaussian: 55.0,
+                    sort_ns_per_gaussian: 30.0,
+                    plan_ns_per_gaussian: 125.0,
+                    pairs_per_sec: 1.5e8,
+                    plan_speedup_vs_legacy: 1.3,
+                },
+                SceneGate {
+                    name: "truck".into(),
+                    n_gaussians: 5000,
+                    n_pairs: 21000,
+                    preprocess_ns_per_gaussian: 38.0,
+                    duplicate_ns_per_gaussian: 60.0,
+                    sort_ns_per_gaussian: 33.0,
+                    plan_ns_per_gaussian: 131.0,
+                    pairs_per_sec: 1.4e8,
+                    plan_speedup_vs_legacy: 1.25,
+                },
+            ],
+            warm_plan_speedup: 1.6,
+            coalesce_occupancy: 2.8,
+            soak_p50_ms: 3.0,
+            soak_p95_ms: 7.5,
+            soak_p99_ms: 9.0,
+            soak_tail_ratio: 3.0,
+        }
+    }
+
+    #[test]
+    fn json_roundtrips_bitwise() {
+        let r = sample();
+        let parsed = parse_report(&to_json(&r)).expect("roundtrip");
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn self_comparison_passes_at_unit_tolerance() {
+        let r = sample();
+        assert!(compare(&r, &r, 1.0).is_empty());
+    }
+
+    #[test]
+    fn regressions_are_flagged_and_improvements_are_not() {
+        let base = sample();
+        let mut slow = base.clone();
+        slow.scenes[0].sort_ns_per_gaussian *= 10.0;
+        slow.scenes[1].pairs_per_sec /= 10.0;
+        slow.warm_plan_speedup /= 10.0;
+        slow.soak_tail_ratio *= 10.0;
+        let bad = compare(&slow, &base, 2.0);
+        assert_eq!(bad.len(), 4, "{bad:?}");
+        assert!(bad[0].contains("sort ns/gaussian"), "{bad:?}");
+
+        let mut fast = base.clone();
+        for s in &mut fast.scenes {
+            s.plan_ns_per_gaussian /= 10.0;
+            s.pairs_per_sec *= 10.0;
+        }
+        assert!(compare(&fast, &base, 2.0).is_empty(), "improvement failed the gate");
+    }
+
+    #[test]
+    fn missing_scene_is_a_regression() {
+        let base = sample();
+        let mut cur = base.clone();
+        cur.scenes.pop();
+        let bad = compare(&cur, &base, 3.0);
+        assert!(bad.iter().any(|m| m.contains("missing")), "{bad:?}");
+    }
+
+    #[test]
+    fn schema_mismatch_is_rejected() {
+        let mut doc = to_json(&sample());
+        doc = doc.replace(
+            &format!("\"schema_version\": {BENCH_SCHEMA_VERSION}"),
+            "\"schema_version\": 999",
+        );
+        let err = parse_report(&doc).unwrap_err();
+        assert!(err.contains("schema 999"), "{err}");
+    }
+
+    #[test]
+    fn quick_run_measures_everything() {
+        // the smallest real end-to-end run: every gated metric must come
+        // back positive and finite (CI's perf-gate job runs the full
+        // quick budget; this is the in-crate smoke)
+        let r = run(true, 0.0005, 7);
+        assert_eq!(r.scenes.len(), GATE_SCENES.len());
+        for s in &r.scenes {
+            assert!(s.n_gaussians > 0 && s.n_pairs > 0, "{s:?}");
+            for v in [
+                s.preprocess_ns_per_gaussian,
+                s.duplicate_ns_per_gaussian,
+                s.sort_ns_per_gaussian,
+                s.plan_ns_per_gaussian,
+                s.pairs_per_sec,
+                s.plan_speedup_vs_legacy,
+            ] {
+                assert!(v.is_finite() && v > 0.0, "{s:?}");
+            }
+        }
+        assert!(r.warm_plan_speedup > 0.0);
+        assert!((1.0..=4.0 + 1e-9).contains(&r.coalesce_occupancy));
+        assert!(r.soak_tail_ratio >= 1.0 - 1e-9);
+        // and it round-trips through its own serialization
+        let parsed = parse_report(&to_json(&r)).expect("roundtrip");
+        assert!(compare(&parsed, &r, 1.01).is_empty());
+    }
+}

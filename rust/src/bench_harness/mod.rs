@@ -12,10 +12,12 @@
 //! | Fig. 7 (batch-size sweep) | [`fig7`] | `gemm-gs bench-fig7` |
 //! | Trajectory cold-vs-warm sweep (§9) | [`trajectory`] | `gemm-gs bench-trajectory` |
 //! | Soak: service under contention (§10) | [`soak`] | `gemm-gs bench-soak` |
+//! | Perf gate: recorded baseline (§13) | [`gate`] | `gemm-gs bench-gate` |
 
 pub mod fig3;
 pub mod fig6;
 pub mod fig7;
+pub mod gate;
 pub mod report;
 pub mod soak;
 pub mod table2;

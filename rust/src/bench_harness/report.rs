@@ -1,4 +1,13 @@
-//! Fixed-width text table formatting for the regenerated paper tables.
+//! Fixed-width text table formatting for the regenerated paper tables,
+//! plus the schema version stamped into every machine-readable bench
+//! report (`BENCH_*.json`).
+
+/// Schema version of the JSON bench reports (`gemm-gs bench-gate
+/// --out`). Bump when a field is added, removed, or changes meaning;
+/// [`crate::bench_harness::gate`] refuses to diff reports across
+/// versions, so a stale committed baseline fails loudly instead of
+/// comparing unlike quantities.
+pub const BENCH_SCHEMA_VERSION: u32 = 1;
 
 /// A simple text table builder.
 #[derive(Debug, Default)]

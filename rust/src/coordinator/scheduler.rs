@@ -7,7 +7,8 @@
 
 use super::request::BackendKind;
 use crate::math::Camera;
-use crate::pipeline::plan::plan_frame;
+use crate::pipeline::arena::FrameArena;
+use crate::pipeline::plan::plan_frame_in;
 use crate::pipeline::render::{Image, RenderConfig, RenderOutput};
 use crate::pipeline::{TILE_PIXELS, TILE_SIZE};
 use crate::scene::gaussian::GaussianCloud;
@@ -16,6 +17,8 @@ use std::time::Instant;
 
 /// Render one frame with `threads` tile workers using `backend`: one
 /// shared [`crate::pipeline::plan::FramePlan`], tiles fanned out.
+/// Convenience wrapper over [`render_frame_parallel_in`] with a
+/// throwaway arena.
 pub fn render_frame_parallel(
     cloud: &GaussianCloud,
     camera: &Camera,
@@ -23,7 +26,24 @@ pub fn render_frame_parallel(
     backend: BackendKind,
     threads: usize,
 ) -> RenderOutput {
-    let plan = plan_frame(cloud, camera, cfg);
+    render_frame_parallel_in(&mut FrameArena::new(), cloud, camera, cfg, backend, threads)
+}
+
+/// [`render_frame_parallel`] with the frame plan's buffers cycled
+/// through `arena` (DESIGN.md §13): the plan is taken from the arena
+/// before the fan-out and retired after the composite, so a long-lived
+/// caller (a coordinator worker loop) plans every frame without
+/// allocating. The tile fan-out itself only *reads* the plan, so the
+/// arena stays on the planning thread.
+pub fn render_frame_parallel_in(
+    arena: &mut FrameArena,
+    cloud: &GaussianCloud,
+    camera: &Camera,
+    cfg: &RenderConfig,
+    backend: BackendKind,
+    threads: usize,
+) -> RenderOutput {
+    let plan = plan_frame_in(arena, cloud, camera, cfg);
 
     let t0 = Instant::now();
     let n_tiles = plan.grid.num_tiles();
@@ -96,7 +116,9 @@ pub fn render_frame_parallel(
     }
     let t_blend = t0.elapsed();
 
-    RenderOutput { image, timings: plan.timings(t_blend), stats: plan.stats() }
+    let out = RenderOutput { image, timings: plan.timings(t_blend), stats: plan.stats() };
+    arena.retire_plan(plan);
+    out
 }
 
 #[cfg(test)]

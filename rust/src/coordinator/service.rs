@@ -44,12 +44,13 @@ use super::request::{BackendKind, RenderRequest, RenderResponse};
 use crate::accel::AccelKind;
 use crate::math::Camera;
 use crate::model::request::{LifecycleCell, Outcome, Stage};
-use crate::pipeline::batch::render_frames;
+use crate::pipeline::arena::FrameArena;
+use crate::pipeline::batch::render_frames_in;
 use crate::pipeline::render::{FrameStats, Image, RenderConfig, StageTimings, TileBlend};
 use crate::pipeline::trajectory::{TrajectoryConfig, TrajectorySession};
 use crate::qos::{QosConfig, RungController};
 use crate::runtime::tiled_render::{
-    render_frames_tiled, render_frames_tiled_with_plans, TILED_ENTRY,
+    render_frames_tiled_in, render_frames_tiled_with_plans_in, TILED_ENTRY,
 };
 use crate::runtime::RuntimeClient;
 use crate::scene::gaussian::GaussianCloud;
@@ -285,8 +286,12 @@ struct ExecutedFrame {
 /// deep-copying a full frame per response. Stage timings are attributed
 /// to the first frame of each identical-pose group (zero for the
 /// duplicates), so coordinator-level sums never double-count.
+/// Plan buffers and host staging cycle through the worker's `arena`
+/// (DESIGN.md §13), so a warm worker executes batches allocation-free
+/// outside image storage.
 fn execute_batch(
     executor: &mut Executor,
+    arena: &mut FrameArena,
     cloud: &GaussianCloud,
     cameras: &[Camera],
     cfg: &RenderConfig,
@@ -303,8 +308,10 @@ fn execute_batch(
         }
     }
     let rendered = match executor {
-        Executor::Blender(blender) => render_frames(cloud, &unique, cfg, blender.as_mut()),
-        Executor::Tiled(client) => render_frames_tiled(client, cloud, &unique, cfg)?,
+        Executor::Blender(blender) => {
+            render_frames_in(arena, cloud, &unique, cfg, blender.as_mut())
+        }
+        Executor::Tiled(client) => render_frames_tiled_in(arena, client, cloud, &unique, cfg)?,
     };
     // move each unique image out once; duplicate poses share the Arc
     let shared: Vec<ExecutedFrame> = rendered
@@ -403,6 +410,7 @@ impl SessionCache {
 /// sessions against eviction.
 fn handle_session_job(
     executor: &mut Executor,
+    arena: &mut FrameArena,
     sessions: &mut SessionCache,
     catalog: &Arc<Catalog>,
     metrics: &Metrics,
@@ -487,12 +495,17 @@ fn handle_session_job(
         Executor::Blender(blender) => Ok(ws.session.render_next(&camera, blender.as_mut())),
         Executor::Tiled(client) => {
             let (plan, source) = ws.session.plan_next(&camera);
-            render_frames_tiled_with_plans(
+            let rendered = render_frames_tiled_with_plans_in(
+                arena,
                 client,
                 std::slice::from_ref(&plan),
                 ws.session.render_config(),
             )
-            .map(|mut outs| (outs.pop().expect("one plan in, one frame out"), source))
+            .map(|mut outs| (outs.pop().expect("one plan in, one frame out"), source));
+            // hand the consumed plan's buffers back to the session's
+            // own arena so the next frame plans allocation-free
+            ws.session.retire_plan(plan);
+            rendered
         }
     };
     match rendered {
@@ -526,6 +539,7 @@ fn handle_session_job(
 /// resulting latencies.
 fn handle_shared_batch(
     executor: &mut Executor,
+    arena: &mut FrameArena,
     catalog: &Arc<Catalog>,
     metrics: &Metrics,
     render_cfg: &RenderConfig,
@@ -645,7 +659,7 @@ fn handle_shared_batch(
     metrics.record_batch(live.len());
     let cfg = render_cfg.clone().with_accel(accel.instantiate());
     let t_exec = Instant::now();
-    match execute_batch(executor, &cloud, &cameras, &cfg) {
+    match execute_batch(executor, arena, &cloud, &cameras, &cfg) {
         Ok(outs) => {
             let per_frame = t_exec.elapsed() / live.len() as u32;
             if let Some(q) = qos.as_ref() {
@@ -809,6 +823,10 @@ impl Coordinator {
                     },
                 };
                 let mut sessions = SessionCache::new(max_sessions);
+                // one frame arena per worker (DESIGN.md §13): plan and
+                // staging buffers recycle across every batch and
+                // session frame this worker executes
+                let mut arena = FrameArena::new();
                 let mut worker_qos: Option<WorkerQos> = qos_cfg.map(WorkerQos::new);
                 let mut sticky_open = true;
                 loop {
@@ -822,6 +840,7 @@ impl Coordinator {
                             Ok(job) => {
                                 handle_session_job(
                                     &mut executor,
+                                    &mut arena,
                                     &mut sessions,
                                     &catalog,
                                     &metrics,
@@ -849,6 +868,7 @@ impl Coordinator {
                     match scheduler.poll_batch(wait) {
                         BatchPoll::Batch(batch) => handle_shared_batch(
                             &mut executor,
+                            &mut arena,
                             &catalog,
                             &metrics,
                             &render_cfg,
@@ -864,6 +884,7 @@ impl Coordinator {
                             match sticky_rx.recv_timeout(SESSION_POLL) {
                                 Ok(job) => handle_session_job(
                                     &mut executor,
+                                    &mut arena,
                                     &mut sessions,
                                     &catalog,
                                     &metrics,

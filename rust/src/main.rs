@@ -24,6 +24,10 @@
 //! gemm-gs bench-soak --scenes 6 [--zipf 1.1]
 //!                                   # multi-scene catalog sweep: Zipf scene mix vs
 //!                                   # memory budget (§11, EXPERIMENTS.md §Catalog)
+//! gemm-gs bench-gate [--quick] [--out BENCH_7.json] [--baseline BENCH_7.json]
+//!                [--tolerance 3.0] [--scale 0.004] [--seed 42]
+//!                                   # frame-planning perf gate vs a recorded
+//!                                   # baseline (EXPERIMENTS.md §Perf-trajectory)
 //! gemm-gs inspect [--scale 0.02]    # Table 1   (workload statistics)
 //! gemm-gs check-model [--seed 42] [--depth 7] [--steps 20000] [--fault none]
 //!                                   # lifecycle model checker (DESIGN.md §12)
@@ -132,8 +136,16 @@ impl Args {
 }
 
 fn main() {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
-    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+    let cmd = cmd.as_str();
+    // `bench-gate --quick` is the CLI's one boolean switch; the strict
+    // `--key value` parser would reject it, so it is stripped here
+    let quick = cmd == "bench-gate" && {
+        let before = argv.len();
+        argv.retain(|a| a != "--quick");
+        argv.len() != before
+    };
     let args = Args::parse(&argv[1.min(argv.len())..]);
     let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
 
@@ -197,6 +209,7 @@ fn main() {
             print!("{}", bench_harness::trajectory::render(&pts, &scene, frames, step));
         }
         "bench-soak" => cmd_bench_soak(&args),
+        "bench-gate" => cmd_bench_gate(&args, quick),
         "check-model" => cmd_check_model(&args),
         "export-ply" => cmd_export_ply(&args),
         "inspect" => cmd_inspect(scale),
@@ -211,7 +224,7 @@ fn main() {
 
 fn usage() {
     println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
-    println!("subcommands: render render-trajectory serve export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak inspect check-model");
+    println!("subcommands: render render-trajectory serve export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak bench-gate inspect check-model");
     println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
     println!("              --accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>");
     println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
@@ -223,6 +236,8 @@ fn usage() {
     println!("bench-soak:   --rate REQ_S --duration SECS --slo-ms MS --seed N --workers N");
     println!("              (rate 0 / slo-ms 0 auto-calibrate against the measured frame cost)");
     println!("              --scenes N --zipf S  (N ≥ 2: multi-scene catalog sweep, DESIGN.md §11)");
+    println!("bench-gate:   --quick --out PATH --baseline PATH --tolerance F --scale S --seed N");
+    println!("              (frame-planning perf gate vs a recorded BENCH_*.json baseline)");
     println!("check-model:  --seed N --depth D --steps N  (model checker, DESIGN.md §12)");
     println!("              --fault <none|drop-on-death|skip-starvation|lifo-redeliver|evict-pinned>");
 }
@@ -655,6 +670,69 @@ fn cmd_bench_soak(args: &Args) {
     if transport > 0 {
         eprintln!("gemm-gs: {transport} transport error(s) during soak — service unhealthy");
         std::process::exit(1);
+    }
+}
+
+/// `bench-gate` — measure the frame-planning hot path and gate it
+/// against a recorded baseline (EXPERIMENTS.md §Perf-trajectory).
+/// `--out PATH` writes the machine-readable report (`BENCH_7.json` at
+/// the repo root is the committed one); `--baseline PATH` diffs this
+/// run against a recorded report with `--tolerance` (default 3.0).
+/// Exit 0 when the gate passes (or no baseline was given), 1 on any
+/// regression or unreadable baseline, 2 on malformed flags.
+fn cmd_bench_gate(args: &Args, quick: bool) {
+    use gemm_gs::bench_harness::gate;
+
+    let scale = args.get_f64("scale", 0.004);
+    let seed = args.get_usize("seed", 42) as u64;
+    let tolerance = args.get_f64("tolerance", 3.0);
+    if !(tolerance >= 1.0 && tolerance.is_finite()) {
+        bail(&format!("flag --tolerance: {tolerance} (must be a finite factor ≥ 1)"));
+    }
+    let out_path = args.get("out", "");
+    let baseline_path = args.get("baseline", "");
+
+    // read and validate the baseline BEFORE the measurement: a missing
+    // file or stale schema should fail in milliseconds, not after the
+    // full sweep
+    let baseline = (!baseline_path.is_empty()).then(|| {
+        let text = std::fs::read_to_string(&baseline_path).unwrap_or_else(|e| {
+            eprintln!("gemm-gs: failed to read baseline '{baseline_path}': {e}");
+            std::process::exit(1);
+        });
+        gate::parse_report(&text).unwrap_or_else(|e| {
+            eprintln!("gemm-gs: baseline '{baseline_path}': {e}");
+            std::process::exit(1);
+        })
+    });
+
+    let report = gate::run(quick, scale, seed);
+    print!("{}", gate::render(&report));
+
+    if !out_path.is_empty() {
+        if let Err(e) = std::fs::write(&out_path, gate::to_json(&report)) {
+            eprintln!("gemm-gs: failed to write '{out_path}': {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {out_path}");
+    }
+
+    if let Some(baseline) = baseline {
+        let regressions = gate::compare(&report, &baseline, tolerance);
+        if regressions.is_empty() {
+            println!(
+                "perf gate PASSED against {baseline_path} (tolerance {tolerance}x)"
+            );
+        } else {
+            eprintln!(
+                "gemm-gs: perf gate FAILED against {baseline_path} \
+                 (tolerance {tolerance}x):"
+            );
+            for r in &regressions {
+                eprintln!("  regression: {r}");
+            }
+            std::process::exit(1);
+        }
     }
 }
 

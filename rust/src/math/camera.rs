@@ -89,7 +89,15 @@ impl Camera {
     /// World point → pixel coordinates + camera depth.
     /// Returns `None` when behind the near plane.
     pub fn project_point(&self, p: Vec3) -> Option<(f32, f32, f32)> {
-        let cam = self.to_camera(p);
+        self.project_camera_point(self.to_camera(p))
+    }
+
+    /// Camera-space point → pixel coordinates + camera depth. The
+    /// second half of [`project_point`](Self::project_point), split out
+    /// so callers that already hold the camera-space point (preprocess
+    /// computes it for the near cull and the EWA Jacobian) skip a
+    /// redundant view transform per Gaussian.
+    pub fn project_camera_point(&self, cam: Vec3) -> Option<(f32, f32, f32)> {
         if cam.z < self.znear {
             return None;
         }
@@ -418,6 +426,33 @@ mod tests {
         let mut bad_depth = cam;
         bad_depth.zfar = bad_depth.znear;
         assert!(bad_depth.validate().unwrap_err().contains("depth range"));
+    }
+
+    #[test]
+    fn project_camera_point_matches_project_point_bitwise() {
+        // preprocess projects from the hoisted camera-space point; the
+        // two entry points must agree to the bit, including cull
+        // decisions, over a sweep that crosses the near plane and the
+        // image borders
+        let cam = test_cam();
+        for ix in -20..=20 {
+            for iy in -8..=8 {
+                for iz in -8..=8 {
+                    let p = Vec3::new(ix as f32 * 0.7, iy as f32 * 0.9, iz as f32 * 1.3);
+                    let full = cam.project_point(p);
+                    let split = cam.project_camera_point(cam.to_camera(p));
+                    match (full, split) {
+                        (None, None) => {}
+                        (Some((ax, ay, az)), Some((bx, by, bz))) => {
+                            assert_eq!(ax.to_bits(), bx.to_bits(), "px differs at {p:?}");
+                            assert_eq!(ay.to_bits(), by.to_bits(), "py differs at {p:?}");
+                            assert_eq!(az.to_bits(), bz.to_bits(), "depth differs at {p:?}");
+                        }
+                        (a, b) => panic!("cull disagreement at {p:?}: {a:?} vs {b:?}"),
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! Per-worker frame arena (DESIGN.md §13): pooled scratch for the
+//! plan stages so steady-state rendering allocates nothing per frame.
+//!
+//! A [`FrameArena`] owns recycled [`Projected`] arrays, `Duplicated`
+//! key/value vectors, tile-range tables, sort scratch, and generic
+//! `u32`/`f32` staging buffers. The contract is take/retire:
+//!
+//! * `take_*` hands out a buffer **empty but with capacity retained**
+//!   from the previous frame — after a few frames at one resolution
+//!   every take is allocation-free.
+//! * `retire_*` (most callers go through [`FrameArena::retire_plan`])
+//!   returns the buffers of a consumed frame to the pools.
+//!
+//! Ownership rules: an arena belongs to exactly one thread (one
+//! coordinator worker, one `TrajectorySession`, one bench loop) — it is
+//! deliberately `!Sync`-shaped plumbing passed by `&mut`, never shared.
+//! Buffers are always cleared at take time, not retire time, so a
+//! poisoned retire cannot leak stale pairs into the next frame; the
+//! `tests/e2e_arena.rs` suite pins byte-identity across repeated reuse.
+
+use super::duplicate::Duplicated;
+use super::plan::FramePlan;
+use super::preprocess::Projected;
+use super::sort::SortScratch;
+
+/// Pooled per-frame scratch — see the module docs for the contract.
+#[derive(Debug, Default)]
+pub struct FrameArena {
+    projected: Vec<Projected>,
+    chunk_pool: Vec<Projected>,
+    u64s: Vec<Vec<u64>>,
+    u32s: Vec<Vec<u32>>,
+    ranges: Vec<Vec<(u32, u32)>>,
+    f32s: Vec<Vec<f32>>,
+    sort: SortScratch,
+}
+
+impl FrameArena {
+    /// An empty arena; pools grow to each buffer kind's high-water mark
+    /// on first use and stay there.
+    pub fn new() -> FrameArena {
+        FrameArena::default()
+    }
+
+    /// A cleared [`Projected`] for the preprocess stage.
+    pub fn take_projected(&mut self) -> Projected {
+        let mut p = self.projected.pop().unwrap_or_default();
+        p.clear();
+        p
+    }
+
+    /// A cleared [`Duplicated`] for the duplication stage (its key and
+    /// value vectors come from the `u64`/`u32` pools).
+    pub fn take_dup(&mut self) -> Duplicated {
+        let mut keys = self.u64s.pop().unwrap_or_default();
+        let mut values = self.u32s.pop().unwrap_or_default();
+        keys.clear();
+        values.clear();
+        Duplicated { keys, values }
+    }
+
+    /// A cleared tile-range table.
+    pub fn take_ranges(&mut self) -> Vec<(u32, u32)> {
+        let mut r = self.ranges.pop().unwrap_or_default();
+        r.clear();
+        r
+    }
+
+    /// A cleared `u32` staging buffer.
+    pub fn take_u32(&mut self) -> Vec<u32> {
+        let mut v = self.u32s.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// A cleared `u64` staging buffer.
+    pub fn take_u64(&mut self) -> Vec<u64> {
+        let mut v = self.u64s.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// A cleared `f32` staging buffer (the tiled executor's per-tile
+    /// colour/transmittance state and host staging rows).
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        let mut v = self.f32s.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return a [`Projected`] to the pool.
+    pub fn retire_projected(&mut self, p: Projected) {
+        self.projected.push(p);
+    }
+
+    /// Return a [`Duplicated`]'s vectors to the pools.
+    pub fn retire_dup(&mut self, d: Duplicated) {
+        self.u64s.push(d.keys);
+        self.u32s.push(d.values);
+    }
+
+    /// Return a tile-range table to the pool.
+    pub fn retire_ranges(&mut self, r: Vec<(u32, u32)>) {
+        self.ranges.push(r);
+    }
+
+    /// Return a `u32` staging buffer to the pool.
+    pub fn retire_u32(&mut self, v: Vec<u32>) {
+        self.u32s.push(v);
+    }
+
+    /// Return a `u64` staging buffer to the pool.
+    pub fn retire_u64(&mut self, v: Vec<u64>) {
+        self.u64s.push(v);
+    }
+
+    /// Return an `f32` staging buffer to the pool.
+    pub fn retire_f32(&mut self, v: Vec<f32>) {
+        self.f32s.push(v);
+    }
+
+    /// Reclaim every buffer of a consumed [`FramePlan`] — the one call
+    /// render loops make after blending, closing the take/retire cycle.
+    pub fn retire_plan(&mut self, plan: FramePlan) {
+        self.retire_projected(plan.projected);
+        self.retire_dup(plan.dup);
+        self.retire_ranges(plan.ranges);
+    }
+
+    /// The parallel-preprocess chunk pool
+    /// (`preprocess_into`'s `chunk_pool` argument).
+    pub fn chunk_pool_mut(&mut self) -> &mut Vec<Projected> {
+        &mut self.chunk_pool
+    }
+
+    /// The bucketed-sort scratch
+    /// (`bucket_sort_duplicated`'s `scratch` argument).
+    pub fn sort_scratch(&mut self) -> &mut SortScratch {
+        &mut self.sort
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_after_retire_reuses_capacity_cleared() {
+        let mut arena = FrameArena::new();
+        let mut dup = arena.take_dup();
+        dup.keys.extend_from_slice(&[1, 2, 3]);
+        dup.values.extend_from_slice(&[1, 2, 3]);
+        let key_cap = dup.keys.capacity();
+        arena.retire_dup(dup);
+
+        let dup = arena.take_dup();
+        assert!(dup.is_empty(), "recycled buffer must come back empty");
+        assert!(dup.keys.capacity() >= key_cap, "capacity must be retained");
+
+        let mut r = arena.take_ranges();
+        r.push((1, 2));
+        arena.retire_ranges(r);
+        assert!(arena.take_ranges().is_empty());
+
+        let mut p = arena.take_projected();
+        p.depths.push(1.0);
+        p.source.push(0);
+        arena.retire_projected(p);
+        assert!(arena.take_projected().is_empty());
+    }
+}

@@ -17,7 +17,8 @@
 //! [`super::render::render_frame`] sequentially with the same blender —
 //! coalescing is a scheduling optimization, never a numerical one.
 
-use super::plan::plan_frame;
+use super::arena::FrameArena;
+use super::plan::plan_frame_in;
 use super::render::{RenderConfig, RenderOutput, StageTimings, TileBlend};
 use crate::math::Camera;
 use crate::scene::gaussian::GaussianCloud;
@@ -25,12 +26,30 @@ use crate::scene::gaussian::GaussianCloud;
 /// Render one coalesced batch of frames over a single scene: one
 /// [`super::plan::FramePlan`] per *unique* pose, blended with the
 /// shared blender; duplicates of an earlier pose reuse its image.
+/// Convenience wrapper over [`render_frames_in`] with a throwaway
+/// arena; long-lived callers (the coordinator's workers) pass their own
+/// so plan buffers recycle across batches.
 ///
 /// Per-frame stage timings are attributed to the first frame of each
 /// group of identical cameras; its duplicates report zero stage time
 /// (their cost really was amortized away), so coordinator-level stage
 /// sums never double-count shared work.
 pub fn render_frames(
+    cloud: &GaussianCloud,
+    cameras: &[Camera],
+    cfg: &RenderConfig,
+    blender: &mut dyn TileBlend,
+) -> Vec<RenderOutput> {
+    render_frames_in(&mut FrameArena::new(), cloud, cameras, cfg, blender)
+}
+
+/// [`render_frames`] with plan buffers cycled through `arena`
+/// (DESIGN.md §13): each unique pose takes its plan buffers from the
+/// arena and retires them right after its blend, so a batch needs one
+/// plan's worth of scratch regardless of length — and a warm arena
+/// makes the whole batch allocation-free outside image storage.
+pub fn render_frames_in(
+    arena: &mut FrameArena,
     cloud: &GaussianCloud,
     cameras: &[Camera],
     cfg: &RenderConfig,
@@ -44,13 +63,14 @@ pub fn render_frames(
             outputs.push(RenderOutput { image, timings: StageTimings::default(), stats });
             continue;
         }
-        let plan = plan_frame(cloud, camera, cfg);
+        let plan = plan_frame_in(arena, cloud, camera, cfg);
         let (image, t_blend) = plan.blend_serial(cfg, blender);
         outputs.push(RenderOutput {
             image,
             timings: plan.timings(t_blend),
             stats: plan.stats(),
         });
+        arena.retire_plan(plan);
     }
     outputs
 }

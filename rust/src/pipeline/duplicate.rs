@@ -28,6 +28,14 @@ impl Duplicated {
     pub fn is_empty(&self) -> bool {
         self.keys.is_empty()
     }
+
+    /// Empty both arrays, retaining capacity — the arena-reuse reset
+    /// (DESIGN.md §13), mirroring
+    /// [`Projected::clear`](super::preprocess::Projected::clear).
+    pub fn clear(&mut self) {
+        self.keys.clear();
+        self.values.clear();
+    }
 }
 
 /// Monotone mapping of a positive-depth `f32` onto `u32` so integer key
@@ -63,19 +71,65 @@ pub fn duplicate_with_mask(
     tile_mask: Option<&dyn Fn(&Projected, usize, u32, u32) -> bool>,
 ) -> Duplicated {
     let mut out = Duplicated::default();
-    // conservative reservation: most splats touch 1–4 tiles
-    out.keys.reserve(projected.len() * 4);
-    out.values.reserve(projected.len() * 4);
+    duplicate_with_mask_into(projected, grid, tile_mask, &mut out);
+    out
+}
+
+/// [`duplicate_with_mask`] into a caller-owned (arena-recycled) buffer:
+/// `out` is cleared and refilled with capacity retained. Dispatches
+/// once on the veto's presence to a monomorphized emission loop — the
+/// per-pair `dyn` indirection the trait-object signature implies never
+/// runs inside the hot loop.
+pub fn duplicate_with_mask_into(
+    projected: &Projected,
+    grid: &TileGrid,
+    tile_mask: Option<&dyn Fn(&Projected, usize, u32, u32) -> bool>,
+    out: &mut Duplicated,
+) {
+    match tile_mask {
+        // the no-veto fast path keeps the inner loop branch-free
+        None => duplicate_impl(projected, grid, |_, _, _, _| true, out),
+        Some(mask) => duplicate_impl(projected, grid, mask, out),
+    }
+}
+
+/// Duplication with a *statically dispatched* veto: callers that own a
+/// concrete closure (the plan stage wrapping `AccelMethod::keep_pair`)
+/// get an emission loop monomorphized over it instead of paying a
+/// `dyn` call per (Gaussian, tile) pair.
+pub fn duplicate_with_veto<F: Fn(&Projected, usize, u32, u32) -> bool>(
+    projected: &Projected,
+    grid: &TileGrid,
+    keep: F,
+    out: &mut Duplicated,
+) {
+    duplicate_impl(projected, grid, keep, out)
+}
+
+/// The monomorphized emission loop. An exact rect-count prepass sizes
+/// the reservation (replacing the old blanket 4× guess): exact with no
+/// veto, an upper bound with one — either way a single allocation on a
+/// cold buffer and none on a warm one.
+fn duplicate_impl<F: Fn(&Projected, usize, u32, u32) -> bool>(
+    projected: &Projected,
+    grid: &TileGrid,
+    keep: F,
+    out: &mut Duplicated,
+) {
+    out.clear();
+    let mut pairs = 0usize;
     for i in 0..projected.len() {
-        let rect = grid.tile_rect(projected.means2d[i], projected.radii[i]);
-        let (x0, x1, y0, y1) = rect;
+        pairs += grid.rect_count(grid.tile_rect(projected.means2d[i], projected.radii[i]));
+    }
+    out.keys.reserve(pairs);
+    out.values.reserve(pairs);
+    for i in 0..projected.len() {
+        let (x0, x1, y0, y1) = grid.tile_rect(projected.means2d[i], projected.radii[i]);
         let db = depth_bits(projected.depths[i]) as u64;
         for ty in y0..y1 {
             for tx in x0..x1 {
-                if let Some(mask) = tile_mask {
-                    if !mask(projected, i, tx, ty) {
-                        continue;
-                    }
+                if !keep(projected, i, tx, ty) {
+                    continue;
                 }
                 let key = ((grid.tile_id(tx, ty) as u64) << 32) | db;
                 out.keys.push(key);
@@ -83,7 +137,6 @@ pub fn duplicate_with_mask(
             }
         }
     }
-    out
 }
 
 /// Vanilla duplication (rectangle overlap, no veto).

@@ -7,6 +7,7 @@
 //! structure across a coherent camera path.
 #![warn(missing_docs)]
 
+pub mod arena;
 pub mod batch;
 pub mod blend_gemm;
 pub mod blend_vanilla;
@@ -18,8 +19,9 @@ pub mod sort;
 pub mod tile;
 pub mod trajectory;
 
+pub use arena::FrameArena;
 pub use batch::render_frames;
-pub use plan::{plan_frame, plan_frame_masked, FramePlan};
+pub use plan::{plan_frame, plan_frame_in, plan_frame_masked, FramePlan};
 pub use preprocess::{preprocess, Projected, PreprocessConfig};
 pub use render::{render_frame, Blender, RenderConfig, RenderOutput, StageTimings};
 pub use tile::TileGrid;

@@ -19,10 +19,13 @@
 //! (§4 invariant 3): every consumer sees the same pair multiset, so
 //! image differences can only come from the blend stage itself.
 
-use super::duplicate::{duplicate_with_mask, Duplicated};
-use super::preprocess::{preprocess, Projected};
+use super::arena::FrameArena;
+use super::duplicate::{
+    duplicate_with_mask, duplicate_with_mask_into, duplicate_with_veto, Duplicated,
+};
+use super::preprocess::{preprocess, preprocess_into, Projected};
+use super::sort::{bucket_sort_duplicated, sort_duplicated, tile_ranges};
 use super::render::{FrameStats, Image, RenderConfig, StageTimings, TileBlend};
-use super::sort::{sort_duplicated, tile_ranges};
 use super::tile::TileGrid;
 use super::{TILE_PIXELS, TILE_SIZE};
 use crate::math::Camera;
@@ -56,10 +59,29 @@ pub struct FramePlan {
 
 /// Plan one frame under `cfg`: preprocessing, the configured
 /// acceleration method's pair veto (`cfg.accel`), duplication, sorting,
-/// and tile ranges, with per-stage timings.
+/// and tile ranges, with per-stage timings. Convenience wrapper over
+/// [`plan_frame_in`] with a throwaway arena — steady-state render loops
+/// should hold their own [`FrameArena`] and call [`plan_frame_in`]
+/// directly so per-frame buffers are recycled instead of reallocated.
 pub fn plan_frame(cloud: &GaussianCloud, camera: &Camera, cfg: &RenderConfig) -> FramePlan {
-    let (grid, projected, dup, t_preprocess, t_duplicate) = plan_stages(cloud, camera, cfg);
-    finish_plan(grid, *camera, projected, dup, cloud.len(), t_preprocess, t_duplicate)
+    plan_frame_in(&mut FrameArena::new(), cloud, camera, cfg)
+}
+
+/// [`plan_frame`] with every stage buffer taken from (and the sort
+/// scratch borrowed from) `arena` — the allocation-free steady state
+/// (DESIGN.md §13). Callers retire the plan back via
+/// [`FrameArena::retire_plan`] once it is blended. Output is byte
+/// identical to [`plan_frame`] — the arena only changes where buffers
+/// come from, never what goes into them.
+pub fn plan_frame_in(
+    arena: &mut FrameArena,
+    cloud: &GaussianCloud,
+    camera: &Camera,
+    cfg: &RenderConfig,
+) -> FramePlan {
+    let (grid, projected, dup, t_preprocess, t_duplicate) =
+        plan_stages_in(arena, cloud, camera, cfg);
+    finish_plan_in(arena, grid, *camera, projected, dup, cloud.len(), t_preprocess, t_duplicate)
 }
 
 /// Stages 1–2 of one frame under `cfg`, individually timed: the
@@ -72,16 +94,33 @@ pub fn plan_stages(
     camera: &Camera,
     cfg: &RenderConfig,
 ) -> (TileGrid, Projected, Duplicated, Duration, Duration) {
+    plan_stages_in(&mut FrameArena::new(), cloud, camera, cfg)
+}
+
+/// [`plan_stages`] with the output buffers taken from `arena`.
+pub fn plan_stages_in(
+    arena: &mut FrameArena,
+    cloud: &GaussianCloud,
+    camera: &Camera,
+    cfg: &RenderConfig,
+) -> (TileGrid, Projected, Duplicated, Duration, Duration) {
     let grid = TileGrid::new(camera.width, camera.height);
 
     // Stage 1 — preprocessing
     let t0 = Instant::now();
-    let projected = preprocess(cloud, camera, &cfg.preprocess);
+    let mut projected = arena.take_projected();
+    {
+        // split borrows: the output buffer is already out of the arena,
+        // only the chunk pool is borrowed during the fill
+        let cfg_pre = &cfg.preprocess;
+        preprocess_into(cloud, camera, cfg_pre, &mut projected, arena.chunk_pool_mut());
+    }
     let t_preprocess = t0.elapsed();
 
     // Stage 2 — duplication (with `cfg.accel`'s pair veto)
     let t0 = Instant::now();
-    let dup = duplicate_for_cfg(&projected, &grid, cfg);
+    let mut dup = arena.take_dup();
+    duplicate_for_cfg_into(&projected, &grid, cfg, &mut dup);
     let t_duplicate = t0.elapsed();
 
     (grid, projected, dup, t_preprocess, t_duplicate)
@@ -121,14 +160,30 @@ pub fn duplicate_for_cfg(
     grid: &TileGrid,
     cfg: &RenderConfig,
 ) -> Duplicated {
+    let mut out = Duplicated::default();
+    duplicate_for_cfg_into(projected, grid, cfg, &mut out);
+    out
+}
+
+/// [`duplicate_for_cfg`] into a caller-owned (arena-recycled) buffer.
+pub fn duplicate_for_cfg_into(
+    projected: &Projected,
+    grid: &TileGrid,
+    cfg: &RenderConfig,
+    out: &mut Duplicated,
+) {
     if cfg.accel.vetoes_pairs() {
         let accel = &cfg.accel;
-        let mask = move |p: &Projected, i: usize, tx: u32, ty: u32| {
-            accel.keep_pair(p, i, tx, ty, grid)
-        };
-        duplicate_with_mask(projected, grid, Some(&mask))
+        // statically dispatched: the emission loop is monomorphized
+        // over this closure, not a per-pair `dyn` call
+        duplicate_with_veto(
+            projected,
+            grid,
+            move |p: &Projected, i: usize, tx: u32, ty: u32| accel.keep_pair(p, i, tx, ty, grid),
+            out,
+        )
     } else {
-        duplicate_with_mask(projected, grid, None)
+        duplicate_with_mask_into(projected, grid, None, out)
     }
 }
 
@@ -137,6 +192,11 @@ pub fn duplicate_for_cfg(
 /// `pipeline::trajectory` can finish a plan from stages it ran itself
 /// (it needs the pre-sort emission order, which [`plan_frame`]
 /// discards).
+///
+/// This is the *reference* finish: global stable comparison sort plus a
+/// separate range scan, exactly the pre-arena planner. The hot path is
+/// [`finish_plan_in`] (tile-bucketed counting sort, ranges from the
+/// histogram); `tests/e2e_arena.rs` pins the two byte-identical.
 pub fn finish_plan(
     grid: TileGrid,
     camera: Camera,
@@ -149,6 +209,40 @@ pub fn finish_plan(
     let t0 = Instant::now();
     sort_duplicated(&mut dup);
     let ranges = tile_ranges(&dup.keys, grid.num_tiles());
+    let t_sort = t0.elapsed();
+
+    FramePlan {
+        grid,
+        camera,
+        projected,
+        dup,
+        ranges,
+        n_gaussians,
+        t_preprocess,
+        t_duplicate,
+        t_sort,
+    }
+}
+
+/// [`finish_plan`] on the arena hot path: stage 3 runs the
+/// tile-bucketed counting sort
+/// ([`bucket_sort_duplicated`](super::sort::bucket_sort_duplicated)),
+/// which yields the tile-range table from its histogram instead of a
+/// second full key scan, with scratch and the range table recycled
+/// through `arena`. Byte-identical to [`finish_plan`].
+pub fn finish_plan_in(
+    arena: &mut FrameArena,
+    grid: TileGrid,
+    camera: Camera,
+    projected: Projected,
+    mut dup: Duplicated,
+    n_gaussians: usize,
+    t_preprocess: Duration,
+    t_duplicate: Duration,
+) -> FramePlan {
+    let t0 = Instant::now();
+    let mut ranges = arena.take_ranges();
+    bucket_sort_duplicated(&mut dup, grid.num_tiles(), arena.sort_scratch(), &mut ranges);
     let t_sort = t0.elapsed();
 
     FramePlan {

@@ -18,11 +18,19 @@ pub struct PreprocessConfig {
     pub frustum_guard: f32,
     /// Near-plane cull distance (official: 0.2).
     pub near: f32,
+    /// Worker threads for the projection loop (DESIGN.md §13). `1`
+    /// (the default) runs serially; larger values split the cloud into
+    /// contiguous index chunks projected in parallel and stitched back
+    /// in chunk order, which keeps the output bitwise identical to the
+    /// serial loop. Defaults to 1 because the coordinator already runs
+    /// one planner per worker thread — nested parallelism there would
+    /// oversubscribe cores.
+    pub threads: usize,
 }
 
 impl Default for PreprocessConfig {
     fn default() -> Self {
-        PreprocessConfig { lowpass: 0.3, frustum_guard: 1.3, near: 0.2 }
+        PreprocessConfig { lowpass: 0.3, frustum_guard: 1.3, near: 0.2, threads: 1 }
     }
 }
 
@@ -58,6 +66,46 @@ impl Projected {
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.means2d.is_empty()
+    }
+
+    /// Empty every column, retaining capacity — the arena-reuse reset
+    /// (DESIGN.md §13). A recycled `Projected` must never leak entries
+    /// from the previous frame, so this is the one sanctioned way to
+    /// prepare one for refilling.
+    pub fn clear(&mut self) {
+        self.means2d.clear();
+        self.conics.clear();
+        self.depths.clear();
+        self.radii.clear();
+        self.colors.clear();
+        self.opacities.clear();
+        self.source.clear();
+    }
+
+    /// Reserve room for `n` more Gaussians in every column.
+    pub fn reserve(&mut self, n: usize) {
+        self.means2d.reserve(n);
+        self.conics.reserve(n);
+        self.depths.reserve(n);
+        self.radii.reserve(n);
+        self.colors.reserve(n);
+        self.opacities.reserve(n);
+        self.source.reserve(n);
+    }
+
+    /// Move every entry of `chunk` onto the end of `self`, preserving
+    /// order; `chunk` is left empty with its capacity retained (the
+    /// parallel-preprocess stitch, and the reason chunk buffers can
+    /// live in a [`FrameArena`](crate::pipeline::arena::FrameArena)
+    /// pool).
+    pub fn append(&mut self, chunk: &mut Projected) {
+        self.means2d.append(&mut chunk.means2d);
+        self.conics.append(&mut chunk.conics);
+        self.depths.append(&mut chunk.depths);
+        self.radii.append(&mut chunk.radii);
+        self.colors.append(&mut chunk.colors);
+        self.opacities.append(&mut chunk.opacities);
+        self.source.append(&mut chunk.source);
     }
 }
 
@@ -101,23 +149,78 @@ pub fn project_covariance(
 /// Run preprocessing over a cloud for one camera.
 pub fn preprocess(cloud: &GaussianCloud, camera: &Camera, cfg: &PreprocessConfig) -> Projected {
     let mut out = Projected::default();
-    let n = cloud.len();
-    out.means2d.reserve(n);
-    out.conics.reserve(n);
-    out.depths.reserve(n);
-    out.radii.reserve(n);
-    out.colors.reserve(n);
-    out.opacities.reserve(n);
-    out.source.reserve(n);
+    let mut pool = Vec::new();
+    preprocess_into(cloud, camera, cfg, &mut out, &mut pool);
+    out
+}
 
+/// [`preprocess`] into caller-owned buffers: `out` is cleared and
+/// refilled (capacity retained), and — when `cfg.threads > 1` — the
+/// parallel chunk buffers are taken from and returned to `chunk_pool`.
+/// This is the allocation-free steady-state entry point the
+/// [`FrameArena`](crate::pipeline::arena::FrameArena) plan path uses;
+/// output is bitwise identical to [`preprocess`] for any thread count
+/// (contiguous chunks, stitched in index order).
+pub fn preprocess_into(
+    cloud: &GaussianCloud,
+    camera: &Camera,
+    cfg: &PreprocessConfig,
+    out: &mut Projected,
+    chunk_pool: &mut Vec<Projected>,
+) {
+    out.clear();
+    let n = cloud.len();
     let cam_origin = camera.position();
-    for i in 0..n {
+    // below ~4k Gaussians the spawn overhead dominates any win
+    if cfg.threads <= 1 || n < 4096 {
+        out.reserve(n);
+        preprocess_range(cloud, camera, cfg, cam_origin, 0..n, out);
+        return;
+    }
+    let threads = cfg.threads.min(n);
+    while chunk_pool.len() < threads {
+        chunk_pool.push(Projected::default());
+    }
+    let per = crate::math::util::div_ceil(n, threads);
+    std::thread::scope(|scope| {
+        for (t, chunk) in chunk_pool.iter_mut().take(threads).enumerate() {
+            let range = (t * per)..(((t + 1) * per).min(n));
+            scope.spawn(move || {
+                chunk.clear();
+                chunk.reserve(range.len());
+                preprocess_range(cloud, camera, cfg, cam_origin, range, chunk);
+            });
+        }
+    });
+    // order-preserving stitch: chunk t holds indices [t·per, (t+1)·per),
+    // so appending in t order reproduces the serial sequence exactly
+    out.reserve(chunk_pool.iter().take(threads).map(Projected::len).sum());
+    for chunk in chunk_pool.iter_mut().take(threads) {
+        out.append(chunk);
+    }
+}
+
+/// The projection loop body over one contiguous index range — shared by
+/// the serial path and every parallel chunk, so the two paths cannot
+/// diverge numerically.
+fn preprocess_range(
+    cloud: &GaussianCloud,
+    camera: &Camera,
+    cfg: &PreprocessConfig,
+    cam_origin: Vec3,
+    range: std::ops::Range<usize>,
+    out: &mut Projected,
+) {
+    for i in range {
         let pos = cloud.positions[i];
         let cam = camera.to_camera(pos);
         if cam.z < cfg.near {
             continue; // behind near plane
         }
-        let Some((px, py, depth)) = camera.project_point(pos) else {
+        // project from the camera-space point already computed for the
+        // cull (and reused below by the EWA Jacobian) — one view
+        // transform per Gaussian, not two
+        let Some((px, py, depth)) = camera.project_camera_point(cam) else {
             continue;
         };
 
@@ -157,7 +260,6 @@ pub fn preprocess(cloud: &GaussianCloud, camera: &Camera, cfg: &PreprocessConfig
         out.opacities.push(cloud.opacities[i]);
         out.source.push(i as u32);
     }
-    out
 }
 
 #[cfg(test)]
@@ -257,6 +359,75 @@ mod tests {
         let rn = preprocess(&near, &cam(), &cfg).radii[0];
         let rf = preprocess(&far, &cam(), &cfg).radii[0];
         assert!(rn > rf, "near={rn} far={rf}");
+    }
+
+    fn scatter_cloud(n: usize) -> GaussianCloud {
+        // deterministic LCG scatter in front of the camera, with some
+        // points behind / off-screen so every cull branch is exercised
+        let mut c = GaussianCloud::with_capacity(n, 0);
+        let mut s = 0x2545F4914F6CDD1Du64;
+        let mut next = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        for _ in 0..n {
+            let pos = Vec3::new(next() * 20.0, next() * 12.0, next() * 16.0);
+            let scale = Vec3::new(
+                0.02 + next().abs() * 0.3,
+                0.02 + next().abs() * 0.3,
+                0.02 + next().abs() * 0.3,
+            );
+            c.push(pos, scale, Quat::IDENTITY, 0.5 + next().abs(), &[[0.5, 0.4, 0.3]]);
+        }
+        c
+    }
+
+    fn assert_projected_bitwise_eq(a: &Projected, b: &Projected) {
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.source, b.source);
+        assert_eq!(a.radii.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   b.radii.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        assert_eq!(a.depths.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   b.depths.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        for i in 0..a.len() {
+            assert_eq!(a.means2d[i].x.to_bits(), b.means2d[i].x.to_bits());
+            assert_eq!(a.means2d[i].y.to_bits(), b.means2d[i].y.to_bits());
+            for k in 0..3 {
+                assert_eq!(a.conics[i][k].to_bits(), b.conics[i][k].to_bits());
+            }
+            assert_eq!(a.colors[i].x.to_bits(), b.colors[i].x.to_bits());
+            assert_eq!(a.colors[i].y.to_bits(), b.colors[i].y.to_bits());
+            assert_eq!(a.colors[i].z.to_bits(), b.colors[i].z.to_bits());
+            assert_eq!(a.opacities[i].to_bits(), b.opacities[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn parallel_preprocess_matches_serial_bitwise() {
+        let cloud = scatter_cloud(6000); // above the 4096 parallel threshold
+        let camera = cam();
+        let serial = preprocess(&cloud, &camera, &PreprocessConfig::default());
+        for threads in [2, 3, 8] {
+            let cfg = PreprocessConfig { threads, ..PreprocessConfig::default() };
+            let par = preprocess(&cloud, &camera, &cfg);
+            assert_projected_bitwise_eq(&serial, &par);
+        }
+    }
+
+    #[test]
+    fn preprocess_into_reuse_matches_fresh() {
+        // a recycled output buffer (and chunk pool) must not poison the
+        // next frame with stale entries
+        let big = scatter_cloud(6000);
+        let small = one_gaussian_cloud(Vec3::ZERO, Vec3::splat(0.1));
+        let camera = cam();
+        let cfg = PreprocessConfig { threads: 4, ..PreprocessConfig::default() };
+        let mut out = Projected::default();
+        let mut pool = Vec::new();
+        preprocess_into(&big, &camera, &cfg, &mut out, &mut pool);
+        assert!(out.len() > 100);
+        preprocess_into(&small, &camera, &cfg, &mut out, &mut pool);
+        assert_projected_bitwise_eq(&preprocess(&small, &camera, &cfg), &out);
     }
 
     #[test]

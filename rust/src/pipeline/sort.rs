@@ -55,15 +55,22 @@ pub fn radix_sort_pairs(keys: &mut Vec<u64>, values: &mut Vec<u32>) {
     }
 }
 
-/// Sort a [`Duplicated`] list in place.
+/// Sort a [`Duplicated`] list in place — the reference comparison sort.
 ///
-/// §Perf: on this CPU testbed the LSD radix sort measures 0.5–0.8× of
-/// std's pdqsort (random-scatter writes thrash the cache; GPUs hide
-/// this with massive parallelism — CUB radix remains the right choice
-/// there). The pipeline therefore uses the comparison sort; the radix
-/// implementation stays as the GPU-structural analogue, exercised by
-/// tests and `cargo bench --bench micro_sort`. Both are stable w.r.t.
-/// the (tile, depth) key, so results are identical.
+/// §Perf: the planner's hot path no longer calls this — it uses
+/// [`bucket_sort_duplicated`], which exploits what a generic sort
+/// cannot: the high 32 bits are tile ids over a small known range
+/// (`grid.num_tiles()`), so one counting pass buckets the pairs and
+/// yields the tile ranges for free, leaving only short cache-resident
+/// per-bucket sorts of the 32-bit depth bits. On this CPU testbed the
+/// three-way `cargo bench --bench micro_sort` comparison measures
+/// tile-bucket fastest, std's pdqsort next, and the LSD radix sort at
+/// 0.5–0.8× of pdqsort (random-scatter writes thrash the cache; GPUs
+/// hide this with massive parallelism — CUB radix remains the right
+/// choice there). This comparison sort stays as the reference the
+/// byte-identity tests pin against; the radix implementation stays as
+/// the GPU-structural analogue. All three are stable w.r.t. the
+/// (tile, depth) key, so results are identical.
 pub fn sort_duplicated(dup: &mut Duplicated) {
     let n = dup.keys.len();
     if n <= 1 {
@@ -79,6 +86,86 @@ pub fn sort_duplicated(dup: &mut Duplicated) {
     }
     dup.keys = keys;
     dup.values = values;
+}
+
+/// Reusable scratch for [`bucket_sort_duplicated`] — lives in a
+/// [`FrameArena`](crate::pipeline::arena::FrameArena) so steady-state
+/// sorting allocates nothing. Holds the (key, value) staging buffer for
+/// the scatter pass and the per-tile cursor table; both grow to the
+/// high-water mark and stay there.
+#[derive(Debug, Default)]
+pub struct SortScratch {
+    pairs: Vec<(u64, u32)>,
+    cursors: Vec<u32>,
+}
+
+/// Tile-bucketed counting sort of a [`Duplicated`] list, producing the
+/// per-tile ranges as a by-product (DESIGN.md §13).
+///
+/// The key's high 32 bits are tile ids in `0..num_tiles` — a small
+/// dense range — so instead of comparison-sorting 64-bit keys globally:
+/// histogram over tile ids, exclusive prefix sum (which *is* the
+/// `tile_ranges` table, skipping the second full scan the old path
+/// did), stable scatter into bucket order, then a short cache-resident
+/// sort of each bucket on the 32-bit depth bits.
+///
+/// Byte-identity with the stable [`sort_duplicated`] + [`tile_ranges`]
+/// pair: the scatter preserves emission order within a bucket, and
+/// within one tile emission order is ascending Gaussian index with each
+/// index emitted at most once — so equal depth keys carry strictly
+/// ascending values, and `sort_unstable_by_key` on `(depth_bits,
+/// value)` reproduces the stable order exactly. `ranges` is cleared and
+/// refilled; tiles with no pairs get `(0, 0)` like [`tile_ranges`].
+pub fn bucket_sort_duplicated(
+    dup: &mut Duplicated,
+    num_tiles: usize,
+    scratch: &mut SortScratch,
+    ranges: &mut Vec<(u32, u32)>,
+) {
+    ranges.clear();
+    ranges.resize(num_tiles, (0u32, 0u32));
+    let n = dup.keys.len();
+    debug_assert_eq!(n, dup.values.len());
+    if n == 0 {
+        return;
+    }
+    // histogram over tile ids
+    scratch.cursors.clear();
+    scratch.cursors.resize(num_tiles, 0);
+    for &k in &dup.keys {
+        scratch.cursors[key_tile(k) as usize] += 1;
+    }
+    // exclusive prefix sum: cursors become write starts, and the
+    // (start, start + count) pairs are exactly the tile-range table
+    let mut start = 0u32;
+    for (t, cursor) in scratch.cursors.iter_mut().enumerate() {
+        let count = *cursor;
+        *cursor = start;
+        if count > 0 {
+            ranges[t] = (start, start + count);
+        }
+        start += count;
+    }
+    // stable scatter into bucket order (emission order kept per tile)
+    scratch.pairs.clear();
+    scratch.pairs.resize(n, (0, 0));
+    for i in 0..n {
+        let t = key_tile(dup.keys[i]) as usize;
+        scratch.pairs[scratch.cursors[t] as usize] = (dup.keys[i], dup.values[i]);
+        scratch.cursors[t] += 1;
+    }
+    // short per-bucket sorts on the low 32 depth bits; skip buckets
+    // that arrive already ordered (common under coherent motion)
+    for &(s, e) in ranges.iter() {
+        let bucket = &mut scratch.pairs[s as usize..e as usize];
+        if !bucket.windows(2).all(|w| (w[0].0 as u32, w[0].1) <= (w[1].0 as u32, w[1].1)) {
+            bucket.sort_unstable_by_key(|&(k, v)| (k as u32, v));
+        }
+    }
+    for (i, &(k, v)) in scratch.pairs.iter().enumerate() {
+        dup.keys[i] = k;
+        dup.values[i] = v;
+    }
 }
 
 /// Per-tile `[start, end)` ranges into the sorted pair list.
@@ -179,6 +266,64 @@ mod tests {
     fn ranges_empty_input() {
         let ranges = tile_ranges(&[], 4);
         assert!(ranges.iter().all(|&r| r == (0, 0)));
+    }
+
+    /// Emission-shaped pair list: for each Gaussian index in order, a
+    /// run of ascending tile ids sharing one depth — the exact order
+    /// `duplicate` produces, including deliberate depth-key collisions
+    /// (small depth palette) so stability is actually load-bearing.
+    fn emission_pairs(n_gaussians: usize, num_tiles: u64, seed: u64) -> Duplicated {
+        let mut rng = Rng::new(seed);
+        let mut dup = Duplicated::default();
+        let palette = [0.25f32, 0.5, 1.0, 2.0, 4.0, 8.0];
+        for i in 0..n_gaussians as u32 {
+            let depth =
+                super::super::duplicate::depth_bits(palette[(rng.next_u64() % 6) as usize]);
+            let t0 = rng.next_u64() % num_tiles;
+            let span = 1 + rng.next_u64() % 4;
+            for t in t0..(t0 + span).min(num_tiles) {
+                dup.keys.push((t << 32) | depth as u64);
+                dup.values.push(i);
+            }
+        }
+        dup
+    }
+
+    #[test]
+    fn bucket_sort_matches_reference_bitwise() {
+        for (n, tiles, seed) in [(0usize, 16u64, 1u64), (1, 16, 2), (700, 40, 3), (3000, 9, 4)] {
+            let dup = emission_pairs(n, tiles, seed);
+            let mut reference = dup.clone();
+            sort_duplicated(&mut reference);
+            let ref_ranges = tile_ranges(&reference.keys, tiles as usize);
+
+            let mut bucketed = dup.clone();
+            let mut scratch = SortScratch::default();
+            let mut ranges = Vec::new();
+            bucket_sort_duplicated(&mut bucketed, tiles as usize, &mut scratch, &mut ranges);
+            assert_eq!(bucketed.keys, reference.keys, "keys diverge (n={n} tiles={tiles})");
+            assert_eq!(bucketed.values, reference.values, "values diverge (n={n})");
+            assert_eq!(ranges, ref_ranges, "ranges diverge (n={n} tiles={tiles})");
+        }
+    }
+
+    #[test]
+    fn bucket_sort_scratch_reuse_is_clean() {
+        // big frame, then a small one through the SAME scratch + ranges:
+        // stale cursors/pairs/ranges must not leak through
+        let mut scratch = SortScratch::default();
+        let mut ranges = Vec::new();
+        let mut big = emission_pairs(2000, 64, 7);
+        bucket_sort_duplicated(&mut big, 64, &mut scratch, &mut ranges);
+
+        let small = emission_pairs(37, 12, 8);
+        let mut reference = small.clone();
+        sort_duplicated(&mut reference);
+        let mut bucketed = small;
+        bucket_sort_duplicated(&mut bucketed, 12, &mut scratch, &mut ranges);
+        assert_eq!(bucketed.keys, reference.keys);
+        assert_eq!(bucketed.values, reference.values);
+        assert_eq!(ranges, tile_ranges(&reference.keys, 12));
     }
 
     #[test]

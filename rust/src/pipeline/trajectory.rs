@@ -36,8 +36,9 @@
 //! and verifying near-sortedness of an already-sorted list is O(P)
 //! versus the cold comparison sort's O(P log P).
 
+use super::arena::FrameArena;
 use super::duplicate::{depth_bits, key_tile, Duplicated};
-use super::plan::{finish_plan, plan_stages, FramePlan};
+use super::plan::{finish_plan_in, plan_stages_in, FramePlan};
 use super::preprocess::Projected;
 use super::render::{RenderConfig, RenderOutput, TileBlend};
 use crate::math::Camera;
@@ -155,12 +156,31 @@ pub struct TrajectorySession {
     tcfg: TrajectoryConfig,
     prev: Option<PrevFrame>,
     stats: TrajectoryStats,
+    /// Per-session scratch (DESIGN.md §13): plan buffers, the previous
+    /// frame's structure, and the warm-path staging vectors all cycle
+    /// through here, so a steady warm session allocates nothing.
+    arena: FrameArena,
 }
 
 impl TrajectorySession {
     /// New session over `cloud` with the render and reuse configuration.
     pub fn new(cloud: Arc<GaussianCloud>, cfg: RenderConfig, tcfg: TrajectoryConfig) -> Self {
-        TrajectorySession { cloud, cfg, tcfg, prev: None, stats: TrajectoryStats::default() }
+        TrajectorySession {
+            cloud,
+            cfg,
+            tcfg,
+            prev: None,
+            stats: TrajectoryStats::default(),
+            arena: FrameArena::new(),
+        }
+    }
+
+    /// Return a consumed plan's buffers to the session arena
+    /// ([`render_next`](Self::render_next) does this itself; callers
+    /// that blend [`plan_next`](Self::plan_next)'s plan externally —
+    /// the coordinator's tiled executor — retire here when done).
+    pub fn retire_plan(&mut self, plan: FramePlan) {
+        self.arena.retire_plan(plan);
     }
 
     /// Lifetime counters.
@@ -175,9 +195,15 @@ impl TrajectorySession {
         &self.cfg
     }
 
-    /// Drop the warm state; the next frame plans cold.
+    /// Drop the warm state; the next frame plans cold. The remembered
+    /// buffers return to the session arena.
     pub fn reset(&mut self) {
-        self.prev = None;
+        if let Some(old) = self.prev.take() {
+            self.arena.retire_ranges(old.ranges);
+            self.arena.retire_u32(old.sorted_values);
+            self.arena.retire_u32(old.emission_tiles);
+            self.arena.retire_u32(old.emission_values);
+        }
     }
 
     /// Plan the next frame of the trajectory. Warm or cold, the
@@ -238,6 +264,7 @@ impl TrajectorySession {
         let (image, t_blend) = plan.blend_serial(&self.cfg, blender);
         let output =
             RenderOutput { image, timings: plan.timings(t_blend), stats: plan.stats() };
+        self.arena.retire_plan(plan);
         (output, source)
     }
 
@@ -245,12 +272,16 @@ impl TrajectorySession {
     /// pre-sort emission order can be captured for the next frame's
     /// reuse check.
     fn plan_cold(&mut self, camera: &Camera) -> FramePlan {
+        let old = self.prev.take();
         let (grid, projected, dup, t_preprocess, t_duplicate) =
-            plan_stages(&self.cloud, camera, &self.cfg);
+            plan_stages_in(&mut self.arena, &self.cloud, camera, &self.cfg);
 
-        let emission_tiles: Vec<u32> = dup.keys.iter().map(|&k| key_tile(k)).collect();
-        let emission_values = dup.values.clone();
-        let plan = finish_plan(
+        let mut emission_tiles = self.arena.take_u32();
+        emission_tiles.extend(dup.keys.iter().map(|&k| key_tile(k)));
+        let mut emission_values = self.arena.take_u32();
+        emission_values.extend_from_slice(&dup.values);
+        let plan = finish_plan_in(
+            &mut self.arena,
             grid,
             *camera,
             projected,
@@ -259,7 +290,7 @@ impl TrajectorySession {
             t_preprocess,
             t_duplicate,
         );
-        self.remember(&plan, emission_tiles, emission_values);
+        self.remember(&plan, emission_tiles, emission_values, old);
         plan
     }
 
@@ -268,10 +299,11 @@ impl TrajectorySession {
     /// emission fingerprint allows it.
     fn plan_coherent(&mut self, camera: &Camera) -> (FramePlan, PlanSource) {
         let (grid, projected, dup, t_preprocess, t_duplicate) =
-            plan_stages(&self.cloud, camera, &self.cfg);
+            plan_stages_in(&mut self.arena, &self.cloud, camera, &self.cfg);
 
-        let emission_tiles: Vec<u32> = dup.keys.iter().map(|&k| key_tile(k)).collect();
-        let prev = self.prev.as_ref().expect("plan_coherent requires a previous frame");
+        let mut emission_tiles = self.arena.take_u32();
+        emission_tiles.extend(dup.keys.iter().map(|&k| key_tile(k)));
+        let prev = self.prev.take().expect("plan_coherent requires a previous frame");
 
         // structural drift: fraction of emission positions whose
         // (tile, value) changed since the previous frame
@@ -292,8 +324,10 @@ impl TrajectorySession {
         if drift > self.tcfg.max_pair_drift {
             // reuse-error bound exceeded: finish cold from the stages
             // already run (identical to plan_frame)
-            let emission_values = dup.values.clone();
-            let plan = finish_plan(
+            let mut emission_values = self.arena.take_u32();
+            emission_values.extend_from_slice(&dup.values);
+            let plan = finish_plan_in(
+                &mut self.arena,
                 grid,
                 *camera,
                 projected,
@@ -302,24 +336,50 @@ impl TrajectorySession {
                 t_preprocess,
                 t_duplicate,
             );
-            self.remember(&plan, emission_tiles, emission_values);
+            self.remember(&plan, emission_tiles, emission_values, Some(prev));
             return (plan, PlanSource::Cold(FallbackReason::PairDrift));
         }
 
-        // Stage 3, warm: per-tile work instead of the global sort.
+        // Stage 3, warm: per-tile work instead of the global sort, in
+        // arena-recycled buffers.
         let t0 = Instant::now();
-        let (keys, values, ranges, resorted_tiles, patched) = if drift == 0.0 {
-            let (keys, values, resorted) =
-                resort_reused_tiles(&prev.ranges, &prev.sorted_values, &projected);
-            (keys, values, prev.ranges.clone(), resorted, false)
+        let mut keys = self.arena.take_u64();
+        let mut values = self.arena.take_u32();
+        let mut ranges = self.arena.take_ranges();
+        let (resorted_tiles, patched) = if drift == 0.0 {
+            let resorted = resort_reused_tiles(
+                &prev.ranges,
+                &prev.sorted_values,
+                &projected,
+                &mut keys,
+                &mut values,
+            );
+            ranges.extend_from_slice(&prev.ranges);
+            (resorted, false)
         } else {
-            let (keys, values, ranges, sorted) =
-                rebucket(&emission_tiles, &dup.values, &projected, grid.num_tiles());
-            (keys, values, ranges, sorted, true)
+            let mut counts = self.arena.take_u32();
+            let mut cursor = self.arena.take_u32();
+            let sorted = rebucket(
+                &emission_tiles,
+                &dup.values,
+                &projected,
+                grid.num_tiles(),
+                &mut keys,
+                &mut values,
+                &mut ranges,
+                &mut counts,
+                &mut cursor,
+            );
+            self.arena.retire_u32(counts);
+            self.arena.retire_u32(cursor);
+            (sorted, true)
         };
         let t_sort = t0.elapsed();
 
-        let emission_values = dup.values;
+        // the emission-order keys are consumed; the values vector
+        // becomes the remembered emission fingerprint
+        let Duplicated { keys: emission_keys, values: emission_values } = dup;
+        self.arena.retire_u64(emission_keys);
         let plan = FramePlan {
             grid,
             camera: *camera,
@@ -331,20 +391,34 @@ impl TrajectorySession {
             t_duplicate,
             t_sort,
         };
-        self.remember(&plan, emission_tiles, emission_values);
+        self.remember(&plan, emission_tiles, emission_values, Some(prev));
         (plan, PlanSource::Warm { resorted_tiles, patched })
     }
 
+    /// Store the new frame's structure, recycling the replaced frame's
+    /// buffers through the arena — the remembered state is copied out
+    /// of the plan (the plan itself stays caller-owned until retired).
     fn remember(
         &mut self,
         plan: &FramePlan,
         emission_tiles: Vec<u32>,
         emission_values: Vec<u32>,
+        old: Option<PrevFrame>,
     ) {
+        if let Some(old) = old {
+            self.arena.retire_ranges(old.ranges);
+            self.arena.retire_u32(old.sorted_values);
+            self.arena.retire_u32(old.emission_tiles);
+            self.arena.retire_u32(old.emission_values);
+        }
+        let mut ranges = self.arena.take_ranges();
+        ranges.extend_from_slice(&plan.ranges);
+        let mut sorted_values = self.arena.take_u32();
+        sorted_values.extend_from_slice(&plan.dup.values);
         self.prev = Some(PrevFrame {
             camera: plan.camera,
-            ranges: plan.ranges.clone(),
-            sorted_values: plan.dup.values.clone(),
+            ranges,
+            sorted_values,
             emission_tiles,
             emission_values,
         });
@@ -361,10 +435,14 @@ fn resort_reused_tiles(
     ranges: &[(u32, u32)],
     prev_sorted_values: &[u32],
     projected: &Projected,
-) -> (Vec<u64>, Vec<u32>, usize) {
+    keys: &mut Vec<u64>,
+    values: &mut Vec<u32>,
+) -> usize {
     let n = prev_sorted_values.len();
-    let mut keys = vec![0u64; n];
-    let mut values = prev_sorted_values.to_vec();
+    keys.clear();
+    keys.resize(n, 0);
+    values.clear();
+    values.extend_from_slice(prev_sorted_values);
     let mut resorted = 0usize;
     for (tile, &(s, e)) in ranges.iter().enumerate() {
         let (s, e) = (s as usize, e as usize);
@@ -395,26 +473,36 @@ fn resort_reused_tiles(
             values[j] = v;
         }
     }
-    (keys, values, resorted)
+    resorted
 }
 
 /// Warm stage 3 with membership drift inside the error bound: a stable
 /// linear counting-sort of the *new* emission list by tile, then a
-/// per-tile `(key, value)` sort — O(P + Σ nₜ log nₜ), no global sort.
-/// Returns `(keys, values, ranges, tiles_sorted)`.
+/// per-tile `(key, value)` repair — O(P + per-tile sort work), no
+/// global sort, no allocation (all six output/scratch vectors are
+/// arena-recycled). Returns the number of tiles sorted.
+#[allow(clippy::too_many_arguments)]
 fn rebucket(
     emission_tiles: &[u32],
     emission_values: &[u32],
     projected: &Projected,
     num_tiles: usize,
-) -> (Vec<u64>, Vec<u32>, Vec<(u32, u32)>, usize) {
+    keys: &mut Vec<u64>,
+    values: &mut Vec<u32>,
+    ranges: &mut Vec<(u32, u32)>,
+    counts: &mut Vec<u32>,
+    cursor: &mut Vec<u32>,
+) -> usize {
     let n = emission_values.len();
-    let mut counts = vec![0u32; num_tiles];
+    counts.clear();
+    counts.resize(num_tiles, 0);
     for &t in emission_tiles {
         counts[t as usize] += 1;
     }
-    let mut ranges = vec![(0u32, 0u32); num_tiles];
-    let mut cursor = vec![0u32; num_tiles];
+    ranges.clear();
+    ranges.resize(num_tiles, (0u32, 0u32));
+    cursor.clear();
+    cursor.resize(num_tiles, 0);
     let mut acc = 0u32;
     for (t, &c) in counts.iter().enumerate() {
         cursor[t] = acc;
@@ -425,8 +513,10 @@ fn rebucket(
         }
         acc += c;
     }
-    let mut keys = vec![0u64; n];
-    let mut values = vec![0u32; n];
+    keys.clear();
+    keys.resize(n, 0);
+    values.clear();
+    values.resize(n, 0);
     for i in 0..n {
         let t = emission_tiles[i] as usize;
         let dst = cursor[t] as usize;
@@ -436,7 +526,7 @@ fn rebucket(
         values[dst] = v;
     }
     let mut tiles_sorted = 0usize;
-    for &(s, e) in &ranges {
+    for &(s, e) in ranges.iter() {
         let (s, e) = (s as usize, e as usize);
         if e - s <= 1 {
             continue;
@@ -448,19 +538,23 @@ fn rebucket(
         if in_order {
             continue;
         }
-        let mut pairs: Vec<(u64, u32)> = keys[s..e]
-            .iter()
-            .copied()
-            .zip(values[s..e].iter().copied())
-            .collect();
-        pairs.sort_unstable();
-        for (j, (k, v)) in pairs.into_iter().enumerate() {
-            keys[s + j] = k;
-            values[s + j] = v;
+        // in-place insertion repair on (key, value) — the same
+        // canonical order a pair-tuple sort produces (values are
+        // distinct within a tile), without a staging allocation
+        for i in s + 1..e {
+            let (k, v) = (keys[i], values[i]);
+            let mut j = i;
+            while j > s && (keys[j - 1], values[j - 1]) > (k, v) {
+                keys[j] = keys[j - 1];
+                values[j] = values[j - 1];
+                j -= 1;
+            }
+            keys[j] = k;
+            values[j] = v;
         }
         tiles_sorted += 1;
     }
-    (keys, values, ranges, tiles_sorted)
+    tiles_sorted
 }
 
 /// Total plan-stage wall-clock of one frame (preprocess + duplicate +

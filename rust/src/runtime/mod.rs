@@ -17,7 +17,10 @@ pub mod tiled_render;
 pub use blend_exec::ArtifactBlender;
 pub use client::RuntimeClient;
 pub use manifest::Manifest;
-pub use tiled_render::{render_frame_tiled, render_frames_tiled, render_frames_tiled_with_plans};
+pub use tiled_render::{
+    render_frame_tiled, render_frames_tiled, render_frames_tiled_in,
+    render_frames_tiled_with_plans, render_frames_tiled_with_plans_in,
+};
 
 /// Default artifacts directory, relative to the crate root.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

@@ -22,7 +22,8 @@
 
 use super::client::RuntimeClient;
 use crate::math::{Camera, Vec3};
-use crate::pipeline::plan::{plan_frame, FramePlan};
+use crate::pipeline::arena::FrameArena;
+use crate::pipeline::plan::{plan_frame_in, FramePlan};
 use crate::pipeline::preprocess::{preprocess, Projected};
 use crate::pipeline::render::{Image, RenderConfig, RenderOutput};
 use crate::pipeline::{TILE_PIXELS, TILE_SIZE};
@@ -58,8 +59,24 @@ pub fn render_frame_tiled(
 }
 
 /// Render a coalesced batch of frames of one scene, pooling every
-/// frame's tiles into shared 16-tile grouped PJRT calls.
+/// frame's tiles into shared 16-tile grouped PJRT calls. Convenience
+/// wrapper over [`render_frames_tiled_in`] with a throwaway arena.
 pub fn render_frames_tiled(
+    client: &mut RuntimeClient,
+    cloud: &crate::scene::gaussian::GaussianCloud,
+    cameras: &[Camera],
+    cfg: &RenderConfig,
+) -> Result<Vec<RenderOutput>> {
+    render_frames_tiled_in(&mut FrameArena::new(), client, cloud, cameras, cfg)
+}
+
+/// [`render_frames_tiled`] with all plan buffers, per-tile blending
+/// state and host staging rows cycled through `arena` (DESIGN.md §13),
+/// so a warm coordinator worker drives the pooled artifact path without
+/// per-frame allocation. The batch's plans are taken from the arena up
+/// front and retired together after the composite.
+pub fn render_frames_tiled_in(
+    arena: &mut FrameArena,
     client: &mut RuntimeClient,
     cloud: &crate::scene::gaussian::GaussianCloud,
     cameras: &[Camera],
@@ -68,16 +85,35 @@ pub fn render_frames_tiled(
     // geometry stages per frame: the shared FramePlan stage (DESIGN.md
     // §8), native and timed individually — including `cfg.accel`'s veto
     let prepared: Vec<FramePlan> =
-        cameras.iter().map(|camera| plan_frame(cloud, camera, cfg)).collect();
-    render_frames_tiled_with_plans(client, &prepared, cfg)
+        cameras.iter().map(|camera| plan_frame_in(arena, cloud, camera, cfg)).collect();
+    let out = render_frames_tiled_with_plans_in(arena, client, &prepared, cfg);
+    for plan in prepared {
+        arena.retire_plan(plan);
+    }
+    out
 }
 
 /// Blend already-planned frames through the pooled 16-tile grouped
-/// path. The plans may come from [`plan_frame`] (the cold path above)
-/// or from a warm `pipeline::trajectory` session (DESIGN.md §9) — the
-/// blend stage only *reads* the plan, and warm plans are bit-identical
-/// to cold ones, so the executor needs no temporal awareness at all.
+/// path. The plans may come from [`crate::pipeline::plan::plan_frame`]
+/// (the cold path above) or from a warm `pipeline::trajectory` session
+/// (DESIGN.md §9) — the blend stage only *reads* the plan, and warm
+/// plans are bit-identical to cold ones, so the executor needs no
+/// temporal awareness at all. Convenience wrapper over
+/// [`render_frames_tiled_with_plans_in`] with a throwaway arena.
 pub fn render_frames_tiled_with_plans(
+    client: &mut RuntimeClient,
+    prepared: &[FramePlan],
+    cfg: &RenderConfig,
+) -> Result<Vec<RenderOutput>> {
+    render_frames_tiled_with_plans_in(&mut FrameArena::new(), client, prepared, cfg)
+}
+
+/// [`render_frames_tiled_with_plans`] drawing the per-tile (C, T, done)
+/// state vectors and the grouped-call staging rows from `arena`'s `f32`
+/// pool; everything is retired before returning, so steady-state calls
+/// at one resolution allocate nothing on the host side.
+pub fn render_frames_tiled_with_plans_in(
+    arena: &mut FrameArena,
     client: &mut RuntimeClient,
     prepared: &[FramePlan],
     cfg: &RenderConfig,
@@ -92,6 +128,13 @@ pub fn render_frames_tiled_with_plans(
     let t0 = Instant::now();
     // states for every frame's non-empty tiles, pooled into one work set
     let mut states: Vec<TileState> = Vec::new();
+    // pooled f32 buffer sized to `len`, prefilled with `fill` (the take
+    // is cleared, so resize writes every element)
+    fn take_filled(arena: &mut FrameArena, len: usize, fill: f32) -> Vec<f32> {
+        let mut v = arena.take_f32();
+        v.resize(len, fill);
+        v
+    }
     for (frame, pf) in prepared.iter().enumerate() {
         for (tid, &(s, e)) in pf.ranges.iter().enumerate() {
             if e > s {
@@ -99,9 +142,9 @@ pub fn render_frames_tiled_with_plans(
                     frame,
                     tile_id: tid as u32,
                     cursor: 0,
-                    c: vec![0.0; TILE_PIXELS * 3],
-                    t: vec![1.0; TILE_PIXELS],
-                    done: vec![0.0; TILE_PIXELS],
+                    c: take_filled(arena, TILE_PIXELS * 3, 0.0),
+                    t: take_filled(arena, TILE_PIXELS, 1.0),
+                    done: take_filled(arena, TILE_PIXELS, 0.0),
                 });
             }
         }
@@ -109,13 +152,13 @@ pub fn render_frames_tiled_with_plans(
 
     // staging buffers for one grouped call
     let g = group;
-    let mut conics = vec![0.0f32; g * batch * 3];
-    let mut offsets = vec![0.0f32; g * batch * 2];
-    let mut opac = vec![0.0f32; g * batch];
-    let mut colors = vec![0.0f32; g * batch * 3];
-    let mut c_in = vec![0.0f32; g * TILE_PIXELS * 3];
-    let mut t_in = vec![1.0f32; g * TILE_PIXELS];
-    let mut d_in = vec![0.0f32; g * TILE_PIXELS];
+    let mut conics = take_filled(arena, g * batch * 3, 0.0);
+    let mut offsets = take_filled(arena, g * batch * 2, 0.0);
+    let mut opac = take_filled(arena, g * batch, 0.0);
+    let mut colors = take_filled(arena, g * batch * 3, 0.0);
+    let mut c_in = take_filled(arena, g * TILE_PIXELS * 3, 0.0);
+    let mut t_in = take_filled(arena, g * TILE_PIXELS, 1.0);
+    let mut d_in = take_filled(arena, g * TILE_PIXELS, 0.0);
 
     let mut calls = 0u64;
     // work queue: indices into `states` that still have gaussians left
@@ -247,6 +290,16 @@ pub fn render_frames_tiled_with_plans(
             timings: pf.timings(blend_each),
             stats: pf.stats(),
         });
+    }
+
+    // hand every pooled buffer back so the next batch takes them warm
+    for st in states {
+        arena.retire_f32(st.c);
+        arena.retire_f32(st.t);
+        arena.retire_f32(st.done);
+    }
+    for buf in [conics, offsets, opac, colors, c_in, t_in, d_in] {
+        arena.retire_f32(buf);
     }
     Ok(outputs)
 }

@@ -150,6 +150,121 @@ fn check_model_bad_fault_exits_two() {
 }
 
 #[test]
+fn bench_gate_bad_flags_exit_two() {
+    // flag parsing happens before any measurement, so these are cheap
+    let out = gemm_gs()
+        .args(["bench-gate", "--tolerance", "banana"])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "bad --tolerance must exit 2");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--tolerance"));
+
+    // a tolerance below 1 would fail on noise by construction — usage error
+    let out = gemm_gs()
+        .args(["bench-gate", "--tolerance", "0.5"])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "tolerance < 1 must exit 2");
+}
+
+#[test]
+fn bench_gate_quick_writes_report_and_exits_zero() {
+    let dir = std::env::temp_dir().join("gemm_gs_cli_gate_ok");
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let json = dir.join("gate.json");
+    let out = gemm_gs()
+        .args([
+            "bench-gate",
+            "--quick",
+            "--scale",
+            "0.0005",
+            "--out",
+            json.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "quick gate run failed: {:?}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("Perf gate"), "{stdout}");
+    let written = std::fs::read_to_string(&json).expect("report written");
+    assert!(written.contains("\"schema_version\": 1"), "{written}");
+    assert!(written.contains("\"plan_speedup_vs_legacy\""), "{written}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_gate_regression_against_absurd_baseline_exits_one() {
+    // a baseline claiming sub-nanosecond stages and impossible
+    // throughput: any real run regresses against it at tolerance 1,
+    // deterministically — the exit-1 contract the CI perf-gate relies on
+    let baseline = r#"{
+  "schema_version": 1,
+  "quick": true,
+  "scale": 0.0005,
+  "seed": 42,
+  "warm_plan_speedup": 1000000,
+  "coalesce_occupancy": 4,
+  "soak_p50_ms": 0.001,
+  "soak_p95_ms": 0.001,
+  "soak_p99_ms": 0.001,
+  "soak_tail_ratio": 0.000001,
+  "scenes": [
+    {
+      "name": "train",
+      "n_gaussians": 1,
+      "n_pairs": 1,
+      "preprocess_ns_per_gaussian": 0.000001,
+      "duplicate_ns_per_gaussian": 0.000001,
+      "sort_ns_per_gaussian": 0.000001,
+      "plan_ns_per_gaussian": 0.000001,
+      "pairs_per_sec": 1e18,
+      "plan_speedup_vs_legacy": 1000000
+    }
+  ]
+}
+"#;
+    let dir = std::env::temp_dir().join("gemm_gs_cli_gate_regress");
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let path = dir.join("absurd.json");
+    std::fs::write(&path, baseline).expect("write baseline");
+    let out = gemm_gs()
+        .args([
+            "bench-gate",
+            "--quick",
+            "--scale",
+            "0.0005",
+            "--baseline",
+            path.to_str().unwrap(),
+            "--tolerance",
+            "1.0",
+        ])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(1), "regression must exit 1");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("perf gate FAILED"), "{stderr}");
+    assert!(stderr.contains("regression:"), "{stderr}");
+
+    // a baseline from a different schema version must also exit 1, loudly
+    let stale = baseline.replace("\"schema_version\": 1", "\"schema_version\": 999");
+    std::fs::write(&path, stale).expect("write stale baseline");
+    let out = gemm_gs()
+        .args([
+            "bench-gate",
+            "--quick",
+            "--scale",
+            "0.0005",
+            "--baseline",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(1), "schema mismatch must exit 1");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("schema 999"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn export_ply_requires_out_and_roundtrips_through_render() {
     // missing --out is a usage error
     let out = gemm_gs().args(["export-ply", "--scene", "train"]).output().expect("spawn");

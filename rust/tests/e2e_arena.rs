@@ -1,0 +1,182 @@
+//! End-to-end byte-identity of the arena hot path (DESIGN.md §13).
+//!
+//! The data-oriented planner — [`FrameArena`]-recycled buffers, the
+//! tile-bucketed counting sort, the monomorphized duplication loop — is
+//! a pure performance change: every plan and every rendered image must
+//! be *bit-for-bit* identical to the legacy fresh-allocation path
+//! (fresh buffers, global stable comparison sort, separate range scan).
+//! These tests pin that for every acceleration method, for warm
+//! trajectory sessions, and across repeated reuse of one arena over
+//! different scenes and resolutions (stale-scratch poisoning).
+
+use gemm_gs::accel::AccelKind;
+use gemm_gs::bench_harness::trajectory::orbit_pose;
+use gemm_gs::coordinator::BackendKind;
+use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::pipeline::arena::FrameArena;
+use gemm_gs::pipeline::plan::{plan_frame, plan_frame_in, plan_frame_masked, FramePlan};
+use gemm_gs::pipeline::preprocess::Projected;
+use gemm_gs::pipeline::render::{Image, RenderConfig};
+use gemm_gs::pipeline::tile::TileGrid;
+use gemm_gs::pipeline::trajectory::{TrajectoryConfig, TrajectorySession};
+use gemm_gs::scene::gaussian::GaussianCloud;
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::sync::Arc;
+
+fn small_scene(name: &str, scale: f64, width: u32, height: u32) -> (GaussianCloud, Camera) {
+    let cloud = scene_by_name(name).expect("scene").synthesize(scale);
+    let camera = Camera::look_at(
+        Vec3::new(0.0, 1.0, -8.0),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        width,
+        height,
+    );
+    (cloud, camera)
+}
+
+/// The legacy planner, reconstructed end to end: fresh buffers,
+/// per-pair `dyn` veto dispatch, global stable comparison sort,
+/// separate tile-range scan ([`plan_frame_masked`] → `finish_plan`).
+fn legacy_plan(
+    cloud: &GaussianCloud,
+    camera: &Camera,
+    cfg: &RenderConfig,
+) -> FramePlan {
+    let grid = TileGrid::new(camera.width, camera.height);
+    let accel = &cfg.accel;
+    let mask =
+        |p: &Projected, i: usize, tx: u32, ty: u32| accel.keep_pair(p, i, tx, ty, &grid);
+    plan_frame_masked(cloud, camera, cfg, Some(&mask))
+}
+
+fn assert_plans_identical(a: &FramePlan, b: &FramePlan, what: &str) {
+    assert_eq!(a.dup.keys, b.dup.keys, "{what}: sorted keys diverge");
+    assert_eq!(a.dup.values, b.dup.values, "{what}: sorted values diverge");
+    assert_eq!(a.ranges, b.ranges, "{what}: tile ranges diverge");
+    assert_eq!(a.n_gaussians, b.n_gaussians, "{what}: gaussian count diverges");
+    assert_eq!(a.projected.len(), b.projected.len(), "{what}: visible set diverges");
+    for i in 0..a.projected.len() {
+        assert_eq!(
+            a.projected.depths[i].to_bits(),
+            b.projected.depths[i].to_bits(),
+            "{what}: depth {i}"
+        );
+        assert_eq!(
+            (a.projected.means2d[i].x.to_bits(), a.projected.means2d[i].y.to_bits()),
+            (b.projected.means2d[i].x.to_bits(), b.projected.means2d[i].y.to_bits()),
+            "{what}: mean2d {i}"
+        );
+        assert_eq!(a.projected.source[i], b.projected.source[i], "{what}: source {i}");
+    }
+}
+
+fn assert_images_identical(a: &Image, b: &Image, what: &str) {
+    assert_eq!(a.data.len(), b.data.len(), "{what}: image size diverges");
+    for (i, (pa, pb)) in a.data.iter().zip(b.data.iter()).enumerate() {
+        for c in 0..3 {
+            assert_eq!(
+                pa[c].to_bits(),
+                pb[c].to_bits(),
+                "{what}: pixel {i} channel {c}"
+            );
+        }
+    }
+}
+
+/// Tentpole invariant: for EVERY acceleration method, the arena-path
+/// plan and image are bit-for-bit the legacy path's — through one arena
+/// reused across all methods, so earlier methods' scratch cannot leak
+/// into later ones.
+#[test]
+fn arena_plans_and_images_match_legacy_for_every_accel() {
+    let mut arena = FrameArena::new();
+    for accel in AccelKind::all() {
+        let method = accel.instantiate();
+        let (base, camera) = small_scene("train", 0.001, 320, 192);
+        // compression methods plan the transformed model (DESIGN.md §8)
+        let cloud =
+            if method.transforms_model() { method.prepare_model(&base) } else { base };
+        let cfg = RenderConfig::default().with_accel(accel.instantiate());
+
+        let reference = legacy_plan(&cloud, &camera, &cfg);
+        let plan = plan_frame_in(&mut arena, &cloud, &camera, &cfg);
+        assert_plans_identical(&plan, &reference, accel.cli_name());
+
+        let mut blender =
+            BackendKind::NativeGemm.instantiate(cfg.batch).expect("native backend");
+        let (image, _) = plan.blend_serial(&cfg, blender.as_mut());
+        let (ref_image, _) = reference.blend_serial(&cfg, blender.as_mut());
+        assert_images_identical(&image, &ref_image, accel.cli_name());
+
+        arena.retire_plan(plan);
+    }
+}
+
+/// Warm trajectory sessions run entirely on the arena (plus the
+/// rebucket/resort fast paths) — every warm plan must still equal a
+/// cold from-scratch replan of the same pose.
+#[test]
+fn warm_session_plans_match_cold_replans() {
+    for accel in AccelKind::all() {
+        let method = accel.instantiate();
+        let base = scene_by_name("train").unwrap().synthesize(0.001);
+        let cloud = Arc::new(if method.transforms_model() {
+            method.prepare_model(&base)
+        } else {
+            base
+        });
+        let cfg = RenderConfig::default().with_accel(accel.instantiate());
+        let mut session = TrajectorySession::new(
+            Arc::clone(&cloud),
+            cfg.clone(),
+            TrajectoryConfig::default(),
+        );
+        for i in 0..6 {
+            let camera = orbit_pose(0.4 + i as f32 * 3e-4, 240, 136);
+            let (plan, _source) = session.plan_next(&camera);
+            let cold = plan_frame(&cloud, &camera, &cfg);
+            assert_plans_identical(
+                &plan,
+                &cold,
+                &format!("{} frame {i}", accel.cli_name()),
+            );
+            session.retire_plan(plan);
+        }
+        let stats = session.stats();
+        assert!(
+            stats.warm_plans > 0,
+            "{}: coherent arc never took the warm path — the test proved nothing",
+            accel.cli_name()
+        );
+    }
+}
+
+/// Stale-scratch poisoning: one arena driven through scenes of very
+/// different sizes and resolutions, repeatedly. A big frame inflates
+/// every pool; the small frames after it must not see stale tails
+/// (ranges sized for the old grid, cursor tables from the old tile
+/// count, leftover pair scratch).
+#[test]
+fn one_arena_reused_across_scenes_and_resolutions_stays_clean() {
+    let mut arena = FrameArena::new();
+    let cfg = RenderConfig::default();
+    let cases = [
+        ("train", 0.002, 480u32, 272u32),
+        ("truck", 0.0005, 160, 96),
+        ("train", 0.0005, 320, 192),
+        ("playroom", 0.001, 256, 144),
+        ("truck", 0.002, 480, 272),
+        ("train", 0.0005, 160, 96),
+    ];
+    for _ in 0..2 {
+        for &(name, scale, w, h) in &cases {
+            let (cloud, camera) = small_scene(name, scale, w, h);
+            let reference = legacy_plan(&cloud, &camera, &cfg);
+            let plan = plan_frame_in(&mut arena, &cloud, &camera, &cfg);
+            assert_plans_identical(&plan, &reference, &format!("{name} {w}x{h}"));
+            arena.retire_plan(plan);
+        }
+    }
+}
