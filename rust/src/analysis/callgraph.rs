@@ -1,0 +1,208 @@
+//! Approximate intra-crate call graph for reachability rules
+//! (DESIGN.md §14).
+//!
+//! Edges are resolved *by name*, not by type: `Type::method(` binds to
+//! the `fn method` under `impl Type`; a bare `name(` binds to every
+//! free fn called `name`; `.method(` binds to every method called
+//! `method` anywhere in the crate. The last case over-approximates, so
+//! ubiquitous method names that would connect the whole crate
+//! (`new`, `len`, `get`, `push`, …) are excluded from edge creation —
+//! each entry in [`STOPLIST`] is a documented false-negative edge
+//! class, listed in DESIGN.md §14.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use super::source::SourceFile;
+use crate::analysis::lexer::TokKind;
+
+/// Method names too common to resolve by name alone: calls through
+/// these create no edge (known false negatives, see module docs).
+/// Functions with these names are still linted when reached through a
+/// qualified `Type::name(` call or when they are roots themselves.
+pub const STOPLIST: &[&str] = &[
+    "new", "default", "len", "is_empty", "get", "get_mut", "iter", "iter_mut",
+    "push", "pop", "insert", "remove", "clear", "contains", "clone", "drop",
+    "fmt", "eq", "cmp", "hash", "next", "from", "into", "as_ref", "as_mut",
+    "write", "read", "send", "recv", "lock", "min", "max", "abs",
+];
+
+/// Unique key for a fn definition: (file index, fn index within file).
+pub type FnId = (usize, usize);
+
+/// The crate-wide approximate call graph.
+pub struct CallGraph {
+    /// Adjacency: caller → callees.
+    edges: HashMap<FnId, Vec<FnId>>,
+}
+
+impl CallGraph {
+    /// Build the graph over all non-test fns in `files`.
+    pub fn build(files: &[SourceFile]) -> CallGraph {
+        // name → candidate definitions, split by free fn vs method
+        let mut free: HashMap<&str, Vec<FnId>> = HashMap::new();
+        let mut methods: HashMap<&str, Vec<FnId>> = HashMap::new();
+        let mut typed: HashMap<(&str, &str), Vec<FnId>> = HashMap::new();
+        for (fi, f) in files.iter().enumerate() {
+            for (gi, g) in f.fns.iter().enumerate() {
+                if g.is_test {
+                    continue;
+                }
+                let id = (fi, gi);
+                match &g.impl_type {
+                    None => free.entry(&g.name).or_default().push(id),
+                    Some(ty) => {
+                        methods.entry(&g.name).or_default().push(id);
+                        typed.entry((ty.as_str(), g.name.as_str())).or_default().push(id);
+                    }
+                }
+            }
+        }
+
+        let mut edges: HashMap<FnId, Vec<FnId>> = HashMap::new();
+        for (fi, f) in files.iter().enumerate() {
+            for (gi, g) in f.fns.iter().enumerate() {
+                if g.is_test {
+                    continue;
+                }
+                let Some((start, end)) = g.body else { continue };
+                let caller = (fi, gi);
+                let out = edges.entry(caller).or_default();
+                // walk call-shaped token patterns inside the body
+                let toks = &f.toks[start..end];
+                let code: Vec<&super::lexer::Tok> =
+                    toks.iter().filter(|t| !t.is_comment()).collect();
+                for w in 0..code.len() {
+                    let t = code[w];
+                    if t.kind != TokKind::Ident {
+                        continue;
+                    }
+                    // a call looks like `name (` or `name :: <` turbofish
+                    let next_is_call = matches!(
+                        (code.get(w + 1), code.get(w + 2)),
+                        (Some(a), _) if a.is_punct('(')
+                    ) || matches!(
+                        (code.get(w + 1), code.get(w + 2), code.get(w + 3)),
+                        (Some(a), Some(b), Some(c))
+                            if a.is_punct(':') && b.is_punct(':') && c.is_punct('<')
+                    );
+                    if !next_is_call {
+                        continue;
+                    }
+                    let name = t.text.as_str();
+                    let prev = w.checked_sub(1).map(|p| code[p]);
+                    let qualified = w >= 3
+                        && code[w - 1].is_punct(':')
+                        && code[w - 2].is_punct(':')
+                        && code[w - 3].kind == TokKind::Ident;
+                    let method_call = prev.map(|p| p.is_punct('.')) == Some(true);
+                    if qualified {
+                        let ty = code[w - 3].text.as_str();
+                        if let Some(defs) = typed.get(&(ty, name)) {
+                            out.extend(defs.iter().copied());
+                        } else if let Some(defs) = free.get(name) {
+                            // module-qualified free fn: `sort::bucket_sort(`
+                            out.extend(defs.iter().copied());
+                        }
+                    } else if method_call {
+                        if STOPLIST.contains(&name) {
+                            continue;
+                        }
+                        if let Some(defs) = methods.get(name) {
+                            out.extend(defs.iter().copied());
+                        }
+                    } else if let Some(defs) = free.get(name) {
+                        // bare calls bind to free fns only; local methods
+                        // are reached via `self.name(...)` handled above
+                        out.extend(defs.iter().copied());
+                    }
+                }
+            }
+        }
+        CallGraph { edges }
+    }
+
+    /// BFS from `roots`; returns each reachable fn with the root that
+    /// first reached it (for violation messages).
+    pub fn reachable(&self, roots: &[FnId]) -> HashMap<FnId, FnId> {
+        let mut seen: HashMap<FnId, FnId> = HashMap::new();
+        let mut queue: VecDeque<(FnId, FnId)> = VecDeque::new();
+        for &r in roots {
+            if seen.insert(r, r).is_none() {
+                queue.push_back((r, r));
+            }
+        }
+        let mut visited: HashSet<FnId> = roots.iter().copied().collect();
+        while let Some((at, root)) = queue.pop_front() {
+            if let Some(nexts) = self.edges.get(&at) {
+                for &n in nexts {
+                    if visited.insert(n) {
+                        seen.insert(n, root);
+                        queue.push_back((n, root));
+                    }
+                }
+            }
+        }
+        seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::source::SourceFile;
+
+    #[test]
+    fn reaches_through_free_qualified_and_method_calls() {
+        let f = SourceFile::parse(
+            "rust/src/a.rs",
+            r#"
+pub fn root() { helper(); Widget::build(0); }
+fn helper() { takes_generic::<u32>(3); }
+fn takes_generic<T>(_x: T) {}
+struct Widget;
+impl Widget {
+    fn build(_n: u32) -> Widget { Widget }
+    fn orphan(&self) {}
+}
+fn uses_method(w: &Widget) { w.orphan(); }
+"#,
+        );
+        let files = vec![f];
+        let g = CallGraph::build(&files);
+        let root_id = (0, 0);
+        let reach = g.reachable(&[root_id]);
+        let name_of = |id: &FnId| files[id.0].fns[id.1].name.clone();
+        let names: Vec<String> = reach.keys().map(name_of).collect();
+        assert!(names.contains(&"helper".to_string()));
+        assert!(names.contains(&"takes_generic".to_string()));
+        assert!(names.contains(&"build".to_string()));
+        assert!(!names.contains(&"orphan".to_string()), "not reachable from root");
+        assert!(!names.contains(&"uses_method".to_string()));
+
+        // uses_method reaches orphan via the `.orphan()` method edge
+        let reach2 = g.reachable(&[(0, 5)]);
+        assert_eq!(name_of(&(0, 5)), "uses_method");
+        assert!(reach2.keys().map(name_of).any(|n| n == "orphan"));
+    }
+
+    #[test]
+    fn stoplisted_method_names_create_no_edges() {
+        let f = SourceFile::parse(
+            "rust/src/a.rs",
+            r#"
+pub fn root(v: &V) { v.push(1); }
+struct V;
+impl V {
+    fn push(&self, _x: u32) { secret(); }
+}
+fn secret() {}
+"#,
+        );
+        let files = vec![f];
+        let g = CallGraph::build(&files);
+        let reach = g.reachable(&[(0, 0)]);
+        let names: Vec<_> =
+            reach.keys().map(|id| files[id.0].fns[id.1].name.as_str()).collect();
+        assert!(!names.contains(&"secret"), "stoplist must cut .push() edge: {names:?}");
+    }
+}

@@ -1,0 +1,449 @@
+//! A small, total Rust lexer for the invariant linter (DESIGN.md §14).
+//!
+//! This is deliberately *not* a compiler front end: it recognises just
+//! enough token structure that the rules in [`crate::analysis::rules`]
+//! can pattern-match source reliably — raw strings (`r#"…"#` with any
+//! hash count), nested block comments, lifetimes vs char literals
+//! (`'a` vs `'a'`), byte/raw-byte strings, and raw identifiers.
+//! Comments are *kept* as tokens because the waiver machinery
+//! (`lint:allow`) and the L004 citation checker both read them.
+//!
+//! The lexer is total: it never fails. Input it cannot classify
+//! degrades to single-character [`TokKind::Punct`] tokens, which at
+//! worst makes a rule miss a match — never a crash.
+
+/// Token classes the linter distinguishes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `plan_frame_in`, `r#type`).
+    Ident,
+    /// A lifetime such as `'a` or `'static` (text excludes the quote).
+    Lifetime,
+    /// Char or byte-char literal (`'a'`, `b'\n'`).
+    CharLit,
+    /// String literal of any flavour: `"…"`, `r#"…"#`, `b"…"`.
+    StrLit,
+    /// Numeric literal (`42`, `0xff_u32`, `1.5e-3`).
+    NumLit,
+    /// Single punctuation character (`{`, `!`, `[` …).
+    Punct(char),
+    /// `// …` comment, text includes the slashes.
+    LineComment,
+    /// `/* … */` comment (nesting folded into one token).
+    BlockComment,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Token class.
+    pub kind: TokKind,
+    /// Raw source text of the token.
+    pub text: String,
+    /// 1-based line on which the token starts.
+    pub line: u32,
+}
+
+impl Tok {
+    /// True if this token is an identifier with exactly this text.
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == name
+    }
+
+    /// True if this token is the given punctuation character.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+
+    /// True for line or block comments.
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+/// Lex `src` into a token stream. Total: never errors.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { src: src.as_bytes(), pos: 0, line: 1, toks: Vec::new() }.run(src)
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    toks: Vec<Tok>,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self, text: &str) -> Vec<Tok> {
+        while self.pos < self.src.len() {
+            let start = self.pos;
+            let line = self.line;
+            let b = self.src[self.pos];
+            match b {
+                b' ' | b'\t' | b'\r' => self.pos += 1,
+                b'\n' => {
+                    self.pos += 1;
+                    self.line += 1;
+                }
+                b'/' if self.peek(1) == Some(b'/') => {
+                    self.take_line_comment();
+                    self.push(TokKind::LineComment, text, start, line);
+                }
+                b'/' if self.peek(1) == Some(b'*') => {
+                    self.take_block_comment();
+                    self.push(TokKind::BlockComment, text, start, line);
+                }
+                b'"' => {
+                    self.take_string();
+                    self.push(TokKind::StrLit, text, start, line);
+                }
+                b'\'' => self.take_quote(text, start, line),
+                b'0'..=b'9' => {
+                    self.take_number();
+                    self.push(TokKind::NumLit, text, start, line);
+                }
+                _ if is_ident_start(b) => self.take_ident_or_prefixed(text, start, line),
+                _ => {
+                    // single ASCII punct, or one Punct token for a whole
+                    // multi-byte char (never slice mid-character); rules
+                    // never match on non-ASCII tokens
+                    let ch = text[start..].chars().next().unwrap_or('\u{FFFD}');
+                    self.pos += ch.len_utf8();
+                    self.push(TokKind::Punct(ch), text, start, line);
+                }
+            }
+        }
+        self.toks
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.src.get(self.pos + ahead).copied()
+    }
+
+    fn push(&mut self, kind: TokKind, text: &str, start: usize, line: u32) {
+        // a truncated escape at EOF can leave pos one past the end;
+        // clamp so the lexer stays total on malformed input
+        let end = self.pos.min(text.len());
+        self.toks.push(Tok { kind, text: text[start..end].to_string(), line });
+    }
+
+    fn take_line_comment(&mut self) {
+        while self.pos < self.src.len() && self.src[self.pos] != b'\n' {
+            self.pos += 1;
+        }
+    }
+
+    fn take_block_comment(&mut self) {
+        // Rust block comments nest; track depth
+        self.pos += 2;
+        let mut depth = 1usize;
+        while self.pos < self.src.len() && depth > 0 {
+            match (self.src[self.pos], self.peek(1)) {
+                (b'/', Some(b'*')) => {
+                    depth += 1;
+                    self.pos += 2;
+                }
+                (b'*', Some(b'/')) => {
+                    depth -= 1;
+                    self.pos += 2;
+                }
+                (b'\n', _) => {
+                    self.line += 1;
+                    self.pos += 1;
+                }
+                _ => self.pos += 1,
+            }
+        }
+    }
+
+    /// Consume a `"…"` string body starting at the opening quote.
+    fn take_string(&mut self) {
+        self.pos += 1;
+        while self.pos < self.src.len() {
+            match self.src[self.pos] {
+                b'\\' => self.pos += 2,
+                b'"' => {
+                    self.pos += 1;
+                    return;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.pos += 1;
+                }
+                _ => self.pos += 1,
+            }
+        }
+    }
+
+    /// Consume `r"…"` / `r#"…"#` with any number of hashes, starting at
+    /// the `r` (the caller already verified the prefix shape).
+    fn take_raw_string(&mut self) {
+        self.pos += 1; // r
+        let mut hashes = 0usize;
+        while self.peek(0) == Some(b'#') {
+            hashes += 1;
+            self.pos += 1;
+        }
+        self.pos += 1; // opening quote
+        while self.pos < self.src.len() {
+            if self.src[self.pos] == b'\n' {
+                self.line += 1;
+                self.pos += 1;
+                continue;
+            }
+            if self.src[self.pos] == b'"' {
+                // need `"` followed by exactly `hashes` hashes
+                let mut ok = true;
+                for i in 0..hashes {
+                    if self.peek(1 + i) != Some(b'#') {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    self.pos += 1 + hashes;
+                    return;
+                }
+            }
+            self.pos += 1;
+        }
+    }
+
+    /// Disambiguate `'a` (lifetime) from `'a'` (char literal).
+    fn take_quote(&mut self, text: &str, start: usize, line: u32) {
+        let next = self.peek(1);
+        let after = self.peek(2);
+        let lifetime = match (next, after) {
+            // 'x followed by anything but a closing quote is a lifetime
+            (Some(n), a) if is_ident_start(n) => a != Some(b'\''),
+            _ => false,
+        };
+        if lifetime {
+            self.pos += 1;
+            while self.peek(0).map(is_ident_continue) == Some(true) {
+                self.pos += 1;
+            }
+            // strip the leading quote from the stored text
+            let text_start = start + 1;
+            self.toks.push(Tok {
+                kind: TokKind::Lifetime,
+                text: text[text_start..self.pos].to_string(),
+                line,
+            });
+            return;
+        }
+        // char literal: '\u{1F600}', '\\', '\'', 'é', 'x'
+        self.pos += 1;
+        if self.peek(0) == Some(b'\\') {
+            self.pos += 2; // backslash + escape head
+            if self.src.get(self.pos - 1) == Some(&b'u') && self.peek(0) == Some(b'{') {
+                while self.pos < self.src.len() && self.src[self.pos] != b'}' {
+                    self.pos += 1;
+                }
+                self.pos += 1;
+            }
+        } else {
+            // one char, possibly multi-byte
+            let rest = &text[self.pos..];
+            if let Some(c) = rest.chars().next() {
+                self.pos += c.len_utf8();
+            }
+        }
+        if self.peek(0) == Some(b'\'') {
+            self.pos += 1;
+        }
+        self.push(TokKind::CharLit, text, start, line);
+    }
+
+    fn take_number(&mut self) {
+        // digits, underscores, hex letters, type suffixes, float dots
+        // and exponents — `0..10` must stop before the range dots
+        while let Some(b) = self.peek(0) {
+            match b {
+                b'0'..=b'9' | b'_' | b'a'..=b'z' | b'A'..=b'Z' => {
+                    let exp = b == b'e' || b == b'E';
+                    self.pos += 1;
+                    if exp && matches!(self.peek(0), Some(b'+') | Some(b'-')) {
+                        self.pos += 1;
+                    }
+                }
+                b'.' if self.peek(1).map(|d| d.is_ascii_digit()) == Some(true) => self.pos += 1,
+                _ => break,
+            }
+        }
+    }
+
+    /// An identifier, or one of the prefixed literal forms that *start*
+    /// like an identifier: `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `b'x'`,
+    /// and raw identifiers `r#type`.
+    fn take_ident_or_prefixed(&mut self, text: &str, start: usize, line: u32) {
+        let b0 = self.src[self.pos];
+        if b0 == b'r' || b0 == b'b' {
+            if self.raw_string_ahead() {
+                if b0 == b'b' {
+                    self.pos += 1; // skip the b, take_raw_string expects r…
+                }
+                self.take_raw_string();
+                self.push(TokKind::StrLit, text, start, line);
+                return;
+            }
+            if self.peek(1) == Some(b'"') {
+                self.pos += 1;
+                self.take_string();
+                self.push(TokKind::StrLit, text, start, line);
+                return;
+            }
+            if b0 == b'b' && self.peek(1) == Some(b'\'') {
+                self.pos += 1;
+                self.take_quote(text, self.pos, line);
+                // rewrite: the pushed CharLit text missed the b prefix
+                if let Some(t) = self.toks.last_mut() {
+                    t.text = text[start..self.pos].to_string();
+                }
+                return;
+            }
+            if b0 == b'r'
+                && self.peek(1) == Some(b'#')
+                && self.peek(2).map(is_ident_start) == Some(true)
+            {
+                // raw identifier r#type: token text keeps the prefix
+                self.pos += 2;
+                while self.peek(0).map(is_ident_continue) == Some(true) {
+                    self.pos += 1;
+                }
+                self.push(TokKind::Ident, text, start, line);
+                return;
+            }
+        }
+        while self.peek(0).map(is_ident_continue) == Some(true) {
+            self.pos += 1;
+        }
+        self.push(TokKind::Ident, text, start, line);
+    }
+
+    /// Does a raw-string literal (`r"`, `r#"`, `br##"` …) start here?
+    fn raw_string_ahead(&self) -> bool {
+        let mut i = 0usize;
+        if self.peek(0) == Some(b'b') {
+            i = 1;
+        }
+        if self.peek(i) != Some(b'r') {
+            return false;
+        }
+        i += 1;
+        while self.peek(i) == Some(b'#') {
+            i += 1;
+        }
+        self.peek(i) == Some(b'"')
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        // the closing quote inside the body must not end the literal
+        let toks = kinds(r###"let s = r#"quote " inside"# ;"###);
+        let strs: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokKind::StrLit).collect();
+        assert_eq!(strs.len(), 1);
+        assert_eq!(strs[0].1, r###"r#"quote " inside"#"###);
+
+        // double-hash raw string containing a single-hash terminator
+        let toks = kinds("r##\"has \"# inside\"## trailing");
+        assert_eq!(toks[0].0, TokKind::StrLit);
+        assert_eq!(toks[0].1, "r##\"has \"# inside\"##");
+        assert!(toks[1].0 == TokKind::Ident && toks[1].1 == "trailing");
+
+        // byte raw string
+        let toks = kinds("br#\"bytes\"#");
+        assert_eq!(toks[0].0, TokKind::StrLit);
+    }
+
+    #[test]
+    fn nested_block_comments_fold_to_one_token() {
+        let toks = kinds("a /* outer /* inner */ still outer */ b");
+        assert_eq!(toks.len(), 3);
+        assert!(toks[0].0 == TokKind::Ident && toks[0].1 == "a");
+        assert_eq!(toks[1].0, TokKind::BlockComment);
+        assert!(toks[1].1.contains("inner"));
+        assert!(toks[2].0 == TokKind::Ident && toks[2].1 == "b");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'a'; let s = '\\''; }");
+        let lifetimes: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokKind::Lifetime).collect();
+        let chars: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokKind::CharLit).collect();
+        assert_eq!(lifetimes.len(), 2, "{toks:?}");
+        assert!(lifetimes.iter().all(|(_, t)| t == "a"));
+        assert_eq!(chars.len(), 2, "{toks:?}");
+        assert_eq!(chars[0].1, "'a'");
+        assert_eq!(chars[1].1, "'\\''");
+
+        // 'static is a lifetime even though it is long
+        let toks = kinds("&'static str");
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Lifetime && t == "static"));
+    }
+
+    #[test]
+    fn slashes_inside_string_literals_are_not_comments() {
+        let toks = kinds(r#"let url = "https://example.com"; next"#);
+        assert!(
+            toks.iter().all(|(k, _)| *k != TokKind::LineComment),
+            "string body must not open a comment: {toks:?}"
+        );
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Ident && t == "next"));
+
+        // and the converse: a quote inside a comment does not open a string
+        let toks = kinds("x // it's fine\ny");
+        assert_eq!(toks.len(), 3);
+        assert_eq!(toks[1].0, TokKind::LineComment);
+        assert!(toks[2].0 == TokKind::Ident && toks[2].1 == "y");
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_tokens() {
+        let src = "a\n/* one\ntwo */\nb\n\"x\ny\"\nc";
+        let toks = lex(src);
+        let find = |name: &str| toks.iter().find(|t| t.text == name).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("b"), 4);
+        assert_eq!(find("c"), 7);
+    }
+
+    #[test]
+    fn numbers_stop_before_range_dots() {
+        let toks = kinds("0..10");
+        assert_eq!(toks[0], (TokKind::NumLit, "0".into()));
+        assert_eq!(toks[1], (TokKind::Punct('.'), ".".into()));
+        assert_eq!(toks[2], (TokKind::Punct('.'), ".".into()));
+        assert_eq!(toks[3], (TokKind::NumLit, "10".into()));
+
+        let toks = kinds("1.5e-3_f64");
+        assert_eq!(toks.len(), 1);
+        assert_eq!(toks[0].0, TokKind::NumLit);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_idents() {
+        let toks = kinds("let r#type = 1;");
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Ident && t == "r#type"));
+    }
+}

@@ -1,0 +1,383 @@
+//! `gemm-gs lint`: an in-crate invariant linter (DESIGN.md §14).
+//!
+//! A hand-rolled, offline, dependency-free static analysis pass over
+//! the crate's own sources. Three load-bearing contracts are enforced
+//! at CI time instead of by review discipline:
+//!
+//! - **hot path** — frame planning allocates only through the arena
+//!   (rule L001),
+//! - **request path** — the coordinator never panics and resolves
+//!   every job through a `deliver_*` helper (rule L002),
+//! - **determinism** — nothing that feeds rendered bytes or bench JSON
+//!   iterates a hash table (rule L003),
+//!
+//! plus doc-citation integrity (L004), metrics-registry coherence
+//! (L005), and waiver hygiene (L000). Violations are suppressible only
+//! by a `lint:allow` comment carrying the rule code and a mandatory
+//! reason; stale waivers are themselves violations, so the waiver
+//! baseline can only shrink.
+//!
+//! The pass is layered exactly like a toy compiler front end:
+//! [`lexer`] → [`source`] (items, waivers) → [`callgraph`] →
+//! [`rules`], with IO and reporting in this module. Everything below
+//! the IO layer is pure, which is what lets `--check-fixture` prove
+//! each rule still fires on a synthetic violation tree.
+
+pub mod callgraph;
+pub mod lexer;
+pub mod rules;
+pub mod source;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub use rules::{Docs, Finding};
+use source::SourceFile;
+
+/// Rule catalog: (code, one-line title, full explanation).
+pub const RULES: &[(&str, &str, &str)] = &[
+    (
+        "L000",
+        "waiver hygiene",
+        "Waivers are written `// lint:allow(CODE): <reason>` on the violating \
+         line or the line directly above it. L000 fires when a waiver is \
+         missing its reason (a bare `lint:allow(CODE)` suppresses nothing), \
+         names a rule code that does not exist, or is stale — it matched no \
+         finding on this run. Stale waivers must be deleted, so the waiver \
+         baseline can only shrink as violations are burned down.",
+    ),
+    (
+        "L001",
+        "hot-path allocation freedom",
+        "Functions reachable from the frame-planning roots (plan_frame_in, \
+         bucket_sort_duplicated, duplicate_with_veto, and the warm-trajectory \
+         path via plan_coherent) must not allocate: Vec::new, vec![], \
+         .collect(), .to_vec(), .clone(), Box::new and String::from are all \
+         banned. Scratch memory comes from pipeline::arena::FrameArena, whose \
+         own file is the one sanctioned allocator. Reachability uses the \
+         approximate name-resolved call graph described in DESIGN.md §14; \
+         qualified Arc::clone/Rc::clone (refcount bumps) are not matched.",
+    ),
+    (
+        "L002",
+        "request-path panic freedom",
+        "The coordinator request path (service, scheduler, batch, catalog, \
+         request) owes every accepted job exactly one response, so it must \
+         not panic: .unwrap(), .expect(), panic!/unreachable!/todo!/\
+         unimplemented! and direct slice indexing `x[i]` are banned in favour \
+         of .get()/.first() plus a deliver_* helper (or a shed). Raw \
+         `respond.send` outside a deliver_* helper or Drop impl is also \
+         flagged, because it bypasses the exactly-once lifecycle gate.",
+    ),
+    (
+        "L003",
+        "determinism (no hash-order iteration)",
+        "Modules that feed rendered bytes, coalescing keys, or BENCH_*.json \
+         (pipeline, gemm, accel, scene, tiled_render, bench gate, request \
+         keys) must not use HashMap/HashSet: iteration order varies per \
+         process and would break the byte-identical determinism contract the \
+         perf gate and golden tests rely on. Use BTreeMap, Vec, or sort \
+         explicitly before any order-sensitive use.",
+    ),
+    (
+        "L004",
+        "doc-citation integrity",
+        "Every `DESIGN.md §N` (including `§a–§b` ranges) and \
+         `EXPERIMENTS.md §Name` citation in source comments and the README \
+         must resolve to a real heading, and the README docs-index table \
+         must cover every DESIGN.md section. This keeps the documentation \
+         graph navigable as sections are added or renumbered.",
+    ),
+    (
+        "L005",
+        "metrics-registry coherence",
+        "Every public field of coordinator::metrics::MetricsSnapshot must be \
+         documented in DESIGN.md (the metrics registry table) and asserted \
+         by at least one test under rust/tests/. A metric that operators can \
+         read but no test pins — or that the docs do not define — drifts \
+         silently; L005 makes adding a metric and documenting it one \
+         atomic change.",
+    ),
+];
+
+/// Full explanation for a rule code, if it exists.
+pub fn explain(code: &str) -> Option<&'static str> {
+    RULES.iter().find(|(c, _, _)| *c == code).map(|(_, _, e)| *e)
+}
+
+/// Result of a lint run.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Active findings after waivers, sorted by (file, line, code).
+    pub findings: Vec<Finding>,
+    /// Count of findings suppressed by valid waivers.
+    pub waived: usize,
+    /// Source files scanned.
+    pub files: usize,
+    /// `fn` items recovered across them.
+    pub fns: usize,
+}
+
+impl LintReport {
+    /// True when the tree is clean.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{} {}:{} {}\n", f.code, f.file, f.line, f.message));
+        }
+        out.push_str(&format!(
+            "lint: {} finding(s), {} waived, {} files, {} fns scanned\n",
+            self.findings.len(),
+            self.waived,
+            self.files,
+            self.fns
+        ));
+        out
+    }
+
+    /// Machine-readable report (stable schema, see tests/cli_smoke.rs).
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"schema_version\": 1,\n");
+        out.push_str(&format!("  \"clean\": {},\n", self.clean()));
+        out.push_str(&format!("  \"files\": {},\n", self.files));
+        out.push_str(&format!("  \"fns\": {},\n", self.fns));
+        out.push_str(&format!("  \"waived\": {},\n", self.waived));
+        out.push_str("  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{ \"code\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\" }}",
+                escape_json(f.code),
+                escape_json(&f.file),
+                f.line,
+                escape_json(&f.message)
+            ));
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Walk upward from `start` to the repo root: the first directory
+/// containing both `DESIGN.md` and `rust/src/lib.rs`.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut at = start.to_path_buf();
+    loop {
+        if at.join("DESIGN.md").is_file() && at.join("rust/src/lib.rs").is_file() {
+            return Some(at);
+        }
+        if !at.pop() {
+            return None;
+        }
+    }
+}
+
+/// Lint the repository at `root`. IO errors are reported as `Err`
+/// (exit 2 at the CLI); findings are data, not errors.
+pub fn run_lint(root: &Path) -> Result<LintReport, String> {
+    let mut files = Vec::new();
+    collect_rs(root, &root.join("rust/src"), true, &mut files)?;
+    collect_rs(root, &root.join("rust/tests"), false, &mut files)?;
+    collect_rs(root, &root.join("rust/benches"), false, &mut files)?;
+    collect_rs(root, &root.join("examples"), false, &mut files)?;
+    let docs = Docs {
+        design: read(root, "DESIGN.md")?,
+        experiments: read(root, "EXPERIMENTS.md")?,
+        readme: read(root, "README.md")?,
+    };
+    Ok(lint_sources(files, &docs))
+}
+
+/// Lint an already-parsed tree (shared by `run_lint` and fixtures).
+fn lint_sources(files: Vec<SourceFile>, docs: &Docs) -> LintReport {
+    let raw = rules::run_all(&files, docs);
+    let (findings, waived) = apply_waivers(&files, raw);
+    let fns = files.iter().map(|f| f.fns.len()).sum();
+    LintReport { findings, waived, files: files.len(), fns }
+}
+
+/// Run one rule's synthetic violation fixture; `Err` for unknown codes.
+pub fn check_fixture(code: &str) -> Result<LintReport, String> {
+    let (srcs, docs) =
+        rules::fixture(code).ok_or_else(|| format!("no fixture for rule code '{code}'"))?;
+    let files: Vec<SourceFile> =
+        srcs.iter().map(|(rel, text)| SourceFile::parse(rel, text)).collect();
+    Ok(lint_sources(files, &docs))
+}
+
+fn read(root: &Path, rel: &str) -> Result<String, String> {
+    fs::read_to_string(root.join(rel)).map_err(|e| format!("reading {rel}: {e}"))
+}
+
+/// Collect `.rs` files under `dir` (optionally recursive), sorted, as
+/// parsed [`SourceFile`]s with repo-relative names.
+fn collect_rs(
+    root: &Path,
+    dir: &Path,
+    recursive: bool,
+    out: &mut Vec<SourceFile>,
+) -> Result<(), String> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .map_err(|e| format!("reading {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            if recursive {
+                collect_rs(root, &path, true, out)?;
+            }
+            continue;
+        }
+        if path.extension().map(|e| e == "rs") != Some(true) {
+            continue;
+        }
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|_| format!("{} escapes the repo root", path.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            fs::read_to_string(&path).map_err(|e| format!("reading {rel}: {e}"))?;
+        out.push(SourceFile::parse(&rel, &text));
+    }
+    Ok(())
+}
+
+/// Apply `lint:allow` waivers to `findings`: valid waivers (known code,
+/// non-empty reason) suppress matching findings on their own line or
+/// the line below; malformed and stale waivers surface as L000.
+/// Returns the active findings (sorted) and the suppressed count.
+pub fn apply_waivers(files: &[SourceFile], findings: Vec<Finding>) -> (Vec<Finding>, usize) {
+    let known = |code: &str| RULES.iter().any(|(c, _, _)| *c == code);
+    // (file rel, waiver idx) → used?
+    let mut used: Vec<Vec<bool>> =
+        files.iter().map(|f| vec![false; f.waivers.len()]).collect();
+    let mut active = Vec::new();
+    let mut waived = 0usize;
+    for finding in findings {
+        let mut suppressed = false;
+        if let Some((fi, f)) = files.iter().enumerate().find(|(_, f)| f.rel == finding.file)
+        {
+            for (wi, w) in f.waivers.iter().enumerate() {
+                let covers =
+                    finding.line == w.line || finding.line == w.line.saturating_add(1);
+                if w.code == finding.code && covers && !w.reason.is_empty() && known(&w.code)
+                {
+                    used[fi][wi] = true;
+                    suppressed = true;
+                }
+            }
+        }
+        if suppressed {
+            waived += 1;
+        } else {
+            active.push(finding);
+        }
+    }
+    for (fi, f) in files.iter().enumerate() {
+        for (wi, w) in f.waivers.iter().enumerate() {
+            let problem = if !known(&w.code) {
+                Some(format!("waiver names unknown rule code `{}`", w.code))
+            } else if w.reason.is_empty() {
+                Some(format!(
+                    "waiver for {} is missing its mandatory `: <reason>`",
+                    w.code
+                ))
+            } else if !used[fi][wi] {
+                Some(format!(
+                    "stale waiver: lint:allow({}) matched no finding — delete it",
+                    w.code
+                ))
+            } else {
+                None
+            };
+            if let Some(message) = problem {
+                active.push(Finding { code: "L000", file: f.rel.clone(), line: w.line, message });
+            }
+        }
+    }
+    active.sort_by(|a, b| (&a.file, a.line, a.code).cmp(&(&b.file, b.line, b.code)));
+    (active, waived)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_rule_code_has_an_explanation() {
+        for code in ["L000", "L001", "L002", "L003", "L004", "L005"] {
+            let text = explain(code).expect("explanation exists");
+            assert!(text.len() > 80, "{code} explanation too thin");
+        }
+        assert!(explain("L999").is_none());
+    }
+
+    #[test]
+    fn json_report_escapes_and_shapes() {
+        let report = LintReport {
+            findings: vec![Finding {
+                code: "L004",
+                file: "a\"b.rs".into(),
+                line: 3,
+                message: "quote \" and\nnewline".into(),
+            }],
+            waived: 2,
+            files: 10,
+            fns: 100,
+        };
+        let json = report.render_json();
+        assert!(json.contains("\"schema_version\": 1"));
+        assert!(json.contains("\"clean\": false"));
+        assert!(json.contains("a\\\"b.rs"));
+        assert!(json.contains("quote \\\" and\\nnewline"));
+
+        let clean = LintReport { findings: vec![], waived: 0, files: 1, fns: 1 };
+        assert!(clean.render_json().contains("\"clean\": true"));
+        assert!(clean.render_json().contains("\"findings\": []"));
+    }
+
+    #[test]
+    fn fixture_reports_fire_for_every_code() {
+        for (code, _, _) in RULES {
+            let report = check_fixture(code).expect("fixture");
+            assert!(
+                report.findings.iter().any(|f| f.code == *code),
+                "{code} fixture did not fire: {:?}",
+                report.findings
+            );
+        }
+        assert!(check_fixture("L999").is_err());
+    }
+}

@@ -1,0 +1,706 @@
+//! The five invariant rules plus waiver hygiene (DESIGN.md §14).
+//!
+//! Every rule is a pure function from lexed sources + docs to a list
+//! of findings; IO lives in [`crate::analysis`], which is what lets
+//! `--check-fixture` run each rule against a synthetic tree and prove
+//! it still fires.
+
+use super::callgraph::{CallGraph, FnId};
+use super::lexer::{Tok, TokKind};
+use super::source::SourceFile;
+
+/// One rule violation (or waiver-hygiene problem, code L000).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule code, e.g. `L001`.
+    pub code: &'static str,
+    /// Repo-relative file.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// Human message.
+    pub message: String,
+}
+
+/// Non-source inputs the doc rules check against.
+#[derive(Debug, Default)]
+pub struct Docs {
+    /// Contents of `DESIGN.md`.
+    pub design: String,
+    /// Contents of `EXPERIMENTS.md`.
+    pub experiments: String,
+    /// Contents of `README.md`.
+    pub readme: String,
+}
+
+/// Hot-path roots for L001: reachability starts here.
+pub const L001_ROOTS: &[&str] =
+    &["plan_frame_in", "bucket_sort_duplicated", "duplicate_with_veto", "plan_coherent"];
+
+/// Files forming the coordinator request path for L002.
+pub const L002_FILES: &[&str] = &[
+    "coordinator/service.rs",
+    "coordinator/scheduler.rs",
+    "coordinator/batch.rs",
+    "coordinator/catalog.rs",
+    "coordinator/request.rs",
+];
+
+/// Run every rule over the tree. Waivers are applied by the caller.
+pub fn run_all(files: &[SourceFile], docs: &Docs) -> Vec<Finding> {
+    let mut out = Vec::new();
+    l001_allocation_freedom(files, &mut out);
+    l002_panic_freedom(files, &mut out);
+    l003_determinism(files, &mut out);
+    l004_citations(files, docs, &mut out);
+    l005_metrics_registry(files, docs, &mut out);
+    out.sort_by(|a, b| (&a.file, a.line, a.code).cmp(&(&b.file, b.line, b.code)));
+    out
+}
+
+/// Non-comment tokens of a fn body, borrowed from the file stream.
+fn body_code<'a>(f: &'a SourceFile, body: (usize, usize)) -> Vec<&'a Tok> {
+    f.toks[body.0..body.1].iter().filter(|t| !t.is_comment()).collect()
+}
+
+// ---------------------------------------------------------------- L001
+
+fn l001_allocation_freedom(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let graph = CallGraph::build(files);
+    let mut roots: Vec<FnId> = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (gi, g) in f.fns.iter().enumerate() {
+            if !g.is_test && L001_ROOTS.contains(&g.name.as_str()) {
+                roots.push((fi, gi));
+            }
+        }
+    }
+    let mut reach: Vec<(FnId, FnId)> = graph.reachable(&roots).into_iter().collect();
+    reach.sort_unstable();
+    for ((fi, gi), (rfi, rgi)) in reach {
+        let f = &files[fi];
+        // the arena is the sanctioned allocator: its own fns are exempt
+        if f.rel.ends_with("pipeline/arena.rs") {
+            continue;
+        }
+        let g = &f.fns[gi];
+        let Some(body) = g.body else { continue };
+        let root_name = &files[rfi].fns[rgi].name;
+        let code = body_code(f, body);
+        for w in 0..code.len() {
+            let t = code[w];
+            let hit: Option<&str> = if t.is_ident("Vec")
+                && path_sep(&code, w)
+                && code.get(w + 3).map(|n| n.is_ident("new")) == Some(true)
+            {
+                Some("Vec::new")
+            } else if t.is_ident("vec")
+                && code.get(w + 1).map(|n| n.is_punct('!')) == Some(true)
+            {
+                Some("vec![]")
+            } else if t.is_ident("Box")
+                && path_sep(&code, w)
+                && code.get(w + 3).map(|n| n.is_ident("new")) == Some(true)
+            {
+                Some("Box::new")
+            } else if t.is_ident("String")
+                && path_sep(&code, w)
+                && code.get(w + 3).map(|n| n.is_ident("from")) == Some(true)
+            {
+                Some("String::from")
+            } else if t.is_punct('.') {
+                match code.get(w + 1) {
+                    Some(n) if n.is_ident("collect") => Some(".collect()"),
+                    Some(n) if n.is_ident("to_vec") => Some(".to_vec()"),
+                    // Arc::clone / Rc::clone (refcount bumps) use the
+                    // qualified form, which has `::` not `.` before
+                    // `clone` and so is deliberately not matched here
+                    Some(n) if n.is_ident("clone") => Some(".clone()"),
+                    _ => None,
+                }
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                out.push(Finding {
+                    code: "L001",
+                    file: f.rel.clone(),
+                    line: t.line,
+                    message: format!(
+                        "allocation `{what}` in `{}`, reachable from hot-path \
+                         root `{root_name}`; route it through pipeline::arena::FrameArena",
+                        g.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// `code[w]` is followed by `::` (two colon puncts).
+fn path_sep(code: &[&Tok], w: usize) -> bool {
+    code.get(w + 1).map(|t| t.is_punct(':')) == Some(true)
+        && code.get(w + 2).map(|t| t.is_punct(':')) == Some(true)
+}
+
+// ---------------------------------------------------------------- L002
+
+fn l002_panic_freedom(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for f in files {
+        if !L002_FILES.iter().any(|suffix| f.rel.ends_with(suffix)) {
+            continue;
+        }
+        for g in &f.fns {
+            if g.is_test {
+                continue;
+            }
+            let Some(body) = g.body else { continue };
+            let code = body_code(f, body);
+            let deliver_ok = g.name.starts_with("deliver") || g.name == "drop";
+            for w in 0..code.len() {
+                let t = code[w];
+                let mut push = |line: u32, message: String| {
+                    out.push(Finding { code: "L002", file: f.rel.clone(), line, message });
+                };
+                if t.is_punct('.') {
+                    if let Some(n) = code.get(w + 1) {
+                        if (n.is_ident("unwrap") || n.is_ident("expect"))
+                            && code.get(w + 2).map(|p| p.is_punct('(')) == Some(true)
+                        {
+                            push(
+                                n.line,
+                                format!(
+                                    "`.{}()` in request-path fn `{}`; resolve the job \
+                                     via a deliver_* helper instead of panicking",
+                                    n.text, g.name
+                                ),
+                            );
+                        }
+                    }
+                } else if t.kind == TokKind::Ident
+                    && matches!(
+                        t.text.as_str(),
+                        "panic" | "unreachable" | "todo" | "unimplemented"
+                    )
+                    && code.get(w + 1).map(|p| p.is_punct('!')) == Some(true)
+                {
+                    push(
+                        t.line,
+                        format!("`{}!` in request-path fn `{}`", t.text, g.name),
+                    );
+                } else if t.is_punct('[') && w > 0 {
+                    let p = code[w - 1];
+                    let indexing = p.kind == TokKind::Ident
+                        && !is_keyword(&p.text)
+                        || p.is_punct(')')
+                        || p.is_punct(']')
+                        || p.is_punct('?');
+                    if indexing {
+                        push(
+                            t.line,
+                            format!(
+                                "direct index `[` in request-path fn `{}`; use \
+                                 .get()/.first() and shed or deliver_error on miss",
+                                g.name
+                            ),
+                        );
+                    }
+                } else if t.is_ident("respond")
+                    && code.get(w + 1).map(|p| p.is_punct('.')) == Some(true)
+                    && code
+                        .get(w + 2)
+                        .map(|n| n.is_ident("send") || n.is_ident("try_send"))
+                        == Some(true)
+                    && !deliver_ok
+                {
+                    push(
+                        t.line,
+                        format!(
+                            "raw response send in `{}`; jobs must resolve through a \
+                             deliver_* helper so the exactly-once contract holds",
+                            g.name
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Keywords that can directly precede `[` without forming an index
+/// expression (`return [a, b]`, `break [x]`, `in [..]`, …).
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "return" | "break" | "in" | "if" | "else" | "match" | "mut" | "ref"
+            | "as" | "const" | "static" | "let" | "move" | "while" | "loop" | "for"
+    )
+}
+
+// ---------------------------------------------------------------- L003
+
+/// Modules whose output feeds rendered bytes, coalescing keys, or
+/// `BENCH_*.json`: any `HashMap`/`HashSet` here risks iteration-order
+/// nondeterminism.
+fn l003_in_scope(rel: &str) -> bool {
+    rel.contains("src/pipeline/")
+        || rel.contains("src/gemm/")
+        || rel.contains("src/accel/")
+        || rel.contains("src/scene/")
+        || rel.ends_with("src/runtime/tiled_render.rs")
+        || rel.ends_with("src/bench_harness/gate.rs")
+        || rel.ends_with("coordinator/request.rs")
+}
+
+fn l003_determinism(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for f in files {
+        if !l003_in_scope(&f.rel) {
+            continue;
+        }
+        for (i, t) in f.toks.iter().enumerate() {
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            if (t.text == "HashMap" || t.text == "HashSet") && !f.in_test_range(i) {
+                out.push(Finding {
+                    code: "L003",
+                    file: f.rel.clone(),
+                    line: t.line,
+                    message: format!(
+                        "`{}` in a determinism-critical module; iteration order \
+                         feeds rendered bytes or bench JSON — use BTreeMap/Vec \
+                         or sort before use",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- L004
+
+fn l004_citations(files: &[SourceFile], docs: &Docs, out: &mut Vec<Finding>) {
+    let design_secs = design_sections(&docs.design);
+    let exp_heads = experiment_headings(&docs.experiments);
+
+    // 1. every `DESIGN.md §<n>` / `EXPERIMENTS.md §<name>` in comments
+    for f in files {
+        for t in &f.toks {
+            if !t.is_comment() {
+                continue;
+            }
+            check_citation_text(&t.text, t.line, &f.rel, &design_secs, &exp_heads, out);
+        }
+    }
+    // 2. the same check over README prose
+    for (lineno, line) in docs.readme.lines().enumerate() {
+        check_citation_text(line, lineno as u32 + 1, "README.md", &design_secs, &exp_heads, out);
+    }
+    // 3. README docs-index must cover every DESIGN section
+    let covered = docs_index_sections(&docs.readme);
+    for &sec in &design_secs {
+        if !covered.contains(&sec) {
+            out.push(Finding {
+                code: "L004",
+                file: "README.md".to_string(),
+                line: 1,
+                message: format!(
+                    "docs-index table does not cover DESIGN.md §{sec}; add a row"
+                ),
+            });
+        }
+    }
+}
+
+fn design_sections(design: &str) -> Vec<u32> {
+    let mut secs: Vec<u32> = design
+        .lines()
+        .filter_map(|l| l.strip_prefix("## §"))
+        .filter_map(|rest| {
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            digits.parse().ok()
+        })
+        .collect();
+    secs.sort_unstable();
+    secs.dedup();
+    secs
+}
+
+fn experiment_headings(experiments: &str) -> Vec<String> {
+    experiments
+        .lines()
+        .filter_map(|l| l.strip_prefix("## "))
+        .map(|h| h.trim().to_string())
+        .collect()
+}
+
+/// Scan one line/comment for `DESIGN.md §<n>` (single or `–`/`-`
+/// range) and `EXPERIMENTS.md §<name>` citations and validate each.
+fn check_citation_text(
+    text: &str,
+    line: u32,
+    file: &str,
+    design_secs: &[u32],
+    exp_heads: &[String],
+    out: &mut Vec<Finding>,
+) {
+    let mut rest = text;
+    while let Some(at) = rest.find("DESIGN.md §") {
+        rest = &rest[at + "DESIGN.md §".len()..];
+        for sec in leading_section_list(rest) {
+            if !design_secs.contains(&sec) {
+                out.push(Finding {
+                    code: "L004",
+                    file: file.to_string(),
+                    line,
+                    message: format!(
+                        "citation `DESIGN.md §{sec}` does not resolve to any \
+                         `## §{sec}` heading"
+                    ),
+                });
+            }
+        }
+    }
+    let mut rest = text;
+    while let Some(at) = rest.find("EXPERIMENTS.md §") {
+        rest = &rest[at + "EXPERIMENTS.md §".len()..];
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if name.is_empty() {
+            continue;
+        }
+        if !exp_heads.iter().any(|h| h == &name) {
+            out.push(Finding {
+                code: "L004",
+                file: file.to_string(),
+                line,
+                message: format!(
+                    "citation `EXPERIMENTS.md §{name}` does not match any \
+                     `## {name}` heading"
+                ),
+            });
+        }
+    }
+}
+
+/// Parse `7` or the range form `2–§5` / `2-§5` at the head of `rest`
+/// into the full list of cited sections.
+fn leading_section_list(rest: &str) -> Vec<u32> {
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    let Ok(first) = digits.parse::<u32>() else { return Vec::new() };
+    let tail = &rest[digits.len()..];
+    for dash in ["–§", "-§"] {
+        if let Some(t2) = tail.strip_prefix(dash) {
+            let d2: String = t2.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if let Ok(second) = d2.parse::<u32>() {
+                if second >= first {
+                    return (first..=second).collect();
+                }
+            }
+        }
+    }
+    vec![first]
+}
+
+/// Section numbers covered by the README docs-index table (between the
+/// `## Docs index` heading and the next `## `), ranges expanded.
+fn docs_index_sections(readme: &str) -> Vec<u32> {
+    let mut in_index = false;
+    let mut covered = Vec::new();
+    for line in readme.lines() {
+        if line.starts_with("## ") {
+            in_index = line.trim() == "## Docs index";
+            continue;
+        }
+        if !in_index {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(at) = rest.find('§') {
+            rest = &rest[at + '§'.len_utf8()..];
+            for sec in leading_section_list(rest) {
+                covered.push(sec);
+            }
+        }
+    }
+    covered.sort_unstable();
+    covered.dedup();
+    covered
+}
+
+// ---------------------------------------------------------------- L005
+
+fn l005_metrics_registry(files: &[SourceFile], docs: &Docs, out: &mut Vec<Finding>) {
+    let Some(metrics) = files.iter().find(|f| f.rel.ends_with("coordinator/metrics.rs"))
+    else {
+        return;
+    };
+    let fields = snapshot_fields(metrics);
+    for (name, line) in &fields {
+        if !word_present(&docs.design, name) {
+            out.push(Finding {
+                code: "L005",
+                file: metrics.rel.clone(),
+                line: *line,
+                message: format!(
+                    "metric `{name}` is not documented in DESIGN.md; add it to \
+                     the metrics registry table"
+                ),
+            });
+        }
+        let asserted = files.iter().any(|f| {
+            f.rel.starts_with("rust/tests/")
+                && f.toks.iter().any(|t| t.is_ident(name))
+        });
+        if !asserted {
+            out.push(Finding {
+                code: "L005",
+                file: metrics.rel.clone(),
+                line: *line,
+                message: format!(
+                    "metric `{name}` is not asserted by any test under \
+                     rust/tests/; pin it in the metrics-registry test"
+                ),
+            });
+        }
+    }
+}
+
+/// Field names of `pub struct MetricsSnapshot { pub name: ty, … }`.
+fn snapshot_fields(f: &SourceFile) -> Vec<(String, u32)> {
+    let code: Vec<&Tok> = f.toks.iter().filter(|t| !t.is_comment()).collect();
+    let mut out = Vec::new();
+    for w in 0..code.len() {
+        if !(code[w].is_ident("struct")
+            && code.get(w + 1).map(|t| t.is_ident("MetricsSnapshot")) == Some(true))
+        {
+            continue;
+        }
+        // find the opening brace, then collect `pub name :` at depth 1
+        let mut j = w + 2;
+        while j < code.len() && !code[j].is_punct('{') {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        while j < code.len() {
+            let t = code[j];
+            if t.is_punct('{') {
+                depth += 1;
+            } else if t.is_punct('}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if depth == 1
+                && t.is_ident("pub")
+                && code.get(j + 1).map(|t| t.kind == TokKind::Ident) == Some(true)
+                && code.get(j + 2).map(|t| t.is_punct(':')) == Some(true)
+            {
+                out.push((code[j + 1].text.clone(), code[j + 1].line));
+            }
+            j += 1;
+        }
+        break;
+    }
+    out
+}
+
+/// `needle` appears in `hay` with non-identifier characters (or the
+/// string boundary) on both sides.
+fn word_present(hay: &str, needle: &str) -> bool {
+    let bytes = hay.as_bytes();
+    let mut from = 0usize;
+    while let Some(at) = hay[from..].find(needle) {
+        let start = from + at;
+        let end = start + needle.len();
+        let left_ok = start == 0
+            || !(bytes[start - 1].is_ascii_alphanumeric() || bytes[start - 1] == b'_');
+        let right_ok = end == bytes.len()
+            || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_');
+        if left_ok && right_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+// ------------------------------------------------------------ fixtures
+
+/// A synthetic violation tree per rule code, used by
+/// `gemm-gs lint --check-fixture CODE` and the fixture tests to prove
+/// each rule still fires.
+pub fn fixture(code: &str) -> Option<(Vec<(&'static str, &'static str)>, Docs)> {
+    let docs_ok = || Docs {
+        design: "## §1 — Overview\ntext\n".to_string(),
+        experiments: "## Perf\n".to_string(),
+        readme: "## Docs index\n| overview | DESIGN.md §1 | lib |\n".to_string(),
+    };
+    match code {
+        "L000" => Some((
+            vec![(
+                "rust/src/coordinator/service.rs",
+                "fn quiet() { let x = 1; } // lint:allow(L002): nothing here fires\n\
+                 fn also_quiet(v: &[u32]) -> u32 {\n\
+                     // lint:allow(L002)\n\
+                     v[0]\n\
+                 }\n",
+            )],
+            docs_ok(),
+        )),
+        "L001" => Some((
+            vec![(
+                "rust/src/pipeline/fixture_hot.rs",
+                "pub fn plan_frame_in() { let v: Vec<u32> = Vec::new(); helper(&v); }\n\
+                 fn helper(v: &[u32]) { let _w = v.to_vec(); let _b = vec![1u8]; }\n",
+            )],
+            docs_ok(),
+        )),
+        "L002" => Some((
+            vec![(
+                "rust/src/coordinator/service.rs",
+                "fn handle(x: Option<u32>, v: &[u32]) -> u32 {\n\
+                     let a = x.unwrap();\n\
+                     let b = v[0];\n\
+                     if a + b > 3 { panic!(\"boom\"); }\n\
+                     a + b\n\
+                 }\n",
+            )],
+            docs_ok(),
+        )),
+        "L003" => Some((
+            vec![(
+                "rust/src/pipeline/fixture_det.rs",
+                "use std::collections::HashMap;\n\
+                 pub fn coalesce() -> HashMap<u32, u32> { HashMap::default() }\n",
+            )],
+            docs_ok(),
+        )),
+        "L004" => Some((
+            vec![(
+                "rust/src/pipeline/fixture_doc.rs",
+                "//! Sorting contract per DESIGN.md §99 and EXPERIMENTS.md §Warp.\n\
+                 pub fn documented() {}\n",
+            )],
+            docs_ok(),
+        )),
+        "L005" => Some((
+            vec![(
+                "rust/src/coordinator/metrics.rs",
+                "pub struct MetricsSnapshot { pub undocumented_metric: u64 }\n",
+            )],
+            docs_ok(),
+        )),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::apply_waivers;
+
+    fn run_fixture(code: &str) -> Vec<Finding> {
+        let (srcs, docs) = fixture(code).expect("fixture exists");
+        let files: Vec<SourceFile> =
+            srcs.iter().map(|(rel, text)| SourceFile::parse(rel, text)).collect();
+        let raw = run_all(&files, &docs);
+        let (active, _waived) = apply_waivers(&files, raw);
+        active
+    }
+
+    #[test]
+    fn every_rule_fires_on_its_fixture() {
+        for code in ["L000", "L001", "L002", "L003", "L004", "L005"] {
+            let findings = run_fixture(code);
+            assert!(
+                findings.iter().any(|f| f.code == code),
+                "{code} did not fire on its fixture: {findings:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn l001_reports_reaching_root_and_spares_the_arena() {
+        let findings = run_fixture("L001");
+        let helper_hit = findings
+            .iter()
+            .find(|f| f.message.contains("`helper`"))
+            .expect("callee reached through the graph");
+        assert!(helper_hit.message.contains("plan_frame_in"), "{helper_hit:?}");
+
+        // the same banned tokens inside pipeline/arena.rs are exempt
+        let files = vec![SourceFile::parse(
+            "rust/src/pipeline/arena.rs",
+            "pub fn plan_frame_in() { let _v: Vec<u32> = Vec::new(); }\n",
+        )];
+        let raw = run_all(&files, &Docs::default());
+        assert!(raw.iter().all(|f| f.code != "L001"), "{raw:?}");
+    }
+
+    #[test]
+    fn l002_ignores_test_code_and_out_of_scope_files() {
+        let files = vec![
+            SourceFile::parse(
+                "rust/src/coordinator/service.rs",
+                "#[cfg(test)]\nmod tests {\n  fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n",
+            ),
+            SourceFile::parse(
+                "rust/src/pipeline/plan.rs",
+                "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+            ),
+        ];
+        let raw = run_all(&files, &Docs::default());
+        assert!(raw.iter().all(|f| f.code != "L002"), "{raw:?}");
+    }
+
+    #[test]
+    fn waiver_with_reason_suppresses_and_is_not_stale() {
+        let files = vec![SourceFile::parse(
+            "rust/src/coordinator/service.rs",
+            "fn f(v: &[u32]) -> u32 {\n\
+                 // lint:allow(L002): v is length-checked by the caller\n\
+                 v[0]\n\
+             }\n",
+        )];
+        let raw = run_all(&files, &Docs::default());
+        let (active, waived) = apply_waivers(&files, raw);
+        assert_eq!(waived, 1);
+        assert!(active.is_empty(), "{active:?}");
+    }
+
+    #[test]
+    fn l004_validates_ranges_and_readme_coverage() {
+        let docs = Docs {
+            design: "## §1 — A\n## §2 — B\n## §3 — C\n".into(),
+            experiments: String::new(),
+            readme: "## Docs index\n| ab | DESIGN.md §1–§2 | x |\n".into(),
+        };
+        let files = vec![SourceFile::parse(
+            "rust/src/lib.rs",
+            "//! See DESIGN.md §1–§3 for the pipeline.\n",
+        )];
+        let raw = run_all(&files, &docs);
+        let l004: Vec<_> = raw.iter().filter(|f| f.code == "L004").collect();
+        // the §1–§3 citation is valid; §3 missing from the docs index
+        assert_eq!(l004.len(), 1, "{l004:?}");
+        assert!(l004[0].message.contains("§3"), "{l004:?}");
+    }
+
+    #[test]
+    fn l005_passes_when_documented_and_asserted() {
+        let files = vec![
+            SourceFile::parse(
+                "rust/src/coordinator/metrics.rs",
+                "pub struct MetricsSnapshot { pub frames: u64 }\n",
+            ),
+            SourceFile::parse("rust/tests/metrics.rs", "fn t(s: &S) { let _ = s.frames; }\n"),
+        ];
+        let docs = Docs { design: "| `frames` | frames delivered |\n".into(), ..Docs::default() };
+        let raw = run_all(&files, &docs);
+        assert!(raw.iter().all(|f| f.code != "L005"), "{raw:?}");
+    }
+}

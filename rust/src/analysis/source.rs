@@ -1,0 +1,419 @@
+//! Per-file item scanning for the linter (DESIGN.md §14): recover
+//! `fn` boundaries, `impl` type context, `#[cfg(test)]` regions, and
+//! `lint:allow` waivers from the token stream.
+//!
+//! This is a brace-depth scanner, not a parser. It is resilient by
+//! construction: an item it fails to classify is simply not a lint
+//! target, which can only produce false negatives (documented in
+//! DESIGN.md §14), never crashes or false positives on well-formed
+//! code.
+
+use std::path::PathBuf;
+
+use super::lexer::{lex, Tok, TokKind};
+
+/// One `fn` item recovered from a source file.
+#[derive(Debug)]
+pub struct FnItem {
+    /// The function's bare name (`plan_frame_in`).
+    pub name: String,
+    /// Surrounding `impl` type, if any (`SceneCatalog` for methods).
+    pub impl_type: Option<String>,
+    /// Token index range of the body *including* braces, if the fn has
+    /// one (trait method declarations do not).
+    pub body: Option<(usize, usize)>,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// True when inside a `#[cfg(test)]` module or under `#[test]`.
+    pub is_test: bool,
+}
+
+/// A `// lint:allow(CODE): reason` waiver comment.
+#[derive(Debug)]
+pub struct Waiver {
+    /// Rule code, e.g. `L002`.
+    pub code: String,
+    /// Mandatory human reason after the colon (may be empty = violation).
+    pub reason: String,
+    /// Line of the waiver comment. The waiver covers findings on this
+    /// line (trailing form) and the next line (standalone form).
+    pub line: u32,
+}
+
+/// A lexed + scanned source file, the unit every rule operates on.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Absolute path on disk.
+    pub path: PathBuf,
+    /// Repo-relative path with forward slashes (stable across hosts).
+    pub rel: String,
+    /// Token stream, comments included.
+    pub toks: Vec<Tok>,
+    /// Recovered `fn` items.
+    pub fns: Vec<FnItem>,
+    /// `lint:allow` waivers found in comments.
+    pub waivers: Vec<Waiver>,
+    /// Token index ranges covered by `#[cfg(test)]` modules.
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    /// Lex and scan `text` under the given repo-relative name.
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let toks = lex(text);
+        let (fns, test_ranges) = scan_items(&toks);
+        let waivers = scan_waivers(&toks);
+        SourceFile {
+            path: PathBuf::from(rel),
+            rel: rel.to_string(),
+            toks,
+            fns,
+            waivers,
+            test_ranges,
+        }
+    }
+
+    /// Is the token at `idx` inside a `#[cfg(test)]` module?
+    pub fn in_test_range(&self, idx: usize) -> bool {
+        self.test_ranges.iter().any(|&(s, e)| idx >= s && idx < e)
+    }
+}
+
+/// Indices of non-comment tokens, in order — rules match on code
+/// structure, comments would break adjacency.
+pub fn code_indices(toks: &[Tok]) -> Vec<usize> {
+    (0..toks.len()).filter(|&i| !toks[i].is_comment()).collect()
+}
+
+fn scan_items(toks: &[Tok]) -> (Vec<FnItem>, Vec<(usize, usize)>) {
+    let code = code_indices(toks);
+    let mut fns = Vec::new();
+    let mut test_ranges = Vec::new();
+    // stacks keyed by brace depth at which the region closes
+    let mut impl_stack: Vec<(usize, String)> = Vec::new(); // (close_depth, type)
+    let mut test_stack: Vec<(usize, usize)> = Vec::new(); // (close_depth, start_tok)
+    let mut depth = 0usize;
+    let mut pending_attr_test = false; // a #[test]/#[cfg(test)] attr was just seen
+    let mut k = 0usize;
+    while k < code.len() {
+        let i = code[k];
+        let t = &toks[i];
+        match &t.kind {
+            TokKind::Punct('{') => {
+                depth += 1;
+                k += 1;
+            }
+            TokKind::Punct('}') => {
+                depth = depth.saturating_sub(1);
+                while impl_stack.last().map(|&(d, _)| d == depth) == Some(true) {
+                    impl_stack.pop();
+                }
+                while test_stack.last().map(|&(d, _)| d == depth) == Some(true) {
+                    let (_, start) = test_stack.pop().expect("just checked non-empty");
+                    test_ranges.push((start, i + 1));
+                }
+                k += 1;
+            }
+            TokKind::Punct('#') => {
+                // attribute: #[...] or #![...]; flatten and inspect
+                let (next_k, attr_text) = take_attr(toks, &code, k);
+                if attr_text.contains("cfg ( test")
+                    || attr_text == "test"
+                    || attr_text.starts_with("test ")
+                    || attr_text.starts_with("cfg_attr")
+                        && attr_text.contains("test")
+                {
+                    pending_attr_test = true;
+                }
+                k = next_k;
+            }
+            TokKind::Ident if t.text == "mod" => {
+                // a #[cfg(test)] mod opens a test region at this depth
+                if pending_attr_test {
+                    // find the opening brace (or `;` for out-of-line mods)
+                    let mut j = k + 1;
+                    while j < code.len() {
+                        let tok = &toks[code[j]];
+                        if tok.is_punct('{') {
+                            test_stack.push((depth, code[j]));
+                            break;
+                        }
+                        if tok.is_punct(';') {
+                            break;
+                        }
+                        j += 1;
+                    }
+                }
+                pending_attr_test = false;
+                k += 1;
+            }
+            TokKind::Ident if t.text == "impl" => {
+                if let Some(ty) = impl_type(toks, &code, k) {
+                    impl_stack.push((depth, ty));
+                }
+                pending_attr_test = false;
+                k += 1;
+            }
+            TokKind::Ident if t.text == "fn" => {
+                let name = code
+                    .get(k + 1)
+                    .map(|&j| &toks[j])
+                    .filter(|t| t.kind == TokKind::Ident)
+                    .map(|t| t.text.clone());
+                if let Some(name) = name {
+                    let body = fn_body(toks, &code, k);
+                    fns.push(FnItem {
+                        name,
+                        impl_type: impl_stack.last().map(|(_, t)| t.clone()),
+                        body,
+                        line: t.line,
+                        is_test: pending_attr_test || !test_stack.is_empty(),
+                    });
+                    // skip past the signature so nested closures don't
+                    // re-trigger on `fn` pointer types; body tokens are
+                    // still walked for braces by the main loop
+                }
+                pending_attr_test = false;
+                k += 1;
+            }
+            TokKind::Ident => {
+                // any other item-ish token consumes a pending attr only
+                // at item positions; keep it simple: attrs stick until
+                // the next mod/fn/impl or other ident
+                if !matches!(t.text.as_str(), "pub" | "unsafe" | "const" | "async" | "extern")
+                {
+                    pending_attr_test = false;
+                }
+                k += 1;
+            }
+            _ => k += 1,
+        }
+    }
+    (fns, test_ranges)
+}
+
+/// Consume an attribute starting at `code[k]` (the `#`); return the
+/// next code-index position and the flattened attribute text.
+fn take_attr(toks: &[Tok], code: &[usize], k: usize) -> (usize, String) {
+    let mut j = k + 1;
+    // optional ! for inner attributes
+    if code.get(j).map(|&i| toks[i].is_punct('!')) == Some(true) {
+        j += 1;
+    }
+    if code.get(j).map(|&i| toks[i].is_punct('[')) != Some(true) {
+        return (k + 1, String::new());
+    }
+    j += 1;
+    let mut depth = 1usize;
+    let mut text = String::new();
+    while j < code.len() && depth > 0 {
+        let t = &toks[code[j]];
+        match t.kind {
+            TokKind::Punct('[') => depth += 1,
+            TokKind::Punct(']') => depth -= 1,
+            _ => {}
+        }
+        if depth > 0 {
+            if !text.is_empty() {
+                text.push(' ');
+            }
+            text.push_str(&t.text);
+        }
+        j += 1;
+    }
+    (j, text)
+}
+
+/// Recover the self-type of an `impl` block starting at `code[k]`.
+/// `impl Foo`, `impl<T> Foo<T>`, `impl Trait for path::Bar` → last
+/// path segment of the implemented-on type.
+fn impl_type(toks: &[Tok], code: &[usize], k: usize) -> Option<String> {
+    // collect tokens up to the opening brace (or `;`/`!` bail-outs)
+    let mut span: Vec<&Tok> = Vec::new();
+    let mut j = k + 1;
+    while j < code.len() {
+        let t = &toks[code[j]];
+        if t.is_punct('{') {
+            break;
+        }
+        if t.is_punct(';') {
+            return None;
+        }
+        span.push(t);
+        j += 1;
+    }
+    // if a `for` keyword exists, the type follows it
+    let start = span
+        .iter()
+        .position(|t| t.is_ident("for"))
+        .map(|p| p + 1)
+        .unwrap_or_else(|| {
+            // otherwise skip a leading generics group `<...>`, treating
+            // `->` as a unit so `Fn() -> bool` bounds don't unbalance it
+            let mut p = 0usize;
+            if span.first().map(|t| t.is_punct('<')) == Some(true) {
+                let mut angle = 0isize;
+                while p < span.len() {
+                    match span[p].kind {
+                        TokKind::Punct('<') => angle += 1,
+                        TokKind::Punct('>') => {
+                            let arrow = p > 0 && span[p - 1].is_punct('-');
+                            if !arrow {
+                                angle -= 1;
+                                if angle == 0 {
+                                    p += 1;
+                                    break;
+                                }
+                            }
+                        }
+                        _ => {}
+                    }
+                    p += 1;
+                }
+            }
+            p
+        });
+    // take the last ident of the leading path (`a::b::Type`)
+    let mut last: Option<String> = None;
+    let mut j = start;
+    while j < span.len() {
+        match &span[j].kind {
+            TokKind::Ident => last = Some(span[j].text.clone()),
+            TokKind::Punct(':') | TokKind::Punct('&') => {}
+            _ => break,
+        }
+        j += 1;
+    }
+    last
+}
+
+/// Find the body token range of the `fn` at `code[k]`: the first `{`
+/// after the signature (balanced to its `}`), or `None` when the item
+/// ends in `;`. Const-generic braces inside the signature are rare
+/// enough in this crate to ignore (DESIGN.md §14 false negatives).
+fn fn_body(toks: &[Tok], code: &[usize], k: usize) -> Option<(usize, usize)> {
+    let mut j = k + 1;
+    while j < code.len() {
+        let t = &toks[code[j]];
+        if t.is_punct(';') {
+            return None;
+        }
+        if t.is_punct('{') {
+            let open = code[j];
+            let mut depth = 1usize;
+            j += 1;
+            while j < code.len() && depth > 0 {
+                match toks[code[j]].kind {
+                    TokKind::Punct('{') => depth += 1,
+                    TokKind::Punct('}') => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            let close = code.get(j.saturating_sub(1)).copied().unwrap_or(toks.len() - 1);
+            return Some((open, close + 1));
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Scan comments for `lint:allow(CODE): reason`. Codes that do not
+/// match `L` + three digits are ignored entirely (doc prose can show
+/// the syntax with a placeholder without minting a waiver).
+fn scan_waivers(toks: &[Tok]) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for t in toks {
+        if !t.is_comment() {
+            continue;
+        }
+        let Some(at) = t.text.find("lint:allow(") else { continue };
+        let rest = &t.text[at + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let code = rest[..close].trim().to_string();
+        let valid = code.len() == 4
+            && code.starts_with('L')
+            && code[1..].bytes().all(|b| b.is_ascii_digit());
+        if !valid {
+            continue;
+        }
+        let after = &rest[close + 1..];
+        let reason = after
+            .strip_prefix(':')
+            .map(|r| r.trim().trim_end_matches("*/").trim().to_string())
+            .unwrap_or_default();
+        out.push(Waiver { code, reason, line: t.line });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_fns_with_impl_context_and_bodies() {
+        let f = SourceFile::parse(
+            "rust/src/x.rs",
+            r#"
+pub fn free(x: u32) -> u32 { x + 1 }
+struct Foo;
+impl Foo {
+    pub fn method(&self) {}
+}
+impl<T: Clone> Wrapper<T> {
+    fn generic_method(&self) -> T { self.0.clone() }
+}
+impl Drop for Foo {
+    fn drop(&mut self) {}
+}
+trait T2 { fn decl_only(&self); }
+"#,
+        );
+        let by_name = |n: &str| f.fns.iter().find(|f| f.name == n).unwrap();
+        assert_eq!(by_name("free").impl_type, None);
+        assert!(by_name("free").body.is_some());
+        assert_eq!(by_name("method").impl_type.as_deref(), Some("Foo"));
+        assert_eq!(by_name("generic_method").impl_type.as_deref(), Some("Wrapper"));
+        assert_eq!(by_name("drop").impl_type.as_deref(), Some("Foo"));
+        assert!(by_name("decl_only").body.is_none());
+    }
+
+    #[test]
+    fn cfg_test_modules_and_test_attrs_are_flagged() {
+        let f = SourceFile::parse(
+            "rust/src/x.rs",
+            r#"
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    fn helper() {}
+    #[test]
+    fn a_test() { helper(); }
+}
+#[test]
+fn top_level_test() {}
+"#,
+        );
+        let by_name = |n: &str| f.fns.iter().find(|f| f.name == n).unwrap();
+        assert!(!by_name("prod").is_test);
+        assert!(by_name("helper").is_test);
+        assert!(by_name("a_test").is_test);
+        assert!(by_name("top_level_test").is_test);
+    }
+
+    #[test]
+    fn waivers_parse_code_and_reason() {
+        let f = SourceFile::parse(
+            "rust/src/x.rs",
+            "// lint:allow(L002): worker panics surface at join\n\
+             fn x() {} // lint:allow(L001):\n\
+             // lint:allow(CODE): doc example, not a waiver\n",
+        );
+        assert_eq!(f.waivers.len(), 2);
+        assert_eq!(f.waivers[0].code, "L002");
+        assert_eq!(f.waivers[0].reason, "worker panics surface at join");
+        assert_eq!(f.waivers[1].code, "L001");
+        assert_eq!(f.waivers[1].reason, "");
+    }
+}

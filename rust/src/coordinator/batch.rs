@@ -43,6 +43,7 @@
 //! deadline accessor so the coalescing logic is testable without
 //! spinning up render workers.
 
+use super::lock_unpoisoned;
 use crate::model::request::Stage;
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
@@ -198,7 +199,7 @@ where
     /// followers. Returns `None` once the queue has disconnected and
     /// the pending buffer is empty — the worker's signal to exit.
     pub fn next_batch(&self) -> Option<Vec<T>> {
-        let mut inner = self.inner.lock().expect("batch queue lock poisoned");
+        let mut inner = lock_unpoisoned(&self.inner);
 
         let seed = match inner.pending.pop_front() {
             Some(aged) => aged,
@@ -231,12 +232,13 @@ where
             match self.inner.try_lock() {
                 Ok(guard) => guard,
                 Err(std::sync::TryLockError::WouldBlock) => return BatchPoll::Idle,
-                Err(std::sync::TryLockError::Poisoned(_)) => {
-                    panic!("batch queue lock poisoned")
-                }
+                // recover like coordinator::lock_unpoisoned: the queue
+                // stays structurally valid and every in-flight job is
+                // answered by its Drop backstop
+                Err(std::sync::TryLockError::Poisoned(poisoned)) => poisoned.into_inner(),
             }
         } else {
-            self.inner.lock().expect("batch queue lock poisoned")
+            lock_unpoisoned(&self.inner)
         };
 
         let seed = match inner.pending.pop_front() {
@@ -271,12 +273,12 @@ where
     /// `max_batch - 1` compatible followers within `timeout`.
     fn fill_batch(&self, inner: &mut Inner<T>, seed: T) -> Vec<T> {
         let max_batch = self.policy.max_batch.max(1);
+        let key = (self.key_of)(&seed);
         let mut batch = vec![seed];
         if max_batch == 1 {
             return batch;
         }
 
-        let key = (self.key_of)(&batch[0]);
         let deadline = Instant::now() + self.policy.timeout;
         while batch.len() < max_batch {
             // Drain what is already queued without waiting; only sleep
@@ -340,37 +342,47 @@ where
             let d = (self.deadline_of)(item);
             (d.is_none(), d.unwrap_or(far), idx)
         };
-        // starvation guard first (oldest starved item wins), then EDF
-        let seed_at = inner
-            .pending
-            .iter()
-            .position(|aged| aged.passes >= STARVE_LIMIT)
-            .unwrap_or_else(|| {
-                (0..inner.pending.len())
-                    .min_by_key(|&i| urgency(&inner.pending[i].item, i))
-                    .expect("pending holds at least the seed")
-            });
-        let seed = inner.pending.remove(seed_at).expect("index in range").item;
-        let key = (self.key_of)(&seed);
+        // move the reorder window into a scratch list tagged with each
+        // item's admission position (the urgency tie-break); chosen
+        // items leave it, the rest go back below in admission order
+        let mut window: Vec<(usize, Aged<T>)> =
+            inner.pending.drain(..).enumerate().collect();
 
-        let mut compatible: Vec<usize> = (0..inner.pending.len())
-            .filter(|&i| (self.key_of)(&inner.pending[i].item) == key)
-            .collect();
-        compatible.sort_by_key(|&i| urgency(&inner.pending[i].item, i));
-        compatible.truncate(max_batch - 1);
-        // remove back-to-front so earlier indices stay valid
-        compatible.sort_unstable();
-        let mut tail: Vec<(usize, T)> = Vec::with_capacity(compatible.len());
-        for &i in compatible.iter().rev() {
-            tail.push((i, inner.pending.remove(i).expect("index in range").item));
-        }
-        // everything left behind was passed over by this pop
-        for aged in inner.pending.iter_mut() {
+        // starvation guard first (oldest starved item wins), then EDF
+        let seed_at = window
+            .iter()
+            .position(|(_, aged)| aged.passes >= STARVE_LIMIT)
+            .or_else(|| {
+                window
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, (i, aged))| urgency(&aged.item, *i))
+                    .map(|(at, _)| at)
+            });
+        // the seed pushed above keeps the window non-empty, so `seed_at`
+        // is always Some; the defensive arm flushes an empty batch
+        // upward (a no-op for the worker loop) instead of panicking
+        let Some(seed_at) = seed_at else { return Vec::new() };
+        let (_, seed) = window.remove(seed_at);
+        let key = (self.key_of)(&seed.item);
+
+        let (mut chosen, mut rest): (Vec<(usize, Aged<T>)>, Vec<(usize, Aged<T>)>) =
+            window.into_iter().partition(|(_, aged)| (self.key_of)(&aged.item) == key);
+        chosen.sort_by_key(|(i, aged)| urgency(&aged.item, *i));
+        // compatible items beyond the batch cap stay pending
+        let cut = max_batch.saturating_sub(1).min(chosen.len());
+        rest.extend(chosen.split_off(cut));
+        // everything left behind was passed over by this pop; restore
+        // admission order so FIFO tie-breaks survive the round-trip
+        rest.sort_unstable_by_key(|&(i, _)| i);
+        for (_, mut aged) in rest {
             aged.passes = aged.passes.saturating_add(1);
+            inner.pending.push_back(aged);
         }
-        tail.sort_by_key(|e| urgency(&e.1, e.0));
-        let mut batch = vec![seed];
-        batch.extend(tail.into_iter().map(|(_, item)| item));
+
+        let mut batch = Vec::with_capacity(chosen.len() + 1);
+        batch.push(seed.item);
+        batch.extend(chosen.into_iter().map(|(_, aged)| aged.item));
         batch
     }
 }

@@ -63,6 +63,7 @@ use crate::scene::ply::PlyError;
 use crate::scene::source::{sources_from_dir, SceneSource};
 use std::collections::HashMap;
 use std::path::Path;
+use super::lock_unpoisoned;
 use std::sync::{Arc, Mutex, OnceLock, Weak};
 use std::time::Instant;
 
@@ -324,7 +325,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
         redeliver: impl Fn(Vec<P>) + Send + Sync + 'static,
         fail: impl Fn(P, &str) + Send + Sync + 'static,
     ) {
-        *self.hooks.lock().expect("catalog hooks poisoned") =
+        *lock_unpoisoned(&self.hooks) =
             Some(Arc::new(Hooks { redeliver: Box::new(redeliver), fail: Box::new(fail) }));
     }
 
@@ -334,10 +335,10 @@ impl<P: Send + 'static> SceneCatalog<P> {
     /// shutdown never deadlocks on a channel the catalog keeps open.
     /// Idempotent.
     pub fn disconnect(&self) {
-        let hooks = self.hooks.lock().expect("catalog hooks poisoned").take();
+        let hooks = lock_unpoisoned(&self.hooks).take();
         let mut drained: Vec<P> = Vec::new();
         {
-            let mut guard = self.inner.lock().expect("catalog lock poisoned");
+            let mut guard = lock_unpoisoned(&self.inner);
             for (name, entry) in guard.entries.iter_mut() {
                 if let EntryState::Loading(parked) = &mut entry.state {
                     drained.append(parked);
@@ -364,7 +365,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
     /// them permanently pinned).
     pub fn register(&self, name: impl Into<String>, source: SceneSource) -> bool {
         let name = name.into();
-        let mut guard = self.inner.lock().expect("catalog lock poisoned");
+        let mut guard = lock_unpoisoned(&self.inner);
         let inner = &mut *guard;
         if inner.entries.contains_key(&name) {
             return false;
@@ -409,7 +410,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
     /// lock, deduplicated) and charges the result against the budget.
     pub fn acquire(&self, scene: &str, accel: AccelKind, payloads: Vec<P>) -> Acquire<P> {
         let action = {
-            let mut guard = self.inner.lock().expect("catalog lock poisoned");
+            let mut guard = lock_unpoisoned(&self.inner);
             let inner = &mut *guard;
             inner.tick += 1;
             let tick = inner.tick;
@@ -473,8 +474,13 @@ impl<P: Send + 'static> SceneCatalog<P> {
         match action {
             Action::StartLoad { source, reload } => {
                 let name = scene.to_string();
-                let this = self.weak.upgrade().expect("catalog alive during acquire");
-                std::thread::spawn(move || this.run_load(name, source, reload));
+                // the catalog is only ever reached through an `Arc`, so
+                // the upgrade fails only mid-teardown — the payloads
+                // just parked are dropped with the entries, and their
+                // drop backstops answer the callers (DESIGN.md §12)
+                if let Some(this) = self.weak.upgrade() {
+                    std::thread::spawn(move || this.run_load(name, source, reload));
+                }
                 Acquire::Parked
             }
             Action::Prepare { cell, base, generation, method, payloads } => {
@@ -501,7 +507,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
         let result = source.load();
         let elapsed = t0.elapsed();
         let (parked, outcome) = {
-            let mut guard = self.inner.lock().expect("catalog lock poisoned");
+            let mut guard = lock_unpoisoned(&self.inner);
             let inner = &mut *guard;
             inner.tick += 1;
             let tick = inner.tick;
@@ -571,7 +577,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
     /// scene was reloaded meanwhile — `generation` guards the stale
     /// case) and evict to fit.
     fn charge_prepared(&self, scene: &str, generation: u64, bytes: u64) {
-        let mut guard = self.inner.lock().expect("catalog lock poisoned");
+        let mut guard = lock_unpoisoned(&self.inner);
         let inner = &mut *guard;
         let mut charged = false;
         if let Some(entry) = inner.entries.get_mut(scene) {
@@ -672,7 +678,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
     /// Clone the hooks handle out of the lock — a hook call that blocks
     /// (bounded queue) must never serialize other loads or shutdown.
     fn hooks_handle(&self) -> Option<Arc<Hooks<P>>> {
-        self.hooks.lock().expect("catalog hooks poisoned").clone()
+        lock_unpoisoned(&self.hooks).clone()
     }
 
     fn redeliver(&self, parked: Vec<P>) {
@@ -699,14 +705,14 @@ impl<P: Send + 'static> SceneCatalog<P> {
 
     /// Whether `scene` is registered (any state).
     pub fn is_registered(&self, scene: &str) -> bool {
-        self.inner.lock().expect("catalog lock poisoned").entries.contains_key(scene)
+        lock_unpoisoned(&self.inner).entries.contains_key(scene)
     }
 
     /// Registration and residency in one lock round-trip — what
     /// admission control wants per request: `None` when unregistered,
     /// otherwise `Some(resident)`.
     pub fn residency(&self, scene: &str) -> Option<bool> {
-        let guard = self.inner.lock().expect("catalog lock poisoned");
+        let guard = lock_unpoisoned(&self.inner);
         guard
             .entries
             .get(scene)
@@ -718,14 +724,14 @@ impl<P: Send + 'static> SceneCatalog<P> {
     /// unregistered. Tests use this to pin the production ↔ model
     /// state mapping; implicit `Arc` pinning reads as `Resident`.
     pub fn residency_state(&self, scene: &str) -> Option<Residency> {
-        let guard = self.inner.lock().expect("catalog lock poisoned");
+        let guard = lock_unpoisoned(&self.inner);
         guard.entries.get(scene).map(|e| e.state.residency())
     }
 
     /// Whether `scene` is resident right now (admission control uses
     /// this to price the load a request would have to wait for).
     pub fn is_resident(&self, scene: &str) -> bool {
-        let guard = self.inner.lock().expect("catalog lock poisoned");
+        let guard = lock_unpoisoned(&self.inner);
         matches!(
             guard.entries.get(scene).map(|e| &e.state),
             Some(EntryState::Resident(_))
@@ -734,7 +740,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
 
     /// Registered scene names, sorted.
     pub fn registered_names(&self) -> Vec<String> {
-        let guard = self.inner.lock().expect("catalog lock poisoned");
+        let guard = lock_unpoisoned(&self.inner);
         let mut names: Vec<String> = guard.entries.keys().cloned().collect();
         names.sort();
         names
@@ -743,7 +749,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
     /// Prepared models fully initialized across resident scenes
     /// (`Coordinator::prepared_models_cached`).
     pub fn prepared_count(&self) -> usize {
-        let guard = self.inner.lock().expect("catalog lock poisoned");
+        let guard = lock_unpoisoned(&self.inner);
         guard
             .entries
             .values()
@@ -757,7 +763,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
 
     /// Residency summary (LRU order, bytes, loading count).
     pub fn stats(&self) -> CatalogStats {
-        let guard = self.inner.lock().expect("catalog lock poisoned");
+        let guard = lock_unpoisoned(&self.inner);
         let mut resident: Vec<(u64, String)> = guard
             .entries
             .iter()

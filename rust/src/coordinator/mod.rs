@@ -21,6 +21,25 @@ pub mod request;
 pub mod scheduler;
 pub mod service;
 
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a coordinator mutex, recovering the guard when the lock is
+/// poisoned instead of propagating the panic.
+///
+/// Poisoning means *some* thread panicked while holding this lock; the
+/// request path's exactly-once contract (DESIGN.md §12) does not care —
+/// every in-flight job is answered by its `Drop` backstop, and the
+/// guarded structures (queues, residency maps, counters) are kept
+/// structurally valid at every await-free mutation point. Cascading the
+/// panic instead would turn one failed frame into a whole-service
+/// outage, which is exactly what the sharded-serving roadmap cannot
+/// absorb. This is the one sanctioned answer to lock poisoning on the
+/// request path; the `gemm-gs lint` rule L002 (DESIGN.md §14) bans the
+/// `.lock().expect(..)` alternative.
+pub(crate) fn lock_unpoisoned<T>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    mutex.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 pub use crate::accel::AccelKind;
 pub use batch::{BatchPoll, BatchPolicy, BatchScheduler};
 pub use catalog::{Acquire, CatalogConfig, CatalogStats, SceneCatalog, SceneSet};

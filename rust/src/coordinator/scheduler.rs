@@ -60,6 +60,7 @@ pub fn render_frame_parallel_in(
             handles.push(scope.spawn(move || {
                 let mut blender = backend
                     .instantiate(cfg.batch)
+                    // lint:allow(L002): direct-render API with no response channel — an uninstantiable backend is a caller config bug, and a loud panic here beats compositing a silently empty frame
                     .expect("backend instantiation failed in worker");
                 let mut out = Vec::new();
                 let mut buf = [[0.0f32; 3]; TILE_PIXELS];
@@ -84,31 +85,29 @@ pub fn render_frame_parallel_in(
             }));
         }
         for h in handles {
+            // lint:allow(L002): a tile worker panic must surface at join — swallowing it would composite an incomplete frame as if it were whole
             per_thread.push(h.join().expect("tile worker panicked"));
         }
     });
 
-    // composite
+    // composite (iterator walk keeps the request path free of direct
+    // indexing; edge tiles clip against the frame bounds per pixel)
     let mut image = Image::new(camera.width, camera.height);
     for results in &per_thread {
         for (tid, rgb, t_left) in results {
             let origin = plan.grid.tile_origin(*tid);
-            for ly in 0..TILE_SIZE {
-                let py = origin.1 + ly as u32;
-                if py >= camera.height {
-                    break;
+            for (j, (pix, t)) in rgb.iter().zip(t_left.iter()).enumerate() {
+                let px = origin.0 + (j % TILE_SIZE) as u32;
+                let py = origin.1 + (j / TILE_SIZE) as u32;
+                if px >= camera.width || py >= camera.height {
+                    continue;
                 }
-                for lx in 0..TILE_SIZE {
-                    let px = origin.0 + lx as u32;
-                    if px >= camera.width {
-                        break;
-                    }
-                    let j = ly * TILE_SIZE + lx;
-                    let t = t_left[j];
-                    image.data[(py * camera.width + px) as usize] = [
-                        rgb[j][0] + t * cfg.background.x,
-                        rgb[j][1] + t * cfg.background.y,
-                        rgb[j][2] + t * cfg.background.z,
+                let [r, g, b] = *pix;
+                if let Some(dst) = image.data.get_mut((py * camera.width + px) as usize) {
+                    *dst = [
+                        r + t * cfg.background.x,
+                        g + t * cfg.background.y,
+                        b + t * cfg.background.z,
                     ];
                 }
             }

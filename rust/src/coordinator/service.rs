@@ -231,6 +231,16 @@ impl Drop for Job {
     }
 }
 
+/// Answer an admission-time rejection through the request's response
+/// channel before a [`Job`] — and with it the lifecycle machine and its
+/// `Drop` backstop — exists. The caller may already have hung up, so
+/// the send is fire-and-forget. Every response leaves the coordinator
+/// through a `deliver_*` helper (lint rule L002, DESIGN.md §14); this
+/// one covers the pre-admission exits.
+fn deliver_rejection(respond: &SyncSender<RenderResponse>, response: RenderResponse) {
+    let _ = respond.send(response);
+}
+
 /// Coalescing key (DESIGN.md §6, §8): requests merge only when they
 /// target the same scene at the same resolution under the same accel
 /// method (shared cloud, tile grid, staging shapes, pair multiset).
@@ -319,22 +329,24 @@ fn execute_batch(
         .map(|o| ExecutedFrame { image: Arc::new(o.image), timings: o.timings, stats: o.stats })
         .collect();
     let mut first_use = vec![true; shared.len()];
-    Ok(slot
-        .into_iter()
-        .map(|j| {
-            let timings = if first_use[j] {
-                first_use[j] = false;
-                shared[j].timings
-            } else {
-                StageTimings::default()
-            };
-            ExecutedFrame {
-                image: Arc::clone(&shared[j].image),
-                timings,
-                stats: shared[j].stats,
+    let mut out = Vec::with_capacity(slot.len());
+    for j in slot {
+        // slots index into `unique`, which `shared` mirrors 1:1; a miss
+        // means the dedup above is broken, and the request path answers
+        // that with a delivered error, not a panic (DESIGN.md §12)
+        let frame = shared
+            .get(j)
+            .ok_or_else(|| anyhow::anyhow!("batch dedup produced dangling slot {j}"))?;
+        let timings = match first_use.get_mut(j) {
+            Some(fu) if *fu => {
+                *fu = false;
+                frame.timings
             }
-        })
-        .collect())
+            _ => StageTimings::default(),
+        };
+        out.push(ExecutedFrame { image: Arc::clone(&frame.image), timings, stats: frame.stats });
+    }
+    Ok(out)
 }
 
 /// One worker's QoS state: the shared policy plus its own closed-loop
@@ -435,7 +447,10 @@ fn handle_session_job(
             return;
         }
     }
-    let key = job.request.session.expect("session job routed without a session key");
+    let Some(key) = job.request.session else {
+        job.deliver_error(metrics, "internal: session job routed without a session key".to_string());
+        return;
+    };
     let accel = job.request.accel;
     let scene = job.request.scene.clone();
     let needs_rebuild = match sessions.map.get(&key.session) {
@@ -452,7 +467,12 @@ fn handle_session_job(
         job.park_started = Some(Instant::now());
         match catalog.acquire(&scene, accel, vec![job]) {
             Acquire::Ready(cloud, mut jobs) => {
-                let mut job = jobs.pop().expect("one payload in, one payload out");
+                let Some(mut job) = jobs.pop() else {
+                    // payload vec came back empty: the job was consumed
+                    // (or dropped, firing its backstop) inside the
+                    // catalog — nothing left to answer here
+                    return;
+                };
                 job.park_started = None; // resident: no park happened
                 let cfg = base_cfg.clone().with_accel(accel.instantiate());
                 sessions.insert(
@@ -478,7 +498,10 @@ fn handle_session_job(
     } else {
         job
     };
-    let ws = sessions.map.get_mut(&key.session).expect("session just inserted");
+    let Some(ws) = sessions.map.get_mut(&key.session) else {
+        job.deliver_error(metrics, "internal: session cache dropped a just-built session".to_string());
+        return;
+    };
     if !needs_rebuild {
         // frames of a session must arrive in sequence order for the
         // warm cache to describe this frame's predecessor; a replayed
@@ -501,7 +524,11 @@ fn handle_session_job(
                 std::slice::from_ref(&plan),
                 ws.session.render_config(),
             )
-            .map(|mut outs| (outs.pop().expect("one plan in, one frame out"), source));
+            .and_then(|mut outs| {
+                outs.pop()
+                    .map(|out| (out, source))
+                    .ok_or_else(|| anyhow::anyhow!("tiled runtime returned no frame for the plan"))
+            });
             // hand the consumed plan's buffers back to the session's
             // own arena so the next frame plans allocation-free
             ws.session.retire_plan(plan);
@@ -564,13 +591,13 @@ fn handle_shared_batch(
             _ => live.push(job),
         }
     }
-    if live.is_empty() {
-        return;
-    }
     // one method per batch (the coalescing key guarantees it) — the
     // ladder's cost ratios are per request method, since `None` rungs
     // inherit it (qos::ladder)
-    let request_accel = live[0].request.accel;
+    let Some(front) = live.first() else {
+        return;
+    };
+    let request_accel = front.request.accel;
     let mut rung = 0usize;
     if let Some(q) = qos.as_mut() {
         rung = q.controller.rung();
@@ -604,9 +631,11 @@ fn handle_shared_batch(
         // higher than a shallower one for this request's method
         rung = q.cfg.ladder.effective_rung(rung, request_accel);
     }
-    if live.is_empty() {
+    let Some(front) = live.first() else {
         return;
-    }
+    };
+    let lead_camera = front.request.camera;
+    let scene = front.request.scene.clone();
 
     let fail_all = |jobs: &mut [Job], msg: String| {
         for job in jobs.iter_mut() {
@@ -620,7 +649,7 @@ fn handle_shared_batch(
     // rung lands on (DESIGN.md §8).
     let (accel, cameras): (AccelKind, Vec<Camera>) = match qos.as_ref() {
         Some(q) => {
-            let accel = q.cfg.ladder.apply(rung, &live[0].request.camera, request_accel).1;
+            let accel = q.cfg.ladder.apply(rung, &lead_camera, request_accel).1;
             let cams = live
                 .iter()
                 .map(|j| q.cfg.ladder.apply(rung, &j.request.camera, request_accel).0)
@@ -635,7 +664,6 @@ fn handle_shared_batch(
     // immediately returns to the queue instead of blocking on I/O.
     // (`cameras` is recomputed on redelivery, at whatever rung the
     // controller holds then.)
-    let scene = live[0].request.scene.clone();
     let park_mark = Instant::now();
     for job in &mut live {
         job.park_started = Some(park_mark);
@@ -769,8 +797,11 @@ impl Coordinator {
                     m.enqueue();
                     let dead = match job.request.session {
                         Some(key) => {
-                            let w = (key.session % sticky.len() as u64) as usize;
-                            sticky[w].send(job).err().map(|e| e.0)
+                            let w = (key.session % sticky.len().max(1) as u64) as usize;
+                            match sticky.get(w) {
+                                Some(stx) => stx.send(job).err().map(|e| e.0),
+                                None => Some(job),
+                            }
                         }
                         None => shared.send(job).err().map(|e| e.0),
                     };
@@ -932,11 +963,14 @@ impl Coordinator {
         let (respond, rx) = sync_channel(1);
         if let Err(msg) = request.validate() {
             self.metrics.record_error();
-            let _ = respond.send(RenderResponse::failure(
-                request.id,
-                Duration::ZERO,
-                format!("rejected at admission: {msg}"),
-            ));
+            deliver_rejection(
+                &respond,
+                RenderResponse::failure(
+                    request.id,
+                    Duration::ZERO,
+                    format!("rejected at admission: {msg}"),
+                ),
+            );
             return rx;
         }
         // the catalog knows every servable scene up front (DESIGN.md
@@ -946,11 +980,14 @@ impl Coordinator {
         // deadline check below
         let Some(scene_resident) = self.catalog.residency(&request.scene) else {
             self.metrics.record_error();
-            let _ = respond.send(RenderResponse::failure(
-                request.id,
-                Duration::ZERO,
-                format!("unknown scene '{}'", request.scene),
-            ));
+            deliver_rejection(
+                &respond,
+                RenderResponse::failure(
+                    request.id,
+                    Duration::ZERO,
+                    format!("unknown scene '{}'", request.scene),
+                ),
+            );
             return rx;
         };
         if let Some(deadline) = request.deadline {
@@ -1001,7 +1038,7 @@ impl Coordinator {
             };
             if let Some(reason) = shed_reason {
                 self.metrics.record_shed();
-                let _ = respond.send(RenderResponse::shed(request.id, Duration::ZERO, reason));
+                deliver_rejection(&respond, RenderResponse::shed(request.id, Duration::ZERO, reason));
                 return rx;
             }
         }
@@ -1034,11 +1071,14 @@ impl Coordinator {
             }
         };
         let undeliverable = match job.request.session {
-            Some(key) if !self.sticky_txs.is_empty() => {
-                let w = (key.session % self.sticky_txs.len() as u64) as usize;
-                send(&self.sticky_txs[w], job)
+            Some(key) => {
+                let w = (key.session % self.sticky_txs.len().max(1) as u64) as usize;
+                match self.sticky_txs.get(w) {
+                    Some(stx) => send(stx, job),
+                    // no sticky queues: every worker already exited
+                    None => Some(NotSent::Dead(job)),
+                }
             }
-            Some(_) => Some(NotSent::Dead(job)),
             None => match self.tx.as_ref() {
                 Some(tx) => send(tx, job),
                 None => Some(NotSent::Dead(job)),

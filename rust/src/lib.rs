@@ -36,6 +36,7 @@
 )]
 
 pub mod accel;
+pub mod analysis;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod gemm;

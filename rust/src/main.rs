@@ -139,13 +139,15 @@ fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
     let cmd = cmd.as_str();
-    // `bench-gate --quick` is the CLI's one boolean switch; the strict
-    // `--key value` parser would reject it, so it is stripped here
-    let quick = cmd == "bench-gate" && {
+    // boolean switches (`bench-gate --quick`, `lint --json`) would be
+    // rejected by the strict `--key value` parser, so strip them first
+    let strip_switch = |name: &str, argv: &mut Vec<String>| {
         let before = argv.len();
-        argv.retain(|a| a != "--quick");
+        argv.retain(|a| a != name);
         argv.len() != before
     };
+    let quick = cmd == "bench-gate" && strip_switch("--quick", &mut argv);
+    let lint_json = cmd == "lint" && strip_switch("--json", &mut argv);
     let args = Args::parse(&argv[1.min(argv.len())..]);
     let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
 
@@ -211,6 +213,7 @@ fn main() {
         "bench-soak" => cmd_bench_soak(&args),
         "bench-gate" => cmd_bench_gate(&args, quick),
         "check-model" => cmd_check_model(&args),
+        "lint" => cmd_lint(&args, lint_json),
         "export-ply" => cmd_export_ply(&args),
         "inspect" => cmd_inspect(scale),
         "help" | "--help" | "-h" => usage(),
@@ -224,7 +227,7 @@ fn main() {
 
 fn usage() {
     println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
-    println!("subcommands: render render-trajectory serve export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak bench-gate inspect check-model");
+    println!("subcommands: render render-trajectory serve export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak bench-gate inspect check-model lint");
     println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
     println!("              --accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>");
     println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
@@ -240,6 +243,67 @@ fn usage() {
     println!("              (frame-planning perf gate vs a recorded BENCH_*.json baseline)");
     println!("check-model:  --seed N --depth D --steps N  (model checker, DESIGN.md §12)");
     println!("              --fault <none|drop-on-death|skip-starvation|lifo-redeliver|evict-pinned>");
+    println!("lint:         --json --root DIR --explain CODE --check-fixture CODE");
+    println!("              (invariant linter, DESIGN.md §14; exits 0 clean / 1 violations / 2 usage)");
+}
+
+/// `gemm-gs lint`: run the in-crate invariant linter (DESIGN.md §14).
+///
+/// Exit contract: `0` clean tree, `1` at least one active finding,
+/// `2` usage or IO error. `--explain CODE` prints the rule's full
+/// explanation; `--check-fixture CODE` lints that rule's synthetic
+/// violation tree and exits 1 when the rule fires (exit 2 means the
+/// rule has rotted — it no longer catches its own fixture).
+fn cmd_lint(args: &Args, json: bool) {
+    use gemm_gs::analysis;
+
+    if let Some(code) = args.flags.get("explain") {
+        match analysis::explain(code) {
+            Some(text) => {
+                let title = analysis::RULES
+                    .iter()
+                    .find(|(c, _, _)| *c == code.as_str())
+                    .map(|(_, t, _)| *t)
+                    .unwrap_or("");
+                println!("{code} — {title}\n\n{text}");
+                return;
+            }
+            None => bail(&format!(
+                "--explain: unknown rule code '{code}' (shipped: L000 L001 L002 L003 L004 L005)"
+            )),
+        }
+    }
+
+    if let Some(code) = args.flags.get("check-fixture") {
+        let report = analysis::check_fixture(code).unwrap_or_else(|e| bail(&e));
+        let fired = report.findings.iter().any(|f| f.code == code.as_str());
+        print!("{}", if json { report.render_json() } else { report.render_text() });
+        if fired {
+            std::process::exit(1); // the injected violation was caught
+        }
+        bail(&format!("rule {code} did not fire on its own fixture — linter rot"));
+    }
+
+    let root = match args.flags.get("root") {
+        Some(dir) => {
+            let p = std::path::PathBuf::from(dir);
+            if !p.join("DESIGN.md").is_file() || !p.join("rust/src/lib.rs").is_file() {
+                bail(&format!("--root '{dir}' is not the repository root"));
+            }
+            p
+        }
+        None => {
+            let cwd = std::env::current_dir().unwrap_or_else(|e| bail(&format!("cwd: {e}")));
+            analysis::find_root(&cwd).unwrap_or_else(|| {
+                bail("repository root not found (looked for DESIGN.md + rust/src/lib.rs upward); pass --root DIR")
+            })
+        }
+    };
+    let report = analysis::run_lint(&root).unwrap_or_else(|e| bail(&e));
+    print!("{}", if json { report.render_json() } else { report.render_text() });
+    if !report.clean() {
+        std::process::exit(1);
+    }
 }
 
 /// `--accel` with a graceful unknown-name error (shared by render,

@@ -299,3 +299,47 @@ fn export_ply_requires_out_and_roundtrips_through_render() {
     assert!(String::from_utf8_lossy(&out.stdout).contains("rendered 'train'"));
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn lint_clean_tree_exits_zero_and_reports_json_schema() {
+    // the shipped tree must hold its own invariants — the same
+    // invocation the CI lint job gates merges on
+    let out = gemm_gs().arg("lint").output().expect("spawn");
+    assert!(
+        out.status.success(),
+        "lint must exit 0 on the shipped tree:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+
+    let out = gemm_gs().args(["lint", "--json"]).output().expect("spawn");
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"schema_version\": 1"), "{stdout}");
+    assert!(stdout.contains("\"clean\": true"), "{stdout}");
+    assert!(stdout.contains("\"findings\": []"), "{stdout}");
+}
+
+#[test]
+fn lint_fixtures_fire_every_rule_exiting_one() {
+    // --check-fixture runs a rule against a built-in violating fixture;
+    // exit 1 proves the rule still bites (CI loops over all six)
+    for code in ["L000", "L001", "L002", "L003", "L004", "L005"] {
+        let out = gemm_gs().args(["lint", "--check-fixture", code]).output().expect("spawn");
+        assert_eq!(out.status.code(), Some(1), "{code} must fire on its own fixture");
+        assert!(String::from_utf8_lossy(&out.stdout).contains(code), "{code} not in report");
+    }
+}
+
+#[test]
+fn lint_explain_exits_zero_and_misuse_exits_two() {
+    let out = gemm_gs().args(["lint", "--explain", "L003"]).output().expect("spawn");
+    assert!(out.status.success(), "--explain on a shipped code must exit 0");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("L003"));
+
+    let out = gemm_gs().args(["lint", "--explain", "L999"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "unknown rule code must exit 2");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("L999"));
+
+    let out = gemm_gs().args(["lint", "--root", "/definitely/not/a/repo"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "bad --root must exit 2");
+}

@@ -1,0 +1,107 @@
+//! The metrics-registry coherence test (DESIGN.md §14, lint rule
+//! L005): every public field of `MetricsSnapshot` is asserted here by
+//! name, against a real served workload — one lazily loaded scene, a
+//! coalescable burst of frames, and one admission rejection. Adding a
+//! field to the snapshot without documenting it in DESIGN.md's
+//! registry table *and* asserting it here fails `gemm-gs lint`.
+
+use gemm_gs::coordinator::{
+    BackendKind, Coordinator, CoordinatorConfig, RenderRequest, SceneSet,
+};
+use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::pipeline::render::RenderConfig;
+use gemm_gs::scene::source::SceneSource;
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::time::Duration;
+
+const SCALE: f64 = 0.001;
+
+fn orbit_camera(i: usize) -> Camera {
+    let theta = i as f32 / 4.0 * std::f32::consts::TAU;
+    Camera::look_at(
+        Vec3::new(8.0 * theta.cos(), 2.5, 8.0 * theta.sin()),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        160,
+        96,
+    )
+}
+
+#[test]
+fn every_snapshot_field_reports_a_coherent_value() {
+    let mut set = SceneSet::new();
+    set.insert(
+        "train",
+        SceneSource::Synthetic { spec: scene_by_name("train").unwrap(), scale: SCALE },
+    );
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 64,
+            backend: BackendKind::NativeGemm,
+            render: RenderConfig::default(),
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(200),
+            ..CoordinatorConfig::default()
+        },
+        set,
+    );
+
+    // a burst over two poses: parks behind the lazy load, redelivers,
+    // coalesces
+    let n = 6u64;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| coord.submit(RenderRequest::new(i, "train", orbit_camera(i as usize % 2))))
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().error.is_none());
+    }
+    // one admission rejection so the error counter is exercised too
+    let bad = coord.render_sync(RenderRequest::new(99, "nope", orbit_camera(0)));
+    assert!(bad.error.is_some());
+
+    let m = coord.metrics();
+
+    // delivery counters
+    assert_eq!(m.frames, n, "every good request delivered a frame");
+    assert_eq!(m.errors, 1, "exactly the unknown-scene rejection");
+    assert_eq!(m.backstopped_responses, 0, "no Drop backstop fired in a healthy run");
+    assert_eq!(m.queue_depth, 0, "queue gauge drains back to zero");
+
+    // latency surface: percentiles are ordered and non-degenerate
+    assert!(m.mean_latency > Duration::ZERO);
+    assert!(m.p50 > Duration::ZERO);
+    assert!(m.p50 <= m.p95 && m.p95 <= m.p99);
+
+    // stage attribution: the rendered frames accumulated stage time
+    assert!(m.stage_pre + m.stage_dup + m.stage_sort + m.stage_blend > Duration::ZERO);
+    assert!(m.stage_blend > Duration::ZERO);
+
+    // batching: every delivered frame rode exactly one executed batch
+    assert!(m.batches >= 1 && m.batches <= n);
+    assert!(m.coalesced_frames <= n);
+    assert!(m.max_batch_size >= 1 && m.max_batch_size <= 4);
+    assert!((m.mean_batch_size * m.batches as f64 - n as f64).abs() < 1e-9);
+    assert!(m.prepared_models <= n);
+
+    // no session traffic, no QoS in this config
+    assert_eq!(m.plan_reuse, 0);
+    assert_eq!(m.plan_fallbacks, 0);
+    assert_eq!(m.shed, 0);
+    assert_eq!(m.degraded_frames, 0);
+    assert_eq!(m.rung, 0);
+
+    // catalog residency: one registered scene, lazily loaded once
+    assert_eq!(m.scenes_registered, 1);
+    assert_eq!(m.scenes_resident, 1);
+    assert!(m.bytes_resident > 0);
+    assert_eq!(m.parked, 0, "park gauge drains once the load completes");
+    assert_eq!(m.scene_loads, 1);
+    assert_eq!(m.scene_reloads, 0);
+    assert_eq!(m.scene_load_failures, 0);
+    assert_eq!(m.scene_evictions, 0);
+    assert!(m.mean_scene_load > Duration::ZERO, "the lazy load was measured");
+
+    coord.shutdown();
+}
