@@ -61,13 +61,16 @@ pub const RULES: &[(&str, &str, &str)] = &[
     (
         "L002",
         "request-path panic freedom",
-        "The coordinator request path (service, scheduler, batch, catalog, \
-         request) owes every accepted job exactly one response, so it must \
-         not panic: .unwrap(), .expect(), panic!/unreachable!/todo!/\
-         unimplemented! and direct slice indexing `x[i]` are banned in favour \
-         of .get()/.first() plus a deliver_* helper (or a shed). Raw \
-         `respond.send` outside a deliver_* helper or Drop impl is also \
-         flagged, because it bypasses the exactly-once lifecycle gate.",
+        "The request path — the coordinator core (service, scheduler, batch, \
+         catalog, request) plus the sharded serving tier (net/frame, \
+         net/wire, net/client, net/server, router/ring, router/metrics, \
+         router/service; DESIGN.md §15) — owes every accepted job exactly \
+         one response, so it must not panic: .unwrap(), .expect(), \
+         panic!/unreachable!/todo!/unimplemented! and direct slice indexing \
+         `x[i]` are banned in favour of .get()/.first() plus a deliver_* \
+         helper (or a shed / error response). Raw `respond.send` outside a \
+         deliver_* helper or Drop impl is also flagged, because it bypasses \
+         the exactly-once lifecycle gate.",
     ),
     (
         "L003",
@@ -91,9 +94,10 @@ pub const RULES: &[(&str, &str, &str)] = &[
     (
         "L005",
         "metrics-registry coherence",
-        "Every public field of coordinator::metrics::MetricsSnapshot must be \
-         documented in DESIGN.md (the metrics registry table) and asserted \
-         by at least one test under rust/tests/. A metric that operators can \
+        "Every public field of a `MetricsSnapshot` struct in any metrics \
+         module (coordinator::metrics, router::metrics) must be documented \
+         in DESIGN.md (the metrics registry tables) and asserted by at \
+         least one test under rust/tests/. A metric that operators can \
          read but no test pins — or that the docs do not define — drifts \
          silently; L005 makes adding a metric and documenting it one \
          atomic change.",

@@ -37,13 +37,23 @@ pub struct Docs {
 pub const L001_ROOTS: &[&str] =
     &["plan_frame_in", "bucket_sort_duplicated", "duplicate_with_veto", "plan_coherent"];
 
-/// Files forming the coordinator request path for L002.
+/// Files forming the request path for L002: the coordinator core plus
+/// the sharded serving tier (wire protocol, shard server, front-door
+/// router — DESIGN.md §15), where a panic would drop a peer's in-flight
+/// responses.
 pub const L002_FILES: &[&str] = &[
     "coordinator/service.rs",
     "coordinator/scheduler.rs",
     "coordinator/batch.rs",
     "coordinator/catalog.rs",
     "coordinator/request.rs",
+    "net/frame.rs",
+    "net/wire.rs",
+    "net/client.rs",
+    "net/server.rs",
+    "router/ring.rs",
+    "router/metrics.rs",
+    "router/service.rs",
 ];
 
 /// Run every rule over the tree. Waivers are applied by the caller.
@@ -434,10 +444,14 @@ fn docs_index_sections(readme: &str) -> Vec<u32> {
 // ---------------------------------------------------------------- L005
 
 fn l005_metrics_registry(files: &[SourceFile], docs: &Docs, out: &mut Vec<Finding>) {
-    let Some(metrics) = files.iter().find(|f| f.rel.ends_with("coordinator/metrics.rs"))
-    else {
-        return;
-    };
+    // every metrics module's snapshot struct is in scope: the
+    // coordinator's (DESIGN.md §7) and the router's (DESIGN.md §15)
+    for metrics in files.iter().filter(|f| f.rel.ends_with("/metrics.rs")) {
+        l005_one_module(metrics, files, docs, out);
+    }
+}
+
+fn l005_one_module(metrics: &SourceFile, files: &[SourceFile], docs: &Docs, out: &mut Vec<Finding>) {
     let fields = snapshot_fields(metrics);
     for (name, line) in &fields {
         if !word_present(&docs.design, name) {

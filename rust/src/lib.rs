@@ -42,8 +42,10 @@ pub mod coordinator;
 pub mod gemm;
 pub mod math;
 pub mod model;
+pub mod net;
 pub mod perfmodel;
 pub mod pipeline;
 pub mod qos;
+pub mod router;
 pub mod runtime;
 pub mod scene;

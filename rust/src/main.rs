@@ -31,6 +31,13 @@
 //! gemm-gs inspect [--scale 0.02]    # Table 1   (workload statistics)
 //! gemm-gs check-model [--seed 42] [--depth 7] [--steps 20000] [--fault none]
 //!                                   # lifecycle model checker (DESIGN.md §12)
+//! gemm-gs serve-shard --listen 127.0.0.1:7401 [--scenes train,truck] [--scene-dir DIR]
+//!                [--workers N --memory-budget B --slo-ms MS --max-batch N]
+//!                                   # one TCP shard over a coordinator (DESIGN.md §15)
+//! gemm-gs route --listen 127.0.0.1:7400 --shards HOST:P,HOST:P[,...] [--replicas 2]
+//!                                   # consistent-hash front door over shards (§15)
+//! gemm-gs net-drive --connect 127.0.0.1:7400 [--requests 64 --conns 4 --seed 42]
+//!                                   # seeded mixed sticky/one-shot wire workload
 //! ```
 //!
 //! `serve --slo-ms <ms> [--ladder <spec>]` turns the service SLO-driven
@@ -213,6 +220,9 @@ fn main() {
         "bench-soak" => cmd_bench_soak(&args),
         "bench-gate" => cmd_bench_gate(&args, quick),
         "check-model" => cmd_check_model(&args),
+        "serve-shard" => cmd_serve_shard(&args),
+        "route" => cmd_route(&args),
+        "net-drive" => cmd_net_drive(&args),
         "lint" => cmd_lint(&args, lint_json),
         "export-ply" => cmd_export_ply(&args),
         "inspect" => cmd_inspect(scale),
@@ -227,7 +237,7 @@ fn main() {
 
 fn usage() {
     println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
-    println!("subcommands: render render-trajectory serve export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak bench-gate inspect check-model lint");
+    println!("subcommands: render render-trajectory serve serve-shard route net-drive export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak bench-gate inspect check-model lint");
     println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
     println!("              --accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>");
     println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
@@ -245,6 +255,13 @@ fn usage() {
     println!("              --fault <none|drop-on-death|skip-starvation|lifo-redeliver|evict-pinned>");
     println!("lint:         --json --root DIR --explain CODE --check-fixture CODE");
     println!("              (invariant linter, DESIGN.md §14; exits 0 clean / 1 violations / 2 usage)");
+    println!("serve-shard:  --listen HOST:PORT --scenes A,B|--scene-dir DIR --workers N");
+    println!("              --memory-budget B --slo-ms MS --ladder L --max-batch N --backend B");
+    println!("              (one TCP shard fronting a coordinator, DESIGN.md §15)");
+    println!("route:        --listen HOST:PORT --shards HOST:P,HOST:P --replicas N --vnodes N");
+    println!("              --call-timeout-ms T  (consistent-hash front door, DESIGN.md §15)");
+    println!("net-drive:    --connect HOST:PORT --requests N --conns C --seed N --scenes A,B");
+    println!("              --width W --height H --slo-ms MS  (exits 1 if any request is lost)");
 }
 
 /// `gemm-gs lint`: run the in-crate invariant linter (DESIGN.md §14).
@@ -900,6 +917,239 @@ fn cmd_check_model(args: &Args) {
         Err(v) => violated("catalog", &v),
     }
     println!("check-model: all invariants hold (seed {seed}, depth {depth}, steps {steps})");
+}
+
+/// `serve-shard` — front one coordinator with the framed TCP protocol
+/// (DESIGN.md §15). Prints a `shard listening on ADDR (...)` line (the
+/// e2e harness and CI smoke parse it to learn the ephemeral port of a
+/// `--listen 127.0.0.1:0` bind), then serves until killed. Exit 2 on
+/// malformed flags, 1 on bind/scene failures.
+fn cmd_serve_shard(args: &Args) {
+    use gemm_gs::net::{ShardServer, ShardServerConfig};
+    use std::io::Write as _;
+
+    let listen = args.get("listen", "");
+    if listen.is_empty() {
+        bail("serve-shard requires --listen HOST:PORT (use 127.0.0.1:0 for an ephemeral port)");
+    }
+    let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
+    let backend = parse_backend(args);
+    let memory_budget = parse_memory_budget(args);
+    let scene_dir = args.get("scene-dir", "");
+    let scene_set = if scene_dir.is_empty() {
+        // --scenes is a comma list of synthetic Table 1 scenes
+        let mut scenes = HashMap::new();
+        for name in args.get("scenes", "train").split(',').map(str::trim) {
+            if name.is_empty() {
+                continue;
+            }
+            let spec = scene_by_name(name).unwrap_or_else(|| {
+                eprintln!("unknown scene '{name}'");
+                std::process::exit(1)
+            });
+            scenes.insert(spec.name.to_string(), Arc::new(spec.synthesize(scale)));
+        }
+        if scenes.is_empty() {
+            bail("flag --scenes: expected a comma-separated list of scene names");
+        }
+        SceneSet::from(scenes)
+    } else {
+        let set = SceneSet::from_dir(Path::new(&scene_dir)).unwrap_or_else(|e| {
+            eprintln!("--scene-dir: {e}");
+            std::process::exit(1)
+        });
+        if set.is_empty() {
+            eprintln!("--scene-dir: no *.ply checkpoints under '{scene_dir}'");
+            std::process::exit(1);
+        }
+        set
+    };
+    let scene_names = scene_set.names();
+    let slo_ms = args.get_f64("slo-ms", 0.0);
+    let qos = (slo_ms > 0.0).then(|| {
+        let ladder = QualityLadder::parse(&args.get("ladder", "default"))
+            .unwrap_or_else(|e| bail(&format!("--ladder: {e}")));
+        QosConfig {
+            slo: std::time::Duration::from_secs_f64(slo_ms / 1e3),
+            ladder,
+            controller: Default::default(),
+        }
+    });
+    let coord = Arc::new(Coordinator::start(
+        CoordinatorConfig {
+            workers: args.get_usize("workers", 2),
+            queue_capacity: args.get_usize("queue-capacity", 64),
+            backend,
+            max_batch: args.get_usize("max-batch", 1),
+            qos,
+            catalog: CatalogConfig { memory_budget },
+            ..CoordinatorConfig::default()
+        },
+        scene_set,
+    ));
+    let cfg = ShardServerConfig { budget_bytes: memory_budget, ..ShardServerConfig::default() };
+    let server = ShardServer::start(&listen, coord, cfg).unwrap_or_else(|e| {
+        eprintln!("serve-shard: {e}");
+        std::process::exit(1)
+    });
+    println!(
+        "shard listening on {} ({} scenes: {})",
+        server.local_addr(),
+        scene_names.len(),
+        scene_names.join(", ")
+    );
+    // parent processes read this line through a pipe: flush past the
+    // block buffering stdout gets when it is not a tty
+    let _ = std::io::stdout().flush();
+    server.join();
+}
+
+/// `route` — the consistent-hash front door (DESIGN.md §15). Probes
+/// every shard at startup (strict: an unreachable shard is a runtime
+/// failure, exit 1), prints `router listening on ADDR (...)`, then
+/// serves until killed.
+fn cmd_route(args: &Args) {
+    use gemm_gs::router::{Router, RouterConfig, RouterServer};
+    use std::io::Write as _;
+
+    let listen = args.get("listen", "");
+    if listen.is_empty() {
+        bail("route requires --listen HOST:PORT");
+    }
+    let shard_addrs: Vec<String> = args
+        .get("shards", "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if shard_addrs.is_empty() {
+        bail("route requires --shards HOST:PORT[,HOST:PORT...]");
+    }
+    let mut cfg = RouterConfig::new(shard_addrs);
+    cfg.replicas = args.get_usize("replicas", 2);
+    cfg.vnodes = args.get_usize("vnodes", 96);
+    cfg.call_timeout =
+        std::time::Duration::from_secs_f64(args.get_f64("call-timeout-ms", 5000.0) / 1e3);
+    let addrs_for_log = cfg.shard_addrs.clone();
+    let router = Arc::new(Router::connect(cfg).unwrap_or_else(|e| {
+        eprintln!("route: {e}");
+        std::process::exit(1)
+    }));
+    for (i, addr) in addrs_for_log.iter().enumerate() {
+        println!("  shard {i} at {addr}: {} scene(s)", router.shard_scenes(i).len());
+    }
+    let server = RouterServer::start(
+        &listen,
+        Arc::clone(&router),
+        Some(std::time::Duration::from_secs(300)),
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("route: {e}");
+        std::process::exit(1)
+    });
+    println!(
+        "router listening on {} ({} shards, {} replica(s) per scene)",
+        server.local_addr(),
+        router.shard_count(),
+        args.get_usize("replicas", 2)
+    );
+    let _ = std::io::stdout().flush();
+    server.join();
+}
+
+/// `net-drive` — seeded wire-protocol load driver: a mixed
+/// sticky/one-shot workload against a shard or router (DESIGN.md §15).
+/// Counts every response kind; exits 1 when any request got *no*
+/// response (transport loss) — the CI failover smoke's health gate.
+fn cmd_net_drive(args: &Args) {
+    use gemm_gs::coordinator::SessionKey;
+    use gemm_gs::net::wire::WireRequest;
+    use gemm_gs::net::ShardClient;
+    use gemm_gs::scene::rng::Rng;
+
+    let connect = args.get("connect", "");
+    if connect.is_empty() {
+        bail("net-drive requires --connect HOST:PORT");
+    }
+    let requests = args.get_usize("requests", 64);
+    let conns = args.get_usize("conns", 4).max(1);
+    let seed = args.get_usize("seed", 42) as u64;
+    let width = args.get_usize("width", 320) as u32;
+    let height = args.get_usize("height", 180) as u32;
+    let slo_ms = args.get_f64("slo-ms", 0.0);
+    let accel = parse_accel(args);
+    let scenes: Vec<String> = args
+        .get("scenes", "train")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if scenes.is_empty() {
+        bail("flag --scenes: expected a comma-separated list of scene names");
+    }
+
+    let mut handles = Vec::new();
+    for c in 0..conns {
+        let connect = connect.clone();
+        let scenes = scenes.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = ShardClient::new(connect, std::time::Duration::from_secs(30));
+            let mut rng = Rng::new(seed ^ (c as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let (mut sent, mut frames, mut shed, mut errors, mut lost) =
+                (0u64, 0u64, 0u64, 0u64, 0u64);
+            let mut seq = 0u64;
+            for i in (c..requests).step_by(conns) {
+                let theta =
+                    (rng.next_u64() % 1000) as f32 / 1000.0 * std::f32::consts::TAU;
+                let scene = scenes[(rng.next_u64() as usize) % scenes.len()].clone();
+                // even ids drive a per-connection sticky trajectory
+                // session; odd ids are one-shot
+                let sticky = i % 2 == 0;
+                let session = if sticky {
+                    Some(SessionKey { session: c as u64 + 1, seq })
+                } else {
+                    None
+                };
+                if sticky {
+                    seq += 1;
+                }
+                let deadline_us =
+                    if slo_ms > 0.0 { Some((slo_ms * 1000.0) as u64) } else { None };
+                let req = WireRequest {
+                    id: (c * 1_000_000 + i) as u64,
+                    scene,
+                    camera: workloads::orbit_camera(theta, width, height),
+                    accel,
+                    session,
+                    deadline_us,
+                };
+                sent += 1;
+                match client.render(&req) {
+                    Ok(r) if r.shed => shed += 1,
+                    Ok(r) if r.error.is_some() => errors += 1,
+                    Ok(_) => frames += 1,
+                    Err(_) => lost += 1,
+                }
+            }
+            (sent, frames, shed, errors, lost)
+        }));
+    }
+    let (mut sent, mut frames, mut shed, mut errors, mut lost) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    for h in handles {
+        let (s, f, sh, e, l) = h.join().unwrap_or((0, 0, 0, 0, 1));
+        sent += s;
+        frames += f;
+        shed += sh;
+        errors += e;
+        lost += l;
+    }
+    println!("drive: sent {sent}, frames {frames}, shed {shed}, errors {errors}, lost {lost}");
+    if lost > 0 {
+        eprintln!("gemm-gs: {lost} request(s) received no response — exactly-once violated");
+        std::process::exit(1);
+    }
 }
 
 /// `export-ply` — write a synthetic Table 1 scene as a 3DGS checkpoint

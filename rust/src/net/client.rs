@@ -1,0 +1,159 @@
+//! Blocking shard clients (DESIGN.md §15). [`ShardClient`] owns one TCP
+//! connection and speaks request→response in lockstep; [`ClientPool`]
+//! is the router-side handle — a small free-list of clients per shard so
+//! concurrent routes don't serialize on one socket.
+//!
+//! Failure policy: a *stale pooled* connection (the shard restarted, or
+//! an idle socket was reaped) is retried once by reconnecting — but only
+//! when the **write** failed, i.e. before the shard can have admitted
+//! the request. Once a request has been written, any failure surfaces as
+//! `Err` so the router's replica failover (which may legitimately
+//! re-execute on another shard) stays the only retry path and the
+//! exactly-once *response* contract holds.
+
+use super::frame::{read_frame, write_frame};
+use super::wire::{WireHealth, WireRequest, WireResponse};
+use crate::coordinator::lock_unpoisoned;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Idle clients kept per [`ClientPool`]; beyond this, returned
+/// connections are simply closed.
+const POOL_CAP: usize = 8;
+
+/// One blocking connection to a shard (or to the router front door —
+/// the wire shapes are the same).
+#[derive(Debug)]
+pub struct ShardClient {
+    addr: String,
+    timeout: Duration,
+    stream: Option<TcpStream>,
+}
+
+impl ShardClient {
+    /// A client for `addr` (`host:port`). Connection is lazy — the first
+    /// [`ShardClient::call`] dials.
+    pub fn new(addr: impl Into<String>, timeout: Duration) -> ShardClient {
+        ShardClient { addr: addr.into(), timeout, stream: None }
+    }
+
+    /// The configured peer address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn connect(&self) -> Result<TcpStream, String> {
+        let addrs = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| format!("resolve '{}': {e}", self.addr))?;
+        let mut last = format!("'{}' resolved to no addresses", self.addr);
+        for sa in addrs {
+            match TcpStream::connect_timeout(&sa, self.timeout) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    let _ = s.set_read_timeout(Some(self.timeout));
+                    let _ = s.set_write_timeout(Some(self.timeout));
+                    return Ok(s);
+                }
+                Err(e) => last = format!("connect '{}': {e}", self.addr),
+            }
+        }
+        Err(last)
+    }
+
+    /// Send one frame and block for the reply frame.
+    pub fn call(&mut self, payload: &str) -> Result<String, String> {
+        let was_cached = self.stream.is_some();
+        let mut stream = match self.stream.take() {
+            Some(s) => s,
+            None => self.connect()?,
+        };
+        if let Err(e) = write_frame(&mut stream, payload) {
+            if !was_cached {
+                return Err(format!("write to '{}': {e}", self.addr));
+            }
+            // stale pooled socket, nothing was admitted — reconnect once
+            stream = self.connect()?;
+            write_frame(&mut stream, payload)
+                .map_err(|e| format!("write to '{}': {e}", self.addr))?;
+        }
+        match read_frame(&mut stream) {
+            Ok(reply) => {
+                self.stream = Some(stream); // healthy: keep for reuse
+                Ok(reply)
+            }
+            Err(e) => Err(format!("read from '{}': {e}", self.addr)),
+        }
+    }
+
+    /// Probe the peer's health/stats report.
+    pub fn health(&mut self) -> Result<WireHealth, String> {
+        let reply = self.call(&WireHealth::request_frame())?;
+        WireHealth::decode(&reply)
+    }
+
+    /// Render one request; the `Ok` response may itself carry an error
+    /// or shed marker — `Err` here means *transport* failure.
+    pub fn render(&mut self, req: &WireRequest) -> Result<WireResponse, String> {
+        let reply = self.call(&req.encode())?;
+        WireResponse::decode(&reply)
+    }
+}
+
+/// A shared, thread-safe free-list of [`ShardClient`]s for one peer.
+/// Checkout → call → return-on-success; a client whose call failed is
+/// dropped (its connection state is unknown).
+#[derive(Debug)]
+pub struct ClientPool {
+    addr: String,
+    timeout: Duration,
+    free: Mutex<Vec<ShardClient>>,
+}
+
+impl ClientPool {
+    /// A pool for `addr`; connections are created on demand.
+    pub fn new(addr: impl Into<String>, timeout: Duration) -> ClientPool {
+        ClientPool { addr: addr.into(), timeout, free: Mutex::new(Vec::new()) }
+    }
+
+    /// The pooled peer address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn checkout(&self) -> ShardClient {
+        match lock_unpoisoned(&self.free).pop() {
+            Some(c) => c,
+            None => ShardClient::new(self.addr.clone(), self.timeout),
+        }
+    }
+
+    fn park(&self, client: ShardClient) {
+        let mut free = lock_unpoisoned(&self.free);
+        if free.len() < POOL_CAP {
+            free.push(client);
+        }
+    }
+
+    /// One frame round-trip on a pooled connection.
+    pub fn call(&self, payload: &str) -> Result<String, String> {
+        let mut client = self.checkout();
+        let result = client.call(payload);
+        if result.is_ok() {
+            self.park(client);
+        }
+        result
+    }
+
+    /// Probe the peer's health/stats report.
+    pub fn health(&self) -> Result<WireHealth, String> {
+        WireHealth::decode(&self.call(&WireHealth::request_frame())?)
+    }
+
+    /// Render one request over a pooled connection.
+    pub fn render(&self, req: &WireRequest) -> Result<WireResponse, String> {
+        WireResponse::decode(&self.call(&req.encode())?)
+    }
+}

@@ -1,0 +1,165 @@
+//! Length-prefixed framing (DESIGN.md §15): one frame is a 4-byte
+//! little-endian `u32` payload length followed by that many bytes of
+//! UTF-8 JSON. The prefix makes message boundaries explicit on a byte
+//! stream, so a reader can tell a clean hang-up (EOF at a boundary)
+//! from a truncated frame, and can reject an absurd length before
+//! allocating for it.
+
+use std::io::{Read, Write};
+
+/// Hard ceiling on one frame's payload (16 MiB). A full-HD f32 frame is
+/// ~24 MB and is not a workload this wire tier serves; anything past
+/// this bound is a corrupt or hostile length prefix and is rejected
+/// before any allocation happens.
+pub const MAX_FRAME_BYTES: u32 = 16 * 1024 * 1024;
+
+/// Why reading or writing a frame failed. Every variant is a normal
+/// return on the request path (L002): the connection handler answers
+/// or closes, it never panics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The peer closed the connection cleanly at a frame boundary —
+    /// the normal end of a conversation, not an error in itself.
+    Closed,
+    /// The stream ended mid-frame: `got` of `expected` bytes arrived
+    /// before EOF. The remainder of this connection is unusable.
+    Truncated {
+        /// Bytes the header or length prefix promised.
+        expected: usize,
+        /// Bytes actually received before the stream ended.
+        got: usize,
+    },
+    /// The length prefix exceeds [`MAX_FRAME_BYTES`]; the stream can no
+    /// longer be trusted to be frame-aligned.
+    TooLarge(u32),
+    /// The payload was not valid UTF-8.
+    BadUtf8,
+    /// Transport-level I/O error (reset, timeout, …).
+    Io(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::Truncated { expected, got } => {
+                write!(f, "truncated frame: got {got} of {expected} bytes")
+            }
+            FrameError::TooLarge(n) => {
+                write!(f, "frame length {n} exceeds the {MAX_FRAME_BYTES}-byte cap")
+            }
+            FrameError::BadUtf8 => write!(f, "frame payload is not UTF-8"),
+            FrameError::Io(e) => write!(f, "transport error: {e}"),
+        }
+    }
+}
+
+/// Read one complete frame, blocking until it arrives (or the stream's
+/// read timeout fires, surfacing as [`FrameError::Io`]).
+pub fn read_frame(r: &mut impl Read) -> Result<String, FrameError> {
+    let mut header = [0u8; 4];
+    read_full(r, &mut header, true)?;
+    let len = u32::from_le_bytes(header);
+    if len > MAX_FRAME_BYTES {
+        return Err(FrameError::TooLarge(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_full(r, &mut payload, false)?;
+    String::from_utf8(payload).map_err(|_| FrameError::BadUtf8)
+}
+
+/// Fill `buf` completely. `at_boundary` marks whether byte 0 of `buf`
+/// is also byte 0 of a frame — EOF there is a clean [`FrameError::Closed`],
+/// EOF anywhere else is [`FrameError::Truncated`].
+fn read_full(r: &mut impl Read, buf: &mut [u8], at_boundary: bool) -> Result<(), FrameError> {
+    let expected = buf.len();
+    let mut got = 0usize;
+    while got < expected {
+        let Some(rest) = buf.get_mut(got..) else {
+            return Err(FrameError::Io("frame buffer bounds".to_string()));
+        };
+        match r.read(rest) {
+            Ok(0) => {
+                return Err(if got == 0 && at_boundary {
+                    FrameError::Closed
+                } else {
+                    FrameError::Truncated { expected, got }
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Write one frame (length prefix + payload) and flush it.
+pub fn write_frame(w: &mut impl Write, payload: &str) -> Result<(), FrameError> {
+    if payload.len() > MAX_FRAME_BYTES as usize {
+        return Err(FrameError::TooLarge(payload.len().min(u32::MAX as usize) as u32));
+    }
+    let header = (payload.len() as u32).to_le_bytes();
+    w.write_all(&header).map_err(|e| FrameError::Io(e.to_string()))?;
+    w.write_all(payload.as_bytes()).map_err(|e| FrameError::Io(e.to_string()))?;
+    w.flush().map_err(|e| FrameError::Io(e.to_string()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrips_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "hello").unwrap();
+        write_frame(&mut buf, "").unwrap();
+        write_frame(&mut buf, "wörld 😀").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), "hello");
+        assert_eq!(read_frame(&mut r).unwrap(), "");
+        assert_eq!(read_frame(&mut r).unwrap(), "wörld 😀");
+        assert_eq!(read_frame(&mut r).unwrap_err(), FrameError::Closed);
+    }
+
+    #[test]
+    fn truncation_is_distinguished_from_clean_close() {
+        // cut inside the header
+        let mut r = Cursor::new(vec![5u8, 0]);
+        assert!(matches!(
+            read_frame(&mut r).unwrap_err(),
+            FrameError::Truncated { expected: 4, got: 2 }
+        ));
+        // cut inside the payload
+        let mut full = Vec::new();
+        write_frame(&mut full, "hello").unwrap();
+        full.truncate(6); // header + 2 payload bytes
+        let mut r = Cursor::new(full);
+        assert!(matches!(
+            read_frame(&mut r).unwrap_err(),
+            FrameError::Truncated { expected: 5, got: 2 }
+        ));
+    }
+
+    #[test]
+    fn oversized_prefix_rejected_before_allocation() {
+        let mut bytes = u32::MAX.to_le_bytes().to_vec();
+        bytes.extend_from_slice(b"junk");
+        let mut r = Cursor::new(bytes);
+        assert_eq!(read_frame(&mut r).unwrap_err(), FrameError::TooLarge(u32::MAX));
+        let big = "x".repeat(MAX_FRAME_BYTES as usize + 1);
+        let mut out = Vec::new();
+        assert!(matches!(write_frame(&mut out, &big).unwrap_err(), FrameError::TooLarge(_)));
+        assert!(out.is_empty(), "nothing written for a rejected frame");
+    }
+
+    #[test]
+    fn non_utf8_payload_is_an_error() {
+        let mut bytes = 2u32.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0xFF, 0xFE]);
+        let mut r = Cursor::new(bytes);
+        assert_eq!(read_frame(&mut r).unwrap_err(), FrameError::BadUtf8);
+    }
+}

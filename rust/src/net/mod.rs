@@ -1,0 +1,24 @@
+//! Layer-3.5 wire tier (DESIGN.md §15): a length-prefixed JSON protocol
+//! over TCP, the codecs that carry [`crate::coordinator::RenderRequest`]
+//! / [`crate::coordinator::RenderResponse`] across a process boundary,
+//! and the [`ShardServer`] that fronts one [`crate::coordinator::Coordinator`]
+//! with a blocking accept loop and per-connection reader/writer threads.
+//!
+//! The offline image has no tokio/serde, so everything here is std-only:
+//! `std::net` blocking sockets, `runtime::json` for payloads, and plain
+//! threads. Every file in this module is inside lint rule L002's
+//! request-path panic-freedom scope (DESIGN.md §14): a malformed frame,
+//! a half-open peer, or a dead coordinator must produce an error
+//! response or a closed connection — never a panic and never a lost
+//! response.
+#![warn(missing_docs)]
+
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod wire;
+
+pub use client::{ClientPool, ShardClient};
+pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME_BYTES};
+pub use server::{ShardServer, ShardServerConfig};
+pub use wire::{WireHealth, WireMessage, WireRequest, WireResponse};

@@ -1,0 +1,220 @@
+//! [`ShardServer`]: fronts one [`Coordinator`] with the framed TCP
+//! protocol (DESIGN.md §15). A blocking accept loop hands each
+//! connection to a reader thread + writer thread pair:
+//!
+//! * the **reader** decodes frames and submits renders through
+//!   [`Coordinator::try_submit`] (so coordinator admission — queue
+//!   bounds, deadline shedding — applies unchanged to remote traffic),
+//!   forwarding the per-request response channel to the writer;
+//! * the **writer** drains replies in FIFO request order, so a pipelined
+//!   connection gets its responses in the order it sent requests.
+//!
+//! Framing faults map to the connection contract proven by
+//! `tests/e2e_net.rs`: a payload-level fault (bad UTF-8, garbage JSON)
+//! is answered with an error *response* and the connection stays usable
+//! — the length prefix already consumed the bad bytes, so the stream is
+//! still frame-aligned. A framing-level fault (oversized prefix,
+//! truncation, I/O error) means byte alignment is lost and the
+//! connection closes; an oversized prefix is answered first since the
+//! peer may still be listening. A half-open peer is reaped by the read
+//! timeout. Nothing on this path panics (lint L002).
+
+use super::frame::{read_frame, write_frame, FrameError};
+use super::wire::{decode_message, WireHealth, WireMessage, WireResponse};
+use crate::coordinator::{Coordinator, RenderResponse};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Tuning for one [`ShardServer`].
+#[derive(Debug, Clone)]
+pub struct ShardServerConfig {
+    /// Per-connection read timeout; a half-open peer is dropped after
+    /// this long with no traffic. `None` waits forever.
+    pub read_timeout: Option<Duration>,
+    /// The catalog budget this shard advertises in health reports —
+    /// the router weighs ring placement by it (DESIGN.md §15).
+    pub budget_bytes: Option<u64>,
+}
+
+impl Default for ShardServerConfig {
+    fn default() -> Self {
+        ShardServerConfig { read_timeout: Some(Duration::from_secs(60)), budget_bytes: None }
+    }
+}
+
+/// A running shard server; dropping the handle leaves the accept loop
+/// running detached — call [`ShardServer::stop`] for a clean shutdown.
+#[derive(Debug)]
+pub struct ShardServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: std::thread::JoinHandle<()>,
+}
+
+impl ShardServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// accepting connections against `coordinator`.
+    pub fn start(
+        addr: &str,
+        coordinator: Arc<Coordinator>,
+        cfg: ShardServerConfig,
+    ) -> Result<ShardServer, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind '{addr}': {e}"))?;
+        let local_addr =
+            listener.local_addr().map_err(|e| format!("local_addr of '{addr}': {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::spawn(move || accept_loop(listener, coordinator, cfg, stop2));
+        Ok(ShardServer { local_addr, stop, accept })
+    }
+
+    /// The bound address (resolves the actual port for `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting and join the accept loop. Connections already
+    /// open finish their in-flight requests and close when the peers
+    /// hang up (or their read timeout fires).
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept() the loop is parked in
+        let _ = TcpStream::connect(self.local_addr);
+        let _ = self.accept.join();
+    }
+
+    /// Block on the accept loop until the process is killed (the
+    /// `gemm-gs serve-shard` foreground mode).
+    pub fn join(self) {
+        let _ = self.accept.join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    cfg: ShardServerConfig,
+    stop: Arc<AtomicBool>,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match conn {
+            Ok(stream) => {
+                let coordinator = Arc::clone(&coordinator);
+                let cfg = cfg.clone();
+                std::thread::spawn(move || handle_conn(stream, coordinator, cfg));
+            }
+            Err(_) => continue, // transient accept error; keep serving
+        }
+    }
+}
+
+/// One reply slot, queued in request order.
+enum Reply {
+    /// Encoded frame, ready to write.
+    Ready(String),
+    /// A render in flight inside the coordinator; the writer blocks on
+    /// its exactly-once response channel when this slot reaches the
+    /// front of the FIFO.
+    Pending { id: u64, rx: Receiver<RenderResponse> },
+}
+
+fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, cfg: ShardServerConfig) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(cfg.read_timeout);
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let (tx, rx) = std::sync::mpsc::channel::<Reply>();
+    let writer = std::thread::spawn(move || writer_loop(write_half, rx));
+    reader_loop(stream, &coordinator, &cfg, &tx);
+    drop(tx); // writer drains remaining replies, then exits
+    let _ = writer.join();
+}
+
+fn reader_loop(
+    mut stream: TcpStream,
+    coordinator: &Coordinator,
+    cfg: &ShardServerConfig,
+    tx: &Sender<Reply>,
+) {
+    loop {
+        let text = match read_frame(&mut stream) {
+            Ok(t) => t,
+            Err(FrameError::Closed) => return,
+            Err(FrameError::BadUtf8) => {
+                // payload consumed in full: the stream is still aligned
+                let resp = WireResponse::failure(0, format!("bad request: {}", FrameError::BadUtf8));
+                if tx.send(Reply::Ready(resp.encode())).is_err() {
+                    return;
+                }
+                continue;
+            }
+            Err(e @ FrameError::TooLarge(_)) => {
+                // alignment lost: answer once so the peer learns why,
+                // then close
+                let resp = WireResponse::failure(0, format!("bad frame: {e}"));
+                let _ = tx.send(Reply::Ready(resp.encode()));
+                return;
+            }
+            // truncated / transport error / read timeout (half-open
+            // peer): the stream cannot be trusted any further
+            Err(_) => return,
+        };
+        let reply = match decode_message(&text) {
+            Ok(WireMessage::Health) => Reply::Ready(health_report(coordinator, cfg).encode()),
+            Ok(WireMessage::Render(wreq)) => {
+                let id = wreq.id;
+                // try_submit, not submit: remote traffic gets the same
+                // bounded-queue shedding as local callers, and the shed
+                // response comes back through the same channel
+                let rx = coordinator.try_submit(wreq.into_request(Instant::now()));
+                Reply::Pending { id, rx }
+            }
+            Err((id, msg)) => {
+                Reply::Ready(WireResponse::failure(id, format!("bad request: {msg}")).encode())
+            }
+        };
+        if tx.send(reply).is_err() {
+            return; // writer is gone (peer hung up mid-write)
+        }
+    }
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Reply>) {
+    while let Ok(reply) = rx.recv() {
+        let payload = match reply {
+            Reply::Ready(p) => p,
+            Reply::Pending { id, rx } => match rx.recv() {
+                Ok(resp) => WireResponse::from_response(&resp).encode(),
+                // the coordinator's exactly-once backstop makes this
+                // unreachable in practice; answer rather than drop
+                Err(_) => WireResponse::failure(
+                    id,
+                    "internal: coordinator dropped the response channel".to_string(),
+                )
+                .encode(),
+            },
+        };
+        if write_frame(&mut stream, &payload).is_err() {
+            return; // peer gone; reader will notice on its next send
+        }
+    }
+}
+
+fn health_report(coordinator: &Coordinator, cfg: &ShardServerConfig) -> WireHealth {
+    let m = coordinator.metrics();
+    WireHealth {
+        scenes: coordinator.scene_names(),
+        budget_bytes: cfg.budget_bytes,
+        frames: m.frames,
+        errors: m.errors,
+        shed: m.shed,
+        queue_depth: m.queue_depth,
+    }
+}

@@ -1,0 +1,736 @@
+//! Wire codecs (DESIGN.md §15): the JSON shapes that carry render
+//! requests, render responses, and shard health across the framed TCP
+//! transport in [`super::frame`].
+//!
+//! Three representation choices matter for correctness:
+//!
+//! * **u64 identifiers ride as strings.** JSON numbers decode through
+//!   `f64`, which is exact only to 2^53; request/session ids are
+//!   caller-chosen u64s, so they are encoded as decimal strings and
+//!   parsed back with `str::parse::<u64>` — bit-exact for the full
+//!   range.
+//! * **Deadlines ride as remaining budget.** An
+//!   [`std::time::Instant`] is meaningless in another process, so a
+//!   deadline crosses the wire as `deadline_us` — the microseconds of
+//!   budget left at send time — and is re-anchored to the receiver's
+//!   own `Instant::now()` on receipt (the QoS clock restarts at each
+//!   hop, DESIGN.md §10).
+//! * **Image pixels ride as hex of f32 bits.** The failover acceptance
+//!   test asserts byte-identical frames across the router vs the direct
+//!   path, so the pixel codec must be lossless: each `f32` is encoded
+//!   as 8 lowercase hex digits of its little-endian bit pattern.
+//!   Camera intrinsics use plain JSON numbers instead — an `f32→f64`
+//!   widening is exact and `f64` `Display` is shortest-round-trip, so
+//!   they also survive bit-for-bit; non-finite floats (which admission
+//!   validation rejects anyway) encode as `null` and decode as NaN.
+
+use crate::accel::AccelKind;
+use crate::coordinator::{RenderRequest, RenderResponse, SessionKey};
+use crate::math::{Camera, Mat4};
+use crate::pipeline::render::{FrameStats, Image, StageTimings};
+use crate::runtime::json::{self, Json};
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Any message a shard (or the router front door) accepts.
+#[derive(Debug, Clone)]
+pub enum WireMessage {
+    /// A render request.
+    Render(WireRequest),
+    /// A health/stats probe (`{"type":"health"}`).
+    Health,
+}
+
+/// Decode an inbound frame into a message. On failure the error carries
+/// the best-effort request id (0 when even that is unreadable) so the
+/// caller can still answer with an error *response* — the exactly-once
+/// contract (DESIGN.md §12) extends across the wire.
+pub fn decode_message(text: &str) -> Result<WireMessage, (u64, String)> {
+    let v = json::parse(text).map_err(|e| (0, format!("not JSON: {e}")))?;
+    let id = get_id(&v).unwrap_or(0);
+    match v.get("type").and_then(Json::as_str) {
+        Some("render") => WireRequest::decode(&v).map(WireMessage::Render).map_err(|e| (id, e)),
+        Some("health") => Ok(WireMessage::Health),
+        Some(other) => Err((id, format!("unknown message type '{other}'"))),
+        None => Err((id, "missing 'type' field".to_string())),
+    }
+}
+
+/// One render request as it crosses the wire.
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    /// Caller-chosen id, echoed in the response.
+    pub id: u64,
+    /// Scene name (may be any Unicode — the codec escapes it).
+    pub scene: String,
+    /// Camera pose + intrinsics.
+    pub camera: Camera,
+    /// Acceleration method, by its CLI spelling.
+    pub accel: AccelKind,
+    /// Sticky trajectory-session tag (DESIGN.md §9).
+    pub session: Option<SessionKey>,
+    /// Remaining deadline budget in microseconds at send time; `None`
+    /// means no deadline. Re-anchored by [`WireRequest::into_request`].
+    pub deadline_us: Option<u64>,
+}
+
+impl WireRequest {
+    /// Snapshot a local request for the wire, converting its absolute
+    /// deadline into remaining budget as of `now` (0 when already past).
+    pub fn from_request(req: &RenderRequest, now: Instant) -> WireRequest {
+        WireRequest {
+            id: req.id,
+            scene: req.scene.clone(),
+            camera: req.camera,
+            accel: req.accel,
+            session: req.session,
+            deadline_us: req
+                .deadline
+                .map(|d| d.saturating_duration_since(now).as_micros().min(u64::MAX as u128) as u64),
+        }
+    }
+
+    /// Re-anchor into a local [`RenderRequest`]: the remaining budget
+    /// becomes an absolute deadline measured from `now` (receipt time).
+    pub fn into_request(self, now: Instant) -> RenderRequest {
+        RenderRequest {
+            id: self.id,
+            scene: self.scene,
+            camera: self.camera,
+            accel: self.accel,
+            session: self.session,
+            deadline: self.deadline_us.map(|us| now + Duration::from_micros(us)),
+        }
+    }
+
+    /// This request with its remaining budget reduced by the time spent
+    /// at the current hop (router queueing/forwarding), for the next hop.
+    pub fn reanchored(&self, received: Instant) -> WireRequest {
+        let spent = received.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        WireRequest {
+            deadline_us: self.deadline_us.map(|us| us.saturating_sub(spent)),
+            ..self.clone()
+        }
+    }
+
+    /// Render as a wire frame payload.
+    pub fn encode(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\"type\":\"render\",\"id\":");
+        push_u64_str(&mut s, self.id);
+        s.push_str(",\"scene\":");
+        json::encode_str(&self.scene, &mut s);
+        s.push_str(",\"accel\":\"");
+        s.push_str(self.accel.cli_name());
+        s.push('"');
+        if let Some(k) = self.session {
+            s.push_str(",\"session\":");
+            push_u64_str(&mut s, k.session);
+            s.push_str(",\"seq\":");
+            push_u64_str(&mut s, k.seq);
+        }
+        if let Some(us) = self.deadline_us {
+            let _ = write!(s, ",\"deadline_us\":{us}");
+        }
+        s.push_str(",\"camera\":");
+        encode_camera(&self.camera, &mut s);
+        s.push('}');
+        s
+    }
+
+    /// Decode from a parsed document (the `"type":"render"` shape).
+    pub fn decode(v: &Json) -> Result<WireRequest, String> {
+        let id = get_id(v).ok_or("missing or malformed 'id'")?;
+        let scene = v
+            .get("scene")
+            .and_then(Json::as_str)
+            .ok_or("missing 'scene'")?
+            .to_string();
+        let accel_name = v.get("accel").and_then(Json::as_str).ok_or("missing 'accel'")?;
+        let accel = AccelKind::parse(accel_name)
+            .ok_or_else(|| format!("unknown accel method '{accel_name}'"))?;
+        let session = match (get_u64_field(v, "session"), get_u64_field(v, "seq")) {
+            (Some(session), Some(seq)) => Some(SessionKey { session, seq }),
+            (None, None) => None,
+            _ => return Err("'session' and 'seq' must appear together".to_string()),
+        };
+        let deadline_us = match v.get("deadline_us") {
+            None | Some(Json::Null) => None,
+            Some(d) => Some(
+                d.as_f64()
+                    .filter(|f| *f >= 0.0 && f.is_finite())
+                    .map(|f| f as u64)
+                    .ok_or("malformed 'deadline_us'")?,
+            ),
+        };
+        let camera = decode_camera(v.get("camera").ok_or("missing 'camera'")?)?;
+        Ok(WireRequest { id, scene, camera, accel, session, deadline_us })
+    }
+}
+
+/// One render response as it crosses the wire.
+#[derive(Debug, Clone)]
+pub struct WireResponse {
+    /// Echoed request id.
+    pub id: u64,
+    /// The rendered image, pixel-lossless (`None` on failure/shed).
+    pub image: Option<Arc<Image>>,
+    /// Per-stage timings (microsecond resolution on the wire).
+    pub timings: StageTimings,
+    /// Workload counters.
+    pub stats: FrameStats,
+    /// End-to-end latency as measured by the shard.
+    pub latency: Duration,
+    /// Error message when rendering failed (or the `shed:` reason).
+    pub error: Option<String>,
+    /// Quality-ladder rung the frame was rendered at (DESIGN.md §10).
+    pub rung: usize,
+    /// True when the request was deliberately shed, not failed.
+    pub shed: bool,
+}
+
+impl WireResponse {
+    /// Snapshot a local response for the wire (the image `Arc` is
+    /// shared, not copied).
+    pub fn from_response(r: &RenderResponse) -> WireResponse {
+        WireResponse {
+            id: r.id,
+            image: r.image.clone(),
+            timings: r.timings,
+            stats: r.stats,
+            latency: r.latency,
+            error: r.error.clone(),
+            rung: r.rung,
+            shed: r.shed,
+        }
+    }
+
+    /// Convert back into the in-process response type.
+    pub fn into_response(self) -> RenderResponse {
+        RenderResponse {
+            id: self.id,
+            image: self.image,
+            timings: self.timings,
+            stats: self.stats,
+            latency: self.latency,
+            error: self.error,
+            rung: self.rung,
+            shed: self.shed,
+        }
+    }
+
+    /// A failure response carrying `error`.
+    pub fn failure(id: u64, error: String) -> WireResponse {
+        WireResponse {
+            id,
+            image: None,
+            timings: StageTimings::default(),
+            stats: FrameStats::default(),
+            latency: Duration::ZERO,
+            error: Some(error),
+            rung: 0,
+            shed: false,
+        }
+    }
+
+    /// A shed response (deliberate drop; `reason` starts with `shed:`).
+    pub fn shed(id: u64, reason: String) -> WireResponse {
+        WireResponse { shed: true, ..WireResponse::failure(id, reason) }
+    }
+
+    /// Render as a wire frame payload.
+    pub fn encode(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\"type\":\"response\",\"id\":");
+        push_u64_str(&mut s, self.id);
+        let _ = write!(s, ",\"rung\":{},\"shed\":{}", self.rung, self.shed);
+        s.push_str(",\"error\":");
+        match &self.error {
+            Some(e) => json::encode_str(e, &mut s),
+            None => s.push_str("null"),
+        }
+        let _ = write!(
+            s,
+            ",\"latency_us\":{},\"timings_us\":{{\"preprocess\":{},\"duplicate\":{},\
+             \"sort\":{},\"blend\":{}}}",
+            dur_us(self.latency),
+            dur_us(self.timings.preprocess),
+            dur_us(self.timings.duplicate),
+            dur_us(self.timings.sort),
+            dur_us(self.timings.blend),
+        );
+        let _ = write!(
+            s,
+            ",\"stats\":{{\"n_gaussians\":{},\"n_visible\":{},\"n_pairs\":{},\
+             \"n_tiles\":{},\"n_active_tiles\":{},\"max_tile_len\":{}}}",
+            self.stats.n_gaussians,
+            self.stats.n_visible,
+            self.stats.n_pairs,
+            self.stats.n_tiles,
+            self.stats.n_active_tiles,
+            self.stats.max_tile_len,
+        );
+        s.push_str(",\"image\":");
+        match &self.image {
+            None => s.push_str("null"),
+            Some(img) => {
+                let _ = write!(s, "{{\"width\":{},\"height\":{},\"data\":\"", img.width, img.height);
+                push_hex_pixels(&img.data, &mut s);
+                s.push_str("\"}");
+            }
+        }
+        s.push('}');
+        s
+    }
+
+    /// Decode from a wire frame payload.
+    pub fn decode(text: &str) -> Result<WireResponse, String> {
+        let v = json::parse(text).map_err(|e| format!("response not JSON: {e}"))?;
+        if v.get("type").and_then(Json::as_str) != Some("response") {
+            return Err("not a response message".to_string());
+        }
+        let id = get_id(&v).ok_or("response missing 'id'")?;
+        let rung = v.get("rung").and_then(Json::as_usize).ok_or("response missing 'rung'")?;
+        let shed = matches!(v.get("shed"), Some(Json::Bool(true)));
+        let error = match v.get("error") {
+            None | Some(Json::Null) => None,
+            Some(e) => Some(e.as_str().ok_or("malformed 'error'")?.to_string()),
+        };
+        let latency = get_dur_us(&v, "latency_us")?;
+        let t = v.get("timings_us").ok_or("response missing 'timings_us'")?;
+        let timings = StageTimings {
+            preprocess: get_dur_us(t, "preprocess")?,
+            duplicate: get_dur_us(t, "duplicate")?,
+            sort: get_dur_us(t, "sort")?,
+            blend: get_dur_us(t, "blend")?,
+        };
+        let st = v.get("stats").ok_or("response missing 'stats'")?;
+        let stats = FrameStats {
+            n_gaussians: get_count(st, "n_gaussians")?,
+            n_visible: get_count(st, "n_visible")?,
+            n_pairs: get_count(st, "n_pairs")?,
+            n_tiles: get_count(st, "n_tiles")?,
+            n_active_tiles: get_count(st, "n_active_tiles")?,
+            max_tile_len: get_count(st, "max_tile_len")?,
+        };
+        let image = match v.get("image") {
+            None | Some(Json::Null) => None,
+            Some(img) => {
+                let width =
+                    img.get("width").and_then(Json::as_usize).ok_or("image missing 'width'")? as u32;
+                let height = img.get("height").and_then(Json::as_usize).ok_or("image missing 'height'")?
+                    as u32;
+                let hex = img.get("data").and_then(Json::as_str).ok_or("image missing 'data'")?;
+                let data = parse_hex_pixels(hex, width as usize * height as usize)?;
+                Some(Arc::new(Image { width, height, data }))
+            }
+        };
+        Ok(WireResponse { id, image, timings, stats, latency, error, rung, shed })
+    }
+}
+
+/// A shard's health/stats report — what the router's placement and
+/// saturation logic reads (DESIGN.md §15).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireHealth {
+    /// Scenes this shard can serve.
+    pub scenes: Vec<String>,
+    /// The shard's catalog memory budget (`None` = unbounded); the
+    /// router weighs ring vnodes by it.
+    pub budget_bytes: Option<u64>,
+    /// Frames delivered so far.
+    pub frames: u64,
+    /// Failed requests so far.
+    pub errors: u64,
+    /// Requests shed by QoS/admission so far.
+    pub shed: u64,
+    /// Current request-queue depth.
+    pub queue_depth: u64,
+}
+
+impl WireHealth {
+    /// The probe frame a client sends to elicit this report.
+    pub fn request_frame() -> String {
+        "{\"type\":\"health\"}".to_string()
+    }
+
+    /// Render as a wire frame payload.
+    pub fn encode(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\"type\":\"health\",\"scenes\":[");
+        for (i, scene) in self.scenes.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            json::encode_str(scene, &mut s);
+        }
+        s.push_str("],\"budget_bytes\":");
+        match self.budget_bytes {
+            Some(b) => push_u64_str(&mut s, b),
+            None => s.push_str("null"),
+        }
+        let _ = write!(
+            s,
+            ",\"frames\":{},\"errors\":{},\"shed\":{},\"queue_depth\":{}}}",
+            self.frames, self.errors, self.shed, self.queue_depth
+        );
+        s
+    }
+
+    /// Decode from a wire frame payload.
+    pub fn decode(text: &str) -> Result<WireHealth, String> {
+        let v = json::parse(text).map_err(|e| format!("health not JSON: {e}"))?;
+        if v.get("type").and_then(Json::as_str) != Some("health") {
+            return Err("not a health message".to_string());
+        }
+        let scenes = v
+            .get("scenes")
+            .and_then(Json::as_arr)
+            .ok_or("health missing 'scenes'")?
+            .iter()
+            .map(|s| s.as_str().map(str::to_string).ok_or("non-string scene name"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let budget_bytes = match v.get("budget_bytes") {
+            None | Some(Json::Null) => None,
+            Some(b) => Some(
+                b.as_str()
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .ok_or("malformed 'budget_bytes'")?,
+            ),
+        };
+        Ok(WireHealth {
+            scenes,
+            budget_bytes,
+            frames: get_count(&v, "frames")? as u64,
+            errors: get_count(&v, "errors")? as u64,
+            shed: get_count(&v, "shed")? as u64,
+            queue_depth: get_count(&v, "queue_depth")? as u64,
+        })
+    }
+}
+
+// ------------------------------------------------------------ helpers
+
+/// u64 identifiers are encoded as decimal *strings*: JSON numbers pass
+/// through f64 and are exact only to 2^53.
+fn push_u64_str(s: &mut String, v: u64) {
+    let _ = write!(s, "\"{v}\"");
+}
+
+fn get_u64_field(v: &Json, key: &str) -> Option<u64> {
+    v.get(key).and_then(Json::as_str).and_then(|s| s.parse::<u64>().ok())
+}
+
+fn get_id(v: &Json) -> Option<u64> {
+    get_u64_field(v, "id")
+}
+
+fn dur_us(d: Duration) -> u64 {
+    d.as_micros().min(u64::MAX as u128) as u64
+}
+
+fn get_dur_us(v: &Json, key: &str) -> Result<Duration, String> {
+    let us = v
+        .get(key)
+        .and_then(Json::as_f64)
+        .filter(|f| *f >= 0.0 && f.is_finite())
+        .ok_or_else(|| format!("missing or malformed '{key}'"))?;
+    Ok(Duration::from_micros(us as u64))
+}
+
+fn get_count(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key).and_then(Json::as_usize).ok_or_else(|| format!("missing or malformed '{key}'"))
+}
+
+/// Camera floats are JSON numbers: f32→f64 widening is exact and f64
+/// `Display` round-trips, so pose bits survive. Non-finite values (which
+/// admission validation rejects) encode as `null` and decode as NaN so
+/// the *shard* rejects them with an error response.
+fn push_f32(s: &mut String, v: f32) {
+    json::encode_num(f64::from(v), s);
+}
+
+fn get_f32(v: &Json, key: &str) -> f32 {
+    match v.get(key) {
+        Some(n) => n.as_f64().map(|f| f as f32).unwrap_or(f32::NAN),
+        None => f32::NAN,
+    }
+}
+
+fn encode_camera(c: &Camera, s: &mut String) {
+    s.push_str("{\"view\":");
+    encode_mat4(&c.view, s);
+    s.push_str(",\"proj\":");
+    encode_mat4(&c.proj, s);
+    let _ = write!(s, ",\"width\":{},\"height\":{}", c.width, c.height);
+    for (key, v) in [
+        ("tan_fovx", c.tan_fovx),
+        ("tan_fovy", c.tan_fovy),
+        ("znear", c.znear),
+        ("zfar", c.zfar),
+    ] {
+        let _ = write!(s, ",\"{key}\":");
+        push_f32(s, v);
+    }
+    s.push('}');
+}
+
+fn encode_mat4(m: &Mat4, s: &mut String) {
+    s.push('[');
+    for (i, v) in m.m.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        push_f32(s, *v);
+    }
+    s.push(']');
+}
+
+fn decode_camera(v: &Json) -> Result<Camera, String> {
+    let width = v.get("width").and_then(Json::as_usize).ok_or("camera missing 'width'")? as u32;
+    let height = v.get("height").and_then(Json::as_usize).ok_or("camera missing 'height'")? as u32;
+    Ok(Camera {
+        view: decode_mat4(v.get("view").ok_or("camera missing 'view'")?)?,
+        proj: decode_mat4(v.get("proj").ok_or("camera missing 'proj'")?)?,
+        width,
+        height,
+        tan_fovx: get_f32(v, "tan_fovx"),
+        tan_fovy: get_f32(v, "tan_fovy"),
+        znear: get_f32(v, "znear"),
+        zfar: get_f32(v, "zfar"),
+    })
+}
+
+fn decode_mat4(v: &Json) -> Result<Mat4, String> {
+    let arr = v.as_arr().ok_or("matrix is not an array")?;
+    if arr.len() != 16 {
+        return Err(format!("matrix has {} elements, expected 16", arr.len()));
+    }
+    let mut m = [0f32; 16];
+    for (slot, item) in m.iter_mut().zip(arr.iter()) {
+        *slot = item.as_f64().map(|f| f as f32).unwrap_or(f32::NAN);
+    }
+    Ok(Mat4 { m })
+}
+
+/// Lossless pixel codec: each f32 as 8 lowercase hex digits of its
+/// little-endian bit pattern, 3 per pixel, row-major.
+fn push_hex_pixels(data: &[[f32; 3]], s: &mut String) {
+    s.reserve(data.len() * 24);
+    for px in data {
+        for ch in px {
+            for b in ch.to_le_bytes() {
+                s.push(hex_digit(b >> 4));
+                s.push(hex_digit(b & 0xF));
+            }
+        }
+    }
+}
+
+fn hex_digit(nibble: u8) -> char {
+    char::from_digit(u32::from(nibble), 16).unwrap_or('0')
+}
+
+fn parse_hex_pixels(hex: &str, expected_px: usize) -> Result<Vec<[f32; 3]>, String> {
+    if hex.len() != expected_px * 24 {
+        return Err(format!(
+            "image data has {} hex digits, expected {} for {expected_px} pixels",
+            hex.len(),
+            expected_px * 24
+        ));
+    }
+    let mut bytes = Vec::with_capacity(hex.len() / 2);
+    let mut chars = hex.chars();
+    while let Some(h) = chars.next() {
+        let Some(l) = chars.next() else {
+            return Err("odd-length image hex".to_string());
+        };
+        let (Some(h), Some(l)) = (h.to_digit(16), l.to_digit(16)) else {
+            return Err("non-hex digit in image data".to_string());
+        };
+        bytes.push(((h << 4) | l) as u8);
+    }
+    let mut floats = Vec::with_capacity(bytes.len() / 4);
+    for chunk in bytes.chunks_exact(4) {
+        let mut a = [0u8; 4];
+        a.copy_from_slice(chunk);
+        floats.push(f32::from_le_bytes(a));
+    }
+    let mut pixels = Vec::with_capacity(floats.len() / 3);
+    for chunk in floats.chunks_exact(3) {
+        let mut px = [0f32; 3];
+        px.copy_from_slice(chunk);
+        pixels.push(px);
+    }
+    Ok(pixels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec3;
+
+    fn camera() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.1, 1.0, -8.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            std::f32::consts::FRAC_PI_3,
+            160,
+            96,
+        )
+    }
+
+    #[test]
+    fn request_roundtrips_bit_exact() {
+        let req = WireRequest {
+            id: u64::MAX - 7, // would not survive an f64 JSON number
+            scene: "trâin 😀".to_string(),
+            camera: camera(),
+            accel: AccelKind::FlashGs,
+            session: Some(SessionKey { session: 1 << 60, seq: 42 }),
+            deadline_us: Some(25_000),
+        };
+        let text = req.encode();
+        assert!(text.is_ascii(), "wire frames are pure ASCII: {text}");
+        let Ok(WireMessage::Render(back)) = decode_message(&text) else {
+            panic!("decode_message failed for {text}");
+        };
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.scene, req.scene);
+        assert_eq!(back.accel, req.accel);
+        assert_eq!(back.session, req.session);
+        assert_eq!(back.deadline_us, req.deadline_us);
+        assert_eq!(back.camera.view.m, req.camera.view.m, "pose bits must survive");
+        assert_eq!(back.camera.proj.m, req.camera.proj.m);
+        assert_eq!(back.camera.tan_fovx.to_bits(), req.camera.tan_fovx.to_bits());
+    }
+
+    #[test]
+    fn deadline_reanchors_as_remaining_budget() {
+        let now = Instant::now();
+        let req = RenderRequest::new(7, "train", camera())
+            .with_deadline(now + Duration::from_millis(30));
+        let wire = WireRequest::from_request(&req, now);
+        let us = wire.deadline_us.unwrap();
+        assert!(us > 0 && us <= 30_000, "{us}");
+        let later = Instant::now();
+        let back = wire.into_request(later);
+        let d = back.deadline.unwrap();
+        assert!(d >= later && d <= later + Duration::from_millis(30));
+        // an already-expired deadline crosses as zero budget, not a panic
+        let stale = RenderRequest::new(8, "train", camera())
+            .with_deadline(now.checked_sub(Duration::from_secs(1)).unwrap_or(now));
+        assert_eq!(WireRequest::from_request(&stale, Instant::now()).deadline_us, Some(0));
+    }
+
+    #[test]
+    fn response_roundtrips_pixels_bit_exact() {
+        let img = Image {
+            width: 2,
+            height: 2,
+            data: vec![
+                [0.0, -0.0, 1.5],
+                [f32::MIN_POSITIVE, 1e-42, 3.25e7], // subnormal included
+                [0.1, 0.2, 0.3],
+                [255.0, 0.5, 0.125],
+            ],
+        };
+        let resp = WireResponse {
+            id: 9,
+            image: Some(Arc::new(img)),
+            timings: StageTimings {
+                preprocess: Duration::from_micros(11),
+                duplicate: Duration::from_micros(22),
+                sort: Duration::from_micros(33),
+                blend: Duration::from_micros(44),
+            },
+            stats: FrameStats {
+                n_gaussians: 100,
+                n_visible: 90,
+                n_pairs: 500,
+                n_tiles: 24,
+                n_active_tiles: 20,
+                max_tile_len: 64,
+            },
+            latency: Duration::from_micros(1234),
+            error: None,
+            rung: 1,
+            shed: false,
+        };
+        let back = WireResponse::decode(&resp.encode()).unwrap();
+        assert_eq!(back.id, 9);
+        assert_eq!(back.rung, 1);
+        assert!(!back.shed);
+        assert_eq!(back.latency, Duration::from_micros(1234));
+        assert_eq!(back.timings.blend, Duration::from_micros(44));
+        assert_eq!(back.stats.n_pairs, 500);
+        let a = resp.image.as_ref().unwrap();
+        let b = back.image.unwrap();
+        assert_eq!(a.width, b.width);
+        assert_eq!(a.height, b.height);
+        for (pa, pb) in a.data.iter().zip(b.data.iter()) {
+            for (ca, cb) in pa.iter().zip(pb.iter()) {
+                assert_eq!(ca.to_bits(), cb.to_bits(), "lossless pixel codec");
+            }
+        }
+    }
+
+    #[test]
+    fn error_and_shed_responses_roundtrip() {
+        let fail = WireResponse::failure(3, "boom: scene 'x' unknown".to_string());
+        let back = WireResponse::decode(&fail.encode()).unwrap();
+        assert_eq!(back.error.as_deref(), Some("boom: scene 'x' unknown"));
+        assert!(!back.shed && back.image.is_none());
+
+        let shed = WireResponse::shed(4, "shed: router: saturated".to_string());
+        let back = WireResponse::decode(&shed.encode()).unwrap();
+        assert!(back.shed);
+        assert!(back.error.as_deref().unwrap_or("").starts_with("shed:"));
+    }
+
+    #[test]
+    fn health_roundtrips() {
+        let h = WireHealth {
+            scenes: vec!["train".to_string(), "trück".to_string()],
+            budget_bytes: Some(u64::MAX - 1),
+            frames: 10,
+            errors: 1,
+            shed: 2,
+            queue_depth: 3,
+        };
+        assert_eq!(WireHealth::decode(&h.encode()).unwrap(), h);
+        let none = WireHealth { budget_bytes: None, ..h };
+        assert_eq!(WireHealth::decode(&none.encode()).unwrap().budget_bytes, None);
+        assert!(matches!(
+            decode_message(&WireHealth::request_frame()),
+            Ok(WireMessage::Health)
+        ));
+    }
+
+    #[test]
+    fn malformed_messages_decode_to_errors_with_ids() {
+        assert_eq!(decode_message("not json").unwrap_err().0, 0);
+        let (id, msg) = decode_message(r#"{"type":"render","id":"77"}"#).unwrap_err();
+        assert_eq!(id, 77, "id recovered even from a bad request");
+        assert!(msg.contains("scene"), "{msg}");
+        let (_, msg) = decode_message(r#"{"type":"warp"}"#).unwrap_err();
+        assert!(msg.contains("unknown message type"), "{msg}");
+        // garbage camera floats decode to NaN, for admission to reject
+        let mut req = WireRequest {
+            id: 1,
+            scene: "train".to_string(),
+            camera: camera(),
+            accel: AccelKind::Vanilla,
+            session: None,
+            deadline_us: None,
+        };
+        req.camera.znear = f32::NAN;
+        let text = req.encode();
+        assert!(text.contains("\"znear\":null"));
+        let back = WireRequest::decode(&json::parse(&text).unwrap()).unwrap();
+        assert!(back.camera.znear.is_nan());
+        assert!(back.into_request(Instant::now()).validate().is_err());
+    }
+}

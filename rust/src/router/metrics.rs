@@ -1,0 +1,151 @@
+//! Router request-accounting (DESIGN.md §15). Lock-free counters with
+//! the same snapshot idiom as `coordinator::metrics`; every public
+//! [`MetricsSnapshot`] field is registered in DESIGN.md §15 and asserted
+//! by a test — lint rule L005 enforces both, exactly as it does for the
+//! coordinator's snapshot (DESIGN.md §14).
+//!
+//! The exactly-once ledger: for every request entering the router,
+//! `routed` increments once, and exactly one of `frames_relayed`,
+//! `errors_relayed`, or `router_shed` increments when its single
+//! response leaves. `forwarded`, `failovers`, `sticky_routed`, and
+//! `shard_shed` describe *how* the router got there.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live counters; cheap to bump from any connection thread.
+#[derive(Debug, Default)]
+pub struct RouterMetrics {
+    routed: AtomicU64,
+    forwarded: AtomicU64,
+    failovers: AtomicU64,
+    sticky_routed: AtomicU64,
+    frames_relayed: AtomicU64,
+    errors_relayed: AtomicU64,
+    shard_shed: AtomicU64,
+    router_shed: AtomicU64,
+}
+
+impl RouterMetrics {
+    /// Fresh zeroed counters.
+    pub fn new() -> RouterMetrics {
+        RouterMetrics::default()
+    }
+
+    /// A request entered `Router::route`.
+    pub fn inc_routed(&self) {
+        self.routed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One forward attempt left for a shard.
+    pub fn inc_forwarded(&self) {
+        self.forwarded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A forward attempt after the first — a replica failover.
+    pub fn inc_failovers(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A sticky-session request was pinned to its home-shard order.
+    pub fn inc_sticky_routed(&self) {
+        self.sticky_routed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A successful frame was relayed back to the client.
+    pub fn inc_frames_relayed(&self) {
+        self.frames_relayed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A shard's error response was relayed back to the client.
+    pub fn inc_errors_relayed(&self) {
+        self.errors_relayed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A shard answered with a shed response (saturated); the router
+    /// moved on to the next replica.
+    pub fn inc_shard_shed(&self) {
+        self.shard_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The router itself shed: every replica saturated/unreachable, or
+    /// the deadline budget ran out before a forward could happen.
+    pub fn inc_router_shed(&self) {
+        self.router_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough point-in-time copy of all counters.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            routed: self.routed.load(Ordering::Relaxed),
+            forwarded: self.forwarded.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            sticky_routed: self.sticky_routed.load(Ordering::Relaxed),
+            frames_relayed: self.frames_relayed.load(Ordering::Relaxed),
+            errors_relayed: self.errors_relayed.load(Ordering::Relaxed),
+            shard_shed: self.shard_shed.load(Ordering::Relaxed),
+            router_shed: self.router_shed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time router counters (registered in DESIGN.md §15; L005).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Requests that entered the router's route path.
+    pub routed: u64,
+    /// Forward attempts sent to shards (≥ `routed` − `router_shed`).
+    pub forwarded: u64,
+    /// Forward attempts after the first for a request — replica
+    /// failovers (shard unreachable or shard-side shed).
+    pub failovers: u64,
+    /// Of `routed`, requests carrying a sticky `SessionKey` and
+    /// therefore pinned to the scene's home-shard order.
+    pub sticky_routed: u64,
+    /// Successful frames relayed back to clients.
+    pub frames_relayed: u64,
+    /// Shard error responses relayed back to clients.
+    pub errors_relayed: u64,
+    /// Shard-side shed responses absorbed during failover (not client
+    /// visible unless every replica shed).
+    pub shard_shed: u64,
+    /// Requests the router itself shed with an explicit `shed:`
+    /// response — all replicas saturated/unreachable or deadline budget
+    /// exhausted. `frames_relayed + errors_relayed + router_shed`
+    /// accounts for every routed request exactly once.
+    pub router_shed: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_increments() {
+        let m = RouterMetrics::new();
+        m.inc_routed();
+        m.inc_routed();
+        m.inc_forwarded();
+        m.inc_failovers();
+        m.inc_sticky_routed();
+        m.inc_frames_relayed();
+        m.inc_errors_relayed();
+        m.inc_shard_shed();
+        m.inc_router_shed();
+        let s = m.snapshot();
+        assert_eq!(s.routed, 2);
+        assert_eq!(
+            s,
+            MetricsSnapshot {
+                routed: 2,
+                forwarded: 1,
+                failovers: 1,
+                sticky_routed: 1,
+                frames_relayed: 1,
+                errors_relayed: 1,
+                shard_shed: 1,
+                router_shed: 1,
+            }
+        );
+        assert_eq!(RouterMetrics::new().snapshot(), MetricsSnapshot::default());
+    }
+}

@@ -1,0 +1,21 @@
+//! Front-door routing tier (DESIGN.md §15): places scenes across shard
+//! servers with a consistent-hash vnode ring weighted by per-shard
+//! catalog budgets, replicates each scene to N shards, forwards QoS
+//! deadlines as remaining budget, keeps sticky [`crate::coordinator::SessionKey`]
+//! traffic on the scene's home shard (warm trajectory plans,
+//! DESIGN.md §9), fails over to the next replica when a shard is
+//! unreachable, and sheds with an explicit `shed:` response when every
+//! replica is saturated — so each admitted request gets exactly one
+//! response end-to-end, counted by [`RouterMetrics`].
+//!
+//! Like `net/`, every file here is in lint rule L002's request-path
+//! panic-freedom scope (DESIGN.md §14).
+#![warn(missing_docs)]
+
+pub mod metrics;
+pub mod ring;
+pub mod service;
+
+pub use metrics::{MetricsSnapshot, RouterMetrics};
+pub use ring::Ring;
+pub use service::{Router, RouterConfig, RouterServer};

@@ -1,0 +1,152 @@
+//! Consistent-hash vnode ring (DESIGN.md §15). Each shard contributes
+//! vnodes in proportion to its advertised catalog budget; a scene hashes
+//! to a point on the ring and its replica set is the next `replicas`
+//! *distinct* shards clockwise from that point. Properties the tests
+//! pin:
+//!
+//! * **determinism** — same weights in, same placement out, across
+//!   processes (the hashes are fixed integer mixes, no `RandomState`);
+//! * **home stability** — a scene's home shard depends only on the ring,
+//!   so the router and any future router restart agree on where a sticky
+//!   session's warm state lives;
+//! * **budget proportionality** — a shard with twice the budget owns
+//!   roughly twice the scenes.
+
+/// A consistent-hash ring over `shards()` shards.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    /// `(point, shard)` sorted by point.
+    points: Vec<(u64, usize)>,
+    shards: usize,
+}
+
+impl Ring {
+    /// Build a ring with `base_vnodes` virtual nodes per shard at equal
+    /// weight; shard `i` actually gets `base_vnodes · n · wᵢ / Σw`
+    /// vnodes (clamped to `[1, 4·base_vnodes]` so a giant shard cannot
+    /// erase a small one entirely). Zero weights count as 1.
+    pub fn new(weights: &[u64], base_vnodes: usize) -> Ring {
+        let n = weights.len();
+        let base = base_vnodes.max(1);
+        let total: u128 = weights.iter().map(|w| u128::from((*w).max(1))).sum();
+        let mut points = Vec::with_capacity(base * n + n);
+        for (shard, w) in weights.iter().enumerate() {
+            let w = u128::from((*w).max(1));
+            let share = (base as u128 * n as u128 * w) / total.max(1);
+            let vnodes = share.clamp(1, 4 * base as u128) as usize;
+            for v in 0..vnodes {
+                points.push((point_hash(shard as u64, v as u64), shard));
+            }
+        }
+        points.sort_unstable();
+        points.dedup_by_key(|(p, _)| *p); // astronomically rare, but keep placement total
+        Ring { points, shards: n }
+    }
+
+    /// Number of shards this ring was built over.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The replica set for `scene`: up to `replicas` distinct shards,
+    /// home shard first. Never empty when the ring has any shard.
+    pub fn place(&self, scene: &str, replicas: usize) -> Vec<usize> {
+        let want = replicas.clamp(1, self.shards.max(1));
+        let h = scene_hash(scene);
+        let start = self.points.partition_point(|(p, _)| *p < h);
+        let mut out = Vec::with_capacity(want);
+        let walk = self.points.iter().skip(start).chain(self.points.iter().take(start));
+        for (_, shard) in walk {
+            if !out.contains(shard) {
+                out.push(*shard);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// splitmix64 finalizer — the same fixed mix everywhere so placement is
+/// identical across processes and runs.
+pub fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+fn point_hash(shard: u64, vnode: u64) -> u64 {
+    mix(mix(shard.wrapping_mul(0x517c_c1b7_2722_0a95)) ^ vnode)
+}
+
+/// FNV-1a over the scene name's bytes, then mixed for dispersion.
+fn scene_hash(scene: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in scene.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    mix(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_deterministic_and_distinct() {
+        let a = Ring::new(&[1, 1, 1], 96);
+        let b = Ring::new(&[1, 1, 1], 96);
+        for scene in ["train", "truck", "garden", "bicycle", "sc-😀"] {
+            let pa = a.place(scene, 2);
+            assert_eq!(pa, b.place(scene, 2), "same ring → same placement");
+            assert_eq!(pa.len(), 2);
+            assert_ne!(pa[0], pa[1], "replicas are distinct shards");
+            assert_eq!(a.place(scene, 1), vec![pa[0]], "home shard is the first replica");
+        }
+        // replicas clamp to the shard count
+        assert_eq!(a.place("train", 99).len(), 3);
+        assert_eq!(a.place("train", 0).len(), 1);
+    }
+
+    #[test]
+    fn equal_weights_balance_roughly() {
+        let ring = Ring::new(&[1, 1, 1], 96);
+        let mut owned = [0usize; 3];
+        for i in 0..300 {
+            let home = *ring.place(&format!("scene-{i}"), 1).first().unwrap();
+            owned[home] += 1;
+        }
+        for (shard, n) in owned.iter().enumerate() {
+            assert!(
+                (40..=180).contains(n),
+                "shard {shard} owns {n}/300 scenes — ring badly unbalanced: {owned:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn budget_weight_skews_ownership() {
+        // shard 1 has 8× the budget of shards 0 and 2
+        let ring = Ring::new(&[1, 8, 1], 96);
+        let mut owned = [0usize; 3];
+        for i in 0..400 {
+            owned[*ring.place(&format!("s{i}"), 1).first().unwrap()] += 1;
+        }
+        assert!(
+            owned[1] > owned[0] + owned[2],
+            "the big-budget shard should own the majority: {owned:?}"
+        );
+        assert!(owned[0] > 0 && owned[2] > 0, "small shards still own something: {owned:?}");
+    }
+
+    #[test]
+    fn zero_weights_and_single_shard_still_place() {
+        let ring = Ring::new(&[0, 0], 8);
+        assert_eq!(ring.place("x", 2).len(), 2);
+        let one = Ring::new(&[7], 8);
+        assert_eq!(one.place("anything", 3), vec![0]);
+    }
+}

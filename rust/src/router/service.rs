@@ -1,0 +1,307 @@
+//! The front-door [`Router`] and its TCP server (DESIGN.md §15).
+//!
+//! Routing walks the scene's replica set from [`crate::router::Ring`]:
+//! sticky sessions start at the home shard (warm trajectory plans live
+//! there, DESIGN.md §9); one-shot requests start at a replica chosen by
+//! request id so read load spreads across the replica set. Each attempt
+//! re-anchors the request's deadline budget — time burned failing over
+//! is charged against the request, and a request whose budget hits zero
+//! is shed at the router instead of being forwarded dead-on-arrival.
+//! When every replica is unreachable or sheds, the router answers with
+//! an explicit `shed:` response itself — never silence — preserving the
+//! exactly-once response contract across the whole tier.
+
+use crate::net::{read_frame, write_frame, ClientPool, FrameError};
+use crate::net::wire::{decode_message, WireHealth, WireMessage, WireRequest, WireResponse};
+use crate::router::metrics::{MetricsSnapshot, RouterMetrics};
+use crate::router::ring::{mix, Ring};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Front-door configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Shard addresses (`host:port`), one per shard, in shard-index
+    /// order. Ring placement is stable for a stable list.
+    pub shard_addrs: Vec<String>,
+    /// Replicas per scene (clamped to the shard count).
+    pub replicas: usize,
+    /// Base vnodes per shard for the placement ring.
+    pub vnodes: usize,
+    /// Per-call connect/read/write timeout toward shards.
+    pub call_timeout: Duration,
+}
+
+impl RouterConfig {
+    /// Defaults: 2 replicas, 96 vnodes, 5 s shard-call timeout.
+    pub fn new(shard_addrs: Vec<String>) -> RouterConfig {
+        RouterConfig {
+            shard_addrs,
+            replicas: 2,
+            vnodes: 96,
+            call_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+struct Shard {
+    pool: ClientPool,
+    scenes: Vec<String>,
+}
+
+/// The routing core: a placement ring plus one connection pool per
+/// shard. Shareable across connection threads via `Arc`.
+pub struct Router {
+    shards: Vec<Shard>,
+    ring: Ring,
+    replicas: usize,
+    metrics: RouterMetrics,
+}
+
+impl Router {
+    /// Health-probe every shard (startup is strict: a shard that does
+    /// not answer is a configuration error), weigh the ring by each
+    /// shard's advertised catalog budget, and return the ready router.
+    pub fn connect(cfg: RouterConfig) -> Result<Router, String> {
+        if cfg.shard_addrs.is_empty() {
+            return Err("router needs at least one shard address".to_string());
+        }
+        let mut shards = Vec::with_capacity(cfg.shard_addrs.len());
+        let mut budgets = Vec::with_capacity(cfg.shard_addrs.len());
+        for addr in &cfg.shard_addrs {
+            let pool = ClientPool::new(addr.clone(), cfg.call_timeout);
+            let health = pool
+                .health()
+                .map_err(|e| format!("shard '{addr}' did not answer a health probe: {e}"))?;
+            budgets.push(health.budget_bytes);
+            shards.push(Shard { pool, scenes: health.scenes });
+        }
+        // unbudgeted shards get the mean of the known budgets (equal
+        // weight when none advertises one)
+        let known: Vec<u64> = budgets.iter().flatten().copied().collect();
+        let default = if known.is_empty() {
+            1
+        } else {
+            let sum: u128 = known.iter().map(|b| u128::from(*b)).sum();
+            ((sum / known.len() as u128).min(u128::from(u64::MAX)) as u64).max(1)
+        };
+        let weights: Vec<u64> =
+            budgets.iter().map(|b| b.unwrap_or(default).max(1)).collect();
+        let ring = Ring::new(&weights, cfg.vnodes.max(1));
+        Ok(Router {
+            shards,
+            ring,
+            replicas: cfg.replicas.clamp(1, cfg.shard_addrs.len()),
+            metrics: RouterMetrics::new(),
+        })
+    }
+
+    /// Number of shards behind this router.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The replica set (home first) the ring assigns to `scene`.
+    pub fn placement(&self, scene: &str) -> Vec<usize> {
+        self.ring.place(scene, self.replicas)
+    }
+
+    /// Scenes advertised by shard `idx` at connect time.
+    pub fn shard_scenes(&self, idx: usize) -> &[String] {
+        self.shards.get(idx).map(|s| s.scenes.as_slice()).unwrap_or(&[])
+    }
+
+    /// Point-in-time router counters.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Route one request received at `received`, returning exactly one
+    /// response: a relayed frame, a relayed error, or a router `shed:`.
+    pub fn route(&self, req: &WireRequest, received: Instant) -> WireResponse {
+        self.metrics.inc_routed();
+        let order = self.attempt_order(req);
+        let mut attempts = 0usize;
+        for shard_idx in order {
+            let Some(shard) = self.shards.get(shard_idx) else { continue };
+            // deadline budget shrinks as failover burns time; a request
+            // that ran out is shed here, not forwarded dead-on-arrival
+            let fwd = req.reanchored(received);
+            if fwd.deadline_us == Some(0) {
+                break;
+            }
+            if attempts > 0 {
+                self.metrics.inc_failovers();
+            }
+            attempts += 1;
+            self.metrics.inc_forwarded();
+            match shard.pool.render(&fwd) {
+                Ok(resp) if resp.shed => {
+                    // shard saturated; absorb and try the next replica
+                    self.metrics.inc_shard_shed();
+                }
+                Ok(resp) => {
+                    if resp.error.is_some() {
+                        self.metrics.inc_errors_relayed();
+                    } else {
+                        self.metrics.inc_frames_relayed();
+                    }
+                    return resp;
+                }
+                Err(_) => {} // unreachable replica; failover
+            }
+        }
+        self.metrics.inc_router_shed();
+        WireResponse::shed(
+            req.id,
+            format!(
+                "shed: router: all {} replica(s) of scene '{}' saturated or unreachable",
+                self.replicas, req.scene
+            ),
+        )
+    }
+
+    /// Replica visit order. Sticky sessions always start at the home
+    /// shard; one-shot requests rotate the start by request id to
+    /// spread load over the replica set.
+    fn attempt_order(&self, req: &WireRequest) -> Vec<usize> {
+        let order = self.ring.place(&req.scene, self.replicas);
+        if req.session.is_some() {
+            self.metrics.inc_sticky_routed();
+            return order;
+        }
+        let n = order.len().max(1);
+        let start = (mix(req.id) % n as u64) as usize;
+        order.iter().cycle().skip(start).take(n).copied().collect()
+    }
+
+    /// Aggregate health for router clients: the union of shard scenes,
+    /// summed budgets, and the router's own ledger mapped onto the
+    /// health shape.
+    pub fn health(&self) -> WireHealth {
+        let mut scenes: Vec<String> = Vec::new();
+        for s in &self.shards {
+            for name in &s.scenes {
+                if !scenes.contains(name) {
+                    scenes.push(name.clone());
+                }
+            }
+        }
+        scenes.sort_unstable();
+        let m = self.metrics.snapshot();
+        WireHealth {
+            scenes,
+            budget_bytes: None,
+            frames: m.frames_relayed,
+            errors: m.errors_relayed,
+            shed: m.router_shed,
+            queue_depth: 0,
+        }
+    }
+}
+
+/// A running router front door; same lifecycle as
+/// [`crate::net::ShardServer`].
+pub struct RouterServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: std::thread::JoinHandle<()>,
+}
+
+impl RouterServer {
+    /// Bind `addr` and serve `router`. Each client connection gets one
+    /// thread running read→route→write in lockstep; concurrency is the
+    /// number of client connections.
+    pub fn start(
+        addr: &str,
+        router: Arc<Router>,
+        read_timeout: Option<Duration>,
+    ) -> Result<RouterServer, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind '{addr}': {e}"))?;
+        let local_addr =
+            listener.local_addr().map_err(|e| format!("local_addr of '{addr}': {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept =
+            std::thread::spawn(move || accept_loop(listener, router, read_timeout, stop2));
+        Ok(RouterServer { local_addr, stop, accept })
+    }
+
+    /// The bound address (resolves the actual port for `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.local_addr);
+        let _ = self.accept.join();
+    }
+
+    /// Block on the accept loop until the process is killed (the
+    /// `gemm-gs route` foreground mode).
+    pub fn join(self) {
+        let _ = self.accept.join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    router: Arc<Router>,
+    read_timeout: Option<Duration>,
+    stop: Arc<AtomicBool>,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match conn {
+            Ok(stream) => {
+                let router = Arc::clone(&router);
+                std::thread::spawn(move || handle_conn(stream, router, read_timeout));
+            }
+            Err(_) => continue,
+        }
+    }
+}
+
+/// Same framing contract as the shard server (see `net::server`):
+/// payload faults answer and continue, framing faults answer (when
+/// possible) and close.
+fn handle_conn(mut stream: TcpStream, router: Arc<Router>, read_timeout: Option<Duration>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(read_timeout);
+    loop {
+        let text = match read_frame(&mut stream) {
+            Ok(t) => t,
+            Err(FrameError::Closed) => return,
+            Err(FrameError::BadUtf8) => {
+                let resp = WireResponse::failure(0, format!("bad request: {}", FrameError::BadUtf8));
+                if write_frame(&mut stream, &resp.encode()).is_err() {
+                    return;
+                }
+                continue;
+            }
+            Err(e @ FrameError::TooLarge(_)) => {
+                let resp = WireResponse::failure(0, format!("bad frame: {e}"));
+                let _ = write_frame(&mut stream, &resp.encode());
+                return;
+            }
+            Err(_) => return,
+        };
+        let received = Instant::now();
+        let payload = match decode_message(&text) {
+            Ok(WireMessage::Health) => router.health().encode(),
+            Ok(WireMessage::Render(req)) => router.route(&req, received).encode(),
+            Err((id, msg)) => {
+                WireResponse::failure(id, format!("bad request: {msg}")).encode()
+            }
+        };
+        if write_frame(&mut stream, &payload).is_err() {
+            return;
+        }
+    }
+}

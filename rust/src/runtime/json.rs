@@ -1,6 +1,10 @@
-//! Minimal JSON parser for the artifact manifest — the offline build has
-//! no serde; this covers the JSON subset `aot.py` emits (objects, arrays,
-//! strings, numbers, booleans, null) with proper escape handling.
+//! Minimal JSON parser + encoder — the offline build has no serde; this
+//! covers the JSON subset `aot.py` emits (objects, arrays, strings,
+//! numbers, booleans, null) with proper escape handling, including
+//! UTF-16 surrogate pairs in `\uXXXX` escapes (non-BMP scene names must
+//! survive the wire protocol, DESIGN.md §15). [`encode`] is the
+//! deterministic inverse: sorted object keys, ASCII-only output, so the
+//! same value always renders the same bytes.
 
 use std::collections::HashMap;
 
@@ -60,6 +64,98 @@ impl Json {
             _ => None,
         }
     }
+}
+
+/// Render a value as a compact JSON document.
+///
+/// Deterministic by construction: object keys are emitted in sorted
+/// order (the in-memory map is unordered) and every non-ASCII character
+/// is `\uXXXX`-escaped — non-BMP characters as a UTF-16 surrogate pair —
+/// so the output is pure ASCII and byte-stable across runs. Non-finite
+/// numbers have no JSON spelling and render as `null`; round-trips
+/// through [`parse`] are exact for everything else (f64 `Display` is
+/// shortest-round-trip).
+pub fn encode(v: &Json) -> String {
+    let mut out = String::new();
+    encode_into(v, &mut out);
+    out
+}
+
+fn encode_into(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => encode_num(*n, out),
+        Json::Str(s) => encode_str(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                encode_into(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            let mut keys: Vec<&String> = map.keys().collect();
+            keys.sort();
+            out.push('{');
+            for (i, key) in keys.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                encode_str(key, out);
+                out.push(':');
+                if let Some(val) = map.get(*key) {
+                    encode_into(val, out);
+                }
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// Append a number in its JSON spelling (`null` when non-finite).
+pub fn encode_num(n: f64, out: &mut String) {
+    if n.is_finite() {
+        out.push_str(&n.to_string());
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Append `s` as a quoted, fully-escaped JSON string literal: ASCII
+/// passes through, controls and non-ASCII become `\uXXXX` escapes, and
+/// non-BMP characters become UTF-16 surrogate pairs (the encode half of
+/// the pair handling [`parse`] implements).
+pub fn encode_str(s: &str, out: &mut String) {
+    use std::fmt::Write as _;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 || !c.is_ascii() => {
+                let code = c as u32;
+                if code <= 0xFFFF {
+                    let _ = write!(out, "\\u{code:04x}");
+                } else {
+                    let v = code - 0x1_0000;
+                    let hi = 0xD800 + (v >> 10);
+                    let lo = 0xDC00 + (v & 0x3FF);
+                    let _ = write!(out, "\\u{hi:04x}\\u{lo:04x}");
+                }
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse a JSON document.
@@ -161,15 +257,44 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err("bad \\u escape".into());
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| "bad \\u escape")?;
-                            let code =
-                                u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                            self.i += 4;
+                            // `self.i` points at the `u`; `hex4` leaves it
+                            // on the last hex digit and the shared
+                            // `self.i += 1` below steps past it.
+                            let unit = self.hex4()?;
+                            let code = if (0xD800..=0xDBFF).contains(&unit) {
+                                // UTF-16 high surrogate: the low half must
+                                // follow as another `\uXXXX` escape, and
+                                // the pair combines into one scalar value
+                                if self.b.get(self.i + 1) != Some(&b'\\')
+                                    || self.b.get(self.i + 2) != Some(&b'u')
+                                {
+                                    return Err(format!(
+                                        "unpaired high surrogate \\u{unit:04x} at byte {}",
+                                        self.i
+                                    ));
+                                }
+                                self.i += 2;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    return Err(format!(
+                                        "high surrogate \\u{unit:04x} followed by \
+                                         \\u{lo:04x} (not a low surrogate) at byte {}",
+                                        self.i
+                                    ));
+                                }
+                                0x1_0000 + ((unit - 0xD800) << 10) + (lo - 0xDC00)
+                            } else if (0xDC00..=0xDFFF).contains(&unit) {
+                                return Err(format!(
+                                    "unpaired low surrogate \\u{unit:04x} at byte {}",
+                                    self.i
+                                ));
+                            } else {
+                                unit
+                            };
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| format!("invalid \\u scalar {code:#x}"))?,
+                            );
                         }
                         other => return Err(format!("bad escape {other:?}")),
                     }
@@ -191,6 +316,19 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits following the `u` at `self.i`; advances `self.i`
+    /// to the last digit (the caller's `+= 1` steps past it).
+    fn hex4(&mut self) -> Result<u32, String> {
+        let hex = self
+            .b
+            .get(self.i + 1..self.i + 5)
+            .and_then(|h| std::str::from_utf8(h).ok())
+            .ok_or("bad \\u escape")?;
+        let code = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+        self.i += 4;
+        Ok(code)
     }
 
     fn array(&mut self) -> Result<Json, String> {
@@ -293,6 +431,54 @@ mod tests {
         assert_eq!(v.get("f").unwrap().as_usize(), None);
         assert_eq!(v.get("s").unwrap().as_f64(), None);
         assert!(v.as_obj().is_some());
+    }
+
+    #[test]
+    fn combines_surrogate_pairs() {
+        // U+1F600 😀 as its UTF-16 escape pair
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
+        // mixed with plain text and BMP escapes
+        let v = parse(r#""aé 😀 z""#).unwrap();
+        assert_eq!(v.as_str(), Some("aé 😀 z"));
+    }
+
+    #[test]
+    fn rejects_unpaired_surrogates() {
+        // a lone half must be a parse error, not U+FFFD corruption
+        assert!(parse(r#""\ud83d""#).unwrap_err().contains("unpaired high"));
+        assert!(parse(r#""\ude00""#).unwrap_err().contains("unpaired low"));
+        assert!(parse(r#""\ud83dA""#).unwrap_err().contains("unpaired high"));
+        assert!(parse(r#""\ud83d\u0041""#).unwrap_err().contains("not a low surrogate"));
+        assert!(parse(r#""\ud83d\n""#).is_err());
+    }
+
+    #[test]
+    fn encode_is_ascii_and_roundtrips() {
+        let mut m = HashMap::new();
+        m.insert("scène 😀".to_string(), Json::Arr(vec![
+            Json::Num(1.5),
+            Json::Num(-0.0),
+            Json::Bool(true),
+            Json::Null,
+            Json::Str("tab\there \"q\" \\ 🚂".into()),
+        ]));
+        m.insert("n".to_string(), Json::Num(3.0));
+        let v = Json::Obj(m);
+        let text = encode(&v);
+        assert!(text.is_ascii(), "{text}");
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn encode_sorts_keys_deterministically() {
+        let mut a = HashMap::new();
+        a.insert("b".to_string(), Json::Num(2.0));
+        a.insert("a".to_string(), Json::Num(1.0));
+        assert_eq!(encode(&Json::Obj(a)), r#"{"a":1,"b":2}"#);
+        // non-finite numbers have no JSON spelling
+        assert_eq!(encode(&Json::Num(f64::NAN)), "null");
+        assert_eq!(encode(&Json::Num(f64::INFINITY)), "null");
     }
 
     #[test]

@@ -343,3 +343,51 @@ fn lint_explain_exits_zero_and_misuse_exits_two() {
     let out = gemm_gs().args(["lint", "--root", "/definitely/not/a/repo"]).output().expect("spawn");
     assert_eq!(out.status.code(), Some(2), "bad --root must exit 2");
 }
+
+#[test]
+fn serving_subcommands_appear_in_usage() {
+    let out = gemm_gs().output().expect("spawn");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["serve-shard", "route", "net-drive"] {
+        assert!(stdout.contains(cmd), "usage must list {cmd}: {stdout}");
+    }
+}
+
+#[test]
+fn serve_shard_without_listen_exits_two() {
+    let out = gemm_gs().arg("serve-shard").output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "missing --listen is a usage error");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--listen"), "{stderr}");
+}
+
+#[test]
+fn serve_shard_with_unknown_scene_exits_one() {
+    // --listen parses fine; the unknown scene is a runtime failure (1),
+    // not a usage error (2) — and must fail before binding the port
+    let out = gemm_gs()
+        .args(["serve-shard", "--listen", "127.0.0.1:0", "--scenes", "no-such-scene"])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(1), "unknown scene must exit 1");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("no-such-scene"), "{stderr}");
+}
+
+#[test]
+fn route_without_required_flags_exits_two() {
+    let out = gemm_gs().arg("route").output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "missing --listen is a usage error");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--listen"));
+
+    let out = gemm_gs().args(["route", "--listen", "127.0.0.1:0"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "missing --shards is a usage error");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--shards"));
+}
+
+#[test]
+fn net_drive_without_connect_exits_two() {
+    let out = gemm_gs().arg("net-drive").output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "missing --connect is a usage error");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--connect"));
+}

@@ -1,0 +1,449 @@
+//! End-to-end tests for the sharded serving tier (DESIGN.md §15).
+//!
+//! Three layers, in increasing scope:
+//!
+//! * **wire faults** — a shard server facing a hostile or broken peer
+//!   (truncated frame, oversized length prefix, garbage payload, bad
+//!   UTF-8, half-open connection) must answer with error *responses*
+//!   where the stream is still aligned, close where it is not, and
+//!   never panic, hang, or stop serving other connections;
+//! * **router failover** — a two-replica router with one dead shard
+//!   serves every request from the live replica, sheds explicitly when
+//!   *all* replicas are dead, and keeps the exactly-once ledger
+//!   (`routed == frames_relayed + errors_relayed + router_shed`);
+//! * **multi-process cluster** — three `gemm-gs serve-shard` processes
+//!   behind a `gemm-gs route` front door; one shard is killed
+//!   mid-stream and the sticky trajectory session re-routes with zero
+//!   lost requests and frames byte-identical to a direct
+//!   single-coordinator render.
+
+use gemm_gs::accel::AccelKind;
+use gemm_gs::bench_harness::workloads;
+use gemm_gs::coordinator::{Coordinator, CoordinatorConfig, RenderRequest, SessionKey};
+use gemm_gs::net::wire::{WireHealth, WireRequest, WireResponse};
+use gemm_gs::net::{read_frame, write_frame, ShardClient, ShardServer, ShardServerConfig};
+use gemm_gs::pipeline::render::Image;
+use gemm_gs::router::ring::mix;
+use gemm_gs::router::{Ring, Router, RouterConfig};
+use gemm_gs::scene::synthetic::scene_by_name;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const SCALE: f64 = 0.001;
+const W: u32 = 96;
+const H: u32 = 64;
+
+fn start_shard(scenes: &[&str], read_timeout: Duration) -> (ShardServer, Arc<Coordinator>) {
+    let mut map = HashMap::new();
+    for name in scenes {
+        let spec = scene_by_name(name).expect("known synthetic scene");
+        map.insert(spec.name.to_string(), Arc::new(spec.synthesize(SCALE)));
+    }
+    let coord = Arc::new(Coordinator::start(
+        CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() },
+        map,
+    ));
+    let cfg = ShardServerConfig { read_timeout: Some(read_timeout), budget_bytes: None };
+    let server = ShardServer::start("127.0.0.1:0", Arc::clone(&coord), cfg).expect("bind shard");
+    (server, coord)
+}
+
+fn wire_request(id: u64, scene: &str, theta: f32) -> WireRequest {
+    WireRequest {
+        id,
+        scene: scene.to_string(),
+        camera: workloads::orbit_camera(theta, W, H),
+        accel: AccelKind::Vanilla,
+        session: None,
+        deadline_us: None,
+    }
+}
+
+fn connect(server: &ShardServer) -> TcpStream {
+    let stream = TcpStream::connect(server.local_addr()).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+    stream
+}
+
+/// Round-trip a health probe on `stream`, proving the connection (and
+/// the server behind it) is still usable.
+fn probe_health(stream: &mut TcpStream) -> WireHealth {
+    write_frame(stream, &WireHealth::request_frame()).expect("write health");
+    let text = read_frame(stream).expect("read health");
+    WireHealth::decode(&text).expect("decode health")
+}
+
+fn assert_frames_identical(got: &Image, want: &Image, what: &str) {
+    assert_eq!((got.width, got.height), (want.width, want.height), "{what}: size");
+    assert_eq!(got.data.len(), want.data.len(), "{what}: pixel count");
+    for (i, (g, w)) in got.data.iter().zip(want.data.iter()).enumerate() {
+        for c in 0..3 {
+            assert_eq!(
+                g[c].to_bits(),
+                w[c].to_bits(),
+                "{what}: pixel {i} channel {c} differs ({} vs {})",
+                g[c],
+                w[c]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- wire faults
+
+#[test]
+fn truncated_frames_close_the_connection_without_poisoning_the_server() {
+    let (server, coord) = start_shard(&["train"], Duration::from_secs(5));
+
+    // header cut short
+    {
+        let mut s = connect(&server);
+        s.write_all(&[1, 0]).expect("partial header");
+    } // dropped mid-header
+
+    // payload cut short
+    {
+        let mut s = connect(&server);
+        s.write_all(&10u32.to_le_bytes()).expect("header");
+        s.write_all(b"abc").expect("partial payload");
+    } // dropped mid-payload
+
+    // a fresh connection is served as if nothing happened
+    let mut s = connect(&server);
+    let health = probe_health(&mut s);
+    assert_eq!(health.scenes, vec!["train".to_string()]);
+
+    server.stop();
+    drop(coord);
+}
+
+#[test]
+fn oversized_length_prefix_is_answered_then_the_connection_closes() {
+    let (server, coord) = start_shard(&["train"], Duration::from_secs(5));
+    let mut s = connect(&server);
+    // a length prefix the server will refuse to allocate
+    s.write_all(&u32::MAX.to_le_bytes()).expect("evil prefix");
+
+    let text = read_frame(&mut s).expect("server must answer before closing");
+    let resp = WireResponse::decode(&text).expect("decode");
+    assert_eq!(resp.id, 0, "no id is recoverable from a bad frame");
+    let err = resp.error.expect("oversized prefix must yield an error response");
+    assert!(err.contains("bad frame"), "unexpected error text: {err}");
+
+    // alignment is lost, so the server must close rather than guess
+    assert!(
+        read_frame(&mut s).is_err(),
+        "connection must close after an oversized prefix"
+    );
+
+    server.stop();
+    drop(coord);
+}
+
+#[test]
+fn garbage_payload_yields_an_error_response_and_the_connection_survives() {
+    let (server, coord) = start_shard(&["train"], Duration::from_secs(5));
+    let mut s = connect(&server);
+
+    write_frame(&mut s, "this is not json {{{").expect("write garbage");
+    let text = read_frame(&mut s).expect("read error response");
+    let resp = WireResponse::decode(&text).expect("decode");
+    let err = resp.error.expect("garbage payload must yield an error response");
+    assert!(err.contains("bad request"), "unexpected error text: {err}");
+
+    // the length prefix consumed the garbage in full: same connection
+    // still serves real traffic
+    let health = probe_health(&mut s);
+    assert_eq!(health.scenes, vec!["train".to_string()]);
+
+    server.stop();
+    drop(coord);
+}
+
+#[test]
+fn bad_utf8_payload_yields_an_error_response_and_the_connection_survives() {
+    let (server, coord) = start_shard(&["train"], Duration::from_secs(5));
+    let mut s = connect(&server);
+
+    // hand-rolled frame whose payload is invalid UTF-8
+    let payload = [0xC3u8, 0x28];
+    s.write_all(&(payload.len() as u32).to_le_bytes()).expect("header");
+    s.write_all(&payload).expect("payload");
+
+    let text = read_frame(&mut s).expect("read error response");
+    let resp = WireResponse::decode(&text).expect("decode");
+    let err = resp.error.expect("bad utf-8 must yield an error response");
+    assert!(err.contains("bad request"), "unexpected error text: {err}");
+
+    let health = probe_health(&mut s);
+    assert_eq!(health.scenes, vec!["train".to_string()]);
+
+    server.stop();
+    drop(coord);
+}
+
+#[test]
+fn half_open_connection_is_reaped_by_the_read_timeout() {
+    let (server, coord) = start_shard(&["train"], Duration::from_millis(200));
+    let mut idle = connect(&server);
+    // send nothing: the server's read timeout must reap us
+    let mut buf = [0u8; 1];
+    idle.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+    let n = idle.read(&mut buf);
+    assert!(
+        matches!(n, Ok(0) | Err(_)),
+        "server must close a half-open connection, got a byte: {n:?}"
+    );
+
+    // and keep serving everyone else
+    let mut s = connect(&server);
+    let health = probe_health(&mut s);
+    assert_eq!(health.scenes, vec!["train".to_string()]);
+
+    server.stop();
+    drop(coord);
+}
+
+// ------------------------------------------------------------- router failover
+
+/// A shard that answers exactly one health probe and then dies — the
+/// router accepts it at connect time, after which every call to it
+/// fails like a crashed process (connection refused).
+fn doomed_shard(scenes: Vec<String>) -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind doomed shard");
+    let addr = listener.local_addr().expect("local addr");
+    std::thread::spawn(move || {
+        let Ok((mut stream, _)) = listener.accept() else { return };
+        if read_frame(&mut stream).is_err() {
+            return;
+        }
+        let health = WireHealth {
+            scenes,
+            budget_bytes: None,
+            frames: 0,
+            errors: 0,
+            shed: 0,
+            queue_depth: 0,
+        };
+        let _ = write_frame(&mut stream, &health.encode());
+        // listener and stream drop here: the shard is now dead
+    });
+    addr
+}
+
+#[test]
+fn router_fails_over_to_the_live_replica_and_keeps_the_exactly_once_ledger() {
+    let (server, coord) = start_shard(&["train"], Duration::from_secs(5));
+    let dead_addr = doomed_shard(vec!["train".to_string()]);
+
+    let mut cfg =
+        RouterConfig::new(vec![dead_addr.to_string(), server.local_addr().to_string()]);
+    cfg.replicas = 2;
+    cfg.call_timeout = Duration::from_secs(2);
+    let router = Router::connect(cfg).expect("both shards healthy at connect time");
+    assert_eq!(router.shard_count(), 2);
+    assert_eq!(router.shard_scenes(0), ["train"]);
+
+    // pick a one-shot id whose rotation starts at the dead shard
+    // (index 0), so at least one failover is guaranteed
+    let order = router.placement("train");
+    assert_eq!(order.len(), 2, "2 replicas over 2 shards covers both");
+    let dead_first_id = (0..1000u64)
+        .find(|id| order[(mix(*id) % 2) as usize] == 0)
+        .expect("some id must rotate onto the dead shard first");
+
+    let mut sticky = 0u64;
+    let mut ids = vec![dead_first_id];
+    ids.extend(100..106);
+    for (seq, id) in ids.iter().enumerate() {
+        let mut req = wire_request(*id, "train", 0.3);
+        if seq % 2 == 1 {
+            req.session = Some(SessionKey { session: 7, seq: seq as u64 });
+            sticky += 1;
+        }
+        let resp = router.route(&req, Instant::now());
+        assert!(!resp.shed, "request {id} must not shed: {:?}", resp.error);
+        assert!(resp.error.is_none(), "request {id}: {:?}", resp.error);
+        let image = resp.image.expect("frame");
+
+        // byte-identical to the direct single-coordinator path
+        let direct = coord.render_sync(RenderRequest::new(*id, "train", req.camera));
+        let want = direct.image.expect("direct frame");
+        assert_frames_identical(&image, &want, "routed vs direct");
+    }
+
+    // a render for a scene no shard knows relays the shard's error
+    // response (not a shed, not silence)
+    let resp = router.route(&wire_request(9999, "no-such-scene", 0.1), Instant::now());
+    assert!(!resp.shed);
+    assert!(resp.error.is_some(), "unknown scene must relay an error");
+
+    let m = router.metrics();
+    let total = ids.len() as u64 + 1;
+    assert_eq!(m.routed, total);
+    assert_eq!(m.frames_relayed, ids.len() as u64);
+    assert_eq!(m.errors_relayed, 1);
+    assert_eq!(m.router_shed, 0, "the live replica must absorb everything");
+    assert_eq!(m.shard_shed, 0, "nothing saturates in this test");
+    assert_eq!(m.sticky_routed, sticky);
+    assert!(m.failovers >= 1, "the dead-first id must have failed over");
+    assert!(m.forwarded >= m.routed, "failovers forward more than once");
+    // the exactly-once ledger: every routed request is accounted for
+    // by exactly one terminal counter
+    assert_eq!(m.routed, m.frames_relayed + m.errors_relayed + m.router_shed);
+
+    // router health maps the ledger onto the wire health shape
+    let health = router.health();
+    assert_eq!(health.scenes, ["train"]);
+    assert_eq!(health.frames, m.frames_relayed);
+    assert_eq!(health.errors, m.errors_relayed);
+    assert_eq!(health.shed, m.router_shed);
+
+    server.stop();
+    drop(coord);
+}
+
+#[test]
+fn router_sheds_explicitly_when_every_replica_is_dead() {
+    let dead_addr = doomed_shard(vec!["train".to_string()]);
+    let mut cfg = RouterConfig::new(vec![dead_addr.to_string()]);
+    cfg.replicas = 1;
+    cfg.call_timeout = Duration::from_millis(500);
+    let router = Router::connect(cfg).expect("healthy at connect time");
+
+    let resp = router.route(&wire_request(1, "train", 0.0), Instant::now());
+    assert!(resp.shed, "all replicas dead must shed, not hang or error");
+    let reason = resp.error.expect("shed responses carry a reason");
+    assert!(reason.starts_with("shed: router:"), "unexpected reason: {reason}");
+
+    // a request whose deadline budget is already exhausted is shed at
+    // the router without being forwarded dead-on-arrival
+    let mut expired = wire_request(2, "train", 0.0);
+    expired.deadline_us = Some(0);
+    let forwarded_before = router.metrics().forwarded;
+    let resp = router.route(&expired, Instant::now());
+    assert!(resp.shed, "expired budget must shed");
+    assert_eq!(
+        router.metrics().forwarded, forwarded_before,
+        "an expired request must not be forwarded"
+    );
+
+    let m = router.metrics();
+    assert_eq!(m.routed, 2);
+    assert_eq!(m.router_shed, 2);
+    assert_eq!(m.routed, m.frames_relayed + m.errors_relayed + m.router_shed);
+}
+
+// ------------------------------------------------------- multi-process cluster
+
+/// Kills the child on drop so a failing assert never leaks processes.
+struct ChildGuard(Child);
+
+impl ChildGuard {
+    fn kill(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Spawn `gemm-gs` with `args` and block until it prints its
+/// `... listening on ADDR ...` line (`marker`), returning the address.
+fn spawn_listening(args: &[&str], marker: &str) -> (ChildGuard, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_gemm-gs"))
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn gemm-gs");
+    let stdout = child.stdout.take().expect("stdout piped");
+    let guard = ChildGuard(child);
+    for line in BufReader::new(stdout).lines() {
+        let line = line.expect("child stdout");
+        if let Some(rest) = line.split(marker).nth(1) {
+            let addr = rest.split_whitespace().next().expect("address").to_string();
+            return (guard, addr);
+        }
+    }
+    panic!("gemm-gs {args:?} exited without printing '{marker}'");
+}
+
+/// The acceptance test from DESIGN.md §15: a 3-shard cluster behind a
+/// router survives losing a shard mid-stream — every admitted request
+/// gets exactly one response, nothing non-shed is lost, and the sticky
+/// trajectory session resumes on a replica with frames byte-identical
+/// to a direct single-coordinator render.
+#[test]
+fn three_shard_cluster_survives_a_mid_stream_shard_kill() {
+    let shard_args =
+        ["serve-shard", "--listen", "127.0.0.1:0", "--scenes", "train", "--scale", "0.001"];
+    let mut shards = Vec::new();
+    for _ in 0..3 {
+        shards.push(spawn_listening(&shard_args, "shard listening on "));
+    }
+    let shard_list =
+        shards.iter().map(|(_, a)| a.as_str()).collect::<Vec<_>>().join(",");
+    let (_router, router_addr) = spawn_listening(
+        &["route", "--listen", "127.0.0.1:0", "--shards", &shard_list, "--replicas", "2"],
+        "router listening on ",
+    );
+    let mut client = ShardClient::new(router_addr, Duration::from_secs(30));
+
+    // direct single-coordinator baseline with the identical scene build
+    let spec = scene_by_name("train").expect("scene");
+    let mut map = HashMap::new();
+    map.insert(spec.name.to_string(), Arc::new(spec.synthesize(SCALE)));
+    let baseline =
+        Coordinator::start(CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() }, map);
+
+    // no shard advertises a budget, so the router's ring weighs all
+    // three equally; recompute placement to learn the sticky home shard
+    let order = Ring::new(&[1, 1, 1], 96).place("train", 2);
+    let home = order[0];
+
+    let send = |client: &mut ShardClient, id: u64, seq: Option<u64>| {
+        let theta = id as f32 * 0.17;
+        let mut req = wire_request(id, "train", theta);
+        req.session = seq.map(|seq| SessionKey { session: 11, seq });
+        let resp = client.render(&req).expect("no admitted request may go unanswered");
+        assert_eq!(resp.id, id, "exactly-once: the response matches the request");
+        assert!(!resp.shed, "request {id} shed: {:?}", resp.error);
+        assert!(resp.error.is_none(), "request {id}: {:?}", resp.error);
+        let image = resp.image.expect("frame");
+        let direct = baseline
+            .render_sync(RenderRequest::new(id, "train", workloads::orbit_camera(theta, W, H)));
+        assert_frames_identical(&image, &direct.image.expect("direct frame"), "cluster vs direct");
+    };
+
+    // phase 1: mixed sticky + one-shot stream against the full cluster
+    let mut seq = 0u64;
+    for id in 0..8u64 {
+        let sticky = id % 2 == 0;
+        send(&mut client, id, sticky.then_some(seq));
+        if sticky {
+            seq += 1;
+        }
+    }
+
+    // kill the sticky session's home shard mid-stream
+    shards[home].0.kill();
+
+    // phase 2: the same session and fresh one-shots must re-route to a
+    // live replica with zero losses and unchanged pixels
+    for id in 100..108u64 {
+        let sticky = id % 2 == 0;
+        send(&mut client, id, sticky.then_some(seq));
+        if sticky {
+            seq += 1;
+        }
+    }
+}

@@ -22,6 +22,7 @@ use gemm_gs::pipeline::render::TileBlend;
 use gemm_gs::pipeline::sort::{radix_sort_pairs, tile_ranges};
 use gemm_gs::pipeline::tile::TileGrid;
 use gemm_gs::pipeline::{TILE_PIXELS, TILE_SIZE};
+use gemm_gs::runtime::json::{self, Json};
 use gemm_gs::scene::gaussian::GaussianCloud;
 use gemm_gs::scene::rng::Rng;
 
@@ -456,4 +457,90 @@ fn prop_translation_invariance() {
         }
     }
     let _ = TILE_SIZE; // silence potential unused warnings in cfgs
+}
+
+// ------------------------------------------------------------ wire JSON
+
+/// Random unicode strings biased toward the hostile cases: quotes,
+/// backslashes, controls, the BMP boundary, and non-BMP characters
+/// that must cross the wire as `\uXXXX` surrogate pairs (DESIGN.md
+/// §15).
+fn json_string(rng: &mut Rng) -> String {
+    let hostile = [
+        '"', '\\', '/', '\n', '\r', '\t', '\u{0}', '\u{8}', '\u{c}', '\u{1f}', '\u{7f}', 'é',
+        '\u{ffff}', '😀', '\u{10FFFF}',
+    ];
+    let len = (rng.next_u64() % 12) as usize;
+    (0..len)
+        .map(|_| {
+            if rng.next_u64() % 3 == 0 {
+                hostile[(rng.next_u64() as usize) % hostile.len()]
+            } else {
+                // from_u32 rejects the surrogate range; fall back to a
+                // plain letter there
+                char::from_u32((rng.next_u64() % 0x11_0000) as u32).unwrap_or('x')
+            }
+        })
+        .collect()
+}
+
+/// Random JSON documents, depth-limited so objects and arrays nest but
+/// terminate.
+fn json_value(rng: &mut Rng, depth: usize) -> Json {
+    let arms = if depth == 0 { 4 } else { 6 };
+    match rng.next_u64() % arms {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_u64() % 2 == 0),
+        2 => {
+            // raw bit patterns spread magnitude across the whole f64
+            // range; non-finite has no JSON spelling (it encodes as
+            // null), so substitute an exact integer there
+            let raw = f64::from_bits(rng.next_u64());
+            Json::Num(if raw.is_finite() { raw } else { (rng.next_u64() % (1 << 53)) as f64 })
+        }
+        3 => Json::Str(json_string(rng)),
+        4 => Json::Arr((0..rng.next_u64() % 4).map(|_| json_value(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.next_u64() % 4)
+                .map(|_| (json_string(rng), json_value(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// Property: `encode` → `parse` is the identity on every value with a
+/// JSON spelling — the substrate of the wire protocol (DESIGN.md §15).
+/// Numbers rely on f64 `Display` being shortest-round-trip; strings on
+/// surrogate-pair escaping being the exact inverse of the parser's
+/// pair combining.
+#[test]
+fn prop_json_encode_parse_round_trips_random_documents() {
+    let strategy = FromFn::new(|rng: &mut Rng| json_value(rng, 3));
+    Checker::new(0x9e15).cases(400).assert(&strategy, |v| {
+        let text = json::encode(v);
+        if !text.is_ascii() {
+            return Err(format!("encode must emit pure ASCII: {text}"));
+        }
+        let back = json::parse(&text).map_err(|e| format!("parse({text}): {e}"))?;
+        if back != *v {
+            return Err(format!("round trip changed the value: {text}"));
+        }
+        Ok(())
+    });
+}
+
+/// Property: string escaping alone round-trips every unicode shape —
+/// the case satellite 1 hardened (surrogate-pair combining on decode).
+#[test]
+fn prop_json_string_escapes_round_trip_every_unicode_shape() {
+    let strategy = FromFn::new(json_string);
+    Checker::new(0x9e16).cases(600).assert(&strategy, |s| {
+        let v = Json::Str(s.clone());
+        let text = json::encode(&v);
+        let back = json::parse(&text).map_err(|e| format!("parse({text}): {e}"))?;
+        if back != v {
+            return Err(format!("string changed through the wire: {s:?} via {text}"));
+        }
+        Ok(())
+    });
 }
