@@ -40,7 +40,8 @@ pub const L001_ROOTS: &[&str] =
 /// Files forming the request path for L002: the coordinator core plus
 /// the sharded serving tier (wire protocol, shard server, front-door
 /// router — DESIGN.md §15), where a panic would drop a peer's in-flight
-/// responses.
+/// responses, and the autotuner (DESIGN.md §16), whose background tune
+/// runs inside the serving process.
 pub const L002_FILES: &[&str] = &[
     "coordinator/service.rs",
     "coordinator/scheduler.rs",
@@ -54,6 +55,9 @@ pub const L002_FILES: &[&str] = &[
     "router/ring.rs",
     "router/metrics.rs",
     "router/service.rs",
+    "tune/mod.rs",
+    "tune/profile.rs",
+    "tune/search.rs",
 ];
 
 /// Run every rule over the tree. Waivers are applied by the caller.

@@ -14,8 +14,12 @@
 //! * coordinator coalescing occupancy (the fig7 serving sweep);
 //! * soak latency percentiles under the SLO-driven policy.
 //!
+//! * the autotuner's tuned-vs-untuned cost ratio on the same seeded
+//!   scene (DESIGN.md §16) — ≥ 1 by construction, gated so a search
+//!   or pricing regression cannot land silently.
+//!
 //! The report serializes to JSON (schema
-//! [`BENCH_SCHEMA_VERSION`]) — `BENCH_7.json` at the repo root is the
+//! [`BENCH_SCHEMA_VERSION`]) — `BENCH_10.json` at the repo root is the
 //! committed baseline — and [`compare`] diffs a fresh run against it
 //! over the *scale-invariant* metrics only (ns/Gaussian, throughput,
 //! speedup ratios, occupancy, tail ratio), failing on regression beyond
@@ -95,6 +99,11 @@ pub struct GateReport {
     /// absolute percentiles move with the machine; the ratio says
     /// whether the service's tail behaviour regressed).
     pub soak_tail_ratio: f64,
+    /// Autotuner win on the first gate scene: untuned config cost over
+    /// the tuned winner's cost at this run's scale and seed (≥ 1 by
+    /// construction — the untuned config is itself a candidate;
+    /// DESIGN.md §16). Gated as higher-is-better.
+    pub tuned_speedup: f64,
 }
 
 fn ns_per(total: Duration, iters: usize, units: usize) -> f64 {
@@ -194,6 +203,19 @@ pub fn run(quick: bool, scale: f64, seed: u64) -> GateReport {
     let p50 = r.p50.as_secs_f64() * 1e3;
     let p99 = r.p99.as_secs_f64() * 1e3;
 
+    // tuned-vs-untuned: autotune the first gate scene at this run's
+    // scale and seed; the ratio is deterministic for a fixed seed
+    let tune_spec = scene_by_name(GATE_SCENES[0]).expect("gate scene");
+    let tune_input = crate::tune::TuneInput {
+        scene: GATE_SCENES[0].to_string(),
+        cloud: std::sync::Arc::new(tune_spec.synthesize(scale)),
+        width: crate::tune::PROBE_WIDTH,
+        height: crate::tune::PROBE_HEIGHT,
+        extrapolate: 1.0,
+    };
+    let profile = crate::tune::run_tune(&tune_input, seed);
+    let tuned_speedup = profile.untuned_cost_ms / profile.winner_cost_ms.max(1e-9);
+
     GateReport {
         schema_version: BENCH_SCHEMA_VERSION,
         quick,
@@ -206,6 +228,7 @@ pub fn run(quick: bool, scale: f64, seed: u64) -> GateReport {
         soak_p95_ms: r.p95.as_secs_f64() * 1e3,
         soak_p99_ms: p99,
         soak_tail_ratio: p99 / p50.max(1e-9),
+        tuned_speedup,
     }
 }
 
@@ -220,7 +243,7 @@ fn num(v: f64) -> String {
 }
 
 /// Serialize a report as pretty-printed JSON with a fixed key order
-/// (diff-friendly: the committed `BENCH_7.json` is reviewed by eye).
+/// (diff-friendly: the committed `BENCH_10.json` is reviewed by eye).
 pub fn to_json(r: &GateReport) -> String {
     let mut out = String::from("{\n");
     out.push_str(&format!("  \"schema_version\": {},\n", r.schema_version));
@@ -239,6 +262,7 @@ pub fn to_json(r: &GateReport) -> String {
     out.push_str(&format!("  \"soak_p95_ms\": {},\n", num(r.soak_p95_ms)));
     out.push_str(&format!("  \"soak_p99_ms\": {},\n", num(r.soak_p99_ms)));
     out.push_str(&format!("  \"soak_tail_ratio\": {},\n", num(r.soak_tail_ratio)));
+    out.push_str(&format!("  \"tuned_speedup\": {},\n", num(r.tuned_speedup)));
     out.push_str("  \"scenes\": [\n");
     for (i, s) in r.scenes.iter().enumerate() {
         out.push_str("    {\n");
@@ -324,6 +348,8 @@ pub fn parse_report(text: &str) -> Result<GateReport, String> {
         soak_p95_ms: field(&doc, "soak_p95_ms")?,
         soak_p99_ms: field(&doc, "soak_p99_ms")?,
         soak_tail_ratio: field(&doc, "soak_tail_ratio")?,
+        // tolerant: pre-autotune baselines simply don't gate this
+        tuned_speedup: doc.get("tuned_speedup").and_then(Json::as_f64).unwrap_or(1.0),
     })
 }
 
@@ -406,6 +432,12 @@ pub fn compare(current: &GateReport, baseline: &GateReport, tolerance: f64) -> V
         baseline.soak_tail_ratio,
         tolerance,
     ));
+    bad.extend(floor(
+        "tuned vs untuned speedup".to_string(),
+        current.tuned_speedup,
+        baseline.tuned_speedup,
+        tolerance,
+    ));
     bad
 }
 
@@ -440,7 +472,8 @@ pub fn render(r: &GateReport) -> String {
     format!(
         "Perf gate — arena-path plan stages at scale {} ({} mode, schema v{})\n\n{}\n\
          warm plan speedup {:.2}x | coalesce occupancy {:.2}/4 | \
-         soak p50/p95/p99 {:.1}/{:.1}/{:.1} ms (tail ratio {:.2})\n",
+         soak p50/p95/p99 {:.1}/{:.1}/{:.1} ms (tail ratio {:.2}) | \
+         tuned speedup {:.2}x\n",
         r.scale,
         if r.quick { "quick" } else { "full" },
         r.schema_version,
@@ -451,6 +484,7 @@ pub fn render(r: &GateReport) -> String {
         r.soak_p95_ms,
         r.soak_p99_ms,
         r.soak_tail_ratio,
+        r.tuned_speedup,
     )
 }
 
@@ -494,6 +528,7 @@ mod tests {
             soak_p95_ms: 7.5,
             soak_p99_ms: 9.0,
             soak_tail_ratio: 3.0,
+            tuned_speedup: 1.35,
         }
     }
 
@@ -518,8 +553,9 @@ mod tests {
         slow.scenes[1].pairs_per_sec /= 10.0;
         slow.warm_plan_speedup /= 10.0;
         slow.soak_tail_ratio *= 10.0;
+        slow.tuned_speedup /= 10.0;
         let bad = compare(&slow, &base, 2.0);
-        assert_eq!(bad.len(), 4, "{bad:?}");
+        assert_eq!(bad.len(), 5, "{bad:?}");
         assert!(bad[0].contains("sort ns/gaussian"), "{bad:?}");
 
         let mut fast = base.clone();
@@ -573,6 +609,9 @@ mod tests {
         assert!(r.warm_plan_speedup > 0.0);
         assert!((1.0..=4.0 + 1e-9).contains(&r.coalesce_occupancy));
         assert!(r.soak_tail_ratio >= 1.0 - 1e-9);
+        // the untuned config is itself a search candidate, so the
+        // tuned winner can never lose to it
+        assert!(r.tuned_speedup >= 1.0 - 1e-9, "tuned_speedup {}", r.tuned_speedup);
         // and it round-trips through its own serialization
         let parsed = parse_report(&to_json(&r)).expect("roundtrip");
         assert!(compare(&parsed, &r, 1.01).is_empty());

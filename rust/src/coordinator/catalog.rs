@@ -61,7 +61,7 @@ use crate::model::catalog::Residency;
 use crate::scene::gaussian::GaussianCloud;
 use crate::scene::ply::PlyError;
 use crate::scene::source::{sources_from_dir, SceneSource};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use super::lock_unpoisoned;
 use std::sync::{Arc, Mutex, OnceLock, Weak};
@@ -175,6 +175,11 @@ pub struct CatalogStats {
 
 type RedeliverHook<P> = Box<dyn Fn(Vec<P>) + Send + Sync>;
 type FailHook<P> = Box<dyn Fn(P, &str) + Send + Sync>;
+/// First-load observer (`(name, reload, cloud)`), invoked off every
+/// catalog lock after a successful load's parked payloads were
+/// redelivered — the coordinator's background autotune trigger
+/// (DESIGN.md §16).
+type OnLoadHook = dyn Fn(&str, bool, Arc<GaussianCloud>) + Send + Sync;
 
 struct Hooks<P> {
     redeliver: RedeliverHook<P>,
@@ -278,6 +283,15 @@ pub struct SceneCatalog<P> {
     /// shutdown so the catalog stops holding queue senders (an
     /// in-flight hook call keeps its clone alive until it returns).
     hooks: Mutex<Option<Arc<Hooks<P>>>>,
+    /// Load observer for the background autotune (DESIGN.md §16), same
+    /// clone-then-call discipline as `hooks`: the callback runs off
+    /// every catalog lock and is dropped by [`disconnect`](Self::disconnect).
+    on_load: Mutex<Option<Arc<OnLoadHook>>>,
+    /// Tuned execution profiles by scene name (DESIGN.md §16). Keyed
+    /// independently of residency: a profile survives eviction and
+    /// reload (sources are deterministic, so it stays valid), and an
+    /// atomic swap is just a map insert under this lock.
+    profiles: Mutex<BTreeMap<String, Arc<crate::tune::ExecutionProfile>>>,
     /// Self-handle for spawning loader threads from `&self` methods
     /// (set by [`new`](Self::new) via `Arc::new_cyclic`).
     weak: Weak<SceneCatalog<P>>,
@@ -310,6 +324,8 @@ impl<P: Send + 'static> SceneCatalog<P> {
                 evict_backoff_until: 0,
             }),
             hooks: Mutex::new(None),
+            on_load: Mutex::new(None),
+            profiles: Mutex::new(BTreeMap::new()),
             weak: weak.clone(),
             metrics,
         })
@@ -329,6 +345,38 @@ impl<P: Send + 'static> SceneCatalog<P> {
             Some(Arc::new(Hooks { redeliver: Box::new(redeliver), fail: Box::new(fail) }));
     }
 
+    /// Register a load observer: `hook(name, reload, cloud)` runs —
+    /// off every catalog lock, after the load's parked payloads were
+    /// redelivered — each time a scene load completes successfully.
+    /// The coordinator's background autotune hangs off this
+    /// (DESIGN.md §16). At most one observer; later calls replace it.
+    pub fn on_load(&self, hook: impl Fn(&str, bool, Arc<GaussianCloud>) + Send + Sync + 'static) {
+        *lock_unpoisoned(&self.on_load) = Some(Arc::new(hook));
+    }
+
+    /// Atomically swap `profile` in as `name`'s tuned execution
+    /// profile (DESIGN.md §16). Serving picks it up on the next
+    /// lookup; the profile survives eviction/reload of the scene.
+    pub fn install_profile(
+        &self,
+        name: impl Into<String>,
+        profile: Arc<crate::tune::ExecutionProfile>,
+    ) {
+        lock_unpoisoned(&self.profiles).insert(name.into(), profile);
+        self.metrics.record_profile_swap();
+    }
+
+    /// The tuned execution profile installed for `name`, if any.
+    pub fn profile(&self, name: &str) -> Option<Arc<crate::tune::ExecutionProfile>> {
+        lock_unpoisoned(&self.profiles).get(name).cloned()
+    }
+
+    /// Names with a tuned profile installed, sorted (the health
+    /// report's `tuned` list; the router prefers these replicas).
+    pub fn tuned_names(&self) -> Vec<String> {
+        lock_unpoisoned(&self.profiles).keys().cloned().collect()
+    }
+
     /// Drop the hooks (releasing any queue senders they hold) and fail
     /// every currently parked payload with a shutting-down error.
     /// Called by the coordinator before it closes its queues, so
@@ -336,6 +384,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
     /// Idempotent.
     pub fn disconnect(&self) {
         let hooks = lock_unpoisoned(&self.hooks).take();
+        lock_unpoisoned(&self.on_load).take();
         let mut drained: Vec<P> = Vec::new();
         {
             let mut guard = lock_unpoisoned(&self.inner);
@@ -548,6 +597,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
                         entry.loads += 1;
                         entry.generation += 1;
                         check_residency_edge(&name, Residency::Loading, Residency::Resident);
+                        let loaded = Arc::clone(&cloud);
                         entry.state = EntryState::Resident(Resident {
                             cloud,
                             bytes,
@@ -558,7 +608,7 @@ impl<P: Send + 'static> SceneCatalog<P> {
                         self.evict_to_budget(inner, Some(name.as_str()));
                         self.metrics.record_scene_load(elapsed, reload);
                         self.publish_residency(inner);
-                        (parked, Ok(()))
+                        (parked, Ok(loaded))
                     }
                 }
             }
@@ -568,7 +618,15 @@ impl<P: Send + 'static> SceneCatalog<P> {
             self.metrics.unpark(n);
         }
         match outcome {
-            Ok(()) => self.redeliver(parked),
+            Ok(loaded) => {
+                self.redeliver(parked);
+                // observer last: parked work is already back in the
+                // queues before any background tune spends cycles
+                let hook = lock_unpoisoned(&self.on_load).clone();
+                if let Some(h) = hook {
+                    (h)(&name, reload, loaded);
+                }
+            }
             Err(msg) => self.fail_all(parked, &msg),
         }
     }
@@ -1047,6 +1105,52 @@ mod tests {
             metrics.snapshot().bytes_resident,
             base_bytes + prepared.footprint_bytes()
         );
+    }
+
+    #[test]
+    fn on_load_hook_fires_after_redelivery_and_profiles_swap() {
+        let (catalog, metrics, delivered, _f) = harness(None);
+        let seen: Arc<Mutex<Vec<(String, bool)>>> = Arc::new(Mutex::new(Vec::new()));
+        let s = Arc::clone(&seen);
+        catalog.on_load(move |name, reload, cloud| {
+            assert!(!cloud.is_empty());
+            s.lock().unwrap().push((name.to_string(), reload));
+        });
+        catalog.register("train", synthetic("train", 0.0005));
+        catalog.acquire("train", AccelKind::Vanilla, vec![1]);
+        wait_until(|| !seen.lock().unwrap().is_empty());
+        // redelivery happens before the observer runs
+        assert!(delivered.lock().unwrap().contains(&1));
+        assert_eq!(seen.lock().unwrap()[0], ("train".to_string(), false));
+        // no profile yet
+        assert!(catalog.profile("train").is_none());
+        assert!(catalog.tuned_names().is_empty());
+        let profile = Arc::new(crate::tune::ExecutionProfile {
+            schema_version: crate::tune::PROFILE_SCHEMA_VERSION,
+            scene: "train".to_string(),
+            seed: 42,
+            winner: crate::tune::TunedConfig {
+                accel: AccelKind::Vanilla,
+                res_scale: 1.0,
+                batch: 256,
+                precision: crate::tune::Precision::F32,
+            },
+            winner_cost_ms: 1.0,
+            untuned_cost_ms: 1.5,
+            constants: crate::perfmodel::SceneConstants::default(),
+            fit_fallbacks: 0,
+            samples: 8,
+            rung_measured_ms: vec![1.0],
+            rung_model_ms: vec![1.0],
+        });
+        catalog.install_profile("train", Arc::clone(&profile));
+        assert_eq!(catalog.tuned_names(), vec!["train".to_string()]);
+        let got = catalog.profile("train").expect("profile installed");
+        assert!(Arc::ptr_eq(&got, &profile));
+        assert_eq!(metrics.snapshot().profile_swaps, 1);
+        // disconnect drops the observer: a later load fires nothing
+        catalog.disconnect();
+        assert!(catalog.profile("train").is_some(), "profiles survive disconnect");
     }
 
     #[test]

@@ -96,6 +96,14 @@ pub struct Metrics {
     scene_evictions: AtomicU64,
     scene_load_us_sum: AtomicU64,
     load_ewma_us: AtomicU64,
+    // autotune (DESIGN.md §16): background/offline tune lifecycle
+    // counters, profile swaps into the catalog, and calibration stages
+    // that fell back to the global perfmodel constants
+    tunes_started: AtomicU64,
+    tunes_completed: AtomicU64,
+    tunes_failed: AtomicU64,
+    profile_swaps: AtomicU64,
+    fit_fallbacks: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -132,6 +140,11 @@ impl Default for Metrics {
             scene_evictions: AtomicU64::new(0),
             scene_load_us_sum: AtomicU64::new(0),
             load_ewma_us: AtomicU64::new(0),
+            tunes_started: AtomicU64::new(0),
+            tunes_completed: AtomicU64::new(0),
+            tunes_failed: AtomicU64::new(0),
+            profile_swaps: AtomicU64::new(0),
+            fit_fallbacks: AtomicU64::new(0),
         }
     }
 }
@@ -303,6 +316,35 @@ impl Metrics {
         Duration::from_micros(self.load_ewma_us.load(Ordering::Relaxed))
     }
 
+    /// Record one autotune run started (DESIGN.md §16) — background
+    /// first-load tunes and offline `gemm-gs tune` runs alike.
+    pub fn record_tune_started(&self) {
+        self.tunes_started.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one autotune run that completed and produced a profile.
+    pub fn record_tune_completed(&self) {
+        self.tunes_completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one autotune run that failed (scene vanished mid-tune,
+    /// or the tuned ladder failed validation).
+    pub fn record_tune_failed(&self) {
+        self.tunes_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one execution profile atomically swapped into the
+    /// catalog (the serving path starts pricing with measured costs).
+    pub fn record_profile_swap(&self) {
+        self.profile_swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` calibration stages that fell back to the global
+    /// perfmodel constants (too few samples, or a degenerate fit).
+    pub fn record_fit_fallbacks(&self, n: u64) {
+        self.fit_fallbacks.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Queue depth bookkeeping.
     pub fn enqueue(&self) {
         self.queue_depth.fetch_add(1, Ordering::Relaxed);
@@ -384,6 +426,11 @@ impl Metrics {
                     self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
                 }
             },
+            tunes_started: self.tunes_started.load(Ordering::Relaxed),
+            tunes_completed: self.tunes_completed.load(Ordering::Relaxed),
+            tunes_failed: self.tunes_failed.load(Ordering::Relaxed),
+            profile_swaps: self.profile_swaps.load(Ordering::Relaxed),
+            fit_fallbacks: self.fit_fallbacks.load(Ordering::Relaxed),
         }
     }
 }
@@ -461,6 +508,18 @@ pub struct MetricsSnapshot {
     pub scene_evictions: u64,
     /// Mean scene-load latency over completed loads.
     pub mean_scene_load: Duration,
+    /// Autotune runs started (background first-load tunes, DESIGN.md §16).
+    pub tunes_started: u64,
+    /// Autotune runs that completed and produced an execution profile.
+    pub tunes_completed: u64,
+    /// Autotune runs that failed (scene gone mid-tune, or the tuned
+    /// ladder failed validation).
+    pub tunes_failed: u64,
+    /// Execution profiles atomically swapped into the scene catalog.
+    pub profile_swaps: u64,
+    /// Calibration stages that fell back to the global perfmodel
+    /// constants (too few samples, or a degenerate least-squares fit).
+    pub fit_fallbacks: u64,
 }
 
 impl MetricsSnapshot {
@@ -663,6 +722,23 @@ mod tests {
         assert_eq!(s.mean_scene_load, Duration::from_millis(15));
         // EWMA: 10 ms seeded, then (4·10 + 20)/5 = 12 ms
         assert_eq!(m.load_estimate(), Duration::from_millis(12));
+    }
+
+    #[test]
+    fn tune_counters_track() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.tunes_started, s.tunes_completed, s.tunes_failed), (0, 0, 0));
+        assert_eq!((s.profile_swaps, s.fit_fallbacks), (0, 0));
+        m.record_tune_started();
+        m.record_tune_started();
+        m.record_tune_completed();
+        m.record_tune_failed();
+        m.record_profile_swap();
+        m.record_fit_fallbacks(4);
+        let s = m.snapshot();
+        assert_eq!((s.tunes_started, s.tunes_completed, s.tunes_failed), (2, 1, 1));
+        assert_eq!((s.profile_swaps, s.fit_fallbacks), (1, 4));
     }
 
     #[test]

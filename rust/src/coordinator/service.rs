@@ -39,6 +39,7 @@
 
 use super::batch::{BatchPolicy, BatchPoll, BatchScheduler};
 use super::catalog::{Acquire, CatalogConfig, CatalogStats, SceneCatalog, SceneSet};
+use super::lock_unpoisoned;
 use super::metrics::Metrics;
 use super::request::{BackendKind, RenderRequest, RenderResponse};
 use crate::accel::AccelKind;
@@ -55,11 +56,11 @@ use crate::runtime::tiled_render::{
 use crate::runtime::RuntimeClient;
 use crate::scene::gaussian::GaussianCloud;
 use crate::scene::source::SceneSource;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
 };
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 /// How long a worker blocked on one queue waits before checking the
@@ -108,6 +109,13 @@ pub struct CoordinatorConfig {
     /// budget lazy-loaded scenes and prepared models are LRU-evicted
     /// to fit (`serve --memory-budget`). Default: unbounded.
     pub catalog: CatalogConfig,
+    /// Autotune each scene in the background on its first load
+    /// (DESIGN.md §16, `serve --tune-on-load`): a fixed-seed
+    /// [`crate::tune::run_tune`] runs on a detached thread — off the
+    /// request path, after the load's parked requests were redelivered
+    /// — and atomically swaps the winning profile into the catalog.
+    /// The scene serves untuned until the swap lands. Default: off.
+    pub tune_on_load: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -123,6 +131,7 @@ impl Default for CoordinatorConfig {
             max_sessions_per_worker: 16,
             qos: None,
             catalog: CatalogConfig::default(),
+            tune_on_load: false,
         }
     }
 }
@@ -266,6 +275,33 @@ type JobScheduler = BatchScheduler<
 /// §11): parked payloads are whole [`Job`]s, redelivered through the
 /// admission queues when their scene's load completes.
 type Catalog = SceneCatalog<Job>;
+
+/// Shared per-scene calibrated quality ladders (DESIGN.md §16):
+/// written by profile installs, read once per batch by the workers.
+/// A scene without an entry prices with the configured global ladder.
+type TunedLadders = Mutex<BTreeMap<String, Arc<crate::qos::QualityLadder>>>;
+
+/// Validate `profile` and swap it into serving state: the calibrated
+/// ladder into the workers' per-scene store, the profile into the
+/// catalog (which records the `profile_swaps` metric). Rejects —
+/// touching nothing — when the calibration breaks the ladder's
+/// strictly-cheaper ordering, so an insane fit can never degrade a
+/// serving scene (DESIGN.md §16).
+fn install_profile_into(
+    catalog: &Catalog,
+    ladders: &TunedLadders,
+    metrics: &Metrics,
+    profile: crate::tune::ExecutionProfile,
+) -> Result<(), String> {
+    let ladder = profile
+        .ladder()
+        .map_err(|e| format!("profile for scene '{}' rejected: {e}", profile.scene))?;
+    metrics.record_fit_fallbacks(profile.fit_fallbacks);
+    let scene = profile.scene.clone();
+    lock_unpoisoned(ladders).insert(scene.clone(), Arc::new(ladder));
+    catalog.install_profile(scene, Arc::new(profile));
+    Ok(())
+}
 
 /// What a worker executes batches with. Created in-thread: PJRT handles
 /// are not `Send`.
@@ -568,6 +604,7 @@ fn handle_shared_batch(
     executor: &mut Executor,
     arena: &mut FrameArena,
     catalog: &Arc<Catalog>,
+    ladders: &TunedLadders,
     metrics: &Metrics,
     render_cfg: &RenderConfig,
     qos: &mut Option<WorkerQos>,
@@ -598,12 +635,26 @@ fn handle_shared_batch(
         return;
     };
     let request_accel = front.request.accel;
+    // Tuned per-scene ladder (DESIGN.md §16): same rung structure as
+    // the configured ladder, prices calibrated to this scene's
+    // measured samples. Looked up once per batch (one scene per batch,
+    // the coalescing key guarantees it); scenes without a profile —
+    // and profiles whose rung count disagrees with the controller's —
+    // fall back to the global ladder.
+    let scene_ladder: Option<Arc<crate::qos::QualityLadder>> = match (qos.as_ref(), live.first())
+    {
+        (Some(q), Some(front)) => lock_unpoisoned(ladders)
+            .get(&front.request.scene)
+            .filter(|l| l.len() == q.cfg.ladder.len())
+            .cloned(),
+        _ => None,
+    };
     let mut rung = 0usize;
     if let Some(q) = qos.as_mut() {
         rung = q.controller.rung();
         let est_full = metrics.exec_estimate();
         if !est_full.is_zero() {
-            let ladder = &q.cfg.ladder;
+            let ladder = scene_ladder.as_deref().unwrap_or(&q.cfg.ladder);
             let mut fitting: Vec<Job> = Vec::with_capacity(live.len());
             for mut job in live {
                 if let Some(d) = job.request.deadline {
@@ -629,7 +680,10 @@ fn handle_shared_batch(
         }
         // the rung actually rendered: never a point the ladder prices
         // higher than a shallower one for this request's method
-        rung = q.cfg.ladder.effective_rung(rung, request_accel);
+        rung = scene_ladder
+            .as_deref()
+            .unwrap_or(&q.cfg.ladder)
+            .effective_rung(rung, request_accel);
     }
     let Some(front) = live.first() else {
         return;
@@ -649,10 +703,11 @@ fn handle_shared_batch(
     // rung lands on (DESIGN.md §8).
     let (accel, cameras): (AccelKind, Vec<Camera>) = match qos.as_ref() {
         Some(q) => {
-            let accel = q.cfg.ladder.apply(rung, &lead_camera, request_accel).1;
+            let ladder = scene_ladder.as_deref().unwrap_or(&q.cfg.ladder);
+            let accel = ladder.apply(rung, &lead_camera, request_accel).1;
             let cams = live
                 .iter()
-                .map(|j| q.cfg.ladder.apply(rung, &j.request.camera, request_accel).0)
+                .map(|j| ladder.apply(rung, &j.request.camera, request_accel).0)
                 .collect();
             (accel, cams)
         }
@@ -693,9 +748,9 @@ fn handle_shared_batch(
             if let Some(q) = qos.as_ref() {
                 // normalize the sample to rung 0 so the estimate stays a
                 // full-quality cost whatever rung this batch ran at
+                let ladder = scene_ladder.as_deref().unwrap_or(&q.cfg.ladder);
                 metrics.record_exec(
-                    per_frame
-                        .div_f64(q.cfg.ladder.cost_ratio_for(rung, request_accel).max(1e-6)),
+                    per_frame.div_f64(ladder.cost_ratio_for(rung, request_accel).max(1e-6)),
                 );
                 metrics.set_rung(rung as u64);
                 if rung > 0 {
@@ -732,6 +787,10 @@ pub struct Coordinator {
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     catalog: Arc<Catalog>,
+    /// Per-scene calibrated ladders (DESIGN.md §16), shared with every
+    /// worker; populated by [`install_profile`](Self::install_profile)
+    /// and the background tune.
+    ladders: Arc<TunedLadders>,
     /// Admission-control inputs when the service runs with QoS
     /// (DESIGN.md §10): the ladder (its cheapest cost ratio is per
     /// request method) and the worker count, pricing the "can this
@@ -822,10 +881,58 @@ impl Coordinator {
             };
             catalog.connect(redeliver, fail);
         }
+        let ladders: Arc<TunedLadders> = Arc::new(Mutex::new(BTreeMap::new()));
+        // Opt-in background autotune (DESIGN.md §16): a scene's first
+        // successful load — never a reload; the sources are
+        // deterministic, so the original profile stays valid — kicks a
+        // fixed-seed tune on a detached thread, after the parked
+        // requests were redelivered. The closure holds the catalog
+        // weakly: the coordinator's drop must tear the catalog down
+        // even with a tune still running.
+        if cfg.tune_on_load {
+            let weak_catalog: Weak<Catalog> = Arc::downgrade(&catalog);
+            let m = Arc::clone(&metrics);
+            let lstore = Arc::clone(&ladders);
+            catalog.on_load(move |name, reload, cloud| {
+                if reload {
+                    return;
+                }
+                let Some(cat) = weak_catalog.upgrade() else { return };
+                if cat.profile(name).is_some() {
+                    return; // already tuned
+                }
+                drop(cat);
+                m.record_tune_started();
+                let name = name.to_string();
+                let m = Arc::clone(&m);
+                let lstore = Arc::clone(&lstore);
+                let weak = Weak::clone(&weak_catalog);
+                std::thread::spawn(move || {
+                    let input = crate::tune::TuneInput {
+                        scene: name.clone(),
+                        cloud,
+                        width: crate::tune::PROBE_WIDTH,
+                        height: crate::tune::PROBE_HEIGHT,
+                        extrapolate: 1.0,
+                    };
+                    let profile = crate::tune::run_tune(&input, crate::tune::DEFAULT_TUNE_SEED);
+                    // the service may have shut down while we tuned
+                    let Some(cat) = weak.upgrade() else { return };
+                    match install_profile_into(&cat, &lstore, &m, profile) {
+                        Ok(()) => m.record_tune_completed(),
+                        Err(e) => {
+                            m.record_tune_failed();
+                            eprintln!("background tune of scene '{name}' failed: {e}");
+                        }
+                    }
+                });
+            });
+        }
         let mut workers = Vec::with_capacity(worker_count);
         for sticky_rx in sticky_rxs {
             let scheduler = Arc::clone(&scheduler);
             let catalog = Arc::clone(&catalog);
+            let ladders = Arc::clone(&ladders);
             let metrics = Arc::clone(&metrics);
             let render_cfg = cfg.render.clone();
             let backend = cfg.backend;
@@ -901,6 +1008,7 @@ impl Coordinator {
                             &mut executor,
                             &mut arena,
                             &catalog,
+                            &ladders,
                             &metrics,
                             &render_cfg,
                             &mut worker_qos,
@@ -932,7 +1040,7 @@ impl Coordinator {
             }));
         }
         let admission = cfg.qos.as_ref().map(|q| (q.ladder.clone(), worker_count));
-        Coordinator { tx: Some(tx), sticky_txs, workers, metrics, catalog, admission }
+        Coordinator { tx: Some(tx), sticky_txs, workers, metrics, catalog, ladders, admission }
     }
 
     /// Submit a request; returns the response channel. Blocks when the
@@ -1144,6 +1252,28 @@ impl Coordinator {
     /// order, in-flight loads, and bytes charged against the budget.
     pub fn catalog_stats(&self) -> CatalogStats {
         self.catalog.stats()
+    }
+
+    /// Validate and atomically install a tuned execution profile
+    /// (DESIGN.md §16) — what `serve --profile` does at startup, and
+    /// the background tune does when it completes. Serving picks the
+    /// calibrated ladder up on the next batch of the profile's scene.
+    /// Errs — changing nothing — when the calibration breaks the
+    /// ladder's strictly-cheaper ordering.
+    pub fn install_profile(&self, profile: crate::tune::ExecutionProfile) -> Result<(), String> {
+        install_profile_into(&self.catalog, &self.ladders, &self.metrics, profile)
+    }
+
+    /// Scene names with a tuned execution profile installed, sorted —
+    /// rides the health report so the router can prefer tuned replicas
+    /// (DESIGN.md §16).
+    pub fn tuned_scene_names(&self) -> Vec<String> {
+        self.catalog.tuned_names()
+    }
+
+    /// The tuned execution profile installed for `scene`, if any.
+    pub fn scene_profile(&self, scene: &str) -> Option<Arc<crate::tune::ExecutionProfile>> {
+        self.catalog.profile(scene)
     }
 
     /// Metrics snapshot.

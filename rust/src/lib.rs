@@ -49,3 +49,4 @@ pub mod qos;
 pub mod router;
 pub mod runtime;
 pub mod scene;
+pub mod tune;

@@ -24,10 +24,14 @@
 //! gemm-gs bench-soak --scenes 6 [--zipf 1.1]
 //!                                   # multi-scene catalog sweep: Zipf scene mix vs
 //!                                   # memory budget (§11, EXPERIMENTS.md §Catalog)
-//! gemm-gs bench-gate [--quick] [--out BENCH_7.json] [--baseline BENCH_7.json]
+//! gemm-gs bench-gate [--quick] [--out BENCH_10.json] [--baseline BENCH_10.json]
 //!                [--tolerance 3.0] [--scale 0.004] [--seed 42]
 //!                                   # frame-planning perf gate vs a recorded
 //!                                   # baseline (EXPERIMENTS.md §Perf-trajectory)
+//! gemm-gs tune --scene train [--scene-dir DIR] [--scale 0.002] [--seed 42]
+//!                [--width W --height H] [--out profile.json] [--json]
+//!                                   # per-scene autotuner: search + calibrated
+//!                                   # execution profile (DESIGN.md §16)
 //! gemm-gs inspect [--scale 0.02]    # Table 1   (workload statistics)
 //! gemm-gs check-model [--seed 42] [--depth 7] [--steps 20000] [--fault none]
 //!                                   # lifecycle model checker (DESIGN.md §12)
@@ -54,6 +58,12 @@
 //! composes a published acceleration baseline with the render
 //! (DESIGN.md §8): its pair veto runs inside the FramePlan stage and
 //! compression methods render the transformed model.
+//!
+//! `serve --profile PATH` / `bench-soak --profile PATH` load a tuned
+//! execution profile written by `tune --out` (DESIGN.md §16): serve
+//! installs it so QoS pricing uses the calibrated per-scene constants;
+//! an unreadable or invalid profile exits 1 rather than silently
+//! serving untuned.
 //!
 //! `serve --scene-dir DIR` registers every `*.ply` under `DIR` lazily
 //! (DESIGN.md §11): checkpoints load on first request, off the request
@@ -155,13 +165,15 @@ fn main() {
     };
     let quick = cmd == "bench-gate" && strip_switch("--quick", &mut argv);
     let lint_json = cmd == "lint" && strip_switch("--json", &mut argv);
+    let tune_json = cmd == "tune" && strip_switch("--json", &mut argv);
+    let tune_on_load = cmd == "serve" && strip_switch("--tune-on-load", &mut argv);
     let args = Args::parse(&argv[1.min(argv.len())..]);
     let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
 
     match cmd {
         "render" => cmd_render(&args),
         "render-trajectory" => cmd_render_trajectory(&args),
-        "serve" => cmd_serve(&args),
+        "serve" => cmd_serve(&args, tune_on_load),
         "fig1" => cmd_fig1(),
         "bench-fig3" => {
             let rows = fig3::run_modelled(&A100, scale);
@@ -219,6 +231,7 @@ fn main() {
         }
         "bench-soak" => cmd_bench_soak(&args),
         "bench-gate" => cmd_bench_gate(&args, quick),
+        "tune" => cmd_tune(&args, tune_json),
         "check-model" => cmd_check_model(&args),
         "serve-shard" => cmd_serve_shard(&args),
         "route" => cmd_route(&args),
@@ -237,12 +250,13 @@ fn main() {
 
 fn usage() {
     println!("gemm-gs — GEMM-GS (DAC'26) reproduction");
-    println!("subcommands: render render-trajectory serve serve-shard route net-drive export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak bench-gate inspect check-model lint");
+    println!("subcommands: render render-trajectory serve serve-shard route net-drive export-ply fig1 bench-fig3 bench-table2 bench-fig5 bench-fig6 bench-fig7 bench-trajectory bench-soak bench-gate tune inspect check-model lint");
     println!("common flags: --scale <sim-scale> --scene <name> --backend <vanilla|gemm|pjrt>");
     println!("              --accel <vanilla|flashgs|stopthepop|speedysplat|c3dgs|lightgaussian>");
     println!("serve flags:  --frames N --workers N --max-batch N --batch-timeout-ms T");
     println!("              --slo-ms MS --ladder <default|scale[:accel],...>   (QoS, DESIGN.md §10)");
     println!("              --scene-dir DIR --memory-budget <512mb|2gb|BYTES>  (catalog, DESIGN.md §11)");
+    println!("              --tune-on-load  (background autotune on first load, DESIGN.md §16)");
     println!("export-ply:   --scene NAME --out PATH --scale S --format <binary|ascii>");
     println!("trajectory:   --frames N --step RAD --via <direct|coordinator> --width W --height H");
     println!("              --max-translation T --max-rotation R --max-drift D");
@@ -251,6 +265,10 @@ fn usage() {
     println!("              --scenes N --zipf S  (N ≥ 2: multi-scene catalog sweep, DESIGN.md §11)");
     println!("bench-gate:   --quick --out PATH --baseline PATH --tolerance F --scale S --seed N");
     println!("              (frame-planning perf gate vs a recorded BENCH_*.json baseline)");
+    println!("tune:         --scene NAME --scene-dir DIR --scale S --seed N --width W --height H");
+    println!("              --out PATH --json  (per-scene autotuner, DESIGN.md §16;");
+    println!("              deterministic: a fixed seed writes byte-identical JSON)");
+    println!("              serve/bench-soak take --profile PATH to use a tuned profile");
     println!("check-model:  --seed N --depth D --steps N  (model checker, DESIGN.md §12)");
     println!("              --fault <none|drop-on-death|skip-starvation|lifo-redeliver|evict-pinned>");
     println!("lint:         --json --root DIR --explain CODE --check-fixture CODE");
@@ -557,9 +575,11 @@ fn cmd_render_trajectory(args: &Args) {
     }
 }
 
-fn cmd_serve(args: &Args) {
+fn cmd_serve(args: &Args, tune_on_load: bool) {
     let scale = args.get_f64("scale", bench_harness::DEFAULT_SIM_SCALE);
     let frames = args.get_usize("frames", 32);
+    // fail fast on a bad --profile before any scene synthesis
+    let profile = load_profile(args);
     let backend = parse_backend(args);
     let accel = parse_accel(args);
     // scene registrations (DESIGN.md §11): --scene-dir registers every
@@ -612,10 +632,19 @@ fn cmd_serve(args: &Args) {
             batch_timeout,
             qos,
             catalog: CatalogConfig { memory_budget },
+            tune_on_load,
             ..CoordinatorConfig::default()
         },
         scene_set,
     );
+    if let Some(p) = profile {
+        let profiled_scene = p.scene.clone();
+        if let Err(e) = coord.install_profile(p) {
+            eprintln!("gemm-gs: --profile: {e}");
+            std::process::exit(1);
+        }
+        println!("installed tuned profile for scene '{profiled_scene}' (DESIGN.md §16)");
+    }
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..frames)
         .map(|i| {
@@ -703,6 +732,19 @@ fn cmd_serve(args: &Args) {
 /// measuring the cold-load tail. Exits 1 on transport errors (the CI
 /// smoke's health gate).
 fn cmd_bench_soak(args: &Args) {
+    // --profile is validated up front (exit 1 on a bad file); the soak
+    // sweep itself prices with the profile's calibrated ladder
+    let profile = load_profile(args);
+    if let Some(p) = &profile {
+        if let Err(e) = p.ladder() {
+            eprintln!("gemm-gs: --profile: {e}");
+            std::process::exit(1);
+        }
+        println!(
+            "profile: scene '{}' tuned at seed {} ({} samples, {} fit fallback(s))",
+            p.scene, p.seed, p.samples, p.fit_fallbacks
+        );
+    }
     let sim_scale = args.get_f64("scale", 0.004);
     let workers = args.get_usize("workers", 2);
     let rate = args.get_f64("rate", 0.0);
@@ -756,7 +798,7 @@ fn cmd_bench_soak(args: &Args) {
 
 /// `bench-gate` — measure the frame-planning hot path and gate it
 /// against a recorded baseline (EXPERIMENTS.md §Perf-trajectory).
-/// `--out PATH` writes the machine-readable report (`BENCH_7.json` at
+/// `--out PATH` writes the machine-readable report (`BENCH_10.json` at
 /// the repo root is the committed one); `--baseline PATH` diffs this
 /// run against a recorded report with `--tolerance` (default 3.0).
 /// Exit 0 when the gate passes (or no baseline was given), 1 on any
@@ -813,6 +855,108 @@ fn cmd_bench_gate(args: &Args, quick: bool) {
                 eprintln!("  regression: {r}");
             }
             std::process::exit(1);
+        }
+    }
+}
+
+/// `tune` — the per-scene autotuner (DESIGN.md §16): search accel
+/// composition × resolution scale × batch size × operand precision
+/// against deterministic measured samples on the scene, calibrate the
+/// perf model's per-scene constants from those samples, and emit the
+/// winning execution profile. `--out PATH` writes the schema-versioned
+/// profile JSON (`serve --profile` consumes it); `--json` prints that
+/// JSON to stdout instead of the human summary. Deterministic for a
+/// fixed `--seed`: two runs produce byte-identical JSON (the CI tune
+/// smoke `cmp`s them). Exit 0 success, 1 runtime failure (unknown
+/// scene, unreadable checkpoint, unwritable output), 2 malformed flags.
+fn cmd_tune(args: &Args, json: bool) {
+    use gemm_gs::tune::{run_tune, TuneInput, DEFAULT_TUNE_SEED, PROBE_HEIGHT, PROBE_WIDTH};
+
+    let scene = args.get("scene", "train");
+    let seed = args.get_usize("seed", DEFAULT_TUNE_SEED as usize) as u64;
+    let width = args.get_usize("width", PROBE_WIDTH as usize) as u32;
+    let height = args.get_usize("height", PROBE_HEIGHT as usize) as u32;
+    let scene_dir = args.get("scene-dir", "");
+    let (cloud, extrapolate) = if scene_dir.is_empty() {
+        let scale = args.get_f64("scale", 0.002);
+        let spec = scene_by_name(&scene).unwrap_or_else(|| {
+            eprintln!("unknown scene '{scene}'");
+            std::process::exit(1)
+        });
+        let cloud = Arc::new(spec.synthesize(scale));
+        // price the search at the full checkpoint size the sim scale
+        // stands in for, not the shrunken simulation
+        let extrapolate =
+            (spec.full_gaussians as f64 / cloud.len().max(1) as f64).max(1.0);
+        (cloud, extrapolate)
+    } else {
+        let path = Path::new(&scene_dir).join(format!("{scene}.ply"));
+        let cloud = gemm_gs::scene::SceneSource::PlyFile(path).load().unwrap_or_else(|e| {
+            eprintln!("failed to load scene '{scene}': {e}");
+            std::process::exit(1)
+        });
+        (cloud, 1.0)
+    };
+    let input = TuneInput { scene: scene.clone(), cloud, width, height, extrapolate };
+    let profile = run_tune(&input, seed);
+    let text = profile.to_json();
+
+    if json {
+        println!("{text}");
+    } else {
+        println!(
+            "tuned '{scene}' (seed {seed}, {} samples, probe {width}x{height}): \
+             winner {} res {} batch {} {}",
+            profile.samples,
+            profile.winner.accel.cli_name(),
+            profile.winner.res_scale,
+            profile.winner.batch,
+            profile.winner.precision.as_str(),
+        );
+        println!(
+            "cost: {:.3} ms tuned vs {:.3} ms untuned ({:.2}x); \
+             calibration: pre {:.3} dup {:.3} sort {:.3} blend {:.3} ({} fallback(s))",
+            profile.winner_cost_ms,
+            profile.untuned_cost_ms,
+            profile.untuned_cost_ms / profile.winner_cost_ms.max(1e-9),
+            profile.constants.preprocess,
+            profile.constants.duplicate,
+            profile.constants.sort,
+            profile.constants.blend,
+            profile.fit_fallbacks,
+        );
+    }
+    let out = args.get("out", "");
+    if !out.is_empty() {
+        if let Err(e) = std::fs::write(&out, &text) {
+            eprintln!("gemm-gs: failed to write '{out}': {e}");
+            std::process::exit(1);
+        }
+        if !json {
+            println!("wrote {out}");
+        }
+    }
+}
+
+/// `--profile PATH` (DESIGN.md §16): load a tuned execution profile
+/// written by `gemm-gs tune --out`. An unreadable or unparseable file
+/// is a runtime failure (exit 1) — silently serving untuned while the
+/// operator believes the profile took effect would be worse than
+/// refusing to start.
+fn load_profile(args: &Args) -> Option<gemm_gs::tune::ExecutionProfile> {
+    let path = args.get("profile", "");
+    if path.is_empty() {
+        return None;
+    }
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        eprintln!("gemm-gs: failed to read profile '{path}': {e}");
+        std::process::exit(1)
+    });
+    match gemm_gs::tune::ExecutionProfile::parse(&text) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("gemm-gs: profile '{path}': {e}");
+            std::process::exit(1)
         }
     }
 }

@@ -211,6 +211,7 @@ fn health_report(coordinator: &Coordinator, cfg: &ShardServerConfig) -> WireHeal
     let m = coordinator.metrics();
     WireHealth {
         scenes: coordinator.scene_names(),
+        tuned: coordinator.tuned_scene_names(),
         budget_bytes: cfg.budget_bytes,
         frames: m.frames,
         errors: m.errors,

@@ -336,6 +336,11 @@ impl WireResponse {
 pub struct WireHealth {
     /// Scenes this shard can serve.
     pub scenes: Vec<String>,
+    /// Of `scenes`, those with a tuned execution profile installed
+    /// (DESIGN.md §16) — the router prefers tuned replicas for
+    /// one-shot traffic. Absent on the wire from older shards and
+    /// decoded as empty, so mixed-version fleets interoperate.
+    pub tuned: Vec<String>,
     /// The shard's catalog memory budget (`None` = unbounded); the
     /// router weighs ring vnodes by it.
     pub budget_bytes: Option<u64>,
@@ -360,6 +365,13 @@ impl WireHealth {
         let mut s = String::new();
         s.push_str("{\"type\":\"health\",\"scenes\":[");
         for (i, scene) in self.scenes.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            json::encode_str(scene, &mut s);
+        }
+        s.push_str("],\"tuned\":[");
+        for (i, scene) in self.tuned.iter().enumerate() {
             if i > 0 {
                 s.push(',');
             }
@@ -391,6 +403,14 @@ impl WireHealth {
             .iter()
             .map(|s| s.as_str().map(str::to_string).ok_or("non-string scene name"))
             .collect::<Result<Vec<_>, _>>()?;
+        // tolerant: a pre-autotune shard sends no 'tuned' list
+        let tuned = v
+            .get("tuned")
+            .and_then(Json::as_arr)
+            .map(|arr| {
+                arr.iter().filter_map(|s| s.as_str().map(str::to_string)).collect::<Vec<_>>()
+            })
+            .unwrap_or_default();
         let budget_bytes = match v.get("budget_bytes") {
             None | Some(Json::Null) => None,
             Some(b) => Some(
@@ -401,6 +421,7 @@ impl WireHealth {
         };
         Ok(WireHealth {
             scenes,
+            tuned,
             budget_bytes,
             frames: get_count(&v, "frames")? as u64,
             errors: get_count(&v, "errors")? as u64,
@@ -694,6 +715,7 @@ mod tests {
     fn health_roundtrips() {
         let h = WireHealth {
             scenes: vec!["train".to_string(), "trück".to_string()],
+            tuned: vec!["train".to_string()],
             budget_bytes: Some(u64::MAX - 1),
             frames: 10,
             errors: 1,
@@ -701,8 +723,13 @@ mod tests {
             queue_depth: 3,
         };
         assert_eq!(WireHealth::decode(&h.encode()).unwrap(), h);
-        let none = WireHealth { budget_bytes: None, ..h };
+        let none = WireHealth { budget_bytes: None, ..h.clone() };
         assert_eq!(WireHealth::decode(&none.encode()).unwrap().budget_bytes, None);
+        // a pre-autotune shard's report (no 'tuned' key) decodes as empty
+        let legacy = h.encode().replace(",\"tuned\":[\"train\"]", "");
+        let back = WireHealth::decode(&legacy).unwrap();
+        assert!(back.tuned.is_empty(), "missing 'tuned' must decode as empty");
+        assert_eq!(back.scenes, h.scenes);
         assert!(matches!(
             decode_message(&WireHealth::request_frame()),
             Ok(WireMessage::Health)

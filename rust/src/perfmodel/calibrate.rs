@@ -1,0 +1,263 @@
+//! Per-scene calibration of the cost model (DESIGN.md §16).
+//!
+//! The constants in [`super::cost`] are calibrated once, globally,
+//! against the paper's "train" row — but real scenes deviate: pair
+//! distributions, visibility ratios, and tile occupancy all shift the
+//! per-stage costs away from the global model. The autotuner
+//! ([`crate::tune`]) collects `(modelled, measured)` stage pairs on a
+//! scene and fits one scalar per stage — a per-scene multiplier on the
+//! global estimate — by least squares.
+//!
+//! The fit is intentionally tiny: each stage is an independent 1-D
+//! least-squares problem `min_s Σ (measured − s·modelled)²`, whose
+//! closed form is `s = Σ(measured·modelled) / Σ(modelled²)`, clamped to
+//! a sane band. Because the clamp interval contains 1.0 (the global
+//! constants), the fitted residual can never exceed the global-constant
+//! residual on the calibration set — the property `tests/properties.rs`
+//! checks (P2) holds by construction, and any regression there means
+//! this module's math drifted.
+
+use super::cost::StageEstimate;
+
+/// Fewest calibration samples the fit will accept; below this the
+/// per-scene constants fall back to the global model (all 1.0).
+pub const MIN_FIT_SAMPLES: usize = 3;
+
+/// Clamp band for each fitted per-stage constant. The interval contains
+/// 1.0, so falling back to the global constants is always representable
+/// and the fit can never do worse than them on its own samples.
+pub const FIT_CLAMP: (f64, f64) = (0.05, 20.0);
+
+/// Per-scene multipliers on the global cost model's four stages
+/// (DESIGN.md §16). `Default` is the global model itself (all 1.0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SceneConstants {
+    /// Multiplier on the modelled preprocessing latency.
+    pub preprocess: f64,
+    /// Multiplier on the modelled duplication latency.
+    pub duplicate: f64,
+    /// Multiplier on the modelled sort latency.
+    pub sort: f64,
+    /// Multiplier on the modelled blending latency.
+    pub blend: f64,
+}
+
+impl Default for SceneConstants {
+    fn default() -> Self {
+        SceneConstants { preprocess: 1.0, duplicate: 1.0, sort: 1.0, blend: 1.0 }
+    }
+}
+
+impl SceneConstants {
+    /// Apply the per-scene multipliers to a global-model estimate.
+    pub fn apply(&self, e: &StageEstimate) -> StageEstimate {
+        StageEstimate {
+            preprocess: e.preprocess * self.preprocess,
+            duplicate: e.duplicate * self.duplicate,
+            sort: e.sort * self.sort,
+            blend: e.blend * self.blend,
+        }
+    }
+
+    /// True when every constant is finite and inside the clamp band —
+    /// what [`fit`] guarantees and what ladder validation assumes.
+    pub fn is_sane(&self) -> bool {
+        [self.preprocess, self.duplicate, self.sort, self.blend]
+            .iter()
+            .all(|c| c.is_finite() && (FIT_CLAMP.0..=FIT_CLAMP.1).contains(c))
+    }
+}
+
+/// One calibration observation: what the global model predicted for a
+/// configuration vs. what the harness measured for it.
+#[derive(Debug, Clone, Copy)]
+pub struct CalibrationSample {
+    /// The global model's per-stage estimate for the configuration.
+    pub modelled: StageEstimate,
+    /// The measured per-stage latencies for the same configuration.
+    pub measured: StageEstimate,
+}
+
+/// What a fit produced: the constants plus how many stages fell back to
+/// the global model (too few samples, or a degenerate/non-finite
+/// normal equation) — exported as the `fit_fallbacks` metric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FitOutcome {
+    /// The fitted (or fallen-back) per-scene constants.
+    pub constants: SceneConstants,
+    /// Stages that fell back to the global constant 1.0.
+    pub fallbacks: u64,
+}
+
+/// Closed-form 1-D least squares for one stage: `s` minimizing
+/// `Σ (measured − s·modelled)²`, clamped to [`FIT_CLAMP`]. Returns the
+/// global constant 1.0 (and flags a fallback) when the normal equation
+/// is degenerate or non-finite.
+fn fit_stage(pairs: &[(f64, f64)]) -> (f64, bool) {
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for &(modelled, measured) in pairs {
+        num += measured * modelled;
+        den += modelled * modelled;
+    }
+    if !(num.is_finite() && den.is_finite()) || den <= 0.0 {
+        return (1.0, true);
+    }
+    let s = (num / den).clamp(FIT_CLAMP.0, FIT_CLAMP.1);
+    if s.is_finite() {
+        (s, false)
+    } else {
+        (1.0, true)
+    }
+}
+
+/// Fit per-scene constants from calibration samples. Fewer than
+/// [`MIN_FIT_SAMPLES`] samples falls back to the global model entirely
+/// (all four stages counted as fallbacks); otherwise each stage fits
+/// independently, falling back alone if its own normal equation is
+/// degenerate.
+pub fn fit(samples: &[CalibrationSample]) -> FitOutcome {
+    if samples.len() < MIN_FIT_SAMPLES {
+        return FitOutcome { constants: SceneConstants::default(), fallbacks: 4 };
+    }
+    let stage = |pick: fn(&StageEstimate) -> f64| -> Vec<(f64, f64)> {
+        samples.iter().map(|s| (pick(&s.modelled), pick(&s.measured))).collect()
+    };
+    let (preprocess, f0) = fit_stage(&stage(|e| e.preprocess));
+    let (duplicate, f1) = fit_stage(&stage(|e| e.duplicate));
+    let (sort, f2) = fit_stage(&stage(|e| e.sort));
+    let (blend, f3) = fit_stage(&stage(|e| e.blend));
+    FitOutcome {
+        constants: SceneConstants { preprocess, duplicate, sort, blend },
+        fallbacks: [f0, f1, f2, f3].iter().filter(|&&f| f).count() as u64,
+    }
+}
+
+/// Sum of squared per-stage errors of `constants` over the calibration
+/// set — the quantity [`fit`] minimizes per stage, and the quantity the
+/// P2 property compares against the global constants.
+pub fn residual(samples: &[CalibrationSample], constants: &SceneConstants) -> f64 {
+    let mut sum = 0.0;
+    for s in samples {
+        let scaled = constants.apply(&s.modelled);
+        let d0 = s.measured.preprocess - scaled.preprocess;
+        let d1 = s.measured.duplicate - scaled.duplicate;
+        let d2 = s.measured.sort - scaled.sort;
+        let d3 = s.measured.blend - scaled.blend;
+        sum += d0 * d0 + d1 * d1 + d2 * d2 + d3 * d3;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(p: f64, d: f64, s: f64, b: f64) -> StageEstimate {
+        StageEstimate { preprocess: p, duplicate: d, sort: s, blend: b }
+    }
+
+    fn scaled_samples(factor: f64, n: usize) -> Vec<CalibrationSample> {
+        (0..n)
+            .map(|i| {
+                let base = 1.0 + i as f64 * 0.5;
+                let m = est(base, base * 0.2, base * 0.4, base * 2.0);
+                CalibrationSample {
+                    modelled: m,
+                    measured: SceneConstants {
+                        preprocess: factor,
+                        duplicate: factor,
+                        sort: factor,
+                        blend: factor,
+                    }
+                    .apply(&m),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_an_exact_scaling() {
+        let samples = scaled_samples(1.7, 5);
+        let out = fit(&samples);
+        assert_eq!(out.fallbacks, 0);
+        for c in [
+            out.constants.preprocess,
+            out.constants.duplicate,
+            out.constants.sort,
+            out.constants.blend,
+        ] {
+            assert!((c - 1.7).abs() < 1e-9, "constant {c}");
+        }
+        assert!(residual(&samples, &out.constants) < 1e-12);
+    }
+
+    #[test]
+    fn too_few_samples_fall_back_to_global() {
+        let samples = scaled_samples(3.0, MIN_FIT_SAMPLES - 1);
+        let out = fit(&samples);
+        assert_eq!(out.constants, SceneConstants::default());
+        assert_eq!(out.fallbacks, 4);
+    }
+
+    #[test]
+    fn degenerate_stage_falls_back_alone() {
+        // zero modelled duplicate cost everywhere: that stage's normal
+        // equation is degenerate, the others fit fine
+        let samples: Vec<CalibrationSample> = (0..4)
+            .map(|i| {
+                let base = 1.0 + i as f64;
+                CalibrationSample {
+                    modelled: est(base, 0.0, base, base),
+                    measured: est(base * 2.0, 0.5, base * 2.0, base * 2.0),
+                }
+            })
+            .collect();
+        let out = fit(&samples);
+        assert_eq!(out.fallbacks, 1);
+        assert_eq!(out.constants.duplicate, 1.0);
+        assert!((out.constants.blend - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_is_clamped_to_the_sane_band() {
+        let samples = scaled_samples(1000.0, 4);
+        let out = fit(&samples);
+        assert_eq!(out.constants.blend, FIT_CLAMP.1);
+        assert!(out.constants.is_sane());
+    }
+
+    #[test]
+    fn fit_never_worse_than_global_on_its_own_samples() {
+        // the P2 property at module scope, over a few noise patterns
+        let mut rng = crate::scene::rng::Rng::new(7);
+        for _ in 0..50 {
+            let samples: Vec<CalibrationSample> = (0..6)
+                .map(|_| {
+                    let m = est(
+                        rng.range(0.1, 5.0) as f64,
+                        rng.range(0.1, 5.0) as f64,
+                        rng.range(0.1, 5.0) as f64,
+                        rng.range(0.1, 5.0) as f64,
+                    );
+                    let noise = || rng.range(0.3, 3.0) as f64;
+                    CalibrationSample {
+                        modelled: m,
+                        measured: est(
+                            m.preprocess * noise(),
+                            m.duplicate * noise(),
+                            m.sort * noise(),
+                            m.blend * noise(),
+                        ),
+                    }
+                })
+                .collect();
+            let out = fit(&samples);
+            let fitted = residual(&samples, &out.constants);
+            let global = residual(&samples, &SceneConstants::default());
+            assert!(
+                fitted <= global + 1e-12,
+                "fit residual {fitted} worse than global {global}"
+            );
+        }
+    }
+}

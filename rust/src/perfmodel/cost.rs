@@ -211,6 +211,22 @@ pub fn estimate(
     StageEstimate { preprocess, duplicate, sort, blend }
 }
 
+/// [`estimate`] under per-scene calibrated constants (DESIGN.md §16):
+/// the global model's per-stage costs, each scaled by the scene's
+/// fitted multiplier. With `SceneConstants::default()` this is exactly
+/// [`estimate`] — the autotuner's fallback path and the pre-calibration
+/// behaviour are the same code.
+pub fn estimate_with(
+    gpu: &GpuSpec,
+    w: &WorkloadProfile,
+    kind: BlendKind,
+    factors: MethodFactors,
+    batch: usize,
+    constants: &super::calibrate::SceneConstants,
+) -> StageEstimate {
+    constants.apply(&estimate(gpu, w, kind, factors, batch))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -319,6 +335,35 @@ mod tests {
         assert_eq!(tiny.n_gaussians, w.n_gaussians);
         assert_eq!(tiny.n_visible, w.n_visible);
         assert!(tiny.n_active_tiles >= 1.0);
+    }
+
+    #[test]
+    fn default_constants_are_the_global_model() {
+        let w = train_like();
+        let base = estimate(&A100, &w, BlendKind::Gemm, Default::default(), 256);
+        let with = estimate_with(
+            &A100,
+            &w,
+            BlendKind::Gemm,
+            Default::default(),
+            256,
+            &crate::perfmodel::calibrate::SceneConstants::default(),
+        );
+        assert_eq!(base.total(), with.total());
+
+        let scaled = estimate_with(
+            &A100,
+            &w,
+            BlendKind::Gemm,
+            Default::default(),
+            256,
+            &crate::perfmodel::calibrate::SceneConstants {
+                blend: 2.0,
+                ..Default::default()
+            },
+        );
+        assert!((scaled.blend - 2.0 * base.blend).abs() < 1e-15);
+        assert_eq!(scaled.preprocess, base.preprocess);
     }
 
     #[test]

@@ -16,8 +16,10 @@
 //! no further fitting.
 
 pub mod breakdown;
+pub mod calibrate;
 pub mod cost;
 pub mod gpu;
 
-pub use cost::{estimate, BlendKind, MethodFactors, StageEstimate, WorkloadProfile};
+pub use calibrate::{fit, residual, CalibrationSample, FitOutcome, SceneConstants};
+pub use cost::{estimate, estimate_with, BlendKind, MethodFactors, StageEstimate, WorkloadProfile};
 pub use gpu::{GpuSpec, A100, B200, H100, H200, V100};

@@ -17,7 +17,9 @@
 
 use crate::accel::AccelKind;
 use crate::math::Camera;
-use crate::perfmodel::{estimate, BlendKind, MethodFactors, WorkloadProfile, A100};
+use crate::perfmodel::{
+    estimate_with, BlendKind, MethodFactors, SceneConstants, WorkloadProfile, A100,
+};
 
 /// One degradation rung: render at `res_scale` of the requested
 /// resolution, optionally overriding the request's acceleration method.
@@ -65,8 +67,14 @@ fn reference_profile() -> WorkloadProfile {
 /// Modelled per-frame cost (seconds) of rendering the reference
 /// workload at one rung: the profile is resolution-scaled, the method's
 /// modelled pair survival applied, and the GEMM blender priced with the
-/// method's own cost factors (DESIGN.md §8's composition knobs).
-fn rung_model_cost(rung: &QualityRung, request_accel: AccelKind) -> f64 {
+/// method's own cost factors (DESIGN.md §8's composition knobs) under
+/// the scene's calibrated constants (DESIGN.md §16 — global constants
+/// are just `SceneConstants::default()`).
+fn rung_model_cost(
+    rung: &QualityRung,
+    request_accel: AccelKind,
+    constants: &SceneConstants,
+) -> f64 {
     let kind = rung.accel.unwrap_or(request_accel);
     let method = kind.instantiate();
     let mut profile = reference_profile().scaled_resolution(rung.res_scale);
@@ -79,7 +87,7 @@ fn rung_model_cost(rung: &QualityRung, request_accel: AccelKind) -> f64 {
         profile.n_visible *= keep;
     }
     let factors = MethodFactors::from_method(method.as_ref());
-    estimate(&A100, &profile, BlendKind::Gemm, factors, 256).total()
+    estimate_with(&A100, &profile, BlendKind::Gemm, factors, 256, constants).total()
 }
 
 /// An ordered, validated set of degradation rungs. Construction
@@ -132,6 +140,20 @@ impl QualityLadder {
     /// — [`AccelKind`] *is* the registry), or the modelled cost is not
     /// strictly decreasing down the ladder.
     pub fn new(rungs: Vec<QualityRung>) -> Result<QualityLadder, String> {
+        Self::with_constants(rungs, &SceneConstants::default())
+    }
+
+    /// [`new`](Self::new) priced under per-scene calibrated constants
+    /// (DESIGN.md §16): every rung cost — and therefore every cost
+    /// ratio the controller, the deadline-fit walk, and admission
+    /// control consume — reflects the scene's measured stage weights
+    /// instead of the global model. The same strictly-cheaper
+    /// validation runs, so a calibration that breaks the ordering is
+    /// rejected here, not discovered as controller oscillation.
+    pub fn with_constants(
+        rungs: Vec<QualityRung>,
+        constants: &SceneConstants,
+    ) -> Result<QualityLadder, String> {
         if rungs.is_empty() {
             return Err("quality ladder must have at least one rung".to_string());
         }
@@ -154,7 +176,7 @@ impl QualityLadder {
         // runs on (other columns get the prefix-min effective mapping)
         let costs: Vec<Vec<f64>> = AccelKind::all()
             .iter()
-            .map(|kind| rungs.iter().map(|r| rung_model_cost(r, *kind)).collect())
+            .map(|kind| rungs.iter().map(|r| rung_model_cost(r, *kind, constants)).collect())
             .collect();
         let vanilla = &costs[kind_index(AccelKind::Vanilla)];
         if let Some(i) = first_cost_inversion(vanilla) {
@@ -421,6 +443,26 @@ mod tests {
         for r in 0..ladder.len() {
             assert_eq!(ladder.effective_rung(r, AccelKind::Vanilla), r);
         }
+    }
+
+    #[test]
+    fn calibrated_constants_rescale_costs_but_keep_validation() {
+        let base = QualityLadder::default_ladder();
+        // a blend-heavy scene: everything gets pricier, ordering intact
+        let constants = SceneConstants { blend: 2.0, sort: 0.5, ..Default::default() };
+        let cal = QualityLadder::with_constants(base.rungs().to_vec(), &constants)
+            .expect("calibrated default ladder must validate");
+        assert!(cal.cost_ms(0) > base.cost_ms(0), "blend×2 must raise rung 0's cost");
+        for r in 1..cal.len() {
+            assert!(cal.cost_ms(r) < cal.cost_ms(r - 1), "calibrated rung {r} not cheaper");
+        }
+        // default constants are exactly `new`
+        let same = QualityLadder::with_constants(
+            base.rungs().to_vec(),
+            &SceneConstants::default(),
+        )
+        .unwrap();
+        assert_eq!(same.cost_ms(0), base.cost_ms(0));
     }
 
     #[test]

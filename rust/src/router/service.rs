@@ -49,6 +49,9 @@ impl RouterConfig {
 struct Shard {
     pool: ClientPool,
     scenes: Vec<String>,
+    /// Scenes this shard advertised a tuned execution profile for at
+    /// connect time (DESIGN.md §16); one-shot routing prefers them.
+    tuned: Vec<String>,
 }
 
 /// The routing core: a placement ring plus one connection pool per
@@ -76,7 +79,7 @@ impl Router {
                 .health()
                 .map_err(|e| format!("shard '{addr}' did not answer a health probe: {e}"))?;
             budgets.push(health.budget_bytes);
-            shards.push(Shard { pool, scenes: health.scenes });
+            shards.push(Shard { pool, scenes: health.scenes, tuned: health.tuned });
         }
         // unbudgeted shards get the mean of the known budgets (equal
         // weight when none advertises one)
@@ -111,6 +114,12 @@ impl Router {
     /// Scenes advertised by shard `idx` at connect time.
     pub fn shard_scenes(&self, idx: usize) -> &[String] {
         self.shards.get(idx).map(|s| s.scenes.as_slice()).unwrap_or(&[])
+    }
+
+    /// Scenes shard `idx` advertised a tuned execution profile for at
+    /// connect time (DESIGN.md §16).
+    pub fn shard_tuned(&self, idx: usize) -> &[String] {
+        self.shards.get(idx).map(|s| s.tuned.as_slice()).unwrap_or(&[])
     }
 
     /// Point-in-time router counters.
@@ -174,7 +183,20 @@ impl Router {
         }
         let n = order.len().max(1);
         let start = (mix(req.id) % n as u64) as usize;
-        order.iter().cycle().skip(start).take(n).copied().collect()
+        let rotated: Vec<usize> =
+            order.iter().cycle().skip(start).take(n).copied().collect();
+        // prefer replicas that advertised a tuned profile for this
+        // scene (DESIGN.md §16); stable partition keeps the id-based
+        // rotation within each class, so load still spreads
+        let (mut tuned, untuned): (Vec<usize>, Vec<usize>) =
+            rotated.into_iter().partition(|&i| {
+                self.shards
+                    .get(i)
+                    .map(|s| s.tuned.iter().any(|t| t == &req.scene))
+                    .unwrap_or(false)
+            });
+        tuned.extend(untuned);
+        tuned
     }
 
     /// Aggregate health for router clients: the union of shard scenes,
@@ -182,17 +204,25 @@ impl Router {
     /// health shape.
     pub fn health(&self) -> WireHealth {
         let mut scenes: Vec<String> = Vec::new();
+        let mut tuned: Vec<String> = Vec::new();
         for s in &self.shards {
             for name in &s.scenes {
                 if !scenes.contains(name) {
                     scenes.push(name.clone());
                 }
             }
+            for name in &s.tuned {
+                if !tuned.contains(name) {
+                    tuned.push(name.clone());
+                }
+            }
         }
         scenes.sort_unstable();
+        tuned.sort_unstable();
         let m = self.metrics.snapshot();
         WireHealth {
             scenes,
+            tuned,
             budget_bytes: None,
             frames: m.frames_relayed,
             errors: m.errors_relayed,

@@ -1,0 +1,47 @@
+//! Per-scene **autotuned execution profiles** (DESIGN.md §16).
+//!
+//! The paper's composability result — GEMM blending stacking on top of
+//! the published acceleration methods — is scene-dependent: which
+//! method wins, at what batch size, and at which operand precision
+//! shifts with scene statistics. This module turns that observation
+//! into a serving feature:
+//!
+//! * [`search`] — the deterministic search loop: enumerate
+//!   (accel × resolution scale × batch × precision) in canonical
+//!   order, measure each point with a real pipeline run priced through
+//!   the perfmodel, fit per-scene [`crate::perfmodel::SceneConstants`]
+//!   by least squares ([`crate::perfmodel::calibrate`]), pick the
+//!   cheapest full-quality winner.
+//! * [`profile`] — the [`ExecutionProfile`] value: schema-versioned
+//!   deterministic JSON (offline `gemm-gs tune`), calibrated-ladder
+//!   construction, and measured-floor rung pricing for QoS admission.
+//!
+//! Profiles reach the serving path two ways: the `gemm-gs tune`
+//! subcommand emits/loads them as JSON (`serve --profile`), and the
+//! coordinator can tune in the background on a scene's first load
+//! (`CoordinatorConfig::tune_on_load`), serving untuned until the
+//! tuned profile atomically swaps into the catalog.
+//!
+//! **Determinism contract** (DESIGN.md §16): no wall-clock value ever
+//! enters a sample, the fit, the winner choice, or the emitted JSON —
+//! a fixed `(scene, probe resolution, seed)` replays byte-for-byte.
+//!
+//! The whole module sits in the request-path panic-freedom lint scope
+//! (L002, DESIGN.md §14): background tunes share the serving process,
+//! so they must not be able to take it down.
+
+pub mod profile;
+pub mod search;
+
+pub use profile::{ExecutionProfile, Precision, TunedConfig, PROFILE_SCHEMA_VERSION};
+pub use search::{run_tune, TuneInput, BATCHES, RES_SCALES, UNTUNED};
+
+/// Probe width the coordinator's background tune measures at — small
+/// enough to stay off the request path's heels, large enough for a
+/// non-degenerate tile grid.
+pub const PROBE_WIDTH: u32 = 192;
+/// Probe height of the background tune (16:9 with [`PROBE_WIDTH`]).
+pub const PROBE_HEIGHT: u32 = 108;
+/// Seed the background tune runs under — fixed, so an in-service tune
+/// of a scene is as replayable as an offline one.
+pub const DEFAULT_TUNE_SEED: u64 = 42;

@@ -1,0 +1,339 @@
+//! The [`ExecutionProfile`]: what a tune run produces, how it is
+//! serialized, and how downstream consumers price with it
+//! (DESIGN.md §16).
+//!
+//! A profile is a plain value: the winning configuration, the fitted
+//! per-scene constants, and the measured per-rung costs of the default
+//! quality ladder. Serialization reuses the hand-rolled
+//! [`crate::runtime::json`] encoder — sorted keys, ASCII-only — so a
+//! fixed-seed tune emits byte-identical JSON on every run (the
+//! determinism contract CI's `tune-smoke` job enforces with `cmp`).
+//!
+//! This file is inside the panic-freedom lint scope (L002,
+//! DESIGN.md §14): parsing and pricing return `Result`/`Option`
+//! instead of indexing or unwrapping.
+
+use crate::accel::AccelKind;
+use crate::perfmodel::SceneConstants;
+use crate::qos::QualityLadder;
+use crate::runtime::json::{encode, parse, Json};
+use std::collections::HashMap;
+
+/// Profile JSON schema version — the same single version stream the
+/// bench baselines use ([`crate::bench_harness::report::BENCH_SCHEMA_VERSION`]),
+/// so one bump covers every schema-versioned artifact the repo emits.
+pub const PROFILE_SCHEMA_VERSION: u32 = crate::bench_harness::report::BENCH_SCHEMA_VERSION;
+
+/// Operand precision of the blending GEMM. The search only offers
+/// [`Precision::Bf16`] when the artifact backend is present — the
+/// native CPU reference path is f32-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// TF32/FP32 Tensor-Core path (always available).
+    F32,
+    /// BF16 Tensor-Core path (artifact backend only; double TC rate).
+    Bf16,
+}
+
+impl Precision {
+    /// Serialized spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse the serialized spelling.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+}
+
+/// One point of the search space: the configuration a scene renders
+/// best at (DESIGN.md §16's search dimensions).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunedConfig {
+    /// Acceleration method composed under the GEMM blender.
+    pub accel: AccelKind,
+    /// Resolution scale of the operating point (the winner is always
+    /// searched at 1.0; deeper scales only feed the calibration fit).
+    pub res_scale: f64,
+    /// Blending batch size `b`.
+    pub batch: usize,
+    /// GEMM operand precision.
+    pub precision: Precision,
+}
+
+/// A tuned, per-scene execution profile: the autotuner's output and
+/// the unit the catalog swaps in atomically (DESIGN.md §16).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionProfile {
+    /// Schema version ([`PROFILE_SCHEMA_VERSION`]).
+    pub schema_version: u32,
+    /// Scene the profile was tuned on.
+    pub scene: String,
+    /// Seed the search ran under (replaying it reproduces the profile
+    /// byte-for-byte).
+    pub seed: u64,
+    /// The winning full-resolution configuration.
+    pub winner: TunedConfig,
+    /// Modelled cost of the winner (ms) under the calibrated model.
+    pub winner_cost_ms: f64,
+    /// Modelled cost (ms) of the untuned reference configuration
+    /// (vanilla, full resolution, batch 256, f32) on the same measured
+    /// workload — `untuned_cost_ms / winner_cost_ms` is the
+    /// tuned-vs-untuned gate metric, ≥ 1 by construction because the
+    /// reference is itself a searched candidate.
+    pub untuned_cost_ms: f64,
+    /// Fitted per-scene constants ([`crate::perfmodel::calibrate`]).
+    pub constants: SceneConstants,
+    /// Stages whose fit fell back to the global constants.
+    pub fit_fallbacks: u64,
+    /// Calibration samples the fit consumed.
+    pub samples: usize,
+    /// Per-rung cost (ms) of the default ladder priced from *measured*
+    /// workload counts at each rung's operating point.
+    pub rung_measured_ms: Vec<f64>,
+    /// Per-rung cost (ms) of the default ladder under the *calibrated
+    /// model* (analytic scaling × fitted constants).
+    pub rung_model_ms: Vec<f64>,
+}
+
+impl ExecutionProfile {
+    /// The price QoS admission uses for a rung: the calibrated model
+    /// cost floored by the measured cost. Never below measured — the
+    /// P1 property of `tests/properties.rs` — so a calibration that
+    /// underestimates a rung cannot talk admission into deadlines the
+    /// scene was measured to miss. `None` past the ladder's depth.
+    pub fn rung_price_ms(&self, rung: usize) -> Option<f64> {
+        let model = self.rung_model_ms.get(rung)?;
+        let measured = self.rung_measured_ms.get(rung)?;
+        Some(model.max(*measured))
+    }
+
+    /// Build the scene's calibrated quality ladder: the default rung
+    /// structure priced under the fitted constants
+    /// ([`QualityLadder::with_constants`]). Rung geometry is untouched
+    /// — rung 0 stays the identity, so the byte-identity invariant of
+    /// `tests/e2e_qos.rs` holds for tuned scenes too. Errs when the
+    /// calibration breaks the strictly-cheaper ordering.
+    pub fn ladder(&self) -> Result<QualityLadder, String> {
+        QualityLadder::with_constants(
+            QualityLadder::default_ladder().rungs().to_vec(),
+            &self.constants,
+        )
+    }
+
+    /// Serialize to the deterministic JSON wire form (sorted keys,
+    /// ASCII-only, shortest-round-trip numbers — byte-stable for a
+    /// fixed profile value).
+    pub fn to_json(&self) -> String {
+        let mut winner = HashMap::new();
+        winner.insert("accel".to_string(), Json::Str(self.winner.accel.cli_name().to_string()));
+        winner.insert("res_scale".to_string(), Json::Num(self.winner.res_scale));
+        winner.insert("batch".to_string(), Json::Num(self.winner.batch as f64));
+        winner
+            .insert("precision".to_string(), Json::Str(self.winner.precision.as_str().to_string()));
+        let mut constants = HashMap::new();
+        constants.insert("preprocess".to_string(), Json::Num(self.constants.preprocess));
+        constants.insert("duplicate".to_string(), Json::Num(self.constants.duplicate));
+        constants.insert("sort".to_string(), Json::Num(self.constants.sort));
+        constants.insert("blend".to_string(), Json::Num(self.constants.blend));
+        let mut m = HashMap::new();
+        m.insert("schema_version".to_string(), Json::Num(self.schema_version as f64));
+        m.insert("scene".to_string(), Json::Str(self.scene.clone()));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("winner".to_string(), Json::Obj(winner));
+        m.insert("winner_cost_ms".to_string(), Json::Num(self.winner_cost_ms));
+        m.insert("untuned_cost_ms".to_string(), Json::Num(self.untuned_cost_ms));
+        m.insert("constants".to_string(), Json::Obj(constants));
+        m.insert("fit_fallbacks".to_string(), Json::Num(self.fit_fallbacks as f64));
+        m.insert("samples".to_string(), Json::Num(self.samples as f64));
+        m.insert(
+            "rung_measured_ms".to_string(),
+            Json::Arr(self.rung_measured_ms.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        m.insert(
+            "rung_model_ms".to_string(),
+            Json::Arr(self.rung_model_ms.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        encode(&Json::Obj(m))
+    }
+
+    /// Parse the wire form back. Hard-errors on a schema mismatch or
+    /// any missing/mistyped field — a profile is a contract, not a
+    /// grab-bag of hints.
+    pub fn parse(text: &str) -> Result<ExecutionProfile, String> {
+        let doc = parse(text).map_err(|e| format!("profile JSON: {e}"))?;
+        let num = |key: &str| -> Result<f64, String> {
+            doc.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("profile missing numeric field '{key}'"))
+        };
+        let schema = num("schema_version")? as u32;
+        if schema != PROFILE_SCHEMA_VERSION {
+            return Err(format!(
+                "profile schema {schema} does not match this binary's {PROFILE_SCHEMA_VERSION}"
+            ));
+        }
+        let scene = doc
+            .get("scene")
+            .and_then(Json::as_str)
+            .ok_or("profile missing string field 'scene'")?
+            .to_string();
+        let winner_doc =
+            doc.get("winner").ok_or("profile missing object field 'winner'")?;
+        let accel = winner_doc
+            .get("accel")
+            .and_then(Json::as_str)
+            .and_then(AccelKind::parse)
+            .ok_or("profile winner has no valid 'accel'")?;
+        let precision = winner_doc
+            .get("precision")
+            .and_then(Json::as_str)
+            .and_then(Precision::parse)
+            .ok_or("profile winner has no valid 'precision'")?;
+        let batch = winner_doc
+            .get("batch")
+            .and_then(Json::as_usize)
+            .ok_or("profile winner has no valid 'batch'")?;
+        let res_scale = winner_doc
+            .get("res_scale")
+            .and_then(Json::as_f64)
+            .ok_or("profile winner has no valid 'res_scale'")?;
+        let constants_doc =
+            doc.get("constants").ok_or("profile missing object field 'constants'")?;
+        let constant = |key: &str| -> Result<f64, String> {
+            constants_doc
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("profile constants missing '{key}'"))
+        };
+        let rung_vec = |key: &str| -> Result<Vec<f64>, String> {
+            doc.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("profile missing array field '{key}'"))?
+                .iter()
+                .map(|v| {
+                    v.as_f64().ok_or_else(|| format!("profile '{key}' holds a non-number"))
+                })
+                .collect()
+        };
+        Ok(ExecutionProfile {
+            schema_version: schema,
+            scene,
+            seed: num("seed")? as u64,
+            winner: TunedConfig { accel, res_scale, batch, precision },
+            winner_cost_ms: num("winner_cost_ms")?,
+            untuned_cost_ms: num("untuned_cost_ms")?,
+            constants: SceneConstants {
+                preprocess: constant("preprocess")?,
+                duplicate: constant("duplicate")?,
+                sort: constant("sort")?,
+                blend: constant("blend")?,
+            },
+            fit_fallbacks: num("fit_fallbacks")? as u64,
+            samples: num("samples")? as usize,
+            rung_measured_ms: rung_vec("rung_measured_ms")?,
+            rung_model_ms: rung_vec("rung_model_ms")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ExecutionProfile {
+        ExecutionProfile {
+            schema_version: PROFILE_SCHEMA_VERSION,
+            scene: "train".to_string(),
+            seed: 42,
+            winner: TunedConfig {
+                accel: AccelKind::FlashGs,
+                res_scale: 1.0,
+                batch: 256,
+                precision: Precision::F32,
+            },
+            winner_cost_ms: 2.5,
+            untuned_cost_ms: 3.75,
+            constants: SceneConstants {
+                preprocess: 1.1,
+                duplicate: 0.9,
+                sort: 1.25,
+                blend: 1.05,
+            },
+            fit_fallbacks: 0,
+            samples: 24,
+            rung_measured_ms: vec![4.0, 3.0, 2.0, 1.5, 1.0],
+            rung_model_ms: vec![4.2, 2.8, 2.1, 1.4, 0.9],
+        }
+    }
+
+    #[test]
+    fn json_roundtrips_bitwise() {
+        let p = sample();
+        let text = p.to_json();
+        let back = ExecutionProfile::parse(&text).expect("parse back");
+        assert_eq!(back, p);
+        assert_eq!(back.to_json(), text, "re-encode must be byte-identical");
+        assert!(text.is_ascii());
+    }
+
+    #[test]
+    fn schema_mismatch_is_rejected() {
+        let text = sample().to_json().replace(
+            &format!("\"schema_version\":{PROFILE_SCHEMA_VERSION}"),
+            "\"schema_version\":999",
+        );
+        let err = ExecutionProfile::parse(&text).unwrap_err();
+        assert!(err.contains("schema 999"), "{err}");
+    }
+
+    #[test]
+    fn missing_fields_are_hard_errors() {
+        assert!(ExecutionProfile::parse("{}").is_err());
+        let no_winner = sample().to_json().replace("\"winner\"", "\"loser\"");
+        assert!(ExecutionProfile::parse(&no_winner).is_err());
+        assert!(ExecutionProfile::parse("not json").is_err());
+    }
+
+    #[test]
+    fn rung_price_floors_at_measured() {
+        let p = sample();
+        // rung 0: model 4.2 > measured 4.0 → model wins
+        assert_eq!(p.rung_price_ms(0), Some(4.2));
+        // rung 1: model 2.8 < measured 3.0 → floored at measured (P1)
+        assert_eq!(p.rung_price_ms(1), Some(3.0));
+        assert_eq!(p.rung_price_ms(99), None);
+        for r in 0..p.rung_measured_ms.len() {
+            let price = p.rung_price_ms(r).expect("in range");
+            let measured = p.rung_measured_ms[r];
+            assert!(price >= measured, "rung {r} priced below measured");
+        }
+    }
+
+    #[test]
+    fn ladder_is_calibrated_and_keeps_rung0_identity() {
+        let p = sample();
+        let ladder = p.ladder().expect("sane constants must build a ladder");
+        assert_eq!(ladder.len(), QualityLadder::default_ladder().len());
+        assert_eq!(ladder.rungs()[0], crate::qos::QualityRung::full());
+        // the calibrated price differs from the global default
+        let base = QualityLadder::default_ladder();
+        assert!((ladder.cost_ms(0) - base.cost_ms(0)).abs() > 1e-9);
+    }
+
+    #[test]
+    fn precision_spellings_roundtrip() {
+        for p in [Precision::F32, Precision::Bf16] {
+            assert_eq!(Precision::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Precision::parse("fp64"), None);
+    }
+}

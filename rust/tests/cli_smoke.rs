@@ -391,3 +391,103 @@ fn net_drive_without_connect_exits_two() {
     assert_eq!(out.status.code(), Some(2), "missing --connect is a usage error");
     assert!(String::from_utf8_lossy(&out.stderr).contains("--connect"));
 }
+
+// ----------------------------------------------- autotune (DESIGN.md §16)
+
+#[test]
+fn tune_appears_in_usage() {
+    let out = gemm_gs().output().expect("spawn");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("tune:"), "usage must list tune: {stdout}");
+    assert!(stdout.contains("--profile"), "usage must mention --profile: {stdout}");
+}
+
+#[test]
+fn tune_succeeds_and_json_emits_the_profile_schema() {
+    let out = gemm_gs()
+        .args(["tune", "--scene", "train", "--scale", "0.001", "--seed", "42"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "tune must exit 0: {:?}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("tuned 'train'"), "{stdout}");
+
+    let out = gemm_gs()
+        .args(["tune", "--json", "--scene", "train", "--scale", "0.001", "--seed", "42"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "tune --json must exit 0: {:?}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for field in [
+        "\"schema_version\"",
+        "\"scene\"",
+        "\"seed\"",
+        "\"winner\"",
+        "\"constants\"",
+        "\"fit_fallbacks\"",
+        "\"rung_measured_ms\"",
+        "\"rung_model_ms\"",
+        "\"untuned_cost_ms\"",
+        "\"winner_cost_ms\"",
+    ] {
+        assert!(stdout.contains(field), "profile JSON missing {field}: {stdout}");
+    }
+}
+
+#[test]
+fn tune_out_is_byte_reproducible() {
+    // the CI tune-smoke contract in miniature: two fixed-seed runs,
+    // byte-identical files
+    let dir = std::env::temp_dir().join("gemm_gs_cli_tune_repro");
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let (p1, p2) = (dir.join("p1.json"), dir.join("p2.json"));
+    for p in [&p1, &p2] {
+        let out = gemm_gs()
+            .args([
+                "tune",
+                "--scene",
+                "train",
+                "--scale",
+                "0.001",
+                "--seed",
+                "42",
+                "--out",
+                p.to_str().unwrap(),
+            ])
+            .output()
+            .expect("spawn");
+        assert!(out.status.success(), "tune --out failed: {:?}", out.status);
+    }
+    let a = std::fs::read(&p1).expect("first profile");
+    let b = std::fs::read(&p2).expect("second profile");
+    assert!(a == b, "fixed-seed tune wrote different bytes");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tune_unknown_scene_exits_one_and_bad_flags_exit_two() {
+    let out = gemm_gs().args(["tune", "--scene", "atlantis"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(1), "unknown scene is a runtime failure");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown scene 'atlantis'"));
+
+    let out = gemm_gs().args(["tune", "--seed", "banana"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "bad --seed must exit 2");
+
+    let out = gemm_gs().args(["tune", "stray"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "stray positional must exit 2");
+}
+
+#[test]
+fn unreadable_profile_exits_one_on_serve_and_bench_soak() {
+    // both consumers validate --profile up front — exit 1, never
+    // silently serving untuned
+    for sub in ["serve", "bench-soak"] {
+        let out = gemm_gs()
+            .args([sub, "--profile", "/definitely/not/a/profile.json"])
+            .output()
+            .expect("spawn");
+        assert_eq!(out.status.code(), Some(1), "{sub}: unreadable --profile must exit 1");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains("failed to read profile"), "{sub}: {stderr}");
+    }
+}

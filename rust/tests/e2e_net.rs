@@ -223,6 +223,7 @@ fn doomed_shard(scenes: Vec<String>) -> std::net::SocketAddr {
         }
         let health = WireHealth {
             scenes,
+            tuned: Vec::new(),
             budget_bytes: None,
             frames: 0,
             errors: 0,

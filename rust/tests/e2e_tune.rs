@@ -1,0 +1,264 @@
+//! E2E: per-scene autotuned execution profiles (DESIGN.md §16)
+//! through the public surface:
+//!
+//! * **byte reproducibility** — a fixed-seed tune replays to an
+//!   identical profile with byte-identical JSON (the contract CI's
+//!   `tune-smoke` job enforces with `cmp`), and parses back losslessly;
+//! * **rung-0 identity** — installing a tuned profile never changes
+//!   rung-0 pixels: every accel method through a tuned QoS service
+//!   stays bit-for-bit equal to the direct pipeline;
+//! * **background tune** — `tune_on_load` tunes a scene's first load on
+//!   a detached thread, swaps the profile in without shedding or
+//!   double-loading, and the in-service tune replays offline;
+//! * **soak parity** — a tuned service's goodput holds up against the
+//!   untuned baseline on the same seeded skewed scene mix.
+
+use gemm_gs::accel::AccelKind;
+use gemm_gs::coordinator::{
+    BackendKind, Coordinator, CoordinatorConfig, RenderRequest, SceneSet,
+};
+use gemm_gs::math::{Camera, Vec3};
+use gemm_gs::pipeline::render::{render_frame, RenderConfig};
+use gemm_gs::qos::{run_soak_with, QosConfig, SoakConfig};
+use gemm_gs::scene::gaussian::GaussianCloud;
+use gemm_gs::scene::source::SceneSource;
+use gemm_gs::scene::synthetic::scene_by_name;
+use gemm_gs::tune::{
+    run_tune, ExecutionProfile, TuneInput, DEFAULT_TUNE_SEED, PROBE_HEIGHT, PROBE_WIDTH,
+};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const SCALE: f64 = 0.001;
+
+fn camera() -> Camera {
+    Camera::look_at(
+        Vec3::new(0.0, 1.0, -8.0),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        std::f32::consts::FRAC_PI_3,
+        160,
+        96,
+    )
+}
+
+/// The probe-resolution tune input the coordinator's background tune
+/// builds — reusing it keeps the offline-replay assertion honest.
+fn probe_input(scene: &str, cloud: &Arc<GaussianCloud>) -> TuneInput {
+    TuneInput {
+        scene: scene.to_string(),
+        cloud: Arc::clone(cloud),
+        width: PROBE_WIDTH,
+        height: PROBE_HEIGHT,
+        extrapolate: 1.0,
+    }
+}
+
+#[test]
+fn fixed_seed_tune_replays_byte_identically_and_parses_back() {
+    let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(SCALE));
+    let input = probe_input("train", &cloud);
+    let a = run_tune(&input, DEFAULT_TUNE_SEED);
+    let b = run_tune(&input, DEFAULT_TUNE_SEED);
+    assert_eq!(a, b, "fixed-seed tunes must be identical values");
+    assert_eq!(a.to_json(), b.to_json(), "and serialize byte-identically");
+    let back = ExecutionProfile::parse(&a.to_json()).expect("profile must parse back");
+    assert_eq!(back, a, "the wire form must round-trip losslessly");
+    // P1 at the e2e surface: a real tuned profile never prices a rung
+    // below what that rung was measured at
+    for r in 0..a.rung_measured_ms.len() {
+        let price = a.rung_price_ms(r).expect("rung in range");
+        assert!(
+            price >= a.rung_measured_ms[r],
+            "rung {r} priced {price} below measured {}",
+            a.rung_measured_ms[r]
+        );
+    }
+    assert_eq!(a.winner.res_scale, 1.0, "winner must be a full-quality point");
+    assert!(
+        a.untuned_cost_ms >= a.winner_cost_ms - 1e-12,
+        "the untuned reference is itself a candidate, so it can never beat the winner"
+    );
+}
+
+#[test]
+fn rung0_on_a_tuned_service_is_byte_identical_to_the_direct_path() {
+    let base = Arc::new(scene_by_name("train").unwrap().synthesize(SCALE));
+    let mut scenes = HashMap::new();
+    scenes.insert("train".to_string(), Arc::clone(&base));
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            qos: Some(QosConfig::with_slo(Duration::from_secs(60))),
+            ..CoordinatorConfig::default()
+        },
+        scenes,
+    );
+    let profile = run_tune(&probe_input("train", &base), DEFAULT_TUNE_SEED);
+    coord.install_profile(profile).expect("a freshly tuned profile must install");
+    assert_eq!(coord.tuned_scene_names(), vec!["train".to_string()]);
+
+    let cam = camera();
+    for (i, kind) in AccelKind::all().into_iter().enumerate() {
+        let mut request =
+            RenderRequest::new(i as u64, "train", cam).with_slo(Duration::from_secs(60));
+        request.accel = kind;
+        let resp = coord.render_sync(request);
+        assert!(resp.error.is_none(), "{}: {:?}", kind.cli_name(), resp.error);
+        assert_eq!(
+            resp.rung, 0,
+            "{}: a tuned service at rest must stay on rung 0",
+            kind.cli_name()
+        );
+
+        // the direct (untuned, non-QoS) path: tuning recalibrates
+        // pricing, never rung-0 pixels
+        let method = kind.instantiate();
+        let model = if method.transforms_model() {
+            Arc::new(method.prepare_model(&base))
+        } else {
+            Arc::clone(&base)
+        };
+        let cfg = RenderConfig::default().with_accel(kind.instantiate());
+        let mut blender = BackendKind::NativeGemm.instantiate(cfg.batch).unwrap();
+        let direct = render_frame(&model, &cam, &cfg, blender.as_mut());
+        assert!(
+            resp.image.unwrap().data == direct.image.data,
+            "{}: installing a profile changed rung-0 pixels",
+            kind.cli_name()
+        );
+    }
+    let m = coord.metrics();
+    assert_eq!(m.profile_swaps, 1);
+    assert_eq!((m.shed, m.degraded_frames), (0, 0));
+    coord.shutdown();
+}
+
+#[test]
+fn background_tune_lands_without_disturbing_a_cold_burst() {
+    let mut set = SceneSet::new();
+    set.insert(
+        "train",
+        SceneSource::Synthetic { spec: scene_by_name("train").unwrap(), scale: SCALE },
+    );
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 3, tune_on_load: true, ..CoordinatorConfig::default() },
+        set,
+    );
+
+    // a cold parked burst: the first load kicks the background tune,
+    // but the burst itself must see none of it — one load, no sheds,
+    // every frame identical
+    let rxs: Vec<_> =
+        (0..12).map(|i| coord.submit(RenderRequest::new(i, "train", camera()))).collect();
+    let mut images = Vec::new();
+    for rx in rxs {
+        let r = rx.recv().expect("response");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        images.push(r.image.expect("image"));
+    }
+    for img in &images[1..] {
+        assert!(img.data == images[0].data);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.scene_loads, 1, "burst must not double-load: {m:?}");
+    assert_eq!(m.frames, 12);
+    assert_eq!(m.shed, 0);
+
+    // the tune runs on a detached thread; wait (bounded) for the swap
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let m = coord.metrics();
+        assert_eq!(m.tunes_failed, 0, "background tune failed: {m:?}");
+        if m.tunes_completed == 1 && m.profile_swaps == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "background tune never landed: {m:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let m = coord.metrics();
+    assert!(m.tunes_started >= 1);
+    assert_eq!(coord.tuned_scene_names(), vec!["train".to_string()]);
+    let p = coord.scene_profile("train").expect("profile installed");
+    assert_eq!(p.scene, "train");
+    assert_eq!(p.seed, DEFAULT_TUNE_SEED);
+    assert_eq!(m.fit_fallbacks, p.fit_fallbacks, "fallback metric mirrors the profile");
+
+    // determinism contract: the in-service tune replays offline from
+    // the same (scene bytes, probe resolution, seed)
+    let cloud = Arc::new(scene_by_name("train").unwrap().synthesize(SCALE));
+    let offline = run_tune(&probe_input("train", &cloud), DEFAULT_TUNE_SEED);
+    assert_eq!(*p, offline, "an in-service tune must replay byte-for-byte offline");
+
+    // and the swap never changes served pixels
+    let after = coord.render_sync(RenderRequest::new(99, "train", camera()));
+    assert!(after.error.is_none(), "{:?}", after.error);
+    assert!(
+        after.image.expect("image").data == images[0].data,
+        "the profile swap changed served pixels"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn tuned_soak_goodput_holds_against_untuned() {
+    let train = Arc::new(scene_by_name("train").unwrap().synthesize(SCALE));
+    let truck = Arc::new(scene_by_name("truck").unwrap().synthesize(SCALE));
+    let start = |tuned: bool| {
+        let mut scenes = HashMap::new();
+        scenes.insert("train".to_string(), Arc::clone(&train));
+        scenes.insert("truck".to_string(), Arc::clone(&truck));
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                qos: Some(QosConfig::with_slo(Duration::from_millis(250))),
+                ..CoordinatorConfig::default()
+            },
+            scenes,
+        );
+        if tuned {
+            for (name, cloud) in [("train", &train), ("truck", &truck)] {
+                let p = run_tune(&probe_input(name, cloud), DEFAULT_TUNE_SEED);
+                coord.install_profile(p).expect("tuned profile must install");
+            }
+            assert_eq!(coord.tuned_scene_names().len(), 2);
+        }
+        coord
+    };
+    // seeded skewed mix (~70 % train, 30 % truck), identical offered
+    // load for both policies under the shared soak seed
+    let mix = |i: usize| {
+        if i.wrapping_mul(2_654_435_761) % 10 < 7 { "train" } else { "truck" }.to_string()
+    };
+    let cfg = SoakConfig {
+        rate: 150.0,
+        duration: Duration::from_millis(400),
+        slo: Duration::from_millis(250),
+        seed: 0xA07,
+        deadlines: false,
+    };
+    let poses = [camera()];
+
+    let untuned_coord = start(false);
+    let untuned = run_soak_with(&untuned_coord, mix, &poses, &cfg);
+    untuned_coord.shutdown();
+    let tuned_coord = start(true);
+    let tuned = run_soak_with(&tuned_coord, mix, &poses, &cfg);
+    tuned_coord.shutdown();
+
+    for (name, r) in [("untuned", &untuned), ("tuned", &tuned)] {
+        assert_eq!(r.transport_errors, 0, "{name}: transport errors");
+        assert_eq!(r.render_errors, 0, "{name}: render errors");
+        assert!(r.completed > 0, "{name}: nothing completed");
+    }
+    assert_eq!(tuned.offered, untuned.offered, "same seed must offer the same load");
+    // profiles recalibrate pricing, never the rung-0 work itself, so
+    // goodput must hold up (the 0.85 guard absorbs scheduler noise)
+    assert!(
+        tuned.goodput >= untuned.goodput * 0.85,
+        "tuned goodput {:.1} collapsed vs untuned {:.1}",
+        tuned.goodput,
+        untuned.goodput
+    );
+}

@@ -92,6 +92,13 @@ fn every_snapshot_field_reports_a_coherent_value() {
     assert_eq!(m.degraded_frames, 0);
     assert_eq!(m.rung, 0);
 
+    // autotuner (DESIGN.md §16): off by default — every counter zero
+    assert_eq!(m.tunes_started, 0, "tune_on_load is off in this config");
+    assert_eq!(m.tunes_completed, 0);
+    assert_eq!(m.tunes_failed, 0);
+    assert_eq!(m.profile_swaps, 0);
+    assert_eq!(m.fit_fallbacks, 0);
+
     // catalog residency: one registered scene, lazily loaded once
     assert_eq!(m.scenes_registered, 1);
     assert_eq!(m.scenes_resident, 1);

@@ -22,6 +22,7 @@ use gemm_gs::model::catalog::{CatalogFault, CatalogModel, CatalogModelCfg};
 use gemm_gs::model::explore::{bfs, random_walk, replay};
 use gemm_gs::model::gen::{Checker, FromFn};
 use gemm_gs::model::request::{RequestFault, RequestModel, RequestModelCfg};
+use gemm_gs::perfmodel::SceneConstants;
 use gemm_gs::qos::{first_cost_inversion, QualityLadder, QualityRung};
 
 // ---------------------------------------------------------------- clean
@@ -198,6 +199,43 @@ fn constructed_ladders_are_strictly_cheaper_down() {
                     None => Ok(()),
                     Some(i) => Err(format!(
                         "constructed ladder inverts at rung {i}: {costs:?}"
+                    )),
+                }
+            }
+        }
+    });
+}
+
+/// Regression for the autotune path (DESIGN.md §16): recalibrating the
+/// default ladder with fitted per-scene constants either rejects —
+/// blaming the ordering or a bad scale, never panicking — or the
+/// calibrated cost column still satisfies invariant 6 through the same
+/// `first_cost_inversion` definition the constructor enforces.
+#[test]
+fn calibrated_ladders_stay_strictly_cheaper_down() {
+    let strat = FromFn::new(|rng: &mut gemm_gs::scene::rng::Rng| SceneConstants {
+        preprocess: rng.range(0.1, 8.0) as f64,
+        duplicate: rng.range(0.1, 8.0) as f64,
+        sort: rng.range(0.1, 8.0) as f64,
+        blend: rng.range(0.1, 8.0) as f64,
+    });
+    Checker::new(0x1add5).cases(256).assert(&strat, |constants| {
+        let rungs = QualityLadder::default_ladder().rungs().to_vec();
+        match QualityLadder::with_constants(rungs, constants) {
+            Err(msg) => {
+                if msg.contains("strictly cheaper") || msg.contains("res_scale") {
+                    Ok(())
+                } else {
+                    Err(format!("unexpected rejection: {msg}"))
+                }
+            }
+            Ok(ladder) => {
+                let costs: Vec<f64> =
+                    (0..ladder.len()).map(|r| ladder.cost_ms(r)).collect();
+                match first_cost_inversion(&costs) {
+                    None => Ok(()),
+                    Some(i) => Err(format!(
+                        "calibrated ladder inverts at rung {i}: {costs:?}"
                     )),
                 }
             }

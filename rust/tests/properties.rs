@@ -14,6 +14,7 @@ use gemm_gs::gemm::microkernel::{gemm_k8, gemm_k8_naive};
 use gemm_gs::gemm::mp::Mp;
 use gemm_gs::math::{Camera, Quat, Vec2, Vec3};
 use gemm_gs::model::gen::{Checker, FromFn, LogU64, Strategy};
+use gemm_gs::perfmodel::{fit, residual, CalibrationSample, SceneConstants, StageEstimate};
 use gemm_gs::pipeline::blend_gemm::GemmBlender;
 use gemm_gs::pipeline::blend_vanilla::VanillaBlender;
 use gemm_gs::pipeline::duplicate::{depth_bits, duplicate};
@@ -25,6 +26,7 @@ use gemm_gs::pipeline::{TILE_PIXELS, TILE_SIZE};
 use gemm_gs::runtime::json::{self, Json};
 use gemm_gs::scene::gaussian::GaussianCloud;
 use gemm_gs::scene::rng::Rng;
+use gemm_gs::tune::{ExecutionProfile, PROFILE_SCHEMA_VERSION, UNTUNED};
 
 /// Well-conditioned SPD conics (the old ad-hoc `random_conic`, ported
 /// onto the toolkit). Shrinks toward the isotropic unit conic — the
@@ -542,5 +544,166 @@ fn prop_json_string_escapes_round_trip_every_unicode_shape() {
             return Err(format!("string changed through the wire: {s:?} via {text}"));
         }
         Ok(())
+    });
+}
+
+// ------------------------------------------- autotune (DESIGN.md §16)
+
+/// Paired per-rung `(model, measured)` price vectors for the tuned
+/// profile's admission-pricing property (P1). Shrinks by dropping
+/// rungs — a pricing violation arrives as the single rung that
+/// exhibits it.
+struct RungPrices;
+
+impl Strategy for RungPrices {
+    type Value = (Vec<f64>, Vec<f64>);
+
+    fn generate(&self, rng: &mut Rng) -> (Vec<f64>, Vec<f64>) {
+        let n = 1 + rng.index(6);
+        let model = (0..n).map(|_| rng.range(0.01, 50.0) as f64).collect();
+        let measured = (0..n).map(|_| rng.range(0.01, 50.0) as f64).collect();
+        (model, measured)
+    }
+
+    fn shrink(&self, v: &(Vec<f64>, Vec<f64>)) -> Vec<(Vec<f64>, Vec<f64>)> {
+        let n = v.0.len();
+        let mut out = Vec::new();
+        if n > 1 {
+            for drop in 0..n {
+                let keep = |xs: &[f64]| {
+                    xs.iter()
+                        .enumerate()
+                        .filter(|&(i, _)| i != drop)
+                        .map(|(_, &x)| x)
+                        .collect::<Vec<f64>>()
+                };
+                out.push((keep(&v.0), keep(&v.1)));
+            }
+        }
+        out
+    }
+}
+
+/// Property P1 (DESIGN.md §16): a tuned profile never prices a rung
+/// cheaper than that rung was *measured* — the admission price is the
+/// calibrated model floored at measured, exactly the ladder's depth
+/// and never past it. A calibration that underestimates a rung cannot
+/// talk QoS admission into deadlines the scene was measured to miss.
+#[test]
+fn prop_tuned_profile_never_prices_below_measured() {
+    Checker::new(0x9107).cases(2_000).assert(&RungPrices, |v| {
+        let (model, measured) = v;
+        let p = ExecutionProfile {
+            schema_version: PROFILE_SCHEMA_VERSION,
+            scene: "train".to_string(),
+            seed: 0,
+            winner: UNTUNED,
+            winner_cost_ms: 1.0,
+            untuned_cost_ms: 1.0,
+            constants: SceneConstants::default(),
+            fit_fallbacks: 0,
+            samples: 0,
+            rung_measured_ms: measured.clone(),
+            rung_model_ms: model.clone(),
+        };
+        for r in 0..measured.len() {
+            let price = p
+                .rung_price_ms(r)
+                .ok_or_else(|| format!("rung {r} of {} unpriced", measured.len()))?;
+            if price < measured[r] {
+                return Err(format!("rung {r} priced {price} below measured {}", measured[r]));
+            }
+            if price < model[r] {
+                return Err(format!("rung {r} priced {price} below model {}", model[r]));
+            }
+            if price > model[r].max(measured[r]) {
+                return Err(format!("rung {r} overpriced at {price}"));
+            }
+        }
+        if p.rung_price_ms(measured.len()).is_some() {
+            return Err("priced a rung past the ladder's depth".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// Random calibration sample sets for the fit property (P2): modelled
+/// stage estimates with per-stage multiplicative noise spanning the
+/// fit's clamp band in both directions, including degenerate set sizes
+/// below the fit's minimum (which must fall back, not misbehave).
+/// Shrinks by dropping samples — halves first, then singletons.
+struct SampleSet;
+
+impl Strategy for SampleSet {
+    type Value = Vec<CalibrationSample>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<CalibrationSample> {
+        let n = rng.index(10);
+        (0..n)
+            .map(|_| {
+                let stage = |rng: &mut Rng| rng.range(1e-4, 8.0) as f64 * 1e-3;
+                let modelled = StageEstimate {
+                    preprocess: stage(rng),
+                    duplicate: stage(rng),
+                    sort: stage(rng),
+                    blend: stage(rng),
+                };
+                let noise = |rng: &mut Rng| rng.range(0.02, 40.0) as f64;
+                let measured = StageEstimate {
+                    preprocess: modelled.preprocess * noise(rng),
+                    duplicate: modelled.duplicate * noise(rng),
+                    sort: modelled.sort * noise(rng),
+                    blend: modelled.blend * noise(rng),
+                };
+                CalibrationSample { modelled, measured }
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<CalibrationSample>) -> Vec<Vec<CalibrationSample>> {
+        let n = v.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let half = n / 2;
+        if half > 0 {
+            out.push(v[half..].to_vec());
+            out.push(v[..n - half].to_vec());
+        }
+        for drop in 0..n.min(8) {
+            let mut fewer = v.clone();
+            fewer.remove(drop);
+            out.push(fewer);
+        }
+        out
+    }
+}
+
+/// Property P2 (DESIGN.md §16): the least-squares fit never produces
+/// constants whose residual *on its own samples* is worse than the
+/// global (all-ones) constants — the fallback is the global value
+/// itself, and a clamped per-stage optimum still sits between 1.0 and
+/// the unclamped minimum of the residual parabola.
+#[test]
+fn prop_fit_residual_never_worse_than_global() {
+    Checker::new(0x9f17).cases(600).assert(&SampleSet, |samples| {
+        let outcome = fit(samples);
+        if !outcome.constants.is_sane() {
+            return Err(format!("insane constants {:?}", outcome.constants));
+        }
+        if outcome.fallbacks > 4 {
+            return Err(format!("{} fallbacks from 4 stages", outcome.fallbacks));
+        }
+        let fitted = residual(samples, &outcome.constants);
+        let global = residual(samples, &SceneConstants::default());
+        if fitted <= global + 1e-9 * (1.0 + global) {
+            Ok(())
+        } else {
+            Err(format!(
+                "fit residual {fitted} worse than global {global} on {} samples",
+                samples.len()
+            ))
+        }
     });
 }
